@@ -1,0 +1,81 @@
+//! The end-to-end validation run (EXPERIMENTS.md §E2E).
+//!
+//! Trains the `e2e` variant — the ~8.5M-parameter CPU-feasible proxy of
+//! the paper's 120M BERT (DESIGN.md §Substitutions) — for a few hundred
+//! real optimizer steps on a synthetic binary-code corpus across 2
+//! data-parallel ranks: real PJRT execution of the Pallas-kerneled AOT
+//! step, real ring all-reduce, rust AdamW. Logs the loss curve to
+//! `runs/e2e/steps.csv`.
+//!
+//! ```sh
+//! cargo run --release --example pretrain_e2e [steps]
+//! ```
+
+use txgain::config::presets;
+use txgain::coordinator;
+use txgain::runtime::Manifest;
+
+fn main() -> txgain::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(300);
+
+    let mut cfg = presets::e2e_pretrain();
+    cfg.training.steps = steps;
+    println!(
+        "e2e pretrain: {} ({:.1}M params proxy of bert-120m), \
+         world={}, batch/GPU={}, {} steps, corpus {} samples",
+        cfg.model.variant,
+        cfg.model.param_count() as f64 / 1e6,
+        cfg.world_size(),
+        cfg.training.batch_per_gpu,
+        cfg.training.steps,
+        cfg.data.corpus_samples
+    );
+
+    let t0 = std::time::Instant::now();
+    let workdir = std::path::PathBuf::from("runs/e2e");
+    let out =
+        coordinator::run(&cfg, &Manifest::default_dir(), &workdir)?;
+    let r = &out.report;
+
+    println!("\n   step    loss      lr        step(s)  util");
+    for rec in r.records.iter().step_by(10.max(steps / 30)) {
+        println!(
+            "  {:>5}   {:.4}   {:.2e}   {:>6.2}   {:.2}",
+            rec.step,
+            rec.loss,
+            rec.lr,
+            rec.step_secs,
+            rec.compute_secs / rec.step_secs
+        );
+    }
+    let uniform = (cfg.model.vocab as f32).ln();
+    println!(
+        "\n== E2E summary ==\n\
+         initial loss       {:.4}  (ln(vocab) = {:.4})\n\
+         final loss (tail5) {:.4}\n\
+         steps              {}\n\
+         tokens seen        {}\n\
+         throughput         {:.1} samples/s ({:.0} tokens/s)\n\
+         GPU utilization    {:.1}%\n\
+         wall time          {:.1}s (prep {:.1}s, stage {:.1}s)\n\
+         loss curve         {}",
+        r.first_loss().unwrap(),
+        uniform,
+        r.tail_loss(5).unwrap(),
+        r.records.len(),
+        r.records.len() * cfg.training.batch_per_gpu * r.world
+            * cfg.model.seq,
+        r.samples_per_sec(),
+        r.samples_per_sec() * cfg.model.seq as f64,
+        r.gpu_utilization() * 100.0,
+        t0.elapsed().as_secs_f64(),
+        r.preprocess_secs,
+        r.stage_secs,
+        out.workdir.join("steps.csv").display()
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Fig. 1 reproduction: pretraining scaling performance across node
+//! counts and model sizes, via the calibrated cluster model.
+//!
+//! ```sh
+//! cargo run --release --example scaling_sweep
+//! ```
+
+use txgain::config::presets;
+use txgain::perfmodel::{scaling_efficiency, sweep_nodes};
+use txgain::report;
+
+fn main() -> txgain::Result<()> {
+    let nodes = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let mut series = Vec::new();
+    for model in presets::paper_models() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.training.batch_per_gpu =
+            presets::artifact_batch(&model.variant);
+        cfg.model = model.clone();
+        let sweep = sweep_nodes(&cfg, &nodes);
+        println!("{}", report::fig1_table(&model.variant, &sweep)
+            .render());
+        let eff = scaling_efficiency(&sweep);
+        println!(
+            "  scaling efficiency at 128 nodes: {:.3} (paper: \"roughly \
+             linear\")\n",
+            eff.last().unwrap()
+        );
+        series.push((model.variant.clone(), sweep));
+    }
+
+    // rec 4 in one line per model: exposed comm share at 128 nodes
+    println!("rec 4 — exposed all-reduce share of step time @128 nodes:");
+    for (name, sweep) in &series {
+        let r = sweep.last().unwrap();
+        println!(
+            "  {:<12} {:.1}%  (raw all-reduce {:.0} ms, hidden under \
+             backward)",
+            name,
+            r.comm_exposed_secs / r.step_secs * 100.0,
+            r.comm_secs * 1e3
+        );
+    }
+
+    let csv_series: Vec<(&str, Vec<txgain::perfmodel::SimResult>)> =
+        series.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+    let csv = report::paper::fig1_csv(&csv_series);
+    let path = std::path::PathBuf::from("runs/fig1.csv");
+    csv.write_to(&path)?;
+    println!("\nseries written to {}", path.display());
+    Ok(())
+}

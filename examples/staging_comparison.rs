@@ -1,0 +1,71 @@
+//! Recommendation 2 demo: duplicate the (preprocessed) dataset to local
+//! SSD vs reading from shared network storage every epoch.
+//!
+//! Prices both policies on the TX-GAIN storage model at paper scale,
+//! then demonstrates the real staging path on a real (small) shard set.
+//!
+//! ```sh
+//! cargo run --release --example staging_comparison
+//! ```
+
+use txgain::cluster::StorageModel;
+use txgain::config::{presets, ClusterConfig, StagingPolicy};
+use txgain::data::{preprocess_corpus, staging};
+use txgain::report::Table;
+use txgain::util::human_bytes;
+
+fn main() -> txgain::Result<()> {
+    // -- model study at paper scale: 25 GB preprocessed dataset --------
+    let dataset = 25_000_000_000u64;
+    let mut t = Table::new(
+        &format!("REC 2 — staging policies, {} preprocessed dataset",
+                 human_bytes(dataset)),
+        vec!["nodes", "net/epoch(s)", "local/epoch(s)", "stage-in(s)",
+             "break-even(epochs)"],
+    );
+    for nodes in [1usize, 8, 27, 64, 128] {
+        let c = ClusterConfig::tx_gain(nodes);
+        let net = staging::estimate(&c, StagingPolicy::NetworkDirect,
+                                    dataset);
+        let loc = staging::estimate(&c, StagingPolicy::LocalCopy, dataset);
+        let be = staging::break_even_epochs(&c, dataset)
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "never".into());
+        t.row(&[
+            nodes.to_string(),
+            format!("{:.1}", net.per_epoch_secs),
+            format!("{:.1}", loc.per_epoch_secs),
+            format!("{:.1}", loc.stage_in_secs),
+            be,
+        ]);
+    }
+    println!("{}", t.render());
+    let c128 = ClusterConfig::tx_gain(128);
+    let sm = StorageModel::new(&c128);
+    println!(
+        "array saturates at {} concurrent readers; at 128 nodes each \
+         gets {}/s of Lustre vs {}/s local SSD\n",
+        sm.saturation_nodes(),
+        human_bytes(sm.shared_read_bw(128) as u64),
+        human_bytes((c128.ssd_gbs * 1e9) as u64),
+    );
+
+    // -- and the real thing, small scale: stage + read back ------------
+    let cfg = presets::quickstart();
+    let workdir = std::path::PathBuf::from("runs/staging-demo");
+    let _ = std::fs::remove_dir_all(&workdir);
+    let shared = workdir.join("shared");
+    std::fs::create_dir_all(&shared)?;
+    let stats =
+        preprocess_corpus(&cfg.data, cfg.model.seq, cfg.seed, &shared)?;
+    let t0 = std::time::Instant::now();
+    let staged =
+        staging::stage_local(&stats.shards, &workdir.join("local"))?;
+    println!(
+        "real demo: staged {} shards ({}) to local dir in {:.1} ms",
+        staged.len(),
+        human_bytes(stats.tokenized_bytes),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: jax train step -> HLO *text* artifacts + manifest.json.
+
+HLO text, NOT ``lowered.compile().serialize()``: the rust side links
+xla_extension 0.5.1 whose proto parser rejects jax>=0.5's 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Run once by ``make artifacts``; python is never on the training hot path.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: configs.ModelConfig) -> str:
+    step = model.make_train_step(cfg, use_pallas=True)
+    param_shapes = tuple(
+        jax.ShapeDtypeStruct(shape, "float32")
+        for _, shape, _ in model.param_specs(cfg)
+    )
+    batch = model.example_batch_specs(cfg)
+    lowered = jax.jit(step).lower(param_shapes, *batch)
+    return to_hlo_text(lowered)
+
+
+def variant_manifest(cfg: configs.ModelConfig, hlo_file: str | None):
+    specs = model.param_specs(cfg)
+    sizes = [int(np_prod(s)) for _, s, _ in specs]
+    offsets = [sum(sizes[:i]) for i in range(len(sizes))]
+    return {
+        "config": cfg.to_dict(),
+        "artifact": hlo_file,
+        "params": [
+            {"name": n, "shape": list(s), "init": i, "offset": o,
+             "size": sz}
+            for (n, s, i), o, sz in zip(specs, offsets, sizes)
+        ],
+        # Flattened input order of the lowered computation:
+        # all params (in order), then input_ids, attn_mask, labels.
+        "inputs": [n for n, _, _ in specs] + ["input_ids", "attn_mask",
+                                              "labels"],
+        # Output tuple: scalar loss + one flat f32 gradient vector
+        # (row-major per param, concatenated in param order).
+        "outputs": ["loss", "flat_grads"],
+        "grad_len": sum(sizes),
+        "batch": {"size": cfg.artifact_batch, "seq": cfg.seq},
+    }
+
+
+def np_prod(shape):
+    out = 1
+    for d in shape:
+        out *= d
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="also lower the 120M-350M paper configs (slow; "
+                    "compile-only sanity, not CPU-executable in reasonable "
+                    "time)")
+    ap.add_argument("--variants", nargs="*", default=None,
+                    help="subset of variant names to build")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    todo = list(configs.CPU_VARIANTS)
+    if args.paper_scale:
+        todo += configs.PAPER_VARIANTS
+    if args.variants:
+        todo = [configs.ALL[v] for v in args.variants]
+
+    manifest = {"format": "hlo-text-v1", "variants": {}}
+    for cfg in todo:
+        fname = f"{cfg.name}.train.hlo.txt"
+        print(f"[aot] lowering {cfg.name} "
+              f"({cfg.param_count() / 1e6:.1f}M params, "
+              f"B={cfg.artifact_batch}, S={cfg.seq}) ...", flush=True)
+        text = lower_variant(cfg)
+        (outdir / fname).write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        m = variant_manifest(cfg, fname)
+        m["sha256_16"] = digest
+        manifest["variants"][cfg.name] = m
+        print(f"[aot]   wrote {fname}: {len(text)} chars, sha {digest}")
+
+    # Paper-scale configs are always listed (rust perfmodel reads their
+    # dims) even when their HLO is not built.
+    for cfg in configs.PAPER_VARIANTS:
+        if cfg.name not in manifest["variants"]:
+            manifest["variants"][cfg.name] = variant_manifest(cfg, None)
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] manifest: {outdir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

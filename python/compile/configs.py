@@ -1,0 +1,72 @@
+"""Model variant definitions shared by model.py, aot.py and the tests.
+
+Each variant is a BERT-like encoder config. The CPU-feasible variants
+(tiny/small/e2e) are AOT-lowered to HLO text by aot.py; the paper-scale
+configs (bert-120m .. bert-350m) exist so the rust perf model and the
+python side agree on dimensions, but are not compiled for CPU execution
+by default (pass --paper-scale to aot.py to emit their HLO anyway).
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    seq: int
+    mlp_ratio: int = 4
+    # batch size baked into the AOT artifact (XLA shapes are static)
+    artifact_batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        """Exact parameter count; must match rust perfmodel::flops."""
+        h, v, s, l = self.hidden, self.vocab, self.seq, self.layers
+        emb = v * h + s * h + 2 * h  # token + pos + emb layernorm
+        per_layer = (
+            4 * h * h + 4 * h  # qkv + out projections (+bias)
+            + 2 * h * self.mlp_ratio * h + self.mlp_ratio * h + h  # mlp
+            + 4 * h  # two layernorms
+        )
+        head = h * h + h + 2 * h + v  # dense + ln + output bias (tied emb)
+        return emb + l * per_layer + head
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["param_count"] = self.param_count()
+        return d
+
+
+# CPU-feasible variants (AOT-compiled and executed on PJRT CPU).
+TINY = ModelConfig("tiny", vocab=512, hidden=64, layers=2, heads=2, seq=64,
+                   artifact_batch=4)
+SMALL = ModelConfig("small", vocab=2048, hidden=128, layers=4, heads=4,
+                    seq=128, artifact_batch=8)
+# ~10M-param proxy for the paper's 120M model: big enough for a real loss
+# curve on CPU PJRT, small enough for a few hundred steps in minutes.
+E2E = ModelConfig("e2e", vocab=8192, hidden=256, layers=8, heads=8, seq=128,
+                  artifact_batch=8)
+
+# Paper-scale configs (dimensions chosen to hit the reported param counts;
+# the paper gives only totals). Used by the perf model, not CPU-executed.
+BERT_120M = ModelConfig("bert-120m", vocab=30000, hidden=768, layers=12,
+                        heads=12, seq=512, artifact_batch=184)
+BERT_180M = ModelConfig("bert-180m", vocab=30000, hidden=896, layers=16,
+                        heads=14, seq=512, artifact_batch=96)
+BERT_250M = ModelConfig("bert-250m", vocab=30000, hidden=1024, layers=20,
+                        heads=16, seq=512, artifact_batch=48)
+BERT_350M = ModelConfig("bert-350m", vocab=30000, hidden=1024, layers=24,
+                        heads=16, seq=512, artifact_batch=20)
+
+CPU_VARIANTS = [TINY, SMALL, E2E]
+PAPER_VARIANTS = [BERT_120M, BERT_180M, BERT_250M, BERT_350M]
+ALL = {c.name: c for c in CPU_VARIANTS + PAPER_VARIANTS}

@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: tiled online-softmax (flash) attention.
+
+TPU adaptation of the compute hot-spot (the paper trains on H100s with
+stock kernels; see DESIGN.md §Hardware-Adaptation): query tiles are staged
+into VMEM via BlockSpec — the role threadblock shared memory plays on the
+GPU — and the S×S score matrix is never materialized in HBM; instead each
+query tile runs an online-softmax accumulation over key tiles with a
+fori_loop carry. Block shapes are chosen MXU-friendly (multiples of the
+head dim, padded up to 128 where the variant allows).
+
+interpret=True throughout: CPU PJRT cannot execute Mosaic custom-calls, so
+the kernel lowers to plain HLO ops and the same artifact runs everywhere.
+Differentiation is provided by a custom_vjp whose backward recomputes
+through the pure-jnp oracle (fused forward, recompute backward).
+
+VMEM budget per grid step (f32): q tile bq×dh + k,v S×dh each + bias S +
+acc bq×dh + p bq×bk. For the paper-scale config (S=512, dh=64, bq=bk=128)
+that is ≈ 0.48 MB — comfortably under the ~16 MB/core budget, leaving room
+for double-buffering the next q tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(s: int, target: int = 128) -> int:
+    """Largest divisor of s that is <= target (block shapes must tile S)."""
+    b = min(s, target)
+    while s % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, bk: int,
+                scale: float):
+    # Leading grid dim of every ref is a size-1 "which (batch, head)" axis.
+    q = q_ref[0] * scale                     # (bq, dh)
+    bq, dh = q.shape
+    s_len = k_ref.shape[1]
+    nkb = s_len // bk
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(i * bk, bk), :]   # (bk, dh)
+        v = v_ref[0, pl.ds(i * bk, bk), :]   # (bk, dh)
+        b = bias_ref[0, pl.ds(i * bk, bk)]   # (bk,)
+        s = q @ k.T + b[None, :]             # (bq, bk)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), ref.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m0, l0, a0))
+    # l >= exp(0) * 1 whenever at least one key survives masking; padded
+    # query rows may divide by ~bk but are discarded downstream.
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _flash_fwd(q, k, v, bias, *, bq: int, bk: int):
+    bh, s, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    grid = (bh, s // bq)
+    kernel = functools.partial(_fwd_kernel, bk=bk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda i, j: (i, j, 0)),   # q tile
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),    # k (full S)
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),    # v (full S)
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),           # bias
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, bias)
+
+
+@functools.lru_cache(maxsize=None)
+def _make(bq, bk):
+    """custom_vjp'd attention with block sizes baked in (static args)."""
+
+    def fwd_only(q, k, v, bias):
+        s = q.shape[1]
+        return _flash_fwd(q, k, v, bias, bq=bq or _pick_block(s),
+                          bk=bk or _pick_block(s))
+
+    @jax.custom_vjp
+    def f(q, k, v, bias):
+        return fwd_only(q, k, v, bias)
+
+    def vjp_fwd(q, k, v, bias):
+        return fwd_only(q, k, v, bias), (q, k, v, bias)
+
+    def vjp_bwd(res, do):
+        q, k, v, bias = res
+        # Recompute-backward through the materialized oracle: XLA fuses
+        # this into the surrounding backward graph; no residuals besides
+        # q/k/v/bias (the flash trade: no S×S tensor saved in fwd).
+        _, vjp = jax.vjp(ref.attention, q, k, v, bias)
+        return vjp(do)
+
+    f.defvjp(vjp_fwd, vjp_bwd)
+    return f
+
+
+def flash_attention(q, k, v, bias, bq=None, bk=None):
+    """Fused attention. q/k/v: (BH, S, dh); bias: (BH, S) additive mask."""
+    return _make(bq, bk)(q, k, v, bias)

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused tied-projection + masked-LM cross-entropy.
+
+The MLM head is the other memory hot-spot: materializing (B, S, V) logits
+in HBM dominates activation memory at larger vocabularies. This kernel
+tiles the token rows into VMEM blocks, computes the logits block against
+the full embedding table resident in VMEM, and reduces straight to a
+per-row loss — the (R, V) logits tensor never exists in HBM.
+
+VMEM per grid step (f32): emb V×H + logits tile br×V + h tile br×H.
+For the e2e variant (V=8192, H=256, br=128): 8 MB + 4 MB + 0.13 MB ≈ 12 MB,
+inside the ~16 MB/core budget. Paper-scale vocabularies would additionally
+tile V (two-pass online logsumexp); see DESIGN.md §Perf.
+
+Backward is a custom_vjp recompute through the jnp oracle (softmax − onehot
+fused by XLA); labels are non-differentiable by construction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(r: int, target: int = 128) -> int:
+    b = min(r, target)
+    while r % b != 0:
+        b -= 1
+    return b
+
+
+def _loss_kernel(h_ref, emb_ref, bias_ref, labels_ref, out_ref):
+    h = h_ref[...]                            # (br, H)
+    logits = h @ emb_ref[...].T + bias_ref[...][None, :]  # (br, V)
+    m = logits.max(axis=1)
+    lse = m + jnp.log(jnp.exp(logits - m[:, None]).sum(axis=1))
+    labels = labels_ref[...]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    ll = jnp.take_along_axis(logits, safe[:, None], axis=1)[:, 0]
+    out_ref[...] = jnp.where(valid, lse - ll, 0.0).astype(out_ref.dtype)
+
+
+def _loss_fwd(h, emb, bias, labels, *, br: int):
+    r, _ = h.shape
+    v, hd = emb.shape
+    return pl.pallas_call(
+        _loss_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, hd), lambda i: (i, 0)),  # hidden rows tile
+            pl.BlockSpec((v, hd), lambda i: (0, 0)),   # emb table (VMEM)
+            pl.BlockSpec((v,), lambda i: (0,)),        # output bias
+            pl.BlockSpec((br,), lambda i: (i,)),       # labels tile
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(h, emb, bias, labels)
+
+
+@functools.lru_cache(maxsize=None)
+def _make(br):
+    """custom_vjp'd loss with the row-block size baked in (static arg)."""
+
+    def fwd_only(h, emb, bias, labels):
+        return _loss_fwd(h, emb, bias, labels,
+                         br=br or _pick_block(h.shape[0]))
+
+    @jax.custom_vjp
+    def f(h, emb, bias, labels):
+        return fwd_only(h, emb, bias, labels)
+
+    def vjp_fwd(h, emb, bias, labels):
+        return fwd_only(h, emb, bias, labels), (h, emb, bias, labels)
+
+    def vjp_bwd(res, dout):
+        h, emb, bias, labels = res
+        # softmax − onehot, fused by XLA; labels are integer => no grad.
+        _, vjp = jax.vjp(lambda a, b, c: ref.mlm_loss_rows(a, b, c, labels),
+                         h, emb, bias)
+        dh, demb, dbias = vjp(dout)
+        return dh, demb, dbias, None
+
+    f.defvjp(vjp_fwd, vjp_bwd)
+    return f
+
+
+def mlm_loss_rows(h, emb, bias, labels, br=None):
+    """Per-row masked CE. h: (R, H); emb: (V, H); labels: (R,) int32."""
+    return _make(br)(h, emb, bias, labels)

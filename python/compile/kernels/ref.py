@@ -1,0 +1,43 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite compares the kernels against,
+and they also serve as the backward-pass implementations for the kernels'
+custom_vjp rules (fused forward, recompute backward — the standard
+flash-attention trade).
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # finite "minus infinity": keeps fully-masked rows NaN-free
+
+
+def attention(q, k, v, bias):
+    """Multi-head scaled-dot-product attention, materialized softmax.
+
+    q, k, v: (BH, S, dh) — batch*heads folded into the leading dim.
+    bias:    (BH, S) additive key mask (0 for real tokens, NEG_INF for pad).
+    returns: (BH, S, dh)
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bqd,bkd->bqk", q * scale, k) + bias[:, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def mlm_loss_rows(h, emb, out_bias, labels):
+    """Per-row masked-LM cross-entropy with a tied output projection.
+
+    h:        (R, H) final hidden states, one row per token position.
+    emb:      (V, H) tied embedding table (logits = h @ emb.T + out_bias).
+    out_bias: (V,)
+    labels:   (R,) int32; label < 0 means "not a masked position" => loss 0.
+    returns:  (R,) f32 per-row loss (0 where label < 0).
+    """
+    logits = h @ emb.T + out_bias[None, :]  # (R, V)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    ll = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    return jnp.where(valid, lse - ll, 0.0)

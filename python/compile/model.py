@@ -1,0 +1,157 @@
+"""L2: BERT-like MLM encoder in jax, calling the L1 Pallas kernels.
+
+The parameter set is an *ordered tuple* of arrays — the order defined by
+``param_specs`` is the contract with the rust side: aot.py writes it to
+manifest.json and rust/src/train/params.rs initializes and feeds buffers
+in exactly this order. No pickled pytree structure crosses the boundary.
+
+The model is deterministic (no dropout): MLM masking is a property of the
+*data pipeline* in the paper ("15% of tokens in the training dataset
+randomly masked"), and lives in rust/src/data/masking.rs. The train step
+is pure: (params, input_ids, attn_mask, labels) -> (loss, *grads).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import flash_attention
+from .kernels.mlm_loss import mlm_loss_rows
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape, init) list. init ∈ normal:<std> | zeros | ones."""
+    h, v, s = cfg.hidden, cfg.vocab, cfg.seq
+    m = cfg.mlp_ratio * h
+    specs = [
+        ("tok_emb", (v, h), "normal:0.02"),
+        ("pos_emb", (s, h), "normal:0.02"),
+        ("emb_ln_g", (h,), "ones"),
+        ("emb_ln_b", (h,), "zeros"),
+    ]
+    for i in range(cfg.layers):
+        specs += [
+            (f"l{i}.qkv_w", (h, 3 * h), "normal:0.02"),
+            (f"l{i}.qkv_b", (3 * h,), "zeros"),
+            (f"l{i}.out_w", (h, h), "normal:0.02"),
+            (f"l{i}.out_b", (h,), "zeros"),
+            (f"l{i}.ln1_g", (h,), "ones"),
+            (f"l{i}.ln1_b", (h,), "zeros"),
+            (f"l{i}.mlp_w1", (h, m), "normal:0.02"),
+            (f"l{i}.mlp_b1", (m,), "zeros"),
+            (f"l{i}.mlp_w2", (m, h), "normal:0.02"),
+            (f"l{i}.mlp_b2", (h,), "zeros"),
+            (f"l{i}.ln2_g", (h,), "ones"),
+            (f"l{i}.ln2_b", (h,), "zeros"),
+        ]
+    specs += [
+        ("head_w", (h, h), "normal:0.02"),
+        ("head_b", (h,), "zeros"),
+        ("head_ln_g", (h,), "ones"),
+        ("head_ln_b", (h,), "zeros"),
+        ("out_bias", (v,), "zeros"),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, key):
+    """Reference initializer (tests + pure-python training sanity runs)."""
+    params = []
+    for name, shape, init in param_specs(cfg):
+        if init.startswith("normal:"):
+            std = float(init.split(":")[1])
+            key, sub = jax.random.split(key)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+        elif init == "ones":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention_block(cfg, x, attn_mask, qkv_w, qkv_b, out_w, out_b,
+                     use_pallas):
+    b, s, h = x.shape
+    nh, dh = cfg.heads, cfg.head_dim
+    qkv = x @ qkv_w + qkv_b                      # (B, S, 3H)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (B, S, H) -> (B*nh, S, dh)
+        return t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3).reshape(
+            b * nh, s, dh)
+
+    bias = (1.0 - attn_mask) * ref.NEG_INF       # (B, S)
+    bias = jnp.repeat(bias, nh, axis=0)          # (B*nh, S)
+    attn = flash_attention if use_pallas else ref.attention
+    o = attn(heads(q), heads(k), heads(v), bias)  # (B*nh, S, dh)
+    o = o.reshape(b, nh, s, dh).transpose(0, 2, 1, 3).reshape(b, s, h)
+    return o @ out_w + out_b
+
+
+def forward_hidden(cfg: ModelConfig, params, input_ids, attn_mask,
+                   use_pallas=True):
+    """Embeddings + encoder stack + MLM head dense; returns (B, S, H)."""
+    p = dict(zip([n for n, _, _ in param_specs(cfg)], params))
+    b, s = input_ids.shape
+    x = p["tok_emb"][input_ids] + p["pos_emb"][None, :s]
+    x = _layernorm(x, p["emb_ln_g"], p["emb_ln_b"])
+    for i in range(cfg.layers):
+        a = _attention_block(cfg, x, attn_mask,
+                             p[f"l{i}.qkv_w"], p[f"l{i}.qkv_b"],
+                             p[f"l{i}.out_w"], p[f"l{i}.out_b"], use_pallas)
+        x = _layernorm(x + a, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        m = jax.nn.gelu(x @ p[f"l{i}.mlp_w1"] + p[f"l{i}.mlp_b1"])
+        m = m @ p[f"l{i}.mlp_w2"] + p[f"l{i}.mlp_b2"]
+        x = _layernorm(x + m, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+    x = jax.nn.gelu(x @ p["head_w"] + p["head_b"])
+    return _layernorm(x, p["head_ln_g"], p["head_ln_b"])
+
+
+def loss_fn(cfg: ModelConfig, params, input_ids, attn_mask, labels,
+            use_pallas=True):
+    """Mean masked-LM cross-entropy over masked positions."""
+    p = dict(zip([n for n, _, _ in param_specs(cfg)], params))
+    h = forward_hidden(cfg, params, input_ids, attn_mask, use_pallas)
+    b, s, hd = h.shape
+    rows = mlm_loss_rows if use_pallas else ref.mlm_loss_rows
+    per_row = rows(h.reshape(b * s, hd), p["tok_emb"], p["out_bias"],
+                   labels.reshape(b * s))
+    n = jnp.maximum(jnp.sum(labels >= 0), 1).astype(jnp.float32)
+    return jnp.sum(per_row) / n
+
+
+def make_train_step(cfg: ModelConfig, use_pallas=True):
+    """(params..., ids, mask, labels) -> (loss, flat_grads).
+
+    Gradients are flattened (row-major) and concatenated into ONE 1-D
+    f32 vector, in param_specs order. Two reasons (see rust runtime):
+    1-D outputs have a unique layout, so the HLO entry layout can never
+    silently transpose a gradient; and the rust side all-reduces one
+    contiguous buffer instead of 30+ small ones.
+    """
+
+    def step(params, input_ids, attn_mask, labels):
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, input_ids, attn_mask, labels,
+                               use_pallas))(params)
+        flat = jnp.concatenate([g.reshape(-1) for g in grads])
+        return loss, flat
+
+    return step
+
+
+def example_batch_specs(cfg: ModelConfig):
+    """ShapeDtypeStructs for (input_ids, attn_mask, labels)."""
+    b, s = cfg.artifact_batch, cfg.seq
+    return (
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, s), jnp.float32),
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+    )

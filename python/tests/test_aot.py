@@ -1,0 +1,47 @@
+"""AOT path tests: HLO text emission + manifest schema round trip."""
+
+import json
+
+import pytest
+
+from compile import aot, configs, model
+
+
+@pytest.fixture(scope="module")
+def tiny_hlo():
+    return aot.lower_variant(configs.TINY)
+
+
+def test_hlo_text_structure(tiny_hlo):
+    assert tiny_hlo.startswith("HloModule")
+    assert "ENTRY" in tiny_hlo
+    # one leaf parameter per model param + 3 batch inputs
+    n_inputs = len(model.param_specs(configs.TINY)) + 3
+    assert tiny_hlo.count("parameter(") >= n_inputs
+
+
+def test_hlo_outputs_are_loss_and_flat_grads(tiny_hlo):
+    # return_tuple=True => the entry root is a (f32[], f32[P]) tuple
+    p = configs.TINY.param_count()
+    assert f"f32[{p}]" in tiny_hlo
+
+
+def test_manifest_schema():
+    m = aot.variant_manifest(configs.TINY, "tiny.train.hlo.txt")
+    js = json.loads(json.dumps(m))  # serializable
+    assert js["config"]["param_count"] == configs.TINY.param_count()
+    assert js["inputs"][-3:] == ["input_ids", "attn_mask", "labels"]
+    assert js["outputs"] == ["loss", "flat_grads"]
+    assert js["grad_len"] == configs.TINY.param_count()
+    off = 0
+    for p in js["params"]:
+        assert p["init"].startswith(("normal:", "zeros", "ones"))
+        assert p["offset"] == off
+        off += p["size"]
+    assert off == js["grad_len"]
+
+
+def test_manifest_lists_paper_variants_without_artifacts():
+    m = aot.variant_manifest(configs.BERT_350M, None)
+    assert m["artifact"] is None
+    assert m["config"]["param_count"] > 300e6

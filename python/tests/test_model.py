@@ -1,0 +1,126 @@
+"""L2 model tests: shapes, pallas-vs-ref equivalence, loss decreases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+
+def _batch(cfg, seed=0, b=None):
+    rng = np.random.default_rng(seed)
+    b = b or cfg.artifact_batch
+    ids = rng.integers(0, cfg.vocab, (b, cfg.seq))
+    mask = np.ones((b, cfg.seq), np.float32)
+    mask[:, cfg.seq - 4:] = 0.0  # padded tail
+    labels = np.where(rng.random((b, cfg.seq)) < 0.15,
+                      rng.integers(0, cfg.vocab, (b, cfg.seq)), -100)
+    labels = np.where(mask > 0, labels, -100)
+    return (jnp.asarray(ids, jnp.int32), jnp.asarray(mask),
+            jnp.asarray(labels, jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = configs.TINY
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_param_specs_count_matches_config(tiny_setup):
+    cfg, params = tiny_setup
+    total = sum(int(np.prod(s)) for _, s, _ in model.param_specs(cfg))
+    assert total == cfg.param_count()
+    assert len(params) == len(model.param_specs(cfg))
+
+
+def test_all_variant_param_counts():
+    # the closed-form in configs must match the actual spec shapes
+    for cfg in configs.CPU_VARIANTS + configs.PAPER_VARIANTS:
+        total = sum(int(np.prod(s)) for _, s, _ in model.param_specs(cfg))
+        assert total == cfg.param_count(), cfg.name
+
+
+def test_paper_scale_param_counts_near_reported():
+    # the paper reports 120M and 350M; our configs should land close
+    assert abs(configs.BERT_120M.param_count() - 120e6) / 120e6 < 0.15
+    assert abs(configs.BERT_350M.param_count() - 350e6) / 350e6 < 0.15
+
+
+def test_forward_hidden_shape(tiny_setup):
+    cfg, params = tiny_setup
+    ids, mask, _ = _batch(cfg)
+    h = model.forward_hidden(cfg, params, ids, mask)
+    assert h.shape == (cfg.artifact_batch, cfg.seq, cfg.hidden)
+    assert bool(jnp.isfinite(h).all())
+
+
+def test_pallas_and_ref_paths_agree(tiny_setup):
+    cfg, params = tiny_setup
+    ids, mask, labels = _batch(cfg)
+    lp = model.loss_fn(cfg, params, ids, mask, labels, use_pallas=True)
+    lr = model.loss_fn(cfg, params, ids, mask, labels, use_pallas=False)
+    np.testing.assert_allclose(float(lp), float(lr), rtol=1e-4)
+
+
+def test_train_step_outputs(tiny_setup):
+    cfg, params = tiny_setup
+    ids, mask, labels = _batch(cfg)
+    loss, flat = model.make_train_step(cfg)(params, ids, mask, labels)
+    assert loss.shape == ()
+    assert flat.shape == (cfg.param_count(),)
+    assert bool(jnp.isfinite(flat).all())
+
+
+def test_flat_grads_order_matches_param_specs(tiny_setup):
+    # slicing the flat vector by spec offsets must recover each grad
+    cfg, params = tiny_setup
+    ids, mask, labels = _batch(cfg)
+    _, grads = jax.value_and_grad(
+        lambda ps: model.loss_fn(cfg, ps, ids, mask, labels))(params)
+    _, flat = model.make_train_step(cfg)(params, ids, mask, labels)
+    off = 0
+    for g in grads:
+        n = int(np.prod(g.shape))
+        np.testing.assert_allclose(np.asarray(flat[off:off + n]),
+                                   np.asarray(g).reshape(-1), rtol=1e-6)
+        off += n
+    assert off == flat.shape[0]
+
+
+def test_initial_loss_near_uniform(tiny_setup):
+    # with tiny init, MLM loss should start near ln(vocab)
+    cfg, params = tiny_setup
+    ids, mask, labels = _batch(cfg)
+    loss = float(model.loss_fn(cfg, params, ids, mask, labels))
+    assert abs(loss - np.log(cfg.vocab)) < 1.0
+
+
+def test_loss_decreases_under_sgd(tiny_setup):
+    cfg, params = tiny_setup
+    ids, mask, labels = _batch(cfg)
+    step = jax.jit(model.make_train_step(cfg, use_pallas=False))
+    ps = params
+    losses = []
+    for _ in range(8):
+        loss, flat = step(ps, ids, mask, labels)
+        losses.append(float(loss))
+        new_ps, off = [], 0
+        for p in ps:
+            n = int(np.prod(p.shape))
+            g = flat[off:off + n].reshape(p.shape)
+            new_ps.append(p - 0.5 * g)
+            off += n
+        ps = tuple(new_ps)
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_grad_wrt_padded_positions_is_zero(tiny_setup):
+    # labels are -100 everywhere => loss 0 => all grads 0
+    cfg, params = tiny_setup
+    ids, mask, _ = _batch(cfg)
+    labels = jnp.full_like(ids, -100)
+    loss, flat = model.make_train_step(cfg)(params, ids, mask, labels)
+    assert float(loss) == 0.0
+    assert float(jnp.abs(flat).max()) == 0.0

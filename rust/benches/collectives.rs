@@ -1,0 +1,86 @@
+//! BENCH collectives: real ring vs tree all-reduce across world sizes
+//! and buffer sizes (in-process transport), plus the α-β cost model's
+//! projected times on TX-GAIN for the same shapes — the ablation behind
+//! the `training.allreduce` config knob.
+//!
+//! Run: `cargo bench --bench collectives`
+
+use txgain::collectives::{allreduce, Algorithm, CostModel, World};
+use txgain::config::ClusterConfig;
+use txgain::report::Table;
+use txgain::util::bench::{bench, black_box, section};
+
+fn run_real(algo: Algorithm, world: usize, len: usize) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = World::new(world)
+            .into_comms()
+            .into_iter()
+            .map(|mut c| {
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    allreduce(algo, &mut c, &mut buf).unwrap();
+                    black_box(buf[0]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    section("real in-process all-reduce: ring vs tree");
+    let mut t = Table::new(
+        "wall time per all-reduce (mean of 5)",
+        vec!["world", "floats", "ring(ms)", "tree(ms)", "winner"],
+    );
+    for world in [2usize, 4, 8] {
+        for len in [1_000usize, 100_000, 8_500_000] {
+            let avg = |algo| -> f64 {
+                (0..5).map(|_| run_real(algo, world, len)).sum::<f64>()
+                    / 5.0
+            };
+            let ring = avg(Algorithm::Ring);
+            let tree = avg(Algorithm::Tree);
+            t.row(&[
+                world.to_string(),
+                len.to_string(),
+                format!("{:.2}", ring * 1e3),
+                format!("{:.2}", tree * 1e3),
+                (if ring < tree { "ring" } else { "tree" }).to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    section("α-β model projection on TX-GAIN (25 GbE + NVLink)");
+    let cost = CostModel::from_cluster(&ClusterConfig::tx_gain(128));
+    let mut t = Table::new(
+        "projected all-reduce time, bf16 gradients",
+        vec!["nodes", "model", "bytes", "ring(ms)", "tree(ms)"],
+    );
+    for nodes in [8usize, 32, 128] {
+        for (name, params) in
+            [("bert-120m", 109_076_400u64), ("bert-350m", 334_616_496)]
+        {
+            let bytes = CostModel::gradient_bytes(params);
+            t.row(&[
+                nodes.to_string(),
+                name.to_string(),
+                format!("{:.0}M", bytes / 1e6),
+                format!("{:.1}", cost.ring_allreduce(nodes, bytes) * 1e3),
+                format!("{:.1}", cost.tree_allreduce(nodes, bytes) * 1e3),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    section("hot path");
+    bench("ring all-reduce, world=4, 8.5M floats (e2e grads)", 2000,
+          || {
+              black_box(run_real(Algorithm::Ring, 4, 8_500_000));
+          });
+}

@@ -1,0 +1,55 @@
+//! BENCH FIG1 + REC4: regenerates the paper's Fig. 1 (throughput vs
+//! node count, one series per model size) and reports the exposed
+//! all-reduce share behind recommendation 4. Also times the sweep
+//! itself (the sim must stay interactive).
+//!
+//! Run: `cargo bench --bench fig1_scaling`
+
+use txgain::config::presets;
+use txgain::perfmodel::{scaling_efficiency, sweep_nodes};
+use txgain::report;
+use txgain::util::bench::{bench, black_box, section};
+
+fn main() {
+    section("FIG 1 — pretraining scaling performance (per model size)");
+    let nodes = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let mut series = Vec::new();
+    for model in presets::paper_models() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.training.batch_per_gpu =
+            presets::artifact_batch(&model.variant);
+        cfg.model = model.clone();
+        let sweep = sweep_nodes(&cfg, &nodes);
+        println!("{}", report::fig1_table(&model.variant, &sweep)
+            .render());
+        let eff = scaling_efficiency(&sweep);
+        println!("  scaling efficiency @128 nodes: {:.3}  \
+                  (paper: \"roughly linear\")\n", eff.last().unwrap());
+        series.push((model.variant.clone(), sweep));
+    }
+
+    section("REC 4 — network is not the bottleneck (exposed comm share)");
+    for (name, sweep) in &series {
+        let r = sweep.last().unwrap();
+        println!(
+            "  {:<12} raw all-reduce {:>6.1} ms | exposed {:>6.1} ms \
+             ({:>4.1}% of step)",
+            name,
+            r.comm_secs * 1e3,
+            r.comm_exposed_secs * 1e3,
+            r.comm_exposed_secs / r.step_secs * 100.0
+        );
+    }
+
+    let csv_series: Vec<(&str, Vec<txgain::perfmodel::SimResult>)> =
+        series.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+    let csv = report::paper::fig1_csv(&csv_series);
+    csv.write_to(std::path::Path::new("runs/bench/fig1.csv")).unwrap();
+    println!("\nwrote runs/bench/fig1.csv ({} rows)", csv.len());
+
+    section("sweep cost (sim hot path)");
+    let cfg = presets::paper_full_scale();
+    bench("sweep_nodes(8 points, bert-120m)", 200, || {
+        black_box(sweep_nodes(&cfg, &nodes));
+    });
+}

@@ -1,0 +1,92 @@
+//! BENCH hot path: the per-step L3 costs that must stay off the
+//! critical path — batch assembly/masking, optimizer update, literal
+//! conversion, the PJRT step itself (tiny + small variants), BPE
+//! encode. Tracked across the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+
+use txgain::config::presets;
+use txgain::data::records::Sample;
+use txgain::data::{LoaderPool, Masker};
+use txgain::runtime::{Engine, HostParams, Manifest};
+use txgain::train::AdamW;
+use txgain::util::bench::{bench, black_box, section};
+use txgain::util::Rng;
+
+fn main() {
+    section("data path");
+    let seq = 128usize;
+    let ds: Arc<Vec<Sample>> = Arc::new(
+        (0..2048)
+            .map(|i| {
+                let toks: Vec<u16> =
+                    (0..seq - 2).map(|j| 4 + ((i + j) % 8000) as u16)
+                        .collect();
+                Sample::from_tokens(&toks, seq)
+            })
+            .collect(),
+    );
+    let masker = Masker::new(0.15, 8192);
+    let order: Vec<u32> = (0..2048).collect();
+
+    bench("mask one seq-128 sample", 200, || {
+        let mut rng = Rng::new(3);
+        black_box(masker.apply(&ds[7], &mut rng));
+    });
+    bench("assemble epoch: 256 batches x 8, 4 workers", 1000, || {
+        let mut pool = LoaderPool::spawn(ds.clone(), seq, &order, 8,
+                                         masker.clone(), 7, 0, 4, 4, 0)
+            .unwrap();
+        while let Some(b) = pool.next_batch() {
+            black_box(&b);
+        }
+    });
+
+    section("optimizer");
+    let manifest = Manifest::load(&Manifest::default_dir());
+    if let Ok(manifest) = &manifest {
+        let meta = manifest.variant("e2e").unwrap().clone();
+        let mut params = HostParams::init(&meta, 1);
+        let mut opt = AdamW::new(&presets::e2e_pretrain().training,
+                                 meta.grad_len);
+        let grads = vec![1e-3f32; meta.grad_len];
+        bench("AdamW step, 8.5M params (e2e)", 1000, || {
+            opt.step(&mut params, &meta, &grads, 1e-4);
+        });
+        bench("HostParams::init, 8.5M params", 500, || {
+            black_box(HostParams::init(&meta, 2));
+        });
+    }
+
+    section("PJRT step (requires artifacts)");
+    if manifest.is_ok() {
+        for variant in ["tiny", "small"] {
+            let engine = Engine::load(&Manifest::default_dir(), variant)
+                .unwrap();
+            let meta = engine.meta.clone();
+            let params = HostParams::init(&meta, 1);
+            let n = meta.batch * meta.seq;
+            let ids: Vec<i32> =
+                (0..n).map(|i| 4 + (i % (meta.vocab - 4)) as i32)
+                    .collect();
+            let mask = vec![1.0f32; n];
+            let labels: Vec<i32> = (0..n)
+                .map(|i| if i % 7 == 0 { 4 + (i % 100) as i32 }
+                     else { -100 })
+                .collect();
+            bench(&format!("execute_step({variant}) fwd+bwd"), 3000,
+                  || {
+                      black_box(
+                          engine
+                              .execute_step(&params, &ids, &mask,
+                                            &labels)
+                              .unwrap(),
+                      );
+                  });
+        }
+    } else {
+        println!("(skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,75 @@
+//! BENCH REC1: "preprocess and tokenize the entire dataset ahead of
+//! training" — measures the raw→packed size reduction on real shards at
+//! several corpus sizes, extrapolates to the paper's 202M samples, and
+//! times the preprocessing stages.
+//!
+//! Run: `cargo bench --bench rec1_preprocess`
+
+use txgain::config::presets;
+use txgain::data::corpus::CorpusGenerator;
+use txgain::data::preprocess::{extrapolate_reduction, preprocess_corpus,
+                               train_tokenizer};
+use txgain::report::Table;
+use txgain::util::bench::{bench, black_box, section};
+use txgain::util::human_bytes;
+
+fn main() {
+    let base = presets::e2e_pretrain().data;
+
+    section("REC 1 — ahead-of-time preprocessing: raw vs packed");
+    let mut t = Table::new(
+        "measured on real shards (synthetic corpus, paper-profile sizes)",
+        vec!["samples", "raw (JSONL+hex)", "packed shards", "reduction",
+             "tokens/byte"],
+    );
+    for samples in [256usize, 1024, 4096] {
+        let mut cfg = base.clone();
+        cfg.corpus_samples = samples;
+        let dir = std::env::temp_dir()
+            .join(format!("txgain-rec1-{}-{samples}",
+                          std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let stats = preprocess_corpus(&cfg, 128, 42, &dir).unwrap();
+        t.row(&[
+            samples.to_string(),
+            human_bytes(stats.raw_bytes),
+            human_bytes(stats.tokenized_bytes),
+            format!("{:.2}%", stats.reduction() * 100.0),
+            format!("{:.3}", stats.tokens_per_byte),
+        ]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    println!("{}", t.render());
+
+    // paper-scale extrapolation: 202M samples @ seq 512
+    let (raw, packed) =
+        extrapolate_reduction(&base, 512, 42, 202_000_000).unwrap();
+    println!(
+        "extrapolated to the paper's corpus (202M samples, seq 512):\n  \
+         raw {} -> packed {} = {:.2}% reduction   (paper: 2 TB -> 25 GB, \
+         99%)\n",
+        human_bytes(raw),
+        human_bytes(packed),
+        (1.0 - packed as f64 / raw as f64) * 100.0
+    );
+
+    section("stage timings");
+    let gen = CorpusGenerator::new(4096, base.fn_size_mu,
+                                   base.fn_size_sigma, 42);
+    bench("corpus: generate one ~10KB function", 200, || {
+        black_box(gen.generate(17));
+    });
+    let tok = train_tokenizer(&gen, base.tokenizer_vocab, 48).unwrap();
+    let f = gen.generate(3);
+    bench("tokenizer: BPE-encode one function (heap)", 300, || {
+        black_box(tok.encode(&f.bytes));
+    });
+    bench("tokenizer: BPE-encode one function (naive rescan)", 300, || {
+        black_box(tok.encode_naive(&f.bytes));
+    });
+    bench("tokenizer: train (48 fns, vocab 8192)", 2000, || {
+        black_box(train_tokenizer(&gen, base.tokenizer_vocab, 48)
+            .unwrap());
+    });
+}

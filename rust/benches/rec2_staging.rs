@@ -1,0 +1,87 @@
+//! BENCH REC2: "duplicate your dataset across nodes prior to training"
+//! — prices network-direct vs local-copy staging across node counts on
+//! the TX-GAIN storage model, locates the contention knee, and times the
+//! real file-staging path.
+//!
+//! Run: `cargo bench --bench rec2_staging`
+
+use txgain::cluster::StorageModel;
+use txgain::config::{ClusterConfig, StagingPolicy};
+use txgain::data::staging;
+use txgain::report::Table;
+use txgain::util::bench::{bench, black_box, section};
+use txgain::util::human_bytes;
+
+fn main() {
+    let dataset = 25_000_000_000u64; // the paper's preprocessed 25 GB
+
+    section("REC 2 — staging policy sweep (25 GB preprocessed dataset)");
+    let mut t = Table::new(
+        "per-epoch IO wall time per policy (whole-shard-set reads)",
+        vec!["nodes", "net/epoch(s)", "local/epoch(s)", "net:local",
+             "stage-in(s)", "break-even"],
+    );
+    for nodes in [1usize, 2, 4, 8, 16, 27, 32, 64, 128] {
+        let c = ClusterConfig::tx_gain(nodes);
+        let net =
+            staging::estimate(&c, StagingPolicy::NetworkDirect, dataset);
+        let loc = staging::estimate(&c, StagingPolicy::LocalCopy, dataset);
+        let be = staging::break_even_epochs(&c, dataset)
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "never".into());
+        t.row(&[
+            nodes.to_string(),
+            format!("{:.1}", net.per_epoch_secs),
+            format!("{:.1}", loc.per_epoch_secs),
+            format!("{:.1}x", net.per_epoch_secs / loc.per_epoch_secs),
+            format!("{:.1}", loc.stage_in_secs),
+            be,
+        ]);
+    }
+    println!("{}", t.render());
+    let c = ClusterConfig::tx_gain(128);
+    let sm = StorageModel::new(&c);
+    println!(
+        "knee at {} concurrent readers (agg {} / client {}); past it \
+         per-node Lustre bandwidth decays ~1/N\n",
+        sm.saturation_nodes(),
+        human_bytes((c.lustre_agg_gbs * 1e9) as u64),
+        human_bytes((c.lustre_client_gbs * 1e9) as u64)
+    );
+
+    // and the un-preprocessed counterfactual the paper warns about
+    let raw = 2_000_000_000_000u64;
+    let net = staging::estimate(&c, StagingPolicy::NetworkDirect, raw);
+    println!(
+        "counterfactual without rec 1 (2 TB raw on Lustre, 128 nodes): \
+         {:.0} min per epoch of pure IO\n",
+        net.per_epoch_secs / 60.0
+    );
+
+    section("real staging path");
+    // small real shard set staged between temp dirs
+    let dir = std::env::temp_dir()
+        .join(format!("txgain-rec2-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let src = dir.join("shared");
+    std::fs::create_dir_all(&src).unwrap();
+    let shards: Vec<_> = (0..8)
+        .map(|i| {
+            let p = src.join(format!("shard-{i}.bin"));
+            std::fs::write(&p, vec![0u8; 1 << 20]).unwrap();
+            p
+        })
+        .collect();
+    let mut n = 0u32;
+    bench("stage_local: 8 x 1 MiB shards", 400, || {
+        n += 1;
+        let dst = dir.join(format!("local-{n}"));
+        black_box(staging::stage_local(&shards, &dst).unwrap());
+        std::fs::remove_dir_all(&dst).unwrap();
+    });
+    bench("storage model: shared_read_time(128 nodes)", 100, || {
+        let sm = StorageModel::new(&c);
+        black_box(sm.shared_read_time(128, 25e9));
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

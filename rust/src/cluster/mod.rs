@@ -1,0 +1,43 @@
+//! Cluster substrate: a calibrated model of the paper's TX-GAIN testbed.
+//!
+//! - [`storage`]: Lustre shared array vs per-node local SSD, with
+//!   fair-share contention (drives recommendation 2).
+//! - [`memory`]: GPU-memory occupancy model — parameters + optimizer
+//!   states + activations — solving for the max per-GPU batch size
+//!   (drives recommendation 5).
+
+pub mod memory;
+pub mod storage;
+
+pub use memory::MemoryModel;
+pub use storage::StorageModel;
+
+use crate::config::ClusterConfig;
+
+/// One-line human description used in reports.
+pub fn describe(c: &ClusterConfig) -> String {
+    format!(
+        "{} nodes x {} GPU(s) ({} GB HBM, {:.0} TF bf16), NVLink {:.0} GB/s, \
+         {} GbE, Lustre {:.0} GB/s agg",
+        c.nodes,
+        c.gpus_per_node,
+        c.gpu_mem_gb,
+        c.gpu_peak_tflops,
+        c.nvlink_gbs,
+        c.eth_gbits,
+        c.lustre_agg_gbs
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn describe_mentions_the_key_numbers() {
+        let s = describe(&ClusterConfig::tx_gain(128));
+        assert!(s.contains("128 nodes"));
+        assert!(s.contains("94 GB"));
+        assert!(s.contains("25 GbE"));
+    }
+}

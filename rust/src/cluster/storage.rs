@@ -1,0 +1,137 @@
+//! Storage model: the shared Lustre array vs per-node local SSD.
+//!
+//! Built on the max-min flow network: every node's read goes through its
+//! own client cap (min of the NIC and the per-client Lustre limit) and
+//! the array's aggregate link. With few nodes the client cap binds; past
+//! `agg / client` nodes the array saturates and per-node bandwidth falls
+//! like 1/N — the contention the paper's recommendation 2 avoids by
+//! copying the dataset to local SSD once.
+
+use crate::config::ClusterConfig;
+use crate::sim::FlowNet;
+
+pub struct StorageModel<'a> {
+    cluster: &'a ClusterConfig,
+}
+
+impl<'a> StorageModel<'a> {
+    pub fn new(cluster: &'a ClusterConfig) -> Self {
+        StorageModel { cluster }
+    }
+
+    fn client_cap(&self) -> f64 {
+        (self.cluster.lustre_client_gbs * 1e9)
+            .min(self.cluster.eth_bytes_per_sec())
+    }
+
+    /// Wall time for `nodes` nodes to each read `bytes_per_node` from the
+    /// shared array, all starting together (an epoch under
+    /// `StagingPolicy::NetworkDirect`, or the one-time stage-in copy).
+    pub fn shared_read_time(&self, nodes: usize, bytes_per_node: f64)
+        -> f64 {
+        if nodes == 0 || bytes_per_node <= 0.0 {
+            return 0.0;
+        }
+        let mut net = FlowNet::new();
+        let array = net.add_link(self.cluster.lustre_agg_gbs * 1e9);
+        for _ in 0..nodes {
+            let client = net.add_link(self.client_cap());
+            net.add_flow(vec![array, client], bytes_per_node, 0.0);
+        }
+        net.run().into_iter().fold(0.0, f64::max)
+    }
+
+    /// Effective per-node read bandwidth from the shared array when
+    /// `nodes` read concurrently.
+    pub fn shared_read_bw(&self, nodes: usize) -> f64 {
+        let bytes = 1e9;
+        bytes / self.shared_read_time(nodes, bytes) * 1.0
+    }
+
+    /// Wall time to read `bytes` from the node-local SSD (no cross-node
+    /// contention by construction).
+    pub fn local_read_time(&self, bytes: f64) -> f64 {
+        bytes / (self.cluster.ssd_gbs * 1e9)
+    }
+
+    /// One-time cost of staging the full preprocessed dataset to every
+    /// node's SSD (recommendation 2's up-front price): all nodes pull the
+    /// whole dataset concurrently, then write it locally (reads and
+    /// writes overlap; the slower of the two binds).
+    pub fn stage_in_time(&self, nodes: usize, dataset_bytes: f64) -> f64 {
+        let pull = self.shared_read_time(nodes, dataset_bytes);
+        let write = dataset_bytes / (self.cluster.ssd_gbs * 1e9);
+        pull.max(write)
+    }
+
+    /// Number of concurrently-reading nodes at which the array saturates
+    /// (the knee of the rec-2 curve).
+    pub fn saturation_nodes(&self) -> usize {
+        (self.cluster.lustre_agg_gbs * 1e9 / self.client_cap()).ceil()
+            as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(nodes: usize) -> ClusterConfig {
+        ClusterConfig::tx_gain(nodes)
+    }
+
+    #[test]
+    fn single_node_reads_at_client_cap() {
+        let c = cluster(1);
+        let m = StorageModel::new(&c);
+        // 3 GB at 3 GB/s client cap => 1 s
+        let t = m.shared_read_time(1, 3e9);
+        assert!((t - 1.0).abs() < 1e-6, "t={t}");
+    }
+
+    #[test]
+    fn array_saturates_past_knee() {
+        let c = cluster(128);
+        let m = StorageModel::new(&c);
+        let knee = m.saturation_nodes();
+        assert_eq!(knee, 27); // ceil(80 / 3)
+        // At 128 nodes each gets agg/128 = 0.625 GB/s
+        let t = m.shared_read_time(128, 1e9);
+        assert!((t - 1.6).abs() < 1e-3, "t={t}");
+    }
+
+    #[test]
+    fn below_knee_time_is_flat() {
+        let c = cluster(128);
+        let m = StorageModel::new(&c);
+        let t1 = m.shared_read_time(2, 1e9);
+        let t2 = m.shared_read_time(20, 1e9);
+        assert!((t1 - t2).abs() < 1e-6, "{t1} vs {t2}");
+    }
+
+    #[test]
+    fn local_ssd_beats_contended_array_at_scale() {
+        let c = cluster(128);
+        let m = StorageModel::new(&c);
+        let per_epoch_bytes = 25e9; // the paper's preprocessed dataset
+        let shared = m.shared_read_time(128, per_epoch_bytes);
+        let local = m.local_read_time(per_epoch_bytes);
+        assert!(
+            local < shared / 5.0,
+            "local {local}s should be far below shared {shared}s"
+        );
+    }
+
+    #[test]
+    fn stage_in_amortizes_quickly() {
+        // rec 2: the one-time copy pays for itself within a few epochs
+        let c = cluster(128);
+        let m = StorageModel::new(&c);
+        let ds = 25e9;
+        let stage = m.stage_in_time(128, ds);
+        let per_epoch_saving =
+            m.shared_read_time(128, ds) - m.local_read_time(ds);
+        assert!(stage / per_epoch_saving < 3.0,
+                "stage={stage}, saving={per_epoch_saving}");
+    }
+}

@@ -1,0 +1,147 @@
+//! In-process rank-to-rank transport: one mailbox per rank, selective
+//! receive by (source, tag). This is the "network" real-mode collectives
+//! run over; each trainer rank owns one [`Comm`] on its own thread.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::Context;
+
+use crate::Result;
+
+type Msg = (usize, u32, Vec<f32>); // (from, tag, payload)
+
+/// Per-rank communicator handle.
+pub struct Comm {
+    rank: usize,
+    world: usize,
+    txs: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Out-of-order arrivals parked until someone asks for them.
+    parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
+    /// Bytes sent by this rank (f32 payload), for comm accounting.
+    pub bytes_sent: u64,
+}
+
+/// Builder: create all ranks' communicators at once.
+pub struct World {
+    comms: Vec<Comm>,
+}
+
+impl World {
+    pub fn new(world: usize) -> World {
+        assert!(world > 0);
+        let mut txs = Vec::with_capacity(world);
+        let mut rxs = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel::<Msg>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let comms = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Comm {
+                rank,
+                world,
+                txs: txs.clone(),
+                rx,
+                parked: HashMap::new(),
+                bytes_sent: 0,
+            })
+            .collect();
+        World { comms }
+    }
+
+    pub fn into_comms(self) -> Vec<Comm> {
+        self.comms
+    }
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Send `data` to `to` with `tag`. Never blocks (unbounded mailbox).
+    pub fn send(&mut self, to: usize, tag: u32, data: Vec<f32>)
+        -> Result<()> {
+        self.bytes_sent += (data.len() * 4) as u64;
+        self.txs[to]
+            .send((self.rank, tag, data))
+            .ok()
+            .with_context(|| format!("rank {} send to dead rank {to}",
+                                     self.rank))
+    }
+
+    /// Blocking selective receive from `from` with `tag`.
+    pub fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(v) = q.pop_front() {
+                return Ok(v);
+            }
+        }
+        loop {
+            let (f, t, data) = self
+                .rx
+                .recv()
+                .ok()
+                .with_context(|| format!("rank {} mailbox closed",
+                                         self.rank))?;
+            if f == from && t == tag {
+                return Ok(data);
+            }
+            self.parked.entry((f, t)).or_default().push_back(data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let mut comms = World::new(2).into_comms();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                c0.send(1, 7, vec![1.0, 2.0]).unwrap();
+                let back = c0.recv(1, 8).unwrap();
+                assert_eq!(back, vec![3.0]);
+            });
+            s.spawn(move || {
+                let v = c1.recv(0, 7).unwrap();
+                assert_eq!(v, vec![1.0, 2.0]);
+                c1.send(0, 8, vec![3.0]).unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn selective_receive_parks_other_tags() {
+        let mut comms = World::new(2).into_comms();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.send(1, 1, vec![1.0]).unwrap();
+        c0.send(1, 2, vec![2.0]).unwrap();
+        c0.send(1, 1, vec![3.0]).unwrap();
+        // ask for tag 2 first: tag-1 messages must be parked, not lost
+        assert_eq!(c1.recv(0, 2).unwrap(), vec![2.0]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn bytes_sent_accounted() {
+        let mut comms = World::new(2).into_comms();
+        let mut c0 = comms.remove(0);
+        c0.send(1, 0, vec![0.0; 100]).unwrap();
+        assert_eq!(c0.bytes_sent, 400);
+    }
+}

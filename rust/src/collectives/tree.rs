@@ -1,0 +1,113 @@
+//! Binomial-tree all-reduce: reduce to rank 0, broadcast back.
+//! Latency-optimal (2·log₂R rounds) but moves 2·bytes per rank at the
+//! root's links — the baseline the ring beats on large gradients; the
+//! collectives bench shows the crossover.
+
+use super::comm::Comm;
+use crate::Result;
+
+const REDUCE_TAG: u32 = 0x7000;
+const BCAST_TAG: u32 = 0x7001;
+
+/// In-place sum all-reduce across the world (binomial tree).
+pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+    let world = comm.world();
+    let rank = comm.rank();
+    if world == 1 {
+        return Ok(());
+    }
+
+    // Reduce: at round k (dist = 1<<k), ranks with (rank % 2dist) == dist
+    // send to rank - dist and exit; receivers accumulate.
+    let mut dist = 1;
+    while dist < world {
+        if rank % (2 * dist) == dist {
+            comm.send(rank - dist, REDUCE_TAG + dist as u32,
+                      buf.to_vec())?;
+            break;
+        } else if rank % (2 * dist) == 0 && rank + dist < world {
+            let incoming = comm.recv(rank + dist,
+                                     REDUCE_TAG + dist as u32)?;
+            for (d, s) in buf.iter_mut().zip(incoming) {
+                *d += s;
+            }
+        }
+        dist *= 2;
+    }
+
+    // Broadcast: mirror of the reduce schedule.
+    let mut dist = 1;
+    while dist * 2 < world {
+        dist *= 2;
+    }
+    while dist >= 1 {
+        if rank % (2 * dist) == 0 && rank + dist < world {
+            comm.send(rank + dist, BCAST_TAG + dist as u32, buf.to_vec())?;
+        } else if rank % (2 * dist) == dist {
+            let incoming = comm.recv(rank - dist,
+                                     BCAST_TAG + dist as u32)?;
+            buf.copy_from_slice(&incoming);
+        }
+        dist /= 2;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::World;
+
+    fn run(world: usize, len: usize) -> Vec<Vec<f32>> {
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|r| (0..len).map(|i| (r * 2 + i) as f32).collect())
+            .collect();
+        std::thread::scope(|s| {
+            World::new(world)
+                .into_comms()
+                .into_iter()
+                .zip(inputs)
+                .map(|(mut c, mut buf)| {
+                    s.spawn(move || {
+                        allreduce(&mut c, &mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        })
+    }
+
+    #[test]
+    fn sums_for_power_of_two_world() {
+        let out = run(8, 5);
+        for r in &out {
+            for (i, v) in r.iter().enumerate() {
+                let want: f32 =
+                    (0..8).map(|k| (k * 2 + i) as f32).sum();
+                assert_eq!(*v, want);
+            }
+        }
+    }
+
+    #[test]
+    fn sums_for_odd_world() {
+        let out = run(5, 3);
+        for r in &out {
+            for (i, v) in r.iter().enumerate() {
+                let want: f32 =
+                    (0..5).map(|k| (k * 2 + i) as f32).sum();
+                assert_eq!(*v, want);
+            }
+        }
+    }
+
+    #[test]
+    fn two_ranks() {
+        let out = run(2, 2);
+        assert_eq!(out[0], vec![2.0, 4.0]);
+        assert_eq!(out[1], vec![2.0, 4.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Cluster description — defaults model TX-GAIN (the paper's testbed):
+//! HPE nodes, dual AMD EPYC 9254, dual H100-NVL 94 GB with an NVLink
+//! bridge, 25 GbE converged ethernet to a non-blocking core switch,
+//! Lustre parallel storage, 3.8 TB local SSD.
+
+use anyhow::ensure;
+
+use super::deny_unknown;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// HBM capacity per GPU, GB (H100-NVL: 94).
+    pub gpu_mem_gb: f64,
+    /// Dense BF16 peak per GPU, TFLOP/s (H100-NVL dense: ~1671).
+    pub gpu_peak_tflops: f64,
+    /// NVLink bridge bandwidth between the two GPUs of a node, GB/s.
+    pub nvlink_gbs: f64,
+    /// Per-node ethernet link, Gbit/s (TX-GAIN: 25 GbE).
+    pub eth_gbits: f64,
+    /// Aggregate Lustre array bandwidth, GB/s (shared by all clients).
+    pub lustre_agg_gbs: f64,
+    /// Per-client cap on Lustre reads, GB/s (bounded by the NIC).
+    pub lustre_client_gbs: f64,
+    /// Local SSD sequential read bandwidth per node, GB/s.
+    pub ssd_gbs: f64,
+    /// CPU cores available for data loading per node.
+    pub loader_cores: usize,
+    /// Small per-message network latency, microseconds.
+    pub net_latency_us: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's TX-GAIN node, at a given partition size.
+    pub fn tx_gain(nodes: usize) -> Self {
+        ClusterConfig {
+            nodes,
+            gpus_per_node: 2,
+            gpu_mem_gb: 94.0,
+            gpu_peak_tflops: 1671.0,
+            nvlink_gbs: 600.0,
+            eth_gbits: 25.0,
+            lustre_agg_gbs: 80.0,
+            lustre_client_gbs: 3.0,
+            ssd_gbs: 6.5,
+            loader_cores: 24,
+            net_latency_us: 30.0,
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        deny_unknown(v, &["nodes", "gpus_per_node", "gpu_mem_gb",
+                          "gpu_peak_tflops", "nvlink_gbs", "eth_gbits",
+                          "lustre_agg_gbs", "lustre_client_gbs", "ssd_gbs",
+                          "loader_cores", "net_latency_us"])?;
+        let d = Self::tx_gain(1);
+        let f = |key: &str, dv: f64| -> Result<f64> {
+            Ok(v.get(key).map(|x| x.as_f64()).transpose()?.unwrap_or(dv))
+        };
+        Ok(ClusterConfig {
+            nodes: v.req("nodes")?.as_usize()?,
+            gpus_per_node: v.get("gpus_per_node").map(|x| x.as_usize())
+                .transpose()?.unwrap_or(2),
+            gpu_mem_gb: f("gpu_mem_gb", d.gpu_mem_gb)?,
+            gpu_peak_tflops: f("gpu_peak_tflops", d.gpu_peak_tflops)?,
+            nvlink_gbs: f("nvlink_gbs", d.nvlink_gbs)?,
+            eth_gbits: f("eth_gbits", d.eth_gbits)?,
+            lustre_agg_gbs: f("lustre_agg_gbs", d.lustre_agg_gbs)?,
+            lustre_client_gbs: f("lustre_client_gbs", d.lustre_client_gbs)?,
+            ssd_gbs: f("ssd_gbs", d.ssd_gbs)?,
+            loader_cores: v.get("loader_cores").map(|x| x.as_usize())
+                .transpose()?.unwrap_or(d.loader_cores),
+            net_latency_us: f("net_latency_us", d.net_latency_us)?,
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("nodes", json::num(self.nodes as f64)),
+            ("gpus_per_node", json::num(self.gpus_per_node as f64)),
+            ("gpu_mem_gb", json::num(self.gpu_mem_gb)),
+            ("gpu_peak_tflops", json::num(self.gpu_peak_tflops)),
+            ("nvlink_gbs", json::num(self.nvlink_gbs)),
+            ("eth_gbits", json::num(self.eth_gbits)),
+            ("lustre_agg_gbs", json::num(self.lustre_agg_gbs)),
+            ("lustre_client_gbs", json::num(self.lustre_client_gbs)),
+            ("ssd_gbs", json::num(self.ssd_gbs)),
+            ("loader_cores", json::num(self.loader_cores as f64)),
+            ("net_latency_us", json::num(self.net_latency_us)),
+        ])
+    }
+
+    /// Ethernet bandwidth in bytes/second.
+    pub fn eth_bytes_per_sec(&self) -> f64 {
+        self.eth_gbits * 1e9 / 8.0
+    }
+
+    pub fn nvlink_bytes_per_sec(&self) -> f64 {
+        self.nvlink_gbs * 1e9
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.nodes > 0, "need at least one node");
+        ensure!(self.gpus_per_node > 0, "need at least one GPU per node");
+        ensure!(self.gpu_mem_gb > 0.0, "GPU memory must be positive");
+        ensure!(self.gpu_peak_tflops > 0.0, "peak FLOPs must be positive");
+        ensure!(
+            self.lustre_client_gbs * 1e9 <= self.eth_bytes_per_sec() * 1.01,
+            "per-client Lustre rate cannot exceed the NIC ({} GB/s > {} GbE)",
+            self.lustre_client_gbs,
+            self.eth_gbits
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_gain_matches_paper_hardware() {
+        let c = ClusterConfig::tx_gain(128);
+        assert_eq!(c.world_size(), 256); // 128 nodes x 2 GPUs
+        assert_eq!(c.gpu_mem_gb, 94.0);
+        assert!((c.eth_bytes_per_sec() - 3.125e9).abs() < 1.0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn client_rate_capped_by_nic() {
+        let mut c = ClusterConfig::tx_gain(4);
+        c.lustre_client_gbs = 50.0; // faster than a 25 GbE NIC
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_defaults_fill_hardware_fields() {
+        let v = Value::parse(r#"{"nodes": 16}"#).unwrap();
+        let c = ClusterConfig::from_json(&v).unwrap();
+        assert_eq!(c.nodes, 16);
+        assert_eq!(c.gpu_mem_gb, 94.0); // TX-GAIN default
+    }
+}

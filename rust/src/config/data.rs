@@ -1,0 +1,177 @@
+//! Data-pipeline configuration: corpus synthesis, tokenization,
+//! preprocessing, staging policy and the parallel loader (paper §II-A,
+//! recommendations 1–3).
+
+use anyhow::{bail, ensure};
+
+use super::deny_unknown;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// How each node gets at the preprocessed shards (recommendation 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StagingPolicy {
+    /// Read shards from the shared Lustre array every epoch; all nodes
+    /// contend for the aggregate array bandwidth.
+    NetworkDirect,
+    /// Copy the full preprocessed dataset to each node's local SSD once
+    /// before training, read locally afterwards.
+    LocalCopy,
+}
+
+impl StagingPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StagingPolicy::NetworkDirect => "network_direct",
+            StagingPolicy::LocalCopy => "local_copy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "network_direct" => Ok(StagingPolicy::NetworkDirect),
+            "local_copy" => Ok(StagingPolicy::LocalCopy),
+            _ => bail!("unknown staging policy '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    /// Number of synthetic compiled functions in the corpus. The paper's
+    /// corpus has 202M samples / ~2 TB; defaults scale that down while
+    /// keeping the bytes-per-sample profile.
+    pub corpus_samples: usize,
+    /// Log-normal body-size distribution of a compiled function, bytes
+    /// (log-space mean / std).
+    pub fn_size_mu: f64,
+    pub fn_size_sigma: f64,
+    /// BPE vocabulary size (includes the 4 special tokens).
+    pub tokenizer_vocab: usize,
+    /// MLM masking probability (paper: 0.15).
+    pub mask_prob: f64,
+    /// Staging policy for preprocessed shards.
+    pub staging: StagingPolicy,
+    /// Parallel data-loader workers per GPU (recommendation 3).
+    pub loaders_per_gpu: usize,
+    /// Loader prefetch depth (batches buffered per GPU).
+    pub prefetch_batches: usize,
+    /// Samples per preprocessed shard file.
+    pub samples_per_shard: usize,
+}
+
+/// exp(mu + sigma^2/2) ≈ 9.9 KB mean function body — matches the paper's
+/// profile: 202M samples ≈ 2 TB raw.
+pub const DEFAULT_FN_MU: f64 = 8.5;
+pub const DEFAULT_FN_SIGMA: f64 = 1.0;
+
+impl DataConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        deny_unknown(v, &["corpus_samples", "fn_size_mu", "fn_size_sigma",
+                          "tokenizer_vocab", "mask_prob", "staging",
+                          "loaders_per_gpu", "prefetch_batches",
+                          "samples_per_shard"])?;
+        Ok(DataConfig {
+            corpus_samples: v.req("corpus_samples")?.as_usize()?,
+            fn_size_mu: v.get("fn_size_mu").map(|x| x.as_f64())
+                .transpose()?.unwrap_or(DEFAULT_FN_MU),
+            fn_size_sigma: v.get("fn_size_sigma").map(|x| x.as_f64())
+                .transpose()?.unwrap_or(DEFAULT_FN_SIGMA),
+            tokenizer_vocab: v.req("tokenizer_vocab")?.as_usize()?,
+            mask_prob: v.get("mask_prob").map(|x| x.as_f64())
+                .transpose()?.unwrap_or(0.15),
+            staging: StagingPolicy::parse(v.req("staging")?.as_str()?)?,
+            loaders_per_gpu: v.req("loaders_per_gpu")?.as_usize()?,
+            prefetch_batches: v.get("prefetch_batches")
+                .map(|x| x.as_usize()).transpose()?.unwrap_or(2),
+            samples_per_shard: v.get("samples_per_shard")
+                .map(|x| x.as_usize()).transpose()?.unwrap_or(8192),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("corpus_samples", json::num(self.corpus_samples as f64)),
+            ("fn_size_mu", json::num(self.fn_size_mu)),
+            ("fn_size_sigma", json::num(self.fn_size_sigma)),
+            ("tokenizer_vocab", json::num(self.tokenizer_vocab as f64)),
+            ("mask_prob", json::num(self.mask_prob)),
+            ("staging", json::s(self.staging.as_str())),
+            ("loaders_per_gpu", json::num(self.loaders_per_gpu as f64)),
+            ("prefetch_batches", json::num(self.prefetch_batches as f64)),
+            ("samples_per_shard", json::num(self.samples_per_shard as f64)),
+        ])
+    }
+
+    /// Mean raw bytes per sample under the log-normal size model.
+    pub fn mean_fn_bytes(&self) -> f64 {
+        (self.fn_size_mu + self.fn_size_sigma * self.fn_size_sigma / 2.0)
+            .exp()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.corpus_samples > 0, "empty corpus");
+        ensure!(
+            (0.0..=1.0).contains(&self.mask_prob),
+            "mask_prob must be a probability"
+        );
+        ensure!(self.tokenizer_vocab >= 260,
+                "tokenizer vocab must cover all bytes + special tokens");
+        ensure!(self.loaders_per_gpu >= 1, "need at least one loader");
+        ensure!(self.samples_per_shard >= 1, "empty shards");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataConfig {
+        DataConfig {
+            corpus_samples: 1000,
+            fn_size_mu: DEFAULT_FN_MU,
+            fn_size_sigma: DEFAULT_FN_SIGMA,
+            tokenizer_vocab: 4096,
+            mask_prob: 0.15,
+            staging: StagingPolicy::LocalCopy,
+            loaders_per_gpu: 4,
+            prefetch_batches: 2,
+            samples_per_shard: 128,
+        }
+    }
+
+    #[test]
+    fn default_profile_matches_paper_scale() {
+        // paper: 202M samples, ~2TB -> ~9.9KB/sample
+        let mean = cfg().mean_fn_bytes();
+        assert!((8_000.0..12_000.0).contains(&mean), "mean={mean}");
+        let paper_total = 202e6 * mean;
+        assert!((1.5e12..2.5e12).contains(&paper_total));
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut c = cfg();
+        c.mask_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.tokenizer_vocab = 100;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn staging_policy_string_roundtrip() {
+        for p in [StagingPolicy::NetworkDirect, StagingPolicy::LocalCopy] {
+            assert_eq!(StagingPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(StagingPolicy::parse("fancy").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = cfg();
+        let back = DataConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+    }
+}

@@ -1,0 +1,151 @@
+//! Experiment configuration: JSON-backed, validated, with named presets.
+//!
+//! A [`Config`] fully describes a run: the model, the cluster it runs on
+//! (real CPU-PJRT replicas or the calibrated simulator), the data
+//! pipeline, and the training loop. Everything the paper varies in its
+//! evaluation — node count, model size, loader count, staging policy,
+//! batch size — is a config field, so every experiment is a config sweep.
+//!
+//! Serialization is hand-rolled over [`crate::util::json`] (the build is
+//! fully offline; no serde). `from_json` rejects unknown fields so typos
+//! in experiment configs fail loudly.
+
+pub mod cluster;
+pub mod data;
+pub mod model;
+pub mod presets;
+pub mod training;
+
+pub use cluster::ClusterConfig;
+pub use data::{DataConfig, StagingPolicy};
+pub use model::ModelConfig;
+pub use training::{ExecMode, TrainingConfig};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Reject keys not in `allowed` — the moral equivalent of serde's
+/// `deny_unknown_fields`.
+pub(crate) fn deny_unknown(v: &Value, allowed: &[&str]) -> Result<()> {
+    for (k, _) in v.as_obj()? {
+        if !allowed.contains(&k.as_str()) {
+            bail!("unknown config field '{k}'");
+        }
+    }
+    Ok(())
+}
+
+/// Root configuration for a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Global seed: corpus, masking, shuffling, sim jitter all derive
+    /// from it (see `util::rng`).
+    pub seed: u64,
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub data: DataConfig,
+    pub training: TrainingConfig,
+}
+
+impl Config {
+    pub fn from_json_str(s: &str) -> Result<Config> {
+        let v = Value::parse(s).context("config is not valid JSON")?;
+        let cfg = Self::from_json(&v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> Result<Config> {
+        Self::from_json_str(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?,
+        )
+    }
+
+    pub fn from_json(v: &Value) -> Result<Config> {
+        deny_unknown(v, &["seed", "model", "cluster", "data", "training"])?;
+        Ok(Config {
+            seed: v.get("seed").map(|x| x.as_u64()).transpose()?
+                .unwrap_or(0xC0FFEE),
+            model: ModelConfig::from_json(v.req("model")?)?,
+            cluster: ClusterConfig::from_json(v.req("cluster")?)?,
+            data: DataConfig::from_json(v.req("data")?)?,
+            training: TrainingConfig::from_json(v.req("training")?)?,
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("seed", json::num(self.seed as f64)),
+            ("model", self.model.to_json()),
+            ("cluster", self.cluster.to_json()),
+            ("data", self.data.to_json()),
+            ("training", self.training.to_json()),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    /// Cross-field validation beyond field-level parsing.
+    pub fn validate(&self) -> Result<()> {
+        self.model.validate()?;
+        self.cluster.validate()?;
+        self.data.validate()?;
+        self.training.validate(&self.model, &self.cluster)?;
+        Ok(())
+    }
+
+    /// Total data-parallel world size (one rank per GPU).
+    pub fn world_size(&self) -> usize {
+        self.cluster.nodes * self.cluster.gpus_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_roundtrips_through_json() {
+        for (name, cfg) in presets::all() {
+            let s = cfg.to_json_string();
+            let back = Config::from_json_str(&s)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(cfg, back, "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_fields() {
+        let cfg = presets::quickstart();
+        let mut v = cfg.to_json();
+        if let Value::Obj(ref mut kv) = v {
+            kv.push(("bogus_field".into(), json::num(3.0)));
+        }
+        assert!(Config::from_json_str(&v.to_string()).is_err());
+    }
+
+    #[test]
+    fn missing_section_is_an_error() {
+        assert!(Config::from_json_str(r#"{"seed": 1}"#).is_err());
+    }
+
+    #[test]
+    fn world_size_is_nodes_times_gpus() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.cluster.nodes = 128;
+        cfg.cluster.gpus_per_node = 2;
+        assert_eq!(cfg.world_size(), 256);
+    }
+
+    #[test]
+    fn all_presets_validate() {
+        for (name, cfg) in presets::all() {
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Model configuration — must stay in lockstep with
+//! `python/compile/configs.py` (the pytest/manifest cross-checks and
+//! `runtime::artifact` verify that at load time).
+
+use anyhow::ensure;
+
+use super::deny_unknown;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Variant name; matches a manifest.json entry when running real mode
+    /// (e.g. "tiny", "small", "e2e", "bert-120m").
+    pub variant: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub mlp_ratio: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        deny_unknown(v, &["variant", "vocab", "hidden", "layers", "heads",
+                          "seq", "mlp_ratio"])?;
+        Ok(ModelConfig {
+            variant: v.req("variant")?.as_str()?.to_string(),
+            vocab: v.req("vocab")?.as_usize()?,
+            hidden: v.req("hidden")?.as_usize()?,
+            layers: v.req("layers")?.as_usize()?,
+            heads: v.req("heads")?.as_usize()?,
+            seq: v.req("seq")?.as_usize()?,
+            mlp_ratio: v.get("mlp_ratio").map(|x| x.as_usize())
+                .transpose()?.unwrap_or(4),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("variant", json::s(&self.variant)),
+            ("vocab", json::num(self.vocab as f64)),
+            ("hidden", json::num(self.hidden as f64)),
+            ("layers", json::num(self.layers as f64)),
+            ("heads", json::num(self.heads as f64)),
+            ("seq", json::num(self.seq as f64)),
+            ("mlp_ratio", json::num(self.mlp_ratio as f64)),
+        ])
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Exact parameter count; mirrors `configs.ModelConfig.param_count`.
+    pub fn param_count(&self) -> u64 {
+        let (h, v, s, l, m) = (
+            self.hidden as u64,
+            self.vocab as u64,
+            self.seq as u64,
+            self.layers as u64,
+            (self.mlp_ratio * self.hidden) as u64,
+        );
+        let emb = v * h + s * h + 2 * h;
+        let per_layer = 4 * h * h + 4 * h + 2 * h * m + m + h + 4 * h;
+        let head = h * h + h + 2 * h + v;
+        emb + l * per_layer + head
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.hidden > 0 && self.layers > 0, "empty model");
+        ensure!(
+            self.hidden % self.heads == 0,
+            "hidden ({}) must be divisible by heads ({})",
+            self.hidden,
+            self.heads
+        );
+        ensure!(self.vocab >= 4, "vocab must hold the special tokens");
+        ensure!(self.seq >= 8, "seq too short");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bert_120m() -> ModelConfig {
+        ModelConfig {
+            variant: "bert-120m".into(),
+            vocab: 30000,
+            hidden: 768,
+            layers: 12,
+            heads: 12,
+            seq: 512,
+            mlp_ratio: 4,
+        }
+    }
+
+    #[test]
+    fn param_count_matches_python_closed_form() {
+        // Components mirrored from python/compile/configs.py.
+        let cfg = bert_120m();
+        // emb: 30000*768 + 512*768 + 2*768
+        // per layer: 4*768^2+4*768+2*768*3072+3072+768+4*768
+        // head: 768^2+768+2*768+30000
+        assert_eq!(cfg.param_count(), 23_434_752 + 12 * 7_087_872 + 622_128);
+        assert!((cfg.param_count() as f64 - 120e6).abs() / 120e6 < 0.15);
+    }
+
+    #[test]
+    fn rejects_indivisible_heads() {
+        let mut cfg = bert_120m();
+        cfg.heads = 7;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_with_default_mlp_ratio() {
+        let cfg = bert_120m();
+        let mut v = cfg.to_json();
+        // drop the optional field; parse must default it to 4
+        if let Value::Obj(ref mut kv) = v {
+            kv.retain(|(k, _)| k != "mlp_ratio");
+        }
+        let back = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(back, cfg);
+    }
+}

@@ -1,0 +1,214 @@
+//! Named presets: the CPU-runnable variants (matching the AOT artifacts
+//! built by `make artifacts`) and the paper-scale configurations used by
+//! the simulator sweeps.
+//!
+//! Model dimensions MUST mirror `python/compile/configs.py`; the runtime
+//! cross-checks them against `artifacts/manifest.json` at load time.
+
+use super::{
+    ClusterConfig, Config, DataConfig, ModelConfig, StagingPolicy,
+    TrainingConfig,
+};
+use super::training::ExecMode;
+
+fn model(variant: &str, vocab: usize, hidden: usize, layers: usize,
+         heads: usize, seq: usize) -> ModelConfig {
+    ModelConfig {
+        variant: variant.into(),
+        vocab,
+        hidden,
+        layers,
+        heads,
+        seq,
+        mlp_ratio: 4,
+    }
+}
+
+/// CPU-feasible variants (AOT artifacts exist for these).
+pub fn model_tiny() -> ModelConfig {
+    model("tiny", 512, 64, 2, 2, 64)
+}
+pub fn model_small() -> ModelConfig {
+    model("small", 2048, 128, 4, 4, 128)
+}
+pub fn model_e2e() -> ModelConfig {
+    model("e2e", 8192, 256, 8, 8, 128)
+}
+
+/// Paper-scale variants (perf-model only; see DESIGN.md substitutions).
+pub fn model_bert_120m() -> ModelConfig {
+    model("bert-120m", 30000, 768, 12, 12, 512)
+}
+pub fn model_bert_180m() -> ModelConfig {
+    model("bert-180m", 30000, 896, 16, 14, 512)
+}
+pub fn model_bert_250m() -> ModelConfig {
+    model("bert-250m", 30000, 1024, 20, 16, 512)
+}
+pub fn model_bert_350m() -> ModelConfig {
+    model("bert-350m", 30000, 1024, 24, 16, 512)
+}
+
+/// Batch size baked into each variant's AOT artifact
+/// (`configs.py: artifact_batch`).
+pub fn artifact_batch(variant: &str) -> usize {
+    match variant {
+        "tiny" => 4,
+        "small" | "e2e" => 8,
+        "bert-120m" => 184,
+        "bert-180m" => 96,
+        "bert-250m" => 48,
+        "bert-350m" => 20,
+        _ => 8,
+    }
+}
+
+fn small_data(staging: StagingPolicy) -> DataConfig {
+    DataConfig {
+        corpus_samples: 2048,
+        fn_size_mu: 8.5,
+        fn_size_sigma: 1.0,
+        tokenizer_vocab: 512,
+        mask_prob: 0.15,
+        staging,
+        loaders_per_gpu: 2,
+        prefetch_batches: 2,
+        samples_per_shard: 256,
+    }
+}
+
+fn real_training(batch: usize, steps: usize) -> TrainingConfig {
+    TrainingConfig {
+        mode: ExecMode::Real,
+        batch_per_gpu: batch,
+        steps,
+        lr: 3e-4,
+        warmup_steps: 20,
+        beta1: 0.9,
+        beta2: 0.999,
+        weight_decay: 0.01,
+        adam_eps: 1e-8,
+        allreduce: "ring".into(),
+        bucket_mb: 25.0,
+        overlap_comm: true,
+        checkpoint_every: 0,
+        log_every: 10,
+    }
+}
+
+/// Tiny model, 2 in-process ranks, a handful of steps — the smoke run.
+pub fn quickstart() -> Config {
+    Config {
+        seed: 0xC0FFEE,
+        model: model_tiny(),
+        cluster: ClusterConfig {
+            nodes: 2,
+            gpus_per_node: 1,
+            ..ClusterConfig::tx_gain(2)
+        },
+        data: small_data(StagingPolicy::LocalCopy),
+        training: real_training(artifact_batch("tiny"), 30),
+    }
+}
+
+/// The end-to-end run: the ~10M-param proxy of the paper's 120M model,
+/// a few hundred real steps, 2 data-parallel ranks, real all-reduce.
+pub fn e2e_pretrain() -> Config {
+    Config {
+        seed: 0xBEEF,
+        model: model_e2e(),
+        cluster: ClusterConfig {
+            nodes: 2,
+            gpus_per_node: 1,
+            ..ClusterConfig::tx_gain(2)
+        },
+        data: DataConfig {
+            corpus_samples: 16384,
+            tokenizer_vocab: 8192,
+            samples_per_shard: 2048,
+            loaders_per_gpu: 4,
+            ..small_data(StagingPolicy::LocalCopy)
+        },
+        training: real_training(artifact_batch("e2e"), 300),
+    }
+}
+
+/// The paper's headline configuration: bert-120m on 128 TX-GAIN nodes
+/// (256 GPUs), simulated compute, batch 184/GPU (paper §II-B rec. 5).
+pub fn paper_full_scale() -> Config {
+    Config {
+        seed: 0xF00D,
+        model: model_bert_120m(),
+        cluster: ClusterConfig::tx_gain(128),
+        data: DataConfig {
+            corpus_samples: 202_000_000,
+            tokenizer_vocab: 30000,
+            samples_per_shard: 65536,
+            loaders_per_gpu: 8,
+            ..small_data(StagingPolicy::LocalCopy)
+        },
+        training: TrainingConfig {
+            mode: ExecMode::Simulated,
+            batch_per_gpu: 184,
+            steps: 100,
+            ..real_training(184, 100)
+        },
+    }
+}
+
+/// All named presets (for CLI `--preset` and the preset-validation test).
+pub fn all() -> Vec<(&'static str, Config)> {
+    vec![
+        ("quickstart", quickstart()),
+        ("e2e", e2e_pretrain()),
+        ("paper-full-scale", paper_full_scale()),
+    ]
+}
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Option<Config> {
+    all().into_iter().find(|(n, _)| *n == name).map(|(_, c)| c)
+}
+
+/// The four paper model sizes swept by Fig. 1 / rec. 5.
+pub fn paper_models() -> Vec<ModelConfig> {
+    vec![
+        model_bert_120m(),
+        model_bert_180m(),
+        model_bert_250m(),
+        model_bert_350m(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_model_sizes_match_names() {
+        for (m, target) in paper_models().iter().zip([120e6, 180e6, 250e6,
+                                                      350e6]) {
+            let got = m.param_count() as f64;
+            assert!(
+                (got - target).abs() / target < 0.15,
+                "{}: {got} vs {target}",
+                m.variant
+            );
+        }
+    }
+
+    #[test]
+    fn by_name_finds_presets() {
+        assert!(by_name("quickstart").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn artifact_batches_match_python_configs() {
+        assert_eq!(artifact_batch("tiny"), 4);
+        assert_eq!(artifact_batch("e2e"), 8);
+        // rec 5's headline numbers:
+        assert_eq!(artifact_batch("bert-120m"), 184);
+        assert_eq!(artifact_batch("bert-350m"), 20);
+    }
+}

@@ -1,0 +1,188 @@
+//! Training-loop configuration: batch sizing, optimizer, schedule,
+//! execution mode.
+
+use anyhow::{bail, ensure};
+
+use super::{deny_unknown, ClusterConfig, ModelConfig};
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// How steps are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Real numerics: every rank executes the AOT HLO train step on the
+    /// PJRT CPU client; gradients move through the real collectives.
+    Real,
+    /// Calibrated performance simulation: compute/comm/IO are modeled,
+    /// no numerics run. Used for the 1…128-node sweeps.
+    Simulated,
+}
+
+impl ExecMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Real => "real",
+            ExecMode::Simulated => "simulated",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "real" => Ok(ExecMode::Real),
+            "simulated" => Ok(ExecMode::Simulated),
+            _ => bail!("unknown exec mode '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainingConfig {
+    pub mode: ExecMode,
+    /// Per-GPU micro-batch size. In real mode it must match the batch
+    /// baked into the AOT artifact; `0` in simulated mode means "auto"
+    /// (solve the memory model for the largest batch — rec. 5).
+    pub batch_per_gpu: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub weight_decay: f64,
+    pub adam_eps: f64,
+    /// Gradient all-reduce algorithm ("ring" | "tree").
+    pub allreduce: String,
+    /// Gradient bucket size for comm/compute overlap, MB.
+    pub bucket_mb: f64,
+    /// Overlap gradient all-reduce with the backward pass (DDP-style).
+    pub overlap_comm: bool,
+    /// Checkpoint every N steps (0 = never).
+    pub checkpoint_every: usize,
+    /// Log metrics every N steps.
+    pub log_every: usize,
+}
+
+impl TrainingConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        deny_unknown(v, &["mode", "batch_per_gpu", "steps", "lr",
+                          "warmup_steps", "beta1", "beta2", "weight_decay",
+                          "adam_eps", "allreduce", "bucket_mb",
+                          "overlap_comm", "checkpoint_every", "log_every"])?;
+        let f = |key: &str, dv: f64| -> Result<f64> {
+            Ok(v.get(key).map(|x| x.as_f64()).transpose()?.unwrap_or(dv))
+        };
+        let u = |key: &str, dv: usize| -> Result<usize> {
+            Ok(v.get(key).map(|x| x.as_usize()).transpose()?.unwrap_or(dv))
+        };
+        Ok(TrainingConfig {
+            mode: ExecMode::parse(v.req("mode")?.as_str()?)?,
+            batch_per_gpu: v.req("batch_per_gpu")?.as_usize()?,
+            steps: v.req("steps")?.as_usize()?,
+            lr: f("lr", 1e-4)?,
+            warmup_steps: u("warmup_steps", 100)?,
+            beta1: f("beta1", 0.9)?,
+            beta2: f("beta2", 0.999)?,
+            weight_decay: f("weight_decay", 0.01)?,
+            adam_eps: f("adam_eps", 1e-8)?,
+            allreduce: v.get("allreduce")
+                .map(|x| x.as_str().map(str::to_string)).transpose()?
+                .unwrap_or_else(|| "ring".into()),
+            bucket_mb: f("bucket_mb", 25.0)?,
+            overlap_comm: v.get("overlap_comm").map(|x| x.as_bool())
+                .transpose()?.unwrap_or(true),
+            checkpoint_every: u("checkpoint_every", 0)?,
+            log_every: u("log_every", 10)?,
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("mode", json::s(self.mode.as_str())),
+            ("batch_per_gpu", json::num(self.batch_per_gpu as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("lr", json::num(self.lr)),
+            ("warmup_steps", json::num(self.warmup_steps as f64)),
+            ("beta1", json::num(self.beta1)),
+            ("beta2", json::num(self.beta2)),
+            ("weight_decay", json::num(self.weight_decay)),
+            ("adam_eps", json::num(self.adam_eps)),
+            ("allreduce", json::s(&self.allreduce)),
+            ("bucket_mb", json::num(self.bucket_mb)),
+            ("overlap_comm", Value::Bool(self.overlap_comm)),
+            ("checkpoint_every", json::num(self.checkpoint_every as f64)),
+            ("log_every", json::num(self.log_every as f64)),
+        ])
+    }
+
+    pub fn validate(&self, model: &ModelConfig, cluster: &ClusterConfig)
+        -> Result<()> {
+        ensure!(self.steps > 0, "must train for at least one step");
+        ensure!(self.lr > 0.0, "lr must be positive");
+        ensure!(
+            (0.0..1.0).contains(&self.beta1)
+                && (0.0..1.0).contains(&self.beta2),
+            "betas must be in [0, 1)"
+        );
+        ensure!(
+            matches!(self.allreduce.as_str(), "ring" | "tree"),
+            "unknown allreduce algorithm '{}'",
+            self.allreduce
+        );
+        if self.mode == ExecMode::Real {
+            ensure!(
+                self.batch_per_gpu > 0,
+                "real mode requires an explicit batch size (the AOT \
+                 artifact bakes it in)"
+            );
+            // real mode runs every rank in-process; keep it sane
+            ensure!(
+                cluster.world_size() <= 64,
+                "real mode caps at 64 in-process ranks; use simulated \
+                 mode for larger sweeps"
+            );
+        }
+        let _ = model;
+        Ok(())
+    }
+
+    /// Global batch across the whole data-parallel world.
+    pub fn global_batch(&self, world: usize) -> usize {
+        self.batch_per_gpu * world
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn real_mode_needs_explicit_batch() {
+        let mut cfg = presets::quickstart();
+        cfg.training.batch_per_gpu = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn real_mode_caps_world_size() {
+        let mut cfg = presets::quickstart();
+        cfg.cluster.nodes = 100;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn global_batch_math() {
+        let cfg = presets::paper_full_scale();
+        let world = cfg.world_size();
+        assert_eq!(
+            cfg.training.global_batch(world),
+            cfg.training.batch_per_gpu * world
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = presets::e2e_pretrain().training;
+        let back = TrainingConfig::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,125 @@
+//! Leader orchestration: the one entry point behind `txgain train`, the
+//! examples and the integration tests.
+//!
+//! Pipeline (real mode):
+//!   1. preprocess: synth corpus → tokenizer → packed shards
+//!      (recommendation 1, timed),
+//!   2. stage: copy shards "shared" → "local" per the staging policy
+//!      (recommendation 2, timed),
+//!   3. train: the multi-rank DP trainer over the staged shards,
+//!   4. persist: steps.csv + report.json under the workdir.
+//!
+//! Simulated mode skips to the perf model and reports projected
+//! throughput instead.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::ensure;
+
+use crate::config::{Config, ExecMode, StagingPolicy};
+use crate::data::{preprocess_corpus, staging};
+use crate::perfmodel;
+use crate::train::{train, RunReport, TrainOptions};
+use crate::Result;
+
+/// Where a run put its outputs.
+#[derive(Clone, Debug)]
+pub struct RunArtifacts {
+    pub workdir: PathBuf,
+    pub report: RunReport,
+}
+
+/// Run the full pipeline for `cfg` under `workdir`, loading HLO
+/// artifacts from `artifacts_dir`.
+pub fn run(cfg: &Config, artifacts_dir: &Path, workdir: &Path)
+    -> Result<RunArtifacts> {
+    cfg.validate()?;
+    ensure!(cfg.training.mode == ExecMode::Real,
+            "leader::run drives real mode; use `txgain sim` / \
+             perfmodel::simulate for projections");
+    std::fs::create_dir_all(workdir)?;
+
+    // 1. preprocess (rec 1)
+    let t0 = Instant::now();
+    let shared = workdir.join("shared");
+    std::fs::create_dir_all(&shared)?;
+    let stats =
+        preprocess_corpus(&cfg.data, cfg.model.seq, cfg.seed, &shared)?;
+    let preprocess_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[prep] {} samples: raw {} -> packed {} ({:.1}% reduction) \
+         in {:.1}s",
+        stats.samples,
+        crate::util::human_bytes(stats.raw_bytes),
+        crate::util::human_bytes(stats.tokenized_bytes),
+        stats.reduction() * 100.0,
+        preprocess_secs
+    );
+
+    // 2. stage (rec 2)
+    let t1 = Instant::now();
+    let shards = match cfg.data.staging {
+        StagingPolicy::LocalCopy => {
+            staging::stage_local(&stats.shards, &workdir.join("local"))?
+        }
+        StagingPolicy::NetworkDirect => stats.shards.clone(),
+    };
+    let stage_secs = t1.elapsed().as_secs_f64();
+
+    // 3. train
+    let opts = TrainOptions {
+        artifacts_dir: artifacts_dir.to_path_buf(),
+        shards,
+        io_delay_us: 0,
+        checkpoint_dir: Some(workdir.join("checkpoints")),
+    };
+    let mut report = train(cfg, &opts)?;
+    report.preprocess_secs = preprocess_secs;
+    report.stage_secs = stage_secs;
+
+    // 4. persist
+    report.save(workdir)?;
+    Ok(RunArtifacts { workdir: workdir.to_path_buf(), report })
+}
+
+/// Simulated-mode entry: project throughput for `cfg` (any scale).
+pub fn project(cfg: &Config) -> perfmodel::SimResult {
+    perfmodel::simulate(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    /// Full-stack smoke: quickstart preset, few steps. Requires
+    /// artifacts; the integration tests cover this harder.
+    #[test]
+    fn quickstart_runs_end_to_end() {
+        let artifacts = crate::runtime::Manifest::default_dir();
+        if crate::runtime::Manifest::load(&artifacts).is_err() {
+            return; // `make artifacts` not run; integration covers it
+        }
+        let mut cfg = presets::quickstart();
+        cfg.training.steps = 4;
+        cfg.training.log_every = 1;
+        cfg.data.corpus_samples = 256;
+        let workdir = std::env::temp_dir()
+            .join(format!("txgain-leader-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&workdir);
+        let out = run(&cfg, &artifacts, &workdir).unwrap();
+        assert_eq!(out.report.records.len(), 4);
+        assert!(out.report.first_loss().unwrap().is_finite());
+        assert!(workdir.join("report.json").exists());
+        assert!(workdir.join("steps.csv").exists());
+        std::fs::remove_dir_all(&workdir).unwrap();
+    }
+
+    #[test]
+    fn project_covers_paper_scale() {
+        let r = project(&presets::paper_full_scale());
+        assert_eq!(r.world, 256);
+        assert!(r.samples_per_sec > 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! The run coordinator (leader): owns the end-to-end lifecycle the
+//! paper describes — preprocess once, stage to local storage, spin up
+//! the data-parallel world, train, report.
+
+pub mod leader;
+
+pub use leader::{run, RunArtifacts};

@@ -1,0 +1,281 @@
+//! Parallel data loader (recommendation 3).
+//!
+//! A pool of worker threads turns sample indices into model-ready
+//! batches (gather → mask → pack). The consumer (`next_batch`) sees
+//! batches strictly in step order regardless of worker interleaving, so
+//! training stays bit-deterministic at any worker count — masking RNG is
+//! keyed by (seed, epoch, step), not by worker.
+//!
+//! An optional per-batch `io_delay_us` emulates slow storage fetches so
+//! the rec-3 experiment can expose the under-provisioned-loader regime
+//! (utilization sawtooth) at CPU speeds.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::ensure;
+
+use super::masking::Masker;
+use super::records::{Sample, ShardReader};
+use crate::util::Rng;
+use crate::Result;
+
+/// One model-ready batch (flattened row-major `[batch, seq]`).
+#[derive(Clone, Debug)]
+pub struct HostBatch {
+    pub step: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub input_ids: Vec<i32>,
+    pub attn_mask: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+/// Loader metrics, updated live by the consumer.
+#[derive(Debug, Default)]
+pub struct LoaderStats {
+    /// Total time `next_batch` spent blocked (starvation), nanoseconds.
+    pub wait_ns: AtomicUsize,
+    /// Batches delivered.
+    pub delivered: AtomicUsize,
+}
+
+pub struct LoaderPool {
+    rx: Receiver<HostBatch>,
+    reorder: BTreeMap<usize, HostBatch>,
+    next_step: usize,
+    total_steps: usize,
+    pub stats: Arc<LoaderStats>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Dataset held in memory after staging (shards are read once here —
+/// the storage cost modeled/paid by `staging`).
+pub fn load_dataset(shards: &[PathBuf]) -> Result<(Vec<Sample>, usize)> {
+    ensure!(!shards.is_empty(), "no shards to load");
+    let mut all = Vec::new();
+    let mut seq = 0usize;
+    for p in shards {
+        let r = ShardReader::open(p)?;
+        ensure!(seq == 0 || seq == r.seq, "mixed sequence lengths");
+        seq = r.seq;
+        all.extend(r.samples);
+    }
+    Ok((all, seq))
+}
+
+impl LoaderPool {
+    /// Spawn `workers` loader threads producing `order.len()/batch`
+    /// batches for this rank and epoch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(dataset: Arc<Vec<Sample>>, seq: usize, order: &[u32],
+                 batch: usize, masker: Masker, seed: u64, epoch: u64,
+                 workers: usize, prefetch: usize, io_delay_us: u64)
+        -> Result<LoaderPool> {
+        ensure!(batch > 0 && workers > 0);
+        let total_steps = order.len() / batch;
+        let (tx, rx) = sync_channel::<HostBatch>(prefetch.max(1));
+        // static round-robin split of steps across workers: determinism
+        // needs no work queue, the reorder buffer absorbs skew
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let tx = tx.clone();
+            let dataset = dataset.clone();
+            let masker = masker.clone();
+            let steps: Vec<(usize, Vec<u32>)> = (0..total_steps)
+                .filter(|s| s % workers == w)
+                .map(|s| (s, order[s * batch..(s + 1) * batch].to_vec()))
+                .collect();
+            handles.push(std::thread::spawn(move || {
+                for (step, idxs) in steps {
+                    if io_delay_us > 0 {
+                        std::thread::sleep(
+                            Duration::from_micros(io_delay_us));
+                    }
+                    let b = assemble(&dataset, seq, &idxs, &masker, seed,
+                                     epoch, step);
+                    if tx.send(b).is_err() {
+                        return; // consumer dropped early
+                    }
+                }
+            }));
+        }
+        Ok(LoaderPool {
+            rx,
+            reorder: BTreeMap::new(),
+            next_step: 0,
+            total_steps,
+            stats: Arc::new(LoaderStats::default()),
+            handles,
+        })
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.total_steps
+    }
+
+    /// Blocking, in-order batch delivery. `None` when the epoch is done.
+    pub fn next_batch(&mut self) -> Option<HostBatch> {
+        if self.next_step >= self.total_steps {
+            return None;
+        }
+        let t0 = Instant::now();
+        loop {
+            if let Some(b) = self.reorder.remove(&self.next_step) {
+                self.next_step += 1;
+                self.stats
+                    .wait_ns
+                    .fetch_add(t0.elapsed().as_nanos() as usize,
+                               Ordering::Relaxed);
+                self.stats.delivered.fetch_add(1, Ordering::Relaxed);
+                return Some(b);
+            }
+            match self.rx.recv() {
+                Ok(b) => {
+                    self.reorder.insert(b.step, b);
+                }
+                Err(_) => return None, // workers gone; nothing buffered
+            }
+        }
+    }
+
+    /// Join workers (used by tests; dropping also works).
+    pub fn join(self) {}
+}
+
+impl Drop for LoaderPool {
+    fn drop(&mut self) {
+        // Replace the receiver with a dummy so the real one drops and
+        // blocked senders see a closed channel, then join the workers.
+        let (_, dummy) = sync_channel::<HostBatch>(1);
+        drop(std::mem::replace(&mut self.rx, dummy));
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Gather + mask + flatten one batch. Pure function of its arguments.
+fn assemble(dataset: &[Sample], seq: usize, idxs: &[u32], masker: &Masker,
+            seed: u64, epoch: u64, step: usize) -> HostBatch {
+    let batch = idxs.len();
+    let mut input_ids = Vec::with_capacity(batch * seq);
+    let mut attn_mask = Vec::with_capacity(batch * seq);
+    let mut labels = Vec::with_capacity(batch * seq);
+    let root = Rng::new(seed);
+    for (i, &idx) in idxs.iter().enumerate() {
+        let mut rng =
+            root.derive_mix("mask", &[epoch, step as u64, i as u64]);
+        let m = masker.apply(&dataset[idx as usize], &mut rng);
+        input_ids.extend_from_slice(&m.input_ids);
+        attn_mask.extend_from_slice(&m.attn_mask);
+        labels.extend_from_slice(&m.labels);
+    }
+    HostBatch { step, batch, seq, input_ids, attn_mask, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::special::BYTE_BASE;
+
+    fn dataset(n: usize, seq: usize) -> Arc<Vec<Sample>> {
+        Arc::new(
+            (0..n)
+                .map(|i| {
+                    let toks: Vec<u16> = (0..seq - 4)
+                        .map(|j| BYTE_BASE + ((i + j) % 200) as u16)
+                        .collect();
+                    Sample::from_tokens(&toks, seq)
+                })
+                .collect(),
+        )
+    }
+
+    fn pool(workers: usize, io_delay_us: u64) -> LoaderPool {
+        let ds = dataset(64, 32);
+        let order: Vec<u32> = (0..64).collect();
+        LoaderPool::spawn(ds, 32, &order, 8, Masker::new(0.15, 512), 7, 0,
+                          workers, 2, io_delay_us)
+            .unwrap()
+    }
+
+    #[test]
+    fn delivers_all_batches_in_order() {
+        let mut p = pool(3, 0);
+        assert_eq!(p.total_steps(), 8);
+        let mut steps = Vec::new();
+        while let Some(b) = p.next_batch() {
+            assert_eq!(b.input_ids.len(), 8 * 32);
+            assert_eq!(b.attn_mask.len(), 8 * 32);
+            assert_eq!(b.labels.len(), 8 * 32);
+            steps.push(b.step);
+        }
+        assert_eq!(steps, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_count_does_not_change_batches() {
+        let collect = |workers: usize| -> Vec<Vec<i32>> {
+            let mut p = pool(workers, 0);
+            let mut out = Vec::new();
+            while let Some(b) = p.next_batch() {
+                out.push(b.input_ids);
+            }
+            out
+        };
+        assert_eq!(collect(1), collect(4));
+    }
+
+    #[test]
+    fn starvation_is_measured_with_slow_io() {
+        let mut p = pool(1, 3000); // one slow worker: consumer must wait
+        while p.next_batch().is_some() {}
+        let waited = p.stats.wait_ns.load(Ordering::Relaxed);
+        assert!(waited > 5_000_000, "waited only {waited} ns");
+    }
+
+    #[test]
+    fn more_workers_reduce_starvation() {
+        let wait = |workers: usize| -> usize {
+            let mut p = pool(workers, 2000);
+            while p.next_batch().is_some() {}
+            p.stats.wait_ns.load(Ordering::Relaxed)
+        };
+        let w1 = wait(1);
+        let w8 = wait(8);
+        assert!(w8 < w1 / 2, "w1={w1} w8={w8}");
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let mut p = pool(2, 0);
+        let _ = p.next_batch();
+        drop(p); // must not deadlock on the bounded channel
+    }
+
+    #[test]
+    fn load_dataset_reads_shards_back() {
+        let tmp = std::env::temp_dir()
+            .join(format!("txgain-loader-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp).unwrap();
+        let ds = dataset(20, 16);
+        let mut w = crate::data::ShardWriter::create(
+            &tmp.join("s0.bin"), 16).unwrap();
+        for s in ds.iter() {
+            w.write(s).unwrap();
+        }
+        w.finish().unwrap();
+        let (back, seq) = load_dataset(&[tmp.join("s0.bin")]).unwrap();
+        assert_eq!(seq, 16);
+        assert_eq!(back.len(), 20);
+        assert_eq!(&back[3], &ds[3]);
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+}

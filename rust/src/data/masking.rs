@@ -1,0 +1,171 @@
+//! MLM masking — "15% of tokens in the training dataset randomly
+//! masked" (paper §II). BERT's 80/10/10 recipe:
+//!   of the selected positions, 80% become [MASK], 10% a random token,
+//!   10% keep the original token; the label is always the original id.
+//!
+//! Masking lives in the data pipeline (as in the paper), keeping the AOT
+//! train step deterministic: the model consumes (ids, mask, labels).
+
+use super::special::{BYTE_BASE, MASK};
+use super::Sample;
+use crate::util::Rng;
+
+/// Ignored-position label (matches the python side's `label < 0` test).
+pub const IGNORE: i32 = -100;
+
+#[derive(Clone, Debug)]
+pub struct Masker {
+    pub mask_prob: f64,
+    pub vocab: usize,
+}
+
+/// A masked sample ready for the model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MaskedSample {
+    pub input_ids: Vec<i32>,
+    pub attn_mask: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Masker {
+    pub fn new(mask_prob: f64, vocab: usize) -> Self {
+        assert!((0.0..=1.0).contains(&mask_prob));
+        assert!(vocab > BYTE_BASE as usize);
+        Masker { mask_prob, vocab }
+    }
+
+    /// Apply MLM masking. `rng` should be derived per (epoch, sample) so
+    /// masks differ across epochs but reproduce across runs.
+    pub fn apply(&self, sample: &Sample, rng: &mut Rng) -> MaskedSample {
+        let seq = sample.ids.len();
+        let mut input_ids = Vec::with_capacity(seq);
+        let mut attn_mask = Vec::with_capacity(seq);
+        let mut labels = Vec::with_capacity(seq);
+        for (pos, &id) in sample.ids.iter().enumerate() {
+            let real = pos < sample.len as usize;
+            attn_mask.push(if real { 1.0 } else { 0.0 });
+            // never mask specials (PAD/CLS/SEP/MASK) or padding
+            let maskable = real && id >= BYTE_BASE;
+            if maskable && rng.next_f64() < self.mask_prob {
+                labels.push(id as i32);
+                let roll = rng.next_f64();
+                if roll < 0.8 {
+                    input_ids.push(MASK as i32);
+                } else if roll < 0.9 {
+                    // random *content* token (skip specials)
+                    let span = (self.vocab - BYTE_BASE as usize) as u64;
+                    input_ids.push(
+                        (BYTE_BASE as u64 + rng.gen_range(span)) as i32,
+                    );
+                } else {
+                    input_ids.push(id as i32);
+                }
+            } else {
+                labels.push(IGNORE);
+                input_ids.push(id as i32);
+            }
+        }
+        MaskedSample { input_ids, attn_mask, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::special::{CLS, PAD, SEP};
+
+    fn sample(seq: usize, len: usize) -> Sample {
+        let mut ids = vec![CLS];
+        ids.extend((0..len - 2).map(|i| BYTE_BASE + (i % 200) as u16));
+        ids.push(SEP);
+        Sample::from_tokens(&ids, seq)
+    }
+
+    #[test]
+    fn mask_rate_close_to_config() {
+        let m = Masker::new(0.15, 512);
+        let mut rng = Rng::new(3);
+        let mut masked = 0usize;
+        let mut maskable = 0usize;
+        for i in 0..200 {
+            let s = sample(64, 60);
+            let out = m.apply(&s, &mut rng.derive(&format!("s{i}")));
+            for (pos, &l) in out.labels.iter().enumerate() {
+                if pos < 60 && s.ids[pos] >= BYTE_BASE {
+                    maskable += 1;
+                    if l != IGNORE {
+                        masked += 1;
+                    }
+                }
+            }
+        }
+        let rate = masked as f64 / maskable as f64;
+        assert!((rate - 0.15).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn labels_match_original_ids() {
+        let m = Masker::new(0.5, 512);
+        let s = sample(64, 60);
+        let mut rng = Rng::new(9);
+        let out = m.apply(&s, &mut rng);
+        for (pos, &l) in out.labels.iter().enumerate() {
+            if l != IGNORE {
+                assert_eq!(l, s.ids[pos] as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn specials_and_padding_never_masked() {
+        let m = Masker::new(1.0, 512); // mask everything maskable
+        let s = sample(64, 32);
+        let mut rng = Rng::new(4);
+        let out = m.apply(&s, &mut rng);
+        assert_eq!(out.labels[0], IGNORE); // CLS
+        assert_eq!(out.labels[31], IGNORE); // SEP
+        for pos in 32..64 {
+            assert_eq!(out.labels[pos], IGNORE); // padding
+            assert_eq!(out.attn_mask[pos], 0.0);
+            assert_eq!(out.input_ids[pos], PAD as i32);
+        }
+    }
+
+    #[test]
+    fn eighty_ten_ten_split() {
+        let m = Masker::new(1.0, 512);
+        let mut rng = Rng::new(8);
+        let (mut to_mask, mut random, mut kept, mut total) = (0, 0, 0, 0);
+        for i in 0..300 {
+            let s = sample(64, 62);
+            let out = m.apply(&s, &mut rng.derive(&format!("b{i}")));
+            for (pos, &l) in out.labels.iter().enumerate() {
+                if l == IGNORE {
+                    continue;
+                }
+                total += 1;
+                let inp = out.input_ids[pos];
+                if inp == MASK as i32 {
+                    to_mask += 1;
+                } else if inp == l {
+                    kept += 1;
+                } else {
+                    random += 1;
+                }
+            }
+        }
+        let f = |x: i32| x as f64 / total as f64;
+        assert!((f(to_mask) - 0.8).abs() < 0.03, "mask={}", f(to_mask));
+        assert!((f(random) - 0.1).abs() < 0.02, "rand={}", f(random));
+        assert!((f(kept) - 0.1).abs() < 0.02, "kept={}", f(kept));
+    }
+
+    #[test]
+    fn deterministic_given_rng_stream() {
+        let m = Masker::new(0.15, 512);
+        let s = sample(32, 30);
+        let a = m.apply(&s, &mut Rng::new(42));
+        let b = m.apply(&s, &mut Rng::new(42));
+        assert_eq!(a, b);
+    }
+}

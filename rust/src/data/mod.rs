@@ -1,0 +1,44 @@
+//! The data pipeline (paper §II-A): synthetic binary-code corpus →
+//! byte-level BPE tokenizer → preprocessed packed shards → staging →
+//! parallel loader → masked batches.
+//!
+//! The paper's first two recommendations live here:
+//! 1. *Preprocess and tokenize ahead of training, storing only tokenized
+//!    inputs and attention masks* — [`preprocess`] turns the raw
+//!    JSONL+hex corpus (the storage profile of the paper's 2 TB nixpkgs
+//!    function dump) into packed u16 shards, a ~99 % reduction.
+//! 2. *Duplicate the dataset across nodes before training* —
+//!    [`staging`] plans and executes the local-SSD copy and prices both
+//!    policies against the cluster storage model.
+//!
+//! Recommendation 3 (parallel data loading) is [`loader`].
+
+pub mod corpus;
+pub mod loader;
+pub mod masking;
+pub mod preprocess;
+pub mod records;
+pub mod shard;
+pub mod staging;
+pub mod tokenizer;
+
+pub use corpus::{CorpusGenerator, RawFunction};
+pub use loader::{HostBatch, LoaderPool};
+pub use masking::Masker;
+pub use preprocess::{preprocess_corpus, PreprocessStats};
+pub use records::{Sample, ShardReader, ShardWriter};
+pub use shard::EpochPlan;
+pub use tokenizer::BpeTokenizer;
+
+/// Special token ids shared by the whole pipeline (and the L2 model:
+/// vocab slots 0..4 are reserved by construction).
+pub mod special {
+    pub const PAD: u16 = 0;
+    pub const CLS: u16 = 1;
+    pub const SEP: u16 = 2;
+    pub const MASK: u16 = 3;
+    /// First id that encodes a raw byte (byte b => id BYTE_BASE + b).
+    pub const BYTE_BASE: u16 = 4;
+    /// First id available for learned BPE merges.
+    pub const MERGE_BASE: u16 = BYTE_BASE + 256;
+}

@@ -1,0 +1,216 @@
+//! Packed shard format — the post-preprocessing on-disk representation
+//! (recommendation 1: "store only the necessary training data: tokenized
+//! inputs and attention masks").
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   u32  = 0x54584753 ("TXGS")
+//! version u32  = 1
+//! count   u32    samples in this shard
+//! seq     u32    fixed sequence length
+//! then per sample:
+//!   len   u16    number of real (non-pad) tokens, <= seq
+//!   ids   u16[seq]  token ids, PAD-filled past `len`
+//! ```
+//! The attention mask is just `pos < len`, so it costs 2 bytes per
+//! sample instead of `seq` — part of the 99 % reduction story.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use super::special::PAD;
+use crate::Result;
+
+pub const MAGIC: u32 = 0x5458_4753;
+pub const VERSION: u32 = 1;
+
+/// One preprocessed sample: fixed-length ids + real length.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub ids: Vec<u16>,
+    pub len: u16,
+}
+
+impl Sample {
+    /// Build from unpadded tokens, truncating/padding to `seq`.
+    pub fn from_tokens(tokens: &[u16], seq: usize) -> Sample {
+        let len = tokens.len().min(seq);
+        let mut ids = Vec::with_capacity(seq);
+        ids.extend_from_slice(&tokens[..len]);
+        ids.resize(seq, PAD);
+        Sample { ids, len: len as u16 }
+    }
+
+    /// Serialized size of one sample at sequence length `seq`.
+    pub fn disk_bytes(seq: usize) -> u64 {
+        2 + 2 * seq as u64
+    }
+}
+
+/// Streaming shard writer.
+pub struct ShardWriter {
+    out: BufWriter<std::fs::File>,
+    seq: u32,
+    count: u32,
+    path: std::path::PathBuf,
+}
+
+impl ShardWriter {
+    pub fn create(path: &Path, seq: usize) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating shard {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        out.write_all(&MAGIC.to_le_bytes())?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&0u32.to_le_bytes())?; // count patched on finish
+        out.write_all(&(seq as u32).to_le_bytes())?;
+        Ok(ShardWriter { out, seq: seq as u32, count: 0,
+                         path: path.to_path_buf() })
+    }
+
+    pub fn write(&mut self, sample: &Sample) -> Result<()> {
+        ensure!(sample.ids.len() == self.seq as usize,
+                "sample seq {} != shard seq {}", sample.ids.len(), self.seq);
+        self.out.write_all(&sample.len.to_le_bytes())?;
+        // bulk-write ids as LE u16
+        let mut buf = Vec::with_capacity(sample.ids.len() * 2);
+        for id in &sample.ids {
+            buf.extend_from_slice(&id.to_le_bytes());
+        }
+        self.out.write_all(&buf)?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Flush and patch the sample count into the header.
+    pub fn finish(mut self) -> Result<u64> {
+        self.out.flush()?;
+        let f = self.out.into_inner()?;
+        drop(f);
+        // patch count at offset 8
+        use std::io::{Seek, SeekFrom};
+        let mut f = std::fs::OpenOptions::new().write(true)
+            .open(&self.path)?;
+        f.seek(SeekFrom::Start(8))?;
+        f.write_all(&self.count.to_le_bytes())?;
+        f.sync_all()?;
+        Ok(std::fs::metadata(&self.path)?.len())
+    }
+}
+
+/// In-memory shard reader (shards are sized to fit comfortably).
+pub struct ShardReader {
+    pub seq: usize,
+    pub samples: Vec<Sample>,
+}
+
+impl ShardReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut h = [0u8; 16];
+        r.read_exact(&mut h).context("shard header")?;
+        let magic = u32::from_le_bytes(h[0..4].try_into().unwrap());
+        let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
+        let count = u32::from_le_bytes(h[8..12].try_into().unwrap());
+        let seq = u32::from_le_bytes(h[12..16].try_into().unwrap()) as usize;
+        if magic != MAGIC {
+            bail!("not a txgain shard (bad magic {magic:#x})");
+        }
+        if version != VERSION {
+            bail!("unsupported shard version {version}");
+        }
+        let mut samples = Vec::with_capacity(count as usize);
+        let mut buf = vec![0u8; 2 + 2 * seq];
+        for _ in 0..count {
+            r.read_exact(&mut buf)?;
+            let len = u16::from_le_bytes(buf[0..2].try_into().unwrap());
+            ensure!(len as usize <= seq, "corrupt sample: len > seq");
+            let ids: Vec<u16> = buf[2..]
+                .chunks_exact(2)
+                .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            samples.push(Sample { ids, len });
+        }
+        Ok(ShardReader { seq, samples })
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        let pid = std::process::id();
+        std::env::temp_dir().join(format!("txgain-test-{pid}-{tag}.shard"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmpfile("roundtrip");
+        let seq = 32;
+        let mut rng = Rng::new(1);
+        let samples: Vec<Sample> = (0..17)
+            .map(|_| {
+                let n = 1 + rng.gen_range(40) as usize;
+                let toks: Vec<u16> =
+                    (0..n).map(|_| rng.gen_range(500) as u16).collect();
+                Sample::from_tokens(&toks, seq)
+            })
+            .collect();
+        let mut w = ShardWriter::create(&path, seq).unwrap();
+        for s in &samples {
+            w.write(s).unwrap();
+        }
+        let bytes = w.finish().unwrap();
+        assert_eq!(bytes, 16 + 17 * Sample::disk_bytes(seq));
+
+        let r = ShardReader::open(&path).unwrap();
+        assert_eq!(r.seq, seq);
+        assert_eq!(r.samples, samples);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn from_tokens_pads_and_truncates() {
+        let s = Sample::from_tokens(&[10, 11, 12], 5);
+        assert_eq!(s.ids, vec![10, 11, 12, PAD, PAD]);
+        assert_eq!(s.len, 3);
+        let s = Sample::from_tokens(&[1, 2, 3, 4, 5, 6, 7], 4);
+        assert_eq!(s.ids, vec![1, 2, 3, 4]);
+        assert_eq!(s.len, 4);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("badmagic");
+        std::fs::write(&path, b"NOPEnope0000aaaa").unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_seq_on_write() {
+        let path = tmpfile("wrongseq");
+        let mut w = ShardWriter::create(&path, 8).unwrap();
+        let s = Sample::from_tokens(&[1, 2], 16);
+        assert!(w.write(&s).is_err());
+        drop(w);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

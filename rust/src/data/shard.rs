@@ -1,0 +1,106 @@
+//! Epoch planning: deterministic shuffling and exactly-balanced
+//! assignment of samples to data-parallel ranks (the DistributedSampler
+//! role). Invariants (property-tested):
+//!   - every rank gets the same number of samples (padding by wraparound,
+//!     like PyTorch's DistributedSampler),
+//!   - the un-padded union covers every sample exactly once,
+//!   - plans are deterministic in (seed, epoch) and differ across epochs.
+
+use crate::util::Rng;
+
+/// The assignment of global sample indices to ranks for one epoch.
+#[derive(Clone, Debug)]
+pub struct EpochPlan {
+    pub epoch: u64,
+    pub per_rank: Vec<Vec<u32>>,
+    /// Indices that appear twice because of wraparound padding.
+    pub padded: usize,
+}
+
+impl EpochPlan {
+    /// Build the plan for `epoch` over `n_samples` across `world` ranks.
+    pub fn build(n_samples: usize, world: usize, epoch: u64, seed: u64)
+        -> EpochPlan {
+        assert!(world > 0 && n_samples > 0);
+        let mut order: Vec<u32> = (0..n_samples as u32).collect();
+        let mut rng =
+            Rng::new(seed).derive(&format!("epoch-shuffle:{epoch}"));
+        rng.shuffle(&mut order);
+        // pad to a multiple of world by wrapping the shuffled order
+        let per = n_samples.div_ceil(world);
+        let padded = per * world - n_samples;
+        for i in 0..padded {
+            let v = order[i % n_samples];
+            order.push(v);
+        }
+        let per_rank = (0..world)
+            .map(|r| order[r * per..(r + 1) * per].to_vec())
+            .collect();
+        EpochPlan { epoch, per_rank, padded }
+    }
+
+    pub fn samples_per_rank(&self) -> usize {
+        self.per_rank[0].len()
+    }
+
+    /// Number of optimizer steps this plan supports at `batch` per rank.
+    pub fn steps(&self, batch: usize) -> usize {
+        self.samples_per_rank() / batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn ranks_are_balanced() {
+        let p = EpochPlan::build(1000, 7, 0, 1);
+        let per = p.samples_per_rank();
+        assert!(p.per_rank.iter().all(|r| r.len() == per));
+        assert_eq!(per * 7 - 1000, p.padded);
+    }
+
+    #[test]
+    fn covers_every_sample_exactly_once_modulo_padding() {
+        // proptest-style sweep over (n, world, epoch)
+        let mut rng = crate::util::Rng::new(99);
+        for _ in 0..25 {
+            let n = 1 + rng.gen_range(5000) as usize;
+            let world = 1 + rng.gen_range(16) as usize;
+            let epoch = rng.gen_range(10);
+            let p = EpochPlan::build(n, world, epoch, 42);
+            let mut seen: Vec<u32> =
+                p.per_rank.iter().flatten().copied().collect();
+            assert_eq!(seen.len(), n + p.padded);
+            seen.sort();
+            let distinct: HashSet<u32> = seen.iter().copied().collect();
+            assert_eq!(distinct.len(), n, "n={n} world={world}");
+            assert_eq!(*seen.last().unwrap(), n as u32 - 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_and_epoch_varying() {
+        let a = EpochPlan::build(500, 4, 3, 7);
+        let b = EpochPlan::build(500, 4, 3, 7);
+        assert_eq!(a.per_rank, b.per_rank);
+        let c = EpochPlan::build(500, 4, 4, 7);
+        assert_ne!(a.per_rank, c.per_rank);
+    }
+
+    #[test]
+    fn steps_counts_full_batches() {
+        let p = EpochPlan::build(100, 2, 0, 1); // 50 per rank
+        assert_eq!(p.steps(8), 6);
+        assert_eq!(p.steps(64), 0);
+    }
+
+    #[test]
+    fn single_rank_gets_everything() {
+        let p = EpochPlan::build(64, 1, 0, 5);
+        assert_eq!(p.per_rank[0].len(), 64);
+        assert_eq!(p.padded, 0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Dataset staging (recommendation 2): price the two policies against
+//! the cluster storage model, and actually stage shards to a local
+//! directory for real-mode runs.
+//!
+//! The paper's finding: with the preprocessed dataset small enough
+//! (rec 1), the one-time cost of copying it to every node's local SSD
+//! beats having hundreds of nodes contend for Lustre every epoch.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::cluster::StorageModel;
+use crate::config::{ClusterConfig, StagingPolicy};
+use crate::Result;
+
+/// Cost estimate for a staging policy over a whole run.
+#[derive(Clone, Debug)]
+pub struct StagingEstimate {
+    pub policy: StagingPolicy,
+    /// One-time stage-in wall time (0 for network-direct).
+    pub stage_in_secs: f64,
+    /// Per-epoch IO wall time for the rank-local fraction of the data.
+    pub per_epoch_secs: f64,
+}
+
+impl StagingEstimate {
+    pub fn total_secs(&self, epochs: usize) -> f64 {
+        self.stage_in_secs + self.per_epoch_secs * epochs as f64
+    }
+}
+
+/// Price a policy. Per-epoch traffic: a rank's samples are a random
+/// 1/world of *every* shard (the epoch shuffle), so at shard
+/// granularity each node touches essentially the whole shard set every
+/// epoch — full `dataset_bytes` per node, the read-amplification that
+/// makes shared storage hurt. Local-copy pays the same amplification
+/// against its own SSD, where it is cheap and uncontended.
+pub fn estimate(cluster: &ClusterConfig, policy: StagingPolicy,
+                dataset_bytes: u64) -> StagingEstimate {
+    let storage = StorageModel::new(cluster);
+    match policy {
+        StagingPolicy::NetworkDirect => StagingEstimate {
+            policy,
+            stage_in_secs: 0.0,
+            per_epoch_secs: storage
+                .shared_read_time(cluster.nodes, dataset_bytes as f64),
+        },
+        StagingPolicy::LocalCopy => StagingEstimate {
+            policy,
+            stage_in_secs: storage
+                .stage_in_time(cluster.nodes, dataset_bytes as f64),
+            per_epoch_secs: storage.local_read_time(dataset_bytes as f64),
+        },
+    }
+}
+
+/// Epochs after which local-copy is cheaper than network-direct
+/// (`None` if it never is).
+pub fn break_even_epochs(cluster: &ClusterConfig, dataset_bytes: u64)
+    -> Option<usize> {
+    let net = estimate(cluster, StagingPolicy::NetworkDirect, dataset_bytes);
+    let loc = estimate(cluster, StagingPolicy::LocalCopy, dataset_bytes);
+    let saving = net.per_epoch_secs - loc.per_epoch_secs;
+    if saving <= 0.0 {
+        return None;
+    }
+    Some((loc.stage_in_secs / saving).ceil() as usize)
+}
+
+/// Really copy shard files into `local_dir` (the rank-local replica used
+/// by real-mode training). Returns the staged paths.
+pub fn stage_local(shards: &[PathBuf], local_dir: &Path)
+    -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(local_dir)?;
+    let mut staged = Vec::with_capacity(shards.len());
+    for src in shards {
+        let name = src.file_name()
+            .context("shard path has no file name")?;
+        let dst = local_dir.join(name);
+        std::fs::copy(src, &dst)
+            .with_context(|| format!("staging {} -> {}", src.display(),
+                                     dst.display()))?;
+        staged.push(dst);
+    }
+    Ok(staged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_copy_wins_at_scale() {
+        // the paper's regime: 128 nodes, 25 GB preprocessed dataset
+        let c = ClusterConfig::tx_gain(128);
+        let ds = 25_000_000_000u64;
+        let net = estimate(&c, StagingPolicy::NetworkDirect, ds);
+        let loc = estimate(&c, StagingPolicy::LocalCopy, ds);
+        // per-epoch: local SSD must be much faster than contended Lustre
+        assert!(loc.per_epoch_secs < net.per_epoch_secs / 10.0,
+                "loc={} net={}", loc.per_epoch_secs, net.per_epoch_secs);
+        // and it amortizes within a handful of epochs
+        let be = break_even_epochs(&c, ds).unwrap();
+        assert!(be <= 5, "break-even at {be} epochs");
+    }
+
+    #[test]
+    fn contention_penalty_grows_with_node_count() {
+        // at N=1 the network:local gap is just client-cap vs SSD; at 128
+        // nodes the saturated array makes it an order of magnitude
+        let ds = 25_000_000_000u64;
+        let gap = |nodes: usize| {
+            let c = ClusterConfig::tx_gain(nodes);
+            let net = estimate(&c, StagingPolicy::NetworkDirect, ds);
+            let loc = estimate(&c, StagingPolicy::LocalCopy, ds);
+            net.per_epoch_secs / loc.per_epoch_secs
+        };
+        let g1 = gap(1);
+        let g128 = gap(128);
+        assert!(g1 < 4.0, "g1={g1}");
+        assert!(g128 > 8.0, "g128={g128}");
+        assert!(g128 > 3.0 * g1);
+    }
+
+    #[test]
+    fn stage_local_copies_files() {
+        let tmp = std::env::temp_dir()
+            .join(format!("txgain-stage-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let src_dir = tmp.join("shared");
+        std::fs::create_dir_all(&src_dir).unwrap();
+        let mut shards = Vec::new();
+        for i in 0..3 {
+            let p = src_dir.join(format!("shard-{i}.bin"));
+            std::fs::write(&p, vec![i as u8; 128]).unwrap();
+            shards.push(p);
+        }
+        let staged = stage_local(&shards, &tmp.join("local")).unwrap();
+        assert_eq!(staged.len(), 3);
+        for (i, p) in staged.iter().enumerate() {
+            assert_eq!(std::fs::read(p).unwrap(), vec![i as u8; 128]);
+        }
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+}

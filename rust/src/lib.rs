@@ -1,0 +1,38 @@
+//! `txgain` — a data-parallel LLM-pretraining framework.
+//!
+//! Reproduction of *"Scaling Performance of Large Language Model
+//! Pretraining"* (MIT Lincoln Laboratory, CS.DC 2025): the full pipeline
+//! the paper describes — dataset preprocessing and staging, parallel data
+//! loading, data-parallel multi-node training with gradient all-reduce —
+//! plus a calibrated cluster model that reproduces the paper's scaling
+//! study (Fig. 1) and its five practical recommendations at 128-node
+//! scale on a single machine.
+//!
+//! Architecture (see DESIGN.md): a three-layer rust + JAX + Pallas stack.
+//! Python lowers the BERT-MLM train step (L2, calling Pallas kernels, L1)
+//! to HLO text once at build time; this crate (L3) owns everything else
+//! and never calls Python at runtime.
+//!
+//! Entry points:
+//! - [`config::Config`] — TOML experiment configuration + presets.
+//! - [`data`] — corpus → tokenizer → shards → staging → loader.
+//! - [`runtime::Engine`] — loads and executes the AOT HLO artifacts.
+//! - [`train::Trainer`] — real-mode data-parallel training (CPU PJRT).
+//! - [`perfmodel::simtrain`] — calibrated full-scale (1…128 node) sims.
+//! - [`report`] — renders every paper table/figure from run output.
+
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod perfmodel;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type. The library reports failures with `anyhow` so
+/// the CLI, examples and benches share one error path.
+pub type Result<T> = anyhow::Result<T>;

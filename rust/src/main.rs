@@ -1,0 +1,242 @@
+//! `txgain` CLI — launcher for the pretraining framework.
+//!
+//! Subcommands:
+//!   train   run the real-mode pipeline (preprocess → stage → DP train)
+//!   sim     project throughput at any scale (Fig. 1 sweeps)
+//!   prep    preprocessing/size study only (recommendation 1)
+//!   info    presets, cluster model, paper Table I
+//!
+//! Arg parsing is hand-rolled: the build is fully offline (no clap).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context};
+use txgain::config::{presets, Config};
+use txgain::coordinator;
+use txgain::data::preprocess_corpus;
+use txgain::perfmodel::{sweep_nodes, SimResult};
+use txgain::report;
+use txgain::runtime::Manifest;
+use txgain::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument '{a}'");
+            };
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key}")))
+            .transpose()
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match (args.get("config"), args.get("preset")) {
+        (Some(path), _) => Config::from_json_file(&PathBuf::from(path))?,
+        (None, Some(name)) => presets::by_name(name)
+            .with_context(|| format!("unknown preset '{name}' (have: {})",
+                presets::all().iter().map(|(n, _)| *n)
+                    .collect::<Vec<_>>().join(", ")))?,
+        (None, None) => presets::quickstart(),
+    };
+    if let Some(steps) = args.get_usize("steps")? {
+        cfg.training.steps = steps;
+    }
+    if let Some(nodes) = args.get_usize("nodes")? {
+        cfg.cluster.nodes = nodes;
+    }
+    if let Some(loaders) = args.get_usize("loaders")? {
+        cfg.data.loaders_per_gpu = loaders;
+    }
+    if let Some(batch) = args.get_usize("batch")? {
+        cfg.training.batch_per_gpu = batch;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sim" => cmd_sim(&args),
+        "prep" => cmd_prep(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `txgain help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "txgain — data-parallel LLM pretraining framework\n\
+         \n\
+         usage: txgain <command> [flags]\n\
+         \n\
+         commands:\n\
+           train   real-mode pipeline: preprocess -> stage -> DP train\n\
+                   [--preset quickstart|e2e] [--config file.json]\n\
+                   [--steps N] [--workdir DIR] [--artifacts DIR]\n\
+           sim     throughput projection at any scale (Fig. 1)\n\
+                   [--preset paper-full-scale] [--nodes N]\n\
+                   [--model bert-120m|...] [--batch N] [--sweep]\n\
+           prep    preprocessing size study (rec 1)\n\
+                   [--samples N] [--workdir DIR]\n\
+           info    presets, cluster model, paper Table I"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let workdir = args
+        .get("workdir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("runs/latest"));
+    println!("config:\n{}", cfg.to_json_string());
+    let out = coordinator::run(&cfg, &artifacts_dir(args), &workdir)?;
+    let r = &out.report;
+    println!(
+        "trained {} steps on {} ranks: loss {:.4} -> {:.4}, \
+         {:.1} samples/s, GPU util {:.1}%",
+        r.records.len(),
+        r.world,
+        r.first_loss().unwrap_or(f32::NAN),
+        r.final_loss().unwrap_or(f32::NAN),
+        r.samples_per_sec(),
+        r.gpu_utilization() * 100.0
+    );
+    println!("report: {}", out.workdir.join("report.json").display());
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let mut cfg = presets::paper_full_scale();
+    if let Some(name) = args.get("preset") {
+        cfg = presets::by_name(name).context("unknown preset")?;
+    }
+    if let Some(model) = args.get("model") {
+        cfg.model = presets::paper_models()
+            .into_iter()
+            .find(|m| m.variant == model)
+            .with_context(|| format!("unknown paper model '{model}'"))?;
+        cfg.training.batch_per_gpu =
+            presets::artifact_batch(&cfg.model.variant);
+    }
+    if let Some(batch) = args.get_usize("batch")? {
+        cfg.training.batch_per_gpu = batch;
+    }
+    if args.get("sweep").is_some() {
+        let nodes = [1usize, 2, 4, 8, 16, 32, 64, 128];
+        let sweep = sweep_nodes(&cfg, &nodes);
+        println!("{}", report::fig1_table(&cfg.model.variant, &sweep)
+            .render());
+    } else {
+        if let Some(nodes) = args.get_usize("nodes")? {
+            cfg.cluster.nodes = nodes;
+        }
+        let r: SimResult = coordinator::leader::project(&cfg);
+        println!("{}", report::fig1_table(&cfg.model.variant,
+                                          &[r]).render());
+    }
+    Ok(())
+}
+
+fn cmd_prep(args: &Args) -> Result<()> {
+    let mut cfg = presets::e2e_pretrain();
+    if let Some(samples) = args.get_usize("samples")? {
+        cfg.data.corpus_samples = samples;
+    }
+    let workdir = args
+        .get("workdir")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir)
+        .join("txgain-prep");
+    std::fs::create_dir_all(&workdir)?;
+    let t0 = std::time::Instant::now();
+    let stats = preprocess_corpus(&cfg.data, cfg.model.seq, cfg.seed,
+                                  &workdir)?;
+    println!(
+        "preprocessed {} samples in {:.1}s:\n  raw (JSONL+hex): {}\n  \
+         packed shards:   {}\n  reduction:       {:.2}% (paper: 99%)\n  \
+         tokens/byte:     {:.3}",
+        stats.samples,
+        t0.elapsed().as_secs_f64(),
+        txgain::util::human_bytes(stats.raw_bytes),
+        txgain::util::human_bytes(stats.tokenized_bytes),
+        stats.reduction() * 100.0,
+        stats.tokens_per_byte
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("{}", report::tab1_frontier_models().render());
+    println!("presets:");
+    for (name, cfg) in presets::all() {
+        println!(
+            "  {:<18} model={:<10} {} ({} mode, {} steps)",
+            name,
+            cfg.model.variant,
+            txgain::cluster::describe(&cfg.cluster),
+            cfg.training.mode.as_str(),
+            cfg.training.steps
+        );
+    }
+    println!("\npaper models (perf-model):");
+    for m in presets::paper_models() {
+        println!(
+            "  {:<12} {:>5.1}M params, batch/GPU {}",
+            m.variant,
+            m.param_count() as f64 / 1e6,
+            presets::artifact_batch(&m.variant)
+        );
+    }
+    Ok(())
+}

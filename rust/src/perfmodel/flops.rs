@@ -1,0 +1,76 @@
+//! Transformer FLOPs accounting (BERT-style encoder, MLM head).
+//!
+//! Forward FLOPs per sample = 2·S·P_mm + 4·L·S²·H, where P_mm counts
+//! matmul parameters (projections, MLP, head, tied logits) and the
+//! second term is the attention score/value matmuls. Training ≈ 3×
+//! forward (backward re-does both matmul operands). Embedding lookups
+//! and layernorms are bandwidth, not FLOPs — excluded, as in the
+//! standard 6·N·T approximation this reduces to when S ≪ H·12.
+
+use crate::config::ModelConfig;
+
+/// Matmul parameters: everything that multiplies activations.
+pub fn matmul_params(m: &ModelConfig) -> u64 {
+    let (h, v, l) = (m.hidden as u64, m.vocab as u64, m.layers as u64);
+    let mlp = 2 * h * (m.mlp_ratio as u64 * h);
+    let attn = 4 * h * h;
+    l * (attn + mlp) + h * h + v * h // layers + head dense + tied logits
+}
+
+/// Forward FLOPs for one sample of `seq` tokens.
+pub fn fwd_flops_per_sample(m: &ModelConfig) -> f64 {
+    let s = m.seq as f64;
+    let matmul = 2.0 * s * matmul_params(m) as f64;
+    let attn = 4.0 * m.layers as f64 * s * s * m.hidden as f64;
+    matmul + attn
+}
+
+/// Full train-step (fwd+bwd) FLOPs per sample.
+pub fn train_step_flops_per_sample(m: &ModelConfig) -> f64 {
+    3.0 * fwd_flops_per_sample(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn reduces_to_6nt_for_long_hidden() {
+        // when attention is negligible, train flops ≈ 6 * P_mm * S
+        let m = presets::model_bert_120m();
+        let t = train_step_flops_per_sample(&m);
+        let approx = 6.0 * matmul_params(&m) as f64 * m.seq as f64;
+        assert!((t - approx) / approx < 0.10, "t={t} approx={approx}");
+    }
+
+    #[test]
+    fn paper_scale_magnitude() {
+        // 120M model, S=512: ~0.4 TFLOPs/sample forward
+        let m = presets::model_bert_120m();
+        let f = fwd_flops_per_sample(&m);
+        assert!((1e11..1e12).contains(&f), "f={f}");
+    }
+
+    #[test]
+    fn monotone_in_model_size() {
+        let fl: Vec<f64> = presets::paper_models()
+            .iter()
+            .map(train_step_flops_per_sample)
+            .collect();
+        for w in fl.windows(2) {
+            assert!(w[1] > w[0], "{fl:?}");
+        }
+    }
+
+    #[test]
+    fn attention_term_quadratic_in_seq() {
+        let mut m = presets::model_bert_120m();
+        let f1 = fwd_flops_per_sample(&m);
+        m.seq *= 2;
+        let f2 = fwd_flops_per_sample(&m);
+        // superlinear growth (matmul term is linear, attention quadratic)
+        assert!(f2 > 2.0 * f1);
+        assert!(f2 < 4.0 * f1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Model-FLOPs-utilization as a function of per-GPU batch size.
+//!
+//! Small batches under-fill the GPU (kernel launch overhead, small GEMM
+//! tiles, exposed memory latency): MFU follows a saturating curve
+//! `mfu_max · b/(b + b_half)`. This is the mechanism behind the paper's
+//! recommendation 5 — the 350M model's batch-20 runs at a fraction of
+//! the 120M model's batch-184 efficiency, so per-GPU throughput falls
+//! faster than 1/params.
+//!
+//! Calibration — inverted from the paper's own two observations:
+//! (a) Fig. 1: "roughly linear" scaling to 128 nodes across the model
+//!     sizes ⇒ the bf16 ring all-reduce (≈150–430 ms at 25 GbE) must fit
+//!     inside the overlappable backward window at *every* batch size
+//!     incl. the 350M model's batch 20 ⇒ compute(batch 20) ≳ 700 ms
+//!     ⇒ MFU(20) ≈ 2 %;
+//! (b) rec 5: throughput falls with model size well beyond the 3.1×
+//!     parameter ratio ⇒ MFU must collapse at small batch.
+//! mfu_max = 0.20 (stock PyTorch Lightning BERT at seq 512, no fused
+//! attention) and b_half = 160 satisfy both; MFU(184) ≈ 11 %,
+//! MFU(20) ≈ 2.2 % — low but consistent with unoptimized BERT-scale
+//! training, which the paper's §II framing (tuning to "fully leverage"
+//! the GPUs) corroborates. See EXPERIMENTS.md §FIG1/§REC5.
+
+#[derive(Clone, Copy, Debug)]
+pub struct MfuModel {
+    pub mfu_max: f64,
+    pub b_half: f64,
+}
+
+impl Default for MfuModel {
+    fn default() -> Self {
+        MfuModel { mfu_max: 0.20, b_half: 160.0 }
+    }
+}
+
+impl MfuModel {
+    pub fn mfu(&self, batch: usize) -> f64 {
+        let b = batch as f64;
+        self.mfu_max * b / (b + self.b_half)
+    }
+
+    /// Effective FLOP/s at `batch` on a GPU with `peak_tflops`.
+    pub fn effective_flops(&self, batch: usize, peak_tflops: f64) -> f64 {
+        peak_tflops * 1e12 * self.mfu(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturates_toward_max() {
+        let m = MfuModel::default();
+        assert!(m.mfu(4096) > 0.9 * m.mfu_max);
+        assert!(m.mfu(1024) > m.mfu(184));
+        assert!(m.mfu(4096) < m.mfu_max);
+    }
+
+    #[test]
+    fn small_batches_hurt() {
+        let m = MfuModel::default();
+        // the paper's rec-5 regime: batch 20 vs 184 — the collapse that
+        // makes the 350M model's throughput fall ~17x, not ~3x
+        let ratio = m.mfu(20) / m.mfu(184);
+        assert!(ratio < 0.35, "ratio={ratio}");
+        assert!(ratio > 0.10, "ratio={ratio}");
+    }
+
+    #[test]
+    fn calibration_hides_comm_at_every_paper_batch() {
+        // the Fig.1-linearity constraint the calibration encodes:
+        // compute at batch 20 (350M) must exceed the 350M all-reduce
+        let m = MfuModel::default();
+        let flops_350 = crate::perfmodel::train_step_flops_per_sample(
+            &crate::config::presets::model_bert_350m()) * 20.0;
+        let compute = flops_350 / m.effective_flops(20, 1671.0);
+        assert!(compute > 0.55, "compute at batch 20: {compute}s");
+    }
+
+    #[test]
+    fn monotone_in_batch() {
+        let m = MfuModel::default();
+        let mut prev = 0.0;
+        for b in [1, 2, 4, 8, 20, 48, 96, 184, 400] {
+            let v = m.mfu(b);
+            assert!(v > prev);
+            prev = v;
+        }
+    }
+}

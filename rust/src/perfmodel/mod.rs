@@ -1,0 +1,18 @@
+//! Calibrated performance model — the instrument that extends the
+//! measured single-box system to the paper's 128-node / 256-GPU scale
+//! (DESIGN.md §Substitutions).
+//!
+//! - [`flops`]: exact transformer FLOPs accounting per train step.
+//! - [`mfu`]: model FLOPs utilization as a function of per-GPU batch
+//!   (the mechanism behind recommendation 5's throughput drop).
+//! - [`simtrain`]: composes compute, hierarchical all-reduce cost,
+//!   loader/storage service rates and a straggler term into per-step
+//!   time and cluster throughput — regenerating Fig. 1.
+
+pub mod flops;
+pub mod mfu;
+pub mod simtrain;
+
+pub use flops::train_step_flops_per_sample;
+pub use mfu::MfuModel;
+pub use simtrain::{scaling_efficiency, simulate, sweep_nodes, SimResult};

@@ -1,0 +1,239 @@
+//! Simulated-compute data-parallel training: composes the calibrated
+//! sub-models into per-step time and cluster throughput. This is what
+//! regenerates the paper's Fig. 1 at 1…128 nodes on one box.
+//!
+//! Step anatomy (per rank, steady state with prefetch):
+//!   compute   = batch · FLOPs/sample ÷ (peak · MFU(batch))
+//!   comm      = hierarchical ring/tree all-reduce of bf16 grads;
+//!               overlapped with backward when `overlap_comm` (DDP), so
+//!               only the tail beyond ~90 % of backward is exposed
+//!   loader    = max(CPU prep time, storage read time) per batch;
+//!               the prefetch pipeline hides up to one compute interval
+//!   straggler = E[max of world jitter] ≈ σ·√(2·ln W), σ = 2 % compute
+//!   overhead  = optimizer + host bookkeeping (measured ≈ 3 ms)
+
+use crate::cluster::{MemoryModel, StorageModel};
+use crate::collectives::CostModel;
+use crate::config::{Config, StagingPolicy};
+use crate::data::records::Sample;
+
+use super::flops::train_step_flops_per_sample;
+use super::mfu::MfuModel;
+
+/// Sustained sample-preparation rate of one loader worker, samples/s.
+/// Calibrated to a PyTorch DataLoader worker at seq 512 (decode, MLM
+/// masking, collation in python) — the resource the paper's rec. 3
+/// tunes. Our rust loader is ~100× faster per worker (EXPERIMENTS.md
+/// §REC3), so the sim uses the paper's substrate, not ours.
+pub const LOADER_WORKER_SAMPLES_PER_SEC: f64 = 300.0;
+
+/// Fixed per-step host/optimizer overhead, seconds.
+pub const STEP_OVERHEAD_SECS: f64 = 3e-3;
+
+/// Per-rank compute jitter (fraction of compute) driving the straggler
+/// term.
+pub const JITTER_FRAC: f64 = 0.02;
+
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub nodes: usize,
+    pub world: usize,
+    pub batch_per_gpu: usize,
+    pub step_secs: f64,
+    pub compute_secs: f64,
+    /// Raw all-reduce time (before overlap).
+    pub comm_secs: f64,
+    /// All-reduce time left exposed after overlap with backward.
+    pub comm_exposed_secs: f64,
+    pub loader_exposed_secs: f64,
+    pub straggler_secs: f64,
+    pub samples_per_sec: f64,
+    /// Fraction of the step the GPU is doing useful compute.
+    pub gpu_util: f64,
+    pub mfu: f64,
+}
+
+/// Simulate steady-state training for `cfg`; deterministic.
+pub fn simulate(cfg: &Config) -> SimResult {
+    let c = &cfg.cluster;
+    let world = c.world_size();
+    let mem = MemoryModel::new(c.gpu_mem_gb);
+    let batch = if cfg.training.batch_per_gpu > 0 {
+        cfg.training.batch_per_gpu
+    } else {
+        mem.max_batch(&cfg.model).max(1)
+    };
+
+    let mfu_model = MfuModel::default();
+    let flops = train_step_flops_per_sample(&cfg.model) * batch as f64;
+    let compute = flops / mfu_model.effective_flops(batch, c.gpu_peak_tflops);
+
+    // gradient sync
+    let cost = CostModel::from_cluster(c);
+    let grad_bytes = CostModel::gradient_bytes(cfg.model.param_count());
+    let comm = match cfg.training.allreduce.as_str() {
+        "tree" => cost.tree_allreduce(c.nodes, grad_bytes),
+        _ => cost.ring_allreduce(c.nodes, grad_bytes),
+    };
+    let comm_exposed = if cfg.training.overlap_comm {
+        let bwd = compute * 2.0 / 3.0;
+        (comm - 0.9 * bwd).max(0.0)
+    } else {
+        comm
+    };
+
+    // loader service: CPU-side prep and storage reads, whichever is
+    // slower binds (they pipeline against each other)
+    let batch_bytes = batch as f64 * Sample::disk_bytes(cfg.model.seq) as f64;
+    let cpu_secs = batch as f64
+        / (cfg.data.loaders_per_gpu as f64 * LOADER_WORKER_SAMPLES_PER_SEC);
+    let storage = StorageModel::new(c);
+    let storage_rate_per_gpu = match cfg.data.staging {
+        StagingPolicy::LocalCopy => {
+            c.ssd_gbs * 1e9 / c.gpus_per_node as f64
+        }
+        StagingPolicy::NetworkDirect => {
+            storage.shared_read_bw(c.nodes) / c.gpus_per_node as f64
+        }
+    };
+    let fetch = cpu_secs.max(batch_bytes / storage_rate_per_gpu);
+    let loader_exposed = (fetch - compute).max(0.0);
+
+    // straggler: expected max of `world` jittered ranks
+    let straggler = if world > 1 {
+        JITTER_FRAC * compute * (2.0 * (world as f64).ln()).sqrt()
+    } else {
+        0.0
+    };
+
+    let step = compute + comm_exposed + loader_exposed + straggler
+        + STEP_OVERHEAD_SECS;
+    SimResult {
+        nodes: c.nodes,
+        world,
+        batch_per_gpu: batch,
+        step_secs: step,
+        compute_secs: compute,
+        comm_secs: comm,
+        comm_exposed_secs: comm_exposed,
+        loader_exposed_secs: loader_exposed,
+        straggler_secs: straggler,
+        samples_per_sec: batch as f64 * world as f64 / step,
+        gpu_util: compute / step,
+        mfu: mfu_model.mfu(batch),
+    }
+}
+
+/// Sweep node counts with everything else fixed (a Fig. 1 series).
+pub fn sweep_nodes(base: &Config, node_counts: &[usize]) -> Vec<SimResult> {
+    node_counts
+        .iter()
+        .map(|&n| {
+            let mut cfg = base.clone();
+            cfg.cluster.nodes = n;
+            simulate(&cfg)
+        })
+        .collect()
+}
+
+/// Scaling efficiency of a sweep relative to its first entry.
+pub fn scaling_efficiency(results: &[SimResult]) -> Vec<f64> {
+    let base = &results[0];
+    results
+        .iter()
+        .map(|r| {
+            (r.samples_per_sec / base.samples_per_sec)
+                / (r.world as f64 / base.world as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn paper_cfg(model: crate::config::ModelConfig, batch: usize)
+        -> Config {
+        let mut cfg = presets::paper_full_scale();
+        cfg.model = model;
+        cfg.training.batch_per_gpu = batch;
+        cfg
+    }
+
+    #[test]
+    fn fig1_near_linear_scaling_to_128_nodes() {
+        let cfg = paper_cfg(presets::model_bert_120m(), 184);
+        let sweep = sweep_nodes(&cfg, &[1, 2, 4, 8, 16, 32, 64, 128]);
+        let eff = scaling_efficiency(&sweep);
+        // the paper: "scales roughly linearly ... even up to 128 nodes"
+        assert!(eff[7] > 0.85, "efficiency at 128 nodes: {}", eff[7]);
+        // and throughput strictly increases with nodes
+        for w in sweep.windows(2) {
+            assert!(w[1].samples_per_sec > w[0].samples_per_sec * 1.7);
+        }
+    }
+
+    #[test]
+    fn rec4_network_not_the_bottleneck() {
+        let cfg = paper_cfg(presets::model_bert_120m(), 184);
+        let r = simulate(&cfg);
+        assert!(
+            r.comm_exposed_secs < 0.15 * r.step_secs,
+            "comm {} vs step {}",
+            r.comm_exposed_secs,
+            r.step_secs
+        );
+    }
+
+    #[test]
+    fn rec5_bigger_model_smaller_batch_lower_throughput() {
+        // fixed 128 nodes, paper batch sizes
+        let pairs = [
+            (presets::model_bert_120m(), 184usize),
+            (presets::model_bert_350m(), 20usize),
+        ];
+        let t: Vec<f64> = pairs
+            .iter()
+            .map(|(m, b)| simulate(&paper_cfg(m.clone(), *b))
+                .samples_per_sec)
+            .collect();
+        // throughput at 350M/batch-20 is far below 120M/batch-184 —
+        // more than the ~3x params alone would explain (MFU collapse)
+        assert!(t[1] < t[0] / 5.0, "t120={} t350={}", t[0], t[1]);
+    }
+
+    #[test]
+    fn rec3_loader_sweep_saturates_utilization() {
+        let mut cfg = paper_cfg(presets::model_bert_120m(), 184);
+        let mut utils = Vec::new();
+        for loaders in [1usize, 2, 4, 8, 16] {
+            cfg.data.loaders_per_gpu = loaders;
+            utils.push(simulate(&cfg).gpu_util);
+        }
+        // utilization rises then plateaus
+        assert!(utils[1] > utils[0]);
+        let last = utils[utils.len() - 1];
+        let prev = utils[utils.len() - 2];
+        assert!((last - prev) / last < 0.02, "{utils:?}");
+    }
+
+    #[test]
+    fn network_direct_staging_hurts_at_scale() {
+        let mut cfg = paper_cfg(presets::model_bert_120m(), 184);
+        cfg.data.staging = StagingPolicy::NetworkDirect;
+        cfg.data.loaders_per_gpu = 16;
+        let net = simulate(&cfg);
+        cfg.data.staging = StagingPolicy::LocalCopy;
+        let loc = simulate(&cfg);
+        assert!(loc.samples_per_sec >= net.samples_per_sec);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = paper_cfg(presets::model_bert_250m(), 48);
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.step_secs, b.step_secs);
+    }
+}

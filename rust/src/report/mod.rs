@@ -1,0 +1,9 @@
+//! Report rendering: aligned ASCII tables, simple charts, and the
+//! paper-artifact renderers (Table I, Fig. 1) shared by the benches and
+//! examples.
+
+pub mod paper;
+pub mod table;
+
+pub use paper::{fig1_table, tab1_frontier_models};
+pub use table::Table;

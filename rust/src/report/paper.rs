@@ -1,0 +1,108 @@
+//! Renderers for the paper's artifacts.
+//!
+//! Table I is literature metadata (frontier-model releases) — there is
+//! nothing to measure, so it is reproduced verbatim for completeness.
+//! Fig. 1 is the scaling study; `fig1_table` renders a sweep of
+//! [`crate::perfmodel::SimResult`] rows in the same shape (throughput vs
+//! node count, one series per model size).
+
+use crate::perfmodel::SimResult;
+use crate::util::csv::CsvWriter;
+
+use super::table::Table;
+
+/// Paper Table I: frontier models (static metadata).
+pub fn tab1_frontier_models() -> Table {
+    let mut t = Table::new(
+        "TABLE I — FRONTIER MODELS (paper, static metadata)",
+        vec!["Company", "Model", "Release Date"],
+    );
+    for (c, m, d) in [
+        ("OpenAI", "GPT-4.5", "February, 2025"),
+        ("Google", "Gemini 2.5", "July, 2025"),
+        ("Anthropic", "Claude 3.5 Sonnet", "June, 2024"),
+        ("xAI", "Grok 3", "February, 2025"),
+        ("Mistral AI", "Medium 3", "May, 2025"),
+        ("DeepSeek", "R1", "January, 2025"),
+    ] {
+        t.row(&[c, m, d]);
+    }
+    t
+}
+
+/// Fig. 1 as a table: one row per node count, throughput + scaling
+/// efficiency + the step-anatomy columns behind rec 4.
+pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
+    let mut t = Table::new(
+        &format!("FIG. 1 — pretraining scaling performance ({model_name})"),
+        vec!["nodes", "gpus", "batch/gpu", "samples/s", "scale-eff",
+             "step(ms)", "compute(ms)", "comm-exposed(ms)", "gpu-util"],
+    );
+    let base = &sweep[0];
+    for r in sweep {
+        let ideal = base.samples_per_sec
+            * (r.world as f64 / base.world as f64);
+        t.row(&[
+            r.nodes.to_string(),
+            r.world.to_string(),
+            r.batch_per_gpu.to_string(),
+            format!("{:.0}", r.samples_per_sec),
+            format!("{:.3}", r.samples_per_sec / ideal),
+            format!("{:.1}", r.step_secs * 1e3),
+            format!("{:.1}", r.compute_secs * 1e3),
+            format!("{:.1}", r.comm_exposed_secs * 1e3),
+            format!("{:.3}", r.gpu_util),
+        ]);
+    }
+    t
+}
+
+/// Fig. 1 as CSV (for external plotting).
+pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
+    let mut w = CsvWriter::new(vec![
+        "model", "nodes", "gpus", "batch_per_gpu", "samples_per_sec",
+        "step_secs", "compute_secs", "comm_secs", "comm_exposed_secs",
+        "gpu_util",
+    ]);
+    for (name, sweep) in series {
+        for r in sweep {
+            w.row(&[
+                name.to_string(),
+                r.nodes.to_string(),
+                r.world.to_string(),
+                r.batch_per_gpu.to_string(),
+                format!("{:.2}", r.samples_per_sec),
+                format!("{:.6}", r.step_secs),
+                format!("{:.6}", r.compute_secs),
+                format!("{:.6}", r.comm_secs),
+                format!("{:.6}", r.comm_exposed_secs),
+                format!("{:.4}", r.gpu_util),
+            ]);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::perfmodel::sweep_nodes;
+
+    #[test]
+    fn tab1_has_six_models() {
+        let t = tab1_frontier_models();
+        assert_eq!(t.len(), 6);
+        assert!(t.render().contains("Claude 3.5 Sonnet"));
+    }
+
+    #[test]
+    fn fig1_renders_sweep() {
+        let cfg = presets::paper_full_scale();
+        let sweep = sweep_nodes(&cfg, &[1, 2, 4]);
+        let t = fig1_table("bert-120m", &sweep);
+        assert_eq!(t.len(), 3);
+        let csv = fig1_csv(&[("bert-120m", sweep)]);
+        assert_eq!(csv.len(), 3);
+    }
+}

@@ -1,0 +1,230 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! this runtime. Parses `artifacts/manifest.json`, exposes per-variant
+//! parameter specs (name/shape/init/offset into the flat gradient) and
+//! cross-checks them against the rust-side model config.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::config::ModelConfig;
+use crate::util::json::Value;
+use crate::Result;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitKind {
+    Normal(f64),
+    Zeros,
+    Ones,
+}
+
+impl InitKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        if let Some(std) = s.strip_prefix("normal:") {
+            return Ok(InitKind::Normal(std.parse()?));
+        }
+        match s {
+            "zeros" => Ok(InitKind::Zeros),
+            "ones" => Ok(InitKind::Ones),
+            _ => bail!("unknown init '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+    /// Offset of this tensor in the flat gradient vector.
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    /// HLO text file name within the artifacts dir (None = perf-model
+    /// only, not compiled for CPU).
+    pub artifact: Option<String>,
+    pub params: Vec<ParamSpec>,
+    pub grad_len: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub param_count: u64,
+}
+
+impl VariantMeta {
+    fn from_json(name: &str, v: &Value) -> Result<Self> {
+        let cfg = v.req("config")?;
+        let batch = v.req("batch")?;
+        let mut params = Vec::new();
+        for p in v.req("params")?.as_arr()? {
+            let shape: Vec<usize> = p
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            params.push(ParamSpec {
+                name: p.req("name")?.as_str()?.to_string(),
+                size: shape.iter().product(),
+                shape,
+                init: InitKind::parse(p.req("init")?.as_str()?)?,
+                offset: p.req("offset")?.as_usize()?,
+            });
+        }
+        let meta = VariantMeta {
+            name: name.to_string(),
+            artifact: match v.req("artifact")? {
+                Value::Null => None,
+                a => Some(a.as_str()?.to_string()),
+            },
+            params,
+            grad_len: v.req("grad_len")?.as_usize()?,
+            batch: batch.req("size")?.as_usize()?,
+            seq: batch.req("seq")?.as_usize()?,
+            vocab: cfg.req("vocab")?.as_usize()?,
+            hidden: cfg.req("hidden")?.as_usize()?,
+            layers: cfg.req("layers")?.as_usize()?,
+            heads: cfg.req("heads")?.as_usize()?,
+            param_count: cfg.req("param_count")?.as_u64()?,
+        };
+        // internal consistency: offsets tile the flat gradient exactly
+        let mut off = 0usize;
+        for p in &meta.params {
+            ensure!(p.offset == off, "param {} offset mismatch", p.name);
+            off += p.size;
+        }
+        ensure!(off == meta.grad_len, "grad_len != sum of param sizes");
+        ensure!(off as u64 == meta.param_count, "param_count mismatch");
+        Ok(meta)
+    }
+
+    /// Cross-check against the rust-side model config (presets must not
+    /// drift from python/compile/configs.py).
+    pub fn check_model(&self, m: &ModelConfig) -> Result<()> {
+        ensure!(
+            m.vocab == self.vocab
+                && m.hidden == self.hidden
+                && m.layers == self.layers
+                && m.heads == self.heads
+                && m.seq == self.seq,
+            "model config '{}' does not match artifact '{}' \
+             (rust {}/{}/{}/{}/{} vs artifact {}/{}/{}/{}/{})",
+            m.variant, self.name, m.vocab, m.hidden, m.layers, m.heads,
+            m.seq, self.vocab, self.hidden, self.layers, self.heads,
+            self.seq
+        );
+        ensure!(m.param_count() == self.param_count,
+                "param count mismatch: rust {} vs artifact {}",
+                m.param_count(), self.param_count);
+        Ok(())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: HashMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Value::parse(&text)?;
+        ensure!(v.req("format")?.as_str()? == "hlo-text-v1",
+                "unknown manifest format");
+        let mut variants = HashMap::new();
+        for (name, meta) in v.req("variants")?.as_obj()? {
+            variants.insert(name.clone(),
+                            VariantMeta::from_json(name, meta)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Default artifacts dir: `$TXGAIN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("TXGAIN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants.get(name).with_context(|| {
+            format!("variant '{name}' not in manifest ({})",
+                    self.dir.display())
+        })
+    }
+
+    /// Absolute path of a variant's HLO text.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let v = self.variant(name)?;
+        let f = v.artifact.as_ref().with_context(|| {
+            format!("variant '{name}' has no compiled artifact")
+        })?;
+        Ok(self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn init_kind_parsing() {
+        assert_eq!(InitKind::parse("normal:0.02").unwrap(),
+                   InitKind::Normal(0.02));
+        assert_eq!(InitKind::parse("zeros").unwrap(), InitKind::Zeros);
+        assert_eq!(InitKind::parse("ones").unwrap(), InitKind::Ones);
+        assert!(InitKind::parse("uniform").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_and_cross_checks_presets() {
+        // requires `make artifacts`; skip silently when absent so unit
+        // tests can run standalone (integration tests hard-require it)
+        let Some(m) = manifest() else { return };
+        for (variant, model) in [
+            ("tiny", presets::model_tiny()),
+            ("small", presets::model_small()),
+            ("e2e", presets::model_e2e()),
+        ] {
+            let meta = m.variant(variant).unwrap();
+            meta.check_model(&model).unwrap();
+            assert!(m.hlo_path(variant).unwrap().exists());
+        }
+        // paper variants are listed but not compiled
+        let b350 = m.variant("bert-350m").unwrap();
+        assert!(b350.artifact.is_none());
+        b350.check_model(&presets::model_bert_350m()).unwrap();
+        assert!(m.hlo_path("bert-350m").is_err());
+    }
+
+    #[test]
+    fn check_model_rejects_drift() {
+        let Some(m) = manifest() else { return };
+        let mut wrong = presets::model_tiny();
+        wrong.hidden = 128;
+        assert!(m.variant("tiny").unwrap().check_model(&wrong).is_err());
+    }
+}

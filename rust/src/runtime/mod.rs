@@ -1,0 +1,200 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes the
+//! train step from the rust hot path. Python is never involved here.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! Layout note: the step artifact returns `(f32[] loss, f32[P] grads)`.
+//! Gradients come back as ONE flat 1-D vector precisely so no 2-D
+//! output layout ({0,1} vs {1,0}) can silently permute a tensor; the
+//! manifest's per-param offsets slice it.
+
+pub mod artifact;
+
+pub use artifact::{InitKind, Manifest, ParamSpec, VariantMeta};
+
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, PrimitiveType};
+
+use crate::Result;
+
+/// Host-side parameter set: one row-major f32 buffer per tensor, in
+/// manifest order.
+#[derive(Clone, Debug)]
+pub struct HostParams {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl HostParams {
+    /// Initialize from the manifest's init specs, deterministically.
+    pub fn init(meta: &VariantMeta, seed: u64) -> HostParams {
+        let root = crate::util::Rng::new(seed).derive("params");
+        let tensors = meta
+            .params
+            .iter()
+            .map(|p| {
+                let mut rng = root.derive(&p.name);
+                match p.init {
+                    InitKind::Zeros => vec![0.0; p.size],
+                    InitKind::Ones => vec![1.0; p.size],
+                    InitKind::Normal(std) => (0..p.size)
+                        .map(|_| (rng.normal() * std) as f32)
+                        .collect(),
+                }
+            })
+            .collect();
+        HostParams { tensors }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Apply `f(param_slice, grad_slice)` tensor-by-tensor against a
+    /// flat gradient vector.
+    pub fn zip_grads<F: FnMut(&mut [f32], &[f32])>(
+        &mut self, meta: &VariantMeta, flat_grads: &[f32], mut f: F) {
+        for (t, spec) in self.tensors.iter_mut().zip(&meta.params) {
+            f(t, &flat_grads[spec.offset..spec.offset + spec.size]);
+        }
+    }
+}
+
+/// Output of one executed train step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Flat f32 gradient (manifest order/offsets).
+    pub grads: Vec<f32>,
+}
+
+/// A compiled train-step executable for one model variant.
+pub struct Engine {
+    pub meta: VariantMeta,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load + compile `variant` from the artifacts directory.
+    pub fn load(artifacts: &Path, variant: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts)?;
+        let meta = manifest.variant(variant)?.clone();
+        let hlo = manifest.hlo_path(variant)?;
+        // silence TfrtCpuClient lifecycle INFO logs unless the user
+        // explicitly asked for them
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+        }
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(Engine { meta, exe })
+    }
+
+    /// Engine::load with the default artifacts dir.
+    pub fn load_default(variant: &str) -> Result<Engine> {
+        Self::load(&Manifest::default_dir(), variant)
+    }
+
+    /// Execute one train step. Slices must be `[batch, seq]` row-major
+    /// with the artifact's baked batch/seq.
+    pub fn execute_step(&self, params: &HostParams, input_ids: &[i32],
+                        attn_mask: &[f32], labels: &[i32])
+        -> Result<StepOutput> {
+        let n = self.meta.batch * self.meta.seq;
+        ensure!(input_ids.len() == n && attn_mask.len() == n
+                    && labels.len() == n,
+                "batch buffers must be {}x{}", self.meta.batch,
+                self.meta.seq);
+        ensure!(params.tensors.len() == self.meta.params.len(),
+                "param tensor count mismatch");
+
+        let mut lits: Vec<Literal> =
+            Vec::with_capacity(self.meta.params.len() + 3);
+        for (t, spec) in params.tensors.iter().zip(&self.meta.params) {
+            ensure!(t.len() == spec.size, "param {} length", spec.name);
+            lits.push(f32_literal(t, &spec.shape));
+        }
+        let bs = [self.meta.batch, self.meta.seq];
+        lits.push(i32_literal(input_ids, &bs));
+        lits.push(f32_literal_from(attn_mask, &bs));
+        lits.push(i32_literal(labels, &bs));
+
+        let result = self.exe.execute::<Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let (loss_lit, grads_lit) = result.to_tuple2()?;
+        let loss: f32 = loss_lit.get_first_element()?;
+        let grads = grads_lit.to_vec::<f32>()?;
+        ensure!(grads.len() == self.meta.grad_len,
+                "gradient length {} != manifest {}", grads.len(),
+                self.meta.grad_len);
+        Ok(StepOutput { loss, grads })
+    }
+}
+
+fn f32_literal(data: &[f32], shape: &[usize]) -> Literal {
+    let mut lit = Literal::create_from_shape(PrimitiveType::F32, shape);
+    lit.copy_raw_from(data).expect("shape/data size mismatch");
+    lit
+}
+
+fn f32_literal_from(data: &[f32], shape: &[usize]) -> Literal {
+    f32_literal(data, shape)
+}
+
+fn i32_literal(data: &[i32], shape: &[usize]) -> Literal {
+    let mut lit = Literal::create_from_shape(PrimitiveType::S32, shape);
+    lit.copy_raw_from(data).expect("shape/data size mismatch");
+    lit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn host_params_init_is_deterministic_and_spec_shaped() {
+        let dir = Manifest::default_dir();
+        let Ok(manifest) = Manifest::load(&dir) else { return };
+        let meta = manifest.variant("tiny").unwrap().clone();
+        let a = HostParams::init(&meta, 7);
+        let b = HostParams::init(&meta, 7);
+        let c = HostParams::init(&meta, 8);
+        assert_eq!(a.tensors, b.tensors);
+        assert_ne!(a.tensors[0], c.tensors[0]);
+        assert_eq!(a.total_len() as u64,
+                   presets::model_tiny().param_count());
+        // layernorm gains are ones, biases zeros
+        let names: Vec<&str> =
+            meta.params.iter().map(|p| p.name.as_str()).collect();
+        let g = names.iter().position(|n| *n == "emb_ln_g").unwrap();
+        assert!(a.tensors[g].iter().all(|&v| v == 1.0));
+        let bz = names.iter().position(|n| *n == "emb_ln_b").unwrap();
+        assert!(a.tensors[bz].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zip_grads_visits_every_tensor_with_matching_slices() {
+        let dir = Manifest::default_dir();
+        let Ok(manifest) = Manifest::load(&dir) else { return };
+        let meta = manifest.variant("tiny").unwrap().clone();
+        let mut params = HostParams::init(&meta, 1);
+        let flat: Vec<f32> =
+            (0..meta.grad_len).map(|i| i as f32).collect();
+        let mut seen = 0usize;
+        params.zip_grads(&meta, &flat, |p, g| {
+            assert_eq!(p.len(), g.len());
+            seen += g.len();
+            assert_eq!(g[0] as usize, seen - g.len()); // offset order
+        });
+        assert_eq!(seen, meta.grad_len);
+    }
+}

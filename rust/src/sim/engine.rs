@@ -1,0 +1,142 @@
+//! Minimal discrete-event engine: closures scheduled at simulated times.
+//!
+//! Determinism: ties in time break by insertion sequence number, so a
+//! given schedule always executes in one order.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in seconds.
+pub type SimTime = f64;
+
+type Callback = Box<dyn FnOnce(&mut Engine)>;
+
+struct Scheduled {
+    time: SimTime,
+    seq: u64,
+    cb: Callback,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event engine. `run` drains the queue in time order.
+#[derive(Default)]
+pub struct Engine {
+    queue: BinaryHeap<Scheduled>,
+    time: SimTime,
+    seq: u64,
+    executed: u64,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> SimTime {
+        self.time
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule `cb` at absolute time `at` (>= now).
+    pub fn at<F: FnOnce(&mut Engine) + 'static>(&mut self, at: SimTime,
+                                                cb: F) {
+        debug_assert!(at >= self.time, "cannot schedule in the past");
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Scheduled { time: at.max(self.time), seq,
+                                    cb: Box::new(cb) });
+    }
+
+    /// Schedule `cb` after a delay from now.
+    pub fn after<F: FnOnce(&mut Engine) + 'static>(&mut self, delay: SimTime,
+                                                   cb: F) {
+        let t = self.time + delay.max(0.0);
+        self.at(t, cb);
+    }
+
+    /// Run until the queue is empty; returns the final time.
+    pub fn run(&mut self) -> SimTime {
+        while let Some(ev) = self.queue.pop() {
+            self.time = ev.time;
+            self.executed += 1;
+            (ev.cb)(self);
+        }
+        self.time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn executes_in_time_order() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        for (t, tag) in [(3.0, 'c'), (1.0, 'a'), (2.0, 'b')] {
+            let o = order.clone();
+            e.at(t, move |_| o.borrow_mut().push(tag));
+        }
+        let end = e.run();
+        assert_eq!(*order.borrow(), vec!['a', 'b', 'c']);
+        assert_eq!(end, 3.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        for tag in 0..5 {
+            let o = order.clone();
+            e.at(1.0, move |_| o.borrow_mut().push(tag));
+        }
+        e.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let hits = Rc::new(RefCell::new(0u32));
+        let mut e = Engine::new();
+        let h = hits.clone();
+        e.at(1.0, move |e| {
+            *h.borrow_mut() += 1;
+            let h2 = h.clone();
+            e.after(2.0, move |e| {
+                *h2.borrow_mut() += 1;
+                assert_eq!(e.now(), 3.0);
+            });
+        });
+        e.run();
+        assert_eq!(*hits.borrow(), 2);
+        assert_eq!(e.executed(), 2);
+    }
+}

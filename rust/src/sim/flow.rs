@@ -1,0 +1,260 @@
+//! Max-min fair-share flow network.
+//!
+//! Links have capacities (bytes/s); a flow traverses a set of links and
+//! carries a byte count. Rates follow progressive filling (the classical
+//! max-min allocation): repeatedly saturate the most-contended link,
+//! freeze its flows at the fair share, remove, repeat. Events are flow
+//! arrivals/completions; rates are recomputed at each.
+//!
+//! This models exactly the storage behaviour behind recommendation 2:
+//! N clients reading through per-client NIC caps from a shared array
+//! whose aggregate bandwidth saturates as N grows.
+
+/// Index of a link in the network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LinkId(pub usize);
+
+/// Index of a flow (returned by [`FlowNet::add_flow`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FlowId(pub usize);
+
+#[derive(Clone, Debug)]
+struct Flow {
+    path: Vec<LinkId>,
+    bytes_left: f64,
+    start: f64,
+    finish: Option<f64>,
+}
+
+/// A static set of flows simulated to completion.
+#[derive(Default)]
+pub struct FlowNet {
+    capacities: Vec<f64>,
+    flows: Vec<Flow>,
+}
+
+impl FlowNet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a link with `capacity` bytes/second.
+    pub fn add_link(&mut self, capacity: f64) -> LinkId {
+        assert!(capacity > 0.0, "link capacity must be positive");
+        self.capacities.push(capacity);
+        LinkId(self.capacities.len() - 1)
+    }
+
+    /// Add a flow of `bytes` over `path`, starting at time `start`.
+    pub fn add_flow(&mut self, path: Vec<LinkId>, bytes: f64, start: f64)
+        -> FlowId {
+        assert!(!path.is_empty(), "flow needs at least one link");
+        assert!(bytes >= 0.0);
+        self.flows.push(Flow { path, bytes_left: bytes, start,
+                               finish: if bytes == 0.0 { Some(start) }
+                                       else { None } });
+        FlowId(self.flows.len() - 1)
+    }
+
+    /// Max-min rates for the given set of active flow indices.
+    fn rates(&self, active: &[usize]) -> Vec<f64> {
+        let n = self.capacities.len();
+        let mut residual = self.capacities.clone();
+        let mut link_flows: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (ai, &fi) in active.iter().enumerate() {
+            for l in &self.flows[fi].path {
+                link_flows[l.0].push(ai);
+            }
+        }
+        let mut rate = vec![f64::INFINITY; active.len()];
+        let mut unassigned: Vec<bool> = vec![true; active.len()];
+        let mut remaining_on_link: Vec<usize> =
+            link_flows.iter().map(|v| v.len()).collect();
+        loop {
+            // most-contended link = min fair share among links that still
+            // carry unassigned flows
+            let mut best: Option<(usize, f64)> = None;
+            for l in 0..n {
+                if remaining_on_link[l] == 0 {
+                    continue;
+                }
+                let share = residual[l] / remaining_on_link[l] as f64;
+                if best.map_or(true, |(_, s)| share < s) {
+                    best = Some((l, share));
+                }
+            }
+            let Some((l, share)) = best else { break };
+            // freeze all unassigned flows through l at `share`
+            let frozen: Vec<usize> = link_flows[l]
+                .iter()
+                .copied()
+                .filter(|&ai| unassigned[ai])
+                .collect();
+            for &ai in &frozen {
+                rate[ai] = share;
+                unassigned[ai] = false;
+                // remove from every link it crosses
+                for pl in &self.flows[active[ai]].path {
+                    residual[pl.0] -= share;
+                    remaining_on_link[pl.0] -= 1;
+                }
+            }
+            if frozen.is_empty() {
+                // defensive: should not happen
+                break;
+            }
+        }
+        for r in &mut rate {
+            if !r.is_finite() {
+                *r = 0.0;
+            }
+        }
+        rate
+    }
+
+    /// Simulate all flows to completion; returns per-flow finish times.
+    pub fn run(&mut self) -> Vec<f64> {
+        let mut t = 0.0_f64;
+        loop {
+            let active: Vec<usize> = (0..self.flows.len())
+                .filter(|&i| {
+                    self.flows[i].finish.is_none() && self.flows[i].start <= t
+                })
+                .collect();
+            let next_arrival = self
+                .flows
+                .iter()
+                .filter(|f| f.finish.is_none() && f.start > t)
+                .map(|f| f.start)
+                .fold(f64::INFINITY, f64::min);
+            if active.is_empty() {
+                if next_arrival.is_finite() {
+                    t = next_arrival;
+                    continue;
+                }
+                break;
+            }
+            let rates = self.rates(&active);
+            // earliest completion among active flows
+            let mut dt = f64::INFINITY;
+            for (ai, &fi) in active.iter().enumerate() {
+                if rates[ai] > 0.0 {
+                    dt = dt.min(self.flows[fi].bytes_left / rates[ai]);
+                }
+            }
+            if next_arrival.is_finite() {
+                dt = dt.min(next_arrival - t);
+            }
+            if !dt.is_finite() {
+                // active flows but zero rates and no arrivals: stuck
+                panic!("flow network deadlock: active flows with zero rate");
+            }
+            for (ai, &fi) in active.iter().enumerate() {
+                let f = &mut self.flows[fi];
+                f.bytes_left -= rates[ai] * dt;
+                if f.bytes_left <= 1e-6 {
+                    f.bytes_left = 0.0;
+                    f.finish = Some(t + dt);
+                }
+            }
+            t += dt;
+        }
+        self.flows
+            .iter()
+            .map(|f| f.finish.expect("flow did not finish"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flow_takes_bytes_over_capacity() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(100.0);
+        net.add_flow(vec![l], 1000.0, 0.0);
+        let t = net.run();
+        assert!((t[0] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(100.0);
+        net.add_flow(vec![l], 500.0, 0.0);
+        net.add_flow(vec![l], 500.0, 0.0);
+        let t = net.run();
+        // each gets 50 B/s => both finish at 10s
+        assert!((t[0] - 10.0).abs() < 1e-9);
+        assert!((t[1] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_flow_releases_bandwidth() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(100.0);
+        net.add_flow(vec![l], 100.0, 0.0); // short
+        net.add_flow(vec![l], 450.0, 0.0); // long
+        let t = net.run();
+        // shared at 50 B/s until short ends at t=2 (100B); long then has
+        // 350B left at 100 B/s: ends at 2 + 3.5 = 5.5
+        assert!((t[0] - 2.0).abs() < 1e-9, "{t:?}");
+        assert!((t[1] - 5.5).abs() < 1e-9, "{t:?}");
+    }
+
+    #[test]
+    fn per_client_cap_binds_before_shared_array() {
+        // 2 clients, each capped at 10 B/s, shared array 100 B/s: the
+        // clients are the bottleneck; array is underused.
+        let mut net = FlowNet::new();
+        let array = net.add_link(100.0);
+        let c1 = net.add_link(10.0);
+        let c2 = net.add_link(10.0);
+        net.add_flow(vec![array, c1], 100.0, 0.0);
+        net.add_flow(vec![array, c2], 100.0, 0.0);
+        let t = net.run();
+        assert!((t[0] - 10.0).abs() < 1e-9);
+        assert!((t[1] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_array_saturates_with_many_clients() {
+        // 20 clients of 10 B/s each through a 100 B/s array: fair share
+        // is 5 B/s per client — the rec-2 contention regime.
+        let mut net = FlowNet::new();
+        let array = net.add_link(100.0);
+        for _ in 0..20 {
+            let c = net.add_link(10.0);
+            net.add_flow(vec![array, c], 50.0, 0.0);
+        }
+        let t = net.run();
+        for ti in t {
+            assert!((ti - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn late_arrival_reduces_rates() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(100.0);
+        net.add_flow(vec![l], 1000.0, 0.0);
+        net.add_flow(vec![l], 250.0, 5.0);
+        let t = net.run();
+        // flow0: 500B done by t=5, then shares 50B/s; flow1 needs 5s
+        // (250/50) -> ends at 10; flow0 has 250 left at t=10, full rate
+        // -> ends 12.5
+        assert!((t[1] - 10.0).abs() < 1e-6, "{t:?}");
+        assert!((t[0] - 12.5).abs() < 1e-6, "{t:?}");
+    }
+
+    #[test]
+    fn zero_byte_flow_finishes_at_start() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(10.0);
+        net.add_flow(vec![l], 0.0, 3.0);
+        let t = net.run();
+        assert_eq!(t[0], 3.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event simulation substrate.
+//!
+//! Two cooperating pieces:
+//! - [`engine`]: a minimal event queue (time-ordered closures) used to
+//!   drive timelines (training steps, prefetch pipelines).
+//! - [`flow`]: a max-min fair-share *flow-level* network model — shared
+//!   resources (the Lustre array, the core switch, a node's NIC or SSD)
+//!   divide bandwidth among concurrent transfers, with rates recomputed
+//!   at every arrival/completion. This is what makes the paper's
+//!   recommendation-2 contention cliff appear at scale.
+
+pub mod engine;
+pub mod flow;
+
+pub use engine::Engine;
+pub use flow::{FlowNet, LinkId};

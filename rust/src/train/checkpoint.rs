@@ -1,0 +1,129 @@
+//! Checkpointing: params + optimizer moments + step counter in a simple
+//! length-prefixed binary container (no external serialization crates in
+//! the offline build).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "TXCK" u32, version u32, step u64,
+//! n_tensors u32, then per tensor: len u64, f32[len]   (params)
+//! m_len u64, f32[m_len]                                (Adam m)
+//! v_len u64, f32[v_len]                                (Adam v)
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::runtime::HostParams;
+use crate::Result;
+
+const MAGIC: u32 = 0x5458_434B;
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: HostParams,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    w.write_all(&(data.len() as u64).to_le_bytes())?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let len = u64::from_le_bytes(len8) as usize;
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn save(path: &Path, step: u64, params: &HostParams, m: &[f32],
+            v: &[f32]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating checkpoint {}",
+                                 path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&step.to_le_bytes())?;
+    w.write_all(&(params.tensors.len() as u32).to_le_bytes())?;
+    for t in &params.tensors {
+        write_f32s(&mut w, t)?;
+    }
+    write_f32s(&mut w, m)?;
+    write_f32s(&mut w, v)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}",
+                                 path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut h = [0u8; 20];
+    r.read_exact(&mut h)?;
+    if u32::from_le_bytes(h[0..4].try_into().unwrap()) != MAGIC {
+        bail!("not a txgain checkpoint");
+    }
+    if u32::from_le_bytes(h[4..8].try_into().unwrap()) != VERSION {
+        bail!("unsupported checkpoint version");
+    }
+    let step = u64::from_le_bytes(h[8..16].try_into().unwrap());
+    let n = u32::from_le_bytes(h[16..20].try_into().unwrap()) as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        tensors.push(read_f32s(&mut r)?);
+    }
+    let m = read_f32s(&mut r)?;
+    let v = read_f32s(&mut r)?;
+    Ok(Checkpoint { step, params: HostParams { tensors }, m, v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("txgain-ckpt-{}.bin", std::process::id()));
+        let params = HostParams {
+            tensors: vec![vec![1.5, -2.0], vec![0.0; 5]],
+        };
+        let m = vec![0.1; 7];
+        let v = vec![0.2; 7];
+        save(&path, 42, &params, &m, &v).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.params.tensors, params.tensors);
+        assert_eq!(ck.m, m);
+        assert_eq!(ck.v, v);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir()
+            .join(format!("txgain-ckpt-bad-{}.bin", std::process::id()));
+        std::fs::write(&path, b"garbage data here...").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

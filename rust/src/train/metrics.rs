@@ -1,0 +1,168 @@
+//! Run metrics: per-step records and the aggregated report the
+//! coordinator emits (JSON + CSV for the benches/examples to render).
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f64,
+    /// Wall time of the whole step, seconds.
+    pub step_secs: f64,
+    /// Time executing the model (the "GPU busy" part), seconds.
+    pub compute_secs: f64,
+    /// Time blocked waiting on the loader.
+    pub loader_wait_secs: f64,
+    /// Time in the gradient all-reduce.
+    pub comm_secs: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub variant: String,
+    pub world: usize,
+    pub batch_per_gpu: usize,
+    pub records: Vec<StepRecord>,
+    /// One-time pipeline costs, seconds.
+    pub preprocess_secs: f64,
+    pub stage_secs: f64,
+}
+
+impl RunReport {
+    pub fn samples_per_sec(&self) -> f64 {
+        let total: f64 = self.records.iter().map(|r| r.step_secs).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        (self.records.len() * self.batch_per_gpu * self.world) as f64
+            / total
+    }
+
+    /// Mean GPU-busy fraction (recommendation 3's y-axis).
+    pub fn gpu_utilization(&self) -> f64 {
+        let busy: f64 = self.records.iter().map(|r| r.compute_secs).sum();
+        let total: f64 = self.records.iter().map(|r| r.step_secs).sum();
+        if total == 0.0 { 0.0 } else { busy / total }
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn first_loss(&self) -> Option<f32> {
+        self.records.first().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `n` records (smoother than final_loss).
+    pub fn tail_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(vec![
+            "step", "loss", "lr", "step_secs", "compute_secs",
+            "loader_wait_secs", "comm_secs",
+        ]);
+        for r in &self.records {
+            w.row(&[
+                r.step.to_string(),
+                format!("{:.6}", r.loss),
+                format!("{:.3e}", r.lr),
+                format!("{:.6}", r.step_secs),
+                format!("{:.6}", r.compute_secs),
+                format!("{:.6}", r.loader_wait_secs),
+                format!("{:.6}", r.comm_secs),
+            ]);
+        }
+        w
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("variant", json::s(&self.variant)),
+            ("world", json::num(self.world as f64)),
+            ("batch_per_gpu", json::num(self.batch_per_gpu as f64)),
+            ("steps", json::num(self.records.len() as f64)),
+            ("samples_per_sec", json::num(self.samples_per_sec())),
+            ("gpu_utilization", json::num(self.gpu_utilization())),
+            ("first_loss",
+             self.first_loss().map(|l| json::num(l as f64))
+                 .unwrap_or(Value::Null)),
+            ("final_loss",
+             self.final_loss().map(|l| json::num(l as f64))
+                 .unwrap_or(Value::Null)),
+            ("preprocess_secs", json::num(self.preprocess_secs)),
+            ("stage_secs", json::num(self.stage_secs)),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        self.to_csv().write_to(&dir.join("steps.csv"))?;
+        std::fs::write(dir.join("report.json"),
+                       self.to_json().to_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        RunReport {
+            variant: "tiny".into(),
+            world: 2,
+            batch_per_gpu: 4,
+            records: (0..10)
+                .map(|i| StepRecord {
+                    step: i,
+                    loss: 6.0 - i as f32 * 0.1,
+                    lr: 1e-4,
+                    step_secs: 0.1,
+                    compute_secs: 0.08,
+                    loader_wait_secs: 0.01,
+                    comm_secs: 0.01,
+                })
+                .collect(),
+            preprocess_secs: 1.0,
+            stage_secs: 0.5,
+        }
+    }
+
+    #[test]
+    fn throughput_and_utilization() {
+        let r = report();
+        assert!((r.samples_per_sec() - 80.0).abs() < 1e-9);
+        assert!((r.gpu_utilization() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_accessors() {
+        let r = report();
+        assert_eq!(r.first_loss().unwrap(), 6.0);
+        assert!((r.final_loss().unwrap() - 5.1).abs() < 1e-6);
+        assert!(r.tail_loss(3).unwrap() < r.tail_loss(10).unwrap());
+    }
+
+    #[test]
+    fn csv_has_all_steps() {
+        assert_eq!(report().to_csv().len(), 10);
+    }
+
+    #[test]
+    fn json_is_parseable() {
+        let v = crate::util::json::Value::parse(
+            &report().to_json().to_pretty()).unwrap();
+        assert_eq!(v.req("world").unwrap().as_usize().unwrap(), 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Real-mode training: the optimizer, LR schedule, checkpointing and the
+//! multi-rank data-parallel trainer that executes the AOT train step on
+//! PJRT and moves real gradients through the real collectives.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod optimizer;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{RunReport, StepRecord};
+pub use optimizer::AdamW;
+pub use schedule::LrSchedule;
+pub use trainer::{train, TrainOptions};

@@ -1,0 +1,194 @@
+//! AdamW on host buffers (decoupled weight decay, bias correction).
+//!
+//! The optimizer lives in rust — the AOT artifact returns `(loss,
+//! grads)` and nothing else — mirroring DDP, where gradients are the
+//! communicated object and every rank applies an identical update.
+//! Layernorm gains/biases and other 1-D tensors are excluded from weight
+//! decay, matching the usual BERT recipe.
+
+use crate::config::TrainingConfig;
+use crate::runtime::{HostParams, VariantMeta};
+
+#[derive(Clone, Debug)]
+pub struct AdamW {
+    pub lr_base: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    step: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl AdamW {
+    pub fn new(cfg: &TrainingConfig, n_params: usize) -> AdamW {
+        AdamW {
+            lr_base: cfg.lr,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.adam_eps,
+            weight_decay: cfg.weight_decay,
+            step: 0,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// One update with learning rate `lr` against a flat gradient.
+    pub fn step(&mut self, params: &mut HostParams, meta: &VariantMeta,
+                flat_grads: &[f32], lr: f64) {
+        assert_eq!(flat_grads.len(), self.m.len());
+        self.step += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1 as f32).powi(self.step as i32);
+        let bc2 = 1.0 - (self.beta2 as f32).powi(self.step as i32);
+        let eps = self.eps as f32;
+        let lr = lr as f32;
+        let wd = self.weight_decay as f32;
+
+        for (t, spec) in params.tensors.iter_mut().zip(&meta.params) {
+            let g = &flat_grads[spec.offset..spec.offset + spec.size];
+            let m = &mut self.m[spec.offset..spec.offset + spec.size];
+            let v = &mut self.v[spec.offset..spec.offset + spec.size];
+            // no decay on 1-D tensors (biases, layernorm, out_bias)
+            let decay = if spec.shape.len() > 1 { wd } else { 0.0 };
+            for i in 0..g.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                t[i] -= lr * (mhat / (vhat.sqrt() + eps) + decay * t[i]);
+            }
+        }
+    }
+
+    /// Serialize the moment buffers (checkpointing).
+    pub fn state(&self) -> (u64, &[f32], &[f32]) {
+        (self.step, &self.m, &self.v)
+    }
+
+    pub fn restore(&mut self, step: u64, m: Vec<f32>, v: Vec<f32>) {
+        assert_eq!(m.len(), self.m.len());
+        assert_eq!(v.len(), self.v.len());
+        self.step = step;
+        self.m = m;
+        self.v = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{InitKind, ParamSpec};
+
+    fn toy_meta() -> VariantMeta {
+        VariantMeta {
+            name: "toy".into(),
+            artifact: None,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![2, 2],
+                            init: InitKind::Normal(0.02), offset: 0,
+                            size: 4 },
+                ParamSpec { name: "b".into(), shape: vec![2],
+                            init: InitKind::Zeros, offset: 4, size: 2 },
+            ],
+            grad_len: 6,
+            batch: 1,
+            seq: 8,
+            vocab: 16,
+            hidden: 2,
+            layers: 1,
+            heads: 1,
+            param_count: 6,
+        }
+    }
+
+    fn toy_params() -> HostParams {
+        HostParams { tensors: vec![vec![1.0; 4], vec![0.5; 2]] }
+    }
+
+    fn cfg() -> TrainingConfig {
+        use crate::config::presets;
+        presets::quickstart().training
+    }
+
+    #[test]
+    fn first_step_matches_closed_form() {
+        // with bias correction, step 1 is exactly lr * sign-ish update:
+        // mhat = g, vhat = g^2 => delta = lr * g/(|g|+eps) + lr*wd*w
+        let meta = toy_meta();
+        let mut p = toy_params();
+        let mut opt = AdamW::new(&cfg(), 6);
+        let g = vec![0.5f32, -0.5, 0.25, -0.25, 1.0, -1.0];
+        let lr = 0.001;
+        opt.step(&mut p, &meta, &g, lr);
+        for (i, &gi) in g.iter().enumerate().take(4) {
+            let expect = 1.0
+                - lr as f32 * (gi / (gi.abs() + 1e-8) + 0.01 * 1.0);
+            assert!((p.tensors[0][i] - expect).abs() < 1e-6,
+                    "i={i}: {} vs {expect}", p.tensors[0][i]);
+        }
+        // bias tensor: no weight decay
+        let expect_b = 0.5 - lr as f32 * (1.0 / (1.0 + 1e-8));
+        assert!((p.tensors[1][0] - expect_b).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_grad_only_decays_matrices() {
+        let meta = toy_meta();
+        let mut p = toy_params();
+        let mut opt = AdamW::new(&cfg(), 6);
+        opt.step(&mut p, &meta, &vec![0.0; 6], 0.01);
+        assert!(p.tensors[0][0] < 1.0); // decayed
+        assert_eq!(p.tensors[1][0], 0.5); // bias untouched
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(w) = 0.5*||w - target||^2 ; grad = w - target
+        let meta = toy_meta();
+        let mut p = toy_params();
+        let mut opt = AdamW::new(
+            &TrainingConfig { weight_decay: 0.0, lr: 0.05, ..cfg() }, 6);
+        let target = [3.0f32, -2.0, 0.0, 1.0, 2.0, -1.0];
+        for _ in 0..600 {
+            let mut g = vec![0.0f32; 6];
+            let flat: Vec<f32> = p.tensors.iter().flatten().copied()
+                .collect();
+            for i in 0..6 {
+                g[i] = flat[i] - target[i];
+            }
+            opt.step(&mut p, &meta, &g, 0.05);
+        }
+        let flat: Vec<f32> =
+            p.tensors.iter().flatten().copied().collect();
+        for i in 0..6 {
+            assert!((flat[i] - target[i]).abs() < 0.05,
+                    "i={i}: {} vs {}", flat[i], target[i]);
+        }
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let meta = toy_meta();
+        let mut p = toy_params();
+        let mut opt = AdamW::new(&cfg(), 6);
+        opt.step(&mut p, &meta, &[0.1; 6], 0.01);
+        let (s, m, v) = opt.state();
+        let (m, v) = (m.to_vec(), v.to_vec());
+        let mut opt2 = AdamW::new(&cfg(), 6);
+        opt2.restore(s, m, v);
+        // same next update
+        let mut pa = p.clone();
+        let mut pb = p.clone();
+        opt.step(&mut pa, &meta, &[0.2; 6], 0.01);
+        opt2.step(&mut pb, &meta, &[0.2; 6], 0.01);
+        assert_eq!(pa.tensors, pb.tensors);
+    }
+}

@@ -1,0 +1,70 @@
+//! Learning-rate schedule: linear warmup + cosine decay to 10 % of
+//! peak — the standard BERT pretraining recipe.
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub floor_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn new(peak: f64, warmup_steps: usize, total_steps: usize)
+        -> LrSchedule {
+        LrSchedule { peak, warmup_steps, total_steps, floor_frac: 0.1 }
+    }
+
+    /// Learning rate at `step` (0-based).
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.peak * (step + 1) as f64
+                / self.warmup_steps as f64;
+        }
+        let span = (self.total_steps.max(self.warmup_steps + 1)
+            - self.warmup_steps) as f64;
+        let t = ((step - self.warmup_steps) as f64 / span).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        let floor = self.peak * self.floor_frac;
+        floor + (self.peak - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warms_up_linearly() {
+        let s = LrSchedule::new(1e-3, 10, 100);
+        assert!((s.lr(0) - 1e-4).abs() < 1e-12);
+        assert!((s.lr(4) - 5e-4).abs() < 1e-12);
+        assert!((s.lr(9) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decays_to_floor() {
+        let s = LrSchedule::new(1e-3, 10, 100);
+        assert!(s.lr(10) > s.lr(50));
+        assert!(s.lr(50) > s.lr(99));
+        assert!((s.lr(500) - 1e-4).abs() < 1e-9); // clamped past end
+    }
+
+    #[test]
+    fn peak_at_end_of_warmup() {
+        let s = LrSchedule::new(2e-4, 20, 300);
+        // step 19 hits the peak; nothing later exceeds it
+        assert!((s.lr(19) - 2e-4).abs() < 1e-12);
+        for step in 0..300 {
+            assert!(s.lr(step) <= 2e-4 + 1e-15, "step {step}");
+        }
+        // strictly decreasing after warmup
+        assert!(s.lr(25) < s.lr(21));
+    }
+
+    #[test]
+    fn no_warmup_starts_at_peak() {
+        let s = LrSchedule::new(1e-3, 0, 10);
+        assert!((s.lr(0) - 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,233 @@
+//! The real-mode data-parallel trainer.
+//!
+//! One OS thread per rank ("GPU"). Each rank owns a compiled PJRT
+//! executable, its parameter/optimizer replicas, and a parallel loader;
+//! gradients are averaged with the *real* ring/tree all-reduce over the
+//! in-process transport. Every rank applies an identical optimizer
+//! update, so replicas stay bit-identical — asserted at the end of
+//! every run (the fundamental DDP invariant).
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context};
+
+use crate::collectives::{allreduce, Algorithm, World};
+use crate::config::{Config, ExecMode};
+use crate::data::loader::{load_dataset, LoaderPool};
+use crate::data::{EpochPlan, Masker, Sample};
+use crate::runtime::{Engine, HostParams, Manifest};
+use crate::Result;
+
+use super::metrics::{RunReport, StepRecord};
+use super::optimizer::AdamW;
+use super::schedule::LrSchedule;
+
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    /// Directory with `manifest.json` + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Pre-staged shard paths (from the coordinator's pipeline).
+    pub shards: Vec<PathBuf>,
+    /// Synthetic loader IO latency per batch (rec-3 experiments), µs.
+    pub io_delay_us: u64,
+    /// Checkpoint directory (used when `checkpoint_every > 0`).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+struct RankOutcome {
+    rank: usize,
+    records: Vec<StepRecord>,
+    param_checksum: u64,
+}
+
+/// Order-sensitive FNV over param bits: replicas must agree exactly.
+fn checksum(params: &HostParams) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in &params.tensors {
+        for x in t {
+            h ^= x.to_bits() as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Run real-mode data-parallel training; returns rank 0's report.
+pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
+    ensure!(cfg.training.mode == ExecMode::Real,
+            "train() is the real-mode entry; use perfmodel::simulate \
+             for simulated mode");
+    cfg.validate()?;
+    let world = cfg.world_size();
+    let variant = cfg.model.variant.as_str();
+
+    // cross-check artifact before spawning anything
+    let manifest = Manifest::load(&opts.artifacts_dir)?;
+    let meta = manifest.variant(variant)?.clone();
+    meta.check_model(&cfg.model)?;
+    ensure!(meta.batch == cfg.training.batch_per_gpu,
+            "artifact '{variant}' bakes batch {}, config asks {}",
+            meta.batch, cfg.training.batch_per_gpu);
+
+    let (samples, seq) = load_dataset(&opts.shards)?;
+    ensure!(seq == cfg.model.seq, "shard seq {} != model seq {}", seq,
+            cfg.model.seq);
+    let dataset: Arc<Vec<Sample>> = Arc::new(samples);
+
+    let batch = cfg.training.batch_per_gpu;
+    let total_steps = cfg.training.steps;
+    let schedule = LrSchedule::new(cfg.training.lr,
+                                   cfg.training.warmup_steps, total_steps);
+    let algo = Algorithm::parse(&cfg.training.allreduce)?;
+    let masker = Masker::new(cfg.data.mask_prob, cfg.model.vocab);
+
+    let comms = World::new(world).into_comms();
+    let outcomes: Vec<Result<RankOutcome>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut comm)| {
+                let dataset = dataset.clone();
+                let masker = masker.clone();
+                let cfg = cfg.clone();
+                let opts = opts.clone();
+                let meta = meta.clone();
+                scope.spawn(move || -> Result<RankOutcome> {
+                    let engine = Engine::load(&opts.artifacts_dir, variant)
+                        .with_context(|| format!("rank {rank} engine"))?;
+                    let mut params = HostParams::init(&meta, cfg.seed);
+                    let mut opt =
+                        AdamW::new(&cfg.training, meta.grad_len);
+                    let mut records = Vec::new();
+                    let inv_world = 1.0 / world as f32;
+
+                    let mut step = 0usize;
+                    let mut epoch = 0u64;
+                    'outer: while step < total_steps {
+                        let plan = EpochPlan::build(dataset.len(), world,
+                                                    epoch, cfg.seed);
+                        let mut loader = LoaderPool::spawn(
+                            dataset.clone(), meta.seq,
+                            &plan.per_rank[rank], batch, masker.clone(),
+                            cfg.seed, epoch, cfg.data.loaders_per_gpu,
+                            cfg.data.prefetch_batches, opts.io_delay_us,
+                        )?;
+                        let wait0 =
+                            loader.stats.wait_ns.load(Ordering::Relaxed);
+                        let mut last_wait = wait0;
+                        while let Some(b) = loader.next_batch() {
+                            if step >= total_steps {
+                                break 'outer;
+                            }
+                            let t_step = Instant::now();
+                            let wait_now = loader
+                                .stats
+                                .wait_ns
+                                .load(Ordering::Relaxed);
+                            let loader_wait =
+                                (wait_now - last_wait) as f64 * 1e-9;
+                            last_wait = wait_now;
+
+                            let t_exec = Instant::now();
+                            let mut out = engine.execute_step(
+                                &params, &b.input_ids, &b.attn_mask,
+                                &b.labels)?;
+                            let compute_secs =
+                                t_exec.elapsed().as_secs_f64();
+
+                            // average gradients + loss across the world
+                            let t_comm = Instant::now();
+                            for g in out.grads.iter_mut() {
+                                *g *= inv_world;
+                            }
+                            allreduce(algo, &mut comm, &mut out.grads)?;
+                            let mut loss_buf = [out.loss * inv_world];
+                            allreduce(algo, &mut comm, &mut loss_buf)?;
+                            let comm_secs =
+                                t_comm.elapsed().as_secs_f64();
+
+                            let lr = schedule.lr(step);
+                            opt.step(&mut params, &meta, &out.grads, lr);
+
+                            if rank == 0 {
+                                if cfg.training.log_every > 0
+                                    && step % cfg.training.log_every == 0
+                                {
+                                    println!(
+                                        "[train] step {step:>5} loss \
+                                         {:.4} lr {:.2e} ({:.2}s/step)",
+                                        loss_buf[0],
+                                        lr,
+                                        t_step.elapsed().as_secs_f64()
+                                    );
+                                }
+                                records.push(StepRecord {
+                                    step,
+                                    loss: loss_buf[0],
+                                    lr,
+                                    step_secs: t_step
+                                        .elapsed()
+                                        .as_secs_f64()
+                                        + loader_wait,
+                                    compute_secs,
+                                    loader_wait_secs: loader_wait,
+                                    comm_secs,
+                                });
+                                if cfg.training.checkpoint_every > 0
+                                    && (step + 1)
+                                        % cfg.training.checkpoint_every
+                                        == 0
+                                {
+                                    if let Some(dir) =
+                                        &opts.checkpoint_dir
+                                    {
+                                        let (s, m, v) = opt.state();
+                                        super::checkpoint::save(
+                                            &dir.join(format!(
+                                                "step-{:06}.ckpt",
+                                                step + 1
+                                            )),
+                                            s, &params, m, v,
+                                        )?;
+                                    }
+                                }
+                            }
+                            step += 1;
+                        }
+                        epoch += 1;
+                    }
+                    Ok(RankOutcome {
+                        rank,
+                        records,
+                        param_checksum: checksum(&params),
+                    })
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut outcomes: Vec<RankOutcome> =
+        outcomes.into_iter().collect::<Result<_>>()?;
+    outcomes.sort_by_key(|o| o.rank);
+
+    // the DDP invariant: replicas stayed identical
+    let c0 = outcomes[0].param_checksum;
+    for o in &outcomes[1..] {
+        ensure!(o.param_checksum == c0,
+                "rank {} diverged from rank 0 (checksum mismatch)",
+                o.rank);
+    }
+
+    Ok(RunReport {
+        variant: variant.to_string(),
+        world,
+        batch_per_gpu: batch,
+        records: outcomes.remove(0).records,
+        preprocess_secs: 0.0,
+        stage_secs: 0.0,
+    })
+}

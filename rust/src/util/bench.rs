@@ -1,0 +1,100 @@
+//! Tiny benchmark harness for `cargo bench` targets (offline build: no
+//! criterion). Warmup + timed iterations, mean/p50/p95 reporting, and a
+//! black-box to defeat dead-code elimination.
+
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+/// Re-export for benches to guard computed values.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: ~`target_ms` of measurement after 10% warmup.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let target_ns = target_ms as f64 * 1e6;
+    let iters = ((target_ns / once).ceil() as usize).clamp(5, 100_000);
+    let warmup = (iters / 10).max(1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let stats = Stats {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: samples[samples.len() / 2],
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize)
+            .min(samples.len() - 1)],
+        min_ns: samples[0],
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop-ish", 5, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.min_ns <= s.p50_ns);
+    }
+}

@@ -1,0 +1,69 @@
+//! Minimal CSV writer for experiment series (no quoting needs beyond
+//! numbers and simple identifiers, so no external crate).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::Result;
+
+/// Column-ordered CSV writer.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
+        CsvWriter {
+            header: columns.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics in debug builds if the arity mismatches.
+    pub fn row<S: ToString>(&mut self, values: &[S]) {
+        debug_assert_eq!(values.len(), self.header.len());
+        self.rows.push(values.iter().map(|v| v.to_string()).collect());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut w = CsvWriter::new(vec!["nodes", "tput"]);
+        w.row(&[1.0, 10.5]);
+        w.row(&[2.0, 20.9]);
+        assert_eq!(w.to_string(), "nodes,tput\n1,10.5\n2,20.9\n");
+        assert_eq!(w.len(), 2);
+    }
+}

@@ -1,0 +1,57 @@
+//! Human-readable size/rate formatting for reports and logs.
+
+/// Format a byte count with a binary-ish decimal unit (like `ls -h`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1000.0 && unit < UNITS.len() - 1 {
+        v /= 1000.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format a bytes/second rate.
+pub fn human_rate(bytes_per_sec: f64) -> String {
+    format!("{}/s", human_bytes(bytes_per_sec.max(0.0) as u64))
+}
+
+/// Format seconds adaptively (µs → hours).
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else if s < 7200.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.2} h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(25_000_000_000), "25.00 GB");
+        assert_eq!(human_bytes(2_000_000_000_000), "2.00 TB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(human_secs(0.5e-3), "500.0 µs");
+        assert_eq!(human_secs(0.25), "250.0 ms");
+        assert_eq!(human_secs(90.0), "90.00 s");
+        assert_eq!(human_secs(600.0), "10.0 min");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic RNG, byte/size formatting, CSV.
+
+pub mod bench;
+pub mod csv;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+
+pub use fmt::{human_bytes, human_rate};
+pub use json::Value;
+pub use rng::Rng;

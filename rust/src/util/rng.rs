@@ -1,0 +1,211 @@
+//! Deterministic, splittable RNG (splitmix64 + xoshiro256**).
+//!
+//! Everything random in the framework — corpus synthesis, MLM masking,
+//! shard shuffling, simulated jitter — derives from one seed through
+//! purpose-tagged splits, so a run is reproducible bit-for-bit from its
+//! config. No external crate: the generator *is* part of the contract
+//! (a dependency bump must never change a dataset).
+
+/// splitmix64 — used for seeding and tag hashing.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over a tag string, for purpose-derived streams.
+fn fnv1a(tag: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// xoshiro256** deterministic generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream for `tag` (e.g. "mask", "rank:3").
+    /// Derivation does not advance `self`.
+    pub fn derive(&self, tag: &str) -> Rng {
+        Rng::new(self.s[0] ^ fnv1a(tag).rotate_left(17))
+    }
+
+    /// Derive from a tag + integer coordinates without formatting or
+    /// allocating — the hot-path variant of `derive` (per-sample mask
+    /// streams derive once per sample; see EXPERIMENTS.md §Perf).
+    pub fn derive_mix(&self, tag: &str, coords: &[u64]) -> Rng {
+        let mut h = fnv1a(tag);
+        for &c in coords {
+            let mut s = h ^ c.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            h = splitmix64(&mut s);
+        }
+        Rng::new(self.s[0] ^ h.rotate_left(17))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias is negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Log-normal with the given log-space mean/std.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn derive_mix_is_stable_and_coordinate_sensitive() {
+        let root = Rng::new(7);
+        let mut a = root.derive_mix("mask", &[1, 2, 3]);
+        let mut b = root.derive_mix("mask", &[1, 2, 3]);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = root.derive_mix("mask", &[1, 2, 4]);
+        let mut d = root.derive_mix("mask", &[1, 3, 3]);
+        let mut e = root.derive_mix("shuffle", &[1, 2, 3]);
+        let va = root.derive_mix("mask", &[1, 2, 3]).next_u64();
+        assert_ne!(va, c.next_u64());
+        assert_ne!(va, d.next_u64());
+        assert_ne!(va, e.next_u64());
+    }
+
+    #[test]
+    fn derive_is_stable_and_independent() {
+        let root = Rng::new(7);
+        let mut d1 = root.derive("mask");
+        let mut d2 = root.derive("mask");
+        let mut d3 = root.derive("shuffle");
+        let v1 = d1.next_u64();
+        assert_eq!(v1, d2.next_u64());
+        assert_ne!(v1, d3.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(9);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_range_in_bounds_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,142 @@
+//! Integration: the data pipeline end to end — corpus → tokenizer →
+//! shards → staging → loader → masked batches — on real files.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use txgain::config::{DataConfig, StagingPolicy};
+use txgain::data::loader::load_dataset;
+use txgain::data::{
+    preprocess_corpus, special, staging, EpochPlan, LoaderPool, Masker,
+};
+
+fn cfg(samples: usize) -> DataConfig {
+    DataConfig {
+        corpus_samples: samples,
+        fn_size_mu: 6.5,
+        fn_size_sigma: 0.6,
+        tokenizer_vocab: 350,
+        mask_prob: 0.15,
+        staging: StagingPolicy::LocalCopy,
+        loaders_per_gpu: 2,
+        prefetch_batches: 2,
+        samples_per_shard: 100,
+    }
+}
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("txgain-it-pipe-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn full_pipeline_roundtrip() {
+    let dir = workdir("full");
+    let seq = 64;
+    let stats = preprocess_corpus(&cfg(250), seq, 42, &dir).unwrap();
+    assert_eq!(stats.shards.len(), 3);
+    assert!(stats.reduction() > 0.5);
+
+    // stage to "local SSD"
+    let local = staging::stage_local(&stats.shards, &dir.join("local"))
+        .unwrap();
+    let (samples, got_seq) = load_dataset(&local).unwrap();
+    assert_eq!(got_seq, seq);
+    assert_eq!(samples.len(), 250);
+    // every sample is CLS-prefixed and within vocabulary
+    for s in &samples {
+        assert_eq!(s.ids[0], special::CLS);
+        assert!(s.len >= 2);
+        assert!(s.ids.iter().all(|&id| (id as usize) < 350));
+    }
+
+    // two-rank epoch: loaders deliver the whole plan, masked correctly
+    let ds = Arc::new(samples);
+    let plan = EpochPlan::build(ds.len(), 2, 0, 42);
+    let masker = Masker::new(0.15, 350);
+    let mut total_masked = 0usize;
+    let mut total_real = 0usize;
+    for rank in 0..2 {
+        let mut pool = LoaderPool::spawn(
+            ds.clone(), seq, &plan.per_rank[rank], 5, masker.clone(), 42,
+            0, 2, 2, 0,
+        )
+        .unwrap();
+        let mut steps = 0;
+        while let Some(b) = pool.next_batch() {
+            steps += 1;
+            for (i, &l) in b.labels.iter().enumerate() {
+                if l >= 0 {
+                    total_masked += 1;
+                    // a masked position must be a real token position
+                    assert_eq!(b.attn_mask[i], 1.0);
+                }
+                if b.attn_mask[i] > 0.0 {
+                    total_real += 1;
+                }
+            }
+        }
+        assert_eq!(steps, plan.per_rank[rank].len() / 5);
+    }
+    let rate = total_masked as f64 / total_real as f64;
+    assert!((0.08..0.22).contains(&rate), "mask rate {rate}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn preprocessing_is_deterministic_across_runs() {
+    let d1 = workdir("det1");
+    let d2 = workdir("det2");
+    let s1 = preprocess_corpus(&cfg(120), 32, 7, &d1).unwrap();
+    let s2 = preprocess_corpus(&cfg(120), 32, 7, &d2).unwrap();
+    assert_eq!(s1.raw_bytes, s2.raw_bytes);
+    assert_eq!(s1.tokenized_bytes, s2.tokenized_bytes);
+    let b1 = std::fs::read(&s1.shards[0]).unwrap();
+    let b2 = std::fs::read(&s2.shards[0]).unwrap();
+    assert_eq!(b1, b2, "shard bytes must be bit-identical");
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+#[test]
+fn different_seed_changes_the_corpus() {
+    let d1 = workdir("seed1");
+    let d2 = workdir("seed2");
+    let s1 = preprocess_corpus(&cfg(60), 32, 1, &d1).unwrap();
+    let s2 = preprocess_corpus(&cfg(60), 32, 2, &d2).unwrap();
+    let b1 = std::fs::read(&s1.shards[0]).unwrap();
+    let b2 = std::fs::read(&s2.shards[0]).unwrap();
+    assert_ne!(b1, b2);
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}
+
+#[test]
+fn epoch_masks_differ_but_are_reproducible() {
+    let dir = workdir("masks");
+    let stats = preprocess_corpus(&cfg(100), 32, 5, &dir).unwrap();
+    let (samples, seq) = load_dataset(&stats.shards).unwrap();
+    let ds = Arc::new(samples);
+    let masker = Masker::new(0.15, 350);
+    let order: Vec<u32> = (0..100).collect();
+
+    let collect = |epoch: u64| -> Vec<i32> {
+        let mut pool = LoaderPool::spawn(ds.clone(), seq, &order, 10,
+                                         masker.clone(), 5, epoch, 3, 2, 0)
+            .unwrap();
+        let mut all = Vec::new();
+        while let Some(b) = pool.next_batch() {
+            all.extend(b.input_ids);
+        }
+        all
+    };
+    let e0a = collect(0);
+    let e0b = collect(0);
+    let e1 = collect(1);
+    assert_eq!(e0a, e0b, "same epoch must reproduce exactly");
+    assert_ne!(e0a, e1, "different epochs must mask differently");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

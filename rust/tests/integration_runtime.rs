@@ -1,0 +1,140 @@
+//! Integration: the AOT bridge. Loads the real HLO artifacts produced
+//! by `make artifacts`, compiles them on the PJRT CPU client and checks
+//! the numerics end to end (python lowered it, rust must reproduce
+//! training-math behaviour: sane initial loss, finite gradients, loss
+//! decreasing under plain SGD).
+
+use txgain::runtime::{Engine, HostParams, Manifest};
+use txgain::util::Rng;
+
+fn require_artifacts() -> Manifest {
+    let dir = Manifest::default_dir();
+    Manifest::load(&dir).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    )
+}
+
+/// Deterministic synthetic batch with ~15 % masked positions.
+fn batch(meta: &txgain::runtime::VariantMeta, seed: u64)
+    -> (Vec<i32>, Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let n = meta.batch * meta.seq;
+    let mut ids = Vec::with_capacity(n);
+    let mut mask = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let pos = i % meta.seq;
+        let real = pos < meta.seq - 4; // padded tail
+        let id = 4 + rng.gen_range((meta.vocab - 4) as u64) as i32;
+        mask.push(if real { 1.0 } else { 0.0 });
+        if real && rng.next_f64() < 0.15 {
+            ids.push(3); // [MASK]
+            labels.push(id);
+        } else {
+            ids.push(if real { id } else { 0 });
+            labels.push(-100);
+        }
+    }
+    (ids, mask, labels)
+}
+
+#[test]
+fn tiny_initial_loss_is_near_uniform() {
+    let m = require_artifacts();
+    let meta = m.variant("tiny").unwrap().clone();
+    let engine = Engine::load(&m.dir, "tiny").unwrap();
+    let params = HostParams::init(&meta, 42);
+    let (ids, mask, labels) = batch(&meta, 7);
+    let out = engine.execute_step(&params, &ids, &mask, &labels).unwrap();
+    let uniform = (meta.vocab as f32).ln();
+    assert!(
+        (out.loss - uniform).abs() < 1.0,
+        "initial loss {} should be near ln(vocab)={}",
+        out.loss,
+        uniform
+    );
+    assert_eq!(out.grads.len(), meta.grad_len);
+    assert!(out.grads.iter().all(|g| g.is_finite()));
+    let nonzero = out.grads.iter().filter(|g| **g != 0.0).count();
+    assert!(nonzero > meta.grad_len / 2, "grads mostly zero: {nonzero}");
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let m = require_artifacts();
+    let meta = m.variant("tiny").unwrap().clone();
+    let engine = Engine::load(&m.dir, "tiny").unwrap();
+    let params = HostParams::init(&meta, 1);
+    let (ids, mask, labels) = batch(&meta, 2);
+    let a = engine.execute_step(&params, &ids, &mask, &labels).unwrap();
+    let b = engine.execute_step(&params, &ids, &mask, &labels).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.grads, b.grads);
+}
+
+#[test]
+fn loss_decreases_under_sgd_through_runtime() {
+    // The core correctness signal for the whole AOT path: flat-gradient
+    // slicing must line up with the parameter layout, or this diverges
+    let m = require_artifacts();
+    let meta = m.variant("tiny").unwrap().clone();
+    let engine = Engine::load(&m.dir, "tiny").unwrap();
+    let mut params = HostParams::init(&meta, 3);
+    let (ids, mask, labels) = batch(&meta, 11);
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let out =
+            engine.execute_step(&params, &ids, &mask, &labels).unwrap();
+        losses.push(out.loss);
+        params.zip_grads(&meta, &out.grads, |p, g| {
+            for (pi, gi) in p.iter_mut().zip(g) {
+                *pi -= 0.5 * gi;
+            }
+        });
+    }
+    assert!(
+        losses.last().unwrap() + 0.1 < losses[0],
+        "no learning through the runtime: {losses:?}"
+    );
+}
+
+#[test]
+fn all_cpu_variants_compile_and_execute() {
+    let m = require_artifacts();
+    for variant in ["tiny", "small"] {
+        let meta = m.variant(variant).unwrap().clone();
+        let engine = Engine::load(&m.dir, variant).unwrap();
+        let params = HostParams::init(&meta, 5);
+        let (ids, mask, labels) = batch(&meta, 9);
+        let out =
+            engine.execute_step(&params, &ids, &mask, &labels).unwrap();
+        assert!(out.loss.is_finite(), "{variant}: loss {}", out.loss);
+    }
+}
+
+#[test]
+fn rejects_wrong_batch_buffers() {
+    let m = require_artifacts();
+    let meta = m.variant("tiny").unwrap().clone();
+    let engine = Engine::load(&m.dir, "tiny").unwrap();
+    let params = HostParams::init(&meta, 5);
+    let bad = vec![0i32; 3];
+    assert!(engine
+        .execute_step(&params, &bad, &[0.0; 3], &[0; 3])
+        .is_err());
+}
+
+#[test]
+fn fully_masked_labels_give_zero_loss_and_grads() {
+    let m = require_artifacts();
+    let meta = m.variant("tiny").unwrap().clone();
+    let engine = Engine::load(&m.dir, "tiny").unwrap();
+    let params = HostParams::init(&meta, 5);
+    let n = meta.batch * meta.seq;
+    let ids = vec![4i32; n];
+    let mask = vec![1.0f32; n];
+    let labels = vec![-100i32; n]; // nothing to predict
+    let out = engine.execute_step(&params, &ids, &mask, &labels).unwrap();
+    assert_eq!(out.loss, 0.0);
+    assert!(out.grads.iter().all(|&g| g == 0.0));
+}

@@ -1,0 +1,134 @@
+//! Integration: the full training stack — coordinator pipeline, the
+//! multi-rank DP trainer over PJRT, real collectives, optimizer,
+//! checkpoints. Uses the tiny variant to keep compile time small.
+
+use txgain::config::{presets, Config};
+use txgain::coordinator;
+use txgain::runtime::Manifest;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = Manifest::default_dir();
+    Manifest::load(&dir).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    );
+    dir
+}
+
+fn workdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("txgain-it-train-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tiny_cfg(steps: usize) -> Config {
+    let mut cfg = presets::quickstart();
+    cfg.training.steps = steps;
+    cfg.data.corpus_samples = 512;
+    cfg
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let dir = workdir("loss");
+    let mut cfg = tiny_cfg(50);
+    cfg.training.lr = 1e-3; // tiny model: push hard so 50 steps show it
+    cfg.training.warmup_steps = 5; // don't spend the test warming up
+    let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+    let r = &out.report;
+    assert_eq!(r.records.len(), 50);
+    let first = r.first_loss().unwrap();
+    let tail = r.tail_loss(5).unwrap();
+    assert!(
+        tail < first - 0.5,
+        "loss did not fall: {first} -> {tail}"
+    );
+    // report files exist and parse
+    let json = std::fs::read_to_string(dir.join("report.json")).unwrap();
+    let v = txgain::util::json::Value::parse(&json).unwrap();
+    assert_eq!(v.req("steps").unwrap().as_usize().unwrap(), 50);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn ring_and_tree_allreduce_agree_exactly() {
+    // the trajectory is a pure function of the config modulo the
+    // collective algorithm — both must produce identical losses
+    let run_with = |algo: &str| -> Vec<f32> {
+        let dir = workdir(&format!("algo-{algo}"));
+        let mut cfg = tiny_cfg(6);
+        cfg.training.allreduce = algo.into();
+        let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+        let losses =
+            out.report.records.iter().map(|r| r.loss).collect();
+        std::fs::remove_dir_all(&dir).unwrap();
+        losses
+    };
+    let ring = run_with("ring");
+    let tree = run_with("tree");
+    // identical schedules & data; fp reduction order differs between
+    // algorithms, so allow tiny drift but require near-exact agreement
+    assert_eq!(ring.len(), tree.len());
+    for (a, b) in ring.iter().zip(&tree) {
+        assert!((a - b).abs() < 5e-4, "ring {a} vs tree {b}");
+    }
+}
+
+#[test]
+fn world_size_one_also_trains() {
+    let dir = workdir("solo");
+    let mut cfg = tiny_cfg(5);
+    cfg.cluster.nodes = 1;
+    let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+    assert_eq!(out.report.world, 1);
+    assert_eq!(out.report.records.len(), 5);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn checkpoints_are_written_and_loadable() {
+    let dir = workdir("ckpt");
+    let mut cfg = tiny_cfg(6);
+    cfg.training.checkpoint_every = 3;
+    coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+    let ck3 = dir.join("checkpoints/step-000003.ckpt");
+    let ck6 = dir.join("checkpoints/step-000006.ckpt");
+    assert!(ck3.exists() && ck6.exists());
+    let ck = txgain::train::checkpoint::load(&ck6).unwrap();
+    assert_eq!(ck.step, 6);
+    assert_eq!(ck.params.total_len() as u64,
+               presets::model_tiny().param_count());
+    assert!(ck.m.iter().any(|&x| x != 0.0), "optimizer state empty");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn network_direct_staging_also_works() {
+    // functional equivalence of the two staging policies (perf differs,
+    // numerics must not)
+    let run_with = |policy| -> Vec<f32> {
+        let dir = workdir(&format!("stag-{policy:?}"));
+        let mut cfg = tiny_cfg(4);
+        cfg.data.staging = policy;
+        let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+        let l = out.report.records.iter().map(|r| r.loss).collect();
+        std::fs::remove_dir_all(&dir).unwrap();
+        l
+    };
+    use txgain::config::StagingPolicy as SP;
+    assert_eq!(run_with(SP::LocalCopy), run_with(SP::NetworkDirect));
+}
+
+#[test]
+fn loader_count_does_not_change_numerics() {
+    let run_with = |loaders: usize| -> Vec<f32> {
+        let dir = workdir(&format!("ld-{loaders}"));
+        let mut cfg = tiny_cfg(4);
+        cfg.data.loaders_per_gpu = loaders;
+        let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+        let l = out.report.records.iter().map(|r| r.loss).collect();
+        std::fs::remove_dir_all(&dir).unwrap();
+        l
+    };
+    assert_eq!(run_with(1), run_with(4));
+}
