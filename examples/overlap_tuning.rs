@@ -1,0 +1,85 @@
+//! Rec. 4 deep-dive: gradient-bucket overlap tuning. Sweeps the
+//! `training.bucket_mb` knob (and the `overlap_comm` toggle) through
+//! the calibrated simulator and shows how bucketed all-reduce hides
+//! the communication the blocking baseline leaves exposed — the
+//! mechanism that keeps the paper's Fig. 1 scaling "roughly linear" at
+//! 128 nodes.
+//!
+//! ```sh
+//! cargo run --release --example overlap_tuning
+//! ```
+
+use txgain::config::presets;
+use txgain::perfmodel::{simulate, sweep_nodes};
+use txgain::report::Table;
+use txgain::util::csv::CsvWriter;
+
+fn main() -> txgain::Result<()> {
+    // 1. overlap on/off across the Fig. 1 node sweep
+    let nodes = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let mut cfg = presets::paper_full_scale();
+    let mut t = Table::new(
+        "bert-120m — exposed all-reduce: blocking vs bucketed overlap",
+        vec!["nodes", "raw comm(ms)", "blocking exposed(ms)",
+             "overlap exposed(ms)", "buckets", "step saved(ms)"],
+    );
+    cfg.training.overlap_comm = false;
+    let blocking = sweep_nodes(&cfg, &nodes);
+    cfg.training.overlap_comm = true;
+    let overlap = sweep_nodes(&cfg, &nodes);
+    for (b, o) in blocking.iter().zip(&overlap) {
+        t.row(&[
+            b.nodes.to_string(),
+            format!("{:.1}", b.comm_secs * 1e3),
+            format!("{:.1}", b.comm_exposed_secs * 1e3),
+            format!("{:.1}", o.comm_exposed_secs * 1e3),
+            o.comm_buckets.to_string(),
+            format!("{:.1}", (b.step_secs - o.step_secs) * 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. bucket-size sweep at 128 nodes, all four paper model sizes
+    let mut t = Table::new(
+        "exposed all-reduce (ms) @128 nodes vs bucket size",
+        vec!["model", "0.5MB", "5MB", "25MB", "50MB", "100MB",
+             "one-bucket"],
+    );
+    let sizes = [0.5f64, 5.0, 25.0, 50.0, 100.0, 1e6];
+    let mut csv = CsvWriter::new(vec![
+        "model", "bucket_mb", "comm_exposed_secs", "step_secs",
+    ]);
+    for model in presets::paper_models() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.training.batch_per_gpu =
+            presets::artifact_batch(&model.variant);
+        cfg.model = model.clone();
+        cfg.training.overlap_comm = true;
+        let mut cells = vec![model.variant.clone()];
+        for mb in sizes {
+            cfg.training.bucket_mb = mb;
+            let r = simulate(&cfg);
+            cells.push(format!("{:.1}", r.comm_exposed_secs * 1e3));
+            csv.row(&[
+                model.variant.clone(),
+                format!("{mb}"),
+                format!("{:.6}", r.comm_exposed_secs),
+                format!("{:.6}", r.step_secs),
+            ]);
+        }
+        t.row(&cells);
+    }
+    println!("{}", t.render());
+    println!(
+        "tuning guidance: ~25 MB buckets (the DDP default) launch the \
+         first\nall-reduce early in backward without paying the \
+         per-message latency\nthat drowns sub-MB buckets at 128 nodes; \
+         a single bucket can only\noverlap from the final layer and \
+         leaves the whole sync exposed.\n"
+    );
+
+    let path = std::path::PathBuf::from("runs/overlap_tuning.csv");
+    csv.write_to(&path)?;
+    println!("bucket sweep written to {}", path.display());
+    Ok(())
+}

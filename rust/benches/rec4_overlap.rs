@@ -1,0 +1,135 @@
+//! BENCH REC4-OVERLAP: the gradient-bucketing ablation behind the
+//! `training.overlap_comm` / `training.bucket_mb` knobs.
+//!
+//! Part 1 sweeps bucket size through the simulator's overlap pricing
+//! and reports the exposed all-reduce time against the blocking
+//! baseline (the paper's Fig. 1 step-anatomy argument: exposed comm is
+//! what kills scaling efficiency at high node counts). Part 2 times the
+//! real in-process bucketed all-reduce against the monolithic one.
+//!
+//! Run: `cargo bench --bench rec4_overlap`
+
+use txgain::collectives::{allreduce, bucketed_allreduce, Algorithm,
+                          BucketPlan, CostModel, World};
+use txgain::config::{presets, ClusterConfig};
+use txgain::perfmodel::simulate;
+use txgain::report::Table;
+use txgain::util::bench::{bench, black_box, section};
+
+fn main() {
+    section("simulated: exposed comm vs bucket size (ring, bf16 grads)");
+    let cost = CostModel::from_cluster(&ClusterConfig::tx_gain(128));
+    let mut t = Table::new(
+        "exposed all-reduce (ms); blocking = no overlap",
+        vec!["model", "nodes", "blocking", "1MB", "5MB", "25MB", "100MB",
+             "one-bucket"],
+    );
+    for (name, params, backward_ms) in [
+        ("bert-120m", 109_076_400u64, 250.0f64),
+        ("bert-350m", 334_616_496, 369.0),
+    ] {
+        let bytes = CostModel::gradient_bytes(params);
+        let bwd = backward_ms * 1e-3;
+        for nodes in [8usize, 32, 128] {
+            let blocking = cost.ring_allreduce(nodes, bytes);
+            // bucket_mb counts f32 buffer bytes; the wire carries half
+            // (bf16) — same mapping simtrain uses for the config knob
+            let exposed = |mb: f64| -> f64 {
+                cost.overlapped_allreduce(Algorithm::Ring, nodes, bytes,
+                                          mb * 1e6 / 2.0, bwd)
+                    .exposed
+            };
+            t.row(&[
+                name.to_string(),
+                nodes.to_string(),
+                format!("{:.1}", blocking * 1e3),
+                format!("{:.1}", exposed(1.0) * 1e3),
+                format!("{:.1}", exposed(5.0) * 1e3),
+                format!("{:.1}", exposed(25.0) * 1e3),
+                format!("{:.1}", exposed(100.0) * 1e3),
+                format!("{:.1}", exposed(4.0 * bytes / 1e6) * 1e3),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("  25 MB (the DDP default) starts the pipeline early \
+              without drowning in per-message latency.\n");
+
+    section("simulated: full-step effect at 128 nodes (bert-120m)");
+    let mut cfg = presets::paper_full_scale();
+    cfg.training.overlap_comm = false;
+    let off = simulate(&cfg);
+    cfg.training.overlap_comm = true;
+    let on = simulate(&cfg);
+    println!(
+        "  blocking : step {:>7.1} ms, comm exposed {:>6.1} ms, \
+         gpu-util {:.3}",
+        off.step_secs * 1e3, off.comm_exposed_secs * 1e3, off.gpu_util
+    );
+    println!(
+        "  overlap  : step {:>7.1} ms, comm exposed {:>6.1} ms, \
+         gpu-util {:.3}  ({} buckets)",
+        on.step_secs * 1e3, on.comm_exposed_secs * 1e3, on.gpu_util,
+        on.comm_buckets
+    );
+
+    section("real in-process: bucketed vs monolithic all-reduce");
+    let world = 4usize;
+    let len = 8_500_000usize; // e2e-scale gradient
+    let run = |bucket_elems: Option<usize>| -> f64 {
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = World::new(world)
+                .into_comms()
+                .into_iter()
+                .map(|mut c| {
+                    s.spawn(move || {
+                        let mut buf = vec![1.0f32; len];
+                        match bucket_elems {
+                            Some(e) => {
+                                let plan =
+                                    BucketPlan::from_elems(len, e);
+                                bucketed_allreduce(Algorithm::Ring,
+                                                   &mut c, &mut buf,
+                                                   &plan)
+                                    .unwrap();
+                            }
+                            None => allreduce(Algorithm::Ring, &mut c,
+                                              &mut buf)
+                                .unwrap(),
+                        }
+                        black_box(buf[0]);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        t0.elapsed().as_secs_f64()
+    };
+    let mut t = Table::new(
+        "wall time per all-reduce, world=4, 8.5M floats (mean of 5)",
+        vec!["buckets", "time(ms)"],
+    );
+    for (label, elems) in [
+        ("monolithic", None),
+        ("2 x ~17MB", Some(len / 2 + 1)),
+        ("6 x ~6MB", Some(len / 6 + 1)),
+        ("14 x ~2.5MB", Some(len / 14 + 1)),
+    ] {
+        let avg = (0..5).map(|_| run(elems)).sum::<f64>() / 5.0;
+        t.row(&[label.to_string(), format!("{:.2}", avg * 1e3)]);
+    }
+    println!("{}", t.render());
+    println!("  (in-process, comm is never truly concurrent with \
+              compute here — the win shows up in the simulator and on \
+              a real network; this verifies the bucketed path costs \
+              little extra)");
+
+    section("hot path");
+    bench("bucketed ring all-reduce, world=4, 8.5M floats, 25MB", 2000,
+          || {
+              black_box(run(Some(6_250_000)));
+          });
+}

@@ -1,0 +1,424 @@
+//! Gradient bucketing for compute/communication overlap (the mechanism
+//! behind PyTorch DDP and the paper's recommendation 4).
+//!
+//! The flat gradient vector is partitioned into fixed-size buckets
+//! (default ~25 MB). Backward produces gradients in *reverse layer
+//! order* — the last layers' gradients are final first — so a bucket at
+//! the tail of the flat vector becomes ready before one at the head.
+//! Launching each bucket's all-reduce as soon as it is ready hides the
+//! communication under the remaining backward compute instead of paying
+//! for it serially after the step.
+//!
+//! [`BucketPlan`] owns the partition; [`BucketManager`] tracks which
+//! buckets are ready as backward progresses; [`bucketed_allreduce`]
+//! drives the per-bucket collectives in ready order over a [`Comm`].
+//!
+//! Numerics note: each bucket is reduced with the same ring/tree
+//! algorithm as the monolithic path, but the chunk rotation inside the
+//! collective depends on the buffer length, so per-element accumulation
+//! *order* can differ from the monolithic all-reduce. Sums of values
+//! that are exact in f32 (integers, dyadic rationals within range) are
+//! bit-identical either way — asserted in the tests below; arbitrary
+//! floats agree to rounding, exactly like NCCL bucketing under DDP. The
+//! DDP replica-consistency invariant is unaffected: every rank runs the
+//! identical schedule, so replicas stay bit-identical to each other.
+
+use anyhow::ensure;
+
+use super::comm::Comm;
+use super::{allreduce, Algorithm};
+use crate::Result;
+
+/// Default bucket size, MB — matches PyTorch DDP's `bucket_cap_mb`.
+pub const DEFAULT_BUCKET_MB: f64 = 25.0;
+
+/// A partition of a flat `len`-element gradient vector into contiguous
+/// buckets of at most `bucket_elems` elements.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketPlan {
+    len: usize,
+    bucket_elems: usize,
+    /// Half-open `(start, end)` spans in flat-vector order (layer 0
+    /// first). Ready order is the reverse of this.
+    spans: Vec<(usize, usize)>,
+}
+
+impl BucketPlan {
+    /// Partition `len` f32 gradients into buckets of ~`bucket_mb` MB.
+    /// A non-positive or non-finite `bucket_mb` yields one bucket (the
+    /// monolithic all-reduce degenerate case).
+    pub fn new(len: usize, bucket_mb: f64) -> BucketPlan {
+        Self::from_elems(len, Self::elems_for(len, bucket_mb))
+    }
+
+    /// f32 elements per bucket for a `bucket_mb` knob — the single
+    /// place this arithmetic lives, so the simulator's pricing and the
+    /// real plan can never disagree on the partition (float truncation
+    /// here is authoritative).
+    pub fn elems_for(len: usize, bucket_mb: f64) -> usize {
+        if bucket_mb.is_finite() && bucket_mb > 0.0 {
+            ((bucket_mb * 1e6 / 4.0) as usize).max(1)
+        } else {
+            len.max(1)
+        }
+    }
+
+    /// Partition `len` gradients into buckets of `bucket_elems` each.
+    /// Full-size buckets are aligned to the *tail* of the flat vector,
+    /// so the leftover (undersized) bucket holds the first layers —
+    /// the last to become ready. This matches DDP, which fills buckets
+    /// in reverse parameter order, and keeps the always-exposed final
+    /// bucket the small one (the cost model prices the same schedule).
+    pub fn from_elems(len: usize, bucket_elems: usize) -> BucketPlan {
+        let bucket_elems = bucket_elems.max(1);
+        let mut spans = Vec::new();
+        let rem = len % bucket_elems;
+        let mut start = 0usize;
+        if rem > 0 {
+            spans.push((0, rem));
+            start = rem;
+        }
+        while start < len {
+            spans.push((start, start + bucket_elems));
+            start += bucket_elems;
+        }
+        BucketPlan { len, bucket_elems, spans }
+    }
+
+    /// Total gradient elements covered by the plan.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn bucket_elems(&self) -> usize {
+        self.bucket_elems
+    }
+
+    /// `(start, end)` span of bucket `i` in flat-vector order.
+    pub fn span(&self, i: usize) -> (usize, usize) {
+        self.spans[i]
+    }
+
+    /// Bucket indices in the order backward makes them ready: reverse
+    /// layer order, i.e. the tail bucket of the flat vector first.
+    pub fn ready_order(&self) -> impl Iterator<Item = usize> {
+        (0..self.spans.len()).rev()
+    }
+}
+
+/// Tracks bucket readiness as backward compute retires layers, and
+/// hands out ready buckets in launch order. `bucketed_allreduce`
+/// launches synchronously and does not need this bookkeeping; the
+/// manager is the protocol for a transport that can genuinely overlap
+/// (ROADMAP: async/multi-backend `Comm`) — mark buckets ready
+/// tail-first as backward progresses, drain the queue between slices
+/// of remaining backward work.
+#[derive(Debug)]
+pub struct BucketManager {
+    plan: BucketPlan,
+    /// Next bucket to be marked ready (counts down the flat order).
+    next_ready: usize,
+    /// Ready but not yet launched, FIFO.
+    queue: std::collections::VecDeque<usize>,
+    /// Buckets whose all-reduce has been launched (drained).
+    launched: usize,
+}
+
+impl BucketManager {
+    pub fn new(plan: BucketPlan) -> BucketManager {
+        let next_ready = plan.n_buckets();
+        BucketManager {
+            plan,
+            next_ready,
+            queue: std::collections::VecDeque::new(),
+            launched: 0,
+        }
+    }
+
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    /// Mark the next bucket (reverse layer order) ready. Returns the
+    /// bucket index, or `None` once all buckets are ready.
+    pub fn mark_next_ready(&mut self) -> Option<usize> {
+        if self.next_ready == 0 {
+            return None;
+        }
+        self.next_ready -= 1;
+        self.queue.push_back(self.next_ready);
+        Some(self.next_ready)
+    }
+
+    /// Mark every remaining bucket ready (backward finished).
+    pub fn mark_all_ready(&mut self) {
+        while self.mark_next_ready().is_some() {}
+    }
+
+    /// Pop the next ready-but-unlaunched bucket, FIFO.
+    pub fn next_launch(&mut self) -> Option<usize> {
+        let i = self.queue.pop_front()?;
+        self.launched += 1;
+        Some(i)
+    }
+
+    /// True once every bucket has been marked ready and launched.
+    pub fn done(&self) -> bool {
+        self.next_ready == 0 && self.queue.is_empty()
+    }
+
+    pub fn launched(&self) -> usize {
+        self.launched
+    }
+}
+
+/// In-place sum all-reduce of `buf`, one collective per bucket in ready
+/// (reverse-layer) order. Equivalent to `allreduce` over the whole
+/// buffer, but each bucket can be launched as soon as backward has
+/// produced it — the real-mode counterpart of the simulator's overlap
+/// pricing. Tag reuse across buckets is safe: the transport delivers
+/// per-(source, tag) messages FIFO and every rank launches buckets in
+/// the same order.
+pub fn bucketed_allreduce(algo: Algorithm, comm: &mut Comm,
+                          buf: &mut [f32], plan: &BucketPlan)
+    -> Result<()> {
+    ensure!(plan.len() == buf.len(),
+            "bucket plan covers {} elements but gradient has {}",
+            plan.len(), buf.len());
+    for i in plan.ready_order() {
+        let (a, b) = plan.span(i);
+        allreduce(algo, comm, &mut buf[a..b])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::World;
+    use crate::util::Rng;
+
+    #[test]
+    fn plan_covers_len_with_disjoint_spans() {
+        for (len, elems) in
+            [(100usize, 7usize), (100, 100), (100, 1000), (1, 1), (7, 3)]
+        {
+            let p = BucketPlan::from_elems(len, elems);
+            let mut covered = 0usize;
+            let mut prev_end = 0usize;
+            for i in 0..p.n_buckets() {
+                let (a, b) = p.span(i);
+                assert_eq!(a, prev_end, "gap before bucket {i}");
+                assert!(b > a, "empty bucket {i}");
+                assert!(b - a <= elems.max(1));
+                covered += b - a;
+                prev_end = b;
+            }
+            assert_eq!(covered, len);
+            assert_eq!(prev_end, len);
+        }
+    }
+
+    #[test]
+    fn empty_plan_has_no_buckets() {
+        let p = BucketPlan::from_elems(0, 10);
+        assert!(p.is_empty());
+        assert_eq!(p.n_buckets(), 0);
+    }
+
+    #[test]
+    fn default_bucket_is_25mb_of_f32() {
+        let p = BucketPlan::new(10_000_000, DEFAULT_BUCKET_MB);
+        assert_eq!(p.bucket_elems(), 6_250_000); // 25e6 bytes / 4
+        assert_eq!(p.n_buckets(), 2);
+    }
+
+    #[test]
+    fn nonpositive_bucket_mb_degenerates_to_one_bucket() {
+        for mb in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let p = BucketPlan::new(1000, mb);
+            assert_eq!(p.n_buckets(), 1, "bucket_mb={mb}");
+            assert_eq!(p.span(0), (0, 1000));
+        }
+    }
+
+    #[test]
+    fn ready_order_is_reverse_layer_order() {
+        let p = BucketPlan::from_elems(10, 3); // 1 + 3 + 3 + 3
+        let order: Vec<usize> = p.ready_order().collect();
+        assert_eq!(order, vec![3, 2, 1, 0]);
+        // the first-ready bucket is a full bucket at the tail of the
+        // flat vector ...
+        assert_eq!(p.span(order[0]), (7, 10));
+        // ... and the leftover undersized bucket holds the first
+        // layers, launched last (the always-exposed DDP tail)
+        assert_eq!(p.span(order[3]), (0, 1));
+    }
+
+    #[test]
+    fn remainder_bucket_sits_at_the_head() {
+        // 218 elems in buckets of 25: one 18-elem leftover + eight full
+        let p = BucketPlan::from_elems(218, 25);
+        assert_eq!(p.n_buckets(), 9);
+        assert_eq!(p.span(0), (0, 18));
+        for i in 1..9 {
+            let (a, b) = p.span(i);
+            assert_eq!(b - a, 25, "bucket {i}");
+        }
+        // exact division: no leftover bucket at all
+        let p = BucketPlan::from_elems(200, 25);
+        assert_eq!(p.n_buckets(), 8);
+        assert_eq!(p.span(0), (0, 25));
+    }
+
+    #[test]
+    fn manager_marks_tail_first_and_drains_fifo() {
+        let mut m = BucketManager::new(BucketPlan::from_elems(10, 4));
+        assert_eq!(m.plan().n_buckets(), 3);
+        assert_eq!(m.mark_next_ready(), Some(2));
+        assert_eq!(m.mark_next_ready(), Some(1));
+        assert_eq!(m.next_launch(), Some(2));
+        assert!(!m.done());
+        assert_eq!(m.mark_next_ready(), Some(0));
+        assert_eq!(m.mark_next_ready(), None);
+        assert_eq!(m.next_launch(), Some(1));
+        assert_eq!(m.next_launch(), Some(0));
+        assert_eq!(m.next_launch(), None);
+        assert!(m.done());
+        assert_eq!(m.launched(), 3);
+    }
+
+    #[test]
+    fn plan_length_mismatch_is_an_error() {
+        let mut comms = World::new(1).into_comms();
+        let mut buf = vec![1.0f32; 8];
+        let plan = BucketPlan::from_elems(9, 4);
+        assert!(bucketed_allreduce(Algorithm::Ring, &mut comms[0],
+                                   &mut buf, &plan)
+            .is_err());
+    }
+
+    /// Run `bucketed_allreduce` on every rank of a fresh world.
+    fn run_bucketed(algo: Algorithm, inputs: &[Vec<f32>],
+                    bucket_elems: usize) -> Vec<Vec<f32>> {
+        let world = inputs.len();
+        let len = inputs[0].len();
+        let plan = BucketPlan::from_elems(len, bucket_elems);
+        std::thread::scope(|s| {
+            World::new(world)
+                .into_comms()
+                .into_iter()
+                .zip(inputs.to_vec())
+                .map(|(mut c, mut buf)| {
+                    let plan = plan.clone();
+                    s.spawn(move || {
+                        bucketed_allreduce(algo, &mut c, &mut buf, &plan)
+                            .unwrap();
+                        buf
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        })
+    }
+
+    fn run_monolithic(algo: Algorithm, inputs: &[Vec<f32>])
+        -> Vec<Vec<f32>> {
+        let world = inputs.len();
+        std::thread::scope(|s| {
+            World::new(world)
+                .into_comms()
+                .into_iter()
+                .zip(inputs.to_vec())
+                .map(|(mut c, mut buf)| {
+                    s.spawn(move || {
+                        allreduce(algo, &mut c, &mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        })
+    }
+
+    /// The acceptance property: bucketed all-reduce is bit-identical to
+    /// the monolithic all-reduce across ring/tree and random world and
+    /// bucket sizes. Inputs are integer-valued f32 (exact sums, so the
+    /// differing accumulation order cannot round differently).
+    #[test]
+    fn bucketed_matches_monolithic_bit_for_bit() {
+        let mut rng = Rng::new(0xB0C4E7);
+        for algo in [Algorithm::Ring, Algorithm::Tree] {
+            for _ in 0..10 {
+                let world = 1 + rng.gen_range(7) as usize;
+                let len = 1 + rng.gen_range(500) as usize;
+                let bucket = 1 + rng.gen_range(len as u64) as usize;
+                let inputs: Vec<Vec<f32>> = (0..world)
+                    .map(|r| {
+                        (0..len)
+                            .map(|i| ((r * 17 + i * 5) % 41) as f32 - 20.0)
+                            .collect()
+                    })
+                    .collect();
+                let bucketed = run_bucketed(algo, &inputs, bucket);
+                let mono = run_monolithic(algo, &inputs);
+                for (rb, rm) in bucketed.iter().zip(&mono) {
+                    for (a, b) in rb.iter().zip(rm) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{algo:?} world={world} len={len} \
+                             bucket={bucket}: {a} != {b}"
+                        );
+                    }
+                }
+                // and all replicas agree with each other (DDP invariant)
+                for r in &bucketed[1..] {
+                    assert_eq!(r, &bucketed[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_bucketed_is_identity() {
+        let inputs = vec![vec![1.5f32, -2.25, 3.0, 0.5]];
+        let out = run_bucketed(Algorithm::Ring, &inputs, 2);
+        assert_eq!(out[0], inputs[0]);
+    }
+
+    #[test]
+    fn random_floats_agree_to_rounding() {
+        // arbitrary floats: accumulation order differs, so allow f32
+        // rounding noise but nothing more
+        let mut rng = Rng::new(99);
+        let world = 4;
+        let len = 257;
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|_| {
+                (0..len)
+                    .map(|_| rng.next_f64() as f32 - 0.5)
+                    .collect()
+            })
+            .collect();
+        let bucketed = run_bucketed(Algorithm::Ring, &inputs, 50);
+        let mono = run_monolithic(Algorithm::Ring, &inputs);
+        for (rb, rm) in bucketed.iter().zip(&mono) {
+            for (a, b) in rb.iter().zip(rm) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+}

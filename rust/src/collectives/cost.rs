@@ -7,7 +7,27 @@
 //! This is the quantity behind the paper's recommendation 4: at bert-
 //! scale gradients and 25 GbE it stays small relative to compute.
 
+use super::Algorithm;
 use crate::config::ClusterConfig;
+
+/// Cap on modeled buckets: keeps the pricing loop bounded even for
+/// pathological tiny-but-valid bucket sizes (the real `BucketPlan` is
+/// likewise bounded, at one element per bucket). Past the cap the tail
+/// bucket absorbs the rest and is priced as one big all-reduce.
+pub const MAX_MODELED_BUCKETS: usize = 65_536;
+
+/// Result of pricing a bucketed all-reduce overlapped with backward.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapCost {
+    /// Sum of per-bucket all-reduce times (channel-busy seconds). With
+    /// many small buckets this exceeds the monolithic time by the extra
+    /// per-message latency — the bucket-size tradeoff.
+    pub comm_total: f64,
+    /// Communication left exposed past the end of backward — the only
+    /// part that lands on the step's critical path.
+    pub exposed: f64,
+    pub n_buckets: usize,
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -61,6 +81,65 @@ impl CostModel {
             + 2.0 * rounds * (self.alpha + bytes * self.beta_eth)
     }
 
+    /// All-reduce time for `bytes` across `nodes` under `algo`.
+    pub fn allreduce(&self, algo: Algorithm, nodes: usize, bytes: f64)
+        -> f64 {
+        match algo {
+            Algorithm::Ring => self.ring_allreduce(nodes, bytes),
+            Algorithm::Tree => self.tree_allreduce(nodes, bytes),
+        }
+    }
+
+    /// Price a bucketed all-reduce overlapped with a backward pass of
+    /// `backward_secs`.
+    ///
+    /// `bytes` of gradient are split into buckets of `bucket_bytes`
+    /// (last bucket takes the remainder; non-positive `bucket_bytes`
+    /// means one monolithic bucket). Backward retires layers at a
+    /// uniform rate in reverse order, so bucket `i` of `n` becomes
+    /// ready at `backward_secs · (i+1)/n`; the serial network channel
+    /// services ready buckets FIFO:
+    ///
+    /// ```text
+    /// start_i = max(ready_i, end_{i-1});  end_i = start_i + t(bucket_i)
+    /// exposed = max(0, end_{n-1} − backward_secs)
+    /// ```
+    ///
+    /// The last bucket is only ready when backward finishes, so its
+    /// all-reduce is always exposed — exactly the DDP tail. Smaller
+    /// buckets start the pipeline earlier but pay the per-message α
+    /// more often; the rec4 bench sweeps this tradeoff.
+    pub fn overlapped_allreduce(&self, algo: Algorithm, nodes: usize,
+                                bytes: f64, bucket_bytes: f64,
+                                backward_secs: f64) -> OverlapCost {
+        let n = if bucket_bytes > 0.0 && bucket_bytes < bytes {
+            ((bytes / bucket_bytes).ceil() as usize)
+                .clamp(1, MAX_MODELED_BUCKETS)
+        } else {
+            1
+        };
+        let mut total = 0.0;
+        let mut end = 0.0f64;
+        let mut remaining = bytes;
+        for i in 0..n {
+            let b = if i + 1 == n {
+                remaining
+            } else {
+                bucket_bytes.min(remaining)
+            };
+            remaining -= b;
+            let t = self.allreduce(algo, nodes, b);
+            total += t;
+            let ready = backward_secs * (i + 1) as f64 / n as f64;
+            end = ready.max(end) + t;
+        }
+        OverlapCost {
+            comm_total: total,
+            exposed: (end - backward_secs).max(0.0),
+            n_buckets: n,
+        }
+    }
+
     /// Bytes of gradient traffic per GPU for a model of `params`
     /// parameters synced in bf16 (the mixed-precision DDP compress hook
     /// the paper's Lightning setup uses; fp32 would double this).
@@ -108,6 +187,85 @@ mod tests {
         let m = model();
         let b = 4e3;
         assert!(m.tree_allreduce(128, b) < m.ring_allreduce(128, b));
+    }
+
+    #[test]
+    fn overlap_beats_blocking_allreduce_at_scale() {
+        // the tentpole property: with a generous backward window, the
+        // exposed comm is strictly below the monolithic all-reduce at
+        // every node count ≥ 8
+        let m = model();
+        let bytes = CostModel::gradient_bytes(120_000_000);
+        for nodes in [8usize, 16, 32, 64, 128] {
+            let mono = m.ring_allreduce(nodes, bytes);
+            let o = m.overlapped_allreduce(Algorithm::Ring, nodes, bytes,
+                                           25e6, 0.25);
+            assert!(o.exposed < mono,
+                    "nodes={nodes}: exposed {} !< mono {mono}",
+                    o.exposed);
+            assert!(o.n_buckets > 1);
+        }
+    }
+
+    #[test]
+    fn last_bucket_is_always_exposed() {
+        // even with an enormous backward window the tail bucket cannot
+        // be hidden: it is only ready when backward ends
+        let m = model();
+        let bytes = 200e6;
+        let o = m.overlapped_allreduce(Algorithm::Ring, 32, bytes, 25e6,
+                                       100.0);
+        let last = m.ring_allreduce(32, 25e6);
+        assert!(o.exposed >= last * 0.99, "{} vs {last}", o.exposed);
+        assert!(o.exposed <= last * 1.01, "{} vs {last}", o.exposed);
+    }
+
+    #[test]
+    fn zero_backward_window_exposes_everything() {
+        let m = model();
+        let bytes = 100e6;
+        let o = m.overlapped_allreduce(Algorithm::Ring, 16, bytes, 25e6,
+                                       0.0);
+        assert!((o.exposed - o.comm_total).abs() < 1e-12);
+        assert_eq!(o.n_buckets, 4);
+    }
+
+    #[test]
+    fn monolithic_bucket_degenerates_to_plain_allreduce() {
+        let m = model();
+        let bytes = 100e6;
+        for bb in [0.0, -1.0, 200e6] {
+            let o = m.overlapped_allreduce(Algorithm::Tree, 16, bytes, bb,
+                                           0.0);
+            assert_eq!(o.n_buckets, 1);
+            assert!((o.comm_total - m.tree_allreduce(16, bytes)).abs()
+                    < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pathological_bucket_size_is_clamped() {
+        // a tiny-but-valid bucket size must not turn the pricing loop
+        // into ~1e14 iterations; the cap absorbs the rest into the tail
+        let m = model();
+        let o = m.overlapped_allreduce(Algorithm::Ring, 16, 218e6, 1e-6,
+                                       0.25);
+        assert_eq!(o.n_buckets, MAX_MODELED_BUCKETS);
+        assert!(o.comm_total.is_finite());
+    }
+
+    #[test]
+    fn tiny_buckets_pay_latency() {
+        // comm_total grows as buckets shrink (α per message): the other
+        // side of the tuning tradeoff
+        let m = model();
+        let bytes = 200e6;
+        let few = m.overlapped_allreduce(Algorithm::Ring, 64, bytes, 50e6,
+                                         0.0);
+        let many = m.overlapped_allreduce(Algorithm::Ring, 64, bytes, 1e6,
+                                          0.0);
+        assert!(many.comm_total > few.comm_total,
+                "{} !> {}", many.comm_total, few.comm_total);
     }
 
     #[test]

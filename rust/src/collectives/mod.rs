@@ -8,14 +8,21 @@
 //!
 //! Simulated mode prices the same algorithms with [`cost`]'s
 //! hierarchical α-β model (NVLink intra-node, 25 GbE ring inter-node).
+//!
+//! [`bucket`] partitions the flat gradient into fixed-size buckets so
+//! each bucket's all-reduce can launch as soon as backward produces it
+//! (DDP-style compute/comm overlap, rec. 4); [`cost`] prices the same
+//! overlap for the simulator.
 
+pub mod bucket;
 pub mod comm;
 pub mod cost;
 pub mod ring;
 pub mod tree;
 
+pub use bucket::{bucketed_allreduce, BucketManager, BucketPlan};
 pub use comm::{Comm, World};
-pub use cost::CostModel;
+pub use cost::{CostModel, OverlapCost};
 
 use crate::Result;
 

@@ -107,7 +107,13 @@ pub fn quickstart() -> Config {
             ..ClusterConfig::tx_gain(2)
         },
         data: small_data(StagingPolicy::LocalCopy),
-        training: real_training(artifact_batch("tiny"), 30),
+        training: TrainingConfig {
+            // the tiny model's gradient is ~0.4 MB; a paper-scale 25 MB
+            // bucket would degenerate to one bucket, so shrink it to
+            // exercise the real bucketed-overlap path in smoke runs
+            bucket_mb: 0.05,
+            ..real_training(artifact_batch("tiny"), 30)
+        },
     }
 }
 

@@ -127,6 +127,11 @@ impl TrainingConfig {
             "unknown allreduce algorithm '{}'",
             self.allreduce
         );
+        ensure!(
+            self.bucket_mb.is_finite() && self.bucket_mb > 0.0,
+            "bucket_mb must be a positive finite size (got {})",
+            self.bucket_mb
+        );
         if self.mode == ExecMode::Real {
             ensure!(
                 self.batch_per_gpu > 0,
@@ -167,6 +172,15 @@ mod tests {
         let mut cfg = presets::quickstart();
         cfg.cluster.nodes = 100;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bucket_mb_must_be_positive_and_finite() {
+        for bad in [0.0, -25.0, f64::NAN, f64::INFINITY] {
+            let mut cfg = presets::quickstart();
+            cfg.training.bucket_mb = bad;
+            assert!(cfg.validate().is_err(), "bucket_mb={bad} accepted");
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -36,13 +36,20 @@ pub struct HostBatch {
     pub labels: Vec<i32>,
 }
 
-/// Loader metrics, updated live by the consumer.
+/// Loader metrics, updated live by the consumer. Counters are u64 even
+/// on 32-bit targets — `wait_ns` crosses 4·10⁹ (the 32-bit ceiling)
+/// after ~4 s of accumulated starvation.
 #[derive(Debug, Default)]
 pub struct LoaderStats {
     /// Total time `next_batch` spent blocked (starvation), nanoseconds.
-    pub wait_ns: AtomicUsize,
+    pub wait_ns: AtomicU64,
     /// Batches delivered.
-    pub delivered: AtomicUsize,
+    pub delivered: AtomicU64,
+    /// Samples at the tail of this rank's epoch order that did not fill
+    /// a whole batch and were not delivered (`order.len() % batch`).
+    /// Fixed at spawn; surfaced so callers can account for (or reshuffle
+    /// into the next epoch) what would otherwise vanish silently.
+    pub dropped_remainder: AtomicU64,
 }
 
 pub struct LoaderPool {
@@ -71,7 +78,9 @@ pub fn load_dataset(shards: &[PathBuf]) -> Result<(Vec<Sample>, usize)> {
 
 impl LoaderPool {
     /// Spawn `workers` loader threads producing `order.len()/batch`
-    /// batches for this rank and epoch.
+    /// batches for this rank and epoch. Trailing samples that do not
+    /// fill a whole batch are not delivered; their count is surfaced in
+    /// `stats.dropped_remainder` rather than disappearing silently.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(dataset: Arc<Vec<Sample>>, seq: usize, order: &[u32],
                  batch: usize, masker: Masker, seed: u64, epoch: u64,
@@ -79,6 +88,10 @@ impl LoaderPool {
         -> Result<LoaderPool> {
         ensure!(batch > 0 && workers > 0);
         let total_steps = order.len() / batch;
+        let stats = Arc::new(LoaderStats::default());
+        stats
+            .dropped_remainder
+            .store((order.len() % batch) as u64, Ordering::Relaxed);
         let (tx, rx) = sync_channel::<HostBatch>(prefetch.max(1));
         // static round-robin split of steps across workers: determinism
         // needs no work queue, the reorder buffer absorbs skew
@@ -110,7 +123,7 @@ impl LoaderPool {
             reorder: BTreeMap::new(),
             next_step: 0,
             total_steps,
-            stats: Arc::new(LoaderStats::default()),
+            stats,
             handles,
         })
     }
@@ -130,7 +143,7 @@ impl LoaderPool {
                 self.next_step += 1;
                 self.stats
                     .wait_ns
-                    .fetch_add(t0.elapsed().as_nanos() as usize,
+                    .fetch_add(t0.elapsed().as_nanos() as u64,
                                Ordering::Relaxed);
                 self.stats.delivered.fetch_add(1, Ordering::Relaxed);
                 return Some(b);
@@ -242,7 +255,7 @@ mod tests {
 
     #[test]
     fn more_workers_reduce_starvation() {
-        let wait = |workers: usize| -> usize {
+        let wait = |workers: usize| -> u64 {
             let mut p = pool(workers, 2000);
             while p.next_batch().is_some() {}
             p.stats.wait_ns.load(Ordering::Relaxed)
@@ -250,6 +263,31 @@ mod tests {
         let w1 = wait(1);
         let w8 = wait(8);
         assert!(w8 < w1 / 2, "w1={w1} w8={w8}");
+    }
+
+    #[test]
+    fn dropped_remainder_is_surfaced() {
+        // 64 samples at batch 8 divide evenly: nothing dropped
+        let p = pool(2, 0);
+        assert_eq!(
+            p.stats.dropped_remainder.load(Ordering::Relaxed), 0);
+
+        // 62 samples at batch 8: 7 full batches, 6 samples dropped
+        let ds = dataset(64, 32);
+        let order: Vec<u32> = (0..62).collect();
+        let mut p = LoaderPool::spawn(ds, 32, &order, 8,
+                                      Masker::new(0.15, 512), 7, 0, 2, 2,
+                                      0)
+            .unwrap();
+        assert_eq!(p.total_steps(), 7);
+        assert_eq!(
+            p.stats.dropped_remainder.load(Ordering::Relaxed), 6);
+        let mut n = 0;
+        while p.next_batch().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 7);
+        assert_eq!(p.stats.delivered.load(Ordering::Relaxed), 7);
     }
 
     #[test]

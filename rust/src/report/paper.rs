@@ -31,14 +31,17 @@ pub fn tab1_frontier_models() -> Table {
 }
 
 /// Fig. 1 as a table: one row per node count, throughput + scaling
-/// efficiency + the step-anatomy columns behind rec 4.
+/// efficiency + the step-anatomy columns behind rec 4. An empty sweep
+/// renders as an empty table (headers only), not a panic.
 pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
     let mut t = Table::new(
         &format!("FIG. 1 — pretraining scaling performance ({model_name})"),
         vec!["nodes", "gpus", "batch/gpu", "samples/s", "scale-eff",
              "step(ms)", "compute(ms)", "comm-exposed(ms)", "gpu-util"],
     );
-    let base = &sweep[0];
+    let Some(base) = sweep.first() else {
+        return t;
+    };
     for r in sweep {
         let ideal = base.samples_per_sec
             * (r.world as f64 / base.world as f64);
@@ -94,6 +97,16 @@ mod tests {
         let t = tab1_frontier_models();
         assert_eq!(t.len(), 6);
         assert!(t.render().contains("Claude 3.5 Sonnet"));
+    }
+
+    #[test]
+    fn fig1_empty_sweep_renders_empty_table() {
+        // regression: used to index sweep[0] and panic
+        let t = fig1_table("bert-120m", &[]);
+        assert_eq!(t.len(), 0);
+        assert!(t.render().contains("FIG. 1"));
+        let csv = fig1_csv(&[("bert-120m", Vec::new())]);
+        assert_eq!(csv.len(), 0);
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! length-prefixed binary container (no external serialization crates in
 //! the offline build).
 //!
+//! Crash safety: `save` writes to a `.tmp` sibling, fsyncs, and
+//! atomically renames into place, so a crash mid-write can never leave
+//! a truncated file at the final path — the previous checkpoint (if
+//! any) survives intact. `load` bounds every length prefix against the
+//! remaining file size with checked arithmetic, so a corrupt or
+//! truncated header produces a clean error instead of a huge
+//! allocation.
+//!
 //! Layout (little-endian):
 //! ```text
 //! magic "TXCK" u32, version u32, step u64,
@@ -38,11 +46,30 @@ fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+/// Read one length-prefixed f32 tensor, bounding the on-disk length
+/// against `remaining` file bytes so corrupt headers fail cleanly.
+fn read_f32s(r: &mut impl Read, remaining: &mut u64) -> Result<Vec<f32>> {
+    if *remaining < 8 {
+        bail!("checkpoint truncated: {remaining} bytes left, need an \
+               8-byte length prefix");
+    }
     let mut len8 = [0u8; 8];
     r.read_exact(&mut len8)?;
-    let len = u64::from_le_bytes(len8) as usize;
-    let mut buf = vec![0u8; len * 4];
+    *remaining -= 8;
+    let len = u64::from_le_bytes(len8);
+    let bytes = len
+        .checked_mul(4)
+        .with_context(|| format!("corrupt checkpoint: tensor length \
+                                  {len} overflows"))?;
+    if bytes > *remaining {
+        bail!("checkpoint truncated: tensor claims {bytes} bytes but \
+               only {remaining} remain in the file");
+    }
+    *remaining -= bytes;
+    let nbytes = usize::try_from(bytes)
+        .ok()
+        .context("tensor length exceeds address space")?;
+    let mut buf = vec![0u8; nbytes];
     r.read_exact(&mut buf)?;
     Ok(buf
         .chunks_exact(4)
@@ -50,25 +77,57 @@ fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
         .collect())
 }
 
+/// `<file>.tmp` sibling used for the atomic write-then-rename.
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+/// Write the checkpoint atomically: the bytes land in a `.tmp` sibling
+/// first, and only a complete, fsynced file is renamed over `path`.
 pub fn save(path: &Path, step: u64, params: &HostParams, m: &[f32],
             v: &[f32]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let f = std::fs::File::create(path)
-        .with_context(|| format!("creating checkpoint {}",
-                                 path.display()))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(&MAGIC.to_le_bytes())?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&step.to_le_bytes())?;
-    w.write_all(&(params.tensors.len() as u32).to_le_bytes())?;
-    for t in &params.tensors {
-        write_f32s(&mut w, t)?;
+    let tmp = tmp_path(path);
+    let write_and_publish = || -> Result<()> {
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint {}",
+                                     tmp.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&step.to_le_bytes())?;
+        w.write_all(&(params.tensors.len() as u32).to_le_bytes())?;
+        for t in &params.tensors {
+            write_f32s(&mut w, t)?;
+        }
+        write_f32s(&mut w, m)?;
+        write_f32s(&mut w, v)?;
+        w.flush()?;
+        // durability before visibility: the rename must never expose a
+        // file whose bytes are still in the page cache of a dying box
+        w.get_ref().sync_all()?;
+        drop(w);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}",
+                                     path.display()))
+    };
+    if let Err(e) = write_and_publish() {
+        // don't leave a torn .tmp wasting disk (e.g. on ENOSPC) —
+        // step-numbered paths are never retried, so nobody else cleans
+        // it up
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
     }
-    write_f32s(&mut w, m)?;
-    write_f32s(&mut w, v)?;
-    w.flush()?;
+    // the rename is only durable once the directory entry is flushed
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_all(); // best-effort: not all FSes allow it
+        }
+    }
     Ok(())
 }
 
@@ -76,6 +135,7 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}",
                                  path.display()))?;
+    let file_len = f.metadata()?.len();
     let mut r = BufReader::new(f);
     let mut h = [0u8; 20];
     r.read_exact(&mut h)?;
@@ -87,12 +147,13 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     }
     let step = u64::from_le_bytes(h[8..16].try_into().unwrap());
     let n = u32::from_le_bytes(h[16..20].try_into().unwrap()) as usize;
-    let mut tensors = Vec::with_capacity(n);
+    let mut remaining = file_len.saturating_sub(20);
+    let mut tensors = Vec::with_capacity(n.min(1024));
     for _ in 0..n {
-        tensors.push(read_f32s(&mut r)?);
+        tensors.push(read_f32s(&mut r, &mut remaining)?);
     }
-    let m = read_f32s(&mut r)?;
-    let v = read_f32s(&mut r)?;
+    let m = read_f32s(&mut r, &mut remaining)?;
+    let v = read_f32s(&mut r, &mut remaining)?;
     Ok(Checkpoint { step, params: HostParams { tensors }, m, v })
 }
 
@@ -124,6 +185,91 @@ mod tests {
             .join(format!("txgain-ckpt-bad-{}.bin", std::process::id()));
         std::fs::write(&path, b"garbage data here...").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_length_fails_cleanly_without_huge_alloc() {
+        // valid header claiming one tensor, then a length prefix of
+        // u64::MAX/8: must error on the bound check, not try to allocate
+        // multi-GB or overflow len*4
+        let path = std::env::temp_dir().join(format!(
+            "txgain-ckpt-hugelen-{}.bin", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&7u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
+        bytes.extend_from_slice(&(u64::MAX / 8).to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]); // a few stray bytes
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        std::fs::remove_file(&path).unwrap();
+
+        // and a length whose *4 overflows u64 entirely
+        let at = bytes.len() - 16 - 8;
+        bytes[at..at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "unexpected error: {err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_tail_fails_cleanly() {
+        let path = std::env::temp_dir().join(format!(
+            "txgain-ckpt-trunc-{}.bin", std::process::id()));
+        let params = HostParams { tensors: vec![vec![1.0; 100]] };
+        save(&path, 1, &params, &[0.5; 100], &[0.25; 100]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn interrupted_save_preserves_previous_checkpoint() {
+        // crash-safety: simulate a crash mid-save (a partial .tmp file
+        // left behind) — the published checkpoint must still load, and
+        // the next save must still go through
+        let dir = std::env::temp_dir().join(format!(
+            "txgain-ckpt-atomic-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("latest.ckpt");
+        let old = HostParams { tensors: vec![vec![1.0, 2.0, 3.0]] };
+        save(&path, 10, &old, &[0.1; 3], &[0.2; 3]).unwrap();
+
+        // a crash while writing step 20 leaves only a torn .tmp sibling
+        let tmp = super::tmp_path(&path);
+        let mut torn = Vec::new();
+        torn.extend_from_slice(&MAGIC.to_le_bytes());
+        torn.extend_from_slice(&VERSION.to_le_bytes());
+        torn.extend_from_slice(&20u64.to_le_bytes()[..4]); // cut short
+        std::fs::write(&tmp, &torn).unwrap();
+
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 10);
+        assert_eq!(ck.params.tensors, old.tensors);
+
+        // recovery: a complete save replaces both tmp and final file
+        let new = HostParams { tensors: vec![vec![9.0, 8.0, 7.0]] };
+        save(&path, 20, &new, &[0.3; 3], &[0.4; 3]).unwrap();
+        assert!(!tmp.exists(), "tmp file must be renamed away");
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 20);
+        assert_eq!(ck.params.tensors, new.tensors);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_leaves_no_tmp_behind() {
+        let path = std::env::temp_dir().join(format!(
+            "txgain-ckpt-notmp-{}.ckpt", std::process::id()));
+        let params = HostParams { tensors: vec![vec![4.0; 8]] };
+        save(&path, 3, &params, &[0.0; 8], &[0.0; 8]).unwrap();
+        assert!(path.exists());
+        assert!(!super::tmp_path(&path).exists());
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -14,7 +14,8 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context};
 
-use crate::collectives::{allreduce, Algorithm, World};
+use crate::collectives::{allreduce, bucketed_allreduce, Algorithm,
+                         BucketPlan, World};
 use crate::config::{Config, ExecMode};
 use crate::data::loader::{load_dataset, LoaderPool};
 use crate::data::{EpochPlan, Masker, Sample};
@@ -82,6 +83,13 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     let schedule = LrSchedule::new(cfg.training.lr,
                                    cfg.training.warmup_steps, total_steps);
     let algo = Algorithm::parse(&cfg.training.allreduce)?;
+    // DDP-style bucketing: sync the gradient in ~bucket_mb chunks in
+    // reverse layer order, so each bucket's all-reduce launches as soon
+    // as backward has produced it (rec. 4's overlap) instead of one
+    // blocking all-reduce after the whole backward pass
+    let bucket_plan = cfg.training.overlap_comm.then(|| {
+        BucketPlan::new(meta.grad_len, cfg.training.bucket_mb)
+    });
     let masker = Masker::new(cfg.data.mask_prob, cfg.model.vocab);
 
     let comms = World::new(world).into_comms();
@@ -95,6 +103,7 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                 let cfg = cfg.clone();
                 let opts = opts.clone();
                 let meta = meta.clone();
+                let bucket_plan = bucket_plan.clone();
                 scope.spawn(move || -> Result<RankOutcome> {
                     let engine = Engine::load(&opts.artifacts_dir, variant)
                         .with_context(|| format!("rank {rank} engine"))?;
@@ -138,12 +147,22 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                             let compute_secs =
                                 t_exec.elapsed().as_secs_f64();
 
-                            // average gradients + loss across the world
+                            // average gradients + loss across the world;
+                            // with overlap on, one collective per bucket
+                            // in the order backward produced them (the
+                            // launch point a fused backward would
+                            // interleave with its remaining layers)
                             let t_comm = Instant::now();
                             for g in out.grads.iter_mut() {
                                 *g *= inv_world;
                             }
-                            allreduce(algo, &mut comm, &mut out.grads)?;
+                            match &bucket_plan {
+                                Some(buckets) => bucketed_allreduce(
+                                    algo, &mut comm, &mut out.grads,
+                                    buckets)?,
+                                None => allreduce(algo, &mut comm,
+                                                  &mut out.grads)?,
+                            }
                             let mut loss_buf = [out.loss * inv_world];
                             allreduce(algo, &mut comm, &mut loss_buf)?;
                             let comm_secs =

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification wrapper: one command for CI and builders.
+#
+#   ./verify.sh            # build + tests + clippy
+#   ./verify.sh --no-lint  # skip clippy (e.g. toolchain without it)
+#
+# Runs from the rust/ crate root regardless of the caller's cwd.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" != "--no-lint" ]]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy --release --all-targets -- -D warnings
+    else
+        echo "verify.sh: clippy unavailable, skipping lint" >&2
+    fi
+fi
+
+echo "verify.sh: OK"
