@@ -1,0 +1,116 @@
+//! ZeRO-1 deep-dive: what sharding optimizer states buys at each world
+//! size. Sweeps the Fig. 1 node counts with `training.zero_stage` 0
+//! and 1 through the calibrated simulator and prints the 1/N
+//! optimizer-memory curve, the freed headroom, the auto-solved
+//! micro-batch, and the step-time price (the post-step parameter
+//! all-gather).
+//!
+//! ```sh
+//! cargo run --release --example zero_memory
+//! ```
+
+use txgain::collectives::RankMemory;
+use txgain::config::presets;
+use txgain::perfmodel::{simulate, sweep_nodes};
+use txgain::report::Table;
+use txgain::util::csv::CsvWriter;
+
+fn main() -> txgain::Result<()> {
+    // 1. the 1/N curve across the node sweep (bert-120m, paper batch)
+    let nodes = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let mut cfg = presets::paper_full_scale();
+    cfg.training.zero_stage = 1;
+    let sharded = sweep_nodes(&cfg, &nodes);
+    cfg.training.zero_stage = 0;
+    let replicated = sweep_nodes(&cfg, &nodes);
+
+    let mut t = Table::new(
+        "bert-120m — per-rank optimizer state: replicated vs ZeRO-1",
+        vec!["nodes", "gpus", "stage0 (MB)", "stage1 (MB)", "freed (MB)",
+             "headroom1 (GB)", "AG price (ms)"],
+    );
+    let mut csv = CsvWriter::new(vec![
+        "nodes", "gpus", "opt_bytes_stage0", "opt_bytes_stage1",
+        "mem_headroom_stage1", "exposed_comm_stage0",
+        "exposed_comm_stage1",
+    ]);
+    for (r0, r1) in replicated.iter().zip(&sharded) {
+        t.row(&[
+            r1.nodes.to_string(),
+            r1.world.to_string(),
+            format!("{:.1}", r0.opt_bytes_per_rank / 1e6),
+            format!("{:.1}", r1.opt_bytes_per_rank / 1e6),
+            format!("{:.1}",
+                    (r0.opt_bytes_per_rank - r1.opt_bytes_per_rank)
+                        / 1e6),
+            format!("{:.2}", r1.mem_headroom_bytes / 1e9),
+            format!("{:.1}",
+                    (r1.comm_exposed_secs - r0.comm_exposed_secs)
+                        * 1e3),
+        ]);
+        csv.row(&[
+            r1.nodes.to_string(),
+            r1.world.to_string(),
+            format!("{:.0}", r0.opt_bytes_per_rank),
+            format!("{:.0}", r1.opt_bytes_per_rank),
+            format!("{:.0}", r1.mem_headroom_bytes),
+            format!("{:.6}", r0.comm_exposed_secs),
+            format!("{:.6}", r1.comm_exposed_secs),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. what the freed memory is worth: auto-solved micro-batch
+    // (batch_per_gpu = 0 → "largest batch that fits", rec. 5)
+    let mut t = Table::new(
+        "auto micro-batch @128 nodes (batch_per_gpu=0, memory-solved)",
+        vec!["model", "batch stage0", "batch stage1", "samples/s 0",
+             "samples/s 1"],
+    );
+    for model in presets::paper_models() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.model = model.clone();
+        cfg.training.batch_per_gpu = 0;
+        cfg.training.zero_stage = 0;
+        let s0 = simulate(&cfg);
+        cfg.training.zero_stage = 1;
+        let s1 = simulate(&cfg);
+        t.row(&[
+            model.variant.clone(),
+            s0.batch_per_gpu.to_string(),
+            s1.batch_per_gpu.to_string(),
+            format!("{:.0}", s0.samples_per_sec),
+            format!("{:.0}", s1.samples_per_sec),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 3. the closed-form curve, model-by-model
+    let mut t = Table::new(
+        "Adam moment bytes per rank (MB) — the 1/N law",
+        vec!["model", "W=1", "W=4", "W=16", "W=64", "W=256"],
+    );
+    for model in presets::paper_models() {
+        let p = model.param_count();
+        let mut cells = vec![model.variant.clone()];
+        for w in [1usize, 4, 16, 64, 256] {
+            cells.push(format!(
+                "{:.1}", RankMemory::new(p, w, 1).optimizer_bytes / 1e6));
+        }
+        t.row(&cells);
+    }
+    println!("{}", t.render());
+    println!(
+        "reading: stage 1 removes the 8·P·(1−1/W) bytes of redundant \
+         fp32 moments\neach rank replicates under plain DDP, at the \
+         same wire cost (RS+AG = one\nall-reduce). The price is the \
+         post-step parameter all-gather, which cannot\nhide under \
+         backward — worth paying exactly when the freed bytes buy a\n\
+         bigger micro-batch (compare the auto-batch table).\n"
+    );
+
+    let path = std::path::PathBuf::from("runs/zero_memory.csv");
+    csv.write_to(&path)?;
+    println!("world-size sweep written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! BENCH REC6-ZERO: the ZeRO-1 sharded-optimizer ablation behind the
+//! `training.zero_stage` knob.
+//!
+//! Part 1 sweeps world size through the analytic memory model and
+//! shows the 1/N optimizer-state curve — the memory that becomes
+//! micro-batch headroom (the paper's rec. 5 lever). Part 2 prices the
+//! full step: reduce-scatter overlapped with backward plus the exposed
+//! parameter all-gather, against the plain overlapped all-reduce.
+//! Part 3 times the real in-process RS → shard-write → AG pipeline
+//! against the monolithic all-reduce: same wire bytes, so the sharding
+//! must cost ~nothing extra.
+//!
+//! Run: `cargo bench --bench rec6_zero`
+
+use txgain::collectives::{allreduce, bucketed_all_gather,
+                          bucketed_reduce_scatter, Algorithm, BucketPlan,
+                          CostModel, RankMemory, World};
+use txgain::config::presets;
+use txgain::perfmodel::simulate;
+use txgain::report::Table;
+use txgain::util::bench::{bench, black_box, section};
+
+fn main() {
+    section("analytic: per-rank optimizer state vs world size (1/N)");
+    let mut t = Table::new(
+        "Adam m+v bytes per rank (MB); params+grads stay replicated",
+        vec!["model", "stage-0", "W=2", "W=8", "W=32", "W=256"],
+    );
+    for model in presets::paper_models() {
+        let p = model.param_count();
+        let mb =
+            |w: usize, st: usize| -> String {
+                format!("{:.1}",
+                        RankMemory::new(p, w, st).optimizer_bytes / 1e6)
+            };
+        t.row(&[
+            model.variant.clone(),
+            mb(1, 0),
+            mb(2, 1),
+            mb(8, 1),
+            mb(32, 1),
+            mb(256, 1),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("  stage 1 shards the 8 bytes/param of fp32 moments \
+              across the DP world;\n  at 256 GPUs the 350M model's \
+              ~2.7 GB of moments shrink to ~10 MB/rank.\n");
+
+    section("simulated: full-step effect at 128 nodes");
+    let mut t = Table::new(
+        "zero_stage 0 vs 1 (paper cluster, overlap on)",
+        vec!["model", "batch", "step0(ms)", "step1(ms)",
+             "exposed0(ms)", "exposed1(ms)", "opt-mem1(MB)",
+             "headroom1(GB)"],
+    );
+    for model in presets::paper_models() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.training.batch_per_gpu =
+            presets::artifact_batch(&model.variant);
+        cfg.model = model.clone();
+        cfg.training.zero_stage = 0;
+        let s0 = simulate(&cfg);
+        cfg.training.zero_stage = 1;
+        let s1 = simulate(&cfg);
+        t.row(&[
+            model.variant.clone(),
+            s1.batch_per_gpu.to_string(),
+            format!("{:.1}", s0.step_secs * 1e3),
+            format!("{:.1}", s1.step_secs * 1e3),
+            format!("{:.1}", s0.comm_exposed_secs * 1e3),
+            format!("{:.1}", s1.comm_exposed_secs * 1e3),
+            format!("{:.1}", s1.opt_bytes_per_rank / 1e6),
+            format!("{:.2}", s1.mem_headroom_bytes / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("  the exposed delta is the post-step parameter \
+              all-gather — the price of\n  freeing 8·P·(1−1/W) \
+              bytes/rank. It pays off when the freed memory buys\n  a \
+              bigger micro-batch (set batch_per_gpu=0 to let the sim \
+              solve it).\n");
+
+    section("analytic: RS+AG vs all-reduce wire time (ring, 128 nodes)");
+    let cost = CostModel::from_cluster(
+        &presets::paper_full_scale().cluster);
+    for params in [109_076_400u64, 334_616_496] {
+        let bytes = CostModel::gradient_bytes(params);
+        let ar = cost.ring_allreduce(128, bytes);
+        let rs = cost.ring_reduce_scatter(128, bytes);
+        let ag = cost.ring_all_gather(128, bytes);
+        println!(
+            "  {:>5.0}M params: allreduce {:>6.1} ms = RS {:>6.1} + AG \
+             {:>6.1} ms",
+            params as f64 / 1e6, ar * 1e3, rs * 1e3, ag * 1e3
+        );
+    }
+    println!();
+
+    section("real in-process: RS + shard write + AG vs monolithic");
+    let world = 4usize;
+    let len = 8_500_000usize; // e2e-scale gradient
+    let plan = BucketPlan::from_elems(len, len / 6 + 1);
+    let run_zero = |plan: &BucketPlan| -> f64 {
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = World::new(world)
+                .into_comms()
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut c)| {
+                    let plan = plan.clone();
+                    s.spawn(move || {
+                        let mut buf = vec![1.0f32; len];
+                        bucketed_reduce_scatter(Algorithm::Ring, &mut c,
+                                                &mut buf, &plan)
+                            .unwrap();
+                        for &(a, b) in &plan.rank_ranges(rank, world) {
+                            for x in &mut buf[a..b] {
+                                *x *= 0.5; // the "optimizer step"
+                            }
+                        }
+                        bucketed_all_gather(Algorithm::Ring, &mut c,
+                                            &mut buf, &plan)
+                            .unwrap();
+                        black_box(buf[0]);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        t0.elapsed().as_secs_f64()
+    };
+    let run_allreduce = || -> f64 {
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = World::new(world)
+                .into_comms()
+                .into_iter()
+                .map(|mut c| {
+                    s.spawn(move || {
+                        let mut buf = vec![1.0f32; len];
+                        allreduce(Algorithm::Ring, &mut c, &mut buf)
+                            .unwrap();
+                        black_box(buf[0]);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        t0.elapsed().as_secs_f64()
+    };
+    let zero: f64 = (0..5).map(|_| run_zero(&plan)).sum::<f64>() / 5.0;
+    let ar: f64 = (0..5).map(|_| run_allreduce()).sum::<f64>() / 5.0;
+    println!(
+        "  world=4, 8.5M floats (mean of 5): RS+step+AG {:.2} ms vs \
+         all-reduce {:.2} ms",
+        zero * 1e3, ar * 1e3
+    );
+    println!("  (same bytes on the wire; the shard write replaces \
+              3/4 of the full optimizer\n  math each rank would do \
+              replicated — the win ZeRO banks)");
+
+    section("hot path");
+    bench("bucketed reduce-scatter, world=4, 8.5M floats", 2000, || {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = World::new(world)
+                .into_comms()
+                .into_iter()
+                .map(|mut c| {
+                    let plan = plan.clone();
+                    s.spawn(move || {
+                        let mut buf = vec![1.0f32; len];
+                        bucketed_reduce_scatter(Algorithm::Ring, &mut c,
+                                                &mut buf, &plan)
+                            .unwrap();
+                        black_box(buf[0]);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    });
+}

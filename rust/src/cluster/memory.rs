@@ -14,6 +14,7 @@
 //! (an order-of-magnitude drop from 184) is what the model must and does
 //! reproduce. See EXPERIMENTS.md §REC5.
 
+use crate::collectives::RankMemory;
 use crate::config::ModelConfig;
 
 /// Bytes of persistent state per parameter (mixed-precision Adam).
@@ -38,9 +39,41 @@ impl MemoryModel {
     }
 
     /// Persistent bytes: weights + master copy + optimizer moments +
-    /// gradient buffer.
+    /// gradient buffer (replicated, ZeRO-0). Delegates to the
+    /// [`RankMemory`] decomposition so there is exactly one source of
+    /// truth for the 16 bytes/param split.
     pub fn fixed_bytes(&self, model: &ModelConfig) -> f64 {
-        model.param_count() as f64 * BYTES_PER_PARAM_STATE
+        self.fixed_bytes_sharded(model, 1, 0)
+    }
+
+    /// Persistent bytes per rank under ZeRO staging: stage 1 shards
+    /// the Adam moments across `world` ranks, shrinking fixed state
+    /// from 16 to `8 + 8/world` bytes/param — headroom that goes
+    /// straight into batch (rec. 5's lever).
+    pub fn fixed_bytes_sharded(&self, model: &ModelConfig, world: usize,
+                               zero_stage: usize) -> f64 {
+        RankMemory::new(model.param_count(), world, zero_stage).total()
+    }
+
+    /// Largest per-GPU batch that fits under ZeRO staging.
+    pub fn max_batch_sharded(&self, model: &ModelConfig, world: usize,
+                             zero_stage: usize) -> usize {
+        let usable = self.gpu_mem_gb * 1e9 * USABLE_FRAC;
+        let free =
+            usable - self.fixed_bytes_sharded(model, world, zero_stage);
+        if free <= 0.0 {
+            return 0;
+        }
+        (free / self.activation_bytes_per_sample(model)).floor() as usize
+    }
+
+    /// Free bytes left at `batch` under ZeRO staging (negative when
+    /// the configuration does not fit) — the sim's "memory headroom".
+    pub fn headroom(&self, model: &ModelConfig, batch: usize,
+                    world: usize, zero_stage: usize) -> f64 {
+        self.gpu_mem_gb * 1e9 * USABLE_FRAC
+            - self.fixed_bytes_sharded(model, world, zero_stage)
+            - batch as f64 * self.activation_bytes_per_sample(model)
     }
 
     /// Activation bytes held per sample during fwd+bwd.
@@ -56,12 +89,7 @@ impl MemoryModel {
 
     /// Largest per-GPU batch that fits (0 if even the states don't fit).
     pub fn max_batch(&self, model: &ModelConfig) -> usize {
-        let usable = self.gpu_mem_gb * 1e9 * USABLE_FRAC;
-        let free = usable - self.fixed_bytes(model);
-        if free <= 0.0 {
-            return 0;
-        }
-        (free / self.activation_bytes_per_sample(model)).floor() as usize
+        self.max_batch_sharded(model, 1, 0)
     }
 
     /// Occupancy (bytes) at a given batch size.
@@ -81,6 +109,15 @@ impl MemoryModel {
 mod tests {
     use super::*;
     use crate::config::presets;
+
+    #[test]
+    fn bytes_per_param_constant_matches_rank_memory_split() {
+        // the documented 16 B/param is RankMemory's 6+2+8 at stage 0 —
+        // one decomposition owns the formula, this pins the constant
+        let p = 1_000_000u64;
+        assert_eq!(RankMemory::new(p, 1, 0).total(),
+                   p as f64 * BYTES_PER_PARAM_STATE);
+    }
 
     #[test]
     fn calibrated_to_paper_120m_batch() {
@@ -116,6 +153,23 @@ mod tests {
     fn oom_when_states_exceed_memory() {
         let m = MemoryModel::new(1.0); // 1 GB GPU
         assert_eq!(m.max_batch(&presets::model_bert_350m()), 0);
+    }
+
+    #[test]
+    fn zero1_sharding_buys_batch_headroom() {
+        let m = MemoryModel::new(94.0);
+        let model = presets::model_bert_350m();
+        let b0 = m.max_batch_sharded(&model, 256, 0);
+        let b1 = m.max_batch_sharded(&model, 256, 1);
+        assert_eq!(b0, m.max_batch(&model)); // stage 0 == legacy path
+        assert!(b1 > b0, "sharding must free batch room: {b1} !> {b0}");
+        // headroom at the stage-0 max batch is non-negative and grows
+        // with stage 1
+        let h0 = m.headroom(&model, b0, 256, 0);
+        let h1 = m.headroom(&model, b0, 256, 1);
+        assert!(h0 >= 0.0);
+        let freed = 8.0 * model.param_count() as f64 * (1.0 - 1.0 / 256.0);
+        assert!((h1 - h0 - freed).abs() < 1e3, "{h1} - {h0} vs {freed}");
     }
 
     #[test]

@@ -26,7 +26,8 @@
 use anyhow::ensure;
 
 use super::comm::Comm;
-use super::{allreduce, Algorithm};
+use super::{all_gather, allreduce, reduce_scatter, shard_spans,
+            Algorithm};
 use crate::Result;
 
 /// Default bucket size, MB — matches PyTorch DDP's `bucket_cap_mb`.
@@ -112,6 +113,36 @@ impl BucketPlan {
     pub fn ready_order(&self) -> impl Iterator<Item = usize> {
         (0..self.spans.len()).rev()
     }
+
+    /// Absolute flat-vector span of `rank`'s shard of bucket `i` under
+    /// a `world`-way reduce-scatter (ZeRO-1 ownership). The per-bucket
+    /// partition is [`shard_spans`] — exactly what the ring
+    /// reduce-scatter leaves reduced on each rank.
+    pub fn shard_span(&self, i: usize, rank: usize, world: usize)
+        -> (usize, usize) {
+        let (a, b) = self.spans[i];
+        let (sa, sb) = shard_spans(b - a, world)[rank];
+        (a + sa, a + sb)
+    }
+
+    /// Every flat-vector span `rank` owns across all buckets, ascending
+    /// and disjoint, empty spans dropped. This is the shard the
+    /// optimizer steps and the checkpoint merge reassembles.
+    pub fn rank_ranges(&self, rank: usize, world: usize)
+        -> Vec<(usize, usize)> {
+        (0..self.spans.len())
+            .map(|i| self.shard_span(i, rank, world))
+            .filter(|&(a, b)| b > a)
+            .collect()
+    }
+
+    /// Total elements `rank` owns (the sharded optimizer's m/v length).
+    pub fn rank_owned_elems(&self, rank: usize, world: usize) -> usize {
+        self.rank_ranges(rank, world)
+            .iter()
+            .map(|&(a, b)| b - a)
+            .sum()
+    }
 }
 
 /// Tracks bucket readiness as backward compute retires layers, and
@@ -196,6 +227,43 @@ pub fn bucketed_allreduce(algo: Algorithm, comm: &mut Comm,
     for i in plan.ready_order() {
         let (a, b) = plan.span(i);
         allreduce(algo, comm, &mut buf[a..b])?;
+    }
+    Ok(())
+}
+
+/// In-place sum reduce-scatter of `buf`, one collective per bucket in
+/// ready (reverse-layer) order — the ZeRO-1 gradient sync. On return,
+/// each rank's [`BucketPlan::shard_span`] of every bucket holds the
+/// world-wide sum; everything else is partial and must not be read.
+/// Same overlap schedule as [`bucketed_allreduce`] at half the wire
+/// bytes (ring).
+pub fn bucketed_reduce_scatter(algo: Algorithm, comm: &mut Comm,
+                               buf: &mut [f32], plan: &BucketPlan)
+    -> Result<()> {
+    ensure!(plan.len() == buf.len(),
+            "bucket plan covers {} elements but gradient has {}",
+            plan.len(), buf.len());
+    for i in plan.ready_order() {
+        let (a, b) = plan.span(i);
+        reduce_scatter(algo, comm, &mut buf[a..b])?;
+    }
+    Ok(())
+}
+
+/// In-place all-gather of `buf`, one collective per bucket: each
+/// rank's [`BucketPlan::shard_span`] regions are authoritative on
+/// entry (the freshly stepped parameter shard); on return every rank
+/// holds the full updated vector. Runs in the same bucket order as the
+/// reduce-scatter so tag reuse across steps stays FIFO-consistent.
+pub fn bucketed_all_gather(algo: Algorithm, comm: &mut Comm,
+                           buf: &mut [f32], plan: &BucketPlan)
+    -> Result<()> {
+    ensure!(plan.len() == buf.len(),
+            "bucket plan covers {} elements but buffer has {}",
+            plan.len(), buf.len());
+    for i in plan.ready_order() {
+        let (a, b) = plan.span(i);
+        all_gather(algo, comm, &mut buf[a..b])?;
     }
     Ok(())
 }
@@ -388,6 +456,107 @@ mod tests {
                 for r in &bucketed[1..] {
                     assert_eq!(r, &bucketed[0]);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_ranges_partition_the_flat_vector() {
+        // across ranks, the per-bucket shards tile [0, len) exactly —
+        // including uneven bucket and shard boundaries
+        for (len, elems, world) in [(100usize, 7usize, 4usize), (10, 3, 4),
+                                    (7, 100, 3), (5, 2, 8), (16, 4, 1)] {
+            let p = BucketPlan::from_elems(len, elems);
+            let mut covered = vec![false; len];
+            let mut total = 0usize;
+            for r in 0..world {
+                let ranges = p.rank_ranges(r, world);
+                // ascending + disjoint within a rank
+                let mut prev = 0usize;
+                for &(a, b) in &ranges {
+                    assert!(b > a);
+                    assert!(a >= prev,
+                            "len={len} elems={elems} world={world} \
+                             rank={r}: overlapping/unsorted ranges");
+                    prev = b;
+                    for c in &mut covered[a..b] {
+                        assert!(!*c, "double ownership");
+                        *c = true;
+                    }
+                }
+                assert_eq!(p.rank_owned_elems(r, world),
+                           ranges.iter().map(|&(a, b)| b - a).sum());
+                total += p.rank_owned_elems(r, world);
+            }
+            assert_eq!(total, len);
+            assert!(covered.iter().all(|&c| c));
+        }
+    }
+
+    #[test]
+    fn shard_span_stays_inside_its_bucket() {
+        let p = BucketPlan::from_elems(23, 7); // 2 + 7 + 7 + 7
+        for i in 0..p.n_buckets() {
+            let (ba, bb) = p.span(i);
+            for r in 0..3 {
+                let (a, b) = p.shard_span(i, r, 3);
+                assert!(ba <= a && b <= bb);
+            }
+        }
+    }
+
+    /// RS → write own shards → AG moves exactly the updated values:
+    /// the skeleton of the ZeRO-1 optimizer step.
+    #[test]
+    fn bucketed_rs_then_ag_roundtrips_shard_writes() {
+        for algo in [Algorithm::Ring, Algorithm::Tree] {
+            let world = 4usize;
+            let len = 37usize;
+            let plan = BucketPlan::from_elems(len, 10);
+            let inputs: Vec<Vec<f32>> = (0..world)
+                .map(|r| {
+                    (0..len).map(|i| ((r + i) % 9) as f32).collect()
+                })
+                .collect();
+            let mut want_sum = vec![0.0f32; len];
+            for inp in &inputs {
+                for (w, v) in want_sum.iter_mut().zip(inp) {
+                    *w += v;
+                }
+            }
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                World::new(world)
+                    .into_comms()
+                    .into_iter()
+                    .zip(inputs.clone())
+                    .enumerate()
+                    .map(|(r, (mut c, mut buf))| {
+                        let plan = plan.clone();
+                        s.spawn(move || {
+                            bucketed_reduce_scatter(algo, &mut c,
+                                                    &mut buf, &plan)
+                                .unwrap();
+                            // "optimizer step": negate the owned shard
+                            for &(a, b) in &plan.rank_ranges(r, world) {
+                                for x in &mut buf[a..b] {
+                                    *x = -*x;
+                                }
+                            }
+                            bucketed_all_gather(algo, &mut c, &mut buf,
+                                                &plan)
+                                .unwrap();
+                            buf
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let want: Vec<f32> =
+                want_sum.iter().map(|v| -v).collect();
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "{algo:?} rank={r}");
             }
         }
     }

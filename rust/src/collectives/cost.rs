@@ -90,6 +90,65 @@ impl CostModel {
         }
     }
 
+    /// Ring reduce-scatter: intra-node reduce, then the scatter half of
+    /// the inter-node ring — half an all-reduce's wire bytes.
+    pub fn ring_reduce_scatter(&self, nodes: usize, bytes: f64) -> f64 {
+        let n = nodes as f64;
+        let mut t = self.intra_node(bytes); // local reduce
+        if nodes > 1 {
+            t += (n - 1.0) / n * bytes * self.beta_eth
+                + (n - 1.0) * self.alpha;
+        }
+        t
+    }
+
+    /// Ring all-gather: the gather half of the inter-node ring plus the
+    /// intra-node broadcast.
+    pub fn ring_all_gather(&self, nodes: usize, bytes: f64) -> f64 {
+        let n = nodes as f64;
+        let mut t = 0.0;
+        if nodes > 1 {
+            t += (n - 1.0) / n * bytes * self.beta_eth
+                + (n - 1.0) * self.alpha;
+        }
+        t += self.intra_node(bytes) * 0.5; // local broadcast half-cost
+        t
+    }
+
+    /// Reduce-scatter time under `algo`. The tree fallback reduces the
+    /// full buffer (it has no bandwidth-optimal scatter phase), so it
+    /// is priced at the full tree all-reduce — honest about why ring is
+    /// the ZeRO algorithm of choice.
+    pub fn reduce_scatter(&self, algo: Algorithm, nodes: usize,
+                          bytes: f64) -> f64 {
+        match algo {
+            Algorithm::Ring => self.ring_reduce_scatter(nodes, bytes),
+            Algorithm::Tree => self.tree_allreduce(nodes, bytes),
+        }
+    }
+
+    /// All-gather time under `algo`. The tree fallback gathers shards
+    /// to the root and broadcasts the assembled buffer — root-bound,
+    /// `(n-1)·bytes` out of one link on the broadcast side.
+    pub fn all_gather(&self, algo: Algorithm, nodes: usize, bytes: f64)
+        -> f64 {
+        match algo {
+            Algorithm::Ring => self.ring_all_gather(nodes, bytes),
+            Algorithm::Tree => {
+                let n = nodes as f64;
+                if nodes <= 1 {
+                    return self.intra_node(bytes) * 0.5;
+                }
+                // gather: n-1 shard messages into the root; broadcast:
+                // n-1 full-buffer sends out of it
+                (n - 1.0) / n * bytes * self.beta_eth
+                    + (n - 1.0) * bytes * self.beta_eth
+                    + 2.0 * (n - 1.0) * self.alpha
+                    + self.intra_node(bytes) * 0.5
+            }
+        }
+    }
+
     /// Price a bucketed all-reduce overlapped with a backward pass of
     /// `backward_secs`.
     ///
@@ -112,6 +171,32 @@ impl CostModel {
     pub fn overlapped_allreduce(&self, algo: Algorithm, nodes: usize,
                                 bytes: f64, bucket_bytes: f64,
                                 backward_secs: f64) -> OverlapCost {
+        self.overlap_pipeline(bytes, bucket_bytes, backward_secs,
+                              |b| self.allreduce(algo, nodes, b))
+    }
+
+    /// Price a bucketed *reduce-scatter* overlapped with backward —
+    /// the gradient half of a ZeRO-1 step. Same pipeline schedule as
+    /// [`CostModel::overlapped_allreduce`], each bucket priced at
+    /// reduce-scatter cost (half the ring wire bytes); the parameter
+    /// all-gather that completes the step runs after the optimizer and
+    /// is priced separately (it is always exposed).
+    pub fn overlapped_reduce_scatter(&self, algo: Algorithm,
+                                     nodes: usize, bytes: f64,
+                                     bucket_bytes: f64,
+                                     backward_secs: f64) -> OverlapCost {
+        self.overlap_pipeline(bytes, bucket_bytes, backward_secs,
+                              |b| self.reduce_scatter(algo, nodes, b))
+    }
+
+    /// Shared bucket-pipeline schedule: bucket `i` of `n` becomes
+    /// ready at `backward_secs·(i+1)/n`, the serial channel services
+    /// ready buckets FIFO, and whatever runs past the end of backward
+    /// is exposed.
+    fn overlap_pipeline(&self, bytes: f64, bucket_bytes: f64,
+                        backward_secs: f64,
+                        bucket_cost: impl Fn(f64) -> f64)
+        -> OverlapCost {
         let n = if bucket_bytes > 0.0 && bucket_bytes < bytes {
             ((bytes / bucket_bytes).ceil() as usize)
                 .clamp(1, MAX_MODELED_BUCKETS)
@@ -128,7 +213,7 @@ impl CostModel {
                 bucket_bytes.min(remaining)
             };
             remaining -= b;
-            let t = self.allreduce(algo, nodes, b);
+            let t = bucket_cost(b);
             total += t;
             let ready = backward_secs * (i + 1) as f64 / n as f64;
             end = ready.max(end) + t;
@@ -145,6 +230,40 @@ impl CostModel {
     /// the paper's Lightning setup uses; fp32 would double this).
     pub fn gradient_bytes(params: u64) -> f64 {
         params as f64 * 2.0
+    }
+}
+
+/// Per-rank persistent training state (bytes) under ZeRO staging — the
+/// analytic memory model behind the `zero_stage` knob. Stage 0
+/// replicates everything (the classic 16 bytes/param of
+/// mixed-precision Adam); stage 1 shards the fp32 m/v moments
+/// (8 bytes/param) across the data-parallel world, freeing
+/// `8·P·(1 − 1/W)` bytes per rank for activations — i.e. batch.
+#[derive(Clone, Copy, Debug)]
+pub struct RankMemory {
+    /// bf16 weights (2) + fp32 master copy (4), replicated.
+    pub param_bytes: f64,
+    /// bf16 gradient buffer (2), replicated (stage 2 would shard it).
+    pub grad_bytes: f64,
+    /// fp32 Adam m+v (8); divided by the world under stage 1.
+    pub optimizer_bytes: f64,
+}
+
+impl RankMemory {
+    pub fn new(params: u64, world: usize, zero_stage: usize)
+        -> RankMemory {
+        let p = params as f64;
+        let shard = if zero_stage >= 1 { world.max(1) as f64 } else { 1.0 };
+        RankMemory {
+            param_bytes: 6.0 * p,
+            grad_bytes: 2.0 * p,
+            optimizer_bytes: 8.0 * p / shard,
+        }
+    }
+
+    /// Total persistent bytes this rank holds.
+    pub fn total(&self) -> f64 {
+        self.param_bytes + self.grad_bytes + self.optimizer_bytes
     }
 }
 
@@ -266,6 +385,72 @@ mod tests {
                                           0.0);
         assert!(many.comm_total > few.comm_total,
                 "{} !> {}", many.comm_total, few.comm_total);
+    }
+
+    #[test]
+    fn rs_plus_ag_equals_allreduce_on_the_wire() {
+        // ZeRO-1's bargain: reduce-scatter + all-gather moves the same
+        // bytes as one all-reduce (ring), so sharding the optimizer is
+        // free on the network
+        let m = model();
+        let bytes = CostModel::gradient_bytes(120_000_000);
+        for nodes in [2usize, 8, 32, 128] {
+            let rs_ag = m.ring_reduce_scatter(nodes, bytes)
+                + m.ring_all_gather(nodes, bytes);
+            let ar = m.ring_allreduce(nodes, bytes);
+            assert!((rs_ag - ar).abs() < ar * 1e-9,
+                    "nodes={nodes}: rs+ag {rs_ag} vs allreduce {ar}");
+        }
+    }
+
+    #[test]
+    fn tree_fallbacks_cost_more_than_ring_at_scale() {
+        // the honest pricing of tree.rs's fallbacks: full all-reduce
+        // for RS, root-bound gather+bcast for AG
+        let m = model();
+        let bytes = 400e6;
+        for nodes in [8usize, 64] {
+            assert!(m.reduce_scatter(Algorithm::Tree, nodes, bytes)
+                    > m.reduce_scatter(Algorithm::Ring, nodes, bytes));
+            assert!(m.all_gather(Algorithm::Tree, nodes, bytes)
+                    > m.all_gather(Algorithm::Ring, nodes, bytes));
+        }
+    }
+
+    #[test]
+    fn overlapped_reduce_scatter_shares_the_pipeline_schedule() {
+        // same bucket count as the all-reduce pipeline, strictly less
+        // channel time (half the wire bytes per bucket under ring)
+        let m = model();
+        let bytes = CostModel::gradient_bytes(120_000_000);
+        let ar = m.overlapped_allreduce(Algorithm::Ring, 32, bytes, 25e6,
+                                        0.25);
+        let rs = m.overlapped_reduce_scatter(Algorithm::Ring, 32, bytes,
+                                             25e6, 0.25);
+        assert_eq!(rs.n_buckets, ar.n_buckets);
+        assert!(rs.comm_total < ar.comm_total);
+        assert!(rs.exposed <= ar.exposed);
+    }
+
+    #[test]
+    fn rank_memory_optimizer_state_shrinks_as_one_over_world() {
+        let params = 120_000_000u64;
+        let full = RankMemory::new(params, 1, 0);
+        assert_eq!(full.total(), 16.0 * params as f64);
+        let mut prev = f64::INFINITY;
+        for world in [1usize, 2, 4, 8, 64, 256] {
+            let rm = RankMemory::new(params, world, 1);
+            let expect = 8.0 * params as f64 / world as f64;
+            assert!((rm.optimizer_bytes - expect).abs() < 1.0,
+                    "world={world}");
+            assert!(rm.optimizer_bytes < prev || world == 1);
+            // params + grads stay replicated under stage 1
+            assert_eq!(rm.param_bytes, full.param_bytes);
+            assert_eq!(rm.grad_bytes, full.grad_bytes);
+            prev = rm.optimizer_bytes;
+        }
+        // stage 0 ignores world entirely
+        assert_eq!(RankMemory::new(params, 256, 0).total(), full.total());
     }
 
     #[test]

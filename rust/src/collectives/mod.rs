@@ -13,6 +13,11 @@
 //! each bucket's all-reduce can launch as soon as backward produces it
 //! (DDP-style compute/comm overlap, rec. 4); [`cost`] prices the same
 //! overlap for the simulator.
+//!
+//! The primitives [`reduce_scatter`] / [`all_gather`] (and their
+//! bucketed drivers) split the all-reduce into its two halves so
+//! ZeRO-1 can step only each rank's [`shard_spans`] shard between them
+//! — same total wire bytes, 1/world the optimizer memory.
 
 pub mod bucket;
 pub mod comm;
@@ -20,11 +25,30 @@ pub mod cost;
 pub mod ring;
 pub mod tree;
 
-pub use bucket::{bucketed_allreduce, BucketManager, BucketPlan};
+pub use bucket::{bucketed_all_gather, bucketed_allreduce,
+                 bucketed_reduce_scatter, BucketManager, BucketPlan};
 pub use comm::{Comm, World};
-pub use cost::{CostModel, OverlapCost};
+pub use cost::{CostModel, OverlapCost, RankMemory};
 
 use crate::Result;
+
+/// Per-rank shard spans of a `len`-element buffer: `world` nearly-equal
+/// contiguous half-open `(start, end)` chunks (leading chunks take the
+/// remainder). This is the single shard-ownership map shared by the
+/// ring schedules, the bucket plan, the sharded optimizer and the
+/// checkpoint merge — they can never disagree on who owns what.
+pub fn shard_spans(len: usize, world: usize) -> Vec<(usize, usize)> {
+    let base = len / world;
+    let extra = len % world;
+    let mut out = Vec::with_capacity(world);
+    let mut start = 0;
+    for r in 0..world {
+        let sz = base + usize::from(r < extra);
+        out.push((start, start + sz));
+        start += sz;
+    }
+    out
+}
 
 /// All-reduce algorithm selector (config `training.allreduce`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,10 +76,97 @@ pub fn allreduce(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
     }
 }
 
+/// In-place sum reduce-scatter: on return, each rank's own
+/// [`shard_spans`] span holds the world-wide sum (other spans are
+/// unspecified). Half the wire bytes of an all-reduce under ring; the
+/// tree fallback reduces the full buffer (own span is still correct).
+pub fn reduce_scatter(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
+    -> Result<()> {
+    match algo {
+        Algorithm::Ring => ring::reduce_scatter(comm, buf),
+        Algorithm::Tree => tree::reduce_scatter(comm, buf),
+    }
+}
+
+/// In-place all-gather: each rank's own [`shard_spans`] span is
+/// authoritative on entry; on return every rank holds all spans.
+pub fn all_gather(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
+    -> Result<()> {
+    match algo {
+        Algorithm::Ring => ring::all_gather(comm, buf),
+        Algorithm::Tree => tree::all_gather(comm, buf),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::Rng;
+
+    #[test]
+    fn shard_spans_cover_and_front_load_remainder() {
+        for (len, world) in [(10usize, 4usize), (3, 5), (0, 3), (7, 1),
+                             (16, 8)] {
+            let spans = shard_spans(len, world);
+            assert_eq!(spans.len(), world);
+            let mut prev = 0;
+            for (i, &(a, b)) in spans.iter().enumerate() {
+                assert_eq!(a, prev, "gap at shard {i}");
+                assert!(b >= a);
+                prev = b;
+            }
+            assert_eq!(prev, len);
+            // remainder goes to the leading shards: sizes non-increasing
+            for w in spans.windows(2) {
+                assert!(w[0].1 - w[0].0 >= w[1].1 - w[1].0);
+            }
+        }
+    }
+
+    /// RS then AG equals all-reduce for both algorithms — the identity
+    /// the ZeRO-1 step rests on.
+    #[test]
+    fn reduce_scatter_all_gather_composes_to_allreduce() {
+        for algo in [Algorithm::Ring, Algorithm::Tree] {
+            for (world, len) in [(4usize, 10usize), (3, 8), (1, 5)] {
+                let inputs: Vec<Vec<f32>> = (0..world)
+                    .map(|r| {
+                        (0..len)
+                            .map(|i| ((r * 5 + i * 3) % 11) as f32 - 5.0)
+                            .collect()
+                    })
+                    .collect();
+                let mut want = vec![0.0f32; len];
+                for inp in &inputs {
+                    for (w, v) in want.iter_mut().zip(inp) {
+                        *w += v;
+                    }
+                }
+                let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                    World::new(world)
+                        .into_comms()
+                        .into_iter()
+                        .zip(inputs)
+                        .map(|(mut c, mut buf)| {
+                            s.spawn(move || {
+                                reduce_scatter(algo, &mut c, &mut buf)
+                                    .unwrap();
+                                all_gather(algo, &mut c, &mut buf)
+                                    .unwrap();
+                                buf
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .collect()
+                });
+                for r in &out {
+                    assert_eq!(r, &want, "{algo:?} world={world}");
+                }
+            }
+        }
+    }
 
     /// proptest-style: both algorithms equal the per-element sum for
     /// random world sizes and buffer lengths (including len < world).

@@ -1,63 +1,93 @@
-//! Ring all-reduce: reduce-scatter + all-gather, the bandwidth-optimal
-//! algorithm NCCL uses for large tensors. Each rank sends exactly
-//! `2 (R-1)/R × bytes` — the constant behind the paper's observation
-//! that DP gradient sync stays off the critical path (rec. 4).
+//! Ring collectives: reduce-scatter, all-gather, and their composition
+//! all-reduce — the bandwidth-optimal algorithms NCCL uses for large
+//! tensors. All-reduce moves exactly `2 (R-1)/R × bytes` per rank — the
+//! constant behind the paper's observation that DP gradient sync stays
+//! off the critical path (rec. 4). Reduce-scatter and all-gather each
+//! move half that, which is what makes ZeRO-1 free on the wire: RS the
+//! gradients, step only the local shard, AG the updated params — same
+//! total bytes as one all-reduce.
+//!
+//! Shard ownership: after [`reduce_scatter`], rank `r` owns the fully
+//! reduced span `shard_spans(len, world)[r]` of the buffer (the ring
+//! schedule is shifted by one hop relative to the textbook all-reduce
+//! so ownership lands on each rank's *own* span — the contract the
+//! sharded optimizer builds on). [`all_gather`] starts from that same
+//! ownership map.
 
 use super::comm::Comm;
+use super::shard_spans;
 use crate::Result;
 
-/// Chunk boundaries: R nearly-equal spans covering `len`.
-fn chunks(len: usize, world: usize) -> Vec<(usize, usize)> {
-    let base = len / world;
-    let extra = len % world;
-    let mut out = Vec::with_capacity(world);
-    let mut start = 0;
-    for r in 0..world {
-        let sz = base + usize::from(r < extra);
-        out.push((start, start + sz));
-        start += sz;
-    }
-    out
+/// Tag base for the all-gather phase, mirroring the all-reduce layout
+/// (reduce-scatter uses tags `0..world-1`, all-gather `world..`).
+fn ag_tag(world: usize, s: usize) -> u32 {
+    (world + s) as u32
 }
 
-/// In-place sum all-reduce across the world.
-pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+/// In-place ring reduce-scatter: on return, `buf[shard_spans[rank]]`
+/// holds the world-wide sum; other spans hold partial sums and must be
+/// treated as garbage. Each rank moves `(R-1)/R × bytes`.
+pub fn reduce_scatter(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
         return Ok(());
     }
-    let spans = chunks(buf.len(), world);
+    let spans = shard_spans(buf.len(), world);
     let right = (rank + 1) % world;
     let left = (rank + world - 1) % world;
 
-    // Phase 1: reduce-scatter. After step s, rank owns the fully-reduced
-    // chunk (rank + 1) mod world ... standard ring schedule: at step s we
-    // send chunk (rank - s) and receive+accumulate chunk (rank - s - 1).
+    // Shifted ring schedule: at step s, send chunk (rank - 1 - s) and
+    // receive+accumulate chunk (rank - 2 - s). After R-1 steps the
+    // last chunk accumulated is `rank` itself, with all R contributions.
+    for s in 0..world - 1 {
+        let send_c = (rank + 2 * world - 1 - s) % world;
+        let recv_c = (rank + 2 * world - 2 - s) % world;
+        let (a, b) = spans[send_c];
+        comm.send_slice(right, s as u32, &buf[a..b])?;
+        let incoming = comm.recv(left, s as u32)?;
+        let (a, b) = spans[recv_c];
+        for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
+            *dst += src;
+        }
+        comm.recycle(incoming);
+    }
+    Ok(())
+}
+
+/// In-place ring all-gather: on entry, rank `r`'s span
+/// `shard_spans(len, world)[r]` is authoritative; on return every rank
+/// holds every span's owner data. Each rank moves `(R-1)/R × bytes`.
+pub fn all_gather(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+    let world = comm.world();
+    let rank = comm.rank();
+    if world == 1 {
+        return Ok(());
+    }
+    let spans = shard_spans(buf.len(), world);
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+
+    // At step s, send chunk (rank - s) (own chunk first, then each
+    // freshly received one) and receive chunk (rank - 1 - s).
     for s in 0..world - 1 {
         let send_c = (rank + world - s) % world;
         let recv_c = (rank + world - s - 1) % world;
         let (a, b) = spans[send_c];
-        comm.send(right, s as u32, buf[a..b].to_vec())?;
-        let incoming = comm.recv(left, s as u32)?;
-        let (a, b) = spans[recv_c];
-        for (dst, src) in buf[a..b].iter_mut().zip(incoming) {
-            *dst += src;
-        }
-    }
-
-    // Phase 2: all-gather. Rank now owns chunk (rank + 1) mod world;
-    // circulate owned chunks around the ring.
-    for s in 0..world - 1 {
-        let send_c = (rank + 1 + world - s) % world;
-        let recv_c = (rank + world - s) % world;
-        let (a, b) = spans[send_c];
-        comm.send(right, (world + s) as u32, buf[a..b].to_vec())?;
-        let incoming = comm.recv(left, (world + s) as u32)?;
+        comm.send_slice(right, ag_tag(world, s), &buf[a..b])?;
+        let incoming = comm.recv(left, ag_tag(world, s))?;
         let (a, b) = spans[recv_c];
         buf[a..b].copy_from_slice(&incoming);
+        comm.recycle(incoming);
     }
     Ok(())
+}
+
+/// In-place sum all-reduce across the world: reduce-scatter then
+/// all-gather, `2 (R-1)/R × bytes` per rank total.
+pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+    reduce_scatter(comm, buf)?;
+    all_gather(comm, buf)
 }
 
 #[cfg(test)]
@@ -65,10 +95,12 @@ mod tests {
     use super::*;
     use crate::collectives::World;
 
-    fn run(world: usize, len: usize) -> Vec<Vec<f32>> {
-        let inputs: Vec<Vec<f32>> = (0..world)
-            .map(|r| (0..len).map(|i| (r + i) as f32).collect())
-            .collect();
+    /// Run `op` on every rank of a fresh world over `inputs`.
+    fn run_op(
+        inputs: Vec<Vec<f32>>,
+        op: fn(&mut Comm, &mut [f32]) -> crate::Result<()>,
+    ) -> Vec<Vec<f32>> {
+        let world = inputs.len();
         std::thread::scope(|s| {
             World::new(world)
                 .into_comms()
@@ -76,15 +108,22 @@ mod tests {
                 .zip(inputs)
                 .map(|(mut c, mut buf)| {
                     s.spawn(move || {
-                        allreduce(&mut c, &mut buf).unwrap();
-                        (buf, c.bytes_sent)
+                        op(&mut c, &mut buf).unwrap();
+                        buf
                     })
                 })
                 .collect::<Vec<_>>()
                 .into_iter()
-                .map(|h| h.join().unwrap().0)
+                .map(|h| h.join().unwrap())
                 .collect()
         })
+    }
+
+    fn run(world: usize, len: usize) -> Vec<Vec<f32>> {
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|r| (0..len).map(|i| (r + i) as f32).collect())
+            .collect();
+        run_op(inputs, allreduce)
     }
 
     #[test]
@@ -113,6 +152,84 @@ mod tests {
     }
 
     #[test]
+    fn reduce_scatter_owns_own_span() {
+        // the ZeRO contract: after reduce_scatter, rank r's own span
+        // holds the world-wide sum
+        for (world, len) in [(4usize, 10usize), (3, 7), (5, 3), (2, 9)] {
+            let inputs: Vec<Vec<f32>> = (0..world)
+                .map(|r| {
+                    (0..len).map(|i| (r * 3 + i) as f32).collect()
+                })
+                .collect();
+            let mut want = vec![0.0f32; len];
+            for inp in &inputs {
+                for (w, v) in want.iter_mut().zip(inp) {
+                    *w += v;
+                }
+            }
+            let out = run_op(inputs, reduce_scatter);
+            let spans = shard_spans(len, world);
+            for (r, buf) in out.iter().enumerate() {
+                let (a, b) = spans[r];
+                assert_eq!(&buf[a..b], &want[a..b],
+                           "world={world} len={len} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_distributes_owned_spans() {
+        for (world, len) in [(4usize, 10usize), (3, 7), (5, 3), (2, 9)] {
+            let spans = shard_spans(len, world);
+            // rank r starts with only its span populated as r+1.0
+            let inputs: Vec<Vec<f32>> = (0..world)
+                .map(|r| {
+                    let mut buf = vec![f32::NAN; len];
+                    let (a, b) = spans[r];
+                    for x in &mut buf[a..b] {
+                        *x = (r + 1) as f32;
+                    }
+                    buf
+                })
+                .collect();
+            let mut want = vec![0.0f32; len];
+            for (r, &(a, b)) in spans.iter().enumerate() {
+                for x in &mut want[a..b] {
+                    *x = (r + 1) as f32;
+                }
+            }
+            for (r, buf) in run_op(inputs, all_gather).iter().enumerate()
+            {
+                assert_eq!(buf, &want, "world={world} len={len} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_all_gather_is_allreduce() {
+        // bit-for-bit: allreduce IS the composition, and a manual
+        // RS→AG pipeline (the ZeRO step skeleton) must agree exactly
+        let world = 4;
+        let len = 11;
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|r| {
+                (0..len).map(|i| ((r * 7 + i * 3) % 19) as f32 - 9.0)
+                    .collect()
+            })
+            .collect();
+        let composed = run_op(inputs.clone(), |c, b| {
+            reduce_scatter(c, b)?;
+            all_gather(c, b)
+        });
+        let direct = run_op(inputs, allreduce);
+        for (a, b) in composed.iter().zip(&direct) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn moves_bandwidth_optimal_bytes() {
         // each rank sends 2*(R-1)/R of the buffer
         let world = 4;
@@ -134,6 +251,32 @@ mod tests {
                 .collect()
         });
         let expect = (2 * (world - 1) * (len / world) * 4) as u64;
+        for s in sent {
+            assert_eq!(s, expect);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_moves_half_the_allreduce_bytes() {
+        let world = 4;
+        let len = 400usize;
+        let sent: Vec<u64> = std::thread::scope(|s| {
+            World::new(world)
+                .into_comms()
+                .into_iter()
+                .map(|mut c| {
+                    s.spawn(move || {
+                        let mut buf = vec![1.0f32; len];
+                        reduce_scatter(&mut c, &mut buf).unwrap();
+                        c.bytes_sent
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let expect = ((world - 1) * (len / world) * 4) as u64;
         for s in sent {
             assert_eq!(s, expect);
         }

@@ -4,10 +4,13 @@
 //! collectives bench shows the crossover.
 
 use super::comm::Comm;
+use super::shard_spans;
 use crate::Result;
 
 const REDUCE_TAG: u32 = 0x7000;
 const BCAST_TAG: u32 = 0x7001;
+const AG_GATHER_TAG: u32 = 0x7002;
+const AG_BCAST_TAG: u32 = 0x7003;
 
 /// In-place sum all-reduce across the world (binomial tree).
 pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
@@ -22,15 +25,15 @@ pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
     let mut dist = 1;
     while dist < world {
         if rank % (2 * dist) == dist {
-            comm.send(rank - dist, REDUCE_TAG + dist as u32,
-                      buf.to_vec())?;
+            comm.send_slice(rank - dist, REDUCE_TAG + dist as u32, buf)?;
             break;
         } else if rank % (2 * dist) == 0 && rank + dist < world {
             let incoming = comm.recv(rank + dist,
                                      REDUCE_TAG + dist as u32)?;
-            for (d, s) in buf.iter_mut().zip(incoming) {
+            for (d, s) in buf.iter_mut().zip(&incoming) {
                 *d += s;
             }
+            comm.recycle(incoming);
         }
         dist *= 2;
     }
@@ -42,13 +45,54 @@ pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
     }
     while dist >= 1 {
         if rank % (2 * dist) == 0 && rank + dist < world {
-            comm.send(rank + dist, BCAST_TAG + dist as u32, buf.to_vec())?;
+            comm.send_slice(rank + dist, BCAST_TAG + dist as u32, buf)?;
         } else if rank % (2 * dist) == dist {
             let incoming = comm.recv(rank - dist,
                                      BCAST_TAG + dist as u32)?;
             buf.copy_from_slice(&incoming);
+            comm.recycle(incoming);
         }
         dist /= 2;
+    }
+    Ok(())
+}
+
+/// Tree "reduce-scatter" fallback: the binomial tree has no
+/// bandwidth-optimal scatter phase, so this reduces the *full* buffer
+/// (a plain tree all-reduce). The [`shard_spans`] contract still holds
+/// — each rank's own span carries the world-wide sum, it just pays the
+/// full all-reduce wire cost (priced honestly by the cost model).
+pub fn reduce_scatter(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+    allreduce(comm, buf)
+}
+
+/// Tree all-gather fallback: gather every rank's [`shard_spans`] span
+/// to rank 0, then broadcast the assembled buffer. Root-bound (the
+/// latency-optimal tree is the wrong tool past tiny buffers) but
+/// correct at any world size.
+pub fn all_gather(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+    let world = comm.world();
+    let rank = comm.rank();
+    if world == 1 {
+        return Ok(());
+    }
+    let spans = shard_spans(buf.len(), world);
+    if rank == 0 {
+        for r in 1..world {
+            let incoming = comm.recv(r, AG_GATHER_TAG)?;
+            let (a, b) = spans[r];
+            buf[a..b].copy_from_slice(&incoming);
+            comm.recycle(incoming);
+        }
+        for r in 1..world {
+            comm.send_slice(r, AG_BCAST_TAG, buf)?;
+        }
+    } else {
+        let (a, b) = spans[rank];
+        comm.send_slice(0, AG_GATHER_TAG, &buf[a..b])?;
+        let incoming = comm.recv(0, AG_BCAST_TAG)?;
+        buf.copy_from_slice(&incoming);
+        comm.recycle(incoming);
     }
     Ok(())
 }
@@ -109,5 +153,85 @@ mod tests {
         let out = run(2, 2);
         assert_eq!(out[0], vec![2.0, 4.0]);
         assert_eq!(out[1], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn reduce_scatter_fallback_reduces_own_span() {
+        for world in [2usize, 3, 5, 8] {
+            let len = 11usize;
+            let inputs: Vec<Vec<f32>> = (0..world)
+                .map(|r| (0..len).map(|i| (r + 2 * i) as f32).collect())
+                .collect();
+            let mut want = vec![0.0f32; len];
+            for inp in &inputs {
+                for (w, v) in want.iter_mut().zip(inp) {
+                    *w += v;
+                }
+            }
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                World::new(world)
+                    .into_comms()
+                    .into_iter()
+                    .zip(inputs)
+                    .map(|(mut c, mut buf)| {
+                        s.spawn(move || {
+                            reduce_scatter(&mut c, &mut buf).unwrap();
+                            buf
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let spans = shard_spans(len, world);
+            for (r, buf) in out.iter().enumerate() {
+                let (a, b) = spans[r];
+                assert_eq!(&buf[a..b], &want[a..b], "rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_assembles_all_spans() {
+        for world in [2usize, 3, 5, 8] {
+            let len = 11usize;
+            let spans = shard_spans(len, world);
+            let inputs: Vec<Vec<f32>> = (0..world)
+                .map(|r| {
+                    let mut buf = vec![0.0f32; len];
+                    let (a, b) = spans[r];
+                    for x in &mut buf[a..b] {
+                        *x = (r + 1) as f32 * 10.0;
+                    }
+                    buf
+                })
+                .collect();
+            let mut want = vec![0.0f32; len];
+            for (r, &(a, b)) in spans.iter().enumerate() {
+                for x in &mut want[a..b] {
+                    *x = (r + 1) as f32 * 10.0;
+                }
+            }
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                World::new(world)
+                    .into_comms()
+                    .into_iter()
+                    .zip(inputs)
+                    .map(|(mut c, mut buf)| {
+                        s.spawn(move || {
+                            all_gather(&mut c, &mut buf).unwrap();
+                            buf
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "world={world} rank={r}");
+            }
+        }
     }
 }

@@ -91,6 +91,7 @@ fn real_training(batch: usize, steps: usize) -> TrainingConfig {
         allreduce: "ring".into(),
         bucket_mb: 25.0,
         overlap_comm: true,
+        zero_stage: 0,
         checkpoint_every: 0,
         log_every: 10,
     }
@@ -112,6 +113,9 @@ pub fn quickstart() -> Config {
             // bucket would degenerate to one bucket, so shrink it to
             // exercise the real bucketed-overlap path in smoke runs
             bucket_mb: 0.05,
+            // smoke runs cover the sharded-optimizer (ZeRO-1) path:
+            // reduce-scatter per bucket, shard step, all-gather params
+            zero_stage: 1,
             ..real_training(artifact_batch("tiny"), 30)
         },
     }

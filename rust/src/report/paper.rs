@@ -37,7 +37,8 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
     let mut t = Table::new(
         &format!("FIG. 1 — pretraining scaling performance ({model_name})"),
         vec!["nodes", "gpus", "batch/gpu", "samples/s", "scale-eff",
-             "step(ms)", "compute(ms)", "comm-exposed(ms)", "gpu-util"],
+             "step(ms)", "compute(ms)", "comm-exposed(ms)",
+             "opt-mem/rank", "gpu-util"],
     );
     let Some(base) = sweep.first() else {
         return t;
@@ -54,6 +55,7 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
             format!("{:.1}", r.step_secs * 1e3),
             format!("{:.1}", r.compute_secs * 1e3),
             format!("{:.1}", r.comm_exposed_secs * 1e3),
+            format!("{:.1}MB", r.opt_bytes_per_rank / 1e6),
             format!("{:.3}", r.gpu_util),
         ]);
     }
@@ -65,7 +67,7 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
     let mut w = CsvWriter::new(vec![
         "model", "nodes", "gpus", "batch_per_gpu", "samples_per_sec",
         "step_secs", "compute_secs", "comm_secs", "comm_exposed_secs",
-        "gpu_util",
+        "opt_bytes_per_rank", "mem_headroom_bytes", "gpu_util",
     ]);
     for (name, sweep) in series {
         for r in sweep {
@@ -79,6 +81,8 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
                 format!("{:.6}", r.compute_secs),
                 format!("{:.6}", r.comm_secs),
                 format!("{:.6}", r.comm_exposed_secs),
+                format!("{:.0}", r.opt_bytes_per_rank),
+                format!("{:.0}", r.mem_headroom_bytes),
                 format!("{:.4}", r.gpu_util),
             ]);
         }
@@ -117,5 +121,19 @@ mod tests {
         assert_eq!(t.len(), 3);
         let csv = fig1_csv(&[("bert-120m", sweep)]);
         assert_eq!(csv.len(), 3);
+    }
+
+    #[test]
+    fn fig1_surfaces_per_rank_optimizer_memory() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.training.zero_stage = 1;
+        let sweep = sweep_nodes(&cfg, &[1, 128]);
+        let s = fig1_table("bert-120m", &sweep).render();
+        assert!(s.contains("opt-mem/rank"), "missing column: {s}");
+        // at 128 nodes (256 GPUs) the 120M model's sharded moments are
+        // ~3.4 MB/rank vs ~870 MB replicated — both rows must show MB
+        assert!(s.contains("MB"));
+        assert!(sweep[1].opt_bytes_per_rank
+                < sweep[0].opt_bytes_per_rank / 100.0);
     }
 }

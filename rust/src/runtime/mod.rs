@@ -53,6 +53,29 @@ impl HostParams {
         self.tensors.iter().map(|t| t.len()).sum()
     }
 
+    /// Concatenate all tensors into `out` in manifest order — the same
+    /// flat layout as the gradient vector, so collectives can run over
+    /// parameters (the ZeRO-1 all-gather).
+    pub fn flatten_into(&self, out: &mut [f32]) {
+        let mut off = 0usize;
+        for t in &self.tensors {
+            out[off..off + t.len()].copy_from_slice(t);
+            off += t.len();
+        }
+        assert_eq!(off, out.len(), "flat buffer length mismatch");
+    }
+
+    /// Overwrite every tensor from the flat vector — inverse of
+    /// [`HostParams::flatten_into`].
+    pub fn unflatten_from(&mut self, src: &[f32]) {
+        let mut off = 0usize;
+        for t in &mut self.tensors {
+            t.copy_from_slice(&src[off..off + t.len()]);
+            off += t.len();
+        }
+        assert_eq!(off, src.len(), "flat buffer length mismatch");
+    }
+
     /// Apply `f(param_slice, grad_slice)` tensor-by-tensor against a
     /// flat gradient vector.
     pub fn zip_grads<F: FnMut(&mut [f32], &[f32])>(
@@ -179,6 +202,19 @@ mod tests {
         assert!(a.tensors[g].iter().all(|&v| v == 1.0));
         let bz = names.iter().position(|n| *n == "emb_ln_b").unwrap();
         assert!(a.tensors[bz].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let mut p = HostParams {
+            tensors: vec![vec![1.0, 2.0], vec![3.0; 3]],
+        };
+        let mut flat = vec![0.0f32; 5];
+        p.flatten_into(&mut flat);
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 3.0, 3.0]);
+        flat[4] = 9.0;
+        p.unflatten_from(&flat);
+        assert_eq!(p.tensors[1], vec![3.0, 3.0, 9.0]);
     }
 
     #[test]

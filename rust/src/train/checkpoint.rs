@@ -2,6 +2,14 @@
 //! length-prefixed binary container (no external serialization crates in
 //! the offline build).
 //!
+//! ZeRO-1: the on-disk format always holds the FULL flat m/v vectors.
+//! Under sharded training, rank 0 gathers every rank's owned moments
+//! over the transport and [`place_shard`]s them into the full layout
+//! before the one atomic save — so a sharded run's checkpoint is
+//! byte-compatible with a replicated run's, and resuming at a
+//! *different* world size is just [`extract_shard`] against the new
+//! world's shard ranges. No per-rank files, no world-size coupling.
+//!
 //! Crash safety: `save` writes to a `.tmp` sibling, fsyncs, and
 //! atomically renames into place, so a crash mid-write can never leave
 //! a truncated file at the final path — the previous checkpoint (if
@@ -23,11 +31,18 @@ use std::path::Path;
 
 use anyhow::{bail, Context};
 
+use crate::collectives::{BucketPlan, Comm};
 use crate::runtime::HostParams;
 use crate::Result;
 
 const MAGIC: u32 = 0x5458_434B;
 const VERSION: u32 = 1;
+
+/// Transport tags for the sharded-checkpoint gather (outside the
+/// collectives' tag ranges; reuse across saves is FIFO-safe because
+/// every rank hits the gather in the same step order).
+const CKPT_M_TAG: u32 = 0x9100;
+const CKPT_V_TAG: u32 = 0x9101;
 
 pub struct Checkpoint {
     pub step: u64,
@@ -75,6 +90,47 @@ fn read_f32s(r: &mut impl Read, remaining: &mut u64) -> Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect())
+}
+
+/// Scatter `shard` — a rank's owned moments, concatenated in range
+/// order (`AdamW::state`) — into the full flat vector at `ranges`.
+pub fn place_shard(full: &mut [f32], ranges: &[(usize, usize)],
+                   shard: &[f32]) -> Result<()> {
+    let owned: usize = ranges.iter().map(|&(a, b)| b - a).sum();
+    if owned != shard.len() {
+        bail!("shard holds {} elements but its ranges cover {owned}",
+              shard.len());
+    }
+    let mut off = 0usize;
+    for &(a, b) in ranges {
+        if b > full.len() || a > b {
+            bail!("shard range ({a}, {b}) outside flat length {}",
+                  full.len());
+        }
+        full[a..b].copy_from_slice(&shard[off..off + (b - a)]);
+        off += b - a;
+    }
+    Ok(())
+}
+
+/// Extract the concatenation of `ranges` from the full flat vector —
+/// the inverse of [`place_shard`], used when resuming a sharded run
+/// (possibly at a different world size than the one that saved).
+/// Bounds-checked like its inverse: a checkpoint shorter than the
+/// current shard map (wrong model variant, foreign file) is a clean
+/// error, not a slice panic.
+pub fn extract_shard(full: &[f32], ranges: &[(usize, usize)])
+    -> Result<Vec<f32>> {
+    let mut out =
+        Vec::with_capacity(ranges.iter().map(|&(a, b)| b - a).sum());
+    for &(a, b) in ranges {
+        if b > full.len() || a > b {
+            bail!("shard range ({a}, {b}) outside checkpoint tensor of \
+                   length {}", full.len());
+        }
+        out.extend_from_slice(&full[a..b]);
+    }
+    Ok(out)
 }
 
 /// `<file>.tmp` sibling used for the atomic write-then-rename.
@@ -129,6 +185,43 @@ pub fn save(path: &Path, step: u64, params: &HostParams, m: &[f32],
         }
     }
     Ok(())
+}
+
+/// Cooperative sharded save: every rank calls this at the same step.
+/// Non-zero ranks send their owned m/v shards (concatenated in
+/// `plan.rank_ranges(rank, world)` order, i.e. `AdamW::state`) to rank
+/// 0 and return; rank 0 merges all shards into the full flat layout
+/// and writes ONE atomic checkpoint file — byte-compatible with the
+/// replicated format, so any world size (or a replicated run) can
+/// resume it via [`extract_shard`].
+#[allow(clippy::too_many_arguments)]
+pub fn save_sharded(path: &Path, comm: &mut Comm, plan: &BucketPlan,
+                    step: u64, params: &HostParams, m_shard: &[f32],
+                    v_shard: &[f32]) -> Result<()> {
+    let world = comm.world();
+    let rank = comm.rank();
+    if rank != 0 {
+        comm.send_slice(0, CKPT_M_TAG, m_shard)?;
+        comm.send_slice(0, CKPT_V_TAG, v_shard)?;
+        return Ok(());
+    }
+    let n = plan.len();
+    let mut m_full = vec![0.0f32; n];
+    let mut v_full = vec![0.0f32; n];
+    place_shard(&mut m_full, &plan.rank_ranges(0, world), m_shard)?;
+    place_shard(&mut v_full, &plan.rank_ranges(0, world), v_shard)?;
+    for r in 1..world {
+        let ranges = plan.rank_ranges(r, world);
+        let m_in = comm.recv(r, CKPT_M_TAG)?;
+        place_shard(&mut m_full, &ranges, &m_in)
+            .with_context(|| format!("rank {r} m-shard"))?;
+        comm.recycle(m_in);
+        let v_in = comm.recv(r, CKPT_V_TAG)?;
+        place_shard(&mut v_full, &ranges, &v_in)
+            .with_context(|| format!("rank {r} v-shard"))?;
+        comm.recycle(v_in);
+    }
+    save(path, step, params, &m_full, &v_full)
 }
 
 pub fn load(path: &Path) -> Result<Checkpoint> {
@@ -259,6 +352,155 @@ mod tests {
         let ck = load(&path).unwrap();
         assert_eq!(ck.step, 20);
         assert_eq!(ck.params.tensors, new.tensors);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn place_and_extract_shard_roundtrip() {
+        let full: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let ranges = vec![(2usize, 5usize), (9, 10), (14, 20)];
+        let shard = extract_shard(&full, &ranges).unwrap();
+        assert_eq!(shard.len(), 10);
+        let mut rebuilt = vec![0.0f32; 20];
+        place_shard(&mut rebuilt, &ranges, &shard).unwrap();
+        for &(a, b) in &ranges {
+            assert_eq!(&rebuilt[a..b], &full[a..b]);
+        }
+    }
+
+    #[test]
+    fn place_shard_rejects_bad_geometry() {
+        let mut full = vec![0.0f32; 10];
+        // shard shorter than its ranges
+        assert!(place_shard(&mut full, &[(0, 4)], &[1.0; 3]).is_err());
+        // range outside the flat vector
+        assert!(place_shard(&mut full, &[(8, 12)], &[1.0; 4]).is_err());
+        // extract mirrors the bound check: a checkpoint tensor shorter
+        // than the shard map errors instead of panicking
+        let err = extract_shard(&full, &[(8, 12)]).unwrap_err();
+        assert!(err.to_string().contains("outside checkpoint"));
+    }
+
+    /// The tentpole checkpoint property: save a merged sharded
+    /// checkpoint under world=4, resume the shards under world=2 and
+    /// world=8 — every resharding must see exactly the saved moments.
+    #[test]
+    fn sharded_checkpoint_resumes_at_different_world_sizes() {
+        use crate::collectives::BucketPlan;
+        let n = 103usize; // uneven vs every world size below
+        let plan = BucketPlan::from_elems(n, 24);
+        let m_full: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let v_full: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+
+        // world=4 ranks each hold their shard; rank 0 merges and saves
+        let save_world = 4usize;
+        let mut m_merged = vec![0.0f32; n];
+        let mut v_merged = vec![0.0f32; n];
+        for r in 0..save_world {
+            let ranges = plan.rank_ranges(r, save_world);
+            place_shard(&mut m_merged, &ranges,
+                        &extract_shard(&m_full, &ranges).unwrap())
+                .unwrap();
+            place_shard(&mut v_merged, &ranges,
+                        &extract_shard(&v_full, &ranges).unwrap())
+                .unwrap();
+        }
+        assert_eq!(m_merged, m_full);
+        assert_eq!(v_merged, v_full);
+
+        let dir = std::env::temp_dir().join(format!(
+            "txgain-ckpt-shard-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("zero.ckpt");
+        let params = HostParams { tensors: vec![vec![1.0; n]] };
+        save(&path, 77, &params, &m_merged, &v_merged).unwrap();
+
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 77);
+        for resume_world in [2usize, 8] {
+            let mut seen = 0usize;
+            for r in 0..resume_world {
+                let ranges = plan.rank_ranges(r, resume_world);
+                let m_shard =
+                    extract_shard(&ck.m, &ranges).unwrap();
+                let v_shard =
+                    extract_shard(&ck.v, &ranges).unwrap();
+                assert_eq!(m_shard,
+                           extract_shard(&m_full, &ranges).unwrap(),
+                           "world={resume_world} rank={r}");
+                assert_eq!(v_shard,
+                           extract_shard(&v_full, &ranges).unwrap());
+                seen += m_shard.len();
+            }
+            assert_eq!(seen, n, "world={resume_world} shards must tile");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// `save_sharded` over a real multi-rank world produces exactly
+    /// the merged file a replicated save of the full moments would.
+    #[test]
+    fn save_sharded_gathers_over_the_wire() {
+        use crate::collectives::World;
+        let world = 4usize;
+        let n = 53usize;
+        let plan = BucketPlan::from_elems(n, 17);
+        let m_full: Vec<f32> = (0..n).map(|i| i as f32 + 0.5).collect();
+        let v_full: Vec<f32> = (0..n).map(|i| i as f32 * 2.0).collect();
+        let params = HostParams { tensors: vec![vec![1.0; n]] };
+        let dir = std::env::temp_dir().join(format!(
+            "txgain-ckpt-gather-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("merged.ckpt");
+
+        std::thread::scope(|s| {
+            for (rank, mut comm) in
+                World::new(world).into_comms().into_iter().enumerate()
+            {
+                let (plan, params, path) =
+                    (plan.clone(), params.clone(), path.clone());
+                let ranges = plan.rank_ranges(rank, world);
+                let m_shard =
+                    extract_shard(&m_full, &ranges).unwrap();
+                let v_shard =
+                    extract_shard(&v_full, &ranges).unwrap();
+                s.spawn(move || {
+                    save_sharded(&path, &mut comm, &plan, 31, &params,
+                                 &m_shard, &v_shard)
+                        .unwrap();
+                });
+            }
+        });
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 31);
+        assert_eq!(ck.m, m_full);
+        assert_eq!(ck.v, v_full);
+        assert_eq!(ck.params.tensors, params.tensors);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Torn-file corruption of a merged sharded checkpoint fails
+    /// cleanly — mirrors the atomic-save tests for the plain format
+    /// (the sharded save IS the plain format, merged).
+    #[test]
+    fn torn_sharded_checkpoint_fails_cleanly() {
+        let dir = std::env::temp_dir().join(format!(
+            "txgain-ckpt-shard-torn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zero.ckpt");
+        let n = 64usize;
+        let params = HostParams { tensors: vec![vec![2.0; n]] };
+        let m: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let v = vec![0.5f32; n];
+        save(&path, 9, &params, &m, &v).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // tear the file inside the v tensor (last section)
+        std::fs::write(&path, &full[..full.len() - 17]).unwrap();
+        assert!(load(&path).is_err());
+        // and a tear inside the params section
+        std::fs::write(&path, &full[..40]).unwrap();
+        assert!(load(&path).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

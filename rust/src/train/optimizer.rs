@@ -1,10 +1,17 @@
-//! AdamW on host buffers (decoupled weight decay, bias correction).
+//! AdamW on host buffers (decoupled weight decay, bias correction),
+//! with optional ZeRO-1 sharding.
 //!
 //! The optimizer lives in rust — the AOT artifact returns `(loss,
 //! grads)` and nothing else — mirroring DDP, where gradients are the
-//! communicated object and every rank applies an identical update.
-//! Layernorm gains/biases and other 1-D tensors are excluded from weight
-//! decay, matching the usual BERT recipe.
+//! communicated object. Under ZeRO-0 every rank owns the full flat
+//! parameter range and applies an identical update; under ZeRO-1 each
+//! rank owns only its shard (a set of disjoint flat ranges handed out
+//! by `BucketPlan::rank_ranges`), sizes m/v to that shard, and steps
+//! only parameters inside it — the all-gather of updated params brings
+//! replicas back in sync. Layernorm gains/biases and other 1-D tensors
+//! are excluded from weight decay, matching the usual BERT recipe;
+//! the decay decision follows the *tensor* a flat index falls in, so a
+//! shard boundary cutting through a tensor changes nothing.
 
 use crate::config::TrainingConfig;
 use crate::runtime::{HostParams, VariantMeta};
@@ -17,12 +24,29 @@ pub struct AdamW {
     pub eps: f64,
     pub weight_decay: f64,
     step: u64,
+    /// Disjoint ascending flat ranges this instance owns. One range
+    /// covering the whole vector in the replicated (ZeRO-0) case.
+    ranges: Vec<(usize, usize)>,
+    /// First/second moments for the owned ranges only, concatenated in
+    /// range order.
     m: Vec<f32>,
     v: Vec<f32>,
 }
 
 impl AdamW {
+    /// Replicated optimizer: owns the full `n_params` flat range.
     pub fn new(cfg: &TrainingConfig, n_params: usize) -> AdamW {
+        Self::sharded(cfg, vec![(0, n_params)])
+    }
+
+    /// ZeRO-1 optimizer owning only `ranges` (disjoint, ascending —
+    /// e.g. `BucketPlan::rank_ranges`). m/v are sized to the shard, so
+    /// per-rank optimizer memory shrinks ~1/world.
+    pub fn sharded(cfg: &TrainingConfig, ranges: Vec<(usize, usize)>)
+        -> AdamW {
+        debug_assert!(ranges.windows(2).all(|w| w[0].1 <= w[1].0),
+                      "shard ranges must be ascending and disjoint");
+        let owned: usize = ranges.iter().map(|&(a, b)| b - a).sum();
         AdamW {
             lr_base: cfg.lr,
             beta1: cfg.beta1,
@@ -30,8 +54,9 @@ impl AdamW {
             eps: cfg.adam_eps,
             weight_decay: cfg.weight_decay,
             step: 0,
-            m: vec![0.0; n_params],
-            v: vec![0.0; n_params],
+            ranges,
+            m: vec![0.0; owned],
+            v: vec![0.0; owned],
         }
     }
 
@@ -39,10 +64,26 @@ impl AdamW {
         self.step
     }
 
-    /// One update with learning rate `lr` against a flat gradient.
+    /// The flat ranges this instance owns.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Total owned elements (= m/v length).
+    pub fn owned_len(&self) -> usize {
+        self.m.len()
+    }
+
+    /// One update with learning rate `lr` against the full flat
+    /// gradient. Only parameters inside the owned ranges move; the
+    /// arithmetic per element is identical to the replicated path, so
+    /// sharded + all-gather reproduces ZeRO-0 bit-for-bit when the
+    /// reduced gradients agree bit-for-bit.
     pub fn step(&mut self, params: &mut HostParams, meta: &VariantMeta,
                 flat_grads: &[f32], lr: f64) {
-        assert_eq!(flat_grads.len(), self.m.len());
+        assert!(self.ranges.last().map_or(0, |r| r.1) <= flat_grads.len(),
+                "owned ranges exceed gradient length {}",
+                flat_grads.len());
         self.step += 1;
         let b1 = self.beta1 as f32;
         let b2 = self.beta2 as f32;
@@ -52,23 +93,39 @@ impl AdamW {
         let lr = lr as f32;
         let wd = self.weight_decay as f32;
 
-        for (t, spec) in params.tensors.iter_mut().zip(&meta.params) {
-            let g = &flat_grads[spec.offset..spec.offset + spec.size];
-            let m = &mut self.m[spec.offset..spec.offset + spec.size];
-            let v = &mut self.v[spec.offset..spec.offset + spec.size];
-            // no decay on 1-D tensors (biases, layernorm, out_bias)
-            let decay = if spec.shape.len() > 1 { wd } else { 0.0 };
-            for i in 0..g.len() {
-                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
-                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
-                let mhat = m[i] / bc1;
-                let vhat = v[i] / bc2;
-                t[i] -= lr * (mhat / (vhat.sqrt() + eps) + decay * t[i]);
+        let mut moff = 0usize; // cursor into m/v, advances per range
+        for &(ra, rb) in &self.ranges {
+            for (t, spec) in params.tensors.iter_mut().zip(&meta.params)
+            {
+                // intersect the owned range with this tensor's span
+                let a = ra.max(spec.offset);
+                let b = rb.min(spec.offset + spec.size);
+                if a >= b {
+                    continue;
+                }
+                // no decay on 1-D tensors (biases, layernorm, out_bias)
+                let decay = if spec.shape.len() > 1 { wd } else { 0.0 };
+                let g = &flat_grads[a..b];
+                let p = &mut t[a - spec.offset..b - spec.offset];
+                let m = &mut self.m[moff + a - ra..moff + b - ra];
+                let v = &mut self.v[moff + a - ra..moff + b - ra];
+                for i in 0..g.len() {
+                    m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                    v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    p[i] -=
+                        lr * (mhat / (vhat.sqrt() + eps) + decay * p[i]);
+                }
             }
+            moff += rb - ra;
         }
     }
 
-    /// Serialize the moment buffers (checkpointing).
+    /// Serialize the moment buffers (checkpointing). Under sharding
+    /// these are the *owned* moments only, concatenated in range order
+    /// — `train::checkpoint::place_shard` merges them back into the
+    /// full flat layout.
     pub fn state(&self) -> (u64, &[f32], &[f32]) {
         (self.step, &self.m, &self.v)
     }
@@ -190,5 +247,85 @@ mod tests {
         opt.step(&mut pa, &meta, &[0.2; 6], 0.01);
         opt2.step(&mut pb, &meta, &[0.2; 6], 0.01);
         assert_eq!(pa.tensors, pb.tensors);
+    }
+
+    /// Sharded instances covering a partition of the flat range must
+    /// jointly reproduce the replicated update bit-for-bit — including
+    /// a shard boundary cutting through the decayed 2-D tensor and the
+    /// undecayed bias.
+    #[test]
+    fn disjoint_shards_compose_to_the_full_step()
+    {
+        let meta = toy_meta();
+        let g = vec![0.5f32, -0.25, 0.125, -0.5, 0.75, -1.0];
+        let lr = 0.01;
+
+        let mut p_full = toy_params();
+        let mut full = AdamW::new(&cfg(), 6);
+
+        // shards: [0,3) and [3,5) and [5,6) — cuts w *and* b
+        let parts = [vec![(0usize, 3usize)], vec![(3, 5)], vec![(5, 6)]];
+        let mut p_shard = toy_params();
+        let mut opts: Vec<AdamW> = parts
+            .iter()
+            .map(|r| AdamW::sharded(&cfg(), r.clone()))
+            .collect();
+
+        for step in 0..3 {
+            let gs: Vec<f32> =
+                g.iter().map(|x| x * (step + 1) as f32).collect();
+            full.step(&mut p_full, &meta, &gs, lr);
+            for o in &mut opts {
+                o.step(&mut p_shard, &meta, &gs, lr);
+            }
+        }
+        for (a, b) in p_full.tensors.iter().zip(&p_shard.tensors) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(opts[0].owned_len(), 3);
+        assert_eq!(opts[1].owned_len(), 2);
+        assert_eq!(opts[2].owned_len(), 1);
+    }
+
+    /// A sharded step must not touch parameters outside its ranges.
+    #[test]
+    fn sharded_step_leaves_unowned_params_untouched() {
+        let meta = toy_meta();
+        let mut p = toy_params();
+        let before = p.clone();
+        let mut opt = AdamW::sharded(&cfg(), vec![(1, 3)]);
+        opt.step(&mut p, &meta, &[1.0; 6], 0.01);
+        // owned [1,3) moved
+        assert_ne!(p.tensors[0][1], before.tensors[0][1]);
+        assert_ne!(p.tensors[0][2], before.tensors[0][2]);
+        // everything else identical
+        assert_eq!(p.tensors[0][0], before.tensors[0][0]);
+        assert_eq!(p.tensors[0][3], before.tensors[0][3]);
+        assert_eq!(p.tensors[1], before.tensors[1]);
+    }
+
+    #[test]
+    fn multi_range_moment_cursor_is_consistent() {
+        // the m/v cursor must track concatenated range order: stepping
+        // twice with a two-range shard equals stepping twice with two
+        // single-range shards over the same data
+        let meta = toy_meta();
+        let cfg = cfg();
+        let g = [0.5f32, -0.5, 0.25, -0.25, 1.0, -1.0];
+
+        let mut p_a = toy_params();
+        let mut multi = AdamW::sharded(&cfg, vec![(0, 2), (4, 6)]);
+        let mut p_b = toy_params();
+        let mut lo = AdamW::sharded(&cfg, vec![(0, 2)]);
+        let mut hi = AdamW::sharded(&cfg, vec![(4, 6)]);
+        for _ in 0..3 {
+            multi.step(&mut p_a, &meta, &g, 0.01);
+            lo.step(&mut p_b, &meta, &g, 0.01);
+            hi.step(&mut p_b, &meta, &g, 0.01);
+        }
+        assert_eq!(p_a.tensors, p_b.tensors);
+        assert_eq!(multi.owned_len(), 4);
     }
 }

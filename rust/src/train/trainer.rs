@@ -1,10 +1,13 @@
 //! The real-mode data-parallel trainer.
 //!
 //! One OS thread per rank ("GPU"). Each rank owns a compiled PJRT
-//! executable, its parameter/optimizer replicas, and a parallel loader;
-//! gradients are averaged with the *real* ring/tree all-reduce over the
-//! in-process transport. Every rank applies an identical optimizer
-//! update, so replicas stay bit-identical — asserted at the end of
+//! executable, its parameter replicas, and a parallel loader; gradients
+//! are averaged with the *real* ring/tree collectives over the
+//! in-process transport. Under ZeRO-0 every rank applies an identical
+//! optimizer update; under `zero_stage: 1` gradients are
+//! reduce-scattered per bucket, each rank steps only its shard (m/v
+//! sized to it), and updated parameters are all-gathered back — either
+//! way replicas end every step bit-identical, asserted at the end of
 //! every run (the fundamental DDP invariant).
 
 use std::path::PathBuf;
@@ -14,8 +17,9 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context};
 
-use crate::collectives::{allreduce, bucketed_allreduce, Algorithm,
-                         BucketPlan, World};
+use crate::collectives::{allreduce, bucketed_all_gather,
+                         bucketed_allreduce, bucketed_reduce_scatter,
+                         Algorithm, BucketPlan, World};
 use crate::config::{Config, ExecMode};
 use crate::data::loader::{load_dataset, LoaderPool};
 use crate::data::{EpochPlan, Masker, Sample};
@@ -86,8 +90,12 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     // DDP-style bucketing: sync the gradient in ~bucket_mb chunks in
     // reverse layer order, so each bucket's all-reduce launches as soon
     // as backward has produced it (rec. 4's overlap) instead of one
-    // blocking all-reduce after the whole backward pass
-    let bucket_plan = cfg.training.overlap_comm.then(|| {
+    // blocking all-reduce after the whole backward pass. ZeRO-1 rides
+    // the same partition: the bucket plan's per-rank shard ranges are
+    // the sharded optimizer's ownership map (validation already
+    // requires overlap_comm with zero_stage 1).
+    let zero = cfg.training.zero_stage == 1;
+    let bucket_plan = (cfg.training.overlap_comm || zero).then(|| {
         BucketPlan::new(meta.grad_len, cfg.training.bucket_mb)
     });
     let masker = Masker::new(cfg.data.mask_prob, cfg.model.vocab);
@@ -108,8 +116,19 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                     let engine = Engine::load(&opts.artifacts_dir, variant)
                         .with_context(|| format!("rank {rank} engine"))?;
                     let mut params = HostParams::init(&meta, cfg.seed);
-                    let mut opt =
-                        AdamW::new(&cfg.training, meta.grad_len);
+                    // ZeRO-1: this rank's AdamW owns (and sizes m/v
+                    // to) only its shard of every bucket; ZeRO-0 owns
+                    // the full flat range
+                    let mut opt = match (&bucket_plan, zero) {
+                        (Some(plan), true) => AdamW::sharded(
+                            &cfg.training,
+                            plan.rank_ranges(rank, world)),
+                        _ => AdamW::new(&cfg.training, meta.grad_len),
+                    };
+                    // scratch flat parameter vector for the ZeRO-1
+                    // all-gather (collectives run on flat buffers)
+                    let mut flat_params =
+                        vec![0.0f32; if zero { meta.grad_len } else { 0 }];
                     let mut records = Vec::new();
                     let inv_world = 1.0 / world as f32;
 
@@ -151,25 +170,55 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                             // with overlap on, one collective per bucket
                             // in the order backward produced them (the
                             // launch point a fused backward would
-                            // interleave with its remaining layers)
+                            // interleave with its remaining layers).
+                            // ZeRO-1 reduce-scatters instead: each rank
+                            // only needs the summed gradient for the
+                            // shard it steps — half the wire bytes, the
+                            // other half is spent all-gathering updated
+                            // params below.
                             let t_comm = Instant::now();
                             for g in out.grads.iter_mut() {
                                 *g *= inv_world;
                             }
-                            match &bucket_plan {
-                                Some(buckets) => bucketed_allreduce(
-                                    algo, &mut comm, &mut out.grads,
-                                    buckets)?,
-                                None => allreduce(algo, &mut comm,
-                                                  &mut out.grads)?,
+                            match (&bucket_plan, zero) {
+                                (Some(buckets), true) => {
+                                    bucketed_reduce_scatter(
+                                        algo, &mut comm, &mut out.grads,
+                                        buckets)?
+                                }
+                                (Some(buckets), false) => {
+                                    bucketed_allreduce(
+                                        algo, &mut comm, &mut out.grads,
+                                        buckets)?
+                                }
+                                (None, _) => allreduce(
+                                    algo, &mut comm, &mut out.grads)?,
                             }
                             let mut loss_buf = [out.loss * inv_world];
                             allreduce(algo, &mut comm, &mut loss_buf)?;
-                            let comm_secs =
+                            let mut comm_secs =
                                 t_comm.elapsed().as_secs_f64();
 
                             let lr = schedule.lr(step);
                             opt.step(&mut params, &meta, &out.grads, lr);
+
+                            // ZeRO-1: only the owned shard moved; all-
+                            // gather every rank's freshly stepped shard
+                            // so replicas re-converge before the next
+                            // forward (the DDP invariant, restored by
+                            // communication instead of redundant math)
+                            if let (Some(buckets), true) =
+                                (&bucket_plan, zero)
+                            {
+                                let t_ag = Instant::now();
+                                params.flatten_into(&mut flat_params);
+                                bucketed_all_gather(
+                                    algo, &mut comm, &mut flat_params,
+                                    buckets)?;
+                                params.unflatten_from(&flat_params);
+                                comm_secs +=
+                                    t_ag.elapsed().as_secs_f64();
+                            }
 
                             if rank == 0 {
                                 if cfg.training.log_every > 0
@@ -195,22 +244,39 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                     loader_wait_secs: loader_wait,
                                     comm_secs,
                                 });
-                                if cfg.training.checkpoint_every > 0
-                                    && (step + 1)
-                                        % cfg.training.checkpoint_every
-                                        == 0
+                            }
+                            // checkpointing: with sharded optimizer
+                            // state EVERY rank participates (the m/v
+                            // shards are gathered to rank 0 and merged
+                            // into one atomic, world-size-independent
+                            // file); replicated state saves from rank 0
+                            // alone as before
+                            if cfg.training.checkpoint_every > 0
+                                && (step + 1)
+                                    % cfg.training.checkpoint_every
+                                    == 0
+                            {
+                                if let Some(dir) = &opts.checkpoint_dir
                                 {
-                                    if let Some(dir) =
-                                        &opts.checkpoint_dir
-                                    {
-                                        let (s, m, v) = opt.state();
-                                        super::checkpoint::save(
-                                            &dir.join(format!(
-                                                "step-{:06}.ckpt",
-                                                step + 1
-                                            )),
-                                            s, &params, m, v,
-                                        )?;
+                                    let path = dir.join(format!(
+                                        "step-{:06}.ckpt",
+                                        step + 1
+                                    ));
+                                    let (s, m, v) = opt.state();
+                                    match (&bucket_plan, zero) {
+                                        (Some(plan), true) => {
+                                            super::checkpoint::save_sharded(
+                                                &path, &mut comm, plan,
+                                                s, &params, m, v,
+                                            )?
+                                        }
+                                        _ if rank == 0 => {
+                                            super::checkpoint::save(
+                                                &path, s, &params, m,
+                                                v,
+                                            )?
+                                        }
+                                        _ => {}
                                     }
                                 }
                             }

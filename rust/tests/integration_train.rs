@@ -86,6 +86,9 @@ fn bucketed_overlap_matches_monolithic_allreduce() {
         let dir = workdir(&format!("overlap-{overlap}"));
         let mut cfg = tiny_cfg(6);
         cfg.training.overlap_comm = overlap;
+        // isolate the overlap knob: quickstart defaults to zero_stage 1,
+        // which (validly) refuses to run without overlap
+        cfg.training.zero_stage = 0;
         let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
         let losses =
             out.report.records.iter().map(|r| r.loss).collect();
@@ -98,6 +101,28 @@ fn bucketed_overlap_matches_monolithic_allreduce() {
     for (a, b) in bucketed.iter().zip(&mono) {
         assert!((a - b).abs() < 5e-4, "bucketed {a} vs monolithic {b}");
     }
+}
+
+#[test]
+fn zero1_matches_replicated_trajectory_exactly() {
+    // quickstart runs zero_stage 1 (reduce-scatter → shard step →
+    // all-gather). Because ring all-reduce IS reduce-scatter +
+    // all-gather, the reduced value every rank sees per element is
+    // computed once on its owner either way — so the sharded run must
+    // reproduce the replicated trajectory BIT-identically, not just
+    // approximately (the artifact-free property test covers worlds
+    // {1,2,4,8}; this covers the full PJRT stack).
+    let run_with = |stage: usize| -> Vec<f32> {
+        let dir = workdir(&format!("zero-{stage}"));
+        let mut cfg = tiny_cfg(6);
+        cfg.training.zero_stage = stage;
+        let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+        let losses =
+            out.report.records.iter().map(|r| r.loss).collect();
+        std::fs::remove_dir_all(&dir).unwrap();
+        losses
+    };
+    assert_eq!(run_with(1), run_with(0));
 }
 
 #[test]

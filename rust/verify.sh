@@ -10,6 +10,9 @@ cd "$(dirname "$0")"
 
 cargo build --release
 cargo test -q
+# benches/examples are not built by `build`/`test`; type-check them so
+# they cannot silently rot out of the tier-1 gate
+cargo check --release --benches --examples
 
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo clippy --version >/dev/null 2>&1; then
