@@ -1,20 +1,22 @@
-//! BENCH collectives: real ring vs tree all-reduce across world sizes
-//! and buffer sizes (in-process transport), plus the α-β cost model's
+//! BENCH collectives: real ring vs tree all-reduce across world sizes,
+//! buffer sizes and transport backends, plus the α-β cost model's
 //! projected times on TX-GAIN for the same shapes — the ablation behind
-//! the `training.allreduce` config knob.
+//! the `training.allreduce` and `training.transport` config knobs.
 //!
 //! Run: `cargo bench --bench collectives`
 
-use txgain::collectives::{allreduce, Algorithm, CostModel, World};
+use txgain::collectives::{allreduce, Algorithm, Backend, CostModel};
 use txgain::config::ClusterConfig;
 use txgain::report::Table;
 use txgain::util::bench::{bench, black_box, section};
 
-fn run_real(algo: Algorithm, world: usize, len: usize) -> f64 {
+fn run_real(backend: Backend, algo: Algorithm, world: usize,
+            len: usize) -> f64 {
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
-        let handles: Vec<_> = World::new(world)
-            .into_comms()
+        let handles: Vec<_> = backend
+            .world(world)
+            .unwrap()
             .into_iter()
             .map(|mut c| {
                 s.spawn(move || {
@@ -32,7 +34,7 @@ fn run_real(algo: Algorithm, world: usize, len: usize) -> f64 {
 }
 
 fn main() {
-    section("real in-process all-reduce: ring vs tree");
+    section("real in-process all-reduce: ring vs tree (channel)");
     let mut t = Table::new(
         "wall time per all-reduce (mean of 5)",
         vec!["world", "floats", "ring(ms)", "tree(ms)", "winner"],
@@ -40,7 +42,10 @@ fn main() {
     for world in [2usize, 4, 8] {
         for len in [1_000usize, 100_000, 8_500_000] {
             let avg = |algo| -> f64 {
-                (0..5).map(|_| run_real(algo, world, len)).sum::<f64>()
+                (0..5)
+                    .map(|_| run_real(Backend::Channel, algo, world,
+                                      len))
+                    .sum::<f64>()
                     / 5.0
             };
             let ring = avg(Algorithm::Ring);
@@ -55,6 +60,27 @@ fn main() {
         }
     }
     println!("{}", t.render());
+
+    section("real ring all-reduce per transport backend");
+    let mut t = Table::new(
+        "wall time per ring all-reduce, world=4 (mean of 5)",
+        vec!["floats", "channel(ms)", "shm(ms)", "tcp(ms)"],
+    );
+    for len in [1_000usize, 100_000, 8_500_000] {
+        let mut cells = vec![len.to_string()];
+        for backend in Backend::ALL {
+            let avg = (0..5)
+                .map(|_| run_real(backend, Algorithm::Ring, 4, len))
+                .sum::<f64>()
+                / 5.0;
+            cells.push(format!("{:.2}", avg * 1e3));
+        }
+        t.row(&cells);
+    }
+    println!("{}", t.render());
+    println!("  channel/shm hand buffers over in-process; tcp pays \
+              real serialization\n  and syscalls per hop — the gap is \
+              the transport tier, not the algorithm.");
 
     section("α-β model projection on TX-GAIN (25 GbE + NVLink)");
     let cost = CostModel::from_cluster(&ClusterConfig::tx_gain(128));
@@ -81,6 +107,7 @@ fn main() {
     section("hot path");
     bench("ring all-reduce, world=4, 8.5M floats (e2e grads)", 2000,
           || {
-              black_box(run_real(Algorithm::Ring, 4, 8_500_000));
+              black_box(run_real(Backend::Channel, Algorithm::Ring, 4,
+                                 8_500_000));
           });
 }

@@ -5,16 +5,29 @@
 //! and reports the exposed all-reduce time against the blocking
 //! baseline (the paper's Fig. 1 step-anatomy argument: exposed comm is
 //! what kills scaling efficiency at high node counts). Part 2 times the
-//! real in-process bucketed all-reduce against the monolithic one.
+//! real bucketed all-reduce against the monolithic one — on every
+//! transport backend, so the bucketing overhead is visible per wire.
 //!
 //! Run: `cargo bench --bench rec4_overlap`
+//!
+//! The hot-path bench runs on the preset's `training.transport` knob;
+//! override it with `TXGAIN_TRANSPORT=channel|shm|tcp`.
 
 use txgain::collectives::{allreduce, bucketed_allreduce, Algorithm,
-                          BucketPlan, CostModel, World};
+                          AnyTransport, Backend, BucketPlan, CostModel};
 use txgain::config::{presets, ClusterConfig};
 use txgain::perfmodel::simulate;
 use txgain::report::Table;
 use txgain::util::bench::{bench, black_box, section};
+
+/// Backend under benchmark: the `TXGAIN_TRANSPORT` env var if set,
+/// else the quickstart preset's `training.transport` knob.
+fn configured_backend() -> Backend {
+    std::env::var("TXGAIN_TRANSPORT")
+        .unwrap_or_else(|_| presets::quickstart().training.transport)
+        .parse()
+        .expect("TXGAIN_TRANSPORT / training.transport")
+}
 
 fn main() {
     section("simulated: exposed comm vs bucket size (ring, bf16 grads)");
@@ -73,16 +86,17 @@ fn main() {
         on.comm_buckets
     );
 
-    section("real in-process: bucketed vs monolithic all-reduce");
+    section("real: bucketed vs monolithic all-reduce, per transport");
     let world = 4usize;
     let len = 8_500_000usize; // e2e-scale gradient
-    let run = |bucket_elems: Option<usize>| -> f64 {
+    let run = |backend: Backend, bucket_elems: Option<usize>| -> f64 {
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| {
-            let handles: Vec<_> = World::new(world)
-                .into_comms()
+            let handles: Vec<_> = backend
+                .world(world)
+                .unwrap()
                 .into_iter()
-                .map(|mut c| {
+                .map(|mut c: AnyTransport| {
                     s.spawn(move || {
                         let mut buf = vec![1.0f32; len];
                         match bucket_elems {
@@ -110,7 +124,7 @@ fn main() {
     };
     let mut t = Table::new(
         "wall time per all-reduce, world=4, 8.5M floats (mean of 5)",
-        vec!["buckets", "time(ms)"],
+        vec!["buckets", "channel(ms)", "shm(ms)", "tcp(ms)"],
     );
     for (label, elems) in [
         ("monolithic", None),
@@ -118,18 +132,25 @@ fn main() {
         ("6 x ~6MB", Some(len / 6 + 1)),
         ("14 x ~2.5MB", Some(len / 14 + 1)),
     ] {
-        let avg = (0..5).map(|_| run(elems)).sum::<f64>() / 5.0;
-        t.row(&[label.to_string(), format!("{:.2}", avg * 1e3)]);
+        let mut cells = vec![label.to_string()];
+        for backend in Backend::ALL {
+            let avg = (0..5).map(|_| run(backend, elems)).sum::<f64>()
+                / 5.0;
+            cells.push(format!("{:.2}", avg * 1e3));
+        }
+        t.row(&cells);
     }
     println!("{}", t.render());
-    println!("  (in-process, comm is never truly concurrent with \
-              compute here — the win shows up in the simulator and on \
-              a real network; this verifies the bucketed path costs \
-              little extra)");
+    println!("  (channel/shm move pointers, tcp genuinely serializes \
+              every byte through\n  loopback sockets — the per-wire \
+              spread is the transport tier the simulator's\n  α-β \
+              model prices; bucketing must stay cheap on all three)");
 
     section("hot path");
-    bench("bucketed ring all-reduce, world=4, 8.5M floats, 25MB", 2000,
-          || {
-              black_box(run(Some(6_250_000)));
+    let backend = configured_backend();
+    bench(&format!("bucketed ring all-reduce, world=4, 8.5M floats, \
+                    25MB, {backend}"),
+          2000, || {
+              black_box(run(backend, Some(6_250_000)));
           });
 }

@@ -6,15 +6,15 @@
 //! micro-batch headroom (the paper's rec. 5 lever). Part 2 prices the
 //! full step: reduce-scatter overlapped with backward plus the exposed
 //! parameter all-gather, against the plain overlapped all-reduce.
-//! Part 3 times the real in-process RS → shard-write → AG pipeline
-//! against the monolithic all-reduce: same wire bytes, so the sharding
-//! must cost ~nothing extra.
+//! Part 3 times the real RS → shard-write → AG pipeline against the
+//! monolithic all-reduce on every transport backend: same wire bytes,
+//! so the sharding must cost ~nothing extra on any wire.
 //!
 //! Run: `cargo bench --bench rec6_zero`
 
 use txgain::collectives::{allreduce, bucketed_all_gather,
-                          bucketed_reduce_scatter, Algorithm, BucketPlan,
-                          CostModel, RankMemory, World};
+                          bucketed_reduce_scatter, Algorithm, Backend,
+                          BucketPlan, CostModel, RankMemory};
 use txgain::config::presets;
 use txgain::perfmodel::simulate;
 use txgain::report::Table;
@@ -97,15 +97,16 @@ fn main() {
     }
     println!();
 
-    section("real in-process: RS + shard write + AG vs monolithic");
+    section("real: RS + shard write + AG vs monolithic, per transport");
     let world = 4usize;
     let len = 8_500_000usize; // e2e-scale gradient
     let plan = BucketPlan::from_elems(len, len / 6 + 1);
-    let run_zero = |plan: &BucketPlan| -> f64 {
+    let run_zero = |backend: Backend, plan: &BucketPlan| -> f64 {
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| {
-            let handles: Vec<_> = World::new(world)
-                .into_comms()
+            let handles: Vec<_> = backend
+                .world(world)
+                .unwrap()
                 .into_iter()
                 .enumerate()
                 .map(|(rank, mut c)| {
@@ -133,11 +134,12 @@ fn main() {
         });
         t0.elapsed().as_secs_f64()
     };
-    let run_allreduce = || -> f64 {
+    let run_allreduce = |backend: Backend| -> f64 {
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| {
-            let handles: Vec<_> = World::new(world)
-                .into_comms()
+            let handles: Vec<_> = backend
+                .world(world)
+                .unwrap()
                 .into_iter()
                 .map(|mut c| {
                     s.spawn(move || {
@@ -154,22 +156,31 @@ fn main() {
         });
         t0.elapsed().as_secs_f64()
     };
-    let zero: f64 = (0..5).map(|_| run_zero(&plan)).sum::<f64>() / 5.0;
-    let ar: f64 = (0..5).map(|_| run_allreduce()).sum::<f64>() / 5.0;
-    println!(
-        "  world=4, 8.5M floats (mean of 5): RS+step+AG {:.2} ms vs \
-         all-reduce {:.2} ms",
-        zero * 1e3, ar * 1e3
+    let mut t = Table::new(
+        "world=4, 8.5M floats (mean of 5) — same wire bytes per row",
+        vec!["transport", "RS+step+AG(ms)", "all-reduce(ms)"],
     );
+    for backend in Backend::ALL {
+        let zero: f64 =
+            (0..5).map(|_| run_zero(backend, &plan)).sum::<f64>() / 5.0;
+        let ar: f64 =
+            (0..5).map(|_| run_allreduce(backend)).sum::<f64>() / 5.0;
+        t.row(&[backend.to_string(), format!("{:.2}", zero * 1e3),
+                format!("{:.2}", ar * 1e3)]);
+    }
+    println!("{}", t.render());
     println!("  (same bytes on the wire; the shard write replaces \
               3/4 of the full optimizer\n  math each rank would do \
-              replicated — the win ZeRO banks)");
+              replicated — the win ZeRO banks. The channel/shm\n  vs \
+              tcp spread is pure transport cost: pointer moves vs \
+              genuine loopback\n  serialization.)");
 
     section("hot path");
     bench("bucketed reduce-scatter, world=4, 8.5M floats", 2000, || {
         std::thread::scope(|s| {
-            let handles: Vec<_> = World::new(world)
-                .into_comms()
+            let handles: Vec<_> = Backend::Channel
+                .world(world)
+                .unwrap()
                 .into_iter()
                 .map(|mut c| {
                     let plan = plan.clone();

@@ -11,7 +11,8 @@
 //!
 //! [`BucketPlan`] owns the partition; [`BucketManager`] tracks which
 //! buckets are ready as backward progresses; [`bucketed_allreduce`]
-//! drives the per-bucket collectives in ready order over a [`Comm`].
+//! drives the per-bucket collectives in ready order over any
+//! [`Transport`].
 //!
 //! Numerics note: each bucket is reduced with the same ring/tree
 //! algorithm as the monolithic path, but the chunk rotation inside the
@@ -25,7 +26,7 @@
 
 use anyhow::ensure;
 
-use super::comm::Comm;
+use super::transport::Transport;
 use super::{all_gather, allreduce, reduce_scatter, shard_spans,
             Algorithm};
 use crate::Result;
@@ -149,7 +150,7 @@ impl BucketPlan {
 /// hands out ready buckets in launch order. `bucketed_allreduce`
 /// launches synchronously and does not need this bookkeeping; the
 /// manager is the protocol for a transport that can genuinely overlap
-/// (ROADMAP: async/multi-backend `Comm`) — mark buckets ready
+/// (ROADMAP: an async [`Transport`] backend) — mark buckets ready
 /// tail-first as backward progresses, drain the queue between slices
 /// of remaining backward work.
 #[derive(Debug)]
@@ -218,8 +219,9 @@ impl BucketManager {
 /// pricing. Tag reuse across buckets is safe: the transport delivers
 /// per-(source, tag) messages FIFO and every rank launches buckets in
 /// the same order.
-pub fn bucketed_allreduce(algo: Algorithm, comm: &mut Comm,
-                          buf: &mut [f32], plan: &BucketPlan)
+pub fn bucketed_allreduce<T: Transport>(algo: Algorithm, comm: &mut T,
+                                        buf: &mut [f32],
+                                        plan: &BucketPlan)
     -> Result<()> {
     ensure!(plan.len() == buf.len(),
             "bucket plan covers {} elements but gradient has {}",
@@ -237,8 +239,10 @@ pub fn bucketed_allreduce(algo: Algorithm, comm: &mut Comm,
 /// world-wide sum; everything else is partial and must not be read.
 /// Same overlap schedule as [`bucketed_allreduce`] at half the wire
 /// bytes (ring).
-pub fn bucketed_reduce_scatter(algo: Algorithm, comm: &mut Comm,
-                               buf: &mut [f32], plan: &BucketPlan)
+pub fn bucketed_reduce_scatter<T: Transport>(algo: Algorithm,
+                                             comm: &mut T,
+                                             buf: &mut [f32],
+                                             plan: &BucketPlan)
     -> Result<()> {
     ensure!(plan.len() == buf.len(),
             "bucket plan covers {} elements but gradient has {}",
@@ -255,8 +259,9 @@ pub fn bucketed_reduce_scatter(algo: Algorithm, comm: &mut Comm,
 /// entry (the freshly stepped parameter shard); on return every rank
 /// holds the full updated vector. Runs in the same bucket order as the
 /// reduce-scatter so tag reuse across steps stays FIFO-consistent.
-pub fn bucketed_all_gather(algo: Algorithm, comm: &mut Comm,
-                           buf: &mut [f32], plan: &BucketPlan)
+pub fn bucketed_all_gather<T: Transport>(algo: Algorithm, comm: &mut T,
+                                         buf: &mut [f32],
+                                         plan: &BucketPlan)
     -> Result<()> {
     ensure!(plan.len() == buf.len(),
             "bucket plan covers {} elements but buffer has {}",

@@ -231,6 +231,60 @@ impl CostModel {
     pub fn gradient_bytes(params: u64) -> f64 {
         params as f64 * 2.0
     }
+
+    /// Inter-node wire bytes for an all-reduce of `bytes` under
+    /// `algo` — the modeled counterpart of
+    /// `TransportStats::wire_bytes_sent`. Under ring the schedule is
+    /// symmetric, so this is exactly what every rank sends and the
+    /// measured stats match it rank for rank. Under tree the traffic
+    /// is root-bound and asymmetric; the value reported is the BUSIEST
+    /// link's total (the root — what the α-β time model prices), which
+    /// upper-bounds any single rank's measured bytes rather than
+    /// matching them.
+    pub fn allreduce_wire_bytes(&self, algo: Algorithm, nodes: usize,
+                                bytes: f64) -> f64 {
+        if nodes <= 1 {
+            return 0.0;
+        }
+        let n = nodes as f64;
+        match algo {
+            // ring: reduce-scatter + all-gather, (n-1)/n each
+            Algorithm::Ring => 2.0 * (n - 1.0) / n * bytes,
+            // tree: full buffer up and down, log2 rounds at the root
+            Algorithm::Tree => 2.0 * n.log2().ceil() * bytes,
+        }
+    }
+
+    /// Wire bytes for a reduce-scatter — per-rank under ring,
+    /// busiest-link under tree (the fallback is a full all-reduce,
+    /// priced honestly).
+    pub fn reduce_scatter_wire_bytes(&self, algo: Algorithm,
+                                     nodes: usize, bytes: f64) -> f64 {
+        if nodes <= 1 {
+            return 0.0;
+        }
+        let n = nodes as f64;
+        match algo {
+            Algorithm::Ring => (n - 1.0) / n * bytes,
+            Algorithm::Tree => self.allreduce_wire_bytes(algo, nodes,
+                                                         bytes),
+        }
+    }
+
+    /// Wire bytes for an all-gather — per-rank under ring; under tree
+    /// the root-bound gather + broadcast is reported at the root's
+    /// links (the bottleneck).
+    pub fn all_gather_wire_bytes(&self, algo: Algorithm, nodes: usize,
+                                 bytes: f64) -> f64 {
+        if nodes <= 1 {
+            return 0.0;
+        }
+        let n = nodes as f64;
+        match algo {
+            Algorithm::Ring => (n - 1.0) / n * bytes,
+            Algorithm::Tree => (n - 1.0) / n * bytes + (n - 1.0) * bytes,
+        }
+    }
 }
 
 /// Per-rank persistent training state (bytes) under ZeRO staging — the
@@ -451,6 +505,31 @@ mod tests {
         }
         // stage 0 ignores world entirely
         assert_eq!(RankMemory::new(params, 256, 0).total(), full.total());
+    }
+
+    #[test]
+    fn wire_bytes_follow_the_ring_constant() {
+        // 2(n-1)/n per rank for all-reduce, half each for RS/AG — and
+        // RS+AG == all-reduce on the wire (ZeRO's bargain), exactly
+        let m = model();
+        let bytes = 1e9;
+        for nodes in [2usize, 8, 128] {
+            let n = nodes as f64;
+            let ar = m.allreduce_wire_bytes(Algorithm::Ring, nodes,
+                                            bytes);
+            assert!((ar - 2.0 * (n - 1.0) / n * bytes).abs() < 1.0);
+            let rs = m.reduce_scatter_wire_bytes(Algorithm::Ring, nodes,
+                                                 bytes);
+            let ag = m.all_gather_wire_bytes(Algorithm::Ring, nodes,
+                                             bytes);
+            assert!((rs + ag - ar).abs() < 1.0);
+        }
+        // single node: nothing crosses the inter-node wire
+        assert_eq!(m.allreduce_wire_bytes(Algorithm::Ring, 1, bytes),
+                   0.0);
+        // tree moves strictly more at scale (why ring wins rec. 4)
+        assert!(m.allreduce_wire_bytes(Algorithm::Tree, 64, bytes)
+                > m.allreduce_wire_bytes(Algorithm::Ring, 64, bytes));
     }
 
     #[test]

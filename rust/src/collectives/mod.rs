@@ -1,13 +1,19 @@
 //! Gradient collectives: real implementations + analytic cost model.
 //!
-//! Real mode moves real bytes: [`comm`] is an in-process message
-//! transport (one mailbox per rank), and [`ring`]/[`tree`] implement
-//! all-reduce over it — the same reduce-scatter + all-gather structure
-//! NCCL uses under PyTorch DDP, so the bandwidth math matches the
-//! paper's recommendation 4.
+//! Real mode moves real bytes: [`transport`] defines the [`Transport`]
+//! trait — rank-to-rank messaging by `(peer, tag)` with buffer
+//! recycling and byte accounting — with three interchangeable backends
+//! (`channel` mailboxes, `shm` slot rings, `tcp` loopback sockets)
+//! behind the `training.transport` knob, and [`ring`]/[`tree`]
+//! implement all-reduce generically over it — the same reduce-scatter
+//! + all-gather structure NCCL uses under PyTorch DDP, so the
+//! bandwidth math matches the paper's recommendation 4.
 //!
 //! Simulated mode prices the same algorithms with [`cost`]'s
-//! hierarchical α-β model (NVLink intra-node, 25 GbE ring inter-node).
+//! hierarchical α-β model (NVLink intra-node, 25 GbE ring inter-node);
+//! [`TransportStats`] reports the matching measured traffic (buffer
+//! f32 bytes and modeled bf16 wire bytes) so real runs can be
+//! cross-checked against the model.
 //!
 //! [`bucket`] partitions the flat gradient into fixed-size buckets so
 //! each bucket's all-reduce can launch as soon as backward produces it
@@ -20,15 +26,17 @@
 //! — same total wire bytes, 1/world the optimizer memory.
 
 pub mod bucket;
-pub mod comm;
 pub mod cost;
 pub mod ring;
+pub mod transport;
 pub mod tree;
 
 pub use bucket::{bucketed_all_gather, bucketed_allreduce,
                  bucketed_reduce_scatter, BucketManager, BucketPlan};
-pub use comm::{Comm, World};
 pub use cost::{CostModel, OverlapCost, RankMemory};
+pub use transport::{AnyTransport, Backend, ChannelTransport,
+                    ShmTransport, TcpTransport, Transport,
+                    TransportStats, World};
 
 use crate::Result;
 
@@ -51,6 +59,8 @@ pub fn shard_spans(len: usize, world: usize) -> Vec<(usize, usize)> {
 }
 
 /// All-reduce algorithm selector (config `training.allreduce`).
+/// `FromStr`/`Display` are the single spelling shared by config
+/// parsing, error messages and the report tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
     Ring,
@@ -58,18 +68,36 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "ring" => Ok(Algorithm::Ring),
-            "tree" => Ok(Algorithm::Tree),
-            _ => anyhow::bail!("unknown allreduce algorithm '{s}'"),
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Algorithm::Ring => "ring",
+            Algorithm::Tree => "tree",
         }
     }
 }
 
+impl std::str::FromStr for Algorithm {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Algorithm> {
+        match s {
+            "ring" => Ok(Algorithm::Ring),
+            "tree" => Ok(Algorithm::Tree),
+            _ => anyhow::bail!(
+                "unknown allreduce algorithm '{s}' (expected ring|tree)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// In-place sum all-reduce of `buf` across all ranks of `comm`'s world.
-pub fn allreduce(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
-    -> Result<()> {
+pub fn allreduce<T: Transport>(algo: Algorithm, comm: &mut T,
+                               buf: &mut [f32]) -> Result<()> {
     match algo {
         Algorithm::Ring => ring::allreduce(comm, buf),
         Algorithm::Tree => tree::allreduce(comm, buf),
@@ -80,8 +108,8 @@ pub fn allreduce(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
 /// [`shard_spans`] span holds the world-wide sum (other spans are
 /// unspecified). Half the wire bytes of an all-reduce under ring; the
 /// tree fallback reduces the full buffer (own span is still correct).
-pub fn reduce_scatter(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
-    -> Result<()> {
+pub fn reduce_scatter<T: Transport>(algo: Algorithm, comm: &mut T,
+                                    buf: &mut [f32]) -> Result<()> {
     match algo {
         Algorithm::Ring => ring::reduce_scatter(comm, buf),
         Algorithm::Tree => tree::reduce_scatter(comm, buf),
@@ -90,8 +118,8 @@ pub fn reduce_scatter(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
 
 /// In-place all-gather: each rank's own [`shard_spans`] span is
 /// authoritative on entry; on return every rank holds all spans.
-pub fn all_gather(algo: Algorithm, comm: &mut Comm, buf: &mut [f32])
-    -> Result<()> {
+pub fn all_gather<T: Transport>(algo: Algorithm, comm: &mut T,
+                                buf: &mut [f32]) -> Result<()> {
     match algo {
         Algorithm::Ring => ring::all_gather(comm, buf),
         Algorithm::Tree => tree::all_gather(comm, buf),
@@ -121,6 +149,18 @@ mod tests {
                 assert!(w[0].1 - w[0].0 >= w[1].1 - w[1].0);
             }
         }
+    }
+
+    #[test]
+    fn algorithm_spelling_roundtrips() {
+        for a in [Algorithm::Ring, Algorithm::Tree] {
+            assert_eq!(a.as_str().parse::<Algorithm>().unwrap(), a);
+            assert_eq!(format!("{a}"), a.as_str());
+        }
+        let err = "butterfly".parse::<Algorithm>()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ring|tree"), "unhelpful: {err}");
     }
 
     /// RS then AG equals all-reduce for both algorithms — the identity
@@ -214,6 +254,49 @@ mod tests {
                         assert!((a - b).abs() < 1e-4,
                                 "{algo:?} world={world} len={len}");
                     }
+                }
+            }
+        }
+    }
+
+    /// Same collective, any backend: the sums agree across every
+    /// transport (the unit-level face of the conformance suite).
+    #[test]
+    fn allreduce_agrees_on_every_backend() {
+        for backend in Backend::ALL {
+            for (world, len) in [(2usize, 9usize), (3, 7)] {
+                let inputs: Vec<Vec<f32>> = (0..world)
+                    .map(|r| {
+                        (0..len).map(|i| (r * 2 + i) as f32).collect()
+                    })
+                    .collect();
+                let mut want = vec![0.0f32; len];
+                for inp in &inputs {
+                    for (w, v) in want.iter_mut().zip(inp) {
+                        *w += v;
+                    }
+                }
+                let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                    backend
+                        .world(world)
+                        .unwrap()
+                        .into_iter()
+                        .zip(inputs)
+                        .map(|(mut c, mut buf)| {
+                            s.spawn(move || {
+                                allreduce(Algorithm::Ring, &mut c,
+                                          &mut buf)
+                                    .unwrap();
+                                buf
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .collect()
+                });
+                for r in &out {
+                    assert_eq!(r, &want, "{backend} world={world}");
                 }
             }
         }

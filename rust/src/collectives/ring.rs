@@ -14,8 +14,8 @@
 //! sharded optimizer builds on). [`all_gather`] starts from that same
 //! ownership map.
 
-use super::comm::Comm;
 use super::shard_spans;
+use super::transport::Transport;
 use crate::Result;
 
 /// Tag base for the all-gather phase, mirroring the all-reduce layout
@@ -27,7 +27,8 @@ fn ag_tag(world: usize, s: usize) -> u32 {
 /// In-place ring reduce-scatter: on return, `buf[shard_spans[rank]]`
 /// holds the world-wide sum; other spans hold partial sums and must be
 /// treated as garbage. Each rank moves `(R-1)/R × bytes`.
-pub fn reduce_scatter(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+pub fn reduce_scatter<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
@@ -58,7 +59,8 @@ pub fn reduce_scatter(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
 /// In-place ring all-gather: on entry, rank `r`'s span
 /// `shard_spans(len, world)[r]` is authoritative; on return every rank
 /// holds every span's owner data. Each rank moves `(R-1)/R × bytes`.
-pub fn all_gather(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+pub fn all_gather<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
@@ -85,7 +87,8 @@ pub fn all_gather(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
 
 /// In-place sum all-reduce across the world: reduce-scatter then
 /// all-gather, `2 (R-1)/R × bytes` per rank total.
-pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+pub fn allreduce<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
     reduce_scatter(comm, buf)?;
     all_gather(comm, buf)
 }
@@ -93,12 +96,12 @@ pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::World;
+    use crate::collectives::{ChannelTransport, World};
 
     /// Run `op` on every rank of a fresh world over `inputs`.
     fn run_op(
         inputs: Vec<Vec<f32>>,
-        op: fn(&mut Comm, &mut [f32]) -> crate::Result<()>,
+        op: fn(&mut ChannelTransport, &mut [f32]) -> crate::Result<()>,
     ) -> Vec<Vec<f32>> {
         let world = inputs.len();
         std::thread::scope(|s| {
@@ -231,28 +234,32 @@ mod tests {
 
     #[test]
     fn moves_bandwidth_optimal_bytes() {
-        // each rank sends 2*(R-1)/R of the buffer
+        // each rank sends 2*(R-1)/R of the buffer: 4 B/elem in the f32
+        // buffers, 2 B/elem on the modeled bf16 wire
         let world = 4;
         let len = 400usize;
-        let sent: Vec<u64> = std::thread::scope(|s| {
-            World::new(world)
-                .into_comms()
-                .into_iter()
-                .map(|mut c| {
-                    s.spawn(move || {
-                        let mut buf = vec![1.0f32; len];
-                        allreduce(&mut c, &mut buf).unwrap();
-                        c.bytes_sent
+        let sent: Vec<crate::collectives::TransportStats> =
+            std::thread::scope(|s| {
+                World::new(world)
+                    .into_comms()
+                    .into_iter()
+                    .map(|mut c| {
+                        s.spawn(move || {
+                            let mut buf = vec![1.0f32; len];
+                            allreduce(&mut c, &mut buf).unwrap();
+                            c.stats()
+                        })
                     })
-                })
-                .collect::<Vec<_>>()
-                .into_iter()
-                .map(|h| h.join().unwrap())
-                .collect()
-        });
-        let expect = (2 * (world - 1) * (len / world) * 4) as u64;
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+        let elems = (2 * (world - 1) * (len / world)) as u64;
         for s in sent {
-            assert_eq!(s, expect);
+            assert_eq!(s.buffer_bytes_sent, elems * 4);
+            assert_eq!(s.wire_bytes_sent, elems * 2);
+            assert_eq!(s.msgs_sent, 2 * (world as u64 - 1));
         }
     }
 
@@ -260,25 +267,27 @@ mod tests {
     fn reduce_scatter_moves_half_the_allreduce_bytes() {
         let world = 4;
         let len = 400usize;
-        let sent: Vec<u64> = std::thread::scope(|s| {
-            World::new(world)
-                .into_comms()
-                .into_iter()
-                .map(|mut c| {
-                    s.spawn(move || {
-                        let mut buf = vec![1.0f32; len];
-                        reduce_scatter(&mut c, &mut buf).unwrap();
-                        c.bytes_sent
+        let sent: Vec<crate::collectives::TransportStats> =
+            std::thread::scope(|s| {
+                World::new(world)
+                    .into_comms()
+                    .into_iter()
+                    .map(|mut c| {
+                        s.spawn(move || {
+                            let mut buf = vec![1.0f32; len];
+                            reduce_scatter(&mut c, &mut buf).unwrap();
+                            c.stats()
+                        })
                     })
-                })
-                .collect::<Vec<_>>()
-                .into_iter()
-                .map(|h| h.join().unwrap())
-                .collect()
-        });
-        let expect = ((world - 1) * (len / world) * 4) as u64;
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+        let elems = ((world - 1) * (len / world)) as u64;
         for s in sent {
-            assert_eq!(s, expect);
+            assert_eq!(s.buffer_bytes_sent, elems * 4);
+            assert_eq!(s.wire_bytes_sent, elems * 2);
         }
     }
 }

@@ -1,0 +1,317 @@
+//! The shared-memory backend: a bounded slot ring per (src, dst) pair
+//! over shared buffers — no per-message channel machinery, no OS wait
+//! queues, just head/tail atomics and a spin-then-yield handoff. This
+//! models the paper's NVLink tier: latency is a couple of cache-line
+//! bounces, bandwidth is memcpy, and the rendezvous is polling rather
+//! than kernel scheduling.
+//!
+//! Each ring is strictly single-producer / single-consumer: `head` is
+//! advanced only by the sender, `tail` only by the receiver, and the
+//! slot payload handoff is an uncontended per-slot lock (the atomics
+//! order it; the lock only satisfies the borrow checker's aliasing
+//! rules without `unsafe`). [`RING_SLOTS`] bounds the in-flight window
+//! per pair — the same backpressure contract as the channel backend's
+//! send window.
+//!
+//! Liveness mirrors the channel backend: a shared per-rank `alive`
+//! flag, flipped on drop, turns waits on a dead peer into errors. A
+//! dead peer's in-flight slots remain receivable — the flag is only
+//! consulted when the ring is empty (recv) or full (send).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure};
+
+use super::{Transport, TransportStats, POOL_CAP};
+use crate::Result;
+
+/// In-flight messages per (src, dst) ring — the shm backpressure
+/// window, matching the channel backend's `SEND_WINDOW`.
+pub const RING_SLOTS: usize = 8;
+
+/// Spins before falling back to `yield_now` while waiting on a ring.
+const SPINS_BEFORE_YIELD: u32 = 64;
+
+fn backoff(spins: &mut u32) {
+    if *spins < SPINS_BEFORE_YIELD {
+        *spins += 1;
+        std::hint::spin_loop();
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+/// One SPSC slot ring. `head`/`tail` are free-running counters; slots
+/// are indexed mod [`RING_SLOTS`].
+struct Ring {
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    slots: Vec<Mutex<Option<(u32, Vec<f32>)>>>,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring {
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            slots: (0..RING_SLOTS).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+}
+
+/// The world's shared fabric: `rings[src * world + dst]` plus liveness.
+struct Shared {
+    world: usize,
+    rings: Vec<Ring>,
+    alive: Vec<AtomicBool>,
+}
+
+/// Per-rank handle onto the shared slot-ring fabric.
+pub struct ShmTransport {
+    rank: usize,
+    world: usize,
+    shared: Arc<Shared>,
+    /// Out-of-order arrivals parked until someone asks for them.
+    parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
+    pool: Vec<Vec<f32>>,
+    stats: TransportStats,
+}
+
+impl ShmTransport {
+    /// Build all ranks' transports over one shared fabric.
+    pub fn world(world: usize) -> Vec<ShmTransport> {
+        assert!(world > 0);
+        let shared = Arc::new(Shared {
+            world,
+            rings: (0..world * world).map(|_| Ring::new()).collect(),
+            alive: (0..world).map(|_| AtomicBool::new(true)).collect(),
+        });
+        (0..world)
+            .map(|rank| ShmTransport {
+                rank,
+                world,
+                shared: shared.clone(),
+                parked: HashMap::new(),
+                pool: Vec::new(),
+                stats: TransportStats::default(),
+            })
+            .collect()
+    }
+
+    fn ring(&self, src: usize, dst: usize) -> &Ring {
+        &self.shared.rings[src * self.shared.world + dst]
+    }
+}
+
+impl Transport for ShmTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_slice(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<()> {
+        ensure!(to < self.world,
+                "rank {} send to rank {to} outside world {}",
+                self.rank, self.world);
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(data);
+
+        let ring = self.ring(self.rank, to);
+        let head = ring.head.load(Ordering::Relaxed); // sole producer
+        let mut spins = 0u32;
+        loop {
+            let tail = ring.tail.load(Ordering::Acquire);
+            if head - tail < RING_SLOTS {
+                break;
+            }
+            if !self.shared.alive[to].load(Ordering::Acquire) {
+                bail!("rank {} send to dead rank {to}", self.rank);
+            }
+            backoff(&mut spins);
+        }
+        *ring.slots[head % RING_SLOTS].lock().unwrap() =
+            Some((tag, buf));
+        ring.head.store(head + 1, Ordering::Release);
+        self.stats.record_send(data.len());
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
+        ensure!(from < self.world,
+                "rank {} recv from rank {from} outside world {}",
+                self.rank, self.world);
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(v) = q.pop_front() {
+                return Ok(v);
+            }
+        }
+        let mut spins = 0u32;
+        loop {
+            let ring = self.ring(from, self.rank);
+            let tail = ring.tail.load(Ordering::Relaxed); // sole consumer
+            if ring.head.load(Ordering::Acquire) != tail {
+                let (t, data) = ring.slots[tail % RING_SLOTS]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("slot ring corrupted: empty slot below head");
+                ring.tail.store(tail + 1, Ordering::Release);
+                self.stats.record_recv(data.len());
+                if t == tag {
+                    return Ok(data);
+                }
+                self.parked.entry((from, t)).or_default().push_back(data);
+                spins = 0;
+                continue;
+            }
+            // ring empty: a dead peer's slots were all published
+            // before its alive flag dropped (slot store happens-before
+            // the Release flag store), so after an Acquire load of the
+            // flag one head re-read decides — either the final publish
+            // is now visible, or nothing more can ever arrive
+            if !self.shared.alive[from].load(Ordering::Acquire) {
+                if ring.head.load(Ordering::Acquire) != tail {
+                    continue; // the racing final publish: go take it
+                }
+                bail!("rank {}: recv from dead rank {from} (tag {tag})",
+                      self.rank);
+            }
+            backoff(&mut spins);
+        }
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        if self.pool.len() < POOL_CAP {
+            self.pool.push(buf);
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+impl Drop for ShmTransport {
+    fn drop(&mut self) {
+        self.shared.alive[self.rank].store(false, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn roundtrip_across_threads() {
+        let mut comms = ShmTransport::world(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                c0.send_slice(1, 7, &[1.0, 2.0]).unwrap();
+                assert_eq!(c0.recv(1, 8).unwrap(), vec![3.0]);
+            });
+            s.spawn(move || {
+                assert_eq!(c1.recv(0, 7).unwrap(), vec![1.0, 2.0]);
+                c1.send_slice(0, 8, &[3.0]).unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn selective_receive_parks_other_tags() {
+        let mut comms = ShmTransport::world(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.send_slice(1, 1, &[1.0]).unwrap();
+        c0.send_slice(1, 2, &[2.0]).unwrap();
+        c0.send_slice(1, 1, &[3.0]).unwrap();
+        assert_eq!(c1.recv(0, 2).unwrap(), vec![2.0]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn ring_wraps_past_its_capacity() {
+        let mut comms = ShmTransport::world(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        // many more messages than slots, drained in lockstep
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for i in 0..10 * RING_SLOTS {
+                    c0.send_slice(1, 0, &[i as f32]).unwrap();
+                }
+            });
+            s.spawn(move || {
+                for i in 0..10 * RING_SLOTS {
+                    assert_eq!(c1.recv(0, 0).unwrap(), vec![i as f32]);
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn full_ring_applies_backpressure() {
+        use std::sync::atomic::AtomicBool;
+
+        let mut comms = ShmTransport::world(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        for i in 0..RING_SLOTS {
+            c0.send_slice(1, i as u32, &[i as f32]).unwrap();
+        }
+        let sent = Arc::new(AtomicBool::new(false));
+        let sent2 = sent.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                c0.send_slice(1, 99, &[9.9]).unwrap();
+                sent2.store(true, Ordering::SeqCst);
+            });
+            std::thread::sleep(Duration::from_millis(60));
+            assert!(!sent.load(Ordering::SeqCst),
+                    "send past the ring capacity did not block");
+            assert_eq!(c1.recv(0, 0).unwrap(), vec![0.0]);
+        });
+        assert!(sent.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn dead_peer_send_and_recv_error() {
+        let mut comms = ShmTransport::world(3);
+        let c2 = comms.pop().unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        drop(c2);
+        assert!(c1.recv(2, 0).unwrap_err().to_string()
+            .contains("dead rank 2"));
+        // send: the ring accepts up to its window, then reports death
+        let mut failed = false;
+        for _ in 0..=RING_SLOTS {
+            if c0.send_slice(2, 0, &[1.0]).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "send to dead rank never errored");
+    }
+
+    #[test]
+    fn slots_from_a_dead_peer_remain_receivable() {
+        let mut comms = ShmTransport::world(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.send_slice(1, 4, &[5.0]).unwrap();
+        drop(c0);
+        assert_eq!(c1.recv(0, 4).unwrap(), vec![5.0]);
+        assert!(c1.recv(0, 4).is_err());
+    }
+}

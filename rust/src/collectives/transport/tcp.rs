@@ -1,0 +1,381 @@
+//! The TCP backend: real sockets over loopback, one connection per
+//! unordered rank pair, length-prefixed frames — the first transport
+//! where bytes genuinely serialize onto a wire (the 25 GbE tier's
+//! shape, with loopback's numbers: syscalls, framing, kernel socket
+//! buffers and flow control are all real).
+//!
+//! Framing: a message is one or more frames of
+//! `[tag: u32][elems: u32][last: u32]` followed by `elems` little-
+//! endian f32s, with payloads capped at [`MAX_FRAME_ELEMS`] — large
+//! gradients span many frames and are reassembled on receive. Frames
+//! of one message are never interleaved with another on the same
+//! stream (each pair has a dedicated connection and a single writer).
+//!
+//! Writes go through a per-peer writer thread fed by a bounded queue.
+//! This keeps `send_slice` from blocking on the kernel socket buffer —
+//! without it, a ring schedule where every rank sends a
+//! larger-than-socket-buffer chunk before posting its receive would
+//! deadlock head-to-head. The queue bound (the same window as the
+//! other backends) plus TCP's own flow control is the backpressure.
+//!
+//! Dead peers: a closed connection surfaces as EOF on receive
+//! (immediate error) and as a write failure in the writer thread,
+//! which flags the peer dead so the next `send_slice` errors — the
+//! "graceful dead-peer error" leg of the conformance suite.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context};
+
+use super::{Transport, TransportStats, POOL_CAP};
+use crate::Result;
+
+/// Max f32 elements per frame (256 KiB of payload): large messages
+/// span many frames, exercising reassembly and keeping any one write
+/// bounded.
+pub const MAX_FRAME_ELEMS: usize = 1 << 16;
+
+const FRAME_HDR_BYTES: usize = 12;
+
+/// Outbound messages queued to a peer's writer thread before
+/// `send_slice` blocks — the same in-flight window as the channel and
+/// shm backends.
+const SEND_QUEUE: usize = 8;
+
+/// Encode and write every frame of one message.
+fn write_frames(stream: &mut TcpStream, tag: u32, data: &[f32],
+                wbuf: &mut Vec<u8>) -> std::io::Result<()> {
+    let mut off = 0usize;
+    loop {
+        let end = (off + MAX_FRAME_ELEMS).min(data.len());
+        let chunk = &data[off..end];
+        let last = end == data.len();
+        wbuf.clear();
+        wbuf.extend_from_slice(&tag.to_le_bytes());
+        wbuf.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
+        wbuf.extend_from_slice(&u32::from(last).to_le_bytes());
+        for x in chunk {
+            wbuf.extend_from_slice(&x.to_le_bytes());
+        }
+        stream.write_all(wbuf)?;
+        if last {
+            return Ok(());
+        }
+        off = end;
+    }
+}
+
+/// One connected peer: a writer-thread handle for sends, a buffered
+/// reader for receives, and the writer's death flag.
+struct Peer {
+    tx: SyncSender<(u32, Vec<f32>)>,
+    reader: BufReader<TcpStream>,
+    dead: Arc<AtomicBool>,
+}
+
+impl Peer {
+    fn new(stream: TcpStream) -> Result<Peer> {
+        stream.set_nodelay(true)
+            .context("setting TCP_NODELAY on rank link")?;
+        let read_half = stream.try_clone()
+            .context("cloning rank link for reads")?;
+        let (tx, rx) = sync_channel::<(u32, Vec<f32>)>(SEND_QUEUE);
+        let dead = Arc::new(AtomicBool::new(false));
+        spawn_writer(stream, rx, dead.clone());
+        Ok(Peer {
+            tx,
+            reader: BufReader::with_capacity(1 << 16, read_half),
+            dead,
+        })
+    }
+}
+
+fn spawn_writer(mut stream: TcpStream, rx: Receiver<(u32, Vec<f32>)>,
+                dead: Arc<AtomicBool>) {
+    std::thread::spawn(move || {
+        let mut wbuf = Vec::new();
+        while let Ok((tag, data)) = rx.recv() {
+            if write_frames(&mut stream, tag, &data, &mut wbuf).is_err() {
+                dead.store(true, Ordering::Release);
+                // keep draining so blocked senders fail via the flag
+                // instead of hanging on a full queue
+                while rx.recv().is_ok() {}
+                return;
+            }
+        }
+    });
+}
+
+/// Per-rank handle over the loopback mesh.
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    /// `peers[p]` is `Some` for every `p != rank`.
+    peers: Vec<Option<Peer>>,
+    parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
+    pool: Vec<Vec<f32>>,
+    /// Reusable byte buffer for frame payload reads.
+    rbuf: Vec<u8>,
+    stats: TransportStats,
+}
+
+impl TcpTransport {
+    /// Bind one loopback listener per rank and connect the full mesh:
+    /// for each pair `i < j`, rank `j` dials rank `i`. Serial, so the
+    /// accept order is deterministic and needs no handshake protocol.
+    pub fn world(world: usize) -> Result<Vec<TcpTransport>> {
+        assert!(world > 0);
+        let mut listeners = Vec::with_capacity(world);
+        let mut addrs = Vec::with_capacity(world);
+        for rank in 0..world {
+            let l = TcpListener::bind("127.0.0.1:0")
+                .with_context(|| format!("rank {rank}: binding \
+                                          loopback listener"))?;
+            addrs.push(l.local_addr()?);
+            listeners.push(l);
+        }
+        let mut peers: Vec<Vec<Option<Peer>>> = (0..world)
+            .map(|_| (0..world).map(|_| None).collect())
+            .collect();
+        for i in 0..world {
+            for j in (i + 1)..world {
+                let outbound = TcpStream::connect(addrs[i])
+                    .with_context(|| format!("rank {j} connecting to \
+                                              rank {i}"))?;
+                let (inbound, _) = listeners[i].accept()
+                    .with_context(|| format!("rank {i} accepting \
+                                              rank {j}"))?;
+                peers[j][i] = Some(Peer::new(outbound)?);
+                peers[i][j] = Some(Peer::new(inbound)?);
+            }
+        }
+        Ok(peers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, peers)| TcpTransport {
+                rank,
+                world,
+                peers,
+                parked: HashMap::new(),
+                pool: Vec::new(),
+                rbuf: Vec::new(),
+                stats: TransportStats::default(),
+            })
+            .collect())
+    }
+
+    /// Read one whole message (all frames) from `from`'s stream.
+    fn read_message(&mut self, from: usize) -> Result<(u32, Vec<f32>)> {
+        let rank = self.rank;
+        let mut out = self.pool.pop().unwrap_or_default();
+        out.clear();
+        let mut msg_tag: Option<u32> = None;
+        let peer = self.peers[from]
+            .as_mut()
+            .expect("mesh link missing");
+        loop {
+            let mut hdr = [0u8; FRAME_HDR_BYTES];
+            peer.reader.read_exact(&mut hdr).with_context(|| {
+                format!("rank {rank}: rank {from} closed the \
+                         connection (dead peer)")
+            })?;
+            let tag = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+            let elems =
+                u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+            let last = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+            if elems > MAX_FRAME_ELEMS || last > 1 {
+                bail!("rank {rank}: corrupt frame from rank {from} \
+                       ({elems} elems, last={last})");
+            }
+            match msg_tag {
+                None => msg_tag = Some(tag),
+                Some(t0) => ensure!(
+                    tag == t0,
+                    "rank {rank}: interleaved frames from rank {from} \
+                     (tag {tag} inside message tagged {t0})"),
+            }
+            self.rbuf.resize(elems * 4, 0);
+            peer.reader.read_exact(&mut self.rbuf).with_context(|| {
+                format!("rank {rank}: rank {from} died mid-frame")
+            })?;
+            out.extend(self.rbuf.chunks_exact(4).map(|c| {
+                f32::from_le_bytes(c.try_into().unwrap())
+            }));
+            if last == 1 {
+                break;
+            }
+        }
+        self.stats.record_recv(out.len());
+        Ok((msg_tag.expect("message has at least one frame"), out))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_slice(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<()> {
+        ensure!(to < self.world,
+                "rank {} send to rank {to} outside world {}",
+                self.rank, self.world);
+        ensure!(to != self.rank,
+                "tcp transport has no loopback link to itself \
+                 (rank {})", self.rank);
+        let peer = self.peers[to].as_ref().expect("mesh link missing");
+        if peer.dead.load(Ordering::Acquire) {
+            bail!("rank {} send to dead rank {to} (connection lost)",
+                  self.rank);
+        }
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(data);
+        self.stats.record_send(data.len());
+        peer.tx
+            .send((tag, buf))
+            .ok()
+            .with_context(|| format!("rank {} send to dead rank {to} \
+                                      (writer shut down)", self.rank))
+    }
+
+    fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
+        ensure!(from < self.world,
+                "rank {} recv from rank {from} outside world {}",
+                self.rank, self.world);
+        ensure!(from != self.rank,
+                "tcp transport has no loopback link to itself \
+                 (rank {})", self.rank);
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(v) = q.pop_front() {
+                return Ok(v);
+            }
+        }
+        loop {
+            let (t, data) = self.read_message(from)?;
+            if t == tag {
+                return Ok(data);
+            }
+            self.parked.entry((from, t)).or_default().push_back(data);
+        }
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        if self.pool.len() < POOL_CAP {
+            self.pool.push(buf);
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn roundtrip_over_loopback() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                c0.send_slice(1, 7, &[1.0, 2.0]).unwrap();
+                assert_eq!(c0.recv(1, 8).unwrap(), vec![3.0]);
+            });
+            s.spawn(move || {
+                assert_eq!(c1.recv(0, 7).unwrap(), vec![1.0, 2.0]);
+                c1.send_slice(0, 8, &[3.0]).unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn selective_receive_parks_other_tags() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.send_slice(1, 1, &[1.0]).unwrap();
+        c0.send_slice(1, 2, &[2.0]).unwrap();
+        c0.send_slice(1, 1, &[3.0]).unwrap();
+        assert_eq!(c1.recv(0, 2).unwrap(), vec![2.0]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn large_payload_spans_many_frames() {
+        let n = 3 * MAX_FRAME_ELEMS + 1234; // 4 frames, uneven tail
+        let data: Vec<f32> = (0..n).map(|i| (i % 1013) as f32).collect();
+        let mut comms = TcpTransport::world(2).unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        let expect = data.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                c0.send_slice(1, 5, &data).unwrap();
+            });
+            s.spawn(move || {
+                assert_eq!(c1.recv(0, 5).unwrap(), expect);
+            });
+        });
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.send_slice(1, 3, &[]).unwrap();
+        assert!(c1.recv(0, 3).unwrap().is_empty());
+    }
+
+    #[test]
+    fn recv_from_dead_peer_errors() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        drop(c0);
+        let err = c1.recv(0, 0).unwrap_err().to_string();
+        assert!(err.contains("dead peer"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn send_to_dead_peer_eventually_errors() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        drop(c1);
+        // the first write(s) can land in kernel buffers; the RST from
+        // the closed peer must surface within a bounded number of sends
+        let mut failed = false;
+        for _ in 0..200 {
+            if c0.send_slice(1, 0, &[1.0; 64]).is_err() {
+                failed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(failed, "send to dead rank never errored");
+    }
+
+    #[test]
+    fn no_self_link() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let mut c0 = comms.remove(0);
+        assert!(c0.send_slice(0, 0, &[1.0]).is_err());
+        assert!(c0.recv(0, 0).is_err());
+    }
+}

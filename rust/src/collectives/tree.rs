@@ -3,8 +3,8 @@
 //! root's links — the baseline the ring beats on large gradients; the
 //! collectives bench shows the crossover.
 
-use super::comm::Comm;
 use super::shard_spans;
+use super::transport::Transport;
 use crate::Result;
 
 const REDUCE_TAG: u32 = 0x7000;
@@ -13,7 +13,8 @@ const AG_GATHER_TAG: u32 = 0x7002;
 const AG_BCAST_TAG: u32 = 0x7003;
 
 /// In-place sum all-reduce across the world (binomial tree).
-pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+pub fn allreduce<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
@@ -62,7 +63,8 @@ pub fn allreduce(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
 /// (a plain tree all-reduce). The [`shard_spans`] contract still holds
 /// — each rank's own span carries the world-wide sum, it just pays the
 /// full all-reduce wire cost (priced honestly by the cost model).
-pub fn reduce_scatter(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+pub fn reduce_scatter<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
     allreduce(comm, buf)
 }
 
@@ -70,7 +72,8 @@ pub fn reduce_scatter(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
 /// to rank 0, then broadcast the assembled buffer. Root-bound (the
 /// latency-optimal tree is the wrong tool past tiny buffers) but
 /// correct at any world size.
-pub fn all_gather(comm: &mut Comm, buf: &mut [f32]) -> Result<()> {
+pub fn all_gather<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {

@@ -89,6 +89,9 @@ fn real_training(batch: usize, steps: usize) -> TrainingConfig {
         weight_decay: 0.01,
         adam_eps: 1e-8,
         allreduce: "ring".into(),
+        // in-process mpsc default; smoke/bench runs can flip to
+        // "shm"/"tcp" — numerics are transport-invariant
+        transport: "channel".into(),
         bucket_mb: 25.0,
         overlap_comm: true,
         zero_stage: 0,

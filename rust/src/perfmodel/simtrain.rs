@@ -57,6 +57,13 @@ pub struct SimResult {
     pub comm_exposed_secs: f64,
     /// Gradient buckets used for the overlap (1 when overlap is off).
     pub comm_buckets: usize,
+    /// Modeled inter-node wire bytes per step (bf16 gradient traffic
+    /// priced by the α-β model). Under ring (the paper's algorithm)
+    /// the schedule is symmetric and this is directly comparable to
+    /// the trainer's measured `TransportStats::wire_bytes_sent` per
+    /// rank; under tree it reports the busiest (root) link, an upper
+    /// bound on any single rank.
+    pub wire_bytes_per_rank: f64,
     /// Optimizer-state (Adam m+v) bytes held per rank — `8·P` under
     /// ZeRO-0, `8·P/world` under ZeRO-1. The memory the `zero_stage`
     /// knob trades against batch.
@@ -95,10 +102,10 @@ pub fn simulate(cfg: &Config) -> SimResult {
     // (≈ 2/3 of compute) when overlap is on, blocking otherwise
     let cost = CostModel::from_cluster(c);
     let grad_bytes = CostModel::gradient_bytes(cfg.model.param_count());
-    let algo = match cfg.training.allreduce.as_str() {
-        "tree" => Algorithm::Tree,
-        _ => Algorithm::Ring,
-    };
+    // FromStr shares the config's spelling; an unvalidated config
+    // falls back to ring (the paper's algorithm) rather than panicking
+    let algo: Algorithm =
+        cfg.training.allreduce.parse().unwrap_or(Algorithm::Ring);
     let bwd = compute * 2.0 / 3.0;
     // bucket_mb counts f32 *buffer* bytes, so derive params/bucket
     // from the real trainer's own BucketPlan arithmetic; the wire
@@ -133,6 +140,14 @@ pub fn simulate(cfg: &Config) -> SimResult {
     } else {
         let t = cost.allreduce(algo, c.nodes, grad_bytes);
         (t, t, 1)
+    };
+    // per-rank wire traffic for the same schedule: RS+AG under ZeRO,
+    // one all-reduce otherwise (identical under ring — the bargain)
+    let wire_bytes = if zero >= 1 {
+        cost.reduce_scatter_wire_bytes(algo, c.nodes, grad_bytes)
+            + cost.all_gather_wire_bytes(algo, c.nodes, grad_bytes)
+    } else {
+        cost.allreduce_wire_bytes(algo, c.nodes, grad_bytes)
     };
 
     // per-rank memory anatomy under the configured ZeRO stage
@@ -174,6 +189,7 @@ pub fn simulate(cfg: &Config) -> SimResult {
         comm_secs: comm,
         comm_exposed_secs: comm_exposed,
         comm_buckets,
+        wire_bytes_per_rank: wire_bytes,
         opt_bytes_per_rank: rank_mem.optimizer_bytes,
         mem_headroom_bytes: mem_headroom,
         loader_exposed_secs: loader_exposed,
@@ -306,6 +322,28 @@ mod tests {
     #[test]
     fn scaling_efficiency_of_empty_sweep_is_empty() {
         assert!(scaling_efficiency(&[]).is_empty());
+    }
+
+    #[test]
+    fn wire_bytes_match_the_ring_constant_and_stay_stage_invariant() {
+        // the Fig. 1 traffic column: 2(n-1)/n × bf16 grads per rank,
+        // and identical across ZeRO stages under ring (RS+AG == AR)
+        let mut cfg = paper_cfg(presets::model_bert_120m(), 184);
+        cfg.training.zero_stage = 0;
+        let r0 = simulate(&cfg);
+        cfg.training.zero_stage = 1;
+        let r1 = simulate(&cfg);
+        let n = cfg.cluster.nodes as f64;
+        let expect = 2.0 * (n - 1.0) / n
+            * crate::collectives::CostModel::gradient_bytes(
+                cfg.model.param_count());
+        assert!((r0.wire_bytes_per_rank - expect).abs() < 1.0,
+                "{} vs {expect}", r0.wire_bytes_per_rank);
+        assert!((r1.wire_bytes_per_rank - r0.wire_bytes_per_rank).abs()
+                < 1.0);
+        // one node: no inter-node traffic at all
+        cfg.cluster.nodes = 1;
+        assert_eq!(simulate(&cfg).wire_bytes_per_rank, 0.0);
     }
 
     #[test]

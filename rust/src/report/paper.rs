@@ -37,7 +37,7 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
     let mut t = Table::new(
         &format!("FIG. 1 — pretraining scaling performance ({model_name})"),
         vec!["nodes", "gpus", "batch/gpu", "samples/s", "scale-eff",
-             "step(ms)", "compute(ms)", "comm-exposed(ms)",
+             "step(ms)", "compute(ms)", "comm-exposed(ms)", "wire/step",
              "opt-mem/rank", "gpu-util"],
     );
     let Some(base) = sweep.first() else {
@@ -55,6 +55,7 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
             format!("{:.1}", r.step_secs * 1e3),
             format!("{:.1}", r.compute_secs * 1e3),
             format!("{:.1}", r.comm_exposed_secs * 1e3),
+            format!("{:.1}MB", r.wire_bytes_per_rank / 1e6),
             format!("{:.1}MB", r.opt_bytes_per_rank / 1e6),
             format!("{:.3}", r.gpu_util),
         ]);
@@ -67,7 +68,8 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
     let mut w = CsvWriter::new(vec![
         "model", "nodes", "gpus", "batch_per_gpu", "samples_per_sec",
         "step_secs", "compute_secs", "comm_secs", "comm_exposed_secs",
-        "opt_bytes_per_rank", "mem_headroom_bytes", "gpu_util",
+        "wire_bytes_per_rank", "opt_bytes_per_rank",
+        "mem_headroom_bytes", "gpu_util",
     ]);
     for (name, sweep) in series {
         for r in sweep {
@@ -81,6 +83,7 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
                 format!("{:.6}", r.compute_secs),
                 format!("{:.6}", r.comm_secs),
                 format!("{:.6}", r.comm_exposed_secs),
+                format!("{:.0}", r.wire_bytes_per_rank),
                 format!("{:.0}", r.opt_bytes_per_rank),
                 format!("{:.0}", r.mem_headroom_bytes),
                 format!("{:.4}", r.gpu_util),
@@ -121,6 +124,21 @@ mod tests {
         assert_eq!(t.len(), 3);
         let csv = fig1_csv(&[("bert-120m", sweep)]);
         assert_eq!(csv.len(), 3);
+    }
+
+    #[test]
+    fn fig1_reports_wire_traffic() {
+        // the measured-vs-modeled cross-check column: wire bytes per
+        // rank appear in both the table and the CSV
+        let cfg = presets::paper_full_scale();
+        let sweep = sweep_nodes(&cfg, &[1, 128]);
+        let s = fig1_table("bert-120m", &sweep).render();
+        assert!(s.contains("wire/step"), "missing column: {s}");
+        let csv = fig1_csv(&[("bert-120m", sweep.clone())]).to_string();
+        assert!(csv.contains("wire_bytes_per_rank"));
+        // one node moves nothing inter-node; 128 nodes ~2(n-1)/n·bf16
+        assert_eq!(sweep[0].wire_bytes_per_rank, 0.0);
+        assert!(sweep[1].wire_bytes_per_rank > 0.0);
     }
 
     #[test]

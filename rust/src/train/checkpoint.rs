@@ -31,7 +31,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context};
 
-use crate::collectives::{BucketPlan, Comm};
+use crate::collectives::{BucketPlan, Transport};
 use crate::runtime::HostParams;
 use crate::Result;
 
@@ -193,11 +193,13 @@ pub fn save(path: &Path, step: u64, params: &HostParams, m: &[f32],
 /// 0 and return; rank 0 merges all shards into the full flat layout
 /// and writes ONE atomic checkpoint file — byte-compatible with the
 /// replicated format, so any world size (or a replicated run) can
-/// resume it via [`extract_shard`].
+/// resume it via [`extract_shard`]. Generic over [`Transport`]: the
+/// gather rides whatever backend the step's collectives ran on.
 #[allow(clippy::too_many_arguments)]
-pub fn save_sharded(path: &Path, comm: &mut Comm, plan: &BucketPlan,
-                    step: u64, params: &HostParams, m_shard: &[f32],
-                    v_shard: &[f32]) -> Result<()> {
+pub fn save_sharded<T: Transport>(path: &Path, comm: &mut T,
+                                  plan: &BucketPlan, step: u64,
+                                  params: &HostParams, m_shard: &[f32],
+                                  v_shard: &[f32]) -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if rank != 0 {

@@ -20,6 +20,12 @@ pub struct StepRecord {
     pub loader_wait_secs: f64,
     /// Time in the gradient all-reduce.
     pub comm_secs: f64,
+    /// f32 buffer bytes this rank handed to the transport this step
+    /// (4 B/elem — the host-side traffic).
+    pub comm_buffer_bytes: u64,
+    /// Modeled wire bytes for the same traffic (bf16, 2 B/elem — what
+    /// the α-β cost model prices; see `TransportStats`).
+    pub comm_wire_bytes: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -67,10 +73,21 @@ impl RunReport {
         Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
     }
 
+    /// Total f32 buffer bytes this run handed to the transport.
+    pub fn comm_buffer_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.comm_buffer_bytes).sum()
+    }
+
+    /// Total modeled wire bytes (bf16) for the run's gradient traffic.
+    pub fn comm_wire_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.comm_wire_bytes).sum()
+    }
+
     pub fn to_csv(&self) -> CsvWriter {
         let mut w = CsvWriter::new(vec![
             "step", "loss", "lr", "step_secs", "compute_secs",
-            "loader_wait_secs", "comm_secs",
+            "loader_wait_secs", "comm_secs", "comm_buffer_bytes",
+            "comm_wire_bytes",
         ]);
         for r in &self.records {
             w.row(&[
@@ -81,6 +98,8 @@ impl RunReport {
                 format!("{:.6}", r.compute_secs),
                 format!("{:.6}", r.loader_wait_secs),
                 format!("{:.6}", r.comm_secs),
+                r.comm_buffer_bytes.to_string(),
+                r.comm_wire_bytes.to_string(),
             ]);
         }
         w
@@ -102,6 +121,10 @@ impl RunReport {
                  .unwrap_or(Value::Null)),
             ("preprocess_secs", json::num(self.preprocess_secs)),
             ("stage_secs", json::num(self.stage_secs)),
+            ("comm_buffer_bytes",
+             json::num(self.comm_buffer_bytes() as f64)),
+            ("comm_wire_bytes",
+             json::num(self.comm_wire_bytes() as f64)),
         ])
     }
 
@@ -132,6 +155,8 @@ mod tests {
                     compute_secs: 0.08,
                     loader_wait_secs: 0.01,
                     comm_secs: 0.01,
+                    comm_buffer_bytes: 4000,
+                    comm_wire_bytes: 2000,
                 })
                 .collect(),
             preprocess_secs: 1.0,
@@ -156,7 +181,21 @@ mod tests {
 
     #[test]
     fn csv_has_all_steps() {
-        assert_eq!(report().to_csv().len(), 10);
+        let csv = report().to_csv();
+        assert_eq!(csv.len(), 10);
+        // wire-byte honesty: both buffer and wire columns are present
+        let s = csv.to_string();
+        assert!(s.starts_with("step,loss,lr,step_secs,compute_secs,\
+                               loader_wait_secs,comm_secs,\
+                               comm_buffer_bytes,comm_wire_bytes"));
+        assert!(s.contains(",4000,2000"));
+    }
+
+    #[test]
+    fn traffic_totals_sum_over_steps() {
+        let r = report();
+        assert_eq!(r.comm_buffer_bytes(), 40_000);
+        assert_eq!(r.comm_wire_bytes(), 20_000);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! One OS thread per rank ("GPU"). Each rank owns a compiled PJRT
 //! executable, its parameter replicas, and a parallel loader; gradients
 //! are averaged with the *real* ring/tree collectives over the
-//! in-process transport. Under ZeRO-0 every rank applies an identical
+//! transport backend picked by `training.transport` (channel mailboxes,
+//! shm slot rings, or tcp loopback sockets — numerics are identical on
+//! all three, only the wire differs). Under ZeRO-0 every rank applies
+//! an identical
 //! optimizer update; under `zero_stage: 1` gradients are
 //! reduce-scattered per bucket, each rank steps only its shard (m/v
 //! sized to it), and updated parameters are all-gathered back — either
@@ -19,7 +22,7 @@ use anyhow::{ensure, Context};
 
 use crate::collectives::{allreduce, bucketed_all_gather,
                          bucketed_allreduce, bucketed_reduce_scatter,
-                         Algorithm, BucketPlan, World};
+                         Algorithm, Backend, BucketPlan, Transport};
 use crate::config::{Config, ExecMode};
 use crate::data::loader::{load_dataset, LoaderPool};
 use crate::data::{EpochPlan, Masker, Sample};
@@ -86,7 +89,11 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     let total_steps = cfg.training.steps;
     let schedule = LrSchedule::new(cfg.training.lr,
                                    cfg.training.warmup_steps, total_steps);
-    let algo = Algorithm::parse(&cfg.training.allreduce)?;
+    let algo: Algorithm = cfg.training.allreduce.parse()?;
+    // transport backend for the collectives: channel (mpsc mailboxes,
+    // default), shm (slot rings) or tcp (loopback sockets) — validated
+    // spelling shared with config and the report layer
+    let backend: Backend = cfg.training.transport.parse()?;
     // DDP-style bucketing: sync the gradient in ~bucket_mb chunks in
     // reverse layer order, so each bucket's all-reduce launches as soon
     // as backward has produced it (rec. 4's overlap) instead of one
@@ -100,7 +107,7 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     });
     let masker = Masker::new(cfg.data.mask_prob, cfg.model.vocab);
 
-    let comms = World::new(world).into_comms();
+    let comms = backend.world(world)?;
     let outcomes: Vec<Result<RankOutcome>> = std::thread::scope(|scope| {
         let handles: Vec<_> = comms
             .into_iter()
@@ -177,6 +184,7 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                             // other half is spent all-gathering updated
                             // params below.
                             let t_comm = Instant::now();
+                            let stats_before = comm.stats();
                             for g in out.grads.iter_mut() {
                                 *g *= inv_world;
                             }
@@ -220,6 +228,13 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                     t_ag.elapsed().as_secs_f64();
                             }
 
+                            // the step's measured traffic: both the
+                            // f32 buffer bytes the host moved and the
+                            // modeled bf16 wire bytes the α-β model
+                            // prices (see TransportStats)
+                            let step_traffic =
+                                comm.stats().since(&stats_before);
+
                             if rank == 0 {
                                 if cfg.training.log_every > 0
                                     && step % cfg.training.log_every == 0
@@ -243,6 +258,10 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                     compute_secs,
                                     loader_wait_secs: loader_wait,
                                     comm_secs,
+                                    comm_buffer_bytes: step_traffic
+                                        .buffer_bytes_sent,
+                                    comm_wire_bytes: step_traffic
+                                        .wire_bytes_sent,
                                 });
                             }
                             // checkpointing: with sharded optimizer

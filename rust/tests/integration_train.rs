@@ -126,6 +126,30 @@ fn zero1_matches_replicated_trajectory_exactly() {
 }
 
 #[test]
+fn every_transport_backend_trains_bit_identically() {
+    // the transport moves bytes, the math never changes: the full
+    // pipeline (ZeRO-1 quickstart: bucketed RS → shard step → AG →
+    // sharded checkpointless run) must produce the exact same loss
+    // trajectory on channel mailboxes, shm slot rings and tcp sockets
+    let run_with = |transport: &str| -> Vec<f32> {
+        let dir = workdir(&format!("tp-{transport}"));
+        let mut cfg = tiny_cfg(4);
+        cfg.training.transport = transport.into();
+        let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+        let losses =
+            out.report.records.iter().map(|r| r.loss).collect();
+        std::fs::remove_dir_all(&dir).unwrap();
+        losses
+    };
+    let channel = run_with("channel");
+    assert_eq!(channel.len(), 4);
+    for t in ["shm", "tcp"] {
+        assert_eq!(run_with(t), channel,
+                   "transport {t} changed the trajectory");
+    }
+}
+
+#[test]
 fn world_size_one_also_trains() {
     let dir = workdir("solo");
     let mut cfg = tiny_cfg(5);

@@ -1,15 +1,34 @@
 #!/usr/bin/env bash
 # Tier-1 verification wrapper: one command for CI and builders.
 #
-#   ./verify.sh            # build + tests + clippy
-#   ./verify.sh --no-lint  # skip clippy (e.g. toolchain without it)
+#   ./verify.sh            # fmt + build + tests + conformance + clippy
+#   ./verify.sh --no-lint  # skip fmt/clippy (e.g. toolchain without it)
 #
 # Runs from the rust/ crate root regardless of the caller's cwd.
 set -euo pipefail
 cd "$(dirname "$0")"
 
+if [[ "${1:-}" != "--no-lint" ]]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        cargo fmt --check
+    else
+        echo "verify.sh: rustfmt unavailable, skipping fmt check" >&2
+    fi
+fi
+
 cargo build --release
 cargo test -q
+
+# the transport conformance suite, one isolated pass per backend, so a
+# broken backend names itself in the failure output. (`cargo test -q`
+# above already ran these once; the per-backend re-run is the explicit
+# conformance gate and costs a few seconds — an acceptable overlap to
+# keep the plain test pass simple and complete.)
+for backend in channel shm tcp; do
+    echo "verify.sh: transport conformance [${backend}]"
+    cargo test -q --test integration_transport "${backend}::"
+done
+
 # benches/examples are not built by `build`/`test`; type-check them so
 # they cannot silently rot out of the tier-1 gate
 cargo check --release --benches --examples
