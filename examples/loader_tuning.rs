@@ -63,10 +63,8 @@ fn main() -> txgain::Result<()> {
     for loaders in [1usize, 2, 4, 8] {
         cfg.data.loaders_per_gpu = loaders;
         let report = train(&cfg, &TrainOptions {
-            artifacts_dir: artifacts.clone(),
-            shards: stats.shards.clone(),
             io_delay_us: 100_000,
-            checkpoint_dir: None,
+            ..TrainOptions::new(artifacts.clone(), stats.shards.clone())
         })?;
         let waits: f64 = report.records.iter()
             .map(|r| r.loader_wait_secs).sum::<f64>()

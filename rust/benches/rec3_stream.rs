@@ -1,0 +1,137 @@
+//! BENCH REC3-STREAM: the memory-bounded data plane under pressure —
+//! `loaders_per_gpu` × `cache_mb` × staging policy.
+//!
+//! Two substrates:
+//!  * modeled (paper scale): the cache-aware loader term — an
+//!    undersized cache multiplies the disk stream and, under contended
+//!    network-direct staging, re-creates rec. 3's utilization sawtooth
+//!    with a disk axis;
+//!  * the real streaming `LoaderPool` over real shard files: workers ×
+//!    cache budget, measuring wall time, hit rate and bytes pulled, and
+//!    pricing the measured stream with the staging cost model
+//!    (`staging::price_read`) — the measured-vs-modeled cross-check.
+//!
+//! Run: `cargo bench --bench rec3_stream`
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use txgain::config::{presets, StagingPolicy};
+use txgain::data::records::Sample;
+use txgain::data::{staging, BlockCache, DatasetIndex, LoaderPool,
+                   Masker, ShardWriter, WindowedPlan};
+use txgain::perfmodel::simulate;
+use txgain::report::Table;
+use txgain::util::bench::{black_box, section};
+
+fn build_shards(dir: &std::path::Path, shards: usize, per: usize,
+                seq: usize) -> Vec<std::path::PathBuf> {
+    let mut paths = Vec::new();
+    for si in 0..shards {
+        let p = dir.join(format!("shard-{si:03}.bin"));
+        let mut w = ShardWriter::create(&p, seq).unwrap();
+        for i in 0..per {
+            let toks: Vec<u16> = (0..seq - 2)
+                .map(|j| 4 + ((si * per + i * 13 + j) % 250) as u16)
+                .collect();
+            w.write(&Sample::from_tokens(&toks, seq)).unwrap();
+        }
+        w.finish().unwrap();
+        paths.push(p);
+    }
+    paths
+}
+
+fn main() {
+    section("REC 3 — modeled: cache_mb x loaders x staging (bert-120m \
+             @128 nodes, 64K-sample windows)");
+    let mut t = Table::new(
+        "loader stream vs cache budget",
+        vec!["staging", "loaders/GPU", "cache(MB)", "io/step(MB)",
+             "fetch-exposed(ms)", "gpu-util"],
+    );
+    let mut cfg = presets::paper_full_scale();
+    cfg.data.shuffle_window = 65536; // ~67 MB at seq 512: cache matters
+    for policy in [StagingPolicy::LocalCopy,
+                   StagingPolicy::NetworkDirect] {
+        cfg.data.staging = policy;
+        for loaders in [2usize, 8, 32] {
+            cfg.data.loaders_per_gpu = loaders;
+            for cache_mb in [1.0f64, 16.0, 64.0, 128.0] {
+                cfg.data.cache_mb = cache_mb;
+                let r = simulate(&cfg);
+                t.row(&[
+                    policy.as_str().to_string(),
+                    loaders.to_string(),
+                    format!("{cache_mb:.0}"),
+                    format!("{:.1}", r.loader_bytes_per_step / 1e6),
+                    format!("{:.1}", r.loader_exposed_secs * 1e3),
+                    format!("{:.3}", r.gpu_util),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!("shape: below ~67 MB the cache stops covering the shuffle \
+              window, io/step climbs toward a block per sample, and on \
+              the contended array the sawtooth returns.\n");
+
+    section("REC 3 — real streaming LoaderPool (8 shards x 2048 \
+             samples, seq 128)");
+    let dir = std::env::temp_dir()
+        .join(format!("txgain-bench-stream-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let paths = build_shards(&dir, 8, 2048, 128);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let masker = Masker::new(0.15, 8192);
+    let cluster = presets::quickstart().cluster;
+
+    let mut t = Table::new(
+        "one epoch, batch 8, world 1 (16384 samples)",
+        vec!["workers", "cache(MB)", "epoch wall(ms)", "hit-rate",
+             "read(MB)", "priced local(ms)", "starved(ms)"],
+    );
+    for workers in [1usize, 4, 8] {
+        for cache_mb in [0.25f64, 1.0, 8.0, 64.0] {
+            let plan = Arc::new(
+                WindowedPlan::build(&index.shard_counts(), 1, 0, 7,
+                                    4096)
+                    .unwrap());
+            let cache = Arc::new(
+                BlockCache::new(index.clone(), cache_mb).unwrap());
+            let t0 = std::time::Instant::now();
+            let mut pool = LoaderPool::spawn_streaming(
+                cache, plan, 0, 8, masker.clone(), 7, workers, 4, 0, 0)
+                .unwrap();
+            while let Some(b) = pool.next_batch() {
+                black_box(&b);
+            }
+            assert!(pool.take_error().is_none());
+            let wall = t0.elapsed().as_secs_f64();
+            let (bytes, _, _, _) = pool.stats.io.snapshot();
+            let waited = pool.stats.wait_ns.load(Ordering::Relaxed)
+                as f64
+                * 1e-9;
+            // the cross-check: price the measured stream with the same
+            // storage model the staging estimate uses
+            let priced = staging::price_read(
+                &cluster, StagingPolicy::LocalCopy, bytes);
+            t.row(&[
+                workers.to_string(),
+                format!("{cache_mb:.2}"),
+                format!("{:.0}", wall * 1e3),
+                format!("{:.3}", pool.stats.io.hit_rate()),
+                format!("{:.1}", bytes as f64 / 1e6),
+                format!("{:.2}", priced * 1e3),
+                format!("{:.0}", waited * 1e3),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("shape: hit-rate jumps once the cache covers a window; \
+              read(MB) collapses to ~the corpus size read once; more \
+              workers shrink starvation until the disk (or the cache \
+              lock) binds.");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -58,6 +58,15 @@ pub struct DataConfig {
     pub prefetch_batches: usize,
     /// Samples per preprocessed shard file.
     pub samples_per_shard: usize,
+    /// Block-cache budget per rank, MiB: the resident-dataset ceiling
+    /// of the streaming loader. Undersize it (below one
+    /// `shuffle_window` of samples) and the loaders thrash disk;
+    /// oversize it and you are just spending host RAM.
+    pub cache_mb: f64,
+    /// Samples per shuffle window (the two-level shuffle's level-2
+    /// span). Larger windows mix better but want `cache_mb` to cover
+    /// `shuffle_window · (2 + 2·seq)` bytes to stream without re-reads.
+    pub shuffle_window: usize,
 }
 
 /// exp(mu + sigma^2/2) ≈ 9.9 KB mean function body — matches the paper's
@@ -65,12 +74,20 @@ pub struct DataConfig {
 pub const DEFAULT_FN_MU: f64 = 8.5;
 pub const DEFAULT_FN_SIGMA: f64 = 1.0;
 
+/// Default block-cache budget, MiB. Covers the default shuffle window
+/// (8192 samples ≈ 8.4 MB at seq 512) with room for block granularity,
+/// so the out-of-box stream reads each block once per epoch.
+pub const DEFAULT_CACHE_MB: f64 = 64.0;
+/// Default shuffle-window span, samples.
+pub const DEFAULT_SHUFFLE_WINDOW: usize = 8192;
+
 impl DataConfig {
     pub fn from_json(v: &Value) -> Result<Self> {
         deny_unknown(v, &["corpus_samples", "fn_size_mu", "fn_size_sigma",
                           "tokenizer_vocab", "mask_prob", "staging",
                           "loaders_per_gpu", "prefetch_batches",
-                          "samples_per_shard"])?;
+                          "samples_per_shard", "cache_mb",
+                          "shuffle_window"])?;
         Ok(DataConfig {
             corpus_samples: v.req("corpus_samples")?.as_usize()?,
             fn_size_mu: v.get("fn_size_mu").map(|x| x.as_f64())
@@ -86,6 +103,11 @@ impl DataConfig {
                 .map(|x| x.as_usize()).transpose()?.unwrap_or(2),
             samples_per_shard: v.get("samples_per_shard")
                 .map(|x| x.as_usize()).transpose()?.unwrap_or(8192),
+            cache_mb: v.get("cache_mb").map(|x| x.as_f64())
+                .transpose()?.unwrap_or(DEFAULT_CACHE_MB),
+            shuffle_window: v.get("shuffle_window")
+                .map(|x| x.as_usize()).transpose()?
+                .unwrap_or(DEFAULT_SHUFFLE_WINDOW),
         })
     }
 
@@ -100,6 +122,8 @@ impl DataConfig {
             ("loaders_per_gpu", json::num(self.loaders_per_gpu as f64)),
             ("prefetch_batches", json::num(self.prefetch_batches as f64)),
             ("samples_per_shard", json::num(self.samples_per_shard as f64)),
+            ("cache_mb", json::num(self.cache_mb)),
+            ("shuffle_window", json::num(self.shuffle_window as f64)),
         ])
     }
 
@@ -119,6 +143,11 @@ impl DataConfig {
                 "tokenizer vocab must cover all bytes + special tokens");
         ensure!(self.loaders_per_gpu >= 1, "need at least one loader");
         ensure!(self.samples_per_shard >= 1, "empty shards");
+        ensure!(self.cache_mb.is_finite() && self.cache_mb > 0.0,
+                "cache_mb must be a positive finite size (got {})",
+                self.cache_mb);
+        ensure!(self.shuffle_window >= 1,
+                "shuffle_window must be at least 1 sample");
         Ok(())
     }
 }
@@ -138,6 +167,8 @@ mod tests {
             loaders_per_gpu: 4,
             prefetch_batches: 2,
             samples_per_shard: 128,
+            cache_mb: 64.0,
+            shuffle_window: 256,
         }
     }
 
@@ -158,6 +189,27 @@ mod tests {
         let mut c = cfg();
         c.tokenizer_vocab = 100;
         assert!(c.validate().is_err());
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut c = cfg();
+            c.cache_mb = bad;
+            assert!(c.validate().is_err(), "cache_mb={bad} accepted");
+        }
+        let mut c = cfg();
+        c.shuffle_window = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn streaming_knobs_default_when_absent() {
+        // configs written before PR 4 parse with the documented defaults
+        let c = cfg();
+        let mut v = c.to_json();
+        if let Value::Obj(ref mut kv) = v {
+            kv.retain(|(k, _)| k != "cache_mb" && k != "shuffle_window");
+        }
+        let back = DataConfig::from_json(&v).unwrap();
+        assert_eq!(back.cache_mb, DEFAULT_CACHE_MB);
+        assert_eq!(back.shuffle_window, DEFAULT_SHUFFLE_WINDOW);
     }
 
     #[test]

@@ -34,6 +34,14 @@ pub struct RunArtifacts {
 /// artifacts from `artifacts_dir`.
 pub fn run(cfg: &Config, artifacts_dir: &Path, workdir: &Path)
     -> Result<RunArtifacts> {
+    run_resumable(cfg, artifacts_dir, workdir, None)
+}
+
+/// [`run`], optionally resuming from a checkpoint: params, optimizer
+/// moments and the mid-epoch data cursor are restored, and training
+/// continues the interrupted run's exact batch stream.
+pub fn run_resumable(cfg: &Config, artifacts_dir: &Path, workdir: &Path,
+                     resume_from: Option<&Path>) -> Result<RunArtifacts> {
     cfg.validate()?;
     ensure!(cfg.training.mode == ExecMode::Real,
             "leader::run drives real mode; use `txgain sim` / \
@@ -67,16 +75,19 @@ pub fn run(cfg: &Config, artifacts_dir: &Path, workdir: &Path)
     };
     let stage_secs = t1.elapsed().as_secs_f64();
 
-    // 3. train
+    // 3. train — the measured pipeline times ride along so the report
+    // train() returns is complete wherever it lands, not only when the
+    // coordinator remembers to patch it afterwards
     let opts = TrainOptions {
         artifacts_dir: artifacts_dir.to_path_buf(),
         shards,
         io_delay_us: 0,
         checkpoint_dir: Some(workdir.join("checkpoints")),
+        resume_from: resume_from.map(Path::to_path_buf),
+        preprocess_secs,
+        stage_secs,
     };
-    let mut report = train(cfg, &opts)?;
-    report.preprocess_secs = preprocess_secs;
-    report.stage_secs = stage_secs;
+    let report = train(cfg, &opts)?;
 
     // 4. persist
     report.save(workdir)?;

@@ -4,4 +4,4 @@
 
 pub mod leader;
 
-pub use leader::{run, RunArtifacts};
+pub use leader::{run, run_resumable, RunArtifacts};

@@ -1,0 +1,396 @@
+//! Memory-bounded dataset access: the header-only [`DatasetIndex`] and
+//! the byte-budgeted LRU [`BlockCache`] loader workers read through.
+//!
+//! The pre-PR-4 data plane materialized the whole corpus in RAM
+//! (`load_dataset` → `Arc<Vec<Sample>>`), which cannot scale to the
+//! paper's 202M-sample / ~2 TB corpus. This module replaces residency
+//! with addressing:
+//!
+//!  * [`DatasetIndex::open`] reads only each shard's 16-byte header and
+//!    maps a global sample id → (shard, local index). Opening a 2 TB
+//!    corpus costs a few KB of metadata.
+//!  * [`BlockCache`] serves `get(id)` by reading ~[`BLOCK_BYTES`]-sized
+//!    contiguous sample blocks from disk and keeping at most
+//!    `data.cache_mb` of them resident (strict LRU, evicted by bytes,
+//!    minimum one block so a tiny budget still makes progress).
+//!
+//! Resident dataset memory is therefore O(cache budget), not O(corpus):
+//! the trainer's working set is `cache_mb + loaders·shuffle_window·4B +
+//! prefetch·batch` regardless of dataset size. Counters for bytes read,
+//! hits/misses and IO wait feed [`super::loader::LoaderStats`] and from
+//! there the per-step report columns.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{ensure, Context};
+
+use super::records::{Sample, ShardReader, HEADER_BYTES};
+use crate::Result;
+
+/// Target contiguous read size per cache block. Large enough to
+/// amortize seeks on both SSD and Lustre, small enough that a handful
+/// of blocks fit in even a deliberately tiny test cache.
+pub const BLOCK_BYTES: u64 = 256 * 1024;
+
+/// IO/cache counters shared between the block cache and the loader
+/// stats (u64 atomics — see `LoaderStats` for the 32-bit rationale).
+#[derive(Debug, Default)]
+pub struct IoStats {
+    /// Bytes actually read from disk (block fetches).
+    pub bytes_read: AtomicU64,
+    /// `get` calls served from a resident block.
+    pub cache_hits: AtomicU64,
+    /// `get` calls that had to fetch a block.
+    pub cache_misses: AtomicU64,
+    /// Wall time spent inside block fetches, nanoseconds.
+    pub io_wait_ns: AtomicU64,
+}
+
+impl IoStats {
+    /// Fraction of lookups served without touching disk. A window with
+    /// no lookups reports 1.0 (nothing was missed).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.cache_hits.load(Ordering::Relaxed) as f64;
+        let m = self.cache_misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 { 1.0 } else { h / (h + m) }
+    }
+
+    /// Snapshot (bytes_read, hits, misses, io_wait_ns) for delta
+    /// accounting across steps.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.bytes_read.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+            self.io_wait_ns.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Per-shard metadata gathered header-only.
+#[derive(Clone, Debug)]
+pub struct ShardMeta {
+    pub path: PathBuf,
+    /// Samples in this shard.
+    pub count: u64,
+    /// Global id of this shard's first sample.
+    pub base: u64,
+}
+
+/// Global sample id → (shard, offset) map over a set of shard files,
+/// built without decoding a single sample.
+#[derive(Debug)]
+pub struct DatasetIndex {
+    shards: Vec<ShardMeta>,
+    seq: usize,
+    total: u64,
+}
+
+impl DatasetIndex {
+    /// Open every shard header-only; validates magic/version/count
+    /// bounds (via [`ShardReader::open`]) and uniform sequence length.
+    pub fn open(paths: &[PathBuf]) -> Result<DatasetIndex> {
+        ensure!(!paths.is_empty(), "no shards to index");
+        let mut shards = Vec::with_capacity(paths.len());
+        let mut seq = 0usize;
+        let mut total = 0u64;
+        for p in paths {
+            let r = ShardReader::open(p)?;
+            ensure!(seq == 0 || seq == r.seq,
+                    "mixed sequence lengths: shard {} has seq {}, \
+                     expected {seq}", p.display(), r.seq);
+            seq = r.seq;
+            shards.push(ShardMeta {
+                path: p.clone(),
+                count: r.len() as u64,
+                base: total,
+            });
+            total += r.len() as u64;
+        }
+        ensure!(total > 0, "indexed shards hold no samples");
+        Ok(DatasetIndex { shards, seq, total })
+    }
+
+    /// Total samples across all shards.
+    pub fn len(&self) -> usize {
+        self.total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn shards(&self) -> &[ShardMeta] {
+        &self.shards
+    }
+
+    /// Per-shard sample counts (the windowed shuffle's level-1 input).
+    pub fn shard_counts(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.count).collect()
+    }
+
+    /// Total on-disk footprint of the shard set, headers included —
+    /// the volume staging copies and the staging cost model prices.
+    pub fn total_bytes(&self) -> u64 {
+        self.total * Sample::disk_bytes(self.seq)
+            + self.shards.len() as u64 * HEADER_BYTES
+    }
+
+    /// Map a global sample id to (shard index, index within shard).
+    pub fn locate(&self, id: u64) -> Result<(usize, u64)> {
+        ensure!(id < self.total,
+                "sample id {id} outside dataset of {} samples",
+                self.total);
+        // binary search over shard bases
+        let shard = self
+            .shards
+            .partition_point(|s| s.base <= id)
+            .saturating_sub(1);
+        Ok((shard, id - self.shards[shard].base))
+    }
+}
+
+/// One resident cache block: decoded samples + LRU tick + byte cost.
+struct Block {
+    samples: Vec<Sample>,
+    bytes: u64,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    blocks: HashMap<(u32, u32), Block>,
+    resident_bytes: u64,
+    tick: u64,
+    /// Most-recently-used open shard file. Rank segments are
+    /// contiguous, so consecutive misses overwhelmingly hit the same
+    /// shard — keeping one reader open avoids re-opening (and
+    /// re-validating) the file on every block fetch while costing one
+    /// fd per rank.
+    reader: Option<(usize, ShardReader)>,
+}
+
+/// Byte-budgeted LRU block cache over a [`DatasetIndex`]. `get(id)`
+/// reads through disk in ~[`BLOCK_BYTES`] contiguous blocks; at most
+/// `cache_mb` MiB of decoded samples stay resident (always at least one
+/// block, so a 1-block cache degenerates to "re-read on every block
+/// switch" and still terminates).
+///
+/// Shared by all loader workers of a rank. Fetches happen under the
+/// cache lock: concurrent workers asking for the same cold block do one
+/// disk read, not N — serializing IO per rank the way a real per-node
+/// page cache would.
+pub struct BlockCache {
+    index: std::sync::Arc<DatasetIndex>,
+    block_samples: u64,
+    budget_bytes: u64,
+    inner: Mutex<CacheInner>,
+}
+
+impl BlockCache {
+    pub fn new(index: std::sync::Arc<DatasetIndex>, cache_mb: f64)
+        -> Result<BlockCache> {
+        ensure!(cache_mb.is_finite() && cache_mb > 0.0,
+                "cache_mb must be positive and finite (got {cache_mb})");
+        let sample_bytes = Sample::disk_bytes(index.seq());
+        let block_samples = (BLOCK_BYTES / sample_bytes).max(1);
+        let budget_bytes = (cache_mb * 1024.0 * 1024.0) as u64;
+        Ok(BlockCache { index, block_samples, budget_bytes, inner:
+            Mutex::new(CacheInner::default()) })
+    }
+
+    /// Samples per (full) block — exposed for the perf model and tests.
+    pub fn block_samples(&self) -> usize {
+        self.block_samples as usize
+    }
+
+    /// The index this cache reads through.
+    pub fn dataset(&self) -> &DatasetIndex {
+        &self.index
+    }
+
+    /// Current resident payload bytes (tests assert the budget holds).
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// Fetch one sample by global id, reading (and caching) its block
+    /// on a miss. Counters land in `io`.
+    pub fn get(&self, id: u64, io: &IoStats) -> Result<Sample> {
+        let (shard, local) = self.index.locate(id)?;
+        let block = local / self.block_samples;
+        let key = (shard as u32, block as u32);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(b) = inner.blocks.get_mut(&key) {
+            b.tick = tick;
+            io.cache_hits.fetch_add(1, Ordering::Relaxed);
+            let off = (local - block * self.block_samples) as usize;
+            return Ok(b.samples[off].clone());
+        }
+        io.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let meta = &self.index.shards()[shard];
+        let start = block * self.block_samples;
+        let n = self.block_samples.min(meta.count - start);
+        let t0 = Instant::now();
+        let mut reader = match inner.reader.take() {
+            Some((s, r)) if s == shard => r,
+            _ => ShardReader::open(&meta.path)?,
+        };
+        let samples = reader
+            .read_block(start as usize, n as usize)
+            .with_context(|| {
+                format!("fetching block {block} of {}", meta.path.display())
+            })?;
+        inner.reader = Some((shard, reader));
+        io.io_wait_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let bytes = n * Sample::disk_bytes(self.index.seq());
+        io.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        let off = (local - start) as usize;
+        let sample = samples[off].clone();
+        inner.resident_bytes += bytes;
+        inner.blocks.insert(key, Block { samples, bytes, tick });
+        // strict LRU eviction by bytes; always keep the block we just
+        // inserted so a sub-block budget still makes progress
+        while inner.resident_bytes > self.budget_bytes
+            && inner.blocks.len() > 1
+        {
+            let oldest = inner
+                .blocks
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, b)| b.tick)
+                .map(|(k, _)| *k)
+                .unwrap();
+            if let Some(b) = inner.blocks.remove(&oldest) {
+                inner.resident_bytes -= b.bytes;
+            }
+        }
+        Ok(sample)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ShardWriter;
+    use std::sync::Arc;
+
+    fn write_shards(tag: &str, counts: &[usize], seq: usize)
+        -> (PathBuf, Vec<PathBuf>, Vec<Sample>) {
+        let dir = std::env::temp_dir()
+            .join(format!("txgain-index-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut paths = Vec::new();
+        let mut all = Vec::new();
+        let mut id = 0u16;
+        for (si, &n) in counts.iter().enumerate() {
+            let p = dir.join(format!("s{si}.bin"));
+            let mut w = ShardWriter::create(&p, seq).unwrap();
+            for _ in 0..n {
+                let s = Sample::from_tokens(&[id, id.wrapping_add(1)], seq);
+                w.write(&s).unwrap();
+                all.push(s);
+                id = id.wrapping_add(1);
+            }
+            w.finish().unwrap();
+            paths.push(p);
+        }
+        (dir, paths, all)
+    }
+
+    #[test]
+    fn index_maps_ids_across_shards() {
+        let (dir, paths, all) = write_shards("map", &[5, 1, 7], 8);
+        let idx = DatasetIndex::open(&paths).unwrap();
+        assert_eq!(idx.len(), 13);
+        assert_eq!(idx.seq(), 8);
+        assert_eq!(idx.shard_counts(), vec![5, 1, 7]);
+        assert_eq!(idx.locate(0).unwrap(), (0, 0));
+        assert_eq!(idx.locate(4).unwrap(), (0, 4));
+        assert_eq!(idx.locate(5).unwrap(), (1, 0));
+        assert_eq!(idx.locate(6).unwrap(), (2, 0));
+        assert_eq!(idx.locate(12).unwrap(), (2, 6));
+        assert!(idx.locate(13).is_err());
+        // and the bytes accounting matches the files on disk
+        let disk: u64 = paths.iter()
+            .map(|p| std::fs::metadata(p).unwrap().len()).sum();
+        assert_eq!(idx.total_bytes(), disk);
+        let _ = all;
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cache_serves_every_sample_correctly() {
+        let (dir, paths, all) = write_shards("serve", &[64, 32, 100], 16);
+        let idx = Arc::new(DatasetIndex::open(&paths).unwrap());
+        let cache = BlockCache::new(idx.clone(), 64.0).unwrap();
+        let io = IoStats::default();
+        // random-ish access pattern over the whole corpus
+        for k in 0..idx.len() {
+            let id = (k * 97) % idx.len();
+            assert_eq!(cache.get(id as u64, &io).unwrap(), all[id],
+                       "id {id}");
+        }
+        assert!(io.bytes_read.load(Ordering::Relaxed) > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn one_block_cache_thrashes_but_stays_correct_and_bounded() {
+        let seq = 16; // sample = 34 B; block = 256 KiB / 34 ≈ 7710 — one
+                      // block spans each whole small shard here
+        let (dir, paths, all) = write_shards("thrash", &[40, 40], seq);
+        let idx = Arc::new(DatasetIndex::open(&paths).unwrap());
+        // budget below one block: capacity clamps to a single block
+        let cache = BlockCache::new(idx.clone(), 0.001).unwrap();
+        let io = IoStats::default();
+        // alternate shards every access: every get crosses blocks
+        for k in 0..40 {
+            for s in 0..2u64 {
+                let id = s * 40 + k as u64;
+                assert_eq!(cache.get(id, &io).unwrap(), all[id as usize]);
+            }
+        }
+        let shard_bytes = 40 * Sample::disk_bytes(seq);
+        assert!(cache.resident_bytes() <= shard_bytes,
+                "resident {} > one block {}", cache.resident_bytes(),
+                shard_bytes);
+        // thrash: ~every access that switched shards was a miss
+        let misses = io.cache_misses.load(Ordering::Relaxed);
+        assert!(misses >= 79, "expected hard thrashing, misses={misses}");
+        assert_eq!(io.bytes_read.load(Ordering::Relaxed),
+                   misses * shard_bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_cache_stops_reading_disk() {
+        let (dir, paths, all) = write_shards("warm", &[30], 16);
+        let idx = Arc::new(DatasetIndex::open(&paths).unwrap());
+        let cache = BlockCache::new(idx, 64.0).unwrap();
+        let io = IoStats::default();
+        for id in 0..30u64 {
+            cache.get(id, &io).unwrap();
+        }
+        let cold = io.bytes_read.load(Ordering::Relaxed);
+        for id in 0..30u64 {
+            assert_eq!(cache.get(id, &io).unwrap(), all[id as usize]);
+        }
+        assert_eq!(io.bytes_read.load(Ordering::Relaxed), cold,
+                   "second pass must be disk-free");
+        assert!(io.hit_rate() > 0.9);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -6,6 +6,20 @@
 //! training stays bit-deterministic at any worker count — masking RNG is
 //! keyed by (seed, epoch, step), not by worker.
 //!
+//! Two spawn paths share the pool machinery:
+//!  * [`LoaderPool::spawn`] — the in-memory path: workers gather from a
+//!    resident `Arc<Vec<Sample>>` along a materialized order. O(corpus)
+//!    memory; kept for small datasets and as the bit-identity reference.
+//!  * [`LoaderPool::spawn_streaming`] — the memory-bounded path: workers
+//!    walk a lazy [`RankCursor`] over a [`WindowedPlan`] and fetch
+//!    samples through the shared byte-budgeted [`BlockCache`], reading
+//!    disk in blocks. Resident memory is O(cache + window + prefetch),
+//!    never O(corpus). `start_step` fast-forwards the cursor for
+//!    mid-epoch resume — a pure index computation, no data is replayed.
+//!
+//! Both paths produce bit-identical batches for the same (seed, epoch,
+//! plan) — property-tested in `tests/integration_data.rs`.
+//!
 //! An optional per-batch `io_delay_us` emulates slow storage fetches so
 //! the rec-3 experiment can expose the under-provisioned-loader regime
 //! (utilization sawtooth) at CPU speeds.
@@ -14,14 +28,16 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::ensure;
+use anyhow::{ensure, Context};
 
+use super::index::{BlockCache, IoStats};
 use super::masking::Masker;
 use super::records::{Sample, ShardReader};
+use super::shard::{RankCursor, WindowedPlan};
 use crate::util::Rng;
 use crate::Result;
 
@@ -36,7 +52,9 @@ pub struct HostBatch {
     pub labels: Vec<i32>,
 }
 
-/// Loader metrics, updated live by the consumer. Counters are u64 even
+/// Loader metrics. `wait_ns`/`delivered` are updated live by the
+/// consumer; the [`IoStats`] block is fed by the workers' reads through
+/// the block cache (zero for the in-memory path). Counters are u64 even
 /// on 32-bit targets — `wait_ns` crosses 4·10⁹ (the 32-bit ceiling)
 /// after ~4 s of accumulated starvation.
 #[derive(Debug, Default)]
@@ -50,37 +68,123 @@ pub struct LoaderStats {
     /// Fixed at spawn; surfaced so callers can account for (or reshuffle
     /// into the next epoch) what would otherwise vanish silently.
     pub dropped_remainder: AtomicU64,
+    /// Disk-side counters: bytes read, cache hits/misses, IO wait.
+    pub io: IoStats,
 }
 
 pub struct LoaderPool {
     rx: Receiver<HostBatch>,
     reorder: BTreeMap<usize, HostBatch>,
     next_step: usize,
+    end_step: usize,
     total_steps: usize,
     pub stats: Arc<LoaderStats>,
+    /// First worker error (fatal IO, corrupt shard). The pool stops
+    /// delivering; the consumer must check [`LoaderPool::take_error`]
+    /// when the stream ends to distinguish "epoch done" from "died".
+    error: Arc<Mutex<Option<anyhow::Error>>>,
     handles: Vec<JoinHandle<()>>,
 }
 
-/// Dataset held in memory after staging (shards are read once here —
-/// the storage cost modeled/paid by `staging`).
+/// Dataset held in memory after staging — the O(corpus) reference path
+/// (small datasets, equivalence tests). Large-corpus callers use
+/// [`crate::data::DatasetIndex`] + [`BlockCache`] instead.
 pub fn load_dataset(shards: &[PathBuf]) -> Result<(Vec<Sample>, usize)> {
     ensure!(!shards.is_empty(), "no shards to load");
     let mut all = Vec::new();
     let mut seq = 0usize;
     for p in shards {
-        let r = ShardReader::open(p)?;
+        let mut r = ShardReader::open(p)?;
         ensure!(seq == 0 || seq == r.seq, "mixed sequence lengths");
         seq = r.seq;
-        all.extend(r.samples);
+        all.extend(r.read_all()?);
     }
     Ok((all, seq))
 }
 
+/// The shared worker body: walk this worker's steps, produce each
+/// batch, push it down the channel. A produce error lands in the
+/// shared slot and kills the worker; the consumer surfaces it at the
+/// next delivery attempt. One copy of this loop serves both spawn
+/// paths, so the in-memory reference and the streaming path cannot
+/// drift apart.
+fn run_worker(steps: Vec<usize>, io_delay_us: u64,
+              tx: std::sync::mpsc::SyncSender<HostBatch>,
+              error: Arc<Mutex<Option<anyhow::Error>>>,
+              mut produce: impl FnMut(usize) -> Result<HostBatch>) {
+    for step in steps {
+        if io_delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(io_delay_us));
+        }
+        match produce(step) {
+            Ok(b) => {
+                if tx.send(b).is_err() {
+                    return; // consumer dropped early
+                }
+            }
+            Err(e) => {
+                let mut slot = error.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(
+                        e.context(format!("loader worker at step {step}")));
+                }
+                return;
+            }
+        }
+    }
+}
+
 impl LoaderPool {
+    /// Pool skeleton shared by both spawn paths: stats, channel, the
+    /// static round-robin step split (determinism needs no work queue,
+    /// the reorder buffer absorbs skew), and one thread per worker
+    /// running [`run_worker`] over a produce closure built by
+    /// `make_produce(&stats)` (the streaming path feeds its IO
+    /// counters through it; the in-memory path ignores it).
+    fn spawn_inner<P, F>(start_step: usize, end_step: usize,
+                         remainder: usize, workers: usize,
+                         prefetch: usize, io_delay_us: u64,
+                         make_produce: F) -> LoaderPool
+    where
+        P: FnMut(usize) -> Result<HostBatch> + Send + 'static,
+        F: Fn(&Arc<LoaderStats>) -> P,
+    {
+        let stats = Arc::new(LoaderStats::default());
+        stats
+            .dropped_remainder
+            .store(remainder as u64, Ordering::Relaxed);
+        let error: Arc<Mutex<Option<anyhow::Error>>> =
+            Arc::new(Mutex::new(None));
+        let (tx, rx) = sync_channel::<HostBatch>(prefetch.max(1));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let steps: Vec<usize> = (start_step..end_step)
+                .filter(|s| s % workers == w)
+                .collect();
+            let tx = tx.clone();
+            let error = error.clone();
+            let produce = make_produce(&stats);
+            handles.push(std::thread::spawn(move || {
+                run_worker(steps, io_delay_us, tx, error, produce);
+            }));
+        }
+        LoaderPool {
+            rx,
+            reorder: BTreeMap::new(),
+            next_step: start_step,
+            end_step,
+            total_steps: end_step - start_step,
+            stats,
+            error,
+            handles,
+        }
+    }
+
     /// Spawn `workers` loader threads producing `order.len()/batch`
-    /// batches for this rank and epoch. Trailing samples that do not
-    /// fill a whole batch are not delivered; their count is surfaced in
-    /// `stats.dropped_remainder` rather than disappearing silently.
+    /// batches for this rank and epoch from a resident dataset.
+    /// Trailing samples that do not fill a whole batch are not
+    /// delivered; their count is surfaced in `stats.dropped_remainder`
+    /// rather than disappearing silently.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(dataset: Arc<Vec<Sample>>, seq: usize, order: &[u32],
                  batch: usize, masker: Masker, seed: u64, epoch: u64,
@@ -88,53 +192,84 @@ impl LoaderPool {
         -> Result<LoaderPool> {
         ensure!(batch > 0 && workers > 0);
         let total_steps = order.len() / batch;
-        let stats = Arc::new(LoaderStats::default());
-        stats
-            .dropped_remainder
-            .store((order.len() % batch) as u64, Ordering::Relaxed);
-        let (tx, rx) = sync_channel::<HostBatch>(prefetch.max(1));
-        // static round-robin split of steps across workers: determinism
-        // needs no work queue, the reorder buffer absorbs skew
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let tx = tx.clone();
-            let dataset = dataset.clone();
-            let masker = masker.clone();
-            let steps: Vec<(usize, Vec<u32>)> = (0..total_steps)
-                .filter(|s| s % workers == w)
-                .map(|s| (s, order[s * batch..(s + 1) * batch].to_vec()))
-                .collect();
-            handles.push(std::thread::spawn(move || {
-                for (step, idxs) in steps {
-                    if io_delay_us > 0 {
-                        std::thread::sleep(
-                            Duration::from_micros(io_delay_us));
-                    }
-                    let b = assemble(&dataset, seq, &idxs, &masker, seed,
-                                     epoch, step);
-                    if tx.send(b).is_err() {
-                        return; // consumer dropped early
-                    }
+        let remainder = order.len() % batch;
+        let order = Arc::new(order.to_vec());
+        Ok(Self::spawn_inner(
+            0, total_steps, remainder, workers, prefetch, io_delay_us,
+            |_stats| {
+                let dataset = dataset.clone();
+                let order = order.clone();
+                let masker = masker.clone();
+                move |step| {
+                    let idxs = &order[step * batch..(step + 1) * batch];
+                    let refs: Vec<&Sample> = idxs
+                        .iter()
+                        .map(|&i| &dataset[i as usize])
+                        .collect();
+                    Ok(assemble(&refs, seq, &masker, seed, epoch, step))
                 }
-            }));
-        }
-        Ok(LoaderPool {
-            rx,
-            reorder: BTreeMap::new(),
-            next_step: 0,
-            total_steps,
-            stats,
-            handles,
-        })
+            },
+        ))
     }
 
+    /// Spawn the streaming pool: workers compute their sample ids
+    /// lazily from `plan` (rank `rank`) and read them through `cache`.
+    /// Steps `[start_step, plan.steps(batch))` are produced — pass a
+    /// non-zero `start_step` to resume mid-epoch; batch content is
+    /// keyed by the epoch-local step, so a resumed stream is
+    /// bit-identical to the uninterrupted one from that step on.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_streaming(cache: Arc<BlockCache>,
+                           plan: Arc<WindowedPlan>, rank: usize,
+                           batch: usize, masker: Masker, seed: u64,
+                           workers: usize, prefetch: usize,
+                           io_delay_us: u64, start_step: usize)
+        -> Result<LoaderPool> {
+        ensure!(batch > 0 && workers > 0);
+        ensure!(rank < plan.world(),
+                "rank {rank} outside world {}", plan.world());
+        let seq = cache.dataset().seq();
+        let end_step = plan.steps(batch);
+        ensure!(start_step <= end_step,
+                "resume step {start_step} beyond the {end_step} steps \
+                 this epoch holds");
+        let epoch = plan.epoch;
+        let remainder = plan.samples_per_rank() % batch;
+        Ok(Self::spawn_inner(
+            start_step, end_step, remainder, workers, prefetch,
+            io_delay_us,
+            |stats| {
+                let cache = cache.clone();
+                let masker = masker.clone();
+                let stats = stats.clone();
+                let mut cursor = RankCursor::new(plan.clone(), rank);
+                let mut ids: Vec<u32> = Vec::with_capacity(batch);
+                move |step| {
+                    cursor.ids_for_step(step, batch, &mut ids);
+                    let mut samples = Vec::with_capacity(batch);
+                    for &id in &ids {
+                        samples.push(
+                            cache.get(id as u64, &stats.io)
+                                .with_context(|| format!(
+                                    "fetching sample {id}"))?);
+                    }
+                    let refs: Vec<&Sample> = samples.iter().collect();
+                    Ok(assemble(&refs, seq, &masker, seed, epoch, step))
+                }
+            },
+        ))
+    }
+
+    /// Batches this pool will deliver (end − start for resumed pools).
     pub fn total_steps(&self) -> usize {
         self.total_steps
     }
 
-    /// Blocking, in-order batch delivery. `None` when the epoch is done.
+    /// Blocking, in-order batch delivery. `None` when the epoch is done
+    /// — or when a worker died; callers distinguish the two with
+    /// [`LoaderPool::take_error`].
     pub fn next_batch(&mut self) -> Option<HostBatch> {
-        if self.next_step >= self.total_steps {
+        if self.next_step >= self.end_step {
             return None;
         }
         let t0 = Instant::now();
@@ -148,6 +283,13 @@ impl LoaderPool {
                 self.stats.delivered.fetch_add(1, Ordering::Relaxed);
                 return Some(b);
             }
+            // a dead worker's steps will never arrive: stop at the
+            // first gap instead of buffering the surviving workers'
+            // whole remaining epoch in the reorder map and surfacing
+            // the fault hours late
+            if self.error.lock().unwrap().is_some() {
+                return None;
+            }
             match self.rx.recv() {
                 Ok(b) => {
                     self.reorder.insert(b.step, b);
@@ -155,6 +297,13 @@ impl LoaderPool {
                 Err(_) => return None, // workers gone; nothing buffered
             }
         }
+    }
+
+    /// First fatal worker error, if any (streaming path: disk/corrupt
+    /// shard). Consumers call this when `next_batch` returns `None` to
+    /// tell a finished epoch from a dead loader.
+    pub fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.error.lock().unwrap().take()
     }
 
     /// Join workers (used by tests; dropping also works).
@@ -173,18 +322,21 @@ impl Drop for LoaderPool {
     }
 }
 
-/// Gather + mask + flatten one batch. Pure function of its arguments.
-fn assemble(dataset: &[Sample], seq: usize, idxs: &[u32], masker: &Masker,
-            seed: u64, epoch: u64, step: usize) -> HostBatch {
-    let batch = idxs.len();
+/// Mask + flatten one gathered batch. Pure function of its arguments —
+/// the masking stream is keyed (seed, epoch, step, position-in-batch),
+/// so the in-memory and streaming paths produce identical bits for the
+/// same sample sequence.
+fn assemble(samples: &[&Sample], seq: usize, masker: &Masker, seed: u64,
+            epoch: u64, step: usize) -> HostBatch {
+    let batch = samples.len();
     let mut input_ids = Vec::with_capacity(batch * seq);
     let mut attn_mask = Vec::with_capacity(batch * seq);
     let mut labels = Vec::with_capacity(batch * seq);
     let root = Rng::new(seed);
-    for (i, &idx) in idxs.iter().enumerate() {
+    for (i, s) in samples.iter().enumerate() {
         let mut rng =
             root.derive_mix("mask", &[epoch, step as u64, i as u64]);
-        let m = masker.apply(&dataset[idx as usize], &mut rng);
+        let m = masker.apply(s, &mut rng);
         input_ids.extend_from_slice(&m.input_ids);
         attn_mask.extend_from_slice(&m.attn_mask);
         labels.extend_from_slice(&m.labels);
@@ -229,6 +381,7 @@ mod tests {
             assert_eq!(b.labels.len(), 8 * 32);
             steps.push(b.step);
         }
+        assert!(p.take_error().is_none());
         assert_eq!(steps, (0..8).collect::<Vec<_>>());
     }
 
@@ -295,6 +448,14 @@ mod tests {
         let mut p = pool(2, 0);
         let _ = p.next_batch();
         drop(p); // must not deadlock on the bounded channel
+    }
+
+    #[test]
+    fn in_memory_pool_reports_no_disk_traffic() {
+        let mut p = pool(2, 0);
+        while p.next_batch().is_some() {}
+        assert_eq!(p.stats.io.bytes_read.load(Ordering::Relaxed), 0);
+        assert_eq!(p.stats.io.hit_rate(), 1.0);
     }
 
     #[test]

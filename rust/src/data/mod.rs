@@ -11,9 +11,16 @@
 //!    [`staging`] plans and executes the local-SSD copy and prices both
 //!    policies against the cluster storage model.
 //!
-//! Recommendation 3 (parallel data loading) is [`loader`].
+//! Recommendation 3 (parallel data loading) is [`loader`]. Since PR 4
+//! the loaders are *memory-bounded*: [`index`] maps global sample ids
+//! to shard offsets header-only and serves reads through a
+//! byte-budgeted LRU block cache, and [`shard`]'s windowed two-level
+//! shuffle replaces the O(corpus) per-rank epoch materialization with a
+//! lazy cursor — resident bytes are O(`data.cache_mb` +
+//! `data.shuffle_window`), never O(corpus).
 
 pub mod corpus;
+pub mod index;
 pub mod loader;
 pub mod masking;
 pub mod preprocess;
@@ -23,11 +30,12 @@ pub mod staging;
 pub mod tokenizer;
 
 pub use corpus::{CorpusGenerator, RawFunction};
-pub use loader::{HostBatch, LoaderPool};
+pub use index::{BlockCache, DatasetIndex, IoStats};
+pub use loader::{HostBatch, LoaderPool, LoaderStats};
 pub use masking::Masker;
 pub use preprocess::{preprocess_corpus, PreprocessStats};
 pub use records::{Sample, ShardReader, ShardWriter};
-pub use shard::EpochPlan;
+pub use shard::{EpochPlan, RankCursor, WindowedPlan};
 pub use tokenizer::BpeTokenizer;
 
 /// Special token ids shared by the whole pipeline (and the L2 model:

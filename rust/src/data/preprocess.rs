@@ -134,6 +134,8 @@ mod tests {
             loaders_per_gpu: 1,
             prefetch_batches: 2,
             samples_per_shard: 64,
+            cache_mb: 16.0,
+            shuffle_window: 64,
         }
     }
 
@@ -154,7 +156,9 @@ mod tests {
         // every sample is readable back
         let mut total = 0;
         for p in &stats.shards {
-            total += crate::data::ShardReader::open(p).unwrap().len();
+            let mut r = crate::data::ShardReader::open(p).unwrap();
+            assert_eq!(r.read_all().unwrap().len(), r.len());
+            total += r.len();
         }
         assert_eq!(total, 150);
         std::fs::remove_dir_all(&dir).unwrap();

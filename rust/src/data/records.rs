@@ -14,8 +14,16 @@
 //! ```
 //! The attention mask is just `pos < len`, so it costs 2 bytes per
 //! sample instead of `seq` — part of the 99 % reduction story.
+//!
+//! Readers are *streaming*: [`ShardReader::open`] reads only the 16-byte
+//! header (bounding the claimed `count` against the actual file size, so
+//! a corrupt header can never drive a huge allocation), and samples are
+//! fetched on demand with [`ShardReader::get`] / [`ShardReader::read_block`]
+//! — random access for the block cache, one contiguous read per block.
+//! [`ShardReader::read_all`] materializes a whole shard for callers that
+//! genuinely want it in memory (tests, the equivalence reference path).
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context};
@@ -25,6 +33,9 @@ use crate::Result;
 
 pub const MAGIC: u32 = 0x5458_4753;
 pub const VERSION: u32 = 1;
+
+/// Header size in bytes (magic, version, count, seq).
+pub const HEADER_BYTES: u64 = 16;
 
 /// One preprocessed sample: fixed-length ids + real length.
 #[derive(Clone, Debug, PartialEq)]
@@ -93,7 +104,6 @@ impl ShardWriter {
         let f = self.out.into_inner()?;
         drop(f);
         // patch count at offset 8
-        use std::io::{Seek, SeekFrom};
         let mut f = std::fs::OpenOptions::new().write(true)
             .open(&self.path)?;
         f.seek(SeekFrom::Start(8))?;
@@ -103,19 +113,34 @@ impl ShardWriter {
     }
 }
 
-/// In-memory shard reader (shards are sized to fit comfortably).
+/// Decode one serialized sample (`len u16` + `seq` LE u16 ids).
+fn decode_sample(buf: &[u8], seq: usize) -> Result<Sample> {
+    let len = u16::from_le_bytes(buf[0..2].try_into().unwrap());
+    ensure!(len as usize <= seq, "corrupt sample: len {len} > seq {seq}");
+    let ids: Vec<u16> = buf[2..]
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Sample { ids, len })
+}
+
+/// Random-access shard reader. `open` touches only the header; samples
+/// are read from disk on demand. Hardened against corrupt headers: the
+/// claimed sample count is bounded by what the file can actually hold
+/// before any allocation, so truncated or garbage files fail cleanly.
 pub struct ShardReader {
     pub seq: usize,
-    pub samples: Vec<Sample>,
+    count: usize,
+    file: std::fs::File,
 }
 
 impl ShardReader {
     pub fn open(path: &Path) -> Result<Self> {
-        let f = std::fs::File::open(path)
+        let file = std::fs::File::open(path)
             .with_context(|| format!("opening shard {}", path.display()))?;
-        let mut r = BufReader::new(f);
-        let mut h = [0u8; 16];
-        r.read_exact(&mut h).context("shard header")?;
+        let file_bytes = file.metadata()?.len();
+        let mut h = [0u8; HEADER_BYTES as usize];
+        (&file).read_exact(&mut h).context("shard header")?;
         let magic = u32::from_le_bytes(h[0..4].try_into().unwrap());
         let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
         let count = u32::from_le_bytes(h[8..12].try_into().unwrap());
@@ -126,27 +151,74 @@ impl ShardReader {
         if version != VERSION {
             bail!("unsupported shard version {version}");
         }
-        let mut samples = Vec::with_capacity(count as usize);
-        let mut buf = vec![0u8; 2 + 2 * seq];
-        for _ in 0..count {
-            r.read_exact(&mut buf)?;
-            let len = u16::from_le_bytes(buf[0..2].try_into().unwrap());
-            ensure!(len as usize <= seq, "corrupt sample: len > seq");
-            let ids: Vec<u16> = buf[2..]
-                .chunks_exact(2)
-                .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            samples.push(Sample { ids, len });
-        }
-        Ok(ShardReader { seq, samples })
+        ensure!(seq > 0, "corrupt shard header: seq 0");
+        // bound the claimed count by what the file can actually hold —
+        // a corrupt header must fail here, not in a huge allocation or
+        // a short read deep inside an epoch
+        let payload = file_bytes.saturating_sub(HEADER_BYTES);
+        let holds = payload / Sample::disk_bytes(seq);
+        ensure!(u64::from(count) <= holds,
+                "corrupt shard {}: header claims {count} samples but the \
+                 file holds at most {holds}", path.display());
+        Ok(ShardReader { seq, count: count as usize, file })
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.count
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.count == 0
+    }
+
+    /// Byte offset of sample `i` within the shard file.
+    fn offset(&self, i: usize) -> u64 {
+        HEADER_BYTES + i as u64 * Sample::disk_bytes(self.seq)
+    }
+
+    /// Read one sample by index (random access).
+    pub fn get(&mut self, i: usize) -> Result<Sample> {
+        Ok(self.read_block(i, 1)?.pop().unwrap())
+    }
+
+    /// Read `n` consecutive samples starting at `start` in ONE
+    /// contiguous disk read (the block cache's fetch unit). `start + n`
+    /// must be within the shard.
+    pub fn read_block(&mut self, start: usize, n: usize)
+        -> Result<Vec<Sample>> {
+        ensure!(start + n <= self.count,
+                "block [{start}, {}) outside shard of {} samples",
+                start + n, self.count);
+        let sample_bytes = Sample::disk_bytes(self.seq) as usize;
+        let mut buf = vec![0u8; n * sample_bytes];
+        self.file.seek(SeekFrom::Start(self.offset(start)))?;
+        self.file.read_exact(&mut buf).with_context(|| {
+            format!("truncated shard payload reading samples \
+                     [{start}, {})", start + n)
+        })?;
+        buf.chunks_exact(sample_bytes)
+            .map(|c| decode_sample(c, self.seq))
+            .collect()
+    }
+
+    /// Materialize the whole shard (the in-memory reference path).
+    pub fn read_all(&mut self) -> Result<Vec<Sample>> {
+        if self.count == 0 {
+            return Ok(Vec::new());
+        }
+        // buffered sequential read: one pass, still bounds-checked
+        let sample_bytes = Sample::disk_bytes(self.seq) as usize;
+        self.file.seek(SeekFrom::Start(HEADER_BYTES))?;
+        let mut r = BufReader::new(&self.file);
+        let mut buf = vec![0u8; sample_bytes];
+        let mut out = Vec::with_capacity(self.count);
+        for i in 0..self.count {
+            r.read_exact(&mut buf).with_context(|| {
+                format!("truncated shard payload at sample {i}")
+            })?;
+            out.push(decode_sample(&buf, self.seq)?);
+        }
+        Ok(out)
     }
 }
 
@@ -160,29 +232,57 @@ mod tests {
         std::env::temp_dir().join(format!("txgain-test-{pid}-{tag}.shard"))
     }
 
+    fn write_samples(path: &Path, seq: usize, samples: &[Sample]) -> u64 {
+        let mut w = ShardWriter::create(path, seq).unwrap();
+        for s in samples {
+            w.write(s).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    fn gen_samples(n: usize, seq: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let len = 1 + rng.gen_range(40) as usize;
+                let toks: Vec<u16> =
+                    (0..len).map(|_| rng.gen_range(500) as u16).collect();
+                Sample::from_tokens(&toks, seq)
+            })
+            .collect()
+    }
+
     #[test]
     fn roundtrip() {
         let path = tmpfile("roundtrip");
         let seq = 32;
-        let mut rng = Rng::new(1);
-        let samples: Vec<Sample> = (0..17)
-            .map(|_| {
-                let n = 1 + rng.gen_range(40) as usize;
-                let toks: Vec<u16> =
-                    (0..n).map(|_| rng.gen_range(500) as u16).collect();
-                Sample::from_tokens(&toks, seq)
-            })
-            .collect();
-        let mut w = ShardWriter::create(&path, seq).unwrap();
-        for s in &samples {
-            w.write(s).unwrap();
-        }
-        let bytes = w.finish().unwrap();
+        let samples = gen_samples(17, seq, 1);
+        let bytes = write_samples(&path, seq, &samples);
         assert_eq!(bytes, 16 + 17 * Sample::disk_bytes(seq));
 
-        let r = ShardReader::open(&path).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
         assert_eq!(r.seq, seq);
-        assert_eq!(r.samples, samples);
+        assert_eq!(r.len(), 17);
+        assert_eq!(r.read_all().unwrap(), samples);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn random_access_matches_sequential() {
+        let path = tmpfile("randacc");
+        let seq = 24;
+        let samples = gen_samples(23, seq, 5);
+        write_samples(&path, seq, &samples);
+        let mut r = ShardReader::open(&path).unwrap();
+        // out-of-order single gets
+        for &i in &[7usize, 0, 22, 13, 7] {
+            assert_eq!(r.get(i).unwrap(), samples[i], "sample {i}");
+        }
+        // block reads, including the tail
+        assert_eq!(r.read_block(4, 6).unwrap(), &samples[4..10]);
+        assert_eq!(r.read_block(20, 3).unwrap(), &samples[20..23]);
+        // out-of-bounds block is a clean error
+        assert!(r.read_block(21, 3).is_err());
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -200,6 +300,56 @@ mod tests {
     fn rejects_bad_magic() {
         let path = tmpfile("badmagic");
         std::fs::write(&path, b"NOPEnope0000aaaa").unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_count_beyond_file_size() {
+        // a valid header whose count claims far more samples than the
+        // file holds must fail at open (bounded before any allocation),
+        // not OOM or error mid-epoch
+        let path = tmpfile("hugecount");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+        bytes.extend_from_slice(&64u32.to_le_bytes()); // seq
+        bytes.extend_from_slice(&[0u8; 130]); // exactly one sample
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ShardReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("holds at most"), "unexpected: {err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_payload_fails_cleanly() {
+        // truncate a valid shard mid-payload: open still succeeds only
+        // if the header count fits the remaining bytes; here it does
+        // not, so the bound check reports it up front
+        let path = tmpfile("truncpay");
+        let seq = 16;
+        let samples = gen_samples(10, seq, 9);
+        write_samples(&path, seq, &samples);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        let err = ShardReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("holds at most"), "unexpected: {err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn zero_seq_header_is_rejected() {
+        // seq 0 would make disk_bytes tiny and the count bound useless;
+        // reject it explicitly (also avoids a divide-by-zero flavor of
+        // bug in downstream block math)
+        let path = tmpfile("zeroseq");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
         assert!(ShardReader::open(&path).is_err());
         std::fs::remove_file(&path).unwrap();
     }

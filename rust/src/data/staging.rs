@@ -30,12 +30,15 @@ impl StagingEstimate {
     }
 }
 
-/// Price a policy. Per-epoch traffic: a rank's samples are a random
-/// 1/world of *every* shard (the epoch shuffle), so at shard
-/// granularity each node touches essentially the whole shard set every
-/// epoch — full `dataset_bytes` per node, the read-amplification that
-/// makes shared storage hurt. Local-copy pays the same amplification
-/// against its own SSD, where it is cheap and uncontended.
+/// Price a policy. Per-epoch traffic: full `dataset_bytes` per node —
+/// the conservative upper bound (a flat random shuffle touches every
+/// shard from every node). The PR-4 windowed plan assigns each rank a
+/// *contiguous* stream segment, so a well-cached stream reads closer to
+/// `dataset_bytes × gpus_per_node / world` per node; use
+/// [`price_read`] with the trainer's measured `loader_bytes_read` to
+/// price what a run actually pulled. Local-copy pays the same
+/// amplification against its own SSD, where it is cheap and
+/// uncontended.
 pub fn estimate(cluster: &ClusterConfig, policy: StagingPolicy,
                 dataset_bytes: u64) -> StagingEstimate {
     let storage = StorageModel::new(cluster);
@@ -52,6 +55,24 @@ pub fn estimate(cluster: &ClusterConfig, policy: StagingPolicy,
                 .stage_in_time(cluster.nodes, dataset_bytes as f64),
             per_epoch_secs: storage.local_read_time(dataset_bytes as f64),
         },
+    }
+}
+
+/// Price a *measured* per-node read volume under `policy` — the
+/// cross-check between the trainer's `loader_bytes_read` column
+/// (steps.csv / report.json, × ranks per node) and the storage model:
+/// seconds the modeled array/SSD would need to serve what the stream
+/// actually pulled. Shares [`estimate`]'s flow model, so the two are
+/// directly comparable.
+pub fn price_read(cluster: &ClusterConfig, policy: StagingPolicy,
+                  bytes_per_node: u64) -> f64 {
+    let storage = StorageModel::new(cluster);
+    match policy {
+        StagingPolicy::NetworkDirect => storage
+            .shared_read_time(cluster.nodes, bytes_per_node as f64),
+        StagingPolicy::LocalCopy => {
+            storage.local_read_time(bytes_per_node as f64)
+        }
     }
 }
 
@@ -121,6 +142,26 @@ mod tests {
         assert!(g1 < 4.0, "g1={g1}");
         assert!(g128 > 8.0, "g128={g128}");
         assert!(g128 > 3.0 * g1);
+    }
+
+    #[test]
+    fn price_read_is_consistent_with_estimate() {
+        // pricing the model's own assumed volume must reproduce the
+        // per-epoch estimate exactly, for both policies — so a measured
+        // stream equal to the assumption closes the loop
+        let c = ClusterConfig::tx_gain(64);
+        let ds = 10_000_000_000u64;
+        for policy in [StagingPolicy::NetworkDirect,
+                       StagingPolicy::LocalCopy] {
+            let est = estimate(&c, policy, ds);
+            let priced = price_read(&c, policy, ds);
+            assert!((priced - est.per_epoch_secs).abs()
+                        < est.per_epoch_secs * 1e-9,
+                    "{policy:?}: {priced} vs {}", est.per_epoch_secs);
+        }
+        // a cache-friendly stream (1/nodes of the data) prices cheaper
+        let lean = price_read(&c, StagingPolicy::NetworkDirect, ds / 64);
+        assert!(lean < price_read(&c, StagingPolicy::NetworkDirect, ds));
     }
 
     #[test]

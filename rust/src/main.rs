@@ -124,6 +124,8 @@ fn print_usage() {
            train   real-mode pipeline: preprocess -> stage -> DP train\n\
                    [--preset quickstart|e2e] [--config file.json]\n\
                    [--steps N] [--workdir DIR] [--artifacts DIR]\n\
+                   [--resume CKPT]  continue from a checkpoint (mid-\n\
+                   epoch cursor included; bit-identical at same config)\n\
            sim     throughput projection at any scale (Fig. 1)\n\
                    [--preset paper-full-scale] [--nodes N]\n\
                    [--model bert-120m|...] [--batch N] [--sweep]\n\
@@ -140,7 +142,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("runs/latest"));
     println!("config:\n{}", cfg.to_json_string());
-    let out = coordinator::run(&cfg, &artifacts_dir(args), &workdir)?;
+    let resume = args.get("resume").map(PathBuf::from);
+    let out = coordinator::run_resumable(&cfg, &artifacts_dir(args),
+                                         &workdir, resume.as_deref())?;
     let r = &out.report;
     println!(
         "trained {} steps on {} ranks: loss {:.4} -> {:.4}, \

@@ -15,4 +15,5 @@ pub mod simtrain;
 
 pub use flops::train_step_flops_per_sample;
 pub use mfu::MfuModel;
-pub use simtrain::{scaling_efficiency, simulate, sweep_nodes, SimResult};
+pub use simtrain::{loader_bytes_per_sample, scaling_efficiency,
+                   simulate, sweep_nodes, SimResult};

@@ -15,8 +15,13 @@
 //!               parameter all-gather that is always exposed; per-rank
 //!               optimizer memory drops to 8·P/world in exchange
 //!               (`RankMemory`)
-//!   loader    = max(CPU prep time, storage read time) per batch;
-//!               the prefetch pipeline hides up to one compute interval
+//!   loader    = max(CPU prep time, storage read time) per batch; the
+//!               storage term prices the *streaming* loader: disk bytes
+//!               per sample depend on how the `cache_mb` block cache
+//!               covers the `shuffle_window` span (see
+//!               [`loader_bytes_per_sample`]) — an undersized cache
+//!               re-reads blocks and multiplies the stream. The
+//!               prefetch pipeline hides up to one compute interval
 //!   straggler = E[max of world jitter] ≈ σ·√(2·ln W), σ = 2 % compute
 //!   overhead  = optimizer + host bookkeeping (measured ≈ 3 ms)
 
@@ -41,6 +46,33 @@ pub const STEP_OVERHEAD_SECS: f64 = 3e-3;
 /// Per-rank compute jitter (fraction of compute) driving the straggler
 /// term.
 pub const JITTER_FRAC: f64 = 0.02;
+
+/// Modeled disk bytes per consumed sample for the streaming loader
+/// (shares `BLOCK_BYTES` with the real `BlockCache`).
+///
+/// Within one `shuffle_window` the access order is a random permutation
+/// over the window's blocks. With cache `C` bytes against a window of
+/// `W` bytes:
+///  * `C ≥ W`: every block is fetched once and fully consumed —
+///    amortized cost is exactly `sample_bytes` (the pre-PR-4 model).
+///  * `C < W`: a lookup hits the resident fraction `C/W`; each miss
+///    refetches a whole block, so the per-sample cost climbs toward
+///    `block_bytes` — the thrash regime the `cache_mb` knob must be
+///    tuned out of.
+pub fn loader_bytes_per_sample(seq: usize, cache_mb: f64,
+                               shuffle_window: usize) -> f64 {
+    let sample_bytes = Sample::disk_bytes(seq) as f64;
+    let block_samples =
+        (crate::data::index::BLOCK_BYTES as f64 / sample_bytes)
+            .floor()
+            .max(1.0);
+    let block_bytes = block_samples * sample_bytes;
+    let window_bytes = shuffle_window as f64 * sample_bytes;
+    let cache_bytes = cache_mb * 1024.0 * 1024.0;
+    let miss = (1.0 - (cache_bytes / window_bytes).min(1.0))
+        .max(1.0 / block_samples);
+    block_bytes * miss
+}
 
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -71,6 +103,12 @@ pub struct SimResult {
     /// GPU memory left free at this batch size (negative = does not
     /// fit). Headroom that could become more micro-batch (rec. 5).
     pub mem_headroom_bytes: f64,
+    /// Modeled disk bytes the streaming loader reads per rank per step
+    /// — the quantity the trainer's measured `loader_bytes` column
+    /// cross-checks. Equals `batch · sample_bytes` when the cache
+    /// covers the shuffle window; grows toward a full block per sample
+    /// as the cache shrinks below it (thrash).
+    pub loader_bytes_per_step: f64,
     pub loader_exposed_secs: f64,
     pub straggler_secs: f64,
     pub samples_per_sec: f64,
@@ -155,8 +193,14 @@ pub fn simulate(cfg: &Config) -> SimResult {
     let mem_headroom = mem.headroom(&cfg.model, batch, world, zero);
 
     // loader service: CPU-side prep and storage reads, whichever is
-    // slower binds (they pipeline against each other)
-    let batch_bytes = batch as f64 * Sample::disk_bytes(cfg.model.seq) as f64;
+    // slower binds (they pipeline against each other). The storage
+    // term is cache-aware: a stream whose cache covers the shuffle
+    // window reads each sample's bytes once; an undersized cache
+    // re-fetches whole blocks and the per-sample cost climbs toward a
+    // full block (rec. 3's sawtooth, now with a disk axis).
+    let loader_bytes_per_step = batch as f64
+        * loader_bytes_per_sample(cfg.model.seq, cfg.data.cache_mb,
+                                  cfg.data.shuffle_window);
     let cpu_secs = batch as f64
         / (cfg.data.loaders_per_gpu as f64 * LOADER_WORKER_SAMPLES_PER_SEC);
     let storage = StorageModel::new(c);
@@ -168,7 +212,7 @@ pub fn simulate(cfg: &Config) -> SimResult {
             storage.shared_read_bw(c.nodes) / c.gpus_per_node as f64
         }
     };
-    let fetch = cpu_secs.max(batch_bytes / storage_rate_per_gpu);
+    let fetch = cpu_secs.max(loader_bytes_per_step / storage_rate_per_gpu);
     let loader_exposed = (fetch - compute).max(0.0);
 
     // straggler: expected max of `world` jittered ranks
@@ -192,6 +236,7 @@ pub fn simulate(cfg: &Config) -> SimResult {
         wire_bytes_per_rank: wire_bytes,
         opt_bytes_per_rank: rank_mem.optimizer_bytes,
         mem_headroom_bytes: mem_headroom,
+        loader_bytes_per_step,
         loader_exposed_secs: loader_exposed,
         straggler_secs: straggler,
         samples_per_sec: batch as f64 * world as f64 / step,
@@ -449,6 +494,55 @@ mod tests {
         let last = utils[utils.len() - 1];
         let prev = utils[utils.len() - 2];
         assert!((last - prev) / last < 0.02, "{utils:?}");
+    }
+
+    #[test]
+    fn ample_cache_reads_each_sample_once() {
+        // cache ≥ window: the stream costs exactly sample_bytes per
+        // sample, so loader bytes per step = batch · (2 + 2·seq)
+        let cfg = paper_cfg(presets::model_bert_120m(), 184);
+        let r = simulate(&cfg);
+        let expect = 184.0 * Sample::disk_bytes(cfg.model.seq) as f64;
+        assert!((r.loader_bytes_per_step - expect).abs() < 1e-6,
+                "{} vs {expect}", r.loader_bytes_per_step);
+    }
+
+    #[test]
+    fn undersized_cache_thrashes_the_stream() {
+        // shrink the cache below the shuffle window: per-step disk
+        // bytes must grow monotonically toward a block per sample, and
+        // under contended network-direct staging that extra stream
+        // shows up as exposed loader time
+        let mut cfg = paper_cfg(presets::model_bert_120m(), 184);
+        cfg.data.shuffle_window = 65536; // ~67 MB at seq 512
+        let bytes_at = |mb: f64| {
+            let mut c = cfg.clone();
+            c.data.cache_mb = mb;
+            simulate(&c).loader_bytes_per_step
+        };
+        let ample = bytes_at(128.0);
+        let half = bytes_at(32.0);
+        let tiny = bytes_at(1.0);
+        assert!(ample < half && half < tiny,
+                "not monotone: {ample} {half} {tiny}");
+        // thrash regime is bounded by one block per sample
+        let block = crate::data::index::BLOCK_BYTES as f64;
+        assert!(tiny <= 184.0 * block * 1.0001);
+
+        // against a compute-light model the extra stream lands on the
+        // critical path: exposed loader time under contended
+        // network-direct staging must be visibly worse when thrashing
+        let mut cfg = paper_cfg(presets::model_tiny(), 184);
+        cfg.data.staging = StagingPolicy::NetworkDirect;
+        cfg.data.loaders_per_gpu = 32; // CPU prep out of the way
+        cfg.data.shuffle_window = 65536;
+        cfg.data.cache_mb = 0.05;
+        let thrash = simulate(&cfg);
+        cfg.data.cache_mb = 128.0;
+        let warm = simulate(&cfg);
+        assert!(thrash.loader_exposed_secs > warm.loader_exposed_secs,
+                "thrash {} !> warm {}", thrash.loader_exposed_secs,
+                warm.loader_exposed_secs);
     }
 
     #[test]

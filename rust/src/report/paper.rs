@@ -38,7 +38,7 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
         &format!("FIG. 1 — pretraining scaling performance ({model_name})"),
         vec!["nodes", "gpus", "batch/gpu", "samples/s", "scale-eff",
              "step(ms)", "compute(ms)", "comm-exposed(ms)", "wire/step",
-             "opt-mem/rank", "gpu-util"],
+             "io/step", "opt-mem/rank", "gpu-util"],
     );
     let Some(base) = sweep.first() else {
         return t;
@@ -56,6 +56,7 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
             format!("{:.1}", r.compute_secs * 1e3),
             format!("{:.1}", r.comm_exposed_secs * 1e3),
             format!("{:.1}MB", r.wire_bytes_per_rank / 1e6),
+            format!("{:.1}MB", r.loader_bytes_per_step / 1e6),
             format!("{:.1}MB", r.opt_bytes_per_rank / 1e6),
             format!("{:.3}", r.gpu_util),
         ]);
@@ -68,8 +69,8 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
     let mut w = CsvWriter::new(vec![
         "model", "nodes", "gpus", "batch_per_gpu", "samples_per_sec",
         "step_secs", "compute_secs", "comm_secs", "comm_exposed_secs",
-        "wire_bytes_per_rank", "opt_bytes_per_rank",
-        "mem_headroom_bytes", "gpu_util",
+        "wire_bytes_per_rank", "loader_bytes_per_step",
+        "opt_bytes_per_rank", "mem_headroom_bytes", "gpu_util",
     ]);
     for (name, sweep) in series {
         for r in sweep {
@@ -84,6 +85,7 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
                 format!("{:.6}", r.comm_secs),
                 format!("{:.6}", r.comm_exposed_secs),
                 format!("{:.0}", r.wire_bytes_per_rank),
+                format!("{:.0}", r.loader_bytes_per_step),
                 format!("{:.0}", r.opt_bytes_per_rank),
                 format!("{:.0}", r.mem_headroom_bytes),
                 format!("{:.4}", r.gpu_util),
@@ -139,6 +141,23 @@ mod tests {
         // one node moves nothing inter-node; 128 nodes ~2(n-1)/n·bf16
         assert_eq!(sweep[0].wire_bytes_per_rank, 0.0);
         assert!(sweep[1].wire_bytes_per_rank > 0.0);
+    }
+
+    #[test]
+    fn fig1_reports_loader_stream() {
+        // the data-plane cross-check column: modeled disk bytes per
+        // step appear in both table and CSV, matching the trainer's
+        // measured loader_bytes column shape
+        let cfg = presets::paper_full_scale();
+        let sweep = sweep_nodes(&cfg, &[1, 128]);
+        let s = fig1_table("bert-120m", &sweep).render();
+        assert!(s.contains("io/step"), "missing column: {s}");
+        let csv = fig1_csv(&[("bert-120m", sweep.clone())]).to_string();
+        assert!(csv.contains("loader_bytes_per_step"));
+        // ample default cache: one sample's bytes per sample
+        let expect = cfg.training.batch_per_gpu as f64
+            * (2 + 2 * cfg.model.seq) as f64;
+        assert!((sweep[0].loader_bytes_per_step - expect).abs() < 1e-6);
     }
 
     #[test]

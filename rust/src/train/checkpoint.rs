@@ -1,6 +1,13 @@
-//! Checkpointing: params + optimizer moments + step counter in a simple
-//! length-prefixed binary container (no external serialization crates in
-//! the offline build).
+//! Checkpointing: params + optimizer moments + the training progress
+//! cursor in a simple length-prefixed binary container (no external
+//! serialization crates in the offline build).
+//!
+//! Version 2 (this PR) records [`TrainProgress`] — global step PLUS the
+//! data-plane cursor (epoch, epoch_step) — so a resume can fast-forward
+//! the windowed-shuffle cursor to the exact mid-epoch position and
+//! continue the uninterrupted run's batch stream bit-identically. The
+//! cursor is a pure index: nothing about the dataset is stored, only
+//! where in the deterministic (seed, epoch) order training stood.
 //!
 //! ZeRO-1: the on-disk format always holds the FULL flat m/v vectors.
 //! Under sharded training, rank 0 gathers every rank's owned moments
@@ -8,7 +15,11 @@
 //! before the one atomic save — so a sharded run's checkpoint is
 //! byte-compatible with a replicated run's, and resuming at a
 //! *different* world size is just [`extract_shard`] against the new
-//! world's shard ranges. No per-rank files, no world-size coupling.
+//! world's shard ranges. No per-rank files, no world-size coupling —
+//! for the model state. The *data cursor* is the exception: a
+//! mid-epoch position only means something in the epoch geometry that
+//! saved it, so [`TrainProgress::steps_per_epoch`] pins it and the
+//! trainer refuses a cross-geometry resume.
 //!
 //! Crash safety: `save` writes to a `.tmp` sibling, fsyncs, and
 //! atomically renames into place, so a crash mid-write can never leave
@@ -20,7 +31,9 @@
 //!
 //! Layout (little-endian):
 //! ```text
-//! magic "TXCK" u32, version u32, step u64,
+//! magic "TXCK" u32, version u32 = 2,
+//! step u64, epoch u64, epoch_step u64,
+//! corpus u64, world u64, batch u64, window u64   (cursor geometry)
 //! n_tensors u32, then per tensor: len u64, f32[len]   (params)
 //! m_len u64, f32[m_len]                                (Adam m)
 //! v_len u64, f32[v_len]                                (Adam v)
@@ -36,7 +49,7 @@ use crate::runtime::HostParams;
 use crate::Result;
 
 const MAGIC: u32 = 0x5458_434B;
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Transport tags for the sharded-checkpoint gather (outside the
 /// collectives' tag ranges; reuse across saves is FIFO-safe because
@@ -44,11 +57,60 @@ const VERSION: u32 = 1;
 const CKPT_M_TAG: u32 = 0x9100;
 const CKPT_V_TAG: u32 = 0x9101;
 
-pub struct Checkpoint {
+/// Where training stood when a checkpoint was written: the global
+/// optimizer step plus the data-plane cursor. `epoch_step` counts the
+/// optimizer steps already taken *within* `epoch` — the position the
+/// streaming loader fast-forwards to on resume. The geometry fields
+/// (`corpus`, `world`, `batch`, `window`) pin the coordinate system
+/// the cursor was measured in: the same position means different
+/// samples under a different geometry, so the trainer refuses to
+/// resume across any mismatch instead of silently re-training some
+/// samples and skipping others. (All zeros = unknown geometry, e.g.
+/// hand-built test checkpoints. The seed is deliberately not stored:
+/// a run is reproducible from its config, and the config owns it.)
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrainProgress {
     pub step: u64,
+    pub epoch: u64,
+    pub epoch_step: u64,
+    /// Dataset samples the cursor's plan was built over.
+    pub corpus: u64,
+    /// Data-parallel world size.
+    pub world: u64,
+    /// Per-rank batch size.
+    pub batch: u64,
+    /// `data.shuffle_window` of the saving run.
+    pub window: u64,
+}
+
+impl TrainProgress {
+    /// Progress with unknown geometry (all geometry fields 0); the
+    /// trainer fills them via struct update when saving.
+    pub fn new(step: u64, epoch: u64, epoch_step: u64) -> Self {
+        TrainProgress {
+            step,
+            epoch,
+            epoch_step,
+            corpus: 0,
+            world: 0,
+            batch: 0,
+            window: 0,
+        }
+    }
+}
+
+pub struct Checkpoint {
+    pub progress: TrainProgress,
     pub params: HostParams,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Global optimizer step (shorthand for `progress.step`).
+    pub fn step(&self) -> u64 {
+        self.progress.step
+    }
 }
 
 fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
@@ -142,8 +204,8 @@ fn tmp_path(path: &Path) -> std::path::PathBuf {
 
 /// Write the checkpoint atomically: the bytes land in a `.tmp` sibling
 /// first, and only a complete, fsynced file is renamed over `path`.
-pub fn save(path: &Path, step: u64, params: &HostParams, m: &[f32],
-            v: &[f32]) -> Result<()> {
+pub fn save(path: &Path, progress: TrainProgress, params: &HostParams,
+            m: &[f32], v: &[f32]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
@@ -155,7 +217,13 @@ pub fn save(path: &Path, step: u64, params: &HostParams, m: &[f32],
         let mut w = BufWriter::new(f);
         w.write_all(&MAGIC.to_le_bytes())?;
         w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&step.to_le_bytes())?;
+        w.write_all(&progress.step.to_le_bytes())?;
+        w.write_all(&progress.epoch.to_le_bytes())?;
+        w.write_all(&progress.epoch_step.to_le_bytes())?;
+        w.write_all(&progress.corpus.to_le_bytes())?;
+        w.write_all(&progress.world.to_le_bytes())?;
+        w.write_all(&progress.batch.to_le_bytes())?;
+        w.write_all(&progress.window.to_le_bytes())?;
         w.write_all(&(params.tensors.len() as u32).to_le_bytes())?;
         for t in &params.tensors {
             write_f32s(&mut w, t)?;
@@ -197,7 +265,8 @@ pub fn save(path: &Path, step: u64, params: &HostParams, m: &[f32],
 /// gather rides whatever backend the step's collectives ran on.
 #[allow(clippy::too_many_arguments)]
 pub fn save_sharded<T: Transport>(path: &Path, comm: &mut T,
-                                  plan: &BucketPlan, step: u64,
+                                  plan: &BucketPlan,
+                                  progress: TrainProgress,
                                   params: &HostParams, m_shard: &[f32],
                                   v_shard: &[f32]) -> Result<()> {
     let world = comm.world();
@@ -223,7 +292,7 @@ pub fn save_sharded<T: Transport>(path: &Path, comm: &mut T,
             .with_context(|| format!("rank {r} v-shard"))?;
         comm.recycle(v_in);
     }
-    save(path, step, params, &m_full, &v_full)
+    save(path, progress, params, &m_full, &v_full)
 }
 
 pub fn load(path: &Path) -> Result<Checkpoint> {
@@ -232,24 +301,35 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
                                  path.display()))?;
     let file_len = f.metadata()?.len();
     let mut r = BufReader::new(f);
-    let mut h = [0u8; 20];
+    let mut h = [0u8; 68];
     r.read_exact(&mut h)?;
     if u32::from_le_bytes(h[0..4].try_into().unwrap()) != MAGIC {
         bail!("not a txgain checkpoint");
     }
-    if u32::from_le_bytes(h[4..8].try_into().unwrap()) != VERSION {
-        bail!("unsupported checkpoint version");
+    let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version} (this build \
+               reads v{VERSION}; v1 predates the resumable data cursor)");
     }
-    let step = u64::from_le_bytes(h[8..16].try_into().unwrap());
-    let n = u32::from_le_bytes(h[16..20].try_into().unwrap()) as usize;
-    let mut remaining = file_len.saturating_sub(20);
+    let u = |a: usize| u64::from_le_bytes(h[a..a + 8].try_into().unwrap());
+    let progress = TrainProgress {
+        step: u(8),
+        epoch: u(16),
+        epoch_step: u(24),
+        corpus: u(32),
+        world: u(40),
+        batch: u(48),
+        window: u(56),
+    };
+    let n = u32::from_le_bytes(h[64..68].try_into().unwrap()) as usize;
+    let mut remaining = file_len.saturating_sub(68);
     let mut tensors = Vec::with_capacity(n.min(1024));
     for _ in 0..n {
         tensors.push(read_f32s(&mut r, &mut remaining)?);
     }
     let m = read_f32s(&mut r, &mut remaining)?;
     let v = read_f32s(&mut r, &mut remaining)?;
-    Ok(Checkpoint { step, params: HostParams { tensors }, m, v })
+    Ok(Checkpoint { progress, params: HostParams { tensors }, m, v })
 }
 
 #[cfg(test)]
@@ -265,9 +345,20 @@ mod tests {
         };
         let m = vec![0.1; 7];
         let v = vec![0.2; 7];
-        save(&path, 42, &params, &m, &v).unwrap();
+        // a mid-epoch cursor: step 42 = 2 full epochs of 17 + 8 into
+        // the third — the data-plane position AND the geometry it was
+        // measured against must survive the disk
+        let progress = TrainProgress {
+            corpus: 137,
+            world: 2,
+            batch: 4,
+            window: 16,
+            ..TrainProgress::new(42, 2, 8)
+        };
+        save(&path, progress, &params, &m, &v).unwrap();
         let ck = load(&path).unwrap();
-        assert_eq!(ck.step, 42);
+        assert_eq!(ck.progress, progress);
+        assert_eq!(ck.step(), 42);
         assert_eq!(ck.params.tensors, params.tensors);
         assert_eq!(ck.m, m);
         assert_eq!(ck.v, v);
@@ -294,6 +385,7 @@ mod tests {
         bytes.extend_from_slice(&MAGIC.to_le_bytes());
         bytes.extend_from_slice(&VERSION.to_le_bytes());
         bytes.extend_from_slice(&7u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&[0u8; 48]); // cursor + geometry fields
         bytes.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
         bytes.extend_from_slice(&(u64::MAX / 8).to_le_bytes());
         bytes.extend_from_slice(&[0u8; 16]); // a few stray bytes
@@ -316,7 +408,8 @@ mod tests {
         let path = std::env::temp_dir().join(format!(
             "txgain-ckpt-trunc-{}.bin", std::process::id()));
         let params = HostParams { tensors: vec![vec![1.0; 100]] };
-        save(&path, 1, &params, &[0.5; 100], &[0.25; 100]).unwrap();
+        save(&path, TrainProgress::new(1, 0, 1), &params, &[0.5; 100],
+             &[0.25; 100]).unwrap();
         let full = std::fs::read(&path).unwrap();
         std::fs::write(&path, &full[..full.len() / 2]).unwrap();
         assert!(load(&path).is_err());
@@ -333,7 +426,8 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("latest.ckpt");
         let old = HostParams { tensors: vec![vec![1.0, 2.0, 3.0]] };
-        save(&path, 10, &old, &[0.1; 3], &[0.2; 3]).unwrap();
+        save(&path, TrainProgress::new(10, 0, 10), &old, &[0.1; 3],
+             &[0.2; 3]).unwrap();
 
         // a crash while writing step 20 leaves only a torn .tmp sibling
         let tmp = super::tmp_path(&path);
@@ -344,15 +438,17 @@ mod tests {
         std::fs::write(&tmp, &torn).unwrap();
 
         let ck = load(&path).unwrap();
-        assert_eq!(ck.step, 10);
+        assert_eq!(ck.step(), 10);
         assert_eq!(ck.params.tensors, old.tensors);
 
         // recovery: a complete save replaces both tmp and final file
         let new = HostParams { tensors: vec![vec![9.0, 8.0, 7.0]] };
-        save(&path, 20, &new, &[0.3; 3], &[0.4; 3]).unwrap();
+        save(&path, TrainProgress::new(20, 1, 3), &new, &[0.3; 3],
+             &[0.4; 3]).unwrap();
         assert!(!tmp.exists(), "tmp file must be renamed away");
         let ck = load(&path).unwrap();
-        assert_eq!(ck.step, 20);
+        assert_eq!(ck.step(), 20);
+        assert_eq!(ck.progress, TrainProgress::new(20, 1, 3));
         assert_eq!(ck.params.tensors, new.tensors);
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -415,10 +511,12 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("zero.ckpt");
         let params = HostParams { tensors: vec![vec![1.0; n]] };
-        save(&path, 77, &params, &m_merged, &v_merged).unwrap();
+        save(&path, TrainProgress::new(77, 1, 13), &params, &m_merged,
+             &v_merged).unwrap();
 
         let ck = load(&path).unwrap();
-        assert_eq!(ck.step, 77);
+        assert_eq!(ck.step(), 77);
+        assert_eq!(ck.progress.epoch_step, 13);
         for resume_world in [2usize, 8] {
             let mut seen = 0usize;
             for r in 0..resume_world {
@@ -467,14 +565,15 @@ mod tests {
                 let v_shard =
                     extract_shard(&v_full, &ranges).unwrap();
                 s.spawn(move || {
-                    save_sharded(&path, &mut comm, &plan, 31, &params,
+                    save_sharded(&path, &mut comm, &plan,
+                                 TrainProgress::new(31, 0, 31), &params,
                                  &m_shard, &v_shard)
                         .unwrap();
                 });
             }
         });
         let ck = load(&path).unwrap();
-        assert_eq!(ck.step, 31);
+        assert_eq!(ck.progress, TrainProgress::new(31, 0, 31));
         assert_eq!(ck.m, m_full);
         assert_eq!(ck.v, v_full);
         assert_eq!(ck.params.tensors, params.tensors);
@@ -495,7 +594,8 @@ mod tests {
         let params = HostParams { tensors: vec![vec![2.0; n]] };
         let m: Vec<f32> = (0..n).map(|i| i as f32).collect();
         let v = vec![0.5f32; n];
-        save(&path, 9, &params, &m, &v).unwrap();
+        save(&path, TrainProgress::new(9, 0, 9), &params, &m, &v)
+            .unwrap();
         let full = std::fs::read(&path).unwrap();
         // tear the file inside the v tensor (last section)
         std::fs::write(&path, &full[..full.len() - 17]).unwrap();
@@ -511,7 +611,8 @@ mod tests {
         let path = std::env::temp_dir().join(format!(
             "txgain-ckpt-notmp-{}.ckpt", std::process::id()));
         let params = HostParams { tensors: vec![vec![4.0; 8]] };
-        save(&path, 3, &params, &[0.0; 8], &[0.0; 8]).unwrap();
+        save(&path, TrainProgress::new(3, 0, 3), &params, &[0.0; 8],
+             &[0.0; 8]).unwrap();
         assert!(path.exists());
         assert!(!super::tmp_path(&path).exists());
         std::fs::remove_file(&path).unwrap();

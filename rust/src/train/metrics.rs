@@ -26,6 +26,13 @@ pub struct StepRecord {
     /// Modeled wire bytes for the same traffic (bf16, 2 B/elem — what
     /// the α-β cost model prices; see `TransportStats`).
     pub comm_wire_bytes: u64,
+    /// Bytes the streaming loader read from disk in this step's
+    /// interval (block-cache misses; prefetch skews attribution by a
+    /// step or two, totals are exact). 0 on the in-memory path.
+    pub loader_bytes: u64,
+    /// Block-cache hit rate over the same interval (1.0 when no
+    /// lookups happened — nothing was missed).
+    pub cache_hit_rate: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -83,11 +90,27 @@ impl RunReport {
         self.records.iter().map(|r| r.comm_wire_bytes).sum()
     }
 
+    /// Total bytes the streaming loader read from disk — the measured
+    /// side of the staging cost model's per-epoch IO estimate.
+    pub fn loader_bytes_read(&self) -> u64 {
+        self.records.iter().map(|r| r.loader_bytes).sum()
+    }
+
+    /// Mean per-step block-cache hit rate (unweighted; per-step rates
+    /// are already interval-normalized).
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.records.is_empty() {
+            return 1.0;
+        }
+        self.records.iter().map(|r| r.cache_hit_rate).sum::<f64>()
+            / self.records.len() as f64
+    }
+
     pub fn to_csv(&self) -> CsvWriter {
         let mut w = CsvWriter::new(vec![
             "step", "loss", "lr", "step_secs", "compute_secs",
             "loader_wait_secs", "comm_secs", "comm_buffer_bytes",
-            "comm_wire_bytes",
+            "comm_wire_bytes", "loader_bytes", "cache_hit_rate",
         ]);
         for r in &self.records {
             w.row(&[
@@ -100,6 +123,8 @@ impl RunReport {
                 format!("{:.6}", r.comm_secs),
                 r.comm_buffer_bytes.to_string(),
                 r.comm_wire_bytes.to_string(),
+                r.loader_bytes.to_string(),
+                format!("{:.4}", r.cache_hit_rate),
             ]);
         }
         w
@@ -125,6 +150,9 @@ impl RunReport {
              json::num(self.comm_buffer_bytes() as f64)),
             ("comm_wire_bytes",
              json::num(self.comm_wire_bytes() as f64)),
+            ("loader_bytes_read",
+             json::num(self.loader_bytes_read() as f64)),
+            ("cache_hit_rate", json::num(self.cache_hit_rate())),
         ])
     }
 
@@ -157,6 +185,8 @@ mod tests {
                     comm_secs: 0.01,
                     comm_buffer_bytes: 4000,
                     comm_wire_bytes: 2000,
+                    loader_bytes: 1000,
+                    cache_hit_rate: 0.75,
                 })
                 .collect(),
             preprocess_secs: 1.0,
@@ -187,8 +217,9 @@ mod tests {
         let s = csv.to_string();
         assert!(s.starts_with("step,loss,lr,step_secs,compute_secs,\
                                loader_wait_secs,comm_secs,\
-                               comm_buffer_bytes,comm_wire_bytes"));
-        assert!(s.contains(",4000,2000"));
+                               comm_buffer_bytes,comm_wire_bytes,\
+                               loader_bytes,cache_hit_rate"));
+        assert!(s.contains(",4000,2000,1000,0.7500"));
     }
 
     #[test]
@@ -196,6 +227,18 @@ mod tests {
         let r = report();
         assert_eq!(r.comm_buffer_bytes(), 40_000);
         assert_eq!(r.comm_wire_bytes(), 20_000);
+        assert_eq!(r.loader_bytes_read(), 10_000);
+        assert!((r.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loader_totals_appear_in_json() {
+        let v = crate::util::json::Value::parse(
+            &report().to_json().to_pretty()).unwrap();
+        assert_eq!(
+            v.req("loader_bytes_read").unwrap().as_usize().unwrap(),
+            10_000);
+        assert!(v.req("cache_hit_rate").is_ok());
     }
 
     #[test]

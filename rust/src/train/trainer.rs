@@ -12,6 +12,15 @@
 //! sized to it), and updated parameters are all-gathered back — either
 //! way replicas end every step bit-identical, asserted at the end of
 //! every run (the fundamental DDP invariant).
+//!
+//! The data plane is *streaming* (PR 4): shards are opened header-only
+//! into a [`DatasetIndex`], each rank reads samples through a
+//! `data.cache_mb`-budgeted [`BlockCache`], and epoch order comes from
+//! the lazy two-level [`WindowedPlan`] — resident dataset memory is
+//! O(cache + window + prefetch), never O(corpus). The loader cursor
+//! (epoch, epoch_step) rides every checkpoint, so `resume_from` can
+//! fast-forward to an exact mid-epoch position and reproduce the
+//! uninterrupted run's remaining steps bit-identically.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -24,11 +33,12 @@ use crate::collectives::{allreduce, bucketed_all_gather,
                          bucketed_allreduce, bucketed_reduce_scatter,
                          Algorithm, Backend, BucketPlan, Transport};
 use crate::config::{Config, ExecMode};
-use crate::data::loader::{load_dataset, LoaderPool};
-use crate::data::{EpochPlan, Masker, Sample};
+use crate::data::{BlockCache, DatasetIndex, LoaderPool, Masker,
+                  WindowedPlan};
 use crate::runtime::{Engine, HostParams, Manifest};
 use crate::Result;
 
+use super::checkpoint::{extract_shard, Checkpoint, TrainProgress};
 use super::metrics::{RunReport, StepRecord};
 use super::optimizer::AdamW;
 use super::schedule::LrSchedule;
@@ -43,6 +53,32 @@ pub struct TrainOptions {
     pub io_delay_us: u64,
     /// Checkpoint directory (used when `checkpoint_every > 0`).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from this checkpoint: restores params + optimizer moments
+    /// and fast-forwards the data cursor to the saved (epoch,
+    /// epoch_step) — at the same config the continuation is
+    /// bit-identical to the uninterrupted run.
+    pub resume_from: Option<PathBuf>,
+    /// Measured one-time pipeline costs, threaded into the report so
+    /// its end-to-end wall-clock story is honest (the coordinator fills
+    /// these; direct callers may leave them 0.0).
+    pub preprocess_secs: f64,
+    pub stage_secs: f64,
+}
+
+impl TrainOptions {
+    /// Options with everything beyond the two required paths defaulted.
+    pub fn new(artifacts_dir: PathBuf, shards: Vec<PathBuf>)
+        -> TrainOptions {
+        TrainOptions {
+            artifacts_dir,
+            shards,
+            io_delay_us: 0,
+            checkpoint_dir: None,
+            resume_from: None,
+            preprocess_secs: 0.0,
+            stage_secs: 0.0,
+        }
+    }
 }
 
 struct RankOutcome {
@@ -80,13 +116,26 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
             "artifact '{variant}' bakes batch {}, config asks {}",
             meta.batch, cfg.training.batch_per_gpu);
 
-    let (samples, seq) = load_dataset(&opts.shards)?;
-    ensure!(seq == cfg.model.seq, "shard seq {} != model seq {}", seq,
-            cfg.model.seq);
-    let dataset: Arc<Vec<Sample>> = Arc::new(samples);
+    // header-only dataset index: O(shards) metadata, zero samples
+    // decoded — the corpus never becomes resident
+    let index = Arc::new(DatasetIndex::open(&opts.shards)?);
+    ensure!(index.seq() == cfg.model.seq,
+            "shard seq {} != model seq {}", index.seq(), cfg.model.seq);
+    let shard_counts = Arc::new(index.shard_counts());
 
     let batch = cfg.training.batch_per_gpu;
     let total_steps = cfg.training.steps;
+    // the epoch geometry is fixed by (corpus, world, batch); an empty
+    // epoch would spin the epoch loop forever building zero-step plans
+    // — fail loudly instead (the pre-PR-4 infinite-loop bug)
+    let samples_per_rank = index.len().div_ceil(world);
+    let steps_per_epoch = samples_per_rank / batch;
+    ensure!(steps_per_epoch > 0,
+            "batch_per_gpu {batch} exceeds the {samples_per_rank} \
+             samples a rank sees per epoch ({} corpus samples over \
+             {world} ranks) — no full batch fits; shrink the batch or \
+             grow the corpus", index.len());
+
     let schedule = LrSchedule::new(cfg.training.lr,
                                    cfg.training.warmup_steps, total_steps);
     let algo: Algorithm = cfg.training.allreduce.parse()?;
@@ -107,18 +156,60 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     });
     let masker = Masker::new(cfg.data.mask_prob, cfg.model.vocab);
 
+    // resume: load the (world-size-independent) checkpoint once; every
+    // rank restores params and extracts its own moment shard from it
+    let resume: Option<Arc<Checkpoint>> = opts
+        .resume_from
+        .as_deref()
+        .map(|p| -> Result<Arc<Checkpoint>> {
+            let ck = super::checkpoint::load(p)
+                .with_context(|| format!("resuming from {}",
+                                         p.display()))?;
+            ensure!(ck.params.total_len() == meta.grad_len,
+                    "checkpoint holds {} params but artifact \
+                     '{variant}' has {}", ck.params.total_len(),
+                    meta.grad_len);
+            ensure!(ck.m.len() == meta.grad_len
+                        && ck.v.len() == meta.grad_len,
+                    "checkpoint moment vectors do not match the model");
+            ensure!((ck.progress.step as usize) < total_steps,
+                    "checkpoint is already at step {} of {total_steps}",
+                    ck.progress.step);
+            // a mid-epoch cursor only means something in the geometry
+            // it was measured in: under a different corpus, world,
+            // batch or shuffle window the same position names
+            // different samples, silently re-training some and
+            // skipping others — refuse instead. (The seed is owned by
+            // the config; resuming with a different seed is the same
+            // class of user error as any other config edit.)
+            let saved = (ck.progress.corpus, ck.progress.world,
+                         ck.progress.batch, ck.progress.window);
+            let here = (index.len() as u64, world as u64, batch as u64,
+                        cfg.data.shuffle_window as u64);
+            ensure!(saved == here,
+                    "checkpoint's data cursor was saved in geometry \
+                     (corpus, world, batch, window) = {saved:?} but \
+                     this run is {here:?} — params/moments are \
+                     portable, the mid-epoch position is not; resume \
+                     with the saving run's config");
+            Ok(Arc::new(ck))
+        })
+        .transpose()?;
+
     let comms = backend.world(world)?;
     let outcomes: Vec<Result<RankOutcome>> = std::thread::scope(|scope| {
         let handles: Vec<_> = comms
             .into_iter()
             .enumerate()
             .map(|(rank, mut comm)| {
-                let dataset = dataset.clone();
+                let index = index.clone();
+                let shard_counts = shard_counts.clone();
                 let masker = masker.clone();
                 let cfg = cfg.clone();
                 let opts = opts.clone();
                 let meta = meta.clone();
                 let bucket_plan = bucket_plan.clone();
+                let resume = resume.clone();
                 scope.spawn(move || -> Result<RankOutcome> {
                     let engine = Engine::load(&opts.artifacts_dir, variant)
                         .with_context(|| format!("rank {rank} engine"))?;
@@ -132,6 +223,11 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                             plan.rank_ranges(rank, world)),
                         _ => AdamW::new(&cfg.training, meta.grad_len),
                     };
+                    // the rank's byte-budgeted window onto the corpus;
+                    // shared by its loader workers, reused across
+                    // epochs so a warm cache survives epoch boundaries
+                    let cache = Arc::new(BlockCache::new(
+                        index.clone(), cfg.data.cache_mb)?);
                     // scratch flat parameter vector for the ZeRO-1
                     // all-gather (collectives run on flat buffers)
                     let mut flat_params =
@@ -141,18 +237,49 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
 
                     let mut step = 0usize;
                     let mut epoch = 0u64;
+                    // the data cursor resumes exactly where the
+                    // checkpoint left it: same epoch, same step within
+                    // the epoch — the loader fast-forwards by index
+                    // arithmetic, no data is replayed
+                    let mut epoch_start_step = 0usize;
+                    if let Some(ck) = &resume {
+                        params = ck.params.clone();
+                        let (m, v) = match (&bucket_plan, zero) {
+                            (Some(plan), true) => {
+                                let ranges =
+                                    plan.rank_ranges(rank, world);
+                                (extract_shard(&ck.m, &ranges)?,
+                                 extract_shard(&ck.v, &ranges)?)
+                            }
+                            _ => (ck.m.clone(), ck.v.clone()),
+                        };
+                        opt.restore(ck.progress.step, m, v);
+                        step = ck.progress.step as usize;
+                        epoch = ck.progress.epoch;
+                        epoch_start_step =
+                            ck.progress.epoch_step as usize;
+                    }
+
                     'outer: while step < total_steps {
-                        let plan = EpochPlan::build(dataset.len(), world,
-                                                    epoch, cfg.seed);
-                        let mut loader = LoaderPool::spawn(
-                            dataset.clone(), meta.seq,
-                            &plan.per_rank[rank], batch, masker.clone(),
-                            cfg.seed, epoch, cfg.data.loaders_per_gpu,
+                        let plan = Arc::new(WindowedPlan::build(
+                            &shard_counts, world, epoch, cfg.seed,
+                            cfg.data.shuffle_window)?);
+                        let mut loader = LoaderPool::spawn_streaming(
+                            cache.clone(), plan, rank, batch,
+                            masker.clone(), cfg.seed,
+                            cfg.data.loaders_per_gpu,
                             cfg.data.prefetch_batches, opts.io_delay_us,
+                            epoch_start_step,
                         )?;
-                        let wait0 =
-                            loader.stats.wait_ns.load(Ordering::Relaxed);
-                        let mut last_wait = wait0;
+                        epoch_start_step = 0; // only the resumed epoch
+                        // baselines are zero BY CONSTRUCTION (the
+                        // pool's stats are fresh); snapshotting here
+                        // instead would race worker prefetch and drop
+                        // whatever was read before the snapshot from
+                        // every delta
+                        let mut last_wait = 0u64;
+                        let (mut last_bytes, mut last_hits,
+                             mut last_misses) = (0u64, 0u64, 0u64);
                         while let Some(b) = loader.next_batch() {
                             if step >= total_steps {
                                 break 'outer;
@@ -165,6 +292,24 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                             let loader_wait =
                                 (wait_now - last_wait) as f64 * 1e-9;
                             last_wait = wait_now;
+                            // disk-side view of the same interval. The
+                            // workers prefetch ahead, so per-step
+                            // attribution is the traffic since the
+                            // last record, not strictly this batch's —
+                            // totals are exact.
+                            let (io_bytes, hits, misses, _) =
+                                loader.stats.io.snapshot();
+                            let loader_bytes = io_bytes - last_bytes;
+                            let lookups =
+                                (hits - last_hits) + (misses - last_misses);
+                            let cache_hit_rate = if lookups == 0 {
+                                1.0
+                            } else {
+                                (hits - last_hits) as f64
+                                    / lookups as f64
+                            };
+                            (last_bytes, last_hits, last_misses) =
+                                (io_bytes, hits, misses);
 
                             let t_exec = Instant::now();
                             let mut out = engine.execute_step(
@@ -262,6 +407,8 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                         .buffer_bytes_sent,
                                     comm_wire_bytes: step_traffic
                                         .wire_bytes_sent,
+                                    loader_bytes,
+                                    cache_hit_rate,
                                 });
                             }
                             // checkpointing: with sharded optimizer
@@ -269,7 +416,9 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                             // shards are gathered to rank 0 and merged
                             // into one atomic, world-size-independent
                             // file); replicated state saves from rank 0
-                            // alone as before
+                            // alone as before. The saved progress
+                            // carries the data cursor: global step,
+                            // epoch, and steps completed this epoch.
                             if cfg.training.checkpoint_every > 0
                                 && (step + 1)
                                     % cfg.training.checkpoint_every
@@ -281,18 +430,32 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                         "step-{:06}.ckpt",
                                         step + 1
                                     ));
-                                    let (s, m, v) = opt.state();
+                                    let progress = TrainProgress {
+                                        corpus: index.len() as u64,
+                                        world: world as u64,
+                                        batch: batch as u64,
+                                        window: cfg
+                                            .data
+                                            .shuffle_window
+                                            as u64,
+                                        ..TrainProgress::new(
+                                            (step + 1) as u64,
+                                            epoch,
+                                            (b.step + 1) as u64,
+                                        )
+                                    };
+                                    let (_, m, v) = opt.state();
                                     match (&bucket_plan, zero) {
                                         (Some(plan), true) => {
                                             super::checkpoint::save_sharded(
                                                 &path, &mut comm, plan,
-                                                s, &params, m, v,
+                                                progress, &params, m, v,
                                             )?
                                         }
                                         _ if rank == 0 => {
                                             super::checkpoint::save(
-                                                &path, s, &params, m,
-                                                v,
+                                                &path, progress,
+                                                &params, m, v,
                                             )?
                                         }
                                         _ => {}
@@ -300,6 +463,26 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                 }
                             }
                             step += 1;
+                        }
+                        // the stream ended: a finished epoch and a dead
+                        // loader look the same from next_batch — ask
+                        if let Some(e) = loader.take_error() {
+                            return Err(e.context(format!(
+                                "rank {rank} loader died in epoch \
+                                 {epoch}")));
+                        }
+                        // fold the tail interval (IO after the last
+                        // delta was taken) into the epoch's last
+                        // record, so epoch totals are exact; only the
+                        // prefetch discarded by an early run end
+                        // (break 'outer) goes unattributed
+                        if rank == 0 {
+                            if let Some(last) = records.last_mut() {
+                                let (io_bytes, _, _, _) =
+                                    loader.stats.io.snapshot();
+                                last.loader_bytes +=
+                                    io_bytes - last_bytes;
+                            }
                         }
                         epoch += 1;
                     }
@@ -331,7 +514,7 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
         world,
         batch_per_gpu: batch,
         records: outcomes.remove(0).records,
-        preprocess_secs: 0.0,
-        stage_secs: 0.0,
+        preprocess_secs: opts.preprocess_secs,
+        stage_secs: opts.stage_secs,
     })
 }

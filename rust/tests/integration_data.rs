@@ -1,0 +1,256 @@
+//! Integration: the streaming, memory-bounded data plane — no AOT
+//! artifacts needed.
+//!
+//! The tentpole property: the streaming loader (header-only
+//! `DatasetIndex`, byte-budgeted `BlockCache`, lazy windowed-shuffle
+//! cursor) must deliver batches BIT-IDENTICAL to the in-memory
+//! reference path (whole corpus resident, materialized order) — across
+//! worker counts, cache sizes (down to a single resident block), world
+//! sizes and shuffle windows, and from any mid-epoch resume point.
+//! Residency is a performance knob; it must never be a numerics knob.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use txgain::data::{
+    BlockCache, DatasetIndex, HostBatch, LoaderPool, Masker, Sample,
+    ShardWriter, WindowedPlan,
+};
+
+const SEQ: usize = 32;
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("txgain-it-data-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic multi-shard corpus with deliberately uneven shard
+/// sizes; returns (shard paths, all samples in global-id order).
+fn write_corpus(dir: &PathBuf, counts: &[usize])
+    -> (Vec<PathBuf>, Vec<Sample>) {
+    let mut paths = Vec::new();
+    let mut all = Vec::new();
+    let mut id = 0u16;
+    for (si, &n) in counts.iter().enumerate() {
+        let p = dir.join(format!("shard-{si:03}.bin"));
+        let mut w = ShardWriter::create(&p, SEQ).unwrap();
+        for _ in 0..n {
+            // distinct, id-tagged content so any index mix-up changes
+            // bits somewhere
+            let toks: Vec<u16> = (0..SEQ - 3)
+                .map(|j| 4 + ((id as usize * 31 + j * 7) % 400) as u16)
+                .collect();
+            let s = Sample::from_tokens(&toks, SEQ);
+            w.write(&s).unwrap();
+            all.push(s);
+            id = id.wrapping_add(1);
+        }
+        w.finish().unwrap();
+        paths.push(p);
+    }
+    (paths, all)
+}
+
+fn drain(pool: &mut LoaderPool) -> Vec<HostBatch> {
+    let mut out = Vec::new();
+    while let Some(b) = pool.next_batch() {
+        out.push(b);
+    }
+    assert!(pool.take_error().is_none(), "loader died");
+    out
+}
+
+fn assert_batches_eq(a: &[HostBatch], b: &[HostBatch], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: batch count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.step, y.step, "{ctx}");
+        assert_eq!(x.input_ids, y.input_ids, "{ctx} step {}", x.step);
+        assert_eq!(x.labels, y.labels, "{ctx} step {}", x.step);
+        let xm: Vec<u32> =
+            x.attn_mask.iter().map(|v| v.to_bits()).collect();
+        let ym: Vec<u32> =
+            y.attn_mask.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xm, ym, "{ctx} step {}", x.step);
+    }
+}
+
+#[test]
+fn streaming_matches_in_memory_reference_bit_for_bit() {
+    let dir = workdir("equiv");
+    let counts = [50usize, 37, 63]; // 150 samples, uneven shards
+    let (paths, samples) = write_corpus(&dir, &counts);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let dataset = Arc::new(samples);
+    let masker = Masker::new(0.15, 512);
+    let seed = 11u64;
+    let batch = 5usize;
+    let shard_counts = index.shard_counts();
+
+    for world in [1usize, 2, 3] {
+        for window in [1usize, 32, 1 << 20] {
+            let plan = Arc::new(
+                WindowedPlan::build(&shard_counts, world, 1, seed,
+                                    window)
+                    .unwrap());
+            for rank in 0..world {
+                // reference: resident Vec + materialized order
+                let order = plan.materialize_rank(rank);
+                let mut reference = LoaderPool::spawn(
+                    dataset.clone(), SEQ, &order, batch,
+                    masker.clone(), seed, 1, 2, 2, 0)
+                    .unwrap();
+                let want = drain(&mut reference);
+                // streaming: every (workers × cache) combination must
+                // reproduce it exactly, including a one-block cache
+                for workers in [1usize, 4] {
+                    for cache_mb in [0.003f64, 64.0] {
+                        let cache = Arc::new(BlockCache::new(
+                            index.clone(), cache_mb).unwrap());
+                        let mut pool = LoaderPool::spawn_streaming(
+                            cache, plan.clone(), rank, batch,
+                            masker.clone(), seed, workers, 2, 0, 0)
+                            .unwrap();
+                        let got = drain(&mut pool);
+                        assert_batches_eq(&want, &got, &format!(
+                            "world={world} rank={rank} window={window} \
+                             workers={workers} cache={cache_mb}"));
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn mid_epoch_resume_continues_the_stream_bit_for_bit() {
+    let dir = workdir("resume");
+    let (paths, _) = write_corpus(&dir, &[80, 45]);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let masker = Masker::new(0.15, 512);
+    let batch = 5usize;
+    let plan = Arc::new(
+        WindowedPlan::build(&index.shard_counts(), 2, 3, 7, 16)
+            .unwrap());
+    let cache = Arc::new(BlockCache::new(index.clone(), 64.0).unwrap());
+
+    for rank in 0..2 {
+        let mut full = LoaderPool::spawn_streaming(
+            cache.clone(), plan.clone(), rank, batch, masker.clone(),
+            7, 3, 2, 0, 0)
+            .unwrap();
+        let all = drain(&mut full);
+        for start in [1usize, all.len() / 2, all.len()] {
+            // a fresh cold cache on resume: restarting a node loses
+            // its cache, never its determinism
+            let cold = Arc::new(
+                BlockCache::new(index.clone(), 0.003).unwrap());
+            let mut resumed = LoaderPool::spawn_streaming(
+                cold, plan.clone(), rank, batch, masker.clone(), 7, 2,
+                2, 0, start)
+                .unwrap();
+            assert_eq!(resumed.total_steps(), all.len() - start);
+            let got = drain(&mut resumed);
+            assert_batches_eq(&all[start..], &got,
+                              &format!("rank={rank} start={start}"));
+        }
+    }
+    // resuming past the epoch end is a clean error, not a hang
+    assert!(LoaderPool::spawn_streaming(
+        cache.clone(), plan.clone(), 0, batch, masker, 7, 1, 2, 0,
+        9999)
+        .is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resident_memory_stays_within_the_cache_budget() {
+    // stream a corpus much larger than the budget through a full
+    // epoch: the cache must never hold more than budget bytes (or one
+    // block, whichever is larger) — this is the O(cache_mb) claim
+    let dir = workdir("budget");
+    let (paths, _) = write_corpus(&dir, &[300, 300, 300, 300]);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let corpus_bytes = index.total_bytes();
+    let budget_mb = 0.02f64; // ~21 KB vs ~79 KB of corpus
+    let cache =
+        Arc::new(BlockCache::new(index.clone(), budget_mb).unwrap());
+    let plan = Arc::new(
+        WindowedPlan::build(&index.shard_counts(), 1, 0, 9, 64)
+            .unwrap());
+    let mut pool = LoaderPool::spawn_streaming(
+        cache.clone(), plan, 0, 10, Masker::new(0.15, 512), 9, 3, 2, 0,
+        0)
+        .unwrap();
+    // blocks clamp to the shard tail: the largest real block is
+    // min(block_samples, shard) samples
+    let block_bytes = (cache.block_samples() as u64).min(300)
+        * Sample::disk_bytes(SEQ);
+    let ceiling =
+        ((budget_mb * 1024.0 * 1024.0) as u64).max(block_bytes)
+            + block_bytes; // one block of transient slack at insert
+    while pool.next_batch().is_some() {
+        assert!(cache.resident_bytes() <= ceiling,
+                "resident {} exceeds ceiling {ceiling}",
+                cache.resident_bytes());
+    }
+    assert!(pool.take_error().is_none());
+    assert!(cache.resident_bytes() < corpus_bytes / 2,
+            "cache ended up holding most of the corpus");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn shard_truncated_after_indexing_kills_the_loader_cleanly() {
+    // the index was built against a healthy file; the file then loses
+    // its tail (partial re-stage, disk fault). The loader must stop
+    // with an error — not hang, not fabricate data.
+    let dir = workdir("trunc");
+    let (paths, _) = write_corpus(&dir, &[120]);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let bytes = std::fs::read(&paths[0]).unwrap();
+    std::fs::write(&paths[0], &bytes[..bytes.len() / 2]).unwrap();
+    let cache = Arc::new(BlockCache::new(index.clone(), 1.0).unwrap());
+    let plan = Arc::new(
+        WindowedPlan::build(&index.shard_counts(), 1, 0, 5, 8)
+            .unwrap());
+    let mut pool = LoaderPool::spawn_streaming(
+        cache, plan, 0, 8, Masker::new(0.15, 512), 5, 2, 2, 0, 0)
+        .unwrap();
+    while pool.next_batch().is_some() {}
+    let err = pool.take_error().expect("loader must surface the fault");
+    assert!(format!("{err:#}").contains("shard"),
+            "unhelpful error: {err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn epochs_shuffle_differently_but_reproducibly() {
+    let dir = workdir("epochs");
+    let (paths, _) = write_corpus(&dir, &[64, 64]);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let cache = Arc::new(BlockCache::new(index.clone(), 64.0).unwrap());
+    let collect = |epoch: u64| -> Vec<i32> {
+        let plan = Arc::new(
+            WindowedPlan::build(&index.shard_counts(), 1, epoch, 5, 32)
+                .unwrap());
+        let mut pool = LoaderPool::spawn_streaming(
+            cache.clone(), plan, 0, 8, Masker::new(0.15, 512), 5, 3, 2,
+            0, 0)
+            .unwrap();
+        let mut all = Vec::new();
+        while let Some(b) = pool.next_batch() {
+            all.extend(b.input_ids);
+        }
+        all
+    };
+    let e0a = collect(0);
+    let e0b = collect(0);
+    let e1 = collect(1);
+    assert_eq!(e0a, e0b, "same epoch must reproduce exactly");
+    assert_ne!(e0a, e1, "different epochs must differ");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

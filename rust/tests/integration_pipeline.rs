@@ -21,6 +21,8 @@ fn cfg(samples: usize) -> DataConfig {
         loaders_per_gpu: 2,
         prefetch_batches: 2,
         samples_per_shard: 100,
+        cache_mb: 8.0,
+        shuffle_window: 64,
     }
 }
 
@@ -55,7 +57,7 @@ fn full_pipeline_roundtrip() {
 
     // two-rank epoch: loaders deliver the whole plan, masked correctly
     let ds = Arc::new(samples);
-    let plan = EpochPlan::build(ds.len(), 2, 0, 42);
+    let plan = EpochPlan::build(ds.len(), 2, 0, 42).unwrap();
     let masker = Masker::new(0.15, 350);
     let mut total_masked = 0usize;
     let mut total_real = 0usize;

@@ -261,8 +261,12 @@ fn sharded_checkpoint_resumes_across_world_sizes() {
                         params.unflatten_from(&flat);
                     }
                     let (s, m, v) = opt.state();
-                    checkpoint::save_sharded(&path, &mut comm, &plan, s,
-                                             &params, m, v)
+                    // a mid-epoch cursor rides along: step s of a
+                    // notional epoch 0
+                    let progress =
+                        checkpoint::TrainProgress::new(s, 0, s);
+                    checkpoint::save_sharded(&path, &mut comm, &plan,
+                                             progress, &params, m, v)
                         .unwrap();
                 });
             }
@@ -270,7 +274,8 @@ fn sharded_checkpoint_resumes_across_world_sizes() {
     }
 
     let ck = checkpoint::load(&path).unwrap();
-    assert_eq!(ck.step, steps_before as u64);
+    assert_eq!(ck.step(), steps_before as u64);
+    assert_eq!(ck.progress.epoch_step, steps_before as u64);
 
     // replicated continuation from the merged checkpoint = reference.
     // resume under a DIFFERENT world size (2 and 8): both sharded
@@ -280,7 +285,7 @@ fn sharded_checkpoint_resumes_across_world_sizes() {
     for resume_world in [2usize, 8] {
         let mut ref_params = ck.params.clone();
         let mut ref_opt = AdamW::new(&train_cfg(), n);
-        ref_opt.restore(ck.step, ck.m.clone(), ck.v.clone());
+        ref_opt.restore(ck.step(), ck.m.clone(), ck.v.clone());
         for s in 0..steps_after {
             let mut g = vec![0.0f32; n];
             for r in 0..resume_world {
@@ -306,7 +311,7 @@ fn sharded_checkpoint_resumes_across_world_sizes() {
                     let plan = plan.clone();
                     let (ck_params, ck_m, ck_v, ck_step) =
                         (ck.params.clone(), ck.m.clone(), ck.v.clone(),
-                         ck.step);
+                         ck.step());
                     scope.spawn(move || {
                         let ranges =
                             plan.rank_ranges(rank, resume_world);

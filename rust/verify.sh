@@ -29,8 +29,16 @@ for backend in channel shm tcp; do
     cargo test -q --test integration_transport "${backend}::"
 done
 
-# benches/examples are not built by `build`/`test`; type-check them so
-# they cannot silently rot out of the tier-1 gate
+# the streaming-data-plane conformance suite: streaming vs in-memory
+# bit-identity, mid-epoch resume, cache budget bounds (also part of
+# `cargo test -q`; the explicit re-run names the data plane when it
+# breaks, mirroring the transport gate above)
+echo "verify.sh: data-plane conformance"
+cargo test -q --test integration_data
+
+# benches/examples (including rec3_stream / stream_tuning) are not
+# built by `build`/`test`; type-check them so they cannot silently rot
+# out of the tier-1 gate
 cargo check --release --benches --examples
 
 if [[ "${1:-}" != "--no-lint" ]]; then
