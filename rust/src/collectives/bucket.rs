@@ -53,6 +53,24 @@ impl BucketPlan {
         Self::from_elems(len, Self::elems_for(len, bucket_mb))
     }
 
+    /// Partition with a size-aware first bucket: the tail (first-ready)
+    /// bucket is ~`first_bucket_mb` MB, everything else `bucket_mb` —
+    /// the `training.first_bucket_mb` knob. A non-positive or
+    /// non-finite `first_bucket_mb` means "same as `bucket_mb`"
+    /// (uniform plan, exactly [`BucketPlan::new`]).
+    pub fn new_with_first(len: usize, bucket_mb: f64,
+                          first_bucket_mb: f64) -> BucketPlan {
+        let elems = Self::elems_for(len, bucket_mb);
+        let first = if first_bucket_mb.is_finite()
+            && first_bucket_mb > 0.0
+        {
+            Self::elems_for(len, first_bucket_mb)
+        } else {
+            elems
+        };
+        Self::from_elems_with_first(len, elems, first)
+    }
+
     /// f32 elements per bucket for a `bucket_mb` knob — the single
     /// place this arithmetic lives, so the simulator's pricing and the
     /// real plan can never disagree on the partition (float truncation
@@ -72,19 +90,79 @@ impl BucketPlan {
     /// in reverse parameter order, and keeps the always-exposed final
     /// bucket the small one (the cost model prices the same schedule).
     pub fn from_elems(len: usize, bucket_elems: usize) -> BucketPlan {
+        Self::from_elems_with_first(len, bucket_elems, bucket_elems)
+    }
+
+    /// Like [`BucketPlan::from_elems`], but the *tail* bucket — the
+    /// first one backward makes ready and therefore the first sync to
+    /// launch — holds `first_elems` elements instead of `bucket_elems`
+    /// (PyTorch DDP's smaller first bucket). A small first bucket
+    /// starts the comm pipeline as early as possible; the rest of the
+    /// vector is partitioned exactly as before, leftover at the head.
+    /// `first_elems == bucket_elems` reproduces the uniform plan.
+    pub fn from_elems_with_first(len: usize, bucket_elems: usize,
+                                 first_elems: usize) -> BucketPlan {
         let bucket_elems = bucket_elems.max(1);
+        let first = first_elems.max(1).min(len.max(1));
         let mut spans = Vec::new();
-        let rem = len % bucket_elems;
+        // head region: everything before the first-launched tail bucket
+        let head_len = len.saturating_sub(first);
+        let rem = head_len % bucket_elems;
         let mut start = 0usize;
         if rem > 0 {
             spans.push((0, rem));
             start = rem;
         }
-        while start < len {
+        while start < head_len {
             spans.push((start, start + bucket_elems));
             start += bucket_elems;
         }
+        if len > 0 {
+            spans.push((head_len, len));
+        }
         BucketPlan { len, bucket_elems, spans }
+    }
+
+    /// Bucket sizes (elements) in launch (ready) order — tail bucket
+    /// first — computed without materializing spans and capped at
+    /// `cap` entries (the final entry absorbs the rest, mirroring the
+    /// cost model's `MAX_MODELED_BUCKETS` clamp). Uncapped this equals
+    /// [`BucketPlan::from_elems_with_first`]'s spans read in ready
+    /// order (asserted in tests), so the simulator prices exactly the
+    /// partition real mode runs — the measured-vs-modeled cross-check.
+    pub fn ready_sizes(len: usize, bucket_elems: usize,
+                       first_elems: usize, cap: usize) -> Vec<usize> {
+        let bucket_elems = bucket_elems.max(1);
+        let cap = cap.max(1);
+        if len == 0 {
+            return Vec::new();
+        }
+        let first = first_elems.max(1).min(len);
+        let head_len = len - first;
+        let full = head_len / bucket_elems;
+        let rem = head_len % bucket_elems;
+        let mut out = Vec::new();
+        out.push(first);
+        if 1 + full + usize::from(rem > 0) <= cap {
+            out.extend(std::iter::repeat(bucket_elems).take(full));
+            if rem > 0 {
+                out.push(rem);
+            }
+        } else if cap == 1 {
+            // everything in one modeled bucket
+            out[0] = len;
+        } else {
+            // over the cap: keep cap−2 regular buckets after the
+            // first; the last entry absorbs everything left
+            let keep = cap - 1;
+            let mut remaining = head_len;
+            for _ in 1..keep {
+                out.push(bucket_elems);
+                remaining -= bucket_elems;
+            }
+            out.push(remaining);
+        }
+        out
     }
 
     /// Total gradient elements covered by the plan.
@@ -147,12 +225,15 @@ impl BucketPlan {
 }
 
 /// Tracks bucket readiness as backward compute retires layers, and
-/// hands out ready buckets in launch order. `bucketed_allreduce`
-/// launches synchronously and does not need this bookkeeping; the
-/// manager is the protocol for a transport that can genuinely overlap
-/// (ROADMAP: an async [`Transport`] backend) — mark buckets ready
-/// tail-first as backward progresses, drain the queue between slices
-/// of remaining backward work.
+/// hands out ready buckets in launch order. Neither the synchronous
+/// `bucketed_allreduce` nor the comm engine's all-ready-at-once
+/// launch loop needs this bookkeeping (with a monolithic executable
+/// every bucket is ready the moment backward returns, so
+/// [`BucketPlan::ready_order`] IS the launch order); the manager is
+/// the protocol for a *fused* backward that retires layers
+/// incrementally — mark buckets ready tail-first as layers land,
+/// drain the queue into `CommEngine::launch_bucket` between slices of
+/// remaining backward work.
 #[derive(Debug)]
 pub struct BucketManager {
     plan: BucketPlan,
@@ -350,6 +431,124 @@ mod tests {
         let p = BucketPlan::from_elems(200, 25);
         assert_eq!(p.n_buckets(), 8);
         assert_eq!(p.span(0), (0, 25));
+    }
+
+    #[test]
+    fn first_bucket_plan_keeps_coverage_invariants() {
+        // the size-aware plan must tile [0, len) with non-empty spans
+        // and put the (small) first bucket at the tail — first in
+        // ready order
+        for (len, elems, first) in [(100usize, 25usize, 5usize),
+                                    (100, 25, 100), (100, 25, 1),
+                                    (7, 25, 3), (23, 7, 2), (5, 2, 5)] {
+            let p = BucketPlan::from_elems_with_first(len, elems, first);
+            let mut prev_end = 0usize;
+            for i in 0..p.n_buckets() {
+                let (a, b) = p.span(i);
+                assert_eq!(a, prev_end,
+                           "gap before bucket {i} \
+                            (len={len} elems={elems} first={first})");
+                assert!(b > a, "empty bucket {i}");
+                prev_end = b;
+            }
+            assert_eq!(prev_end, len);
+            // the first-ready (tail) bucket has the requested size
+            let tail = p.ready_order().next().unwrap();
+            let (a, b) = p.span(tail);
+            assert_eq!(b - a, first.min(len), "tail bucket size");
+        }
+        // disabled first bucket reproduces the uniform plan exactly
+        assert_eq!(BucketPlan::from_elems_with_first(218, 25, 25),
+                   BucketPlan::from_elems(218, 25));
+        assert_eq!(BucketPlan::new_with_first(218 * 250_000, 25.0, 0.0),
+                   BucketPlan::new(218 * 250_000, 25.0));
+        assert_eq!(
+            BucketPlan::new_with_first(218 * 250_000, 25.0, f64::NAN),
+            BucketPlan::new(218 * 250_000, 25.0));
+    }
+
+    #[test]
+    fn first_bucket_shards_still_partition() {
+        // ZeRO-1 ownership must survive an uneven first bucket
+        let p = BucketPlan::from_elems_with_first(103, 29, 7);
+        let world = 4;
+        let mut covered = vec![false; 103];
+        for r in 0..world {
+            for &(a, b) in &p.rank_ranges(r, world) {
+                for c in &mut covered[a..b] {
+                    assert!(!*c, "double ownership");
+                    *c = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn ready_sizes_match_the_materialized_plan() {
+        for (len, elems, first) in [(100usize, 25usize, 5usize),
+                                    (100, 25, 25), (7, 25, 3),
+                                    (23, 7, 2), (0, 4, 4), (10, 3, 10)] {
+            let plan = BucketPlan::from_elems_with_first(len, elems,
+                                                         first);
+            let from_plan: Vec<usize> = plan
+                .ready_order()
+                .map(|i| {
+                    let (a, b) = plan.span(i);
+                    b - a
+                })
+                .collect();
+            assert_eq!(
+                BucketPlan::ready_sizes(len, elems, first, usize::MAX),
+                from_plan,
+                "len={len} elems={elems} first={first}");
+        }
+        // capping: the list shrinks to cap entries, still covering len
+        let capped = BucketPlan::ready_sizes(100, 10, 5, 4);
+        assert_eq!(capped.len(), 4);
+        assert_eq!(capped.iter().sum::<usize>(), 100);
+        assert_eq!(capped[0], 5);
+        let one = BucketPlan::ready_sizes(100, 10, 5, 1);
+        assert_eq!(one, vec![100]);
+    }
+
+    #[test]
+    fn first_bucket_allreduce_stays_bit_identical() {
+        // the acceptance property extended to uneven first buckets
+        let world = 4usize;
+        let len = 113usize;
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|r| {
+                (0..len).map(|i| ((r * 17 + i * 5) % 41) as f32 - 20.0)
+                    .collect()
+            })
+            .collect();
+        let plan = BucketPlan::from_elems_with_first(len, 31, 6);
+        let bucketed: Vec<Vec<f32>> = std::thread::scope(|s| {
+            World::new(world)
+                .into_comms()
+                .into_iter()
+                .zip(inputs.clone())
+                .map(|(mut c, mut buf)| {
+                    let plan = plan.clone();
+                    s.spawn(move || {
+                        bucketed_allreduce(Algorithm::Ring, &mut c,
+                                           &mut buf, &plan)
+                            .unwrap();
+                        buf
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let mono = run_monolithic(Algorithm::Ring, &inputs);
+        for (rb, rm) in bucketed.iter().zip(&mono) {
+            for (a, b) in rb.iter().zip(rm) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -189,10 +189,33 @@ impl CostModel {
                               |b| self.reduce_scatter(algo, nodes, b))
     }
 
-    /// Shared bucket-pipeline schedule: bucket `i` of `n` becomes
-    /// ready at `backward_secs·(i+1)/n`, the serial channel services
-    /// ready buckets FIFO, and whatever runs past the end of backward
-    /// is exposed.
+    /// Price a bucketed all-reduce with *explicit* per-bucket byte
+    /// sizes in launch (ready) order — derived from the real
+    /// `BucketPlan` (including `first_bucket_mb`'s smaller first
+    /// bucket via `BucketPlan::ready_sizes`), so the priced schedule
+    /// is exactly the partition real mode runs.
+    pub fn overlapped_allreduce_sized(&self, algo: Algorithm,
+                                      nodes: usize, sizes: &[f64],
+                                      backward_secs: f64)
+        -> OverlapCost {
+        self.overlap_pipeline_sized(sizes, backward_secs,
+                                    |b| self.allreduce(algo, nodes, b))
+    }
+
+    /// [`CostModel::overlapped_reduce_scatter`] with explicit bucket
+    /// sizes — the ZeRO-1 gradient half under a size-aware plan.
+    pub fn overlapped_reduce_scatter_sized(&self, algo: Algorithm,
+                                           nodes: usize, sizes: &[f64],
+                                           backward_secs: f64)
+        -> OverlapCost {
+        self.overlap_pipeline_sized(
+            sizes, backward_secs,
+            |b| self.reduce_scatter(algo, nodes, b))
+    }
+
+    /// Shared bucket-pipeline schedule over uniform buckets: slice
+    /// `bytes` into `bucket_bytes` chunks (remainder last) and price
+    /// via [`CostModel::overlap_pipeline_sized`].
     fn overlap_pipeline(&self, bytes: f64, bucket_bytes: f64,
                         backward_secs: f64,
                         bucket_cost: impl Fn(f64) -> f64)
@@ -203,8 +226,7 @@ impl CostModel {
         } else {
             1
         };
-        let mut total = 0.0;
-        let mut end = 0.0f64;
+        let mut sizes = Vec::with_capacity(n);
         let mut remaining = bytes;
         for i in 0..n {
             let b = if i + 1 == n {
@@ -213,9 +235,47 @@ impl CostModel {
                 bucket_bytes.min(remaining)
             };
             remaining -= b;
+            sizes.push(b);
+        }
+        self.overlap_pipeline_sized(&sizes, backward_secs, bucket_cost)
+    }
+
+    /// The pipeline schedule itself: backward retires parameters at a
+    /// uniform rate, so bucket `i` becomes ready once its *bytes* have
+    /// been produced — at `backward_secs · cumulative_i / total` (for
+    /// equal sizes this is the classic `(i+1)/n`). The serial channel
+    /// services ready buckets FIFO, and whatever runs past the end of
+    /// backward is exposed. Byte-proportional readiness is what makes
+    /// a small `first_bucket_mb` bucket genuinely *early*: it is ready
+    /// after only its own few MB of backward, not after `1/n` of it.
+    ///
+    /// ```text
+    /// ready_i = backward · Σ_{j≤i} size_j / Σ size
+    /// start_i = max(ready_i, end_{i-1});  end_i = start_i + t(size_i)
+    /// exposed = max(0, end_{n-1} − backward_secs)
+    /// ```
+    fn overlap_pipeline_sized(&self, sizes: &[f64], backward_secs: f64,
+                              bucket_cost: impl Fn(f64) -> f64)
+        -> OverlapCost {
+        let n = sizes.len();
+        if n == 0 {
+            return OverlapCost {
+                comm_total: 0.0, exposed: 0.0, n_buckets: 0,
+            };
+        }
+        let total_bytes: f64 = sizes.iter().sum();
+        let mut total = 0.0;
+        let mut end = 0.0f64;
+        let mut produced = 0.0f64;
+        for (i, &b) in sizes.iter().enumerate() {
             let t = bucket_cost(b);
             total += t;
-            let ready = backward_secs * (i + 1) as f64 / n as f64;
+            produced += b;
+            let ready = if total_bytes > 0.0 {
+                backward_secs * produced / total_bytes
+            } else {
+                backward_secs * (i + 1) as f64 / n as f64
+            };
             end = ready.max(end) + t;
         }
         OverlapCost {
@@ -484,6 +544,60 @@ mod tests {
         assert_eq!(rs.n_buckets, ar.n_buckets);
         assert!(rs.comm_total < ar.comm_total);
         assert!(rs.exposed <= ar.exposed);
+    }
+
+    #[test]
+    fn sized_pipeline_agrees_with_uniform_pipeline() {
+        // the sized API priced over the uniform decomposition must
+        // reproduce the uniform API exactly — one schedule, two entry
+        // points
+        let m = model();
+        let bytes = 218e6;
+        let bucket = 25e6;
+        let uniform = m.overlapped_allreduce(Algorithm::Ring, 32, bytes,
+                                             bucket, 0.25);
+        let mut sizes = Vec::new();
+        let mut rem = bytes;
+        while rem > bucket {
+            sizes.push(bucket);
+            rem -= bucket;
+        }
+        sizes.push(rem);
+        let sized = m.overlapped_allreduce_sized(Algorithm::Ring, 32,
+                                                 &sizes, 0.25);
+        assert_eq!(sized.n_buckets, uniform.n_buckets);
+        assert!((sized.comm_total - uniform.comm_total).abs() < 1e-12);
+        assert!((sized.exposed - uniform.exposed).abs() < 1e-12);
+        // empty size list prices to nothing
+        let none = m.overlapped_allreduce_sized(Algorithm::Ring, 32, &[],
+                                                0.25);
+        assert_eq!(none.n_buckets, 0);
+        assert_eq!(none.comm_total, 0.0);
+    }
+
+    #[test]
+    fn small_first_bucket_pays_alpha_at_scale() {
+        // the first_bucket_mb tradeoff the ROADMAP guidance documents:
+        // an extra (small) bucket adds a per-message α, so at high
+        // node counts with no backward left to hide under, the sized
+        // plan costs at least as much channel time as the uniform one
+        let m = model();
+        let sizes_of = |first: f64| -> Vec<f64> {
+            crate::collectives::BucketPlan::ready_sizes(
+                109_000_000, 12_500_000,
+                (first / 2.0) as usize, // bf16 bytes → elems
+                MAX_MODELED_BUCKETS)
+                .into_iter()
+                .map(|e| e as f64 * 2.0)
+                .collect()
+        };
+        let uniform = m.overlapped_allreduce_sized(
+            Algorithm::Ring, 128, &sizes_of(25e6), 0.0);
+        let small_first = m.overlapped_allreduce_sized(
+            Algorithm::Ring, 128, &sizes_of(2e6), 0.0);
+        assert!(small_first.n_buckets >= uniform.n_buckets);
+        assert!(small_first.comm_total >= uniform.comm_total * 0.999,
+                "{} vs {}", small_first.comm_total, uniform.comm_total);
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //! [`bucket`] partitions the flat gradient into fixed-size buckets so
 //! each bucket's all-reduce can launch as soon as backward produces it
 //! (DDP-style compute/comm overlap, rec. 4); [`cost`] prices the same
-//! overlap for the simulator.
+//! overlap for the simulator. [`engine`] makes the overlap *real*: a
+//! per-rank progress thread drives in-flight bucket collectives
+//! through the transports' nonblocking face while the trainer
+//! computes, so the measured step finally shows the pipelining the
+//! cost model prices (`training.comm_engine`).
 //!
 //! The primitives [`reduce_scatter`] / [`all_gather`] (and their
 //! bucketed drivers) split the all-reduce into its two halves so
@@ -27,6 +31,7 @@
 
 pub mod bucket;
 pub mod cost;
+pub mod engine;
 pub mod ring;
 pub mod transport;
 pub mod tree;
@@ -34,6 +39,7 @@ pub mod tree;
 pub use bucket::{bucketed_all_gather, bucketed_allreduce,
                  bucketed_reduce_scatter, BucketManager, BucketPlan};
 pub use cost::{CostModel, OverlapCost, RankMemory};
+pub use engine::{CollectiveKind, CommEngine, PendingBucket};
 pub use transport::{AnyTransport, Backend, ChannelTransport,
                     ShmTransport, TcpTransport, Transport,
                     TransportStats, World};

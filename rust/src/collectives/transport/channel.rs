@@ -28,7 +28,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context};
 
-use super::{Transport, TransportStats, POOL_CAP};
+use super::{BufferPool, Transport, TransportStats};
 use crate::Result;
 
 type Msg = (usize, u32, Vec<f32>); // (from, tag, payload)
@@ -71,7 +71,7 @@ pub struct ChannelTransport {
     parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
     /// Spent buffers handed back via `recycle`, reused by `send_slice`
     /// so a ring step allocates O(1) instead of one `Vec` per hop.
-    pool: Vec<Vec<f32>>,
+    pool: BufferPool,
     /// `send_windows[dst]`: my in-flight window toward `dst`.
     send_windows: Vec<Arc<Window>>,
     /// `recv_windows[src]`: the `src → me` window, credited back as I
@@ -111,7 +111,7 @@ impl World {
                 txs: txs.clone(),
                 rx,
                 parked: HashMap::new(),
-                pool: Vec::new(),
+                pool: BufferPool::new(),
                 send_windows: windows[rank].clone(),
                 recv_windows: (0..world)
                     .map(|src| windows[src][rank].clone())
@@ -157,6 +157,60 @@ impl ChannelTransport {
         *n = n.saturating_sub(1);
         w.drained.notify_one();
     }
+
+    /// Grab a window slot toward `to` without blocking: `Ok(false)`
+    /// when the window is full, error when the peer is dead.
+    fn try_acquire_window(&self, to: usize) -> Result<bool> {
+        if !self.alive[to].load(Ordering::Acquire) {
+            bail!("rank {} send to dead rank {to}", self.rank);
+        }
+        let w = &self.send_windows[to];
+        let mut inflight = w.inflight.lock().unwrap();
+        if *inflight >= SEND_WINDOW {
+            return Ok(false);
+        }
+        *inflight += 1;
+        Ok(true)
+    }
+
+    /// Copy `data` into a pooled buffer and post it to `to`'s mailbox
+    /// (window slot already held).
+    fn post(&mut self, to: usize, tag: u32, data: &[f32]) -> Result<()> {
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(data);
+        self.stats.record_send(data.len());
+        self.txs[to]
+            .send((self.rank, tag, buf))
+            .ok()
+            .with_context(|| format!("rank {} send to dead rank {to}",
+                                     self.rank))
+    }
+
+    /// Drain every pending mailbox message, parking mismatches, until a
+    /// `(from, tag)` match pops out or the mailbox runs empty
+    /// (`Ok(None)`). Draining releases the senders' windows either way.
+    fn drain_mailbox(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>> {
+        loop {
+            match self.rx.try_recv() {
+                Ok((f, t, data)) => {
+                    self.release_window(f);
+                    self.stats.record_recv(data.len());
+                    if f == from && t == tag {
+                        return Ok(Some(data));
+                    }
+                    self.parked.entry((f, t)).or_default().push_back(data);
+                    // not the one we want; the mailbox may hold more
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    return Ok(None)
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    bail!("rank {} mailbox closed", self.rank)
+                }
+            }
+        }
+    }
 }
 
 impl Transport for ChannelTransport {
@@ -177,15 +231,7 @@ impl Transport for ChannelTransport {
             bail!("rank {} send to dead rank {to}", self.rank);
         }
         self.acquire_window(to)?;
-        let mut buf = self.pool.pop().unwrap_or_default();
-        buf.clear();
-        buf.extend_from_slice(data);
-        self.stats.record_send(data.len());
-        self.txs[to]
-            .send((self.rank, tag, buf))
-            .ok()
-            .with_context(|| format!("rank {} send to dead rank {to}",
-                                     self.rank))
+        self.post(to, tag, data)
     }
 
     fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
@@ -243,10 +289,47 @@ impl Transport for ChannelTransport {
         }
     }
 
-    fn recycle(&mut self, buf: Vec<f32>) {
-        if self.pool.len() < POOL_CAP {
-            self.pool.push(buf);
+    fn try_send(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool> {
+        ensure!(to < self.world,
+                "rank {} send to rank {to} outside world {}",
+                self.rank, self.world);
+        if !self.try_acquire_window(to)? {
+            return Ok(false);
         }
+        self.post(to, tag, data)?;
+        Ok(true)
+    }
+
+    fn try_recv(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>> {
+        ensure!(from < self.world,
+                "rank {} recv from rank {from} outside world {}",
+                self.rank, self.world);
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(v) = q.pop_front() {
+                return Ok(Some(v));
+            }
+        }
+        if let Some(v) = self.drain_mailbox(from, tag)? {
+            return Ok(Some(v));
+        }
+        // nothing matching yet: if the peer is gone, nothing matching
+        // can ever arrive — but its final sends happen-before the flag
+        // drop, so after this Acquire load everything it sent is
+        // visible; drain once more before reporting it dead.
+        if !self.alive[from].load(Ordering::Acquire) {
+            if let Some(v) = self.drain_mailbox(from, tag)? {
+                return Ok(Some(v));
+            }
+            bail!("rank {}: recv from dead rank {from} (tag {tag})",
+                  self.rank);
+        }
+        Ok(None)
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        self.pool.put(buf);
     }
 
     fn stats(&self) -> TransportStats {
@@ -336,12 +419,51 @@ mod tests {
 
     #[test]
     fn recycle_pool_is_bounded() {
+        use crate::collectives::transport::{POOL_CAP, POOL_MAX_BYTES};
         let mut comms = World::new(1).into_comms();
         let mut c = comms.pop().unwrap();
         for _ in 0..100 {
             c.recycle(vec![0.0; 4]);
         }
         assert!(c.pool.len() <= POOL_CAP);
+        // byte cap: recycling mismatched huge buffers must not hoard
+        // memory (the pre-PR-5 unbounded-retention bug)
+        c.recycle(Vec::with_capacity(POOL_MAX_BYTES));
+        assert!(c.pool.retained_bytes() <= POOL_MAX_BYTES);
+    }
+
+    #[test]
+    fn nonblocking_send_and_recv_roundtrip() {
+        let mut comms = World::new(2).into_comms();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        // nothing there yet
+        assert!(c1.try_recv(0, 7).unwrap().is_none());
+        assert!(c0.try_send(1, 7, &[1.5, -2.0]).unwrap());
+        assert_eq!(c1.try_recv(0, 7).unwrap(), Some(vec![1.5, -2.0]));
+        // a full window reports backpressure instead of blocking
+        for i in 0..SEND_WINDOW {
+            assert!(c0.try_send(1, i as u32, &[0.0]).unwrap());
+        }
+        assert!(!c0.try_send(1, 99, &[0.0]).unwrap(),
+                "try_send past the window did not report full");
+        // draining one frees a slot again
+        assert_eq!(c1.recv(0, 0).unwrap(), vec![0.0]);
+        assert!(c0.try_send(1, 99, &[9.0]).unwrap());
+    }
+
+    #[test]
+    fn try_recv_from_dead_peer_errors_after_draining() {
+        let mut comms = World::new(2).into_comms();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.send_slice(1, 3, &[7.0]).unwrap();
+        drop(c0);
+        // the in-flight message is still deliverable nonblockingly ...
+        assert_eq!(c1.try_recv(0, 3).unwrap(), Some(vec![7.0]));
+        // ... and only then does the dead peer surface
+        let err = c1.try_recv(0, 3).unwrap_err().to_string();
+        assert!(err.contains("dead rank 0"), "unexpected: {err}");
     }
 
     #[test]

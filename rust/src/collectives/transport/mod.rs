@@ -3,8 +3,12 @@
 //! Every collective ([`crate::collectives::ring`], [`tree`], the
 //! bucketed drivers, the ZeRO-1 reduce-scatter/all-gather path and the
 //! sharded checkpoint gather) is generic over the [`Transport`] trait —
-//! a blocking, selective-receive message channel addressed by
-//! `(peer, tag)` with buffer recycling and byte accounting. Three
+//! a selective-receive message channel addressed by `(peer, tag)` with
+//! buffer recycling and byte accounting. The trait carries both a
+//! *blocking* face (`send_slice`/`recv` — what the synchronous
+//! collectives drive) and a *nonblocking* face (`try_send`/`try_recv`
+//! — what the [`crate::collectives::engine::CommEngine`] progress loop
+//! polls to genuinely overlap communication with compute). Three
 //! backends implement it, selected by the `training.transport` config
 //! knob (see [`Backend`]):
 //!
@@ -56,6 +60,88 @@ use crate::Result;
 /// in-flight window of a ring step without hoarding a whole gradient's
 /// worth of spent buffers.
 pub(crate) const POOL_CAP: usize = 8;
+
+/// Cap on the total *capacity* bytes a recycle pool may retain. The
+/// count cap alone is not enough: under mismatched send/recv sizes a
+/// pool of 8 buffers can each grow to the largest message ever moved
+/// (a whole gradient bucket), quietly pinning hundreds of MB per rank.
+/// Buffers whose capacity would push the pool past this are dropped
+/// instead of retained.
+pub(crate) const POOL_MAX_BYTES: usize = 64 << 20;
+
+/// Count- and byte-capped recycle pool shared by every backend (and,
+/// with larger caps, the comm engine's host-side bucket buffers):
+/// O(1) steady-state allocation without unbounded retention.
+#[derive(Debug)]
+pub(crate) struct BufferPool {
+    bufs: Vec<Vec<f32>>,
+    /// Total capacity bytes currently retained.
+    bytes: usize,
+    max_bufs: usize,
+    max_bytes: usize,
+}
+
+impl BufferPool {
+    /// The per-transport pool: sized for a ring step's in-flight
+    /// window ([`POOL_CAP`]/[`POOL_MAX_BYTES`]).
+    pub(crate) fn new() -> BufferPool {
+        Self::with_caps(POOL_CAP, POOL_MAX_BYTES)
+    }
+
+    /// A pool with explicit caps — the comm engine holds a whole
+    /// step's bucket working set (≈ 2 buffers per bucket under
+    /// ZeRO-1), which outgrows the per-transport window caps.
+    pub(crate) fn with_caps(max_bufs: usize, max_bytes: usize)
+        -> BufferPool {
+        BufferPool { bufs: Vec::new(), bytes: 0, max_bufs, max_bytes }
+    }
+
+    /// A cleared buffer from the pool, or a fresh empty one.
+    pub(crate) fn take(&mut self) -> Vec<f32> {
+        match self.bufs.pop() {
+            Some(mut b) => {
+                self.bytes -= b.capacity() * 4;
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Hand a spent buffer back; dropped (not retained) past either cap.
+    pub(crate) fn put(&mut self, buf: Vec<f32>) {
+        let cap_bytes = buf.capacity() * 4;
+        if self.bufs.len() >= self.max_bufs
+            || self.bytes + cap_bytes > self.max_bytes
+        {
+            return;
+        }
+        self.bytes += cap_bytes;
+        self.bufs.push(buf);
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub(crate) fn retained_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// Shared spin-then-yield wait used by the shm rings and the comm
+/// engine's progress loop: a few busy spins for cache-line-latency
+/// waits, then yield so a stalled wait does not burn a core.
+pub(crate) const SPINS_BEFORE_YIELD: u32 = 64;
+
+pub(crate) fn spin_backoff(spins: &mut u32) {
+    if *spins < SPINS_BEFORE_YIELD {
+        *spins += 1;
+        std::hint::spin_loop();
+    } else {
+        std::thread::yield_now();
+    }
+}
 
 /// Bytes per f32 element in the host-side buffer handed to `send`.
 pub const BUFFER_BYTES_PER_ELEM: u64 = 4;
@@ -137,6 +223,24 @@ pub trait Transport {
     /// parked until asked for. Errors if `from` is dead and no matching
     /// message can ever arrive.
     fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>>;
+
+    /// Nonblocking send: like [`Transport::send_slice`] but instead of
+    /// blocking on a full in-flight window it returns `Ok(false)` and
+    /// sends nothing (the caller retries later — the comm engine's
+    /// progress loop). `Ok(true)` means the whole message was accepted.
+    /// Errors on a dead peer like the blocking path.
+    fn try_send(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool>;
+
+    /// Nonblocking selective receive: the next `(from, tag)` message if
+    /// one has already arrived (draining and parking other arrivals on
+    /// the way, exactly like the blocking path), `Ok(None)` when
+    /// nothing matching is available yet. Errors once `from` is dead
+    /// and no matching message can ever arrive — an in-flight
+    /// collective polled through this surfaces a dead peer instead of
+    /// spinning forever.
+    fn try_recv(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>>;
 
     /// Hand a spent receive buffer back for reuse by `send_slice` (or
     /// the receive path), so steady-state collectives allocate O(1).
@@ -269,6 +373,24 @@ impl Transport for AnyTransport {
         }
     }
 
+    fn try_send(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool> {
+        match self {
+            AnyTransport::Channel(t) => t.try_send(to, tag, data),
+            AnyTransport::Shm(t) => t.try_send(to, tag, data),
+            AnyTransport::Tcp(t) => t.try_send(to, tag, data),
+        }
+    }
+
+    fn try_recv(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>> {
+        match self {
+            AnyTransport::Channel(t) => t.try_recv(from, tag),
+            AnyTransport::Shm(t) => t.try_recv(from, tag),
+            AnyTransport::Tcp(t) => t.try_recv(from, tag),
+        }
+    }
+
     fn recycle(&mut self, buf: Vec<f32>) {
         match self {
             AnyTransport::Channel(t) => t.recycle(buf),
@@ -333,6 +455,48 @@ mod tests {
         assert_eq!(d.buffer_bytes_sent, 40);
         assert_eq!(d.wire_bytes_sent, 20);
         assert_eq!(d.msgs_recv, 0);
+    }
+
+    #[test]
+    fn buffer_pool_caps_count_and_bytes() {
+        let mut p = BufferPool::new();
+        for _ in 0..100 {
+            p.put(Vec::with_capacity(16));
+        }
+        assert!(p.len() <= POOL_CAP);
+        let small = p.retained_bytes();
+        assert_eq!(small, p.len() * 16 * 4);
+
+        // a buffer whose capacity would blow the byte cap is dropped,
+        // not retained — the mismatched-size hoarding fix
+        let mut p = BufferPool::new();
+        p.put(Vec::with_capacity(POOL_MAX_BYTES / 4 + 1));
+        assert_eq!(p.len(), 0, "oversized buffer retained");
+        // two buffers that jointly exceed the cap: only the first stays
+        p.put(Vec::with_capacity(POOL_MAX_BYTES / 4 - 8));
+        p.put(Vec::with_capacity(64));
+        assert_eq!(p.len(), 1);
+        // taking returns capacity to the budget
+        let b = p.take();
+        assert!(b.capacity() >= POOL_MAX_BYTES / 4 - 8);
+        assert_eq!(p.retained_bytes(), 0);
+        p.put(Vec::with_capacity(64));
+        assert_eq!(p.len(), 1);
+
+        // explicit caps (the comm engine's larger pool) are honored:
+        // count cap ...
+        let mut p = BufferPool::with_caps(2, 1 << 20);
+        for _ in 0..5 {
+            p.put(Vec::with_capacity(16));
+        }
+        assert_eq!(p.len(), 2);
+        // ... and byte cap, independently (capacity 2^18 f32s = 1 MiB
+        // of bytes would exactly exhaust the budget already dented by
+        // the small buffers)
+        let mut p = BufferPool::with_caps(8, 1 << 20);
+        p.put(Vec::with_capacity(16));
+        p.put(Vec::with_capacity(1 << 18));
+        assert_eq!(p.len(), 1, "byte cap ignored");
     }
 
     #[test]

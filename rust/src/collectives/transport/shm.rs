@@ -24,24 +24,12 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure};
 
-use super::{Transport, TransportStats, POOL_CAP};
+use super::{spin_backoff, BufferPool, Transport, TransportStats};
 use crate::Result;
 
 /// In-flight messages per (src, dst) ring — the shm backpressure
 /// window, matching the channel backend's `SEND_WINDOW`.
 pub const RING_SLOTS: usize = 8;
-
-/// Spins before falling back to `yield_now` while waiting on a ring.
-const SPINS_BEFORE_YIELD: u32 = 64;
-
-fn backoff(spins: &mut u32) {
-    if *spins < SPINS_BEFORE_YIELD {
-        *spins += 1;
-        std::hint::spin_loop();
-    } else {
-        std::thread::yield_now();
-    }
-}
 
 /// One SPSC slot ring. `head`/`tail` are free-running counters; slots
 /// are indexed mod [`RING_SLOTS`].
@@ -75,7 +63,7 @@ pub struct ShmTransport {
     shared: Arc<Shared>,
     /// Out-of-order arrivals parked until someone asks for them.
     parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
-    pool: Vec<Vec<f32>>,
+    pool: BufferPool,
     stats: TransportStats,
 }
 
@@ -94,7 +82,7 @@ impl ShmTransport {
                 world,
                 shared: shared.clone(),
                 parked: HashMap::new(),
-                pool: Vec::new(),
+                pool: BufferPool::new(),
                 stats: TransportStats::default(),
             })
             .collect()
@@ -102,6 +90,60 @@ impl ShmTransport {
 
     fn ring(&self, src: usize, dst: usize) -> &Ring {
         &self.shared.rings[src * self.shared.world + dst]
+    }
+
+    /// Publish `data` into the `self → to` ring if a slot is free.
+    /// `Ok(false)` when the ring is full; errors when the ring is full
+    /// *and* the peer is dead (nothing will ever drain it).
+    fn try_publish(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool> {
+        {
+            let ring = self.ring(self.rank, to);
+            let head = ring.head.load(Ordering::Relaxed); // sole producer
+            let tail = ring.tail.load(Ordering::Acquire);
+            if head - tail >= RING_SLOTS {
+                if !self.shared.alive[to].load(Ordering::Acquire) {
+                    bail!("rank {} send to dead rank {to}", self.rank);
+                }
+                return Ok(false);
+            }
+        }
+        // room confirmed: we are the sole producer, so `head` cannot
+        // have moved and `tail` can only have opened more room
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(data);
+        let ring = self.ring(self.rank, to);
+        let head = ring.head.load(Ordering::Relaxed);
+        *ring.slots[head % RING_SLOTS].lock().unwrap() =
+            Some((tag, buf));
+        ring.head.store(head + 1, Ordering::Release);
+        self.stats.record_send(data.len());
+        Ok(true)
+    }
+
+    /// Consume everything currently in the `from → self` ring, parking
+    /// mismatches, until a `(from, tag)` match pops out or the ring
+    /// runs empty (`Ok(None)`).
+    fn drain_ring(&mut self, from: usize, tag: u32)
+        -> Option<Vec<f32>> {
+        loop {
+            let ring = self.ring(from, self.rank);
+            let tail = ring.tail.load(Ordering::Relaxed); // sole consumer
+            if ring.head.load(Ordering::Acquire) == tail {
+                return None;
+            }
+            let (t, data) = ring.slots[tail % RING_SLOTS]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("slot ring corrupted: empty slot below head");
+            ring.tail.store(tail + 1, Ordering::Release);
+            self.stats.record_recv(data.len());
+            if t == tag {
+                return Some(data);
+            }
+            self.parked.entry((from, t)).or_default().push_back(data);
+        }
     }
 }
 
@@ -119,28 +161,13 @@ impl Transport for ShmTransport {
         ensure!(to < self.world,
                 "rank {} send to rank {to} outside world {}",
                 self.rank, self.world);
-        let mut buf = self.pool.pop().unwrap_or_default();
-        buf.clear();
-        buf.extend_from_slice(data);
-
-        let ring = self.ring(self.rank, to);
-        let head = ring.head.load(Ordering::Relaxed); // sole producer
         let mut spins = 0u32;
         loop {
-            let tail = ring.tail.load(Ordering::Acquire);
-            if head - tail < RING_SLOTS {
-                break;
+            if self.try_publish(to, tag, data)? {
+                return Ok(());
             }
-            if !self.shared.alive[to].load(Ordering::Acquire) {
-                bail!("rank {} send to dead rank {to}", self.rank);
-            }
-            backoff(&mut spins);
+            spin_backoff(&mut spins);
         }
-        *ring.slots[head % RING_SLOTS].lock().unwrap() =
-            Some((tag, buf));
-        ring.head.store(head + 1, Ordering::Release);
-        self.stats.record_send(data.len());
-        Ok(())
     }
 
     fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
@@ -154,43 +181,60 @@ impl Transport for ShmTransport {
         }
         let mut spins = 0u32;
         loop {
-            let ring = self.ring(from, self.rank);
-            let tail = ring.tail.load(Ordering::Relaxed); // sole consumer
-            if ring.head.load(Ordering::Acquire) != tail {
-                let (t, data) = ring.slots[tail % RING_SLOTS]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("slot ring corrupted: empty slot below head");
-                ring.tail.store(tail + 1, Ordering::Release);
-                self.stats.record_recv(data.len());
-                if t == tag {
-                    return Ok(data);
-                }
-                self.parked.entry((from, t)).or_default().push_back(data);
-                spins = 0;
-                continue;
+            if let Some(data) = self.drain_ring(from, tag) {
+                return Ok(data);
             }
             // ring empty: a dead peer's slots were all published
             // before its alive flag dropped (slot store happens-before
             // the Release flag store), so after an Acquire load of the
-            // flag one head re-read decides — either the final publish
+            // flag one more drain decides — either the final publish
             // is now visible, or nothing more can ever arrive
             if !self.shared.alive[from].load(Ordering::Acquire) {
-                if ring.head.load(Ordering::Acquire) != tail {
-                    continue; // the racing final publish: go take it
+                if let Some(data) = self.drain_ring(from, tag) {
+                    return Ok(data); // the racing final publish
                 }
                 bail!("rank {}: recv from dead rank {from} (tag {tag})",
                       self.rank);
             }
-            backoff(&mut spins);
+            spin_backoff(&mut spins);
         }
     }
 
-    fn recycle(&mut self, buf: Vec<f32>) {
-        if self.pool.len() < POOL_CAP {
-            self.pool.push(buf);
+    fn try_send(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool> {
+        ensure!(to < self.world,
+                "rank {} send to rank {to} outside world {}",
+                self.rank, self.world);
+        self.try_publish(to, tag, data)
+    }
+
+    fn try_recv(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>> {
+        ensure!(from < self.world,
+                "rank {} recv from rank {from} outside world {}",
+                self.rank, self.world);
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(v) = q.pop_front() {
+                return Ok(Some(v));
+            }
         }
+        if let Some(data) = self.drain_ring(from, tag) {
+            return Ok(Some(data));
+        }
+        // same death protocol as the blocking path: flag check, then
+        // one more drain for the racing final publish
+        if !self.shared.alive[from].load(Ordering::Acquire) {
+            if let Some(data) = self.drain_ring(from, tag) {
+                return Ok(Some(data));
+            }
+            bail!("rank {}: recv from dead rank {from} (tag {tag})",
+                  self.rank);
+        }
+        Ok(None)
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        self.pool.put(buf);
     }
 
     fn stats(&self) -> TransportStats {
@@ -302,6 +346,32 @@ mod tests {
             }
         }
         assert!(failed, "send to dead rank never errored");
+    }
+
+    #[test]
+    fn nonblocking_ops_roundtrip_and_report_backpressure() {
+        let mut comms = ShmTransport::world(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        assert!(c1.try_recv(0, 7).unwrap().is_none());
+        assert!(c0.try_send(1, 7, &[4.0]).unwrap());
+        assert_eq!(c1.try_recv(0, 7).unwrap(), Some(vec![4.0]));
+        // fill the ring: try_send must report full, not spin
+        for i in 0..RING_SLOTS {
+            assert!(c0.try_send(1, i as u32, &[i as f32]).unwrap());
+        }
+        assert!(!c0.try_send(1, 99, &[9.9]).unwrap());
+        assert_eq!(c1.recv(0, 0).unwrap(), vec![0.0]);
+        assert!(c0.try_send(1, 99, &[9.9]).unwrap());
+        // dead peer: in-flight slots still drain, then error
+        drop(c0);
+        for i in 1..RING_SLOTS {
+            assert_eq!(c1.try_recv(0, i as u32).unwrap(),
+                       Some(vec![i as f32]));
+        }
+        assert_eq!(c1.try_recv(0, 99).unwrap(), Some(vec![9.9]));
+        assert!(c1.try_recv(0, 0).unwrap_err().to_string()
+            .contains("dead rank 0"));
     }
 
     #[test]

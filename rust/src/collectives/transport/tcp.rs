@@ -11,28 +11,41 @@
 //! of one message are never interleaved with another on the same
 //! stream (each pair has a dedicated connection and a single writer).
 //!
-//! Writes go through a per-peer writer thread fed by a bounded queue.
-//! This keeps `send_slice` from blocking on the kernel socket buffer —
-//! without it, a ring schedule where every rank sends a
-//! larger-than-socket-buffer chunk before posting its receive would
-//! deadlock head-to-head. The queue bound (the same window as the
-//! other backends) plus TCP's own flow control is the backpressure.
+//! Both directions are thread-backed, which is what makes the
+//! nonblocking `try_send`/`try_recv` face of the [`Transport`] trait
+//! cheap here:
 //!
-//! Dead peers: a closed connection surfaces as EOF on receive
-//! (immediate error) and as a write failure in the writer thread,
-//! which flags the peer dead so the next `send_slice` errors — the
-//! "graceful dead-peer error" leg of the conformance suite.
+//! * Writes go through a per-peer *writer* thread fed by a bounded
+//!   queue. This keeps `send_slice` from blocking on the kernel socket
+//!   buffer — without it, a ring schedule where every rank sends a
+//!   larger-than-socket-buffer chunk before posting its receive would
+//!   deadlock head-to-head. `try_send` is a `try_send` on the same
+//!   queue; the queue bound plus TCP's own flow control is the
+//!   backpressure.
+//! * Reads come from a per-peer *reader* thread that reassembles
+//!   frames into whole messages and feeds a bounded queue; `recv`
+//!   blocks on it, `try_recv` polls it. The queue bound stops a fast
+//!   sender from ballooning the receiver's heap — the reader simply
+//!   stops reading the socket and TCP flow control pushes back.
+//!
+//! Dead peers: a closed connection surfaces as EOF in the reader
+//! thread (which forwards the error and exits, so both `recv` and
+//! `try_recv` report it instead of hanging) and as a write failure in
+//! the writer thread, which flags the peer dead so the next send
+//! errors — the "graceful dead-peer error" leg of the conformance
+//! suite.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError,
+                      TrySendError};
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context};
 
-use super::{Transport, TransportStats, POOL_CAP};
+use super::{BufferPool, Transport, TransportStats};
 use crate::Result;
 
 /// Max f32 elements per frame (256 KiB of payload): large messages
@@ -46,6 +59,13 @@ const FRAME_HDR_BYTES: usize = 12;
 /// `send_slice` blocks — the same in-flight window as the channel and
 /// shm backends.
 const SEND_QUEUE: usize = 8;
+
+/// Whole inbound messages queued from a peer's reader thread before it
+/// stops reading the socket — the receive-side mirror of `SEND_QUEUE`.
+const RECV_QUEUE: usize = 8;
+
+/// A whole reassembled message, or the reader thread's terminal error.
+type Inbound = std::result::Result<(u32, Vec<f32>), String>;
 
 /// Encode and write every frame of one message.
 fn write_frames(stream: &mut TcpStream, tag: u32, data: &[f32],
@@ -70,42 +90,145 @@ fn write_frames(stream: &mut TcpStream, tag: u32, data: &[f32],
     }
 }
 
-/// One connected peer: a writer-thread handle for sends, a buffered
-/// reader for receives, and the writer's death flag.
+/// Read one whole message (all frames) off `from`'s stream.
+///
+/// Allocation note: the output vector is freshly allocated per message
+/// — the reader thread cannot reach the transport's recycle pool (the
+/// pool serves the send path). This trades the old inline read path's
+/// recv-side recycling for the nonblocking receive face; on this
+/// backend the per-message syscall + memcpy cost dominates the
+/// allocator's, and the frame scratch (`rbuf`) is still reused.
+fn read_message(reader: &mut BufReader<TcpStream>, rank: usize,
+                from: usize, rbuf: &mut Vec<u8>)
+    -> Result<(u32, Vec<f32>)> {
+    let mut out = Vec::new();
+    let mut msg_tag: Option<u32> = None;
+    loop {
+        let mut hdr = [0u8; FRAME_HDR_BYTES];
+        reader.read_exact(&mut hdr).with_context(|| {
+            format!("rank {rank}: rank {from} closed the \
+                     connection (dead peer)")
+        })?;
+        let tag = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let elems =
+            u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let last = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        if elems > MAX_FRAME_ELEMS || last > 1 {
+            bail!("rank {rank}: corrupt frame from rank {from} \
+                   ({elems} elems, last={last})");
+        }
+        match msg_tag {
+            None => msg_tag = Some(tag),
+            Some(t0) => ensure!(
+                tag == t0,
+                "rank {rank}: interleaved frames from rank {from} \
+                 (tag {tag} inside message tagged {t0})"),
+        }
+        rbuf.resize(elems * 4, 0);
+        reader.read_exact(rbuf).with_context(|| {
+            format!("rank {rank}: rank {from} died mid-frame")
+        })?;
+        out.extend(rbuf.chunks_exact(4).map(|c| {
+            f32::from_le_bytes(c.try_into().unwrap())
+        }));
+        if last == 1 {
+            break;
+        }
+    }
+    Ok((msg_tag.expect("message has at least one frame"), out))
+}
+
+/// One connected peer: a writer-thread handle for sends, a
+/// reader-thread queue for receives, the writer's death flag, and a
+/// shutdown handle onto the shared socket (see [`Peer::drop`]).
 struct Peer {
     tx: SyncSender<(u32, Vec<f32>)>,
-    reader: BufReader<TcpStream>,
+    rx: Receiver<Inbound>,
     dead: Arc<AtomicBool>,
+    /// Messages sitting in the writer queue. `try_send` probes this
+    /// *before* copying the payload, so a window-stalled engine poll
+    /// costs an atomic load instead of an O(message) memcpy that gets
+    /// thrown away (conservative: a racing decrement only means one
+    /// extra `Ok(false)` poll).
+    queued: Arc<AtomicUsize>,
+    /// Extra clone of the connection used only to `shutdown` the read
+    /// direction on drop — without it, our blocked reader thread would
+    /// hold its socket clone open forever (no FIN ever reaches the
+    /// peer, and the thread leaks).
+    stream: TcpStream,
 }
 
 impl Peer {
-    fn new(stream: TcpStream) -> Result<Peer> {
+    fn new(stream: TcpStream, rank: usize, from: usize) -> Result<Peer> {
         stream.set_nodelay(true)
             .context("setting TCP_NODELAY on rank link")?;
         let read_half = stream.try_clone()
             .context("cloning rank link for reads")?;
-        let (tx, rx) = sync_channel::<(u32, Vec<f32>)>(SEND_QUEUE);
+        let shutdown_handle = stream.try_clone()
+            .context("cloning rank link for shutdown")?;
+        let (tx, wrx) = sync_channel::<(u32, Vec<f32>)>(SEND_QUEUE);
         let dead = Arc::new(AtomicBool::new(false));
-        spawn_writer(stream, rx, dead.clone());
-        Ok(Peer {
-            tx,
-            reader: BufReader::with_capacity(1 << 16, read_half),
-            dead,
-        })
+        let queued = Arc::new(AtomicUsize::new(0));
+        spawn_writer(stream, wrx, dead.clone(), queued.clone());
+        let (rtx, rx) = sync_channel::<Inbound>(RECV_QUEUE);
+        spawn_reader(BufReader::with_capacity(1 << 16, read_half), rtx,
+                     rank, from);
+        Ok(Peer { tx, rx, dead, queued, stream: shutdown_handle })
+    }
+}
+
+impl Drop for Peer {
+    fn drop(&mut self) {
+        // Stop feeding the writer: it flushes whatever is queued and
+        // exits, dropping the LAST write-capable handle — that is the
+        // moment the peer sees FIN, so in-flight messages survive our
+        // death (the conformance contract). Then shut down the read
+        // direction, which unblocks our reader thread (its read
+        // returns EOF) so it exits instead of holding the socket —
+        // and the crate's thread count — forever.
+        let (dummy, _) = sync_channel::<(u32, Vec<f32>)>(1);
+        drop(std::mem::replace(&mut self.tx, dummy));
+        let _ = self.stream.shutdown(std::net::Shutdown::Read);
     }
 }
 
 fn spawn_writer(mut stream: TcpStream, rx: Receiver<(u32, Vec<f32>)>,
-                dead: Arc<AtomicBool>) {
+                dead: Arc<AtomicBool>, queued: Arc<AtomicUsize>) {
     std::thread::spawn(move || {
         let mut wbuf = Vec::new();
         while let Ok((tag, data)) = rx.recv() {
+            queued.fetch_sub(1, Ordering::AcqRel);
             if write_frames(&mut stream, tag, &data, &mut wbuf).is_err() {
                 dead.store(true, Ordering::Release);
                 // keep draining so blocked senders fail via the flag
                 // instead of hanging on a full queue
-                while rx.recv().is_ok() {}
+                while rx.recv().is_ok() {
+                    queued.fetch_sub(1, Ordering::AcqRel);
+                }
                 return;
+            }
+        }
+    });
+}
+
+fn spawn_reader(mut reader: BufReader<TcpStream>, tx: SyncSender<Inbound>,
+                rank: usize, from: usize) {
+    std::thread::spawn(move || {
+        let mut rbuf = Vec::new();
+        loop {
+            match read_message(&mut reader, rank, from, &mut rbuf) {
+                Ok(msg) => {
+                    if tx.send(Ok(msg)).is_err() {
+                        return; // consumer dropped
+                    }
+                }
+                Err(e) => {
+                    // forward the terminal error (EOF = dead peer,
+                    // corrupt frame, mid-frame death) and stop; the
+                    // closed channel reports death to later receives
+                    let _ = tx.send(Err(format!("{e:#}")));
+                    return;
+                }
             }
         }
     });
@@ -118,9 +241,7 @@ pub struct TcpTransport {
     /// `peers[p]` is `Some` for every `p != rank`.
     peers: Vec<Option<Peer>>,
     parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
-    pool: Vec<Vec<f32>>,
-    /// Reusable byte buffer for frame payload reads.
-    rbuf: Vec<u8>,
+    pool: BufferPool,
     stats: TransportStats,
 }
 
@@ -150,8 +271,8 @@ impl TcpTransport {
                 let (inbound, _) = listeners[i].accept()
                     .with_context(|| format!("rank {i} accepting \
                                               rank {j}"))?;
-                peers[j][i] = Some(Peer::new(outbound)?);
-                peers[i][j] = Some(Peer::new(inbound)?);
+                peers[j][i] = Some(Peer::new(outbound, j, i)?);
+                peers[i][j] = Some(Peer::new(inbound, i, j)?);
             }
         }
         Ok(peers
@@ -162,56 +283,20 @@ impl TcpTransport {
                 world,
                 peers,
                 parked: HashMap::new(),
-                pool: Vec::new(),
-                rbuf: Vec::new(),
+                pool: BufferPool::new(),
                 stats: TransportStats::default(),
             })
             .collect())
     }
 
-    /// Read one whole message (all frames) from `from`'s stream.
-    fn read_message(&mut self, from: usize) -> Result<(u32, Vec<f32>)> {
-        let rank = self.rank;
-        let mut out = self.pool.pop().unwrap_or_default();
-        out.clear();
-        let mut msg_tag: Option<u32> = None;
-        let peer = self.peers[from]
-            .as_mut()
-            .expect("mesh link missing");
-        loop {
-            let mut hdr = [0u8; FRAME_HDR_BYTES];
-            peer.reader.read_exact(&mut hdr).with_context(|| {
-                format!("rank {rank}: rank {from} closed the \
-                         connection (dead peer)")
-            })?;
-            let tag = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
-            let elems =
-                u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
-            let last = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
-            if elems > MAX_FRAME_ELEMS || last > 1 {
-                bail!("rank {rank}: corrupt frame from rank {from} \
-                       ({elems} elems, last={last})");
-            }
-            match msg_tag {
-                None => msg_tag = Some(tag),
-                Some(t0) => ensure!(
-                    tag == t0,
-                    "rank {rank}: interleaved frames from rank {from} \
-                     (tag {tag} inside message tagged {t0})"),
-            }
-            self.rbuf.resize(elems * 4, 0);
-            peer.reader.read_exact(&mut self.rbuf).with_context(|| {
-                format!("rank {rank}: rank {from} died mid-frame")
-            })?;
-            out.extend(self.rbuf.chunks_exact(4).map(|c| {
-                f32::from_le_bytes(c.try_into().unwrap())
-            }));
-            if last == 1 {
-                break;
-            }
-        }
-        self.stats.record_recv(out.len());
-        Ok((msg_tag.expect("message has at least one frame"), out))
+    fn check_peer(&self, other: usize, verb: &str) -> Result<()> {
+        ensure!(other < self.world,
+                "rank {} {verb} rank {other} outside world {}",
+                self.rank, self.world);
+        ensure!(other != self.rank,
+                "tcp transport has no loopback link to itself \
+                 (rank {})", self.rank);
+        Ok(())
     }
 }
 
@@ -226,21 +311,16 @@ impl Transport for TcpTransport {
 
     fn send_slice(&mut self, to: usize, tag: u32, data: &[f32])
         -> Result<()> {
-        ensure!(to < self.world,
-                "rank {} send to rank {to} outside world {}",
-                self.rank, self.world);
-        ensure!(to != self.rank,
-                "tcp transport has no loopback link to itself \
-                 (rank {})", self.rank);
+        self.check_peer(to, "send to")?;
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(data);
         let peer = self.peers[to].as_ref().expect("mesh link missing");
         if peer.dead.load(Ordering::Acquire) {
             bail!("rank {} send to dead rank {to} (connection lost)",
                   self.rank);
         }
-        let mut buf = self.pool.pop().unwrap_or_default();
-        buf.clear();
-        buf.extend_from_slice(data);
         self.stats.record_send(data.len());
+        peer.queued.fetch_add(1, Ordering::AcqRel);
         peer.tx
             .send((tag, buf))
             .ok()
@@ -249,19 +329,23 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
-        ensure!(from < self.world,
-                "rank {} recv from rank {from} outside world {}",
-                self.rank, self.world);
-        ensure!(from != self.rank,
-                "tcp transport has no loopback link to itself \
-                 (rank {})", self.rank);
+        self.check_peer(from, "recv from")?;
         if let Some(q) = self.parked.get_mut(&(from, tag)) {
             if let Some(v) = q.pop_front() {
                 return Ok(v);
             }
         }
         loop {
-            let (t, data) = self.read_message(from)?;
+            let peer =
+                self.peers[from].as_ref().expect("mesh link missing");
+            let (t, data) = match peer.rx.recv() {
+                Ok(Ok(m)) => m,
+                Ok(Err(msg)) => bail!("{msg}"),
+                Err(_) => bail!(
+                    "rank {}: rank {from} closed the connection \
+                     (dead peer)", self.rank),
+            };
+            self.stats.record_recv(data.len());
             if t == tag {
                 return Ok(data);
             }
@@ -269,10 +353,77 @@ impl Transport for TcpTransport {
         }
     }
 
-    fn recycle(&mut self, buf: Vec<f32>) {
-        if self.pool.len() < POOL_CAP {
-            self.pool.push(buf);
+    fn try_send(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool> {
+        self.check_peer(to, "send to")?;
+        {
+            let peer =
+                self.peers[to].as_ref().expect("mesh link missing");
+            if peer.dead.load(Ordering::Acquire) {
+                bail!("rank {} send to dead rank {to} (connection \
+                       lost)", self.rank);
+            }
+            // probe the queue depth before paying the payload copy: a
+            // window-stalled engine polls this on every sweep, and an
+            // O(message) memcpy thrown away per poll would burn the
+            // CPU the overlap exists to free
+            if peer.queued.load(Ordering::Acquire) >= SEND_QUEUE {
+                return Ok(false);
+            }
         }
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(data);
+        let peer = self.peers[to].as_ref().expect("mesh link missing");
+        peer.queued.fetch_add(1, Ordering::AcqRel);
+        match peer.tx.try_send((tag, buf)) {
+            Ok(()) => {
+                self.stats.record_send(data.len());
+                Ok(true)
+            }
+            Err(TrySendError::Full((_, buf))) => {
+                // lost the race with another fill between probe and
+                // send; undo the reservation and retry next poll
+                peer.queued.fetch_sub(1, Ordering::AcqRel);
+                self.pool.put(buf);
+                Ok(false)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                peer.queued.fetch_sub(1, Ordering::AcqRel);
+                bail!("rank {} send to dead rank {to} (writer shut \
+                       down)", self.rank)
+            }
+        }
+    }
+
+    fn try_recv(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>> {
+        self.check_peer(from, "recv from")?;
+        if let Some(q) = self.parked.get_mut(&(from, tag)) {
+            if let Some(v) = q.pop_front() {
+                return Ok(Some(v));
+            }
+        }
+        loop {
+            let peer =
+                self.peers[from].as_ref().expect("mesh link missing");
+            let (t, data) = match peer.rx.try_recv() {
+                Ok(Ok(m)) => m,
+                Ok(Err(msg)) => bail!("{msg}"),
+                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Disconnected) => bail!(
+                    "rank {}: rank {from} closed the connection \
+                     (dead peer)", self.rank),
+            };
+            self.stats.record_recv(data.len());
+            if t == tag {
+                return Ok(Some(data));
+            }
+            self.parked.entry((from, t)).or_default().push_back(data);
+        }
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        self.pool.put(buf);
     }
 
     fn stats(&self) -> TransportStats {
@@ -353,6 +504,72 @@ mod tests {
     }
 
     #[test]
+    fn try_recv_sees_arrivals_then_reports_death() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        assert!(c1.try_recv(0, 6).unwrap().is_none());
+        c0.send_slice(1, 6, &[2.5]).unwrap();
+        drop(c0);
+        // poll until the reader thread has moved the message across
+        let mut got = None;
+        for _ in 0..500 {
+            match c1.try_recv(0, 6) {
+                Ok(Some(v)) => {
+                    got = Some(v);
+                    break;
+                }
+                Ok(None) => {
+                    std::thread::sleep(Duration::from_millis(2))
+                }
+                Err(e) => panic!("in-flight message lost: {e}"),
+            }
+        }
+        assert_eq!(got, Some(vec![2.5]));
+        // the peer is gone: eventually try_recv must error, not spin
+        let mut failed = false;
+        for _ in 0..500 {
+            match c1.try_recv(0, 6) {
+                Ok(Some(_)) => panic!("phantom message"),
+                Ok(None) => {
+                    std::thread::sleep(Duration::from_millis(2))
+                }
+                Err(e) => {
+                    assert!(e.to_string().contains("dead peer"),
+                            "unexpected: {e}");
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        assert!(failed, "try_recv never reported the dead peer");
+    }
+
+    #[test]
+    fn try_send_reports_backpressure_under_big_payloads() {
+        let mut comms = TcpTransport::world(2).unwrap();
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        // 1.2 MB messages: a few fill the kernel buffer, then the
+        // writer queue, then try_send must report full (not block)
+        let payload = vec![1.0f32; 300_000];
+        let mut accepted = 0usize;
+        let mut saw_full = false;
+        for _ in 0..64 {
+            if c0.try_send(1, 9, &payload).unwrap() {
+                accepted += 1;
+            } else {
+                saw_full = true;
+                break;
+            }
+        }
+        assert!(saw_full,
+                "try_send never reported backpressure ({accepted} \
+                 accepted)");
+        drop(c1); // unblock the writer by closing the reader side
+    }
+
+    #[test]
     fn send_to_dead_peer_eventually_errors() {
         let mut comms = TcpTransport::world(2).unwrap();
         let c1 = comms.pop().unwrap();
@@ -377,5 +594,7 @@ mod tests {
         let mut c0 = comms.remove(0);
         assert!(c0.send_slice(0, 0, &[1.0]).is_err());
         assert!(c0.recv(0, 0).is_err());
+        assert!(c0.try_send(0, 0, &[1.0]).is_err());
+        assert!(c0.try_recv(0, 0).is_err());
     }
 }

@@ -97,7 +97,9 @@ fn real_training(batch: usize, steps: usize) -> TrainingConfig {
         // "shm"/"tcp" — numerics are transport-invariant
         transport: "channel".into(),
         bucket_mb: 25.0,
+        first_bucket_mb: 0.0,
         overlap_comm: true,
+        comm_engine: true,
         zero_stage: 0,
         checkpoint_every: 0,
         log_every: 10,
@@ -120,6 +122,9 @@ pub fn quickstart() -> Config {
             // bucket would degenerate to one bucket, so shrink it to
             // exercise the real bucketed-overlap path in smoke runs
             bucket_mb: 0.05,
+            // and an uneven (smaller) first bucket, so the size-aware
+            // plan + comm-engine pipeline run in every smoke test
+            first_bucket_mb: 0.01,
             // smoke runs cover the sharded-optimizer (ZeRO-1) path:
             // reduce-scatter per bucket, shard step, all-gather params
             zero_stage: 1,

@@ -60,8 +60,21 @@ pub struct TrainingConfig {
     pub transport: String,
     /// Gradient bucket size for comm/compute overlap, MB.
     pub bucket_mb: f64,
+    /// Size of the *first-launched* (tail) gradient bucket, MB — the
+    /// DDP-style smaller first bucket that starts the sync pipeline as
+    /// early as possible. `0` (the default) means "same as bucket_mb"
+    /// (uniform buckets). Tradeoff: one extra bucket pays one extra
+    /// per-message α, so tiny first buckets hurt at high node counts.
+    pub first_bucket_mb: f64,
     /// Overlap gradient all-reduce with the backward pass (DDP-style).
     pub overlap_comm: bool,
+    /// Drive the bucketed collectives through the per-rank async comm
+    /// engine (a progress thread advancing in-flight buckets while the
+    /// trainer computes) instead of blocking in the caller. Numerics
+    /// are engine-invariant (bit-identical trajectories, same wire
+    /// bytes — enforced by the conformance suite); only measured
+    /// exposed-comm time changes. Default on.
+    pub comm_engine: bool,
     /// ZeRO optimizer-state sharding stage: 0 = replicated AdamW on
     /// every rank (plain DDP), 1 = reduce-scatter gradients, each rank
     /// steps only its shard, all-gather updated params. Same wire cost,
@@ -78,7 +91,8 @@ impl TrainingConfig {
         deny_unknown(v, &["mode", "batch_per_gpu", "steps", "lr",
                           "warmup_steps", "beta1", "beta2", "weight_decay",
                           "adam_eps", "allreduce", "transport",
-                          "bucket_mb", "overlap_comm", "zero_stage",
+                          "bucket_mb", "first_bucket_mb", "overlap_comm",
+                          "comm_engine", "zero_stage",
                           "checkpoint_every", "log_every"])?;
         let f = |key: &str, dv: f64| -> Result<f64> {
             Ok(v.get(key).map(|x| x.as_f64()).transpose()?.unwrap_or(dv))
@@ -103,7 +117,10 @@ impl TrainingConfig {
                 .map(|x| x.as_str().map(str::to_string)).transpose()?
                 .unwrap_or_else(|| "channel".into()),
             bucket_mb: f("bucket_mb", 25.0)?,
+            first_bucket_mb: f("first_bucket_mb", 0.0)?,
             overlap_comm: v.get("overlap_comm").map(|x| x.as_bool())
+                .transpose()?.unwrap_or(true),
+            comm_engine: v.get("comm_engine").map(|x| x.as_bool())
                 .transpose()?.unwrap_or(true),
             zero_stage: u("zero_stage", 0)?,
             checkpoint_every: u("checkpoint_every", 0)?,
@@ -125,7 +142,9 @@ impl TrainingConfig {
             ("allreduce", json::s(&self.allreduce)),
             ("transport", json::s(&self.transport)),
             ("bucket_mb", json::num(self.bucket_mb)),
+            ("first_bucket_mb", json::num(self.first_bucket_mb)),
             ("overlap_comm", Value::Bool(self.overlap_comm)),
+            ("comm_engine", Value::Bool(self.comm_engine)),
             ("zero_stage", json::num(self.zero_stage as f64)),
             ("checkpoint_every", json::num(self.checkpoint_every as f64)),
             ("log_every", json::num(self.log_every as f64)),
@@ -149,6 +168,23 @@ impl TrainingConfig {
             self.bucket_mb.is_finite() && self.bucket_mb > 0.0,
             "bucket_mb must be a positive finite size (got {})",
             self.bucket_mb
+        );
+        // 0 = disabled ("same as bucket_mb"); a set value must be a
+        // sane size and no larger than the regular bucket — a first
+        // bucket *bigger* than the rest would delay the first launch,
+        // the opposite of what the knob is for
+        ensure!(
+            self.first_bucket_mb.is_finite() && self.first_bucket_mb >= 0.0,
+            "first_bucket_mb must be 0 (disabled) or a positive finite \
+             size (got {})",
+            self.first_bucket_mb
+        );
+        ensure!(
+            self.first_bucket_mb <= self.bucket_mb,
+            "first_bucket_mb ({}) exceeds bucket_mb ({}) — the first \
+             bucket exists to launch *earlier* than a regular bucket; \
+             set it smaller, or 0 for uniform buckets",
+            self.first_bucket_mb, self.bucket_mb
         );
         ensure!(self.zero_stage <= 1,
                 "zero_stage {} unsupported (0 = replicated optimizer, \
@@ -212,6 +248,41 @@ mod tests {
             cfg.training.bucket_mb = bad;
             assert!(cfg.validate().is_err(), "bucket_mb={bad} accepted");
         }
+    }
+
+    #[test]
+    fn first_bucket_mb_is_validated() {
+        let mut cfg = presets::quickstart();
+        // 0 = disabled, small positive = fine
+        cfg.training.first_bucket_mb = 0.0;
+        assert!(cfg.validate().is_ok());
+        cfg.training.first_bucket_mb = cfg.training.bucket_mb / 5.0;
+        assert!(cfg.validate().is_ok());
+        // negative / NaN / bigger-than-regular are rejected
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            cfg.training.first_bucket_mb = bad;
+            assert!(cfg.validate().is_err(),
+                    "first_bucket_mb={bad} accepted");
+        }
+        cfg.training.first_bucket_mb = cfg.training.bucket_mb * 2.0;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("exceeds bucket_mb"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn engine_and_first_bucket_default_on_and_off() {
+        // a config JSON without the new knobs parses to engine on,
+        // uniform buckets — old configs keep working
+        let t = presets::e2e_pretrain().training;
+        let mut v = t.to_json();
+        if let Value::Obj(ref mut kv) = v {
+            kv.retain(|(k, _)| {
+                k != "comm_engine" && k != "first_bucket_mb"
+            });
+        }
+        let back = TrainingConfig::from_json(&v).unwrap();
+        assert!(back.comm_engine);
+        assert_eq!(back.first_bucket_mb, 0.0);
     }
 
     #[test]

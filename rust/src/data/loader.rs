@@ -225,16 +225,69 @@ impl LoaderPool {
                            workers: usize, prefetch: usize,
                            io_delay_us: u64, start_step: usize)
         -> Result<LoaderPool> {
+        Self::spawn_streaming_carry(cache, plan, None, rank, batch,
+                                    masker, seed, workers, prefetch,
+                                    io_delay_us, start_step)
+    }
+
+    /// [`LoaderPool::spawn_streaming`] with remainder roll-in: when
+    /// `carry_from` holds the *previous* epoch's plan, the
+    /// `plan.carry_in(batch)` samples that epoch left undelivered (its
+    /// tail that did not fill a batch) lead this epoch's stream, and
+    /// this epoch delivers `plan.steps_with_carry(batch)` batches.
+    /// Everything stays bit-deterministic in (seed, epoch, rank): the
+    /// carry count is a closed form of the geometry and the carried
+    /// ids come from the previous plan's own deterministic order.
+    /// Masking stays keyed by the *delivering* epoch and step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_streaming_carry(cache: Arc<BlockCache>,
+                                 plan: Arc<WindowedPlan>,
+                                 carry_from: Option<Arc<WindowedPlan>>,
+                                 rank: usize, batch: usize,
+                                 masker: Masker, seed: u64,
+                                 workers: usize, prefetch: usize,
+                                 io_delay_us: u64, start_step: usize)
+        -> Result<LoaderPool> {
         ensure!(batch > 0 && workers > 0);
         ensure!(rank < plan.world(),
                 "rank {rank} outside world {}", plan.world());
         let seq = cache.dataset().seq();
-        let end_step = plan.steps(batch);
+        let per = plan.samples_per_rank();
+        let carry_in = match &carry_from {
+            Some(prev) => {
+                ensure!(prev.epoch + 1 == plan.epoch,
+                        "carry plan is epoch {} but the stream is \
+                         epoch {} — the carry must come from the \
+                         immediately preceding epoch",
+                        prev.epoch, plan.epoch);
+                ensure!(prev.world() == plan.world()
+                            && prev.samples_per_rank() == per,
+                        "carry plan geometry (world {}, {}/rank) does \
+                         not match the stream (world {}, {}/rank)",
+                        prev.world(), prev.samples_per_rank(),
+                        plan.world(), per);
+                let carry = plan.carry_in(batch);
+                // the carried prefix indexes the previous epoch's
+                // tail, so it cannot exceed what that epoch held —
+                // only possible when batch > per, which the trainer
+                // already refuses (an epoch must fit one batch)
+                ensure!(carry <= per,
+                        "carry of {carry} samples exceeds the {per} \
+                         samples a rank sees per epoch — batch {batch} \
+                         is larger than an epoch; shrink the batch");
+                carry
+            }
+            None => 0,
+        };
+        let end_step = (carry_in + per) / batch;
         ensure!(start_step <= end_step,
                 "resume step {start_step} beyond the {end_step} steps \
                  this epoch holds");
         let epoch = plan.epoch;
-        let remainder = plan.samples_per_rank() % batch;
+        // the tail this pool leaves undelivered — rolled into the next
+        // epoch when the caller threads plans through `carry_from`,
+        // genuinely dropped otherwise
+        let remainder = (carry_in + per) % batch;
         Ok(Self::spawn_inner(
             start_step, end_step, remainder, workers, prefetch,
             io_delay_us,
@@ -243,9 +296,25 @@ impl LoaderPool {
                 let masker = masker.clone();
                 let stats = stats.clone();
                 let mut cursor = RankCursor::new(plan.clone(), rank);
+                let mut prev_cursor = carry_from
+                    .as_ref()
+                    .map(|p| RankCursor::new(p.clone(), rank));
                 let mut ids: Vec<u32> = Vec::with_capacity(batch);
                 move |step| {
-                    cursor.ids_for_step(step, batch, &mut ids);
+                    ids.clear();
+                    for k in step * batch..(step + 1) * batch {
+                        // extended stream: carried tail first, then
+                        // this epoch's own order
+                        let id = if k < carry_in {
+                            prev_cursor
+                                .as_mut()
+                                .expect("carry_in > 0 without a plan")
+                                .id_at(per - carry_in + k)
+                        } else {
+                            cursor.id_at(k - carry_in)
+                        };
+                        ids.push(id);
+                    }
                     let mut samples = Vec::with_capacity(batch);
                     for &id in &ids {
                         samples.push(

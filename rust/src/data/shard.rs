@@ -154,6 +154,28 @@ impl WindowedPlan {
         self.per / batch
     }
 
+    /// Samples carried *into* this epoch from the previous epoch's
+    /// undelivered tail under remainder roll-in (data-plane open item
+    /// (c)): each epoch leaves `(carry_in + per) % batch` samples that
+    /// did not fill a batch, and they lead the next epoch's stream
+    /// instead of being dropped. Closed form — `(epoch · per) % batch`
+    /// — so any epoch's carry is computable directly from (seed-free)
+    /// geometry: bit-deterministic in (epoch, per, batch), which is
+    /// what keeps mid-epoch resume a pure index computation.
+    pub fn carry_in(&self, batch: usize) -> usize {
+        debug_assert!(batch > 0);
+        ((self.epoch as u128 * self.per as u128) % batch as u128)
+            as usize
+    }
+
+    /// Steps this epoch delivers under remainder roll-in: the carried
+    /// tail plus this epoch's own samples, cut into full batches.
+    /// Always ≥ [`WindowedPlan::steps`]; the new remainder
+    /// `(carry_in + per) % batch` becomes the next epoch's carry.
+    pub fn steps_with_carry(&self, batch: usize) -> usize {
+        (self.carry_in(batch) + self.per) / batch
+    }
+
     /// Number of level-2 windows covering the stream.
     pub fn n_windows(&self) -> usize {
         (self.n as usize).div_ceil(self.window)
@@ -243,14 +265,6 @@ impl RankCursor {
         self.plan.sample_at(pos, &self.perm)
     }
 
-    /// The sample ids of epoch-local `step` at `batch` per rank.
-    pub fn ids_for_step(&mut self, step: usize, batch: usize,
-                        out: &mut Vec<u32>) {
-        out.clear();
-        for k in step * batch..(step + 1) * batch {
-            out.push(self.id_at(k));
-        }
-    }
 }
 
 #[cfg(test)]
@@ -374,8 +388,10 @@ mod tests {
             for &k in &[41usize, 0, full.len() - 1, 7, 41, 23] {
                 assert_eq!(cur.id_at(k), full[k], "rank {rank} k {k}");
             }
-            let mut ids = Vec::new();
-            cur.ids_for_step(2, 5, &mut ids);
+            // a batch worth of consecutive positions (what the loader
+            // walks per step) agrees with the materialized order
+            let ids: Vec<u32> =
+                (10..15).map(|k| cur.id_at(k)).collect();
             assert_eq!(ids, &full[10..15]);
         }
     }
@@ -413,5 +429,38 @@ mod tests {
         assert_eq!(p.steps(8), 6);
         assert_eq!(p.steps(64), 0);
         assert_eq!(p.samples_per_rank(), 50);
+    }
+
+    #[test]
+    fn carry_recurrence_matches_the_closed_form() {
+        // carry_in(e+1) == (carry_in(e) + per) % batch — the closed
+        // form IS the recurrence, so each epoch's leftover really is
+        // what the next epoch starts with, for any geometry
+        for (counts, world, batch) in
+            [(vec![100u64], 2usize, 8usize), (vec![37, 63], 3, 7),
+             (vec![50], 1, 50), (vec![11, 13], 4, 5)]
+        {
+            let mut prev_carry = 0usize;
+            for epoch in 0..12u64 {
+                let p = windowed(&counts, world, epoch, 16);
+                let carry = p.carry_in(batch);
+                assert_eq!(
+                    carry, prev_carry,
+                    "counts={counts:?} world={world} batch={batch} \
+                     epoch={epoch}");
+                // delivered + leftover accounts for every sample
+                let per = p.samples_per_rank();
+                assert_eq!(p.steps_with_carry(batch) * batch
+                               + (carry + per) % batch,
+                           carry + per);
+                prev_carry = (carry + per) % batch;
+            }
+        }
+        // epoch 0 never carries; even batches never carry
+        let p = windowed(&[100], 2, 0, 16);
+        assert_eq!(p.carry_in(8), 0);
+        let p = windowed(&[96], 2, 5, 16); // 48/rank, batch 8 divides
+        assert_eq!(p.carry_in(8), 0);
+        assert_eq!(p.steps_with_carry(8), p.steps(8));
     }
 }

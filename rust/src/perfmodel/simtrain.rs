@@ -148,13 +148,26 @@ pub fn simulate(cfg: &Config) -> SimResult {
     // bucket_mb counts f32 *buffer* bytes, so derive params/bucket
     // from the real trainer's own BucketPlan arithmetic; the wire
     // moves bf16 (CostModel::gradient_bytes, 2 of the buffer's 4
-    // bytes/param), so a bucket carries 2 bytes per param. Sharing
-    // the element arithmetic makes the priced bucket count exactly
-    // the one real mode runs.
+    // bytes/param), so a bucket carries 2 bytes per param. Pricing
+    // runs over the plan's own ready-order size list (including the
+    // smaller `first_bucket_mb` bucket when set), so the priced
+    // schedule is exactly the one real mode runs — bucket for bucket.
     let params = cfg.model.param_count() as usize;
-    let bucket_wire_bytes =
-        BucketPlan::elems_for(params, cfg.training.bucket_mb) as f64
-            * 2.0;
+    let bucket_elems =
+        BucketPlan::elems_for(params, cfg.training.bucket_mb);
+    let first_elems = if cfg.training.first_bucket_mb.is_finite()
+        && cfg.training.first_bucket_mb > 0.0
+    {
+        BucketPlan::elems_for(params, cfg.training.first_bucket_mb)
+    } else {
+        bucket_elems
+    };
+    let bucket_wire_sizes: Vec<f64> = BucketPlan::ready_sizes(
+        params, bucket_elems, first_elems,
+        crate::collectives::cost::MAX_MODELED_BUCKETS)
+        .into_iter()
+        .map(|e| e as f64 * 2.0)
+        .collect();
     let (comm, comm_exposed, comm_buckets) = if zero >= 1 {
         // ZeRO-1: reduce-scatter overlapped with backward, then the
         // parameter all-gather after the optimizer step — always
@@ -165,14 +178,14 @@ pub fn simulate(cfg: &Config) -> SimResult {
         // column stays comparable across stages; the bucketed
         // pipeline's per-bucket α only shows up in comm_exposed, where
         // it genuinely lands on the step
-        let rs = cost.overlapped_reduce_scatter(
-            algo, c.nodes, grad_bytes, bucket_wire_bytes, bwd);
+        let rs = cost.overlapped_reduce_scatter_sized(
+            algo, c.nodes, &bucket_wire_sizes, bwd);
         let ag = cost.all_gather(algo, c.nodes, grad_bytes);
         (cost.reduce_scatter(algo, c.nodes, grad_bytes) + ag,
          rs.exposed + ag, rs.n_buckets)
     } else if cfg.training.overlap_comm {
-        let o = cost.overlapped_allreduce(
-            algo, c.nodes, grad_bytes, bucket_wire_bytes, bwd);
+        let o = cost.overlapped_allreduce_sized(
+            algo, c.nodes, &bucket_wire_sizes, bwd);
         (cost.allreduce(algo, c.nodes, grad_bytes), o.exposed,
          o.n_buckets)
     } else {
@@ -362,6 +375,25 @@ mod tests {
             cfg.model.param_count() as usize, cfg.training.bucket_mb);
         assert_eq!(r.comm_buckets, plan.n_buckets());
         assert!(r.comm_buckets > 1);
+    }
+
+    #[test]
+    fn first_bucket_knob_is_priced_from_the_real_plan() {
+        // with first_bucket_mb set, the sim's bucket count must match
+        // the size-aware BucketPlan real mode builds — the cross-check
+        // extended to uneven first buckets
+        let mut cfg = paper_cfg(presets::model_bert_120m(), 184);
+        let base = simulate(&cfg);
+        cfg.training.first_bucket_mb = 1.0;
+        let r = simulate(&cfg);
+        let plan = crate::collectives::BucketPlan::new_with_first(
+            cfg.model.param_count() as usize, cfg.training.bucket_mb,
+            1.0);
+        assert_eq!(r.comm_buckets, plan.n_buckets());
+        // the small first bucket adds exactly the early bucket
+        assert_eq!(r.comm_buckets, base.comm_buckets + 1);
+        // raw (monolithic-equivalent) comm is unchanged by bucketing
+        assert_eq!(r.comm_secs, base.comm_secs);
     }
 
     #[test]

@@ -65,6 +65,25 @@ impl HostParams {
         assert_eq!(off, out.len(), "flat buffer length mismatch");
     }
 
+    /// Copy only the flat range `[start, end)` of the concatenated
+    /// tensor layout into the same positions of `out` (a full
+    /// flat-length buffer). The comm engine's ZeRO-1 path uses this to
+    /// refresh just one bucket's freshly stepped shard before
+    /// launching its all-gather, instead of re-flattening everything.
+    pub fn copy_flat_range(&self, start: usize, end: usize,
+                           out: &mut [f32]) {
+        let mut off = 0usize;
+        for t in &self.tensors {
+            let a = start.max(off);
+            let b = end.min(off + t.len());
+            if a < b {
+                out[a..b].copy_from_slice(&t[a - off..b - off]);
+            }
+            off += t.len();
+        }
+        debug_assert!(end <= off, "flat range beyond parameter length");
+    }
+
     /// Overwrite every tensor from the flat vector — inverse of
     /// [`HostParams::flatten_into`].
     pub fn unflatten_from(&mut self, src: &[f32]) {
@@ -215,6 +234,27 @@ mod tests {
         flat[4] = 9.0;
         p.unflatten_from(&flat);
         assert_eq!(p.tensors[1], vec![3.0, 3.0, 9.0]);
+    }
+
+    #[test]
+    fn copy_flat_range_writes_only_the_span() {
+        let p = HostParams {
+            tensors: vec![vec![1.0, 2.0], vec![3.0, 4.0, 5.0]],
+        };
+        let mut out = vec![0.0f32; 5];
+        // span cutting across the tensor boundary
+        p.copy_flat_range(1, 4, &mut out);
+        assert_eq!(out, vec![0.0, 2.0, 3.0, 4.0, 0.0]);
+        // whole-range copy equals flatten_into
+        let mut full = vec![0.0f32; 5];
+        p.copy_flat_range(0, 5, &mut full);
+        let mut flat = vec![0.0f32; 5];
+        p.flatten_into(&mut flat);
+        assert_eq!(full, flat);
+        // empty span is a no-op
+        let mut none = vec![7.0f32; 5];
+        p.copy_flat_range(2, 2, &mut none);
+        assert_eq!(none, vec![7.0; 5]);
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //!
 //! Layout (little-endian):
 //! ```text
-//! magic "TXCK" u32, version u32 = 2,
+//! magic "TXCK" u32, version u32 = 3,
 //! step u64, epoch u64, epoch_step u64,
 //! corpus u64, world u64, batch u64, window u64   (cursor geometry)
 //! n_tensors u32, then per tensor: len u64, f32[len]   (params)
@@ -49,7 +49,14 @@ use crate::runtime::HostParams;
 use crate::Result;
 
 const MAGIC: u32 = 0x5458_434B;
-const VERSION: u32 = 2;
+/// v2 added the resumable data cursor; v3 (identical layout) marks
+/// cursors measured against the remainder *carry-in* stream (PR 5:
+/// epochs after the first open with the previous epoch's undelivered
+/// tail). v2 files still load — their cursor only means something
+/// under carry-free geometry, which the trainer checks at resume.
+const VERSION: u32 = 3;
+/// Oldest version whose cursor this build can still interpret.
+const MIN_VERSION: u32 = 2;
 
 /// Transport tags for the sharded-checkpoint gather (outside the
 /// collectives' tag ranges; reuse across saves is FIFO-safe because
@@ -104,6 +111,12 @@ pub struct Checkpoint {
     pub params: HostParams,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+    /// On-disk format version the file was read from (see `VERSION`).
+    /// Params/moments are version-portable; the *data cursor* of a v2
+    /// file predates the remainder carry-in stream, so the trainer
+    /// refuses to resume it into an epoch whose stream the carry
+    /// shifted.
+    pub version: u32,
 }
 
 impl Checkpoint {
@@ -307,9 +320,10 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
         bail!("not a txgain checkpoint");
     }
     let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         bail!("unsupported checkpoint version {version} (this build \
-               reads v{VERSION}; v1 predates the resumable data cursor)");
+               reads v{MIN_VERSION}..v{VERSION}; v1 predates the \
+               resumable data cursor)");
     }
     let u = |a: usize| u64::from_le_bytes(h[a..a + 8].try_into().unwrap());
     let progress = TrainProgress {
@@ -329,7 +343,13 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     }
     let m = read_f32s(&mut r, &mut remaining)?;
     let v = read_f32s(&mut r, &mut remaining)?;
-    Ok(Checkpoint { progress, params: HostParams { tensors }, m, v })
+    Ok(Checkpoint {
+        progress,
+        params: HostParams { tensors },
+        m,
+        v,
+        version,
+    })
 }
 
 #[cfg(test)]
@@ -362,6 +382,31 @@ mod tests {
         assert_eq!(ck.params.tensors, params.tensors);
         assert_eq!(ck.m, m);
         assert_eq!(ck.v, v);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn v2_files_still_load_and_surface_their_version() {
+        // a checkpoint from the pre-carry-in build (identical layout,
+        // version field 2) must still load — the trainer decides
+        // whether its cursor is usable, not the parser
+        let path = std::env::temp_dir().join(format!(
+            "txgain-ckpt-v2-{}.bin", std::process::id()));
+        let params = HostParams { tensors: vec![vec![1.0; 4]] };
+        save(&path, TrainProgress::new(3, 1, 1), &params, &[0.1; 4],
+             &[0.2; 4]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+                   VERSION);
+        bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.version, 2);
+        assert_eq!(ck.step(), 3);
+        // v1 stays rejected
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
         std::fs::remove_file(&path).unwrap();
     }
 

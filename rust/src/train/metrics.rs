@@ -18,8 +18,22 @@ pub struct StepRecord {
     pub compute_secs: f64,
     /// Time blocked waiting on the loader.
     pub loader_wait_secs: f64,
-    /// Time in the gradient all-reduce.
+    /// Time in the gradient all-reduce as seen by the trainer thread.
+    /// With the blocking transports this is the whole collective; with
+    /// the comm engine it is the time actually spent blocked on comm
+    /// (launch backpressure + waits) — the hidden portion runs
+    /// concurrently with compute and never appears here.
     pub comm_secs: f64,
+    /// Measured wall-clock communication left exposed on the step's
+    /// critical path — the measured twin of the α-β model's
+    /// `comm-exposed(ms)` column (`SimResult::comm_exposed_secs`).
+    /// Today this always equals `comm_secs` (the trainer thread can
+    /// only observe blocked time, and everything it observes is
+    /// exposed); it is recorded separately because it is the *named*
+    /// column the modeled value is cross-checked against, and because
+    /// a future engine that also measures hidden channel time would
+    /// make `comm_secs` the larger of the two.
+    pub comm_exposed_secs: f64,
     /// f32 buffer bytes this rank handed to the transport this step
     /// (4 B/elem — the host-side traffic).
     pub comm_buffer_bytes: u64,
@@ -90,6 +104,18 @@ impl RunReport {
         self.records.iter().map(|r| r.comm_wire_bytes).sum()
     }
 
+    /// Mean measured exposed-comm time per step, milliseconds — the
+    /// measured value the sim's per-step `comm-exposed(ms)` column is
+    /// cross-checked against.
+    pub fn comm_exposed_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.comm_exposed_secs).sum::<f64>()
+            * 1e3
+            / self.records.len() as f64
+    }
+
     /// Total bytes the streaming loader read from disk — the measured
     /// side of the staging cost model's per-epoch IO estimate.
     pub fn loader_bytes_read(&self) -> u64 {
@@ -109,8 +135,9 @@ impl RunReport {
     pub fn to_csv(&self) -> CsvWriter {
         let mut w = CsvWriter::new(vec![
             "step", "loss", "lr", "step_secs", "compute_secs",
-            "loader_wait_secs", "comm_secs", "comm_buffer_bytes",
-            "comm_wire_bytes", "loader_bytes", "cache_hit_rate",
+            "loader_wait_secs", "comm_secs", "comm_exposed_ms",
+            "comm_buffer_bytes", "comm_wire_bytes", "loader_bytes",
+            "cache_hit_rate",
         ]);
         for r in &self.records {
             w.row(&[
@@ -121,6 +148,7 @@ impl RunReport {
                 format!("{:.6}", r.compute_secs),
                 format!("{:.6}", r.loader_wait_secs),
                 format!("{:.6}", r.comm_secs),
+                format!("{:.3}", r.comm_exposed_secs * 1e3),
                 r.comm_buffer_bytes.to_string(),
                 r.comm_wire_bytes.to_string(),
                 r.loader_bytes.to_string(),
@@ -150,6 +178,7 @@ impl RunReport {
              json::num(self.comm_buffer_bytes() as f64)),
             ("comm_wire_bytes",
              json::num(self.comm_wire_bytes() as f64)),
+            ("comm_exposed_ms", json::num(self.comm_exposed_ms())),
             ("loader_bytes_read",
              json::num(self.loader_bytes_read() as f64)),
             ("cache_hit_rate", json::num(self.cache_hit_rate())),
@@ -183,6 +212,7 @@ mod tests {
                     compute_secs: 0.08,
                     loader_wait_secs: 0.01,
                     comm_secs: 0.01,
+                    comm_exposed_secs: 0.004,
                     comm_buffer_bytes: 4000,
                     comm_wire_bytes: 2000,
                     loader_bytes: 1000,
@@ -217,9 +247,13 @@ mod tests {
         let s = csv.to_string();
         assert!(s.starts_with("step,loss,lr,step_secs,compute_secs,\
                                loader_wait_secs,comm_secs,\
-                               comm_buffer_bytes,comm_wire_bytes,\
-                               loader_bytes,cache_hit_rate"));
+                               comm_exposed_ms,comm_buffer_bytes,\
+                               comm_wire_bytes,loader_bytes,\
+                               cache_hit_rate"));
         assert!(s.contains(",4000,2000,1000,0.7500"));
+        // exposed comm rides in milliseconds next to the raw seconds
+        assert!(s.contains(",4.000,4000,"), "missing comm_exposed_ms: \
+                                             {s}");
     }
 
     #[test]
@@ -229,6 +263,16 @@ mod tests {
         assert_eq!(r.comm_wire_bytes(), 20_000);
         assert_eq!(r.loader_bytes_read(), 10_000);
         assert!((r.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((r.comm_exposed_ms() - 4.0).abs() < 1e-9);
+        assert_eq!(RunReport::default().comm_exposed_ms(), 0.0);
+    }
+
+    #[test]
+    fn comm_exposed_appears_in_json() {
+        let v = crate::util::json::Value::parse(
+            &report().to_json().to_pretty()).unwrap();
+        let ms = v.req("comm_exposed_ms").unwrap().as_f64().unwrap();
+        assert!((ms - 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -81,10 +81,33 @@ impl AdamW {
     /// reduced gradients agree bit-for-bit.
     pub fn step(&mut self, params: &mut HostParams, meta: &VariantMeta,
                 flat_grads: &[f32], lr: f64) {
+        self.tick();
+        self.step_range(params, meta, flat_grads, lr,
+                        (0, flat_grads.len()));
+    }
+
+    /// Advance the optimizer-step counter (bias correction) without
+    /// touching parameters. The comm engine's overlapped path calls
+    /// this once per training step, then applies the update
+    /// bucket-by-bucket with [`AdamW::step_range`] as each bucket's
+    /// collective completes — `tick` + `step_range` over any partition
+    /// of the flat vector is bit-identical to one [`AdamW::step`]
+    /// (the update is elementwise; the moment cursor is indexed by
+    /// range, not by call order).
+    pub fn tick(&mut self) {
+        self.step += 1;
+    }
+
+    /// Apply the current step's update to owned elements inside the
+    /// half-open flat `span` only, using the step count set by
+    /// [`AdamW::tick`]. Spans may arrive in any order; each element
+    /// must be covered exactly once per tick.
+    pub fn step_range(&mut self, params: &mut HostParams,
+                      meta: &VariantMeta, flat_grads: &[f32], lr: f64,
+                      span: (usize, usize)) {
         assert!(self.ranges.last().map_or(0, |r| r.1) <= flat_grads.len(),
                 "owned ranges exceed gradient length {}",
                 flat_grads.len());
-        self.step += 1;
         let b1 = self.beta1 as f32;
         let b2 = self.beta2 as f32;
         let bc1 = 1.0 - (self.beta1 as f32).powi(self.step as i32);
@@ -95,27 +118,38 @@ impl AdamW {
 
         let mut moff = 0usize; // cursor into m/v, advances per range
         for &(ra, rb) in &self.ranges {
-            for (t, spec) in params.tensors.iter_mut().zip(&meta.params)
-            {
-                // intersect the owned range with this tensor's span
-                let a = ra.max(spec.offset);
-                let b = rb.min(spec.offset + spec.size);
-                if a >= b {
-                    continue;
-                }
-                // no decay on 1-D tensors (biases, layernorm, out_bias)
-                let decay = if spec.shape.len() > 1 { wd } else { 0.0 };
-                let g = &flat_grads[a..b];
-                let p = &mut t[a - spec.offset..b - spec.offset];
-                let m = &mut self.m[moff + a - ra..moff + b - ra];
-                let v = &mut self.v[moff + a - ra..moff + b - ra];
-                for i in 0..g.len() {
-                    m[i] = b1 * m[i] + (1.0 - b1) * g[i];
-                    v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
-                    let mhat = m[i] / bc1;
-                    let vhat = v[i] / bc2;
-                    p[i] -=
-                        lr * (mhat / (vhat.sqrt() + eps) + decay * p[i]);
+            // clip the owned range to the requested span; the moment
+            // cursor still advances by the whole range, so partial
+            // steps index m/v exactly where the full step would
+            let ca = ra.max(span.0);
+            let cb = rb.min(span.1);
+            if ca < cb {
+                for (t, spec) in
+                    params.tensors.iter_mut().zip(&meta.params)
+                {
+                    // intersect the clipped range with this tensor
+                    let a = ca.max(spec.offset);
+                    let b = cb.min(spec.offset + spec.size);
+                    if a >= b {
+                        continue;
+                    }
+                    // no decay on 1-D tensors (biases, layernorm,
+                    // out_bias)
+                    let decay =
+                        if spec.shape.len() > 1 { wd } else { 0.0 };
+                    let g = &flat_grads[a..b];
+                    let p = &mut t[a - spec.offset..b - spec.offset];
+                    let m = &mut self.m[moff + a - ra..moff + b - ra];
+                    let v = &mut self.v[moff + a - ra..moff + b - ra];
+                    for i in 0..g.len() {
+                        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                        let mhat = m[i] / bc1;
+                        let vhat = v[i] / bc2;
+                        p[i] -= lr
+                            * (mhat / (vhat.sqrt() + eps)
+                               + decay * p[i]);
+                    }
                 }
             }
             moff += rb - ra;
@@ -287,6 +321,51 @@ mod tests {
         assert_eq!(opts[0].owned_len(), 3);
         assert_eq!(opts[1].owned_len(), 2);
         assert_eq!(opts[2].owned_len(), 1);
+    }
+
+    /// tick + step_range over a partition of the flat vector — in any
+    /// span order — is bit-identical to one full step. This is the
+    /// identity the comm engine's per-bucket overlapped optimizer
+    /// rests on.
+    #[test]
+    fn tick_plus_ranged_steps_equal_one_full_step() {
+        let meta = toy_meta();
+        let g = [0.5f32, -0.25, 0.125, -0.5, 0.75, -1.0];
+        let lr = 0.01;
+
+        let mut p_full = toy_params();
+        let mut full = AdamW::new(&cfg(), 6);
+        let mut p_part = toy_params();
+        let mut part = AdamW::new(&cfg(), 6);
+
+        for step in 0..3 {
+            let gs: Vec<f32> =
+                g.iter().map(|x| x * (step + 1) as f32).collect();
+            full.step(&mut p_full, &meta, &gs, lr);
+            part.tick();
+            // buckets complete tail-first (reverse span order), like
+            // the engine's launch schedule
+            for span in [(4usize, 6usize), (2, 4), (0, 2)] {
+                part.step_range(&mut p_part, &meta, &gs, lr, span);
+            }
+        }
+        assert_eq!(full.step_count(), part.step_count());
+        for (a, b) in p_full.tensors.iter().zip(&p_part.tensors) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // and through a *sharded* optimizer, clipping to bucket spans
+        // only steps the shard ∩ bucket intersection
+        let mut p_a = toy_params();
+        let mut sh_full = AdamW::sharded(&cfg(), vec![(1, 5)]);
+        let mut p_b = toy_params();
+        let mut sh_part = AdamW::sharded(&cfg(), vec![(1, 5)]);
+        sh_full.step(&mut p_a, &meta, &g, lr);
+        sh_part.tick();
+        sh_part.step_range(&mut p_b, &meta, &g, lr, (3, 6));
+        sh_part.step_range(&mut p_b, &meta, &g, lr, (0, 3));
+        assert_eq!(p_a.tensors, p_b.tensors);
     }
 
     /// A sharded step must not touch parameters outside its ranges.

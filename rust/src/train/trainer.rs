@@ -31,11 +31,13 @@ use anyhow::{ensure, Context};
 
 use crate::collectives::{allreduce, bucketed_all_gather,
                          bucketed_allreduce, bucketed_reduce_scatter,
-                         Algorithm, Backend, BucketPlan, Transport};
+                         Algorithm, AnyTransport, Backend, BucketPlan,
+                         CollectiveKind, CommEngine, PendingBucket,
+                         Transport, TransportStats};
 use crate::config::{Config, ExecMode};
 use crate::data::{BlockCache, DatasetIndex, LoaderPool, Masker,
                   WindowedPlan};
-use crate::runtime::{Engine, HostParams, Manifest};
+use crate::runtime::{Engine, HostParams, Manifest, VariantMeta};
 use crate::Result;
 
 use super::checkpoint::{extract_shard, Checkpoint, TrainProgress};
@@ -85,6 +87,225 @@ struct RankOutcome {
     rank: usize,
     records: Vec<StepRecord>,
     param_checksum: u64,
+}
+
+/// How a rank drives its collectives: block in the trainer thread
+/// (`training.comm_engine: false`), or hand buckets to the per-rank
+/// async [`CommEngine`] and only block at the optimizer boundary.
+/// Numerics are identical either way — the engine runs the same hop
+/// schedules on copies — so the knob is purely a performance choice.
+enum Driver {
+    Blocking(AnyTransport),
+    Engine(CommEngine<AnyTransport>),
+}
+
+impl Driver {
+    fn stats(&self) -> TransportStats {
+        match self {
+            Driver::Blocking(c) => c.stats(),
+            Driver::Engine(e) => e.stats(),
+        }
+    }
+}
+
+/// What one step's gradient sync + optimizer update produced.
+struct CommOutcome {
+    /// World-mean loss.
+    loss: f32,
+    /// Comm time on the trainer thread (all of it when blocking; only
+    /// the blocked portion under the engine).
+    comm_secs: f64,
+    /// Measured wall-clock exposed comm — `comm_secs`' twin, recorded
+    /// separately so the column exists in both modes.
+    comm_exposed_secs: f64,
+}
+
+/// Gradient sync + optimizer step over the blocking transports: the
+/// collectives run inline, so every comm second is exposed.
+#[allow(clippy::too_many_arguments)]
+fn sync_and_step_blocking<T: Transport>(
+    comm: &mut T, algo: Algorithm, bucket_plan: Option<&BucketPlan>,
+    zero: bool, grads: &mut [f32], raw_loss: f32, inv_world: f32,
+    opt: &mut AdamW, params: &mut HostParams, meta: &VariantMeta,
+    flat_params: &mut [f32], lr: f64) -> Result<CommOutcome> {
+    // average gradients + loss across the world; with overlap on, one
+    // collective per bucket in the order backward produced them (the
+    // launch point a fused backward would interleave with its
+    // remaining layers). ZeRO-1 reduce-scatters instead: each rank
+    // only needs the summed gradient for the shard it steps — half
+    // the wire bytes, the other half is spent all-gathering updated
+    // params below.
+    let t_comm = Instant::now();
+    for g in grads.iter_mut() {
+        *g *= inv_world;
+    }
+    match (bucket_plan, zero) {
+        (Some(buckets), true) => {
+            bucketed_reduce_scatter(algo, comm, grads, buckets)?
+        }
+        (Some(buckets), false) => {
+            bucketed_allreduce(algo, comm, grads, buckets)?
+        }
+        (None, _) => allreduce(algo, comm, grads)?,
+    }
+    let mut loss_buf = [raw_loss * inv_world];
+    allreduce(algo, comm, &mut loss_buf)?;
+    let mut comm_secs = t_comm.elapsed().as_secs_f64();
+
+    opt.step(params, meta, grads, lr);
+
+    // ZeRO-1: only the owned shard moved; all-gather every rank's
+    // freshly stepped shard so replicas re-converge before the next
+    // forward (the DDP invariant, restored by communication instead
+    // of redundant math)
+    if let (Some(buckets), true) = (bucket_plan, zero) {
+        let t_ag = Instant::now();
+        params.flatten_into(flat_params);
+        bucketed_all_gather(algo, comm, flat_params, buckets)?;
+        params.unflatten_from(flat_params);
+        comm_secs += t_ag.elapsed().as_secs_f64();
+    }
+    Ok(CommOutcome {
+        loss: loss_buf[0],
+        comm_secs,
+        comm_exposed_secs: comm_secs,
+    })
+}
+
+/// Gradient sync + optimizer step through the async comm engine: all
+/// buckets launch up front (the engine pipelines them while we work),
+/// the optimizer steps each bucket's span the moment its collective
+/// lands — so the step of bucket `k` overlaps the in-flight sync of
+/// buckets `k+1..`, and under ZeRO-1 the post-step all-gather of
+/// bucket `k` overlaps the shard step of bucket `k+1`. Only the
+/// launch/wait time actually blocked on comm is exposed — the
+/// measured quantity `comm_exposed_ms` reports.
+#[allow(clippy::too_many_arguments)]
+fn sync_and_step_engine(
+    eng: &mut CommEngine<AnyTransport>, algo: Algorithm,
+    bucket_plan: Option<&BucketPlan>, zero: bool, grads: &mut [f32],
+    raw_loss: f32, inv_world: f32, opt: &mut AdamW,
+    params: &mut HostParams, meta: &VariantMeta,
+    flat_params: &mut [f32], lr: f64, rank: usize, world: usize)
+    -> Result<CommOutcome> {
+    let mut exposed = 0.0f64;
+    for g in grads.iter_mut() {
+        *g *= inv_world;
+    }
+    let loss_scaled = raw_loss * inv_world;
+
+    let Some(buckets) = bucket_plan else {
+        // monolithic sync: a single engine op (the loss op rides
+        // concurrently with it — the only overlap available without
+        // buckets), then a full optimizer step
+        let mut buf = eng.take_buf();
+        buf.extend_from_slice(grads);
+        let t = Instant::now();
+        let grad_p =
+            eng.launch_bucket(algo, CollectiveKind::Allreduce, buf)?;
+        let loss_p = eng.launch_bucket(algo, CollectiveKind::Allreduce,
+                                       vec![loss_scaled])?;
+        let got = eng.wait(grad_p)?;
+        grads.copy_from_slice(&got);
+        eng.recycle(got);
+        let got = eng.wait(loss_p)?;
+        exposed += t.elapsed().as_secs_f64();
+        let loss = got[0];
+        eng.recycle(got);
+        opt.step(params, meta, grads, lr);
+        return Ok(CommOutcome {
+            loss,
+            comm_secs: exposed,
+            comm_exposed_secs: exposed,
+        });
+    };
+
+    // launch every bucket in ready (reverse-layer) order — the
+    // schedule `BucketManager` would hand out if a fused backward
+    // drove readiness layer-by-layer; with a monolithic executable
+    // all buckets are ready at once, so the plan's ready order IS the
+    // launch order and the manager's bookkeeping would be ceremony
+    let kind = if zero {
+        CollectiveKind::ReduceScatter
+    } else {
+        CollectiveKind::Allreduce
+    };
+    let mut pend: Vec<(usize, PendingBucket)> =
+        Vec::with_capacity(buckets.n_buckets());
+    for i in buckets.ready_order() {
+        let (a, b) = buckets.span(i);
+        let mut buf = eng.take_buf();
+        buf.extend_from_slice(&grads[a..b]);
+        let t = Instant::now();
+        let p = eng.launch_bucket(algo, kind, buf)?;
+        exposed += t.elapsed().as_secs_f64();
+        pend.push((i, p));
+    }
+    let t = Instant::now();
+    let loss_p = eng.launch_bucket(algo, CollectiveKind::Allreduce,
+                                   vec![loss_scaled])?;
+    exposed += t.elapsed().as_secs_f64();
+
+    opt.tick();
+    if zero {
+        // RS(k) wait → shard step(k) → AG(k) launch: the all-gather
+        // of bucket k is in flight while bucket k+1's shard steps,
+        // and the RS of buckets k+1.. progresses under everything
+        let mut ag_pend: Vec<(usize, PendingBucket)> =
+            Vec::with_capacity(pend.len());
+        for (i, p) in pend {
+            let (a, b) = buckets.span(i);
+            let t = Instant::now();
+            let got = eng.wait(p)?;
+            exposed += t.elapsed().as_secs_f64();
+            grads[a..b].copy_from_slice(&got);
+            eng.recycle(got);
+            opt.step_range(params, meta, grads, lr, (a, b));
+            // refresh only this bucket's freshly stepped shard; the
+            // rest of the bucket is other ranks' authority and gets
+            // overwritten by the gather
+            let (sa, sb) = buckets.shard_span(i, rank, world);
+            params.copy_flat_range(sa, sb, flat_params);
+            let mut agbuf = eng.take_buf();
+            agbuf.extend_from_slice(&flat_params[a..b]);
+            let t = Instant::now();
+            let p = eng.launch_bucket(algo, CollectiveKind::AllGather,
+                                      agbuf)?;
+            exposed += t.elapsed().as_secs_f64();
+            ag_pend.push((i, p));
+        }
+        for (i, p) in ag_pend {
+            let (a, b) = buckets.span(i);
+            let t = Instant::now();
+            let got = eng.wait(p)?;
+            exposed += t.elapsed().as_secs_f64();
+            flat_params[a..b].copy_from_slice(&got);
+            eng.recycle(got);
+        }
+        params.unflatten_from(flat_params);
+    } else {
+        // wait in launch order; the optimizer's update for bucket k
+        // runs while buckets k+1.. are still on the wire
+        for (i, p) in pend {
+            let (a, b) = buckets.span(i);
+            let t = Instant::now();
+            let got = eng.wait(p)?;
+            exposed += t.elapsed().as_secs_f64();
+            grads[a..b].copy_from_slice(&got);
+            eng.recycle(got);
+            opt.step_range(params, meta, grads, lr, (a, b));
+        }
+    }
+    let t = Instant::now();
+    let got = eng.wait(loss_p)?;
+    exposed += t.elapsed().as_secs_f64();
+    let loss = got[0];
+    eng.recycle(got);
+    Ok(CommOutcome {
+        loss,
+        comm_secs: exposed,
+        comm_exposed_secs: exposed,
+    })
 }
 
 /// Order-sensitive FNV over param bits: replicas must agree exactly.
@@ -152,7 +373,8 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     // requires overlap_comm with zero_stage 1).
     let zero = cfg.training.zero_stage == 1;
     let bucket_plan = (cfg.training.overlap_comm || zero).then(|| {
-        BucketPlan::new(meta.grad_len, cfg.training.bucket_mb)
+        BucketPlan::new_with_first(meta.grad_len, cfg.training.bucket_mb,
+                                   cfg.training.first_bucket_mb)
     });
     let masker = Masker::new(cfg.data.mask_prob, cfg.model.vocab);
 
@@ -179,9 +401,14 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
             // it was measured in: under a different corpus, world,
             // batch or shuffle window the same position names
             // different samples, silently re-training some and
-            // skipping others — refuse instead. (The seed is owned by
-            // the config; resuming with a different seed is the same
-            // class of user error as any other config edit.)
+            // skipping others — refuse instead. The remainder
+            // carry-in is covered by the same four fields: the carry
+            // into any epoch is `(epoch · per) % batch` with
+            // `per = ceil(corpus/world)`, so pinning (corpus, world,
+            // batch) pins every epoch's carried prefix too. (The seed
+            // is owned by the config; resuming with a different seed
+            // is the same class of user error as any other config
+            // edit.)
             let saved = (ck.progress.corpus, ck.progress.world,
                          ck.progress.batch, ck.progress.window);
             let here = (index.len() as u64, world as u64, batch as u64,
@@ -192,6 +419,27 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                      this run is {here:?} — params/moments are \
                      portable, the mid-epoch position is not; resume \
                      with the saving run's config");
+            // cursors from pre-carry (v2) checkpoints were measured
+            // against a stream WITHOUT the remainder roll-in: if the
+            // saved epoch's stream now starts with a carried prefix,
+            // the same epoch_step names different samples (silent
+            // re-train/skip) — refuse, exactly like any other
+            // geometry change. Carry-free geometry is unaffected and
+            // resumes fine.
+            if ck.version < 3 {
+                let per = index.len().div_ceil(world);
+                let carry = ((ck.progress.epoch as u128
+                              * per as u128)
+                    % batch as u128) as usize;
+                ensure!(carry == 0,
+                        "checkpoint (format v{}) predates the \
+                         remainder carry-in stream, and epoch {} now \
+                         opens with {carry} carried samples — its \
+                         mid-epoch cursor would silently re-train and \
+                         skip samples; restart from step 0 or resume \
+                         with the saving build",
+                        ck.version, ck.progress.epoch);
+            }
             Ok(Arc::new(ck))
         })
         .transpose()?;
@@ -201,7 +449,7 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
         let handles: Vec<_> = comms
             .into_iter()
             .enumerate()
-            .map(|(rank, mut comm)| {
+            .map(|(rank, comm)| {
                 let index = index.clone();
                 let shard_counts = shard_counts.clone();
                 let masker = masker.clone();
@@ -213,6 +461,14 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                 scope.spawn(move || -> Result<RankOutcome> {
                     let engine = Engine::load(&opts.artifacts_dir, variant)
                         .with_context(|| format!("rank {rank} engine"))?;
+                    // comm driver: hand the transport to the async
+                    // comm engine (default) or keep it inline for the
+                    // blocking reference path
+                    let mut driver = if cfg.training.comm_engine {
+                        Driver::Engine(CommEngine::new(comm))
+                    } else {
+                        Driver::Blocking(comm)
+                    };
                     let mut params = HostParams::init(&meta, cfg.seed);
                     // ZeRO-1: this rank's AdamW owns (and sizes m/v
                     // to) only its shard of every bucket; ZeRO-0 owns
@@ -264,13 +520,27 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                         let plan = Arc::new(WindowedPlan::build(
                             &shard_counts, world, epoch, cfg.seed,
                             cfg.data.shuffle_window)?);
-                        let mut loader = LoaderPool::spawn_streaming(
-                            cache.clone(), plan, rank, batch,
-                            masker.clone(), cfg.seed,
-                            cfg.data.loaders_per_gpu,
-                            cfg.data.prefetch_batches, opts.io_delay_us,
-                            epoch_start_step,
-                        )?;
+                        // remainder roll-in (data-plane item (c)):
+                        // samples the previous epoch left undelivered
+                        // lead this epoch's stream instead of being
+                        // dropped. The carry is a closed form of
+                        // (epoch, per, batch), so resuming into any
+                        // epoch rebuilds exactly the right prefix.
+                        let carry_from = if plan.carry_in(batch) > 0 {
+                            Some(Arc::new(WindowedPlan::build(
+                                &shard_counts, world, epoch - 1,
+                                cfg.seed, cfg.data.shuffle_window)?))
+                        } else {
+                            None
+                        };
+                        let mut loader =
+                            LoaderPool::spawn_streaming_carry(
+                                cache.clone(), plan, carry_from, rank,
+                                batch, masker.clone(), cfg.seed,
+                                cfg.data.loaders_per_gpu,
+                                cfg.data.prefetch_batches,
+                                opts.io_delay_us, epoch_start_step,
+                            )?;
                         epoch_start_step = 0; // only the resumed epoch
                         // baselines are zero BY CONSTRUCTION (the
                         // pool's stats are fresh); snapshotting here
@@ -318,67 +588,42 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                             let compute_secs =
                                 t_exec.elapsed().as_secs_f64();
 
-                            // average gradients + loss across the world;
-                            // with overlap on, one collective per bucket
-                            // in the order backward produced them (the
-                            // launch point a fused backward would
-                            // interleave with its remaining layers).
-                            // ZeRO-1 reduce-scatters instead: each rank
-                            // only needs the summed gradient for the
-                            // shard it steps — half the wire bytes, the
-                            // other half is spent all-gathering updated
-                            // params below.
-                            let t_comm = Instant::now();
-                            let stats_before = comm.stats();
-                            for g in out.grads.iter_mut() {
-                                *g *= inv_world;
-                            }
-                            match (&bucket_plan, zero) {
-                                (Some(buckets), true) => {
-                                    bucketed_reduce_scatter(
-                                        algo, &mut comm, &mut out.grads,
-                                        buckets)?
-                                }
-                                (Some(buckets), false) => {
-                                    bucketed_allreduce(
-                                        algo, &mut comm, &mut out.grads,
-                                        buckets)?
-                                }
-                                (None, _) => allreduce(
-                                    algo, &mut comm, &mut out.grads)?,
-                            }
-                            let mut loss_buf = [out.loss * inv_world];
-                            allreduce(algo, &mut comm, &mut loss_buf)?;
-                            let mut comm_secs =
-                                t_comm.elapsed().as_secs_f64();
-
+                            // gradient sync + optimizer update: the
+                            // blocking path runs the collectives
+                            // inline; the engine path launches buckets
+                            // onto the progress thread and interleaves
+                            // the per-bucket optimizer with in-flight
+                            // comm — same math, measured overlap
+                            let stats_before = driver.stats();
                             let lr = schedule.lr(step);
-                            opt.step(&mut params, &meta, &out.grads, lr);
-
-                            // ZeRO-1: only the owned shard moved; all-
-                            // gather every rank's freshly stepped shard
-                            // so replicas re-converge before the next
-                            // forward (the DDP invariant, restored by
-                            // communication instead of redundant math)
-                            if let (Some(buckets), true) =
-                                (&bucket_plan, zero)
-                            {
-                                let t_ag = Instant::now();
-                                params.flatten_into(&mut flat_params);
-                                bucketed_all_gather(
-                                    algo, &mut comm, &mut flat_params,
-                                    buckets)?;
-                                params.unflatten_from(&flat_params);
-                                comm_secs +=
-                                    t_ag.elapsed().as_secs_f64();
-                            }
+                            let outcome = match &mut driver {
+                                Driver::Blocking(comm) => {
+                                    sync_and_step_blocking(
+                                        comm, algo, bucket_plan.as_ref(),
+                                        zero, &mut out.grads, out.loss,
+                                        inv_world, &mut opt, &mut params,
+                                        &meta, &mut flat_params, lr)?
+                                }
+                                Driver::Engine(eng) => {
+                                    sync_and_step_engine(
+                                        eng, algo, bucket_plan.as_ref(),
+                                        zero, &mut out.grads, out.loss,
+                                        inv_world, &mut opt, &mut params,
+                                        &meta, &mut flat_params, lr,
+                                        rank, world)?
+                                }
+                            };
 
                             // the step's measured traffic: both the
                             // f32 buffer bytes the host moved and the
                             // modeled bf16 wire bytes the α-β model
-                            // prices (see TransportStats)
+                            // prices (see TransportStats). The engine
+                            // refreshes its snapshot at every op
+                            // completion, and everything launched this
+                            // step has been waited — the delta is
+                            // exact in both modes.
                             let step_traffic =
-                                comm.stats().since(&stats_before);
+                                driver.stats().since(&stats_before);
 
                             if rank == 0 {
                                 if cfg.training.log_every > 0
@@ -387,14 +632,14 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                     println!(
                                         "[train] step {step:>5} loss \
                                          {:.4} lr {:.2e} ({:.2}s/step)",
-                                        loss_buf[0],
+                                        outcome.loss,
                                         lr,
                                         t_step.elapsed().as_secs_f64()
                                     );
                                 }
                                 records.push(StepRecord {
                                     step,
-                                    loss: loss_buf[0],
+                                    loss: outcome.loss,
                                     lr,
                                     step_secs: t_step
                                         .elapsed()
@@ -402,7 +647,9 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                         + loader_wait,
                                     compute_secs,
                                     loader_wait_secs: loader_wait,
-                                    comm_secs,
+                                    comm_secs: outcome.comm_secs,
+                                    comm_exposed_secs: outcome
+                                        .comm_exposed_secs,
                                     comm_buffer_bytes: step_traffic
                                         .buffer_bytes_sent,
                                     comm_wire_bytes: step_traffic
@@ -447,10 +694,31 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                     let (_, m, v) = opt.state();
                                     match (&bucket_plan, zero) {
                                         (Some(plan), true) => {
-                                            super::checkpoint::save_sharded(
-                                                &path, &mut comm, plan,
-                                                progress, &params, m, v,
-                                            )?
+                                            // the shard gather is a
+                                            // blocking collective: the
+                                            // engine lends the wire
+                                            // back for its duration
+                                            match &mut driver {
+                                                Driver::Blocking(comm) => {
+                                                    super::checkpoint::save_sharded(
+                                                        &path, comm, plan,
+                                                        progress, &params,
+                                                        m, v,
+                                                    )?
+                                                }
+                                                Driver::Engine(eng) => {
+                                                    let mut t =
+                                                        eng.checkout()?;
+                                                    let saved =
+                                                        super::checkpoint::save_sharded(
+                                                            &path, &mut t,
+                                                            plan, progress,
+                                                            &params, m, v,
+                                                        );
+                                                    eng.checkin(t);
+                                                    saved?
+                                                }
+                                            }
                                         }
                                         _ if rank == 0 => {
                                             super::checkpoint::save(

@@ -228,6 +228,93 @@ fn shard_truncated_after_indexing_kills_the_loader_cleanly() {
 }
 
 #[test]
+fn carried_remainder_leads_the_next_epoch_bit_for_bit() {
+    // remainder roll-in (data-plane item (c)): the tail samples epoch
+    // e leaves undelivered must open epoch e+1's stream — in epoch
+    // e's own order — and nothing may be dropped or duplicated across
+    // the pair. Geometry: 75/rank at batch 10 → carry walks
+    // 0,5,0,5,… per epoch.
+    let dir = workdir("carry");
+    let (paths, samples) = write_corpus(&dir, &[80, 70]);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let dataset = Arc::new(samples);
+    let masker = Masker::new(0.15, 512);
+    let batch = 10usize;
+    let world = 2usize;
+    let cache = Arc::new(BlockCache::new(index.clone(), 64.0).unwrap());
+    let shard_counts = index.shard_counts();
+    let build = |epoch: u64| -> Arc<WindowedPlan> {
+        Arc::new(WindowedPlan::build(&shard_counts, world, epoch, 7, 16)
+            .unwrap())
+    };
+
+    for rank in 0..world {
+        let p0 = build(0);
+        let p1 = build(1);
+        assert_eq!(p0.carry_in(batch), 0);
+        assert_eq!(p1.carry_in(batch), 5, "75 % 10 carried");
+        assert_eq!(p1.steps_with_carry(batch), 8, "5 + 75 over 10");
+
+        // epoch 0's last 5 sample ids (undelivered at batch 10)
+        let order0 = p0.materialize_rank(rank);
+        let tail: Vec<u32> = order0[order0.len() - 5..].to_vec();
+        // epoch 1 with carry: first batch = tail ++ first 5 of its own
+        let order1 = p1.materialize_rank(rank);
+        let mut want_first: Vec<u32> = tail.clone();
+        want_first.extend_from_slice(&order1[..5]);
+
+        let mut pool = LoaderPool::spawn_streaming_carry(
+            cache.clone(), p1.clone(), Some(p0.clone()), rank, batch,
+            masker.clone(), 7, 3, 2, 0, 0)
+            .unwrap();
+        assert_eq!(pool.total_steps(), 8);
+        let got = drain(&mut pool);
+        // worker-count independence of the carried stream
+        let mut pool1 = LoaderPool::spawn_streaming_carry(
+            cache.clone(), p1.clone(), Some(p0.clone()), rank, batch,
+            masker.clone(), 7, 1, 2, 0, 0)
+            .unwrap();
+        let got1 = drain(&mut pool1);
+        assert_batches_eq(&got, &got1, &format!("rank={rank} workers"));
+
+        // mid-epoch resume through a carried epoch
+        let mut resumed = LoaderPool::spawn_streaming_carry(
+            cache.clone(), p1.clone(), Some(p0.clone()), rank, batch,
+            masker.clone(), 7, 2, 2, 0, 3)
+            .unwrap();
+        let tail_batches = drain(&mut resumed);
+        assert_batches_eq(&got[3..], &tail_batches,
+                          &format!("rank={rank} resume"));
+
+        // the carried prefix really is epoch 0's tail: feed the
+        // in-memory reference pool exactly those ids under epoch 1's
+        // masking keys and compare the first carried batch
+        let mut reference = LoaderPool::spawn(
+            dataset.clone(), SEQ, &want_first, batch, masker.clone(), 7,
+            p1.epoch, 1, 2, 0)
+            .unwrap();
+        let want = drain(&mut reference);
+        assert_batches_eq(&want, &got[..1],
+                          &format!("rank={rank} carried prefix"));
+
+        // leftover accounting: this epoch leaves (5 + 75) % 10 = 0
+        use std::sync::atomic::Ordering;
+        assert_eq!(
+            pool.stats.dropped_remainder.load(Ordering::Relaxed), 0);
+    }
+
+    // mismatched carry geometry is refused loudly
+    let p0 = build(0);
+    let p2 = build(2);
+    let err = LoaderPool::spawn_streaming_carry(
+        cache.clone(), p2, Some(p0), 0, batch, masker, 7, 1, 2, 0, 0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("preceding epoch"), "unhelpful: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn epochs_shuffle_differently_but_reproducibly() {
     let dir = workdir("epochs");
     let (paths, _) = write_corpus(&dir, &[64, 64]);

@@ -150,6 +150,87 @@ fn every_transport_backend_trains_bit_identically() {
 }
 
 #[test]
+fn comm_engine_matches_blocking_trajectory_exactly() {
+    // the tentpole numerics guarantee: driving the bucketed
+    // collectives through the async comm engine changes WHEN bytes
+    // move, never WHAT they compute — loss bits and wire bytes must
+    // equal the blocking path's on every backend, replicated and
+    // ZeRO-1 (quickstart runs stage 1 with an uneven first bucket)
+    let run_with = |engine: bool, transport: &str, zero: usize|
+        -> Vec<(u32, u64, u64)> {
+        let dir = workdir(&format!("eng-{engine}-{transport}-{zero}"));
+        let mut cfg = tiny_cfg(5);
+        cfg.training.comm_engine = engine;
+        cfg.training.transport = transport.into();
+        cfg.training.zero_stage = zero;
+        let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+        let fp = out.report.records.iter()
+            .map(|r| (r.loss.to_bits(), r.comm_buffer_bytes,
+                      r.comm_wire_bytes))
+            .collect();
+        std::fs::remove_dir_all(&dir).unwrap();
+        fp
+    };
+    for zero in [0usize, 1] {
+        for t in ["channel", "shm", "tcp"] {
+            assert_eq!(run_with(true, t, zero),
+                       run_with(false, t, zero),
+                       "engine changed the trajectory or traffic \
+                        (transport {t}, zero {zero})");
+        }
+    }
+}
+
+#[test]
+fn comm_exposed_ms_is_recorded_and_bounded() {
+    // the measured twin of the sim's comm-exposed column: present in
+    // steps.csv/report.json, and never larger than the comm time the
+    // trainer thread saw
+    let dir = workdir("exposed");
+    let cfg = tiny_cfg(4);
+    let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+    for r in &out.report.records {
+        assert!(r.comm_exposed_secs.is_finite()
+                    && r.comm_exposed_secs >= 0.0);
+        assert!(r.comm_exposed_secs <= r.comm_secs + 1e-9,
+                "exposed {} > comm {}", r.comm_exposed_secs,
+                r.comm_secs);
+    }
+    let csv = std::fs::read_to_string(dir.join("steps.csv")).unwrap();
+    assert!(csv.lines().next().unwrap().contains("comm_exposed_ms"),
+            "missing comm_exposed_ms column");
+    let json = std::fs::read_to_string(dir.join("report.json")).unwrap();
+    let v = txgain::util::json::Value::parse(&json).unwrap();
+    assert!(v.req("comm_exposed_ms").unwrap().as_f64().unwrap() >= 0.0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn remainder_rolls_into_the_next_epoch() {
+    // data-plane item (c): with a corpus that leaves a per-epoch
+    // remainder (33/rank at batch 4 → carry walks 0,1,2,3,…), the
+    // carried samples extend later epochs instead of vanishing — the
+    // run sees more distinct steps per wall-epoch and still trains
+    // deterministically
+    let dir = workdir("carryrun");
+    let mut cfg = tiny_cfg(20);
+    cfg.data.corpus_samples = 66; // 33/rank, batch 4: 8 steps + carry
+    let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+    assert_eq!(out.report.records.len(), 20);
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // and the run is reproducible bit for bit
+    let dir2 = workdir("carryrun2");
+    let out2 = coordinator::run(&cfg, &artifacts(), &dir2).unwrap();
+    let a: Vec<u32> = out.report.records.iter()
+        .map(|r| r.loss.to_bits()).collect();
+    let b: Vec<u32> = out2.report.records.iter()
+        .map(|r| r.loss.to_bits()).collect();
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir2).unwrap();
+}
+
+#[test]
 fn world_size_one_also_trains() {
     let dir = workdir("solo");
     let mut cfg = tiny_cfg(5);
@@ -268,6 +349,57 @@ fn zero1_sharded_checkpoint_resumes_bit_identically() {
     let resumed: Vec<u32> = cont.report.records
         .iter().map(|r| r.loss.to_bits()).collect();
     assert_eq!(tail, resumed);
+    std::fs::remove_dir_all(&dir_a).unwrap();
+    std::fs::remove_dir_all(&dir_b).unwrap();
+}
+
+#[test]
+fn pre_carry_v2_cursor_is_refused_only_when_the_stream_shifted() {
+    // a checkpoint whose version field says v2 (pre-carry build) has a
+    // cursor measured against carry-free epoch streams. Under carry
+    // geometry the same (epoch, epoch_step) now names different
+    // samples → refuse; under carry-free geometry nothing moved →
+    // resume normally.
+    let patch_version = |ckpt: &std::path::Path, v: u32| {
+        let mut bytes = std::fs::read(ckpt).unwrap();
+        bytes[4..8].copy_from_slice(&v.to_le_bytes());
+        std::fs::write(ckpt, &bytes).unwrap();
+    };
+
+    // carry geometry: 33/rank at batch 4 carries 1,2,3,… per epoch
+    let mut cfg = tiny_cfg(12);
+    cfg.data.corpus_samples = 66;
+    cfg.training.checkpoint_every = 10; // epoch 1 (epoch 0 has 8 steps)
+    let dir_a = workdir("v2carry-save");
+    coordinator::run(&cfg, &artifacts(), &dir_a).unwrap();
+    let ckpt = dir_a.join("checkpoints/step-000010.ckpt");
+    patch_version(&ckpt, 2);
+    let dir_b = workdir("v2carry-resume");
+    let err = coordinator::run_resumable(&cfg, &artifacts(), &dir_b,
+                                         Some(&ckpt))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("carr"), "unhelpful error: {err}");
+    std::fs::remove_dir_all(&dir_a).unwrap();
+    let _ = std::fs::remove_dir_all(&dir_b);
+
+    // carry-free geometry: 32/rank at batch 4 — v2 cursors stay valid
+    let mut cfg = tiny_cfg(12);
+    cfg.data.corpus_samples = 64;
+    cfg.training.checkpoint_every = 10;
+    let dir_a = workdir("v2free-save");
+    let full = coordinator::run(&cfg, &artifacts(), &dir_a).unwrap();
+    let ckpt = dir_a.join("checkpoints/step-000010.ckpt");
+    patch_version(&ckpt, 2);
+    let dir_b = workdir("v2free-resume");
+    let cont = coordinator::run_resumable(&cfg, &artifacts(), &dir_b,
+                                          Some(&ckpt))
+        .unwrap();
+    let tail: Vec<u32> = full.report.records[10..]
+        .iter().map(|r| r.loss.to_bits()).collect();
+    let resumed: Vec<u32> = cont.report.records
+        .iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(tail, resumed, "v2 cursor broke a carry-free resume");
     std::fs::remove_dir_all(&dir_a).unwrap();
     std::fs::remove_dir_all(&dir_b).unwrap();
 }

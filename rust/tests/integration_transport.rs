@@ -13,6 +13,7 @@
 use txgain::collectives::{allreduce, bucketed_all_gather,
                           bucketed_allreduce, bucketed_reduce_scatter,
                           Algorithm, AnyTransport, Backend, BucketPlan,
+                          CollectiveKind, CommEngine, PendingBucket,
                           Transport, TransportStats};
 
 /// Deterministic integer-valued inputs: sums over ≤8 ranks are exact
@@ -231,6 +232,251 @@ mod suite {
         }
     }
 
+    // ---- async conformance: the nonblocking face + the comm engine.
+
+    pub fn nonblocking_ops_roundtrip(backend: Backend) {
+        let mut comms = backend.world(2).unwrap();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        // empty wire: try_recv reports nothing without blocking
+        assert!(c1.try_recv(0, 5).unwrap().is_none(), "{backend}");
+        assert!(c0.try_send(1, 5, &[1.5, -2.0]).unwrap(), "{backend}");
+        // poll until delivered (thread-backed backends need a moment)
+        let mut got = None;
+        for _ in 0..10_000 {
+            if let Some(v) = c1.try_recv(0, 5).unwrap() {
+                got = Some(v);
+                break;
+            }
+            std::thread::yield_now();
+        }
+        assert_eq!(got, Some(vec![1.5, -2.0]), "{backend}");
+        // tag parking holds for the nonblocking face too
+        c0.send_slice(1, 1, &[1.0]).unwrap();
+        c0.send_slice(1, 2, &[2.0]).unwrap();
+        let mut two = None;
+        for _ in 0..10_000 {
+            if let Some(v) = c1.try_recv(0, 2).unwrap() {
+                two = Some(v);
+                break;
+            }
+            std::thread::yield_now();
+        }
+        assert_eq!(two, Some(vec![2.0]), "{backend}");
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![1.0], "{backend}");
+        // sustained one-sided sending hits backpressure (Ok(false))
+        // within a bounded number of attempts on every backend
+        let payload = vec![1.0f32; 300_000];
+        let mut accepted = 0usize;
+        let mut saw_full = false;
+        for _ in 0..64 {
+            if c0.try_send(1, 9, &payload).unwrap() {
+                accepted += 1;
+            } else {
+                saw_full = true;
+                break;
+            }
+        }
+        assert!(saw_full,
+                "{backend}: try_send never reported backpressure \
+                 ({accepted} accepted)");
+        // everything accepted is still delivered, in order
+        for _ in 0..accepted {
+            assert_eq!(c1.recv(0, 9).unwrap().len(), 300_000,
+                       "{backend}");
+        }
+    }
+
+    pub fn engine_concurrent_buckets_bit_identical(backend: Backend) {
+        // N concurrent outstanding buckets through the comm engine
+        // complete bit-identical to the blocking bucketed path across
+        // worlds {2, 4, 8} — the tentpole equivalence. The plan has an
+        // uneven (smaller) first bucket, so the size-aware partition
+        // is conformance-tested on every wire too.
+        let len = 103usize;
+        let plan_of =
+            |n: usize| BucketPlan::from_elems_with_first(n, 23, 7);
+        let blocking: fn(usize, usize, &mut AnyTransport,
+                         &mut Vec<f32>) = |_, _, c, buf| {
+            let plan = BucketPlan::from_elems_with_first(buf.len(), 23,
+                                                         7);
+            bucketed_allreduce(Algorithm::Ring, c, buf, &plan).unwrap();
+        };
+        for world in [2usize, 4, 8] {
+            let want =
+                run_world(Backend::Channel, inputs(world, len),
+                          blocking);
+            let plan = plan_of(len);
+            let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+                backend
+                    .world(world)
+                    .unwrap()
+                    .into_iter()
+                    .zip(inputs(world, len))
+                    .map(|(c, mut buf)| {
+                        let plan = plan.clone();
+                        s.spawn(move || {
+                            let mut eng = CommEngine::new(c);
+                            // every bucket in flight at once
+                            let pend: Vec<(usize, PendingBucket)> =
+                                plan.ready_order()
+                                    .map(|i| {
+                                        let (a, b) = plan.span(i);
+                                        (i, eng.launch_bucket(
+                                            Algorithm::Ring,
+                                            CollectiveKind::Allreduce,
+                                            buf[a..b].to_vec())
+                                            .unwrap())
+                                    })
+                                    .collect();
+                            for (i, p) in pend {
+                                let (a, b) = plan.span(i);
+                                let got = eng.wait(p).unwrap();
+                                buf[a..b].copy_from_slice(&got);
+                                eng.recycle(got);
+                            }
+                            buf
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            for (r, (g, (w, _))) in got.iter().zip(&want).enumerate() {
+                for (a, b) in g.iter().zip(w) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{backend} world={world} rank={r}: \
+                                {a} != {b}");
+                }
+                assert_eq!(g, &got[0], "replicas diverged");
+            }
+        }
+    }
+
+    pub fn engine_zero1_pipeline_bit_identical(backend: Backend) {
+        // the engine-driven ZeRO-1 skeleton (concurrent RS buckets →
+        // nonlinear shard update as each lands → concurrent AG
+        // buckets) against the blocking reference — the exact overlap
+        // schedule the trainer runs under `comm_engine`
+        let len = 103usize;
+        let blocking: fn(usize, usize, &mut AnyTransport,
+                         &mut Vec<f32>) = |rank, world, c, buf| {
+            let plan = BucketPlan::from_elems(buf.len(), 29);
+            bucketed_reduce_scatter(Algorithm::Ring, c, buf, &plan)
+                .unwrap();
+            for &(a, b) in &plan.rank_ranges(rank, world) {
+                for x in &mut buf[a..b] {
+                    *x = (*x * 0.5 + 1.0) / (x.abs() + 2.0);
+                }
+            }
+            bucketed_all_gather(Algorithm::Ring, c, buf, &plan).unwrap();
+        };
+        for world in [2usize, 4, 8] {
+            let want =
+                run_world(Backend::Channel, inputs(world, len),
+                          blocking);
+            let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+                backend
+                    .world(world)
+                    .unwrap()
+                    .into_iter()
+                    .zip(inputs(world, len))
+                    .enumerate()
+                    .map(|(rank, (c, mut buf))| {
+                        s.spawn(move || {
+                            let plan =
+                                BucketPlan::from_elems(buf.len(), 29);
+                            let mut eng = CommEngine::new(c);
+                            let pend: Vec<(usize, PendingBucket)> =
+                                plan.ready_order()
+                                    .map(|i| {
+                                        let (a, b) = plan.span(i);
+                                        (i, eng.launch_bucket(
+                                            Algorithm::Ring,
+                                            CollectiveKind::ReduceScatter,
+                                            buf[a..b].to_vec())
+                                            .unwrap())
+                                    })
+                                    .collect();
+                            // RS(k) wait → shard update → AG(k)
+                            // launch, while RS(k+1..) is in flight
+                            let mut ag = Vec::new();
+                            for (i, p) in pend {
+                                let (a, b) = plan.span(i);
+                                let mut got = eng.wait(p).unwrap();
+                                let (sa, sb) =
+                                    plan.shard_span(i, rank, world);
+                                for x in &mut got[sa - a..sb - a] {
+                                    *x = (*x * 0.5 + 1.0)
+                                        / (x.abs() + 2.0);
+                                }
+                                ag.push((i, eng.launch_bucket(
+                                    Algorithm::Ring,
+                                    CollectiveKind::AllGather, got)
+                                    .unwrap()));
+                            }
+                            for (i, p) in ag {
+                                let (a, b) = plan.span(i);
+                                let got = eng.wait(p).unwrap();
+                                buf[a..b].copy_from_slice(&got);
+                                eng.recycle(got);
+                            }
+                            buf
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            for (r, (g, (w, _))) in got.iter().zip(&want).enumerate() {
+                for (a, b) in g.iter().zip(w) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{backend} world={world} rank={r}: \
+                                {a} != {b}");
+                }
+            }
+        }
+    }
+
+    pub fn engine_dead_peer_mid_collective_errors(backend: Backend) {
+        // a rank that dies with buckets in flight must surface as an
+        // error on every surviving rank's wait — never a hang. (The
+        // surviving engines tear down and cascade, so *all* waits
+        // resolve.)
+        let mut comms = backend.world(3).unwrap();
+        let c2 = comms.pop().unwrap();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || drop(c2)); // rank 2 never participates
+            for c in [c0, c1] {
+                s.spawn(move || {
+                    let mut eng = CommEngine::new(c);
+                    let pend: Vec<PendingBucket> = (0..3)
+                        .map(|k| {
+                            eng.launch_bucket(
+                                Algorithm::Ring,
+                                CollectiveKind::Allreduce,
+                                vec![k as f32; 32])
+                                .unwrap()
+                        })
+                        .collect();
+                    let mut failures = 0;
+                    for p in pend {
+                        if eng.wait(p).is_err() {
+                            failures += 1;
+                        }
+                    }
+                    assert!(failures > 0,
+                            "{backend}: no in-flight bucket reported \
+                             the dead peer");
+                });
+            }
+        });
+    }
+
     pub fn bucketed_matches_monolithic(backend: Backend) {
         // bucketing must not change the result on any transport
         let world = 4usize;
@@ -302,6 +548,26 @@ macro_rules! backend_suite {
             #[test]
             fn bucketed_matches_monolithic() {
                 suite::bucketed_matches_monolithic($backend);
+            }
+
+            #[test]
+            fn nonblocking_ops_roundtrip() {
+                suite::nonblocking_ops_roundtrip($backend);
+            }
+
+            #[test]
+            fn engine_concurrent_buckets_bit_identical() {
+                suite::engine_concurrent_buckets_bit_identical($backend);
+            }
+
+            #[test]
+            fn engine_zero1_pipeline_bit_identical() {
+                suite::engine_zero1_pipeline_bit_identical($backend);
+            }
+
+            #[test]
+            fn engine_dead_peer_mid_collective_errors() {
+                suite::engine_dead_peer_mid_collective_errors($backend);
             }
         }
     };

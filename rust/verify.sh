@@ -36,6 +36,13 @@ done
 echo "verify.sh: data-plane conformance"
 cargo test -q --test integration_data
 
+# the async-comm-engine overlap gate: measured wall-clock exposed comm
+# with the engine must not exceed the blocking baseline (world 4, shm).
+# Fast (~a dozen emulated steps); exits nonzero on regression, so a
+# change that quietly serializes the engine's pipeline fails CI here
+echo "verify.sh: rec4 overlap smoke gate"
+cargo bench --bench rec4_overlap -- --smoke
+
 # benches/examples (including rec3_stream / stream_tuning) are not
 # built by `build`/`test`; type-check them so they cannot silently rot
 # out of the tier-1 gate
