@@ -1,0 +1,796 @@
+//! txgain-lint: the repo's concurrency-correctness static analysis
+//! pass, run as a hard gate from `verify.sh`.
+//!
+//! A deliberately small line/token-level scanner (no external parser
+//! crates — the offline build has none) that enforces the invariants
+//! documented in CONTRIBUTING.md ("Concurrency invariants & lint
+//! rules"):
+//!
+//!  * `ordering-whitelist` — atomic `Ordering::*` may appear only in
+//!    the whitelisted modules, and every whitelisted module must carry
+//!    a `concurrency invariant:` paragraph in its docs.
+//!  * `ordering-doc` — every non-test atomic-ordering site must have a
+//!    `// ord:` comment within the 8 preceding lines naming the
+//!    load/store pair (or advisory contract) it belongs to.
+//!  * `ordering-seqcst` — `SeqCst` is banned outside tests; nothing in
+//!    this codebase needs a total order, and SeqCst usually papers
+//!    over a missing pairing argument.
+//!  * `no-unwrap` — `.unwrap()` / `.expect(` / `panic!` family are
+//!    banned in non-test code on the trainer / transport / coordinator
+//!    paths; a dead peer or corrupt frame must become a typed error
+//!    that tears the op down, never a process abort.
+//!  * `sim-wallclock` — simulator and perf-model code may not read
+//!    wall clocks (`Instant::` / `SystemTime`); simulated time must
+//!    come from the event loop or results are machine-dependent.
+//!  * `bounded-read` — in the length-prefixed decode modules, every
+//!    allocation/resize must carry a `// bounded:` comment within the
+//!    4 preceding lines stating why a hostile header cannot force a
+//!    huge allocation.
+//!  * `schema-sync` — the steps.csv column list and report.json key
+//!    list written by `train/metrics.rs` must match the documented
+//!    lists in CONTRIBUTING.md, so the docs cannot rot.
+//!  * `manifest-exists` — the crate manifest must be present (it is
+//!    what makes the whole verify pipeline runnable from a clean
+//!    clone).
+//!
+//! Any line can waive a rule with `lint:allow(<rule>)` in a trailing
+//! comment on the same line or the line above — grep-able, reviewable,
+//! and rare by convention.
+//!
+//! String and comment *contents* are stripped before code rules match
+//! (so doc prose mentioning `Ordering::Relaxed` is not a violation),
+//! while marker comments (`// ord:` / `// bounded:` / waivers) are
+//! detected on the raw line text. Test code — everything from a file's
+//! first `#[cfg(test)]` to EOF, per this repo's bottom-of-file test
+//! convention — is exempt from the code rules.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files allowed to use atomic orderings at all. Each must contain a
+/// `concurrency invariant:` doc paragraph describing its protocol.
+const ORDERING_WHITELIST: &[&str] = &[
+    "src/collectives/transport/channel.rs",
+    "src/collectives/transport/shm.rs",
+    "src/collectives/transport/tcp.rs",
+    "src/train/trainer.rs",
+    "src/data/loader.rs",
+    "src/data/index.rs",
+];
+
+/// Path prefixes (relative to the crate root) where the no-unwrap rule
+/// applies: the paths a dead peer or corrupt input can reach at
+/// runtime.
+const NO_UNWRAP_PATHS: &[&str] =
+    &["src/collectives/", "src/train/", "src/coordinator/"];
+
+/// Path prefixes where wall-clock reads are banned.
+const SIM_PATHS: &[&str] = &["src/sim/", "src/perfmodel/"];
+
+/// Length-prefixed decode modules: allocations there must be
+/// `// bounded:`-annotated.
+const BOUNDED_FILES: &[&str] = &[
+    "src/collectives/transport/tcp.rs",
+    "src/train/checkpoint.rs",
+    "src/data/records.rs",
+    "src/data/index.rs",
+];
+
+const ATOMIC_ORDERINGS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+const ALLOC_TOKENS: &[&str] = &["with_capacity(", ".resize(", "vec![0"];
+
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+/// One scanned file: raw lines, comment/string-stripped lines, and the
+/// index of the first `#[cfg(test)]` line (usize::MAX if none).
+struct Scanned {
+    rel: String,
+    raw: Vec<String>,
+    code: Vec<String>,
+    test_start: usize,
+}
+
+impl Scanned {
+    fn is_test_line(&self, idx: usize) -> bool {
+        idx >= self.test_start
+    }
+
+    /// `lint:allow(rule)` on the line or the line above waives it.
+    fn waived(&self, idx: usize, rule: &str) -> bool {
+        let tag = format!("lint:allow({rule})");
+        if self.raw[idx].contains(&tag) {
+            return true;
+        }
+        idx > 0 && self.raw[idx - 1].contains(&tag)
+    }
+
+    /// A marker comment within `span` raw lines at or before `idx`.
+    fn marker_within(&self, idx: usize, span: usize, marker: &str)
+        -> bool {
+        let lo = idx.saturating_sub(span);
+        self.raw[lo..=idx].iter().any(|l| l.contains(marker))
+    }
+}
+
+/// Strip comments and string/char-literal contents, preserving line
+/// structure. Stripped spans become spaces so column content still
+/// separates tokens. Handles `//`, nested `/* */`, plain and raw
+/// strings (with `b`/`br` prefixes and `#` fences), escapes, and the
+/// char-literal-vs-lifetime ambiguity.
+fn strip_code(src: &str) -> Vec<String> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out: Vec<String> = Vec::new();
+    let mut line = String::new();
+    let mut i = 0usize;
+    let n = chars.len();
+
+    enum Mode {
+        Code,
+        Block(u32),
+        Str,
+        RawStr(usize),
+    }
+    let mut mode = Mode::Code;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // line comments end here implicitly (handled by skipping
+            // to newline when they start)
+            out.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && next == '/' {
+                    // line comment: skip to end of line
+                    while i < n && chars[i] != '\n' {
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '/' && next == '*' {
+                    mode = Mode::Block(1);
+                    line.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    mode = Mode::Str;
+                    line.push('"');
+                    i += 1;
+                    continue;
+                }
+                // raw / byte string prefixes: r", r#", b", br#"
+                if (c == 'r' || c == 'b')
+                    && !prev_is_ident(&chars, i)
+                {
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0usize;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let rawish = j > i + 1 || c == 'r';
+                    if rawish && chars.get(j) == Some(&'"') {
+                        for _ in i..=j {
+                            line.push(' ');
+                        }
+                        line.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i = j + 1;
+                        continue;
+                    }
+                    if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                        line.push(' ');
+                        line.push('"');
+                        mode = Mode::Str;
+                        i += 2;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // char literal vs lifetime
+                    let n1 = chars.get(i + 1).copied().unwrap_or('\0');
+                    let n2 = chars.get(i + 2).copied().unwrap_or('\0');
+                    if n1 == '\\' {
+                        // escaped char literal: skip to closing quote
+                        line.push('\'');
+                        i += 2;
+                        while i < n && chars[i] != '\'' {
+                            line.push(' ');
+                            i += 1;
+                        }
+                        line.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    if n2 == '\'' {
+                        line.push('\'');
+                        line.push(' ');
+                        line.push('\'');
+                        i += 3;
+                        continue;
+                    }
+                    // lifetime: emit the quote, continue as code
+                    line.push('\'');
+                    i += 1;
+                    continue;
+                }
+                line.push(c);
+                i += 1;
+            }
+            Mode::Block(depth) => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && next == '*' {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == '/' {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::Block(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // backslash-newline continuation: keep the
+                    // newline so line accounting stays exact
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        line.push(' ');
+                        line.push(' ');
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    line.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    line.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        line.push('"');
+                        for _ in 0..hashes {
+                            line.push(' ');
+                        }
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                        continue;
+                    }
+                }
+                line.push(' ');
+                i += 1;
+            }
+        }
+    }
+    out.push(line);
+    out
+}
+
+/// Is the char before position `i` part of an identifier? (Guards the
+/// raw-string prefix heuristic against identifiers ending in r/b.)
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    if i == 0 {
+        return false;
+    }
+    let p = chars[i - 1];
+    p.is_alphanumeric() || p == '_'
+}
+
+fn scan_file(root: &Path, rel: &str) -> Option<Scanned> {
+    let src = fs::read_to_string(root.join(rel)).ok()?;
+    let raw: Vec<String> =
+        src.lines().map(|l| l.to_string()).collect();
+    let mut code = strip_code(&src);
+    // lines() drops a trailing empty segment that strip_code keeps
+    code.truncate(raw.len().max(1));
+    while code.len() < raw.len() {
+        code.push(String::new());
+    }
+    let test_start = raw
+        .iter()
+        .position(|l| l.trim_start().starts_with("#[cfg(test)]"))
+        .unwrap_or(usize::MAX);
+    Some(Scanned { rel: rel.to_string(), raw, code, test_start })
+}
+
+fn rust_files(root: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.join("src")];
+    while let Some(dir) = stack.pop() {
+        let entries = match fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with('.') || name == "target" {
+                continue;
+            }
+            if p.is_dir() {
+                stack.push(p);
+            } else if name.ends_with(".rs") {
+                if let Ok(rel) = p.strip_prefix(root) {
+                    out.push(rel.to_string_lossy().replace('\\', "/"));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn check_orderings(f: &Scanned, v: &mut Vec<Violation>) {
+    let listed = ORDERING_WHITELIST.contains(&f.rel.as_str());
+    let mut any_site = false;
+    for (idx, code) in f.code.iter().enumerate() {
+        if f.is_test_line(idx) {
+            break;
+        }
+        let hit = ATOMIC_ORDERINGS.iter().any(|o| code.contains(o));
+        if !hit {
+            continue;
+        }
+        any_site = true;
+        if !listed && !f.waived(idx, "ordering-whitelist") {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: idx + 1,
+                rule: "ordering-whitelist",
+                msg: format!(
+                    "atomic ordering outside the whitelist; move the \
+                     atomic behind an audited module or add {:?} to \
+                     ORDERING_WHITELIST with a `concurrency \
+                     invariant:` doc paragraph",
+                    f.rel
+                ),
+            });
+        }
+        if code.contains("Ordering::SeqCst")
+            && !f.waived(idx, "ordering-seqcst")
+        {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: idx + 1,
+                rule: "ordering-seqcst",
+                msg: "SeqCst in non-test code: name the actual \
+                      load/store pairing and use Acquire/Release, or \
+                      waive with lint:allow(ordering-seqcst) and a \
+                      written total-order argument"
+                    .into(),
+            });
+        }
+        if !f.marker_within(idx, 8, "// ord:")
+            && !f.waived(idx, "ordering-doc")
+        {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: idx + 1,
+                rule: "ordering-doc",
+                msg: "atomic ordering without a `// ord:` pairing \
+                      comment in the preceding 8 lines"
+                    .into(),
+            });
+        }
+    }
+    if any_site && listed {
+        let anchored =
+            f.raw.iter().any(|l| l.contains("concurrency invariant:"));
+        if !anchored {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: 1,
+                rule: "ordering-whitelist",
+                msg: "whitelisted module uses atomics but has no \
+                      `concurrency invariant:` doc paragraph"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn check_no_unwrap(f: &Scanned, v: &mut Vec<Violation>) {
+    if !NO_UNWRAP_PATHS.iter().any(|p| f.rel.starts_with(p)) {
+        return;
+    }
+    for (idx, code) in f.code.iter().enumerate() {
+        if f.is_test_line(idx) {
+            break;
+        }
+        for tok in PANIC_TOKENS {
+            if code.contains(tok) && !f.waived(idx, "no-unwrap") {
+                v.push(Violation {
+                    file: f.rel.clone(),
+                    line: idx + 1,
+                    rule: "no-unwrap",
+                    msg: format!(
+                        "`{tok}` on a trainer/transport path: return \
+                         a typed error (crate::Result) so a dead peer \
+                         or corrupt input tears the op down instead \
+                         of aborting the rank"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn check_sim_wallclock(f: &Scanned, v: &mut Vec<Violation>) {
+    if !SIM_PATHS.iter().any(|p| f.rel.starts_with(p)) {
+        return;
+    }
+    for (idx, code) in f.code.iter().enumerate() {
+        if f.is_test_line(idx) {
+            break;
+        }
+        if (code.contains("Instant::") || code.contains("SystemTime"))
+            && !f.waived(idx, "sim-wallclock")
+        {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: idx + 1,
+                rule: "sim-wallclock",
+                msg: "wall-clock read in simulator/perf-model code: \
+                      simulated time must come from the event loop, \
+                      not the host clock"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn check_bounded_reads(f: &Scanned, v: &mut Vec<Violation>) {
+    if !BOUNDED_FILES.contains(&f.rel.as_str()) {
+        return;
+    }
+    for (idx, code) in f.code.iter().enumerate() {
+        if f.is_test_line(idx) {
+            break;
+        }
+        let hit = ALLOC_TOKENS.iter().any(|t| code.contains(t));
+        if !hit {
+            continue;
+        }
+        if !f.marker_within(idx, 4, "// bounded:")
+            && !f.waived(idx, "bounded-read")
+        {
+            v.push(Violation {
+                file: f.rel.clone(),
+                line: idx + 1,
+                rule: "bounded-read",
+                msg: "allocation in a length-prefixed decode module \
+                      without a `// bounded:` comment in the \
+                      preceding 4 lines proving the size is checked \
+                      against a cap before allocating"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Collect `"..."` string literals from raw lines `[start..]` until a
+/// line containing `]` at paren-ish end — used on the two metrics.rs
+/// writer call sites, whose literals are plain (no escapes).
+fn literals_until_close(raw: &[String], start: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in raw.iter().skip(start) {
+        let bytes: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == '"' {
+                let mut j = i + 1;
+                let mut s = String::new();
+                while j < bytes.len() && bytes[j] != '"' {
+                    s.push(bytes[j]);
+                    j += 1;
+                }
+                out.push(s);
+                i = j + 1;
+            } else {
+                i += 1;
+            }
+        }
+        if line.contains("])") {
+            break;
+        }
+    }
+    out
+}
+
+/// The fenced code block after `marker` in CONTRIBUTING.md, one entry
+/// per nonempty line.
+fn doc_block(doc: &str, marker: &str) -> Option<Vec<String>> {
+    let lines: Vec<&str> = doc.lines().collect();
+    let at = lines.iter().position(|l| l.contains(marker))?;
+    let open = lines
+        .iter()
+        .skip(at + 1)
+        .position(|l| l.trim_start().starts_with("```"))?
+        + at
+        + 1;
+    let mut out = Vec::new();
+    for l in lines.iter().skip(open + 1) {
+        if l.trim_start().starts_with("```") {
+            return Some(out);
+        }
+        if !l.trim().is_empty() {
+            out.push(l.trim().to_string());
+        }
+    }
+    None
+}
+
+fn check_schema_sync(root: &Path, v: &mut Vec<Violation>) {
+    let metrics_rel = "src/train/metrics.rs";
+    let metrics = match fs::read_to_string(root.join(metrics_rel)) {
+        Ok(s) => s,
+        Err(_) => {
+            v.push(Violation {
+                file: metrics_rel.into(),
+                line: 1,
+                rule: "schema-sync",
+                msg: "cannot read the metrics writer".into(),
+            });
+            return;
+        }
+    };
+    let raw: Vec<String> =
+        metrics.lines().map(|l| l.to_string()).collect();
+    let doc_path = root.join("../CONTRIBUTING.md");
+    let doc = match fs::read_to_string(&doc_path) {
+        Ok(s) => s,
+        Err(_) => {
+            v.push(Violation {
+                file: "CONTRIBUTING.md".into(),
+                line: 1,
+                rule: "schema-sync",
+                msg: "missing CONTRIBUTING.md with the documented \
+                      steps.csv / report.json schemas"
+                    .into(),
+            });
+            return;
+        }
+    };
+
+    let mut compare = |label: &str, call_marker: &str, doc_marker: &str| {
+        let start =
+            raw.iter().position(|l| l.contains(call_marker));
+        let written = match start {
+            Some(s) => literals_until_close(&raw, s),
+            None => {
+                v.push(Violation {
+                    file: metrics_rel.into(),
+                    line: 1,
+                    rule: "schema-sync",
+                    msg: format!(
+                        "could not locate the {label} writer \
+                         ({call_marker})"
+                    ),
+                });
+                return;
+            }
+        };
+        let documented = match doc_block(&doc, doc_marker) {
+            Some(d) => d,
+            None => {
+                v.push(Violation {
+                    file: "CONTRIBUTING.md".into(),
+                    line: 1,
+                    rule: "schema-sync",
+                    msg: format!(
+                        "no fenced block after {doc_marker} \
+                         documenting the {label} schema"
+                    ),
+                });
+                return;
+            }
+        };
+        if written != documented {
+            v.push(Violation {
+                file: "CONTRIBUTING.md".into(),
+                line: 1,
+                rule: "schema-sync",
+                msg: format!(
+                    "{label} schema drift: the code writes \
+                     {written:?} but the docs list {documented:?}"
+                ),
+            });
+        }
+    };
+
+    compare("steps.csv", "CsvWriter::new", "lint:steps-csv");
+    compare("report.json", "json::obj(vec![", "lint:report-json");
+}
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => std::env::var("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(".")),
+    };
+
+    let mut violations: Vec<Violation> = Vec::new();
+
+    if !root.join("Cargo.toml").is_file() {
+        violations.push(Violation {
+            file: "Cargo.toml".into(),
+            line: 1,
+            rule: "manifest-exists",
+            msg: format!(
+                "no Cargo.toml under {} — the crate manifest must be \
+                 tracked so a clean clone can build",
+                root.display()
+            ),
+        });
+    }
+
+    let files = rust_files(&root);
+    if files.is_empty() {
+        violations.push(Violation {
+            file: "src".into(),
+            line: 1,
+            rule: "manifest-exists",
+            msg: format!("no Rust sources under {}/src", root.display()),
+        });
+    }
+    for rel in &files {
+        if rel.starts_with("src/bin/") {
+            continue; // the lint does not gate itself
+        }
+        let Some(f) = scan_file(&root, rel) else { continue };
+        check_orderings(&f, &mut violations);
+        check_no_unwrap(&f, &mut violations);
+        check_sim_wallclock(&f, &mut violations);
+        check_bounded_reads(&f, &mut violations);
+    }
+    check_schema_sync(&root, &mut violations);
+
+    if violations.is_empty() {
+        println!(
+            "txgain-lint: {} files clean (orderings, panics, \
+             wall-clocks, bounded reads, schema sync)",
+            files.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line))
+    });
+    let mut report = String::new();
+    for viol in &violations {
+        let _ = writeln!(
+            report,
+            "{}:{}: [{}] {}",
+            viol.file, viol.line, viol.rule, viol.msg
+        );
+    }
+    eprint!("{report}");
+    eprintln!(
+        "txgain-lint: {} violation(s). Rules are documented in \
+         CONTRIBUTING.md; waive a line with lint:allow(<rule>).",
+        violations.len()
+    );
+    ExitCode::FAILURE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripper_removes_comments_and_string_contents() {
+        let code = strip_code(
+            "let x = \"Ordering::SeqCst\"; // Ordering::SeqCst\n\
+             /* Ordering::SeqCst */ y.load(Ordering::Relaxed);",
+        );
+        assert!(!code[0].contains("Ordering::SeqCst"));
+        assert!(!code[1].contains("Ordering::SeqCst"));
+        assert!(code[1].contains("Ordering::Relaxed"));
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings_and_lifetimes() {
+        let code = strip_code(
+            "fn f<'a>(s: &'a str) { let r = r#\".unwrap()\"#; \
+             let c = '\\n'; g(); }",
+        );
+        assert!(code[0].contains("fn f<'a>"));
+        assert!(!code[0].contains(".unwrap()"));
+        assert!(code[0].contains("g();"));
+    }
+
+    #[test]
+    fn stripper_handles_nested_block_comments() {
+        let code =
+            strip_code("a(); /* x /* panic!( */ still */ b();");
+        assert!(code[0].contains("a();"));
+        assert!(code[0].contains("b();"));
+        assert!(!code[0].contains("panic!("));
+    }
+
+    #[test]
+    fn doc_block_extracts_fenced_lists() {
+        let doc = "intro\n<!-- lint:steps-csv -->\n```\nstep\nloss\n```\n";
+        assert_eq!(
+            doc_block(doc, "lint:steps-csv"),
+            Some(vec!["step".to_string(), "loss".to_string()])
+        );
+        assert_eq!(doc_block(doc, "lint:missing"), None);
+    }
+
+    #[test]
+    fn literal_collection_stops_at_call_close() {
+        let raw: Vec<String> = vec![
+            "CsvWriter::new(vec![".into(),
+            "    \"a\", \"b\",".into(),
+            "]);".into(),
+            "w.row(&[\"not-a-column\".into()]);".into(),
+        ];
+        assert_eq!(literals_until_close(&raw, 0), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn waiver_and_marker_lookup() {
+        let f = Scanned {
+            rel: "src/x.rs".into(),
+            raw: vec![
+                "// ord: pairs with the consumer".into(),
+                "x.load(Ordering::Relaxed); // lint:allow(no-unwrap)"
+                    .into(),
+            ],
+            code: vec![String::new(), String::new()],
+            test_start: usize::MAX,
+        };
+        assert!(f.marker_within(1, 8, "// ord:"));
+        assert!(f.waived(1, "no-unwrap"));
+        assert!(!f.waived(0, "no-unwrap"));
+    }
+}

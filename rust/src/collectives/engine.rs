@@ -57,6 +57,7 @@ use anyhow::{anyhow, bail, Context};
 use super::transport::{spin_backoff, BufferPool, Transport,
                        TransportStats};
 use super::{shard_spans, Algorithm};
+use crate::util::sync::lock_unpoisoned;
 use crate::Result;
 
 /// First tag the engine may use. Everything below is reserved for the
@@ -229,7 +230,7 @@ impl<T: Transport + Send + 'static> CommEngine<T> {
     /// progress thread at every op completion — exact whenever no op
     /// is in flight (the trainer reads it at step boundaries).
     pub fn stats(&self) -> TransportStats {
-        *self.stats.lock().unwrap()
+        *lock_unpoisoned(&self.stats)
     }
 
     /// Drain all in-flight work and take the transport back for
@@ -656,7 +657,7 @@ fn sweep<T: Transport>(t: &mut T, ops: &mut Vec<Op>,
         match ops[i].advance(t) {
             Ok(Step::Done) => {
                 let op = ops.remove(i);
-                *stats.lock().unwrap() = t.stats();
+                *lock_unpoisoned(stats) = t.stats();
                 let _ = done_tx.send((op.id, Ok(op.buf)));
                 progressed = true;
             }
@@ -669,7 +670,7 @@ fn sweep<T: Transport>(t: &mut T, ops: &mut Vec<Op>,
             }
             Err(e) => {
                 let op = ops.remove(i);
-                *stats.lock().unwrap() = t.stats();
+                *lock_unpoisoned(stats) = t.stats();
                 let _ = done_tx.send((op.id, Err(e.context(format!(
                     "rank {}: in-flight collective (op {}) failed",
                     t.rank(), op.id)))));
@@ -680,6 +681,20 @@ fn sweep<T: Transport>(t: &mut T, ops: &mut Vec<Op>,
         }
     }
     (progressed, failed)
+}
+
+/// Error-cascade half of the dead-peer contract: after a fatal
+/// transport error, every remaining in-flight waiter must get a
+/// teardown error (never hang waiting on a completion that will not
+/// come). Factored out of `progress_loop` so the scripted interleaving
+/// tests below can drive it directly against injected failures.
+fn fail_inflight(rank: usize, ops: &mut Vec<Op>,
+                 done_tx: &Sender<Completion>) {
+    for op in ops.drain(..) {
+        let _ = done_tx.send((op.id, Err(anyhow!(
+            "rank {rank}: comm engine torn down after a transport \
+             failure on another in-flight op"))));
+    }
 }
 
 fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
@@ -731,7 +746,11 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
                         let (progressed, failed) =
                             sweep(&mut t, &mut ops, &done_tx, &stats);
                         if failed {
-                            return; // teardown: see module docs
+                            // same cascade as the main loop: waiters
+                            // get errors, not a dropped channel
+                            fail_inflight(t.rank(), &mut ops,
+                                          &done_tx);
+                            return;
                         }
                         if progressed {
                             drain_spins = 0;
@@ -739,7 +758,7 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
                             spin_backoff(&mut drain_spins);
                         }
                     }
-                    *stats.lock().unwrap() = t.stats();
+                    *lock_unpoisoned(&stats) = t.stats();
                     if transport_tx.send(t).is_err() {
                         return; // caller gone; transport dropped with us
                     }
@@ -747,7 +766,7 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
                         Ok(t) => t,
                         Err(_) => return,
                     };
-                    *stats.lock().unwrap() = t.stats();
+                    *lock_unpoisoned(&stats) = t.stats();
                 }
             }
         }
@@ -760,11 +779,7 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
             // fatal transport error: report it to every remaining
             // waiter, then drop the transport so peers' engines see a
             // dead rank instead of polling forever
-            for op in ops.drain(..) {
-                let _ = done_tx.send((op.id, Err(anyhow!(
-                    "rank {}: comm engine torn down after a transport \
-                     failure on another in-flight op", t.rank()))));
-            }
+            fail_inflight(t.rank(), &mut ops, &done_tx);
             return;
         }
         if progressed {
@@ -772,6 +787,213 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
         } else {
             spin_backoff(&mut spins);
         }
+    }
+}
+
+#[cfg(test)]
+mod model_tests {
+    //! Exhaustive scripted-outcome checks of the engine's per-op
+    //! bookkeeping. The `enumerate` oracle from `util::interleave`
+    //! drives every possible sequence of try_send/try_recv outcomes
+    //! (stall, progress, error) through the real `sweep` /
+    //! `fail_inflight` code and asserts the engine's two completion
+    //! invariants hold on every schedule: exactly one completion per
+    //! op id, and error-not-hang (a transport error cascades a
+    //! teardown error to every remaining waiter).
+
+    use super::*;
+    use crate::util::interleave::{enumerate, Options, Picker};
+    use std::collections::HashMap as Map;
+    use std::sync::mpsc::channel as mpsc_channel;
+
+    /// After this many scripted decisions the transport always
+    /// succeeds — bounds the DFS depth while still exploring every
+    /// stall/progress prefix up to that horizon.
+    const FORCE_AFTER: usize = 6;
+
+    enum Inject {
+        None,
+        /// The n-th transport call (1-based) returns Err.
+        FailAt(usize),
+    }
+
+    /// A rank-0-of-2 transport whose nonblocking outcomes come from
+    /// the interleaving explorer's decision tape. Messages are always
+    /// length 1: with world=2 and a 2-element buffer every ring/tree
+    /// hop moves exactly one shard element.
+    struct ScriptedTransport<'a> {
+        p: &'a mut Picker,
+        calls: usize,
+        inject: Inject,
+    }
+
+    impl ScriptedTransport<'_> {
+        fn scripted(&self) -> bool {
+            matches!(self.inject, Inject::None)
+                && self.calls <= FORCE_AFTER
+        }
+        fn check_inject(&self) -> Result<()> {
+            if let Inject::FailAt(k) = self.inject {
+                if self.calls == k {
+                    bail!("scripted link failure at call {k}");
+                }
+            }
+            Ok(())
+        }
+    }
+
+    impl Transport for ScriptedTransport<'_> {
+        fn rank(&self) -> usize {
+            0
+        }
+        fn world(&self) -> usize {
+            2
+        }
+        fn send_slice(&mut self, _to: usize, _tag: u32,
+                      _data: &[f32]) -> Result<()> {
+            unreachable!("the engine only uses the nonblocking face")
+        }
+        fn recv(&mut self, _from: usize, _tag: u32)
+                -> Result<Vec<f32>> {
+            unreachable!("the engine only uses the nonblocking face")
+        }
+        fn try_send(&mut self, _to: usize, _tag: u32,
+                    _data: &[f32]) -> Result<bool> {
+            self.calls += 1;
+            self.check_inject()?;
+            if !self.scripted() {
+                return Ok(true);
+            }
+            Ok(self.p.choose(2) == 1)
+        }
+        fn try_recv(&mut self, _from: usize, _tag: u32)
+                    -> Result<Option<Vec<f32>>> {
+            self.calls += 1;
+            self.check_inject()?;
+            if !self.scripted() {
+                return Ok(Some(vec![0.0]));
+            }
+            if self.p.choose(2) == 1 {
+                Ok(Some(vec![0.0]))
+            } else {
+                Ok(None)
+            }
+        }
+        fn recycle(&mut self, _buf: Vec<f32>) {}
+        fn stats(&self) -> TransportStats {
+            TransportStats::default()
+        }
+    }
+
+    fn two_elem_op(id: u64, algo: Algorithm) -> Op {
+        let base = ENGINE_TAG_BASE + (id as u32) * 64;
+        Op::new(id, base, algo, CollectiveKind::Allreduce,
+                vec![1.0 + id as f32, 2.0 + id as f32], 2)
+    }
+
+    /// Every interleaving of stalls and progress completes every op
+    /// exactly once, with an Ok result, and sweep never reports a
+    /// failure that was not scripted.
+    #[test]
+    fn sweep_completes_every_op_exactly_once_on_all_schedules() {
+        for algo in [Algorithm::Ring, Algorithm::Tree] {
+            let rep = enumerate(&Options::default(), |p| {
+                let (done_tx, done_rx) = mpsc_channel::<Completion>();
+                let stats = Mutex::new(TransportStats::default());
+                let mut t = ScriptedTransport {
+                    p,
+                    calls: 0,
+                    inject: Inject::None,
+                };
+                let mut ops =
+                    vec![two_elem_op(0, algo), two_elem_op(1, algo)];
+                let mut rounds = 0u32;
+                while !ops.is_empty() {
+                    let (_, failed) =
+                        sweep(&mut t, &mut ops, &done_tx, &stats);
+                    assert!(!failed, "no failure was scripted");
+                    rounds += 1;
+                    assert!(rounds < 10_000,
+                            "sweep stopped making progress");
+                }
+                drop(done_tx);
+                let mut seen: Map<u64, u32> = Map::new();
+                while let Ok((id, res)) = done_rx.recv() {
+                    assert!(res.is_ok(),
+                            "op {id} completed with an error on an \
+                             all-success schedule");
+                    *seen.entry(id).or_insert(0) += 1;
+                }
+                assert_eq!(seen.get(&0), Some(&1),
+                           "op 0 must complete exactly once");
+                assert_eq!(seen.get(&1), Some(&1),
+                           "op 1 must complete exactly once");
+            });
+            assert!(rep.schedules > 1,
+                    "expected multiple interleavings for {algo:?}");
+        }
+    }
+
+    /// Whichever transport call dies, every launched op still gets
+    /// exactly one completion: the failed op gets the real error and
+    /// `fail_inflight` cascades teardown errors to all the rest —
+    /// error, never hang.
+    #[test]
+    fn transport_error_cascades_to_every_waiter() {
+        let rep = enumerate(&Options::default(), |p| {
+            let fail_at = p.choose(8) + 1;
+            let (done_tx, done_rx) = mpsc_channel::<Completion>();
+            let stats = Mutex::new(TransportStats::default());
+            let mut t = ScriptedTransport {
+                p,
+                calls: 0,
+                inject: Inject::FailAt(fail_at),
+            };
+            let mut ops = vec![
+                two_elem_op(0, Algorithm::Ring),
+                two_elem_op(1, Algorithm::Ring),
+                two_elem_op(2, Algorithm::Ring),
+            ];
+            let mut rounds = 0u32;
+            let mut failed = false;
+            while !ops.is_empty() {
+                let (_, f) = sweep(&mut t, &mut ops, &done_tx, &stats);
+                if f {
+                    failed = true;
+                    fail_inflight(0, &mut ops, &done_tx);
+                    break;
+                }
+                rounds += 1;
+                assert!(rounds < 10_000,
+                        "sweep stopped making progress");
+            }
+            // 3 ring ops at world=2 make >8 transport calls, so the
+            // injected failure always fires
+            assert!(failed,
+                    "scripted failure at call {fail_at} never fired");
+            assert!(ops.is_empty(), "fail_inflight must drain ops");
+            drop(done_tx);
+            let mut seen: Map<u64, u32> = Map::new();
+            let mut errs = 0u32;
+            while let Ok((id, res)) = done_rx.recv() {
+                if res.is_err() {
+                    errs += 1;
+                }
+                *seen.entry(id).or_insert(0) += 1;
+            }
+            for id in 0..3u64 {
+                assert_eq!(
+                    seen.get(&id),
+                    Some(&1),
+                    "op {id} must get exactly one completion \
+                     (failure scripted at call {fail_at})"
+                );
+            }
+            assert!(errs >= 1,
+                    "the failed op must surface its error");
+        });
+        assert_eq!(rep.schedules, 8,
+                   "one schedule per injected failure point");
     }
 }
 

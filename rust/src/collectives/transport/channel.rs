@@ -19,6 +19,12 @@
 //! Liveness: each rank flips a shared `alive` flag on drop. A receiver
 //! blocked on a dead peer and a sender stalled on a full window both
 //! turn into errors instead of hangs.
+//!
+//! concurrency invariant: the only atomics here are the per-rank
+//! `alive` flags — stored `Release` on the drop path (after every send
+//! that rank will ever make) and loaded `Acquire` before declaring a
+//! peer dead, so the post-flag mailbox drain cannot miss a final send.
+//! All other shared state is under mutexes/channels.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -29,6 +35,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context};
 
 use super::{BufferPool, Transport, TransportStats};
+use crate::util::sync::lock_unpoisoned;
 use crate::Result;
 
 type Msg = (usize, u32, Vec<f32>); // (from, tag, payload)
@@ -132,9 +139,11 @@ impl ChannelTransport {
     /// Wait for a free slot in the window toward `to`.
     fn acquire_window(&self, to: usize) -> Result<()> {
         let w = &self.send_windows[to];
-        let mut inflight = w.inflight.lock().unwrap();
+        let mut inflight = lock_unpoisoned(&w.inflight);
         let deadline = Instant::now() + SEND_STALL;
         while *inflight >= SEND_WINDOW {
+            // ord: Acquire pairs with the peer's Release flag store on
+            // drop — a dead peer's window will never drain again
             if !self.alive[to].load(Ordering::Acquire) {
                 bail!("rank {} send to dead rank {to}", self.rank);
             }
@@ -143,7 +152,13 @@ impl ChannelTransport {
                        {}s ({SEND_WINDOW} messages in flight)",
                       self.rank, SEND_STALL.as_secs());
             }
-            let (g, _) = w.drained.wait_timeout(inflight, POLL).unwrap();
+            // a poisoned window mutex means some other rank panicked;
+            // the counter is valid at every state, so keep going and
+            // let the liveness checks above turn it into a typed error
+            let (g, _) = match w.drained.wait_timeout(inflight, POLL) {
+                Ok(r) => r,
+                Err(poisoned) => poisoned.into_inner(),
+            };
             inflight = g;
         }
         *inflight += 1;
@@ -153,7 +168,7 @@ impl ChannelTransport {
     /// Credit the `src → me` window back after draining a message.
     fn release_window(&self, src: usize) {
         let w = &self.recv_windows[src];
-        let mut n = w.inflight.lock().unwrap();
+        let mut n = lock_unpoisoned(&w.inflight);
         *n = n.saturating_sub(1);
         w.drained.notify_one();
     }
@@ -161,11 +176,12 @@ impl ChannelTransport {
     /// Grab a window slot toward `to` without blocking: `Ok(false)`
     /// when the window is full, error when the peer is dead.
     fn try_acquire_window(&self, to: usize) -> Result<bool> {
+        // ord: Acquire pairs with the peer's Release flag store on drop
         if !self.alive[to].load(Ordering::Acquire) {
             bail!("rank {} send to dead rank {to}", self.rank);
         }
         let w = &self.send_windows[to];
-        let mut inflight = w.inflight.lock().unwrap();
+        let mut inflight = lock_unpoisoned(&w.inflight);
         if *inflight >= SEND_WINDOW {
             return Ok(false);
         }
@@ -227,6 +243,7 @@ impl Transport for ChannelTransport {
         ensure!(to < self.world,
                 "rank {} send to rank {to} outside world {}",
                 self.rank, self.world);
+        // ord: Acquire pairs with the peer's Release flag store on drop
         if !self.alive[to].load(Ordering::Acquire) {
             bail!("rank {} send to dead rank {to}", self.rank);
         }
@@ -254,6 +271,8 @@ impl Transport for ChannelTransport {
                     self.parked.entry((f, t)).or_default().push_back(data);
                 }
                 Err(RecvTimeoutError::Timeout) => {
+                    // ord: Acquire pairs with the peer's Release flag
+                    // store on drop
                     if !self.alive[from].load(Ordering::Acquire) {
                         // the peer is gone, but its final sends may
                         // have landed between our timeout and the
@@ -318,6 +337,7 @@ impl Transport for ChannelTransport {
         // can ever arrive — but its final sends happen-before the flag
         // drop, so after this Acquire load everything it sent is
         // visible; drain once more before reporting it dead.
+        // ord: Acquire pairs with the peer's Release flag store on drop
         if !self.alive[from].load(Ordering::Acquire) {
             if let Some(v) = self.drain_mailbox(from, tag)? {
                 return Ok(Some(v));
@@ -339,6 +359,8 @@ impl Transport for ChannelTransport {
 
 impl Drop for ChannelTransport {
     fn drop(&mut self) {
+        // ord: Release — every send this rank made happens-before the
+        // flag drop, pairing with the Acquire loads above
         self.alive[self.rank].store(false, Ordering::Release);
         // wake senders blocked on our windows so they error out
         // instead of waiting for the stall deadline

@@ -45,6 +45,7 @@
 
 pub mod channel;
 pub mod shm;
+pub mod spsc;
 pub mod tcp;
 
 pub use channel::{ChannelTransport, World};

@@ -13,6 +13,14 @@
 //! per pair — the same backpressure contract as the channel backend's
 //! send window.
 //!
+//! concurrency invariant: every atomic here follows the SPSC ring
+//! protocol in [`super::spsc`] — head store Release pairs with head
+//! load Acquire, tail store Release with tail load Acquire, the alive
+//! flag's drop-path Release with its Acquire loads; each side reads its
+//! own counter Relaxed as sole writer. The protocol itself is factored
+//! into `spsc.rs` and exhaustively model-checked by
+//! `tests/interleave_model.rs`.
+//!
 //! Liveness mirrors the channel backend: a shared per-rank `alive`
 //! flag, flipped on drop, turns waits on a dead peer into errors. A
 //! dead peer's in-flight slots remain receivable — the flag is only
@@ -24,7 +32,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure};
 
+use super::spsc::{self, MemOrd, RecvPoll, RingMem, SendPoll};
 use super::{spin_backoff, BufferPool, Transport, TransportStats};
+use crate::util::sync::lock_unpoisoned;
 use crate::Result;
 
 /// In-flight messages per (src, dst) ring — the shm backpressure
@@ -54,6 +64,61 @@ struct Shared {
     world: usize,
     rings: Vec<Ring>,
     alive: Vec<AtomicBool>,
+}
+
+impl Shared {
+    fn ring(&self, src: usize, dst: usize) -> &Ring {
+        &self.rings[src * self.world + dst]
+    }
+}
+
+/// One ring viewed through the [`RingMem`] facade: the production
+/// implementation the model-checked protocol in [`spsc`] runs against.
+/// The per-slot mutex is aliasing-only; all ordering comes from the
+/// head/tail/alive atomics, which is exactly the claim the interleaving
+/// tests verify by modeling slots as plain racy memory.
+struct RingRef<'a> {
+    ring: &'a Ring,
+    alive: &'a AtomicBool,
+}
+
+// ord: the facade maps the protocol's MemOrd 1:1 onto std orderings;
+// every pairing is documented in spsc.rs at the call sites.
+fn ord(o: MemOrd) -> Ordering {
+    match o {
+        MemOrd::Relaxed => Ordering::Relaxed,
+        MemOrd::Acquire => Ordering::Acquire,
+        MemOrd::Release => Ordering::Release,
+    }
+}
+
+impl RingMem for RingRef<'_> {
+    type Payload = (u32, Vec<f32>);
+
+    fn capacity(&self) -> usize {
+        RING_SLOTS
+    }
+    fn load_head(&mut self, o: MemOrd) -> usize {
+        self.ring.head.load(ord(o))
+    }
+    fn store_head(&mut self, v: usize, o: MemOrd) {
+        self.ring.head.store(v, ord(o));
+    }
+    fn load_tail(&mut self, o: MemOrd) -> usize {
+        self.ring.tail.load(ord(o))
+    }
+    fn store_tail(&mut self, v: usize, o: MemOrd) {
+        self.ring.tail.store(v, ord(o));
+    }
+    fn load_alive(&mut self, o: MemOrd) -> bool {
+        self.alive.load(ord(o))
+    }
+    fn slot_put(&mut self, idx: usize, item: (u32, Vec<f32>)) {
+        *lock_unpoisoned(&self.ring.slots[idx]) = Some(item);
+    }
+    fn slot_take(&mut self, idx: usize) -> Option<(u32, Vec<f32>)> {
+        lock_unpoisoned(&self.ring.slots[idx]).take()
+    }
 }
 
 /// Per-rank handle onto the shared slot-ring fabric.
@@ -88,61 +153,56 @@ impl ShmTransport {
             .collect()
     }
 
-    fn ring(&self, src: usize, dst: usize) -> &Ring {
-        &self.shared.rings[src * self.shared.world + dst]
-    }
-
     /// Publish `data` into the `self → to` ring if a slot is free.
     /// `Ok(false)` when the ring is full; errors when the ring is full
     /// *and* the peer is dead (nothing will ever drain it).
     fn try_publish(&mut self, to: usize, tag: u32, data: &[f32])
         -> Result<bool> {
-        {
-            let ring = self.ring(self.rank, to);
-            let head = ring.head.load(Ordering::Relaxed); // sole producer
-            let tail = ring.tail.load(Ordering::Acquire);
-            if head - tail >= RING_SLOTS {
-                if !self.shared.alive[to].load(Ordering::Acquire) {
-                    bail!("rank {} send to dead rank {to}", self.rank);
-                }
-                return Ok(false);
+        let mut mem = RingRef {
+            ring: self.shared.ring(self.rank, to),
+            alive: &self.shared.alive[to],
+        };
+        let pool = &mut self.pool;
+        match spsc::offer(&mut mem, || {
+            // only runs once room is confirmed — a full ring costs no
+            // allocation or copy
+            let mut buf = pool.take();
+            buf.extend_from_slice(data);
+            (tag, buf)
+        }) {
+            SendPoll::Sent => {
+                self.stats.record_send(data.len());
+                Ok(true)
+            }
+            SendPoll::Full => Ok(false),
+            SendPoll::PeerDead => {
+                bail!("rank {} send to dead rank {to}", self.rank)
             }
         }
-        // room confirmed: we are the sole producer, so `head` cannot
-        // have moved and `tail` can only have opened more room
-        let mut buf = self.pool.take();
-        buf.extend_from_slice(data);
-        let ring = self.ring(self.rank, to);
-        let head = ring.head.load(Ordering::Relaxed);
-        *ring.slots[head % RING_SLOTS].lock().unwrap() =
-            Some((tag, buf));
-        ring.head.store(head + 1, Ordering::Release);
-        self.stats.record_send(data.len());
-        Ok(true)
     }
 
-    /// Consume everything currently in the `from → self` ring, parking
-    /// mismatches, until a `(from, tag)` match pops out or the ring
-    /// runs empty (`Ok(None)`).
+    /// Pump the `from → self` ring through the facade's poll protocol,
+    /// parking tag mismatches, until a `(from, tag)` match pops out,
+    /// the ring runs empty, or the peer is provably dead.
     fn drain_ring(&mut self, from: usize, tag: u32)
-        -> Option<Vec<f32>> {
+        -> Result<RecvPoll<Vec<f32>>> {
         loop {
-            let ring = self.ring(from, self.rank);
-            let tail = ring.tail.load(Ordering::Relaxed); // sole consumer
-            if ring.head.load(Ordering::Acquire) == tail {
-                return None;
+            let mut mem = RingRef {
+                ring: self.shared.ring(from, self.rank),
+                alive: &self.shared.alive[from],
+            };
+            match spsc::poll(&mut mem)? {
+                RecvPoll::Got((t, data)) => {
+                    self.stats.record_recv(data.len());
+                    if t == tag {
+                        return Ok(RecvPoll::Got(data));
+                    }
+                    self.parked.entry((from, t)).or_default()
+                        .push_back(data);
+                }
+                RecvPoll::Empty => return Ok(RecvPoll::Empty),
+                RecvPoll::PeerDead => return Ok(RecvPoll::PeerDead),
             }
-            let (t, data) = ring.slots[tail % RING_SLOTS]
-                .lock()
-                .unwrap()
-                .take()
-                .expect("slot ring corrupted: empty slot below head");
-            ring.tail.store(tail + 1, Ordering::Release);
-            self.stats.record_recv(data.len());
-            if t == tag {
-                return Some(data);
-            }
-            self.parked.entry((from, t)).or_default().push_back(data);
         }
     }
 }
@@ -181,22 +241,15 @@ impl Transport for ShmTransport {
         }
         let mut spins = 0u32;
         loop {
-            if let Some(data) = self.drain_ring(from, tag) {
-                return Ok(data);
-            }
-            // ring empty: a dead peer's slots were all published
-            // before its alive flag dropped (slot store happens-before
-            // the Release flag store), so after an Acquire load of the
-            // flag one more drain decides — either the final publish
-            // is now visible, or nothing more can ever arrive
-            if !self.shared.alive[from].load(Ordering::Acquire) {
-                if let Some(data) = self.drain_ring(from, tag) {
-                    return Ok(data); // the racing final publish
+            match self.drain_ring(from, tag)? {
+                RecvPoll::Got(data) => return Ok(data),
+                RecvPoll::Empty => spin_backoff(&mut spins),
+                RecvPoll::PeerDead => {
+                    bail!("rank {}: recv from dead rank {from} \
+                           (tag {tag})",
+                          self.rank)
                 }
-                bail!("rank {}: recv from dead rank {from} (tag {tag})",
-                      self.rank);
             }
-            spin_backoff(&mut spins);
         }
     }
 
@@ -218,19 +271,14 @@ impl Transport for ShmTransport {
                 return Ok(Some(v));
             }
         }
-        if let Some(data) = self.drain_ring(from, tag) {
-            return Ok(Some(data));
-        }
-        // same death protocol as the blocking path: flag check, then
-        // one more drain for the racing final publish
-        if !self.shared.alive[from].load(Ordering::Acquire) {
-            if let Some(data) = self.drain_ring(from, tag) {
-                return Ok(Some(data));
+        match self.drain_ring(from, tag)? {
+            RecvPoll::Got(data) => Ok(Some(data)),
+            RecvPoll::Empty => Ok(None),
+            RecvPoll::PeerDead => {
+                bail!("rank {}: recv from dead rank {from} (tag {tag})",
+                      self.rank)
             }
-            bail!("rank {}: recv from dead rank {from} (tag {tag})",
-                  self.rank);
         }
-        Ok(None)
     }
 
     fn recycle(&mut self, buf: Vec<f32>) {
@@ -244,6 +292,10 @@ impl Transport for ShmTransport {
 
 impl Drop for ShmTransport {
     fn drop(&mut self) {
+        // ord: Release — every publish this rank made happens-before
+        // the flag drop, pairing with peers' Acquire loads in
+        // spsc::poll / spsc::offer so the post-flag drain cannot lose
+        // the final message.
         self.shared.alive[self.rank].store(false, Ordering::Release);
     }
 }

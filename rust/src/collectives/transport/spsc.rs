@@ -1,0 +1,279 @@
+//! The SPSC slot-ring protocol, factored behind a tiny memory facade.
+//!
+//! The shm backend's ring (`shm.rs`) is the one piece of hand-rolled
+//! lock-free code in the transport layer, and its correctness argument —
+//! which loads pair with which stores, why one extra drain after seeing
+//! a dead alive-flag cannot lose a message — used to live in comments.
+//! This module makes that argument checkable: the protocol is written
+//! once, generically over [`RingMem`], and runs both against real
+//! atomics in production (`shm::RingRef`) and against the simulated
+//! weak-memory model in `tests/interleave_model.rs`, where the
+//! interleaving explorer exhaustively verifies it. Weakening any
+//! ordering below (e.g. the head store's `Release`) makes the model
+//! tests fail with a concrete interleaving.
+//!
+//! The protocol and its pairings:
+//!
+//! * the producer publishes: slot write, then `head` store `Release`;
+//! * the consumer's `head` load `Acquire` pairs with that store and
+//!   makes the slot write visible before the slot is read;
+//! * the consumer frees: slot take, then `tail` store `Release`;
+//! * the producer's `tail` load `Acquire` pairs with that store and
+//!   makes the slot vacancy visible before the slot is reused;
+//! * each side reads its own counter `Relaxed` (sole writer);
+//! * a dying peer's `alive` store `Release` happens-after its final
+//!   publish, so a consumer that `Acquire`-loads the flag as dead and
+//!   then drains once more either sees the final message or can prove
+//!   nothing more will ever arrive.
+
+use crate::Result;
+
+/// The orderings the ring protocol uses. A deliberate subset of
+/// `std::sync::atomic::Ordering`: the protocol never needs `AcqRel` or
+/// `SeqCst`, and keeping them unrepresentable here means the facade
+/// cannot quietly escalate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemOrd {
+    Relaxed,
+    Acquire,
+    Release,
+}
+
+/// Memory a slot ring lives in: head/tail/alive cells with explicit
+/// orderings, plus slot storage. Implementations: real atomics in
+/// `shm.rs` (the per-slot mutex there is aliasing-only — *all* ordering
+/// must come from the head/tail protocol, which is exactly what the
+/// model checker verifies by modeling slots as plain racy memory), and
+/// the simulated model in `tests/interleave_model.rs`.
+pub trait RingMem {
+    type Payload;
+
+    /// Number of slots; head/tail are free-running and indexed mod this.
+    fn capacity(&self) -> usize;
+
+    fn load_head(&mut self, ord: MemOrd) -> usize;
+    fn store_head(&mut self, v: usize, ord: MemOrd);
+    fn load_tail(&mut self, ord: MemOrd) -> usize;
+    fn store_tail(&mut self, v: usize, ord: MemOrd);
+    /// The producing peer's liveness flag (stored with Release on its
+    /// drop path).
+    fn load_alive(&mut self, ord: MemOrd) -> bool;
+
+    /// Write a payload into an empty slot. Ordering is provided by the
+    /// surrounding head/tail protocol, not by this call.
+    fn slot_put(&mut self, idx: usize, item: Self::Payload);
+    /// Take the payload out of a slot; `None` means the slot was empty,
+    /// which the protocol treats as corruption.
+    fn slot_take(&mut self, idx: usize) -> Option<Self::Payload>;
+}
+
+/// Outcome of one producer-side publish attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendPoll {
+    /// Payload published and visible to the consumer.
+    Sent,
+    /// Ring full; the peer is alive, so it will drain. Retry later.
+    Full,
+    /// Ring full and the peer is dead: nothing will ever drain it.
+    PeerDead,
+}
+
+/// Outcome of one consumer-side poll.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvPoll<P> {
+    Got(P),
+    /// Nothing buffered, peer alive — more may arrive.
+    Empty,
+    /// Nothing buffered and the peer is dead: provably nothing more
+    /// will ever arrive (the post-flag drain already ran).
+    PeerDead,
+}
+
+/// Protocol-invariant breach: `head` says a slot is occupied but the
+/// slot is empty. Surfaced as a typed error instead of the panic the
+/// pre-lint code used — a corrupted fabric must tear the op down, not
+/// the process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingCorrupt {
+    pub index: usize,
+}
+
+impl std::fmt::Display for RingCorrupt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "slot ring corrupted: empty slot {} below head",
+            self.index
+        )
+    }
+}
+
+impl std::error::Error for RingCorrupt {}
+
+/// Producer side: publish `make()` into the ring if a slot is free.
+/// `make` is only invoked once room is confirmed, so a full ring costs
+/// no allocation or copy. The sole-producer invariant makes the Relaxed
+/// head load safe: nobody else ever stores head.
+pub fn offer<M, F>(m: &mut M, make: F) -> SendPoll
+where
+    M: RingMem,
+    F: FnOnce() -> M::Payload,
+{
+    let head = m.load_head(MemOrd::Relaxed); // sole producer: own last store
+    let tail = m.load_tail(MemOrd::Acquire); // pairs with consumer's tail Release
+    if head.wrapping_sub(tail) >= m.capacity() {
+        if !m.load_alive(MemOrd::Acquire) {
+            // pairs with the peer's Release store on drop
+            return SendPoll::PeerDead;
+        }
+        return SendPoll::Full;
+    }
+    // Room confirmed: we are the sole producer, so head cannot have
+    // moved, and tail can only have opened more room.
+    let cap = m.capacity();
+    m.slot_put(head % cap, make());
+    m.store_head(head.wrapping_add(1), MemOrd::Release); // publishes the slot write
+    SendPoll::Sent
+}
+
+/// Consumer side: take one payload if any is visible. The sole-consumer
+/// invariant makes the Relaxed tail load safe.
+pub fn consume<M: RingMem>(m: &mut M) -> Result<Option<M::Payload>> {
+    let tail = m.load_tail(MemOrd::Relaxed); // sole consumer: own last store
+    let head = m.load_head(MemOrd::Acquire); // pairs with producer's head Release
+    if head == tail {
+        return Ok(None);
+    }
+    let cap = m.capacity();
+    match m.slot_take(tail % cap) {
+        Some(item) => {
+            m.store_tail(tail.wrapping_add(1), MemOrd::Release); // frees the slot
+            Ok(Some(item))
+        }
+        None => Err(RingCorrupt { index: tail % cap }.into()),
+    }
+}
+
+/// Consumer side with the dead-peer protocol: empty ring → check the
+/// alive flag → if dead, drain exactly once more. The peer's final
+/// publish happens-before its Release store of the flag, so after the
+/// Acquire load here that publish is visible — either the extra drain
+/// returns it, or nothing more can ever arrive. The model checker
+/// proves this (and that weakening any of the three orderings involved
+/// loses messages or races).
+pub fn poll<M: RingMem>(m: &mut M) -> Result<RecvPoll<M::Payload>> {
+    if let Some(item) = consume(m)? {
+        return Ok(RecvPoll::Got(item));
+    }
+    if m.load_alive(MemOrd::Acquire) {
+        // pairs with the peer's Release store on drop
+        return Ok(RecvPoll::Empty);
+    }
+    match consume(m)? {
+        Some(item) => Ok(RecvPoll::Got(item)), // the racing final publish
+        None => Ok(RecvPoll::PeerDead),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Single-threaded fake memory: sequential semantics, for testing
+    /// the protocol's state logic (the *concurrency* is exercised by
+    /// tests/interleave_model.rs).
+    struct SeqMem {
+        head: usize,
+        tail: usize,
+        alive: bool,
+        slots: Vec<Option<u64>>,
+    }
+
+    impl SeqMem {
+        fn new(cap: usize) -> SeqMem {
+            SeqMem {
+                head: 0,
+                tail: 0,
+                alive: true,
+                slots: (0..cap).map(|_| None).collect(),
+            }
+        }
+    }
+
+    impl RingMem for SeqMem {
+        type Payload = u64;
+        fn capacity(&self) -> usize {
+            self.slots.len()
+        }
+        fn load_head(&mut self, _: MemOrd) -> usize {
+            self.head
+        }
+        fn store_head(&mut self, v: usize, _: MemOrd) {
+            self.head = v;
+        }
+        fn load_tail(&mut self, _: MemOrd) -> usize {
+            self.tail
+        }
+        fn store_tail(&mut self, v: usize, _: MemOrd) {
+            self.tail = v;
+        }
+        fn load_alive(&mut self, _: MemOrd) -> bool {
+            self.alive
+        }
+        fn slot_put(&mut self, idx: usize, item: u64) {
+            assert!(self.slots[idx].is_none(), "slot overwrite");
+            self.slots[idx] = Some(item);
+        }
+        fn slot_take(&mut self, idx: usize) -> Option<u64> {
+            self.slots[idx].take()
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_wraparound() {
+        let mut m = SeqMem::new(4);
+        for round in 0..5u64 {
+            for i in 0..4 {
+                assert_eq!(offer(&mut m, || round * 10 + i), SendPoll::Sent);
+            }
+            assert_eq!(offer(&mut m, || 999), SendPoll::Full);
+            for i in 0..4 {
+                assert_eq!(consume(&mut m).unwrap(), Some(round * 10 + i));
+            }
+            assert_eq!(consume(&mut m).unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn full_ring_on_dead_peer_reports_death() {
+        let mut m = SeqMem::new(2);
+        assert_eq!(offer(&mut m, || 1), SendPoll::Sent);
+        assert_eq!(offer(&mut m, || 2), SendPoll::Sent);
+        m.alive = false;
+        assert_eq!(offer(&mut m, || 3), SendPoll::PeerDead);
+    }
+
+    #[test]
+    fn poll_drains_dead_peer_before_reporting_death() {
+        let mut m = SeqMem::new(4);
+        assert_eq!(offer(&mut m, || 7), SendPoll::Sent);
+        m.alive = false;
+        assert_eq!(poll(&mut m).unwrap(), RecvPoll::Got(7));
+        assert_eq!(poll(&mut m).unwrap(), RecvPoll::PeerDead);
+    }
+
+    #[test]
+    fn poll_on_live_empty_ring_is_empty() {
+        let mut m = SeqMem::new(4);
+        assert_eq!(poll(&mut m).unwrap(), RecvPoll::Empty);
+    }
+
+    #[test]
+    fn empty_slot_below_head_is_a_typed_error() {
+        let mut m = SeqMem::new(4);
+        assert_eq!(offer(&mut m, || 1), SendPoll::Sent);
+        m.slots[0] = None; // corrupt the fabric
+        let err = consume(&mut m).unwrap_err();
+        assert!(err.downcast_ref::<RingCorrupt>().is_some(), "{err}");
+    }
+}

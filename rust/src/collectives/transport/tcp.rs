@@ -34,6 +34,14 @@
 //! the writer thread, which flags the peer dead so the next send
 //! errors — the "graceful dead-peer error" leg of the conformance
 //! suite.
+//!
+//! concurrency invariant: real synchronization here is carried by the
+//! sync channels and the sockets. The only atomics are each peer's
+//! `dead` flag (writer thread stores Release after its last write
+//! attempt; senders load Acquire before posting) and the advisory
+//! `queued` depth probe, which is Relaxed on purpose — it orders
+//! nothing, the channel itself is the synchronization, and a stale
+//! probe only costs one extra `Ok(false)` poll.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, Read, Write};
@@ -46,6 +54,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context};
 
 use super::{BufferPool, Transport, TransportStats};
+use crate::util::bytes::u32_at;
 use crate::Result;
 
 /// Max f32 elements per frame (256 KiB of payload): large messages
@@ -109,10 +118,9 @@ fn read_message(reader: &mut BufReader<TcpStream>, rank: usize,
             format!("rank {rank}: rank {from} closed the \
                      connection (dead peer)")
         })?;
-        let tag = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
-        let elems =
-            u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
-        let last = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        let tag = u32_at(&hdr, 0)?;
+        let elems = u32_at(&hdr, 4)? as usize;
+        let last = u32_at(&hdr, 8)?;
         if elems > MAX_FRAME_ELEMS || last > 1 {
             bail!("rank {rank}: corrupt frame from rank {from} \
                    ({elems} elems, last={last})");
@@ -124,18 +132,25 @@ fn read_message(reader: &mut BufReader<TcpStream>, rank: usize,
                 "rank {rank}: interleaved frames from rank {from} \
                  (tag {tag} inside message tagged {t0})"),
         }
+        // bounded: elems ≤ MAX_FRAME_ELEMS checked above, so this
+        // header-derived allocation is capped at 256 KiB
         rbuf.resize(elems * 4, 0);
         reader.read_exact(rbuf).with_context(|| {
             format!("rank {rank}: rank {from} died mid-frame")
         })?;
         out.extend(rbuf.chunks_exact(4).map(|c| {
-            f32::from_le_bytes(c.try_into().unwrap())
+            f32::from_le_bytes([c[0], c[1], c[2], c[3]])
         }));
         if last == 1 {
             break;
         }
     }
-    Ok((msg_tag.expect("message has at least one frame"), out))
+    match msg_tag {
+        Some(tag) => Ok((tag, out)),
+        // the loop body always runs at least once, but a typed error
+        // beats an expect() on the transport path
+        None => bail!("rank {rank}: empty message from rank {from}"),
+    }
 }
 
 /// One connected peer: a writer-thread handle for sends, a
@@ -148,8 +163,9 @@ struct Peer {
     /// Messages sitting in the writer queue. `try_send` probes this
     /// *before* copying the payload, so a window-stalled engine poll
     /// costs an atomic load instead of an O(message) memcpy that gets
-    /// thrown away (conservative: a racing decrement only means one
-    /// extra `Ok(false)` poll).
+    /// thrown away. Purely advisory — all accesses are Relaxed; the
+    /// sync channel is the real synchronization, and a stale probe
+    /// only means one extra `Ok(false)` poll.
     queued: Arc<AtomicUsize>,
     /// Extra clone of the connection used only to `shutdown` the read
     /// direction on drop — without it, our blocked reader thread would
@@ -171,6 +187,8 @@ impl Peer {
         let queued = Arc::new(AtomicUsize::new(0));
         spawn_writer(stream, wrx, dead.clone(), queued.clone());
         let (rtx, rx) = sync_channel::<Inbound>(RECV_QUEUE);
+        // bounded: fixed 64 KiB read buffer, independent of any frame
+        // header
         spawn_reader(BufReader::with_capacity(1 << 16, read_half), rtx,
                      rank, from);
         Ok(Peer { tx, rx, dead, queued, stream: shutdown_handle })
@@ -197,13 +215,18 @@ fn spawn_writer(mut stream: TcpStream, rx: Receiver<(u32, Vec<f32>)>,
     std::thread::spawn(move || {
         let mut wbuf = Vec::new();
         while let Ok((tag, data)) = rx.recv() {
-            queued.fetch_sub(1, Ordering::AcqRel);
+            // ord: Relaxed — advisory depth probe, see Peer::queued
+            queued.fetch_sub(1, Ordering::Relaxed);
             if write_frames(&mut stream, tag, &data, &mut wbuf).is_err() {
+                // ord: Release pairs with senders' Acquire loads — the
+                // failed write happens-before the flag, so a sender
+                // that sees it dead knows the link is truly down
                 dead.store(true, Ordering::Release);
                 // keep draining so blocked senders fail via the flag
                 // instead of hanging on a full queue
                 while rx.recv().is_ok() {
-                    queued.fetch_sub(1, Ordering::AcqRel);
+                    // ord: Relaxed — advisory, see Peer::queued
+                    queued.fetch_sub(1, Ordering::Relaxed);
                 }
                 return;
             }
@@ -251,6 +274,7 @@ impl TcpTransport {
     /// accept order is deterministic and needs no handshake protocol.
     pub fn world(world: usize) -> Result<Vec<TcpTransport>> {
         assert!(world > 0);
+        // bounded: sized by the caller's world count, not wire input
         let mut listeners = Vec::with_capacity(world);
         let mut addrs = Vec::with_capacity(world);
         for rank in 0..world {
@@ -300,6 +324,19 @@ impl TcpTransport {
     }
 }
 
+/// Look up the mesh link to `p`. A free function rather than a method
+/// so callers keep disjoint borrows of `stats`/`parked`/`pool`
+/// alongside the returned peer. `check_peer` makes the `None` arm
+/// unreachable in practice; a typed error beats an `expect()` on the
+/// transport path regardless.
+fn peer_of<'a>(peers: &'a [Option<Peer>], p: usize, rank: usize)
+    -> Result<&'a Peer> {
+    match peers.get(p).and_then(|x| x.as_ref()) {
+        Some(peer) => Ok(peer),
+        None => bail!("rank {rank}: no mesh link to rank {p}"),
+    }
+}
+
 impl Transport for TcpTransport {
     fn rank(&self) -> usize {
         self.rank
@@ -314,13 +351,16 @@ impl Transport for TcpTransport {
         self.check_peer(to, "send to")?;
         let mut buf = self.pool.take();
         buf.extend_from_slice(data);
-        let peer = self.peers[to].as_ref().expect("mesh link missing");
+        let peer = peer_of(&self.peers, to, self.rank)?;
+        // ord: Acquire pairs with the writer thread's Release store on
+        // write failure
         if peer.dead.load(Ordering::Acquire) {
             bail!("rank {} send to dead rank {to} (connection lost)",
                   self.rank);
         }
         self.stats.record_send(data.len());
-        peer.queued.fetch_add(1, Ordering::AcqRel);
+        // ord: Relaxed — advisory depth probe, see Peer::queued
+        peer.queued.fetch_add(1, Ordering::Relaxed);
         peer.tx
             .send((tag, buf))
             .ok()
@@ -336,8 +376,7 @@ impl Transport for TcpTransport {
             }
         }
         loop {
-            let peer =
-                self.peers[from].as_ref().expect("mesh link missing");
+            let peer = peer_of(&self.peers, from, self.rank)?;
             let (t, data) = match peer.rx.recv() {
                 Ok(Ok(m)) => m,
                 Ok(Err(msg)) => bail!("{msg}"),
@@ -357,8 +396,9 @@ impl Transport for TcpTransport {
         -> Result<bool> {
         self.check_peer(to, "send to")?;
         {
-            let peer =
-                self.peers[to].as_ref().expect("mesh link missing");
+            let peer = peer_of(&self.peers, to, self.rank)?;
+            // ord: Acquire pairs with the writer thread's Release
+            // store on write failure
             if peer.dead.load(Ordering::Acquire) {
                 bail!("rank {} send to dead rank {to} (connection \
                        lost)", self.rank);
@@ -367,14 +407,16 @@ impl Transport for TcpTransport {
             // window-stalled engine polls this on every sweep, and an
             // O(message) memcpy thrown away per poll would burn the
             // CPU the overlap exists to free
-            if peer.queued.load(Ordering::Acquire) >= SEND_QUEUE {
+            // ord: Relaxed — advisory depth probe, see Peer::queued
+            if peer.queued.load(Ordering::Relaxed) >= SEND_QUEUE {
                 return Ok(false);
             }
         }
         let mut buf = self.pool.take();
         buf.extend_from_slice(data);
-        let peer = self.peers[to].as_ref().expect("mesh link missing");
-        peer.queued.fetch_add(1, Ordering::AcqRel);
+        let peer = peer_of(&self.peers, to, self.rank)?;
+        // ord: Relaxed — advisory depth probe, see Peer::queued
+        peer.queued.fetch_add(1, Ordering::Relaxed);
         match peer.tx.try_send((tag, buf)) {
             Ok(()) => {
                 self.stats.record_send(data.len());
@@ -383,12 +425,14 @@ impl Transport for TcpTransport {
             Err(TrySendError::Full((_, buf))) => {
                 // lost the race with another fill between probe and
                 // send; undo the reservation and retry next poll
-                peer.queued.fetch_sub(1, Ordering::AcqRel);
+                // ord: Relaxed — advisory, see Peer::queued
+                peer.queued.fetch_sub(1, Ordering::Relaxed);
                 self.pool.put(buf);
                 Ok(false)
             }
             Err(TrySendError::Disconnected(_)) => {
-                peer.queued.fetch_sub(1, Ordering::AcqRel);
+                // ord: Relaxed — advisory, see Peer::queued
+                peer.queued.fetch_sub(1, Ordering::Relaxed);
                 bail!("rank {} send to dead rank {to} (writer shut \
                        down)", self.rank)
             }
@@ -404,8 +448,7 @@ impl Transport for TcpTransport {
             }
         }
         loop {
-            let peer =
-                self.peers[from].as_ref().expect("mesh link missing");
+            let peer = peer_of(&self.peers, from, self.rank)?;
             let (t, data) = match peer.rx.try_recv() {
                 Ok(Ok(m)) => m,
                 Ok(Err(msg)) => bail!("{msg}"),

@@ -19,6 +19,10 @@
 //! prefetch·batch` regardless of dataset size. Counters for bytes read,
 //! hits/misses and IO wait feed [`super::loader::LoaderStats`] and from
 //! there the per-step report columns.
+//!
+//! concurrency invariant: the [`IoStats`] atomics are monotonic stat
+//! counters accessed `Relaxed` — telemetry only, never used to publish
+//! memory. The cache's shared state is protected by its inner mutex.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -54,6 +58,8 @@ impl IoStats {
     /// Fraction of lookups served without touching disk. A window with
     /// no lookups reports 1.0 (nothing was missed).
     pub fn hit_rate(&self) -> f64 {
+        // ord: Relaxed — advisory counters; a read racing an update
+        // is off by at most one lookup
         let h = self.cache_hits.load(Ordering::Relaxed) as f64;
         let m = self.cache_misses.load(Ordering::Relaxed) as f64;
         if h + m == 0.0 { 1.0 } else { h / (h + m) }
@@ -62,6 +68,8 @@ impl IoStats {
     /// Snapshot (bytes_read, hits, misses, io_wait_ns) for delta
     /// accounting across steps.
     pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        // ord: Relaxed — the four counters are not mutually
+        // consistent and callers only compute per-step deltas
         (
             self.bytes_read.load(Ordering::Relaxed),
             self.cache_hits.load(Ordering::Relaxed),
@@ -95,6 +103,7 @@ impl DatasetIndex {
     /// bounds (via [`ShardReader::open`]) and uniform sequence length.
     pub fn open(paths: &[PathBuf]) -> Result<DatasetIndex> {
         ensure!(!paths.is_empty(), "no shards to index");
+        // bounded: one metadata entry per caller-supplied shard path
         let mut shards = Vec::with_capacity(paths.len());
         let mut seq = 0usize;
         let mut total = 0u64;
@@ -233,6 +242,8 @@ impl BlockCache {
         let tick = inner.tick;
         if let Some(b) = inner.blocks.get_mut(&key) {
             b.tick = tick;
+            // ord: Relaxed — monotonic stat counters (here and below);
+            // the cache itself is serialized by `inner`'s mutex
             io.cache_hits.fetch_add(1, Ordering::Relaxed);
             let off = (local - block * self.block_samples) as usize;
             return Ok(b.samples[off].clone());
@@ -252,6 +263,7 @@ impl BlockCache {
                 format!("fetching block {block} of {}", meta.path.display())
             })?;
         inner.reader = Some((shard, reader));
+        // ord: Relaxed — same advisory-counter contract as above
         io.io_wait_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let bytes = n * Sample::disk_bytes(self.index.seq());

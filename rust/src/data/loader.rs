@@ -23,6 +23,11 @@
 //! An optional per-batch `io_delay_us` emulates slow storage fetches so
 //! the rec-3 experiment can expose the under-provisioned-loader regime
 //! (utilization sawtooth) at CPU speeds.
+//!
+//! concurrency invariant: every atomic in this module is a monotonic
+//! stat counter accessed `Relaxed` — telemetry only, never used to
+//! publish memory. Real synchronization between workers and the
+//! consumer is the bounded `sync_channel` plus the error mutex.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -150,6 +155,8 @@ impl LoaderPool {
         F: Fn(&Arc<LoaderStats>) -> P,
     {
         let stats = Arc::new(LoaderStats::default());
+        // ord: Relaxed — advisory stat, stored before any reader
+        // thread exists and only ever read for reporting
         stats
             .dropped_remainder
             .store(remainder as u64, Ordering::Relaxed);
@@ -345,6 +352,8 @@ impl LoaderPool {
         loop {
             if let Some(b) = self.reorder.remove(&self.next_step) {
                 self.next_step += 1;
+                // ord: Relaxed — monotonic stat counters; readers
+                // tolerate slightly stale values (telemetry only)
                 self.stats
                     .wait_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64,

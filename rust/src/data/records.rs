@@ -48,6 +48,8 @@ impl Sample {
     /// Build from unpadded tokens, truncating/padding to `seq`.
     pub fn from_tokens(tokens: &[u16], seq: usize) -> Sample {
         let len = tokens.len().min(seq);
+        // bounded: seq is the caller's configured sequence length, not
+        // a wire- or file-derived value
         let mut ids = Vec::with_capacity(seq);
         ids.extend_from_slice(&tokens[..len]);
         ids.resize(seq, PAD);
@@ -89,6 +91,7 @@ impl ShardWriter {
                 "sample seq {} != shard seq {}", sample.ids.len(), self.seq);
         self.out.write_all(&sample.len.to_le_bytes())?;
         // bulk-write ids as LE u16
+        // bounded: sized from the in-memory sample being written
         let mut buf = Vec::with_capacity(sample.ids.len() * 2);
         for id in &sample.ids {
             buf.extend_from_slice(&id.to_le_bytes());
@@ -190,6 +193,8 @@ impl ShardReader {
                 "block [{start}, {}) outside shard of {} samples",
                 start + n, self.count);
         let sample_bytes = Sample::disk_bytes(self.seq) as usize;
+        // bounded: start + n ≤ count (checked above) and count was
+        // validated against the file's real payload size in `open`
         let mut buf = vec![0u8; n * sample_bytes];
         self.file.seek(SeekFrom::Start(self.offset(start)))?;
         self.file.read_exact(&mut buf).with_context(|| {
@@ -210,6 +215,8 @@ impl ShardReader {
         let sample_bytes = Sample::disk_bytes(self.seq) as usize;
         self.file.seek(SeekFrom::Start(HEADER_BYTES))?;
         let mut r = BufReader::new(&self.file);
+        // bounded: one sample's bytes; count was validated against the
+        // file's real payload size in `open`
         let mut buf = vec![0u8; sample_bytes];
         let mut out = Vec::with_capacity(self.count);
         for i in 0..self.count {

@@ -46,6 +46,7 @@ use anyhow::{bail, Context};
 
 use crate::collectives::{BucketPlan, Transport};
 use crate::runtime::HostParams;
+use crate::util::bytes::{u32_at, u64_at};
 use crate::Result;
 
 const MAGIC: u32 = 0x5458_434B;
@@ -128,6 +129,8 @@ impl Checkpoint {
 
 fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
     w.write_all(&(data.len() as u64).to_le_bytes())?;
+    // bounded: sized from the in-memory tensor being written, not from
+    // any wire- or file-derived length
     let mut buf = Vec::with_capacity(data.len() * 4);
     for x in data {
         buf.extend_from_slice(&x.to_le_bytes());
@@ -159,11 +162,14 @@ fn read_f32s(r: &mut impl Read, remaining: &mut u64) -> Result<Vec<f32>> {
     let nbytes = usize::try_from(bytes)
         .ok()
         .context("tensor length exceeds address space")?;
+    // bounded: nbytes ≤ *remaining (checked above), itself bounded by
+    // the file's real length — a corrupt prefix cannot force a huge
+    // allocation
     let mut buf = vec![0u8; nbytes];
     r.read_exact(&mut buf)?;
     Ok(buf
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
 }
 
@@ -196,6 +202,8 @@ pub fn place_shard(full: &mut [f32], ranges: &[(usize, usize)],
 /// error, not a slice panic.
 pub fn extract_shard(full: &[f32], ranges: &[(usize, usize)])
     -> Result<Vec<f32>> {
+    // bounded: capacity is the sum of caller-supplied shard ranges,
+    // already validated against the flat tensor length below
     let mut out =
         Vec::with_capacity(ranges.iter().map(|&(a, b)| b - a).sum());
     for &(a, b) in ranges {
@@ -290,6 +298,8 @@ pub fn save_sharded<T: Transport>(path: &Path, comm: &mut T,
         return Ok(());
     }
     let n = plan.len();
+    // bounded: n is the local bucket plan's parameter count, not a
+    // wire-derived length
     let mut m_full = vec![0.0f32; n];
     let mut v_full = vec![0.0f32; n];
     place_shard(&mut m_full, &plan.rank_ranges(0, world), m_shard)?;
@@ -316,27 +326,30 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     let mut r = BufReader::new(f);
     let mut h = [0u8; 68];
     r.read_exact(&mut h)?;
-    if u32::from_le_bytes(h[0..4].try_into().unwrap()) != MAGIC {
+    if u32_at(&h, 0)? != MAGIC {
         bail!("not a txgain checkpoint");
     }
-    let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
+    let version = u32_at(&h, 4)?;
     if !(MIN_VERSION..=VERSION).contains(&version) {
         bail!("unsupported checkpoint version {version} (this build \
                reads v{MIN_VERSION}..v{VERSION}; v1 predates the \
                resumable data cursor)");
     }
-    let u = |a: usize| u64::from_le_bytes(h[a..a + 8].try_into().unwrap());
+    let u = |a: usize| u64_at(&h, a);
     let progress = TrainProgress {
-        step: u(8),
-        epoch: u(16),
-        epoch_step: u(24),
-        corpus: u(32),
-        world: u(40),
-        batch: u(48),
-        window: u(56),
+        step: u(8)?,
+        epoch: u(16)?,
+        epoch_step: u(24)?,
+        corpus: u(32)?,
+        world: u(40)?,
+        batch: u(48)?,
+        window: u(56)?,
     };
-    let n = u32::from_le_bytes(h[64..68].try_into().unwrap()) as usize;
+    let n = u32_at(&h, 64)? as usize;
     let mut remaining = file_len.saturating_sub(68);
+    // bounded: header-derived tensor count capped at 1024 for the
+    // pre-allocation; the real count is enforced element by element
+    // through read_f32s's remaining-bytes budget
     let mut tensors = Vec::with_capacity(n.min(1024));
     for _ in 0..n {
         tensors.push(read_f32s(&mut r, &mut remaining)?);

@@ -21,6 +21,11 @@
 //! (epoch, epoch_step) rides every checkpoint, so `resume_from` can
 //! fast-forward to an exact mid-epoch position and reproduce the
 //! uninterrupted run's remaining steps bit-identically.
+//!
+//! concurrency invariant: the only atomics this module touches are the
+//! loader pool's monotonic stat counters, read `Relaxed` — they are
+//! advisory telemetry, never used to order memory. Rank threads
+//! synchronize exclusively through the transport and the collectives.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -555,6 +560,9 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                 break 'outer;
                             }
                             let t_step = Instant::now();
+                            // ord: Relaxed — wait_ns is a monotonic
+                            // advisory counter; no memory is published
+                            // through it
                             let wait_now = loader
                                 .stats
                                 .wait_ns
@@ -762,7 +770,16 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(outcome) => outcome,
+                Err(_) => Err(anyhow::anyhow!(
+                    "a rank thread panicked; see stderr for the \
+                     panic payload"
+                )),
+            })
+            .collect()
     });
 
     let mut outcomes: Vec<RankOutcome> =

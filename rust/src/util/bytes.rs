@@ -1,0 +1,71 @@
+//! Unwrap-free little-endian decoding for length-prefixed formats.
+//!
+//! The tcp transport framing and the checkpoint header both decode
+//! fixed-width integers out of byte buffers. `slice.try_into().unwrap()`
+//! is the obvious spelling, but txgain-lint bans `unwrap` on transport
+//! and checkpoint paths (a short read must surface as a typed error, not
+//! a panic — PR 3's dead-peer discipline). These helpers do the bounds
+//! check once and return `Err` on truncation.
+
+use crate::Result;
+
+/// Decode a `u32` at `off`; error (not panic) if the buffer is short.
+pub fn u32_at(b: &[u8], off: usize) -> Result<u32> {
+    match off.checked_add(4) {
+        Some(end) if b.len() >= end => Ok(u32::from_le_bytes([
+            b[off],
+            b[off + 1],
+            b[off + 2],
+            b[off + 3],
+        ])),
+        _ => anyhow::bail!(
+            "truncated buffer: need 4 bytes at offset {off}, have {}",
+            b.len()
+        ),
+    }
+}
+
+/// Decode a `u64` at `off`; error (not panic) if the buffer is short.
+pub fn u64_at(b: &[u8], off: usize) -> Result<u64> {
+    match off.checked_add(8) {
+        Some(end) if b.len() >= end => {
+            let mut w = [0u8; 8];
+            w.copy_from_slice(&b[off..end]);
+            Ok(u64::from_le_bytes(w))
+        }
+        _ => anyhow::bail!(
+            "truncated buffer: need 8 bytes at offset {off}, have {}",
+            b.len()
+        ),
+    }
+}
+
+/// Decode an `f32` at `off`; error (not panic) if the buffer is short.
+pub fn f32_at(b: &[u8], off: usize) -> Result<f32> {
+    Ok(f32::from_bits(u32_at(b, off)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0xdead_beefu32.to_le_bytes());
+        b.extend_from_slice(&0x0123_4567_89ab_cdefu64.to_le_bytes());
+        b.extend_from_slice(&1.5f32.to_le_bytes());
+        assert_eq!(u32_at(&b, 0).unwrap(), 0xdead_beef);
+        assert_eq!(u64_at(&b, 4).unwrap(), 0x0123_4567_89ab_cdef);
+        assert_eq!(f32_at(&b, 12).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let b = [1u8, 2, 3];
+        assert!(u32_at(&b, 0).is_err());
+        assert!(u32_at(&b, usize::MAX - 2).is_err() || true); // no overflow panic
+        assert!(u64_at(&b, 0).is_err());
+        assert!(f32_at(&b, 1).is_err());
+    }
+}

@@ -1,0 +1,1009 @@
+//! Bounded exhaustive interleaving explorer for the crate's hand-rolled
+//! lock-free protocols (the shm SPSC ring, the comm engine's teardown
+//! bookkeeping, the dead-peer alive flag).
+//!
+//! This is a miniature model checker in the spirit of `loom`, written in
+//! the repo's zero-dependency style. A test describes a *model*: a set of
+//! simulated memory locations plus a handful of thread bodies written
+//! against the [`Thr`] facade instead of `std::sync::atomic`. The
+//! explorer then runs the model under every schedule a decision-tape DFS
+//! can reach, checking three things on every schedule:
+//!
+//! * **data races** — [`Plain`] locations are non-atomic; two
+//!   unsynchronized conflicting accesses from different threads are a
+//!   violation (this is what catches a dropped `Release`: the
+//!   happens-before edge the payload write needed never forms);
+//! * **lost wakeups / hangs** — a thread that sees no progress calls
+//!   [`Thr::spin_yield`]; if every live thread is parked and no store can
+//!   ever wake them, the schedule is reported as a deadlock;
+//! * **assertions** — any panic inside a model thread (including
+//!   [`Thr::assert_that`]) fails the schedule, and end-of-schedule
+//!   invariants registered with [`Model::check`] run on the final state.
+//!
+//! ## Execution model
+//!
+//! Threads are real OS threads driven by a token-passing scheduler: at
+//! every facade operation the thread blocks until the scheduler grants it
+//! the token, performs exactly one operation, and blocks again. Only one
+//! thread is ever runnable, so every interleaving of operations is a
+//! sequence of scheduler decisions — and each decision is one entry on
+//! the tape. After a schedule completes, the tape backtracks (increment
+//! the last decision that still has unexplored alternatives, drop the
+//! rest) and the model is rebuilt and replayed. Exploration is exhaustive
+//! up to the configured budgets; exceeding a budget is itself a
+//! violation so a test can never silently under-explore.
+//!
+//! ## Memory model
+//!
+//! [`Atom`] locations keep their full modification order as a list of
+//! store events carrying the writer's vector clock, plus — for `Release`
+//! stores — a synchronization message. A load may read *any* store not
+//! superseded for that thread (per-thread `seen` index for coherence, a
+//! happens-before floor from the vector clocks), and when several stores
+//! are readable the choice is one more tape decision: stale reads are
+//! explored, not just possible. An `Acquire` load that reads a store with
+//! a release message joins the writer's clock, establishing the
+//! happens-before edge the race detector consults.
+//!
+//! Deliberate simplifications, documented so nobody mistakes this for a
+//! full C++11 model: `SeqCst` is modeled conservatively as `AcqRel` (no
+//! single total order), there are no fences or RMW operations (the
+//! protocols under test are pure load/store), modification order equals
+//! execution order, and `spin_yield` models eventual cache coherence —
+//! after a thread unparks, its loads observe the latest store until it
+//! parks again, otherwise a spin loop could re-read a stale value forever
+//! and every spin would be reported as a false deadlock.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Memory orderings the simulated model distinguishes. `SeqCst` is
+/// accepted but modeled as `AcqRel`; code that *needs* a total order
+/// should not rely on this checker alone (the lint bans `SeqCst` in
+/// non-test code for exactly that reason).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemOrder {
+    Relaxed,
+    Acquire,
+    Release,
+    AcqRel,
+    SeqCst,
+}
+
+impl MemOrder {
+    fn acquires(self) -> bool {
+        matches!(self, MemOrder::Acquire | MemOrder::AcqRel | MemOrder::SeqCst)
+    }
+    fn releases(self) -> bool {
+        matches!(self, MemOrder::Release | MemOrder::AcqRel | MemOrder::SeqCst)
+    }
+}
+
+/// Handle to a simulated atomic cell holding a `u64`.
+#[derive(Clone, Copy, Debug)]
+pub struct Atom(usize);
+
+/// Handle to a simulated plain (non-atomic) cell holding a `u64`.
+/// Unsynchronized conflicting access is reported as a data race.
+#[derive(Clone, Copy, Debug)]
+pub struct Plain(usize);
+
+/// What went wrong in a failing schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Conflicting unsynchronized accesses to a [`Plain`] location.
+    Race,
+    /// Every live thread parked with nothing left to wake it.
+    Deadlock,
+    /// A model thread panicked or an end-of-schedule check failed.
+    Assert,
+    /// An exploration budget was exceeded before the space was covered.
+    Budget,
+}
+
+/// A failing schedule: what happened plus the decision tape that
+/// reproduces it deterministically.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub kind: Kind,
+    pub detail: String,
+    /// The decision tape of the failing schedule (one entry per branch
+    /// point with more than one alternative).
+    pub tape: Vec<usize>,
+    /// How many schedules had run when this one failed (1-based).
+    pub schedules: usize,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:?} on schedule {}: {} (tape {:?})",
+            self.kind, self.schedules, self.detail, self.tape
+        )
+    }
+}
+
+/// Successful exhaustive exploration.
+#[derive(Clone, Copy, Debug)]
+pub struct Report {
+    /// Number of distinct schedules explored.
+    pub schedules: usize,
+}
+
+/// Exploration budgets. Exceeding any of them is a [`Kind::Budget`]
+/// violation — a passing test has provably covered the whole space.
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    /// Maximum number of schedules before giving up.
+    pub max_schedules: usize,
+    /// Maximum decision-tape depth within one schedule.
+    pub max_depth: usize,
+    /// Maximum facade operations within one schedule (catches spin
+    /// loops written without `spin_yield`).
+    pub max_ops: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { max_schedules: 200_000, max_depth: 4_000, max_ops: 200_000 }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Vector clocks
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default, PartialEq)]
+struct VClock(Vec<u64>);
+
+impl VClock {
+    fn get(&self, i: usize) -> u64 {
+        self.0.get(i).copied().unwrap_or(0)
+    }
+    fn tick(&mut self, i: usize) {
+        if self.0.len() <= i {
+            self.0.resize(i + 1, 0);
+        }
+        self.0[i] += 1;
+    }
+    fn join(&mut self, o: &VClock) {
+        if self.0.len() < o.0.len() {
+            self.0.resize(o.0.len(), 0);
+        }
+        for (i, v) in o.0.iter().enumerate() {
+            if *v > self.0[i] {
+                self.0[i] = *v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decision tape
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct Tape {
+    /// (chosen, arity) per branch point, in schedule order.
+    dec: Vec<(usize, usize)>,
+    pos: usize,
+}
+
+impl Tape {
+    fn choose(&mut self, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        if self.pos < self.dec.len() {
+            let (c, m) = self.dec[self.pos];
+            assert_eq!(
+                m, n,
+                "interleave: nondeterministic model — decision arity \
+                 changed on replay (is the model using real time or RNG?)"
+            );
+            self.pos += 1;
+            c
+        } else {
+            self.dec.push((0, n));
+            self.pos += 1;
+            0
+        }
+    }
+
+    /// Backtrack to the next unexplored schedule; false when the whole
+    /// space has been covered.
+    fn advance(&mut self) -> bool {
+        while let Some(last) = self.dec.last_mut() {
+            if last.0 + 1 < last.1 {
+                last.0 += 1;
+                self.pos = 0;
+                return true;
+            }
+            self.dec.pop();
+        }
+        false
+    }
+
+    fn trace(&self) -> Vec<usize> {
+        self.dec.iter().map(|d| d.0).collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Simulated memory
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct StoreEv {
+    val: u64,
+    /// None for the initial value (happens-before everything).
+    writer: Option<usize>,
+    /// Writer's clock at the store — the happens-before floor test.
+    wclock: VClock,
+    /// Synchronization message; Some only for releasing stores.
+    msg: Option<VClock>,
+}
+
+#[derive(Clone, Debug)]
+struct AccessEv {
+    tid: usize,
+    clock: VClock,
+    write: bool,
+}
+
+enum Loc {
+    Atom { stores: Vec<StoreEv> },
+    Plain { val: u64, acc: Vec<AccessEv> },
+}
+
+enum LocInit {
+    Atom(u64),
+    Plain(u64),
+}
+
+type VRes<T> = std::result::Result<T, (Kind, String)>;
+
+struct RunState {
+    locs: Vec<Loc>,
+    clocks: Vec<VClock>,
+    /// [tid][loc] — smallest modification-order index still readable
+    /// (read-read coherence).
+    seen: Vec<Vec<usize>>,
+    /// True after an unpark until the next park: loads observe the
+    /// latest store (eventual cache coherence for spin loops).
+    fresh: Vec<bool>,
+    /// Bumped on every atomic store; parked threads wake when it moves.
+    epoch: u64,
+    ops: usize,
+    tape: Tape,
+    violation: Option<(Kind, String)>,
+    abort: bool,
+    max_depth: usize,
+    max_ops: usize,
+}
+
+impl RunState {
+    fn pick(&mut self, n: usize) -> VRes<usize> {
+        if n <= 1 {
+            return Ok(0);
+        }
+        if self.tape.dec.len() >= self.max_depth {
+            return Err((
+                Kind::Budget,
+                format!("decision depth {} exceeded", self.max_depth),
+            ));
+        }
+        Ok(self.tape.choose(n))
+    }
+
+    fn atomic_load(&mut self, tid: usize, id: usize, ord: MemOrder) -> VRes<u64> {
+        self.clocks[tid].tick(tid);
+        let (lo, len) = {
+            let stores = match &self.locs[id] {
+                Loc::Atom { stores } => stores,
+                Loc::Plain { .. } => unreachable!("atomic op on plain location"),
+            };
+            // Happens-before floor: the newest store this thread has
+            // already synchronized with supersedes everything older.
+            let mut floor = 0;
+            for (j, s) in stores.iter().enumerate() {
+                let hb = match s.writer {
+                    None => true,
+                    Some(w) => s.wclock.get(w) <= self.clocks[tid].get(w),
+                };
+                if hb {
+                    floor = j;
+                }
+            }
+            (floor.max(self.seen[tid][id]), stores.len())
+        };
+        let pick = if self.fresh[tid] {
+            len - 1
+        } else {
+            lo + self.pick(len - lo)?
+        };
+        self.seen[tid][id] = pick;
+        let (val, msg) = match &self.locs[id] {
+            Loc::Atom { stores } => (stores[pick].val, stores[pick].msg.clone()),
+            Loc::Plain { .. } => unreachable!(),
+        };
+        if ord.acquires() {
+            if let Some(m) = msg {
+                self.clocks[tid].join(&m);
+            }
+        }
+        Ok(val)
+    }
+
+    fn atomic_store(&mut self, tid: usize, id: usize, val: u64, ord: MemOrder) -> VRes<()> {
+        self.clocks[tid].tick(tid);
+        let wclock = self.clocks[tid].clone();
+        let msg = if ord.releases() { Some(wclock.clone()) } else { None };
+        match &mut self.locs[id] {
+            Loc::Atom { stores } => {
+                stores.push(StoreEv { val, writer: Some(tid), wclock, msg });
+                self.seen[tid][id] = stores.len() - 1;
+            }
+            Loc::Plain { .. } => unreachable!("atomic op on plain location"),
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+
+    fn plain_access(&mut self, tid: usize, id: usize, write: bool, val: u64) -> VRes<u64> {
+        self.clocks[tid].tick(tid);
+        let now = self.clocks[tid].clone();
+        match &mut self.locs[id] {
+            Loc::Plain { val: cur, acc } => {
+                for a in acc.iter() {
+                    if a.tid != tid && (a.write || write) {
+                        let hb = a.clock.get(a.tid) <= now.get(a.tid);
+                        if !hb {
+                            return Err((
+                                Kind::Race,
+                                format!(
+                                    "data race on plain location #{id}: thread {} {} is \
+                                     unsynchronized with thread {tid} {}",
+                                    a.tid,
+                                    if a.write { "write" } else { "read" },
+                                    if write { "write" } else { "read" },
+                                ),
+                            ));
+                        }
+                    }
+                }
+                acc.push(AccessEv { tid, clock: now, write });
+                let out = *cur;
+                if write {
+                    *cur = val;
+                }
+                Ok(out)
+            }
+            Loc::Atom { .. } => unreachable!("plain op on atomic location"),
+        }
+    }
+
+    fn final_vals(&self) -> Vec<u64> {
+        self.locs
+            .iter()
+            .map(|l| match l {
+                Loc::Atom { stores } => stores.last().map(|s| s.val).unwrap_or(0),
+                Loc::Plain { val, .. } => *val,
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scheduler plumbing
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum TStat {
+    /// Spawned or mid-operation; the scheduler waits for it to block.
+    Running,
+    /// Blocked at a facade op, waiting for the token.
+    Ready,
+    /// Parked in `spin_yield` at the given epoch.
+    Parked(u64),
+    Done,
+}
+
+struct Ctl {
+    grant: Option<usize>,
+    stat: Vec<TStat>,
+}
+
+struct Shared {
+    ctl: Mutex<Ctl>,
+    cv_sched: Condvar,
+    cv_thr: Condvar,
+    state: Mutex<RunState>,
+}
+
+/// Sentinel payload for unwinding a thread out of an aborted schedule;
+/// never treated as a model failure.
+struct AbortToken;
+
+/// Per-thread facade handed to each model thread body. Every method is
+/// one schedulable operation.
+pub struct Thr {
+    sh: Arc<Shared>,
+    tid: usize,
+}
+
+impl Thr {
+    /// Block until the scheduler grants this thread one operation.
+    fn block(&self, park: Option<u64>) {
+        let mut c = self.sh.ctl.lock().unwrap();
+        c.stat[self.tid] = match park {
+            Some(e) => TStat::Parked(e),
+            None => TStat::Ready,
+        };
+        self.sh.cv_sched.notify_all();
+        while c.grant != Some(self.tid) {
+            c = self.sh.cv_thr.wait(c).unwrap();
+        }
+        c.grant = None;
+        c.stat[self.tid] = TStat::Running;
+        drop(c);
+
+        let mut st = self.sh.state.lock().unwrap();
+        st.ops += 1;
+        if st.ops > st.max_ops && st.violation.is_none() {
+            st.violation = Some((
+                Kind::Budget,
+                format!(
+                    "op budget {} exceeded — unbounded spin without spin_yield?",
+                    st.max_ops
+                ),
+            ));
+            st.abort = true;
+        }
+        let abort = st.abort;
+        drop(st);
+        if abort {
+            panic::panic_any(AbortToken);
+        }
+    }
+
+    fn raise(&self, kind: Kind, detail: String) -> ! {
+        let mut st = self.sh.state.lock().unwrap();
+        if st.violation.is_none() {
+            st.violation = Some((kind, detail));
+        }
+        st.abort = true;
+        drop(st);
+        panic::panic_any(AbortToken)
+    }
+
+    fn run<T>(&self, r: VRes<T>) -> T {
+        match r {
+            Ok(v) => v,
+            Err((k, d)) => self.raise(k, d),
+        }
+    }
+
+    /// Atomic load with the given ordering; which store it reads is a
+    /// schedule decision (stale reads are explored).
+    pub fn load(&mut self, a: Atom, ord: MemOrder) -> u64 {
+        self.block(None);
+        let r = self.sh.state.lock().unwrap().atomic_load(self.tid, a.0, ord);
+        self.run(r)
+    }
+
+    /// Atomic store with the given ordering.
+    pub fn store(&mut self, a: Atom, val: u64, ord: MemOrder) {
+        self.block(None);
+        let r = self.sh.state.lock().unwrap().atomic_store(self.tid, a.0, val, ord);
+        self.run(r)
+    }
+
+    /// Non-atomic read; races with unsynchronized writes are violations.
+    pub fn read(&mut self, p: Plain) -> u64 {
+        self.block(None);
+        let r = self.sh.state.lock().unwrap().plain_access(self.tid, p.0, false, 0);
+        self.run(r)
+    }
+
+    /// Non-atomic write; races with unsynchronized accesses are
+    /// violations.
+    pub fn write(&mut self, p: Plain, val: u64) {
+        self.block(None);
+        let r = self.sh.state.lock().unwrap().plain_access(self.tid, p.0, true, val);
+        self.run(r)
+    }
+
+    /// Cooperative spin-loop backoff: park until some atomic store
+    /// happens. If every live thread parks with no store in flight the
+    /// schedule is a deadlock — the no-lost-wakeup check.
+    pub fn spin_yield(&mut self) {
+        let e = {
+            let mut st = self.sh.state.lock().unwrap();
+            let tid = self.tid;
+            st.fresh[tid] = false;
+            st.epoch
+        };
+        self.block(Some(e));
+        self.sh.state.lock().unwrap().fresh[self.tid] = true;
+    }
+
+    /// Explicit nondeterministic choice — one more tape decision. Lets
+    /// non-memory models (e.g. scripted transport outcomes) ride the
+    /// same exhaustive DFS.
+    pub fn choose(&mut self, n: usize) -> usize {
+        self.block(None);
+        let r = self.sh.state.lock().unwrap().pick(n);
+        self.run(r)
+    }
+
+    /// Assert an invariant from inside a model thread.
+    pub fn assert_that(&mut self, cond: bool, msg: &str) {
+        if !cond {
+            self.raise(Kind::Assert, msg.to_string());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model description + explorer
+// ---------------------------------------------------------------------
+
+type Body = Box<dyn FnOnce(&mut Thr) + Send + 'static>;
+type Check = Box<dyn Fn(&Final) -> std::result::Result<(), String>>;
+
+/// Final state of one schedule, passed to [`Model::check`] closures
+/// after every thread has joined.
+pub struct Final {
+    vals: Vec<u64>,
+}
+
+impl Final {
+    pub fn atom(&self, a: Atom) -> u64 {
+        self.vals[a.0]
+    }
+    pub fn plain(&self, p: Plain) -> u64 {
+        self.vals[p.0]
+    }
+}
+
+/// One schedule's worth of model: locations, thread bodies, and
+/// end-of-schedule invariants. Rebuilt fresh for every schedule, so the
+/// build closure must be deterministic.
+#[derive(Default)]
+pub struct Model {
+    locs: Vec<LocInit>,
+    bodies: Vec<Body>,
+    checks: Vec<Check>,
+}
+
+impl Model {
+    pub fn atom(&mut self, init: u64) -> Atom {
+        self.locs.push(LocInit::Atom(init));
+        Atom(self.locs.len() - 1)
+    }
+
+    pub fn plain(&mut self, init: u64) -> Plain {
+        self.locs.push(LocInit::Plain(init));
+        Plain(self.locs.len() - 1)
+    }
+
+    pub fn thread<F: FnOnce(&mut Thr) + Send + 'static>(&mut self, f: F) {
+        self.bodies.push(Box::new(f));
+    }
+
+    /// Register an invariant over the final state of every schedule.
+    pub fn check<F>(&mut self, f: F)
+    where
+        F: Fn(&Final) -> std::result::Result<(), String> + 'static,
+    {
+        self.checks.push(Box::new(f));
+    }
+}
+
+/// Exhaustively explore every schedule of the model `build` describes.
+/// Returns the first violation found, or a [`Report`] once the whole
+/// bounded space has been covered.
+pub fn explore<B: Fn(&mut Model)>(
+    opts: &Options,
+    build: B,
+) -> std::result::Result<Report, Violation> {
+    let mut tape = Tape::default();
+    let mut schedules = 0usize;
+    // Aborted schedules unwind model threads with a private token; the
+    // default panic hook would spam stderr for each one.
+    let hook = panic::take_hook();
+    panic::set_hook(Box::new(|_| {}));
+    let result = loop {
+        if schedules >= opts.max_schedules {
+            break Err(Violation {
+                kind: Kind::Budget,
+                detail: format!(
+                    "schedule budget {} exhausted before the space was covered",
+                    opts.max_schedules
+                ),
+                tape: tape.trace(),
+                schedules,
+            });
+        }
+        let mut model = Model::default();
+        build(&mut model);
+        let (t, viol) = run_schedule(model, tape, opts);
+        tape = t;
+        schedules += 1;
+        if let Some((kind, detail)) = viol {
+            break Err(Violation { kind, detail, tape: tape.trace(), schedules });
+        }
+        if !tape.advance() {
+            break Ok(Report { schedules });
+        }
+    };
+    panic::set_hook(hook);
+    result
+}
+
+fn run_schedule(model: Model, tape: Tape, opts: &Options) -> (Tape, Option<(Kind, String)>) {
+    let Model { locs: loc_init, bodies, checks } = model;
+    let nthr = bodies.len();
+    let locs: Vec<Loc> = loc_init
+        .iter()
+        .map(|l| match *l {
+            LocInit::Atom(v) => Loc::Atom {
+                stores: vec![StoreEv {
+                    val: v,
+                    writer: None,
+                    wclock: VClock::default(),
+                    msg: Some(VClock::default()),
+                }],
+            },
+            LocInit::Plain(v) => Loc::Plain { val: v, acc: Vec::new() },
+        })
+        .collect();
+    let nlocs = locs.len();
+    let sh = Arc::new(Shared {
+        ctl: Mutex::new(Ctl { grant: None, stat: vec![TStat::Running; nthr] }),
+        cv_sched: Condvar::new(),
+        cv_thr: Condvar::new(),
+        state: Mutex::new(RunState {
+            locs,
+            clocks: vec![VClock::default(); nthr],
+            seen: vec![vec![0; nlocs]; nthr],
+            fresh: vec![false; nthr],
+            epoch: 0,
+            ops: 0,
+            tape,
+            violation: None,
+            abort: false,
+            max_depth: opts.max_depth,
+            max_ops: opts.max_ops,
+        }),
+    });
+
+    let mut joins = Vec::with_capacity(nthr);
+    for (tid, body) in bodies.into_iter().enumerate() {
+        let sh2 = Arc::clone(&sh);
+        joins.push(thread::spawn(move || {
+            let mut thr = Thr { sh: Arc::clone(&sh2), tid };
+            let r = panic::catch_unwind(AssertUnwindSafe(move || body(&mut thr)));
+            if let Err(p) = r {
+                if p.downcast_ref::<AbortToken>().is_none() {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "model thread panicked".to_string());
+                    let mut st = sh2.state.lock().unwrap();
+                    if st.violation.is_none() {
+                        st.violation = Some((Kind::Assert, msg));
+                    }
+                    st.abort = true;
+                }
+            }
+            let mut c = sh2.ctl.lock().unwrap();
+            c.stat[tid] = TStat::Done;
+            sh2.cv_sched.notify_all();
+        }));
+    }
+
+    // Scheduler: wait for quiescence, pick one runnable thread, repeat.
+    loop {
+        let snapshot = {
+            let mut c = sh.ctl.lock().unwrap();
+            while c.stat.iter().any(|s| matches!(s, TStat::Running)) {
+                c = sh.cv_sched.wait(c).unwrap();
+            }
+            c.stat.clone()
+        };
+        if snapshot.iter().all(|s| matches!(s, TStat::Done)) {
+            break;
+        }
+        let (epoch, aborting) = {
+            let st = sh.state.lock().unwrap();
+            (st.epoch, st.abort)
+        };
+        let mut runnable = Vec::new();
+        for (i, s) in snapshot.iter().enumerate() {
+            let r = match *s {
+                TStat::Ready => true,
+                TStat::Parked(e) => aborting || e < epoch,
+                _ => false,
+            };
+            if r {
+                runnable.push(i);
+            }
+        }
+        if runnable.is_empty() {
+            // Only parked threads remain and nothing can wake them.
+            let mut st = sh.state.lock().unwrap();
+            if st.violation.is_none() {
+                st.violation = Some((
+                    Kind::Deadlock,
+                    "all live threads parked in spin_yield with no store \
+                     in flight — lost wakeup / hang"
+                        .to_string(),
+                ));
+            }
+            st.abort = true;
+            continue; // aborting makes parked threads runnable for drain
+        }
+        let pick = if aborting {
+            runnable[0]
+        } else {
+            let mut st = sh.state.lock().unwrap();
+            match st.pick(runnable.len()) {
+                Ok(i) => runnable[i],
+                Err((k, d)) => {
+                    if st.violation.is_none() {
+                        st.violation = Some((k, d));
+                    }
+                    st.abort = true;
+                    runnable[0]
+                }
+            }
+        };
+        let mut c = sh.ctl.lock().unwrap();
+        c.grant = Some(pick);
+        sh.cv_thr.notify_all();
+    }
+
+    for j in joins {
+        let _ = j.join();
+    }
+
+    let mut st = sh.state.lock().unwrap();
+    let tape = std::mem::take(&mut st.tape);
+    let viol = st.violation.take();
+    if viol.is_some() {
+        return (tape, viol);
+    }
+    let fin = Final { vals: st.final_vals() };
+    drop(st);
+    for c in &checks {
+        if let Err(msg) = c(&fin) {
+            return (tape, Some((Kind::Assert, msg)));
+        }
+    }
+    (tape, None)
+}
+
+// ---------------------------------------------------------------------
+// Plain DFS enumerator (no threads, no memory model)
+// ---------------------------------------------------------------------
+
+/// Decision oracle for thread-free exhaustive enumeration: the engine
+/// bookkeeping tests script transport outcomes through [`Picker::choose`]
+/// and rely on `enumerate` to cover every outcome sequence.
+pub struct Picker {
+    tape: Tape,
+    max_depth: usize,
+}
+
+impl Picker {
+    pub fn choose(&mut self, n: usize) -> usize {
+        assert!(
+            self.tape.dec.len() <= self.max_depth,
+            "interleave::enumerate: decision depth {} exceeded",
+            self.max_depth
+        );
+        self.tape.choose(n)
+    }
+}
+
+/// Run `f` once per reachable decision sequence. Panics inside `f`
+/// propagate (use plain `assert!`); exceeding the schedule budget
+/// panics so a test can never silently under-explore.
+pub fn enumerate<F: FnMut(&mut Picker)>(opts: &Options, mut f: F) -> Report {
+    let mut p = Picker { tape: Tape::default(), max_depth: opts.max_depth };
+    let mut schedules = 0usize;
+    loop {
+        assert!(
+            schedules < opts.max_schedules,
+            "interleave::enumerate: schedule budget {} exhausted",
+            opts.max_schedules
+        );
+        f(&mut p);
+        schedules += 1;
+        if !p.tape.advance() {
+            return Report { schedules };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn message_passing_release_acquire_is_clean() {
+        let r = explore(&Options::default(), |m| {
+            let data = m.plain(0);
+            let flag = m.atom(0);
+            m.thread(move |t| {
+                t.write(data, 42);
+                t.store(flag, 1, MemOrder::Release);
+            });
+            m.thread(move |t| {
+                if t.load(flag, MemOrder::Acquire) == 1 {
+                    let v = t.read(data);
+                    t.assert_that(v == 42, "acquire saw flag but stale data");
+                }
+            });
+        });
+        assert!(r.is_ok(), "unexpected violation: {:?}", r.err());
+        assert!(r.unwrap().schedules > 1, "no interleavings explored");
+    }
+
+    #[test]
+    fn message_passing_relaxed_is_a_race() {
+        let r = explore(&Options::default(), |m| {
+            let data = m.plain(0);
+            let flag = m.atom(0);
+            m.thread(move |t| {
+                t.write(data, 42);
+                t.store(flag, 1, MemOrder::Relaxed);
+            });
+            m.thread(move |t| {
+                if t.load(flag, MemOrder::Relaxed) == 1 {
+                    let _ = t.read(data);
+                }
+            });
+        });
+        let v = r.expect_err("dropped Release must be detected");
+        assert_eq!(v.kind, Kind::Race, "wrong violation: {v}");
+    }
+
+    #[test]
+    fn store_buffering_explores_stale_reads() {
+        // Classic SB litmus: with only Release/Acquire (no SeqCst
+        // total order) both threads may read 0 — the checker must
+        // actually visit that outcome.
+        use std::sync::{Arc as SArc, Mutex as SMutex};
+        let outcomes: SArc<SMutex<HashSet<(u64, u64)>>> =
+            SArc::new(SMutex::new(HashSet::new()));
+        let oc = SArc::clone(&outcomes);
+        let r = explore(&Options::default(), move |m| {
+            let x = m.atom(0);
+            let y = m.atom(0);
+            let r1 = m.plain(u64::MAX);
+            let r2 = m.plain(u64::MAX);
+            m.thread(move |t| {
+                t.store(x, 1, MemOrder::Release);
+                let v = t.load(y, MemOrder::Acquire);
+                t.write(r1, v);
+            });
+            m.thread(move |t| {
+                t.store(y, 1, MemOrder::Release);
+                let v = t.load(x, MemOrder::Acquire);
+                t.write(r2, v);
+            });
+            let oc2 = SArc::clone(&oc);
+            m.check(move |f| {
+                oc2.lock().unwrap().insert((f.plain(r1), f.plain(r2)));
+                Ok(())
+            });
+        });
+        assert!(r.is_ok(), "unexpected violation: {:?}", r.err());
+        let seen = outcomes.lock().unwrap();
+        assert!(seen.contains(&(0, 0)), "stale-read outcome never explored: {seen:?}");
+        assert!(seen.contains(&(1, 1)), "fully-ordered outcome never explored");
+    }
+
+    #[test]
+    fn lost_wakeup_is_a_deadlock() {
+        let r = explore(&Options::default(), |m| {
+            let flag = m.atom(0);
+            m.thread(move |t| {
+                while t.load(flag, MemOrder::Acquire) == 0 {
+                    t.spin_yield();
+                }
+            });
+        });
+        let v = r.expect_err("spin on a never-stored flag must deadlock");
+        assert_eq!(v.kind, Kind::Deadlock, "wrong violation: {v}");
+    }
+
+    #[test]
+    fn wakeup_after_store_terminates() {
+        let r = explore(&Options::default(), |m| {
+            let flag = m.atom(0);
+            m.thread(move |t| {
+                t.store(flag, 1, MemOrder::Release);
+            });
+            m.thread(move |t| {
+                while t.load(flag, MemOrder::Acquire) == 0 {
+                    t.spin_yield();
+                }
+            });
+        });
+        assert!(r.is_ok(), "spurious deadlock: {:?}", r.err());
+    }
+
+    #[test]
+    fn spin_without_yield_trips_op_budget() {
+        let opts = Options { max_ops: 64, ..Options::default() };
+        let r = explore(&opts, |m| {
+            let flag = m.atom(0);
+            m.thread(move |t| {
+                while t.load(flag, MemOrder::Acquire) == 0 {}
+            });
+        });
+        let v = r.expect_err("unbounded spin must trip the op budget");
+        assert_eq!(v.kind, Kind::Budget, "wrong violation: {v}");
+    }
+
+    #[test]
+    fn failing_final_check_is_reported() {
+        let r = explore(&Options::default(), |m| {
+            let x = m.atom(0);
+            m.thread(move |t| t.store(x, 7, MemOrder::Relaxed));
+            m.check(move |f| {
+                if f.atom(x) == 7 {
+                    Err("final value check fired as intended".to_string())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let v = r.expect_err("check closure must be able to fail a schedule");
+        assert_eq!(v.kind, Kind::Assert);
+    }
+
+    #[test]
+    fn violation_tape_replays_deterministically() {
+        let run = || {
+            explore(&Options::default(), |m| {
+                let data = m.plain(0);
+                let flag = m.atom(0);
+                m.thread(move |t| {
+                    t.write(data, 1);
+                    t.store(flag, 1, MemOrder::Relaxed);
+                });
+                m.thread(move |t| {
+                    if t.load(flag, MemOrder::Relaxed) == 1 {
+                        let _ = t.read(data);
+                    }
+                });
+            })
+        };
+        let a = run().expect_err("race expected");
+        let b = run().expect_err("race expected");
+        assert_eq!(a.tape, b.tape, "exploration is not deterministic");
+        assert_eq!(a.schedules, b.schedules);
+    }
+
+    #[test]
+    fn enumerate_covers_the_full_tree() {
+        let mut seen = Vec::new();
+        let rep = enumerate(&Options::default(), |p| {
+            let a = p.choose(2);
+            let b = p.choose(3);
+            seen.push((a, b));
+        });
+        assert_eq!(rep.schedules, 6);
+        let uniq: HashSet<_> = seen.iter().cloned().collect();
+        assert_eq!(uniq.len(), 6, "duplicate or missing leaves: {seen:?}");
+    }
+}

@@ -1,10 +1,15 @@
-//! Small shared utilities: deterministic RNG, byte/size formatting, CSV.
+//! Small shared utilities: deterministic RNG, byte/size formatting, CSV,
+//! unwrap-free byte decoding, poison-tolerant locking, and the
+//! interleaving model checker the concurrency tests drive.
 
 pub mod bench;
+pub mod bytes;
 pub mod csv;
 pub mod fmt;
+pub mod interleave;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use fmt::{human_bytes, human_rate};
 pub use json::Value;

@@ -1,0 +1,43 @@
+//! Poison-tolerant locking.
+//!
+//! The transports and the comm engine share small bookkeeping structures
+//! (stats, send windows) behind `Mutex`es. A panic on some *other*
+//! thread poisons those mutexes, and `lock().unwrap()` would then
+//! cascade the panic into every thread that touches the lock —
+//! converting one failure into a process-wide crash instead of the typed
+//! error the dead-peer protocol promises. The data under these locks is
+//! plain counters/flags that are valid at every intermediate state, so
+//! recovering the guard from a poisoned lock is sound.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if the mutex was poisoned by a panic
+/// on another thread. Use only for state that is consistent at every
+/// point a panic could occur (counters, flags, queues of owned values).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+}

@@ -1,0 +1,84 @@
+//! Dead-peer teardown race stress: repeatedly kill a rank mid-stream
+//! on every transport backend and assert the survivor observes an
+//! *error*, never a hang — the runtime counterpart of the
+//! model-checked alive-flag protocol in `tests/interleave_model.rs`
+//! (which proves the store/load pairing; this test drives the real
+//! backends through the same lifecycle under true parallelism).
+//!
+//! Each iteration varies how much traffic the dying rank pushes before
+//! dropping its transport, sweeping the kill point across the
+//! survivor's try_send/try_recv paths: mid-drain, mid-window,
+//! before-first-message. A watchdog deadline turns any hang into a
+//! named failure instead of a stuck CI job.
+
+use std::time::{Duration, Instant};
+
+use txgain::collectives::{Backend, Transport};
+
+const TAG: u32 = 5_000;
+const DEADLINE: Duration = Duration::from_secs(10);
+const ITERATIONS: usize = 12;
+
+fn kill_one_rank_mid_stream(backend: Backend) {
+    for iter in 0..ITERATIONS {
+        let mut comms = backend
+            .world(2)
+            .unwrap_or_else(|e| panic!("{backend}: world: {e}"));
+        let mut dying = comms.pop().expect("rank 1");
+        let mut survivor = comms.pop().expect("rank 0");
+
+        // Rank 1: push a varying burst, touch the recv path, then die
+        // abruptly (drop without any goodbye traffic).
+        let burst = iter % 4;
+        let killer = std::thread::spawn(move || {
+            for i in 0..burst {
+                let _ = dying.try_send(0, TAG, &[i as f32, -1.0]);
+            }
+            let _ = dying.try_recv(0, TAG);
+            drop(dying);
+        });
+
+        // Rank 0: churn both nonblocking faces until the death shows
+        // up as an error on either of them.
+        let deadline = Instant::now() + DEADLINE;
+        let mut observed_error = false;
+        let mut drained = 0usize;
+        while Instant::now() < deadline {
+            match survivor.try_recv(1, TAG) {
+                Err(_) => {
+                    observed_error = true;
+                    break;
+                }
+                Ok(Some(_)) => drained += 1,
+                Ok(None) => {}
+            }
+            if survivor.try_send(1, TAG, &[0.5; 8]).is_err() {
+                observed_error = true;
+                break;
+            }
+            std::thread::yield_now();
+        }
+        killer.join().expect("dying-rank thread panicked");
+        assert!(
+            observed_error,
+            "{backend} iter {iter}: rank 0 drained {drained} \
+             messages but never saw rank 1's death as an error \
+             within {DEADLINE:?} — dead peer must error, not hang"
+        );
+    }
+}
+
+#[test]
+fn channel_dead_peer_errors_not_hangs() {
+    kill_one_rank_mid_stream(Backend::Channel);
+}
+
+#[test]
+fn shm_dead_peer_errors_not_hangs() {
+    kill_one_rank_mid_stream(Backend::Shm);
+}
+
+#[test]
+fn tcp_dead_peer_errors_not_hangs() {
+    kill_one_rank_mid_stream(Backend::Tcp);
+}
