@@ -15,18 +15,20 @@
 //!
 //! Run: `cargo bench --bench rec4_overlap`
 //! Smoke gate (used by verify.sh): `cargo bench --bench rec4_overlap
-//! -- --smoke` asserts engine-exposed ≤ blocking-exposed at world 4 on
-//! shm and exits nonzero on regression.
+//! -- --smoke` asserts (a) engine-exposed ≤ blocking-exposed at world
+//! 4 on shm and (b) hierarchical exposed ≤ flat ring on the two-tier
+//! hier transport at an emulated 2 nodes × 4 ranks; exits nonzero on
+//! regression.
 //!
 //! The hot-path bench runs on the preset's `training.transport` knob;
-//! override it with `TXGAIN_TRANSPORT=channel|shm|tcp`.
+//! override it with `TXGAIN_TRANSPORT=channel|shm|tcp|hier`.
 
 use std::time::Instant;
 
 use txgain::collectives::{allreduce, bucketed_allreduce, Algorithm,
                           AnyTransport, Backend, BucketPlan,
                           CollectiveKind, CommEngine, CostModel,
-                          PendingBucket};
+                          PendingBucket, Topology};
 use txgain::config::{presets, ClusterConfig};
 use txgain::perfmodel::simulate;
 use txgain::report::Table;
@@ -49,13 +51,15 @@ fn configured_backend() -> Backend {
 /// `(step_secs, exposed_comm_secs)`; exposed is time the trainer
 /// thread actually spent blocked on comm, i.e. the measured
 /// `comm_exposed_ms`.
-fn measured_step(backend: Backend, world: usize, len: usize,
-                 n_buckets: usize, slice_secs: f64, engine: bool)
+#[allow(clippy::too_many_arguments)]
+fn measured_step(backend: Backend, topo: Option<&Topology>,
+                 world: usize, len: usize, n_buckets: usize,
+                 slice_secs: f64, algo: Algorithm, engine: bool)
     -> (f64, f64) {
     let plan = BucketPlan::from_elems(len, len / n_buckets + 1);
     let per_rank: Vec<(f64, f64)> = std::thread::scope(|s| {
         backend
-            .world(world)
+            .world_with(world, topo)
             .unwrap()
             .into_iter()
             .map(|c| {
@@ -76,7 +80,7 @@ fn measured_step(backend: Backend, world: usize, len: usize,
                             let t = Instant::now();
                             let p = eng
                                 .launch_bucket(
-                                    Algorithm::Ring,
+                                    algo,
                                     CollectiveKind::Allreduce,
                                     buf[a..b].to_vec())
                                 .unwrap();
@@ -99,8 +103,7 @@ fn measured_step(backend: Backend, world: usize, len: usize,
                                     slice_secs));
                             let (a, b) = plan.span(i);
                             let t = Instant::now();
-                            allreduce(Algorithm::Ring, &mut c,
-                                      &mut buf[a..b])
+                            allreduce(algo, &mut c, &mut buf[a..b])
                                 .unwrap();
                             exposed += t.elapsed().as_secs_f64();
                         }
@@ -146,8 +149,9 @@ fn smoke() {
         let mut step = 0.0;
         let mut exposed = 0.0;
         for _ in 0..trials {
-            let (s, e) = measured_step(Backend::Shm, world, len,
-                                       buckets, slice, engine);
+            let (s, e) = measured_step(Backend::Shm, None, world, len,
+                                       buckets, slice, Algorithm::Ring,
+                                       engine);
             step += s;
             exposed += e;
         }
@@ -173,6 +177,49 @@ fn smoke() {
     println!("rec4 smoke: OK (engine exposes {:.0}% of the blocking \
               baseline)",
              ee / be.max(1e-12) * 100.0);
+    smoke_hier();
+}
+
+/// The hierarchical half of the smoke gate: on an emulated
+/// 2 nodes × 4 ranks (shm within a group, tcp loopback between the
+/// leaders), a blocking hierarchical all-reduce must not expose more
+/// than the flat ring on the *same* two-tier transport — the flat ring
+/// drags 2(W−1) of its hops across the slow tier, the hierarchical
+/// schedule crosses it 2(N−1) times. Same noise margin as above.
+fn smoke_hier() {
+    let world = 8usize;
+    let topo: Topology = "4,4".parse().unwrap();
+    let len = 2_000_000usize;
+    let buckets = 4usize;
+    let trials = 3usize;
+    let mean = |algo: Algorithm| -> f64 {
+        let mut exposed = 0.0;
+        for _ in 0..trials {
+            exposed += measured_step(Backend::Hier, Some(&topo), world,
+                                     len, buckets, 0.0, algo, false)
+                .1;
+        }
+        exposed / trials as f64
+    };
+    let flat = mean(Algorithm::Ring);
+    let hier = mean(Algorithm::Hierarchical);
+    println!(
+        "rec4 smoke [hier, 2 nodes x 4 ranks, {len} floats, {buckets} \
+         buckets]:\n  flat ring    : exposed {:7.2} ms\n  \
+         hierarchical : exposed {:7.2} ms",
+        flat * 1e3, hier * 1e3
+    );
+    let tolerance = flat * 0.10 + 1e-3;
+    assert!(
+        hier <= flat + tolerance,
+        "SMOKE FAIL: hierarchical exposed {:.2} ms > flat ring {:.2} \
+         ms (+10% noise margin) on the two-tier transport — the \
+         topology-aware schedule is not paying off",
+        hier * 1e3, flat * 1e3
+    );
+    println!("rec4 smoke: OK (hierarchical exposes {:.0}% of the flat \
+              ring)",
+             hier / flat.max(1e-12) * 100.0);
 }
 
 fn main() {
@@ -272,9 +319,11 @@ fn main() {
         });
         t0.elapsed().as_secs_f64()
     };
+    let mut headers = vec!["buckets".to_string()];
+    headers.extend(Backend::ALL.iter().map(|b| format!("{b}(ms)")));
     let mut t = Table::new(
         "wall time per all-reduce, world=4, 8.5M floats (mean of 5)",
-        vec!["buckets", "channel(ms)", "shm(ms)", "tcp(ms)"],
+        headers.iter().map(String::as_str).collect(),
     );
     for (label, elems) in [
         ("monolithic", None),
@@ -308,10 +357,12 @@ fn main() {
     let len = 2_000_000usize;
     let buckets = 8usize;
     let slice = 2e-3;
+    let mut headers = vec!["driver".to_string()];
+    headers.extend(Backend::ALL.iter().map(|b| b.to_string()));
     let mut t = Table::new(
         "exposed comm (ms), world=4, 2M floats, 8 buckets, 2ms/layer \
          (mean of 3)",
-        vec!["driver", "channel", "shm", "tcp"],
+        headers.iter().map(String::as_str).collect(),
     );
     let mut rows: Vec<Vec<String>> = Vec::new();
     for engine in [false, true] {
@@ -320,8 +371,9 @@ fn main() {
         for backend in Backend::ALL {
             let mut exposed = 0.0;
             for _ in 0..3 {
-                exposed += measured_step(backend, world, len, buckets,
-                                         slice, engine)
+                exposed += measured_step(backend, None, world, len,
+                                         buckets, slice,
+                                         Algorithm::Ring, engine)
                     .1;
             }
             cells.push(format!("{:.2}", exposed / 3.0 * 1e3));

@@ -7,7 +7,7 @@
 //! This is the quantity behind the paper's recommendation 4: at bert-
 //! scale gradients and 25 GbE it stays small relative to compute.
 
-use super::Algorithm;
+use super::{Algorithm, BucketPlan};
 use crate::config::ClusterConfig;
 
 /// Cap on modeled buckets: keeps the pricing loop bounded even for
@@ -81,11 +81,36 @@ impl CostModel {
             + 2.0 * rounds * (self.alpha + bytes * self.beta_eth)
     }
 
+    /// What the repo's *flat* ring implementation costs on a
+    /// multi-node (hier) transport: the ring runs over all
+    /// `W = nodes × gpus_per_node` global ranks, so each of its
+    /// `2·(W−1)` steps is gated by the group-edge hops that cross the
+    /// 25 GbE tier — `2·(W−1)` network latencies on the critical path
+    /// and `2·(W−1)/W × bytes` through the slowest link, against the
+    /// hierarchical schedule's `2·(N−1)` leader hops. The gap between
+    /// this and [`CostModel::ring_allreduce`] is the win the
+    /// auto-tuner banks when it picks `hierarchical`.
+    pub fn flat_ring_allreduce(&self, nodes: usize, bytes: f64) -> f64 {
+        let w = (nodes * self.gpus_per_node.max(1)) as f64;
+        if w <= 1.0 {
+            return 0.0;
+        }
+        2.0 * (w - 1.0) * self.alpha
+            + 2.0 * (w - 1.0) / w * bytes * self.beta_eth
+    }
+
     /// All-reduce time for `bytes` across `nodes` under `algo`.
     pub fn allreduce(&self, algo: Algorithm, nodes: usize, bytes: f64)
         -> f64 {
         match algo {
-            Algorithm::Ring => self.ring_allreduce(nodes, bytes),
+            // the model's ring pricing is already the two-tier shape
+            // (intra reduce, leader ring, intra broadcast), i.e. what
+            // `Algorithm::Hierarchical` actually executes; the flat
+            // ring *implementation* on a multi-node transport costs
+            // more — see [`CostModel::flat_ring_allreduce`]
+            Algorithm::Ring | Algorithm::Hierarchical => {
+                self.ring_allreduce(nodes, bytes)
+            }
             Algorithm::Tree => self.tree_allreduce(nodes, bytes),
         }
     }
@@ -122,7 +147,9 @@ impl CostModel {
     pub fn reduce_scatter(&self, algo: Algorithm, nodes: usize,
                           bytes: f64) -> f64 {
         match algo {
-            Algorithm::Ring => self.ring_reduce_scatter(nodes, bytes),
+            Algorithm::Ring | Algorithm::Hierarchical => {
+                self.ring_reduce_scatter(nodes, bytes)
+            }
             Algorithm::Tree => self.tree_allreduce(nodes, bytes),
         }
     }
@@ -133,7 +160,9 @@ impl CostModel {
     pub fn all_gather(&self, algo: Algorithm, nodes: usize, bytes: f64)
         -> f64 {
         match algo {
-            Algorithm::Ring => self.ring_all_gather(nodes, bytes),
+            Algorithm::Ring | Algorithm::Hierarchical => {
+                self.ring_all_gather(nodes, bytes)
+            }
             Algorithm::Tree => {
                 let n = nodes as f64;
                 if nodes <= 1 {
@@ -308,8 +337,13 @@ impl CostModel {
         }
         let n = nodes as f64;
         match algo {
-            // ring: reduce-scatter + all-gather, (n-1)/n each
-            Algorithm::Ring => 2.0 * (n - 1.0) / n * bytes,
+            // ring: reduce-scatter + all-gather, (n-1)/n each; the
+            // hierarchical leader ring moves the same inter-tier bytes
+            // (per-tier exactness lives in `hier::tier_wire_elems`,
+            // which replays the schedule)
+            Algorithm::Ring | Algorithm::Hierarchical => {
+                2.0 * (n - 1.0) / n * bytes
+            }
             // tree: full buffer up and down, log2 rounds at the root
             Algorithm::Tree => 2.0 * n.log2().ceil() * bytes,
         }
@@ -325,7 +359,9 @@ impl CostModel {
         }
         let n = nodes as f64;
         match algo {
-            Algorithm::Ring => (n - 1.0) / n * bytes,
+            Algorithm::Ring | Algorithm::Hierarchical => {
+                (n - 1.0) / n * bytes
+            }
             Algorithm::Tree => self.allreduce_wire_bytes(algo, nodes,
                                                          bytes),
         }
@@ -341,9 +377,115 @@ impl CostModel {
         }
         let n = nodes as f64;
         match algo {
-            Algorithm::Ring => (n - 1.0) / n * bytes,
+            Algorithm::Ring | Algorithm::Hierarchical => {
+                (n - 1.0) / n * bytes
+            }
             Algorithm::Tree => (n - 1.0) / n * bytes + (n - 1.0) * bytes,
         }
+    }
+}
+
+/// The comm plan the auto-tuner settled on: which algorithm to run
+/// and how to bucket the gradient, plus the modeled cost that won.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunedPlan {
+    pub algorithm: Algorithm,
+    /// Chosen bucket size, MB (config units — `training.bucket_mb`).
+    pub bucket_mb: f64,
+    /// Chosen first-bucket size, MB; `0` keeps it equal to
+    /// `bucket_mb` (the `training.first_bucket_mb` convention).
+    pub first_bucket_mb: f64,
+    /// Modeled exposed comm per step under the chosen plan, seconds.
+    pub exposed_secs: f64,
+    /// Modeled total channel-busy comm per step, seconds.
+    pub comm_secs: f64,
+}
+
+impl CostModel {
+    /// Candidate `bucket_mb` grid the auto-tuner sweeps (MB).
+    pub const TUNE_BUCKET_MB: [f64; 7] =
+        [1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0];
+    /// Candidate `first_bucket_mb` grid (`0` = same as the bucket).
+    pub const TUNE_FIRST_MB: [f64; 4] = [0.0, 1.0, 2.0, 4.0];
+
+    /// Solve `algorithm` × `bucket_mb` × `first_bucket_mb` jointly for
+    /// the plan with the least modeled *exposed* communication (ties
+    /// broken toward less channel-busy time), pricing each candidate
+    /// with the same pipeline schedule the simulator uses.
+    ///
+    /// `hier_available` says the transport is hierarchical
+    /// (`transport = "hier"`): it puts `Algorithm::Hierarchical` on
+    /// the candidate list, and — crucially — prices flat `ring` at
+    /// what the flat implementation actually does on a multi-node
+    /// world ([`CostModel::flat_ring_allreduce`]) rather than at the
+    /// two-tier ideal, so the comparison is implementation-honest.
+    pub fn auto_tune(&self, nodes: usize, bytes: f64,
+                     backward_secs: f64, hier_available: bool)
+        -> TunedPlan {
+        let price = |algo: Algorithm, b: f64| -> f64 {
+            match algo {
+                Algorithm::Ring if hier_available => {
+                    self.flat_ring_allreduce(nodes, b)
+                }
+                _ => self.allreduce(algo, nodes, b),
+            }
+        };
+        let elems = (bytes / 2.0).max(0.0) as usize; // bf16 wire
+        let mut best: Option<TunedPlan> = None;
+        let mut algos = vec![Algorithm::Ring, Algorithm::Tree];
+        if hier_available {
+            algos.push(Algorithm::Hierarchical);
+        }
+        for algo in algos {
+            for &bucket_mb in &Self::TUNE_BUCKET_MB {
+                let bucket_elems = (bucket_mb * 1e6 / 2.0) as usize;
+                for &first_mb in &Self::TUNE_FIRST_MB {
+                    if first_mb >= bucket_mb {
+                        continue; // 0 = off; larger never helps
+                    }
+                    let first_elems = if first_mb > 0.0 {
+                        (first_mb * 1e6 / 2.0) as usize
+                    } else {
+                        bucket_elems
+                    };
+                    let sizes: Vec<f64> = BucketPlan::ready_sizes(
+                        elems, bucket_elems, first_elems,
+                        MAX_MODELED_BUCKETS)
+                        .into_iter()
+                        .map(|e| e as f64 * 2.0)
+                        .collect();
+                    let cost = self.overlap_pipeline_sized(
+                        &sizes, backward_secs, |b| price(algo, b));
+                    let cand = TunedPlan {
+                        algorithm: algo,
+                        bucket_mb,
+                        first_bucket_mb: first_mb,
+                        exposed_secs: cost.exposed,
+                        comm_secs: cost.comm_total,
+                    };
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            cand.exposed_secs
+                                < b.exposed_secs * (1.0 - 1e-9)
+                                || (cand.exposed_secs
+                                    <= b.exposed_secs * (1.0 + 1e-9)
+                                    && cand.comm_secs < b.comm_secs)
+                        }
+                    };
+                    if better {
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+        best.unwrap_or(TunedPlan {
+            algorithm: Algorithm::Ring,
+            bucket_mb: 25.0,
+            first_bucket_mb: 0.0,
+            exposed_secs: 0.0,
+            comm_secs: 0.0,
+        })
     }
 }
 
@@ -655,5 +797,85 @@ mod tests {
         let t = m.ring_allreduce(128, CostModel::gradient_bytes(120_000_000));
         assert!(t < 0.3, "allreduce {t}s");
         assert!(t > 0.03, "suspiciously fast {t}s");
+    }
+
+    /// 2 nodes × 4 ranks, 25 GbE between: the shape behind the rec4
+    /// smoke gate and the acceptance criterion.
+    fn two_by_four() -> CostModel {
+        CostModel {
+            alpha: 50e-6,
+            beta_eth: 1.0 / 3.125e9,
+            beta_nvl: 1.0 / 600e9,
+            gpus_per_node: 4,
+        }
+    }
+
+    #[test]
+    fn hierarchical_prices_as_the_two_tier_shape() {
+        let m = model();
+        let b = 240e6;
+        for nodes in [1usize, 2, 16] {
+            assert_eq!(m.allreduce(Algorithm::Hierarchical, nodes, b),
+                       m.ring_allreduce(nodes, b));
+            let rs_ag =
+                m.reduce_scatter(Algorithm::Hierarchical, nodes, b)
+                    + m.all_gather(Algorithm::Hierarchical, nodes, b);
+            let ar = m.ring_allreduce(nodes, b);
+            assert!((rs_ag - ar).abs() <= ar * 1e-9,
+                    "nodes={nodes}: {rs_ag} vs {ar}");
+            assert_eq!(
+                m.allreduce_wire_bytes(Algorithm::Hierarchical, nodes,
+                                       b),
+                m.allreduce_wire_bytes(Algorithm::Ring, nodes, b));
+        }
+    }
+
+    #[test]
+    fn flat_ring_on_two_nodes_costs_more_than_hierarchical() {
+        // 2×4: flat crosses the eth tier 2·(8−1) times where the
+        // leader ring needs 2·(2−1) — the ISSUE's motivating constant
+        let m = two_by_four();
+        for b in [1e6, 25e6, 240e6] {
+            let flat = m.flat_ring_allreduce(2, b);
+            let hier = m.allreduce(Algorithm::Hierarchical, 2, b);
+            assert!(hier < flat, "b={b}: hier {hier} !< flat {flat}");
+        }
+        // degenerate single-rank world costs nothing
+        let one = CostModel { gpus_per_node: 1, ..m };
+        assert_eq!(one.flat_ring_allreduce(1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn auto_tune_picks_hierarchical_on_the_hier_transport() {
+        let m = two_by_four();
+        let bytes = CostModel::gradient_bytes(120_000_000);
+        let plan = m.auto_tune(2, bytes, 0.25, true);
+        assert_eq!(plan.algorithm, Algorithm::Hierarchical,
+                   "{plan:?}");
+        assert!(plan.bucket_mb > 0.0);
+        assert!(plan.exposed_secs >= 0.0);
+        assert!(plan.exposed_secs <= plan.comm_secs * (1.0 + 1e-9));
+        // and it beats every flat-ring candidate at the same knobs
+        let flat = m.overlap_pipeline(
+            bytes, plan.bucket_mb * 1e6, 0.25,
+            |b| m.flat_ring_allreduce(2, b));
+        assert!(plan.exposed_secs <= flat.exposed);
+    }
+
+    #[test]
+    fn auto_tune_stays_flat_without_a_hier_transport() {
+        let m = two_by_four();
+        let bytes = CostModel::gradient_bytes(120_000_000);
+        let plan = m.auto_tune(2, bytes, 0.25, false);
+        assert_ne!(plan.algorithm, Algorithm::Hierarchical,
+                   "{plan:?}");
+    }
+
+    #[test]
+    fn auto_tune_degenerates_gracefully_on_zero_bytes() {
+        let m = two_by_four();
+        let plan = m.auto_tune(2, 0.0, 0.25, true);
+        assert_eq!(plan.exposed_secs, 0.0);
+        assert_eq!(plan.comm_secs, 0.0);
     }
 }

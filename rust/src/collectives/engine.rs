@@ -54,8 +54,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context};
 
-use super::transport::{spin_backoff, BufferPool, Transport,
-                       TransportStats};
+use super::transport::{spin_backoff, BufferPool, Topology,
+                       Transport, TransportStats};
 use super::{shard_spans, Algorithm};
 use crate::util::sync::lock_unpoisoned;
 use crate::Result;
@@ -292,7 +292,51 @@ enum Phase {
     TreeAgRootBcast { r: usize },
     TreeAgLeafSend,
     TreeAgLeafRecv,
+    // The hierarchical schedule (collectives::hier), phase for phase:
+    // intra-group ring RS, member→leader group-sum gather, leader-only
+    // ring RS, leader-only ring AG, leader→member shard scatter (RS)
+    // or full-buffer bcast (allreduce/AG), member→leader shard gather
+    // (AG entry). `j` walks a leader's member list; on a member the
+    // same phase is its single matching send/recv.
+    HierIntraRs { s: usize, sent: bool, recvd: bool },
+    HierGather { j: usize },
+    HierInterRs { s: usize, sent: bool, recvd: bool },
+    HierInterAg { s: usize, sent: bool, recvd: bool },
+    HierScatter { j: usize },
+    HierAgGather { j: usize },
+    HierBcast { j: usize },
     Done,
+}
+
+/// Where a hierarchical op goes once the member→leader group-sum
+/// gather is complete: leaders enter the inter-leader reduce ring
+/// (when there is more than one group), everyone else skips straight
+/// past the inter phases they take no part in.
+fn hier_after_gather(kind: CollectiveKind, leader: bool, n: usize)
+    -> Phase {
+    if leader && n > 1 {
+        Phase::HierInterRs { s: 0, sent: false, recvd: false }
+    } else {
+        hier_after_inter_rs(kind, leader, n)
+    }
+}
+
+/// Where a hierarchical op goes after the inter-leader reduce ring
+/// (or immediately, for ranks that skip it): RS scatters the global
+/// shards; allreduce continues into the inter all-gather (leaders)
+/// and then the intra bcast.
+fn hier_after_inter_rs(kind: CollectiveKind, leader: bool, n: usize)
+    -> Phase {
+    match kind {
+        CollectiveKind::ReduceScatter => Phase::HierScatter { j: 1 },
+        _ => {
+            if leader && n > 1 {
+                Phase::HierInterAg { s: 0, sent: false, recvd: false }
+            } else {
+                Phase::HierBcast { j: 1 }
+            }
+        }
+    }
 }
 
 struct Op {
@@ -301,13 +345,35 @@ struct Op {
     kind: CollectiveKind,
     buf: Vec<f32>,
     spans: Vec<(usize, usize)>,
+    /// Hierarchical ops only: the transport's topology plus the two
+    /// extra span partitions the two-level schedule walks — this
+    /// rank's intra-group `shard_spans(len, m)` and the per-group
+    /// contiguous unions of the global spans. Empty otherwise.
+    topo: Option<Topology>,
+    lspans: Vec<(usize, usize)>,
+    gspans: Vec<(usize, usize)>,
     phase: Phase,
 }
 
 impl Op {
     fn new(id: u64, base: u32, algo: Algorithm, kind: CollectiveKind,
-           buf: Vec<f32>, world: usize) -> Op {
+           buf: Vec<f32>, world: usize, rank: usize,
+           topo: Option<&Topology>) -> Result<Op> {
         let spans = shard_spans(buf.len(), world);
+        let (topo, lspans, gspans) = match algo {
+            Algorithm::Hierarchical => {
+                let topo = topo.ok_or_else(|| anyhow!(
+                    "rank {rank}: the hierarchical algorithm needs a \
+                     topology-carrying transport — set \
+                     training.transport = \"hier\" (and optionally \
+                     training.topology)"))?;
+                let (_, m) = topo.group_span(topo.group_of(rank));
+                (Some(topo.clone()),
+                 shard_spans(buf.len(), m),
+                 super::hier::gspans(topo, buf.len()))
+            }
+            _ => (None, Vec::new(), Vec::new()),
+        };
         let phase = if world == 1 {
             Phase::Done // every collective is the identity solo
         } else {
@@ -330,9 +396,22 @@ impl Op {
                 (Algorithm::Tree, CollectiveKind::AllGather) => {
                     Phase::TreeAgRootGather { r: 1 }
                 }
+                // the hierarchical state machines mirror hier.rs
+                // phase for phase (same copies, same accumulation
+                // order => bit-identical to the blocking path)
+                (Algorithm::Hierarchical, CollectiveKind::Allreduce)
+                | (Algorithm::Hierarchical,
+                   CollectiveKind::ReduceScatter) => {
+                    Phase::HierIntraRs { s: 0, sent: false,
+                                         recvd: false }
+                }
+                (Algorithm::Hierarchical, CollectiveKind::AllGather) => {
+                    Phase::HierAgGather { j: 1 }
+                }
             }
         };
-        Op { id, base, kind, buf, spans, phase }
+        Ok(Op { id, base, kind, buf, spans, topo, lspans, gspans,
+                phase })
     }
 
     /// Relative tags, disjoint within this op's `[base, base+stride)`
@@ -361,6 +440,65 @@ impl Op {
 
     fn tree_ag_bcast_tag(&self, world: usize) -> u32 {
         self.base + (4 * world + 1) as u32
+    }
+
+    // Hierarchical tag slots inside the same `[base, base + 4·world+2)`
+    // window: the intra ring reuses `rs_tag` (`base..base+world`), the
+    // leader rings take the next two world-sized blocks, and the three
+    // point-to-point phases take single slots (distinct peers
+    // disambiguate; per-(peer, tag) FIFO covers reuse). The scatter
+    // (RS) and shard-gather (AG) phases share a slot because no op
+    // runs both.
+    fn hier_inter_rs_tag(&self, world: usize, s: usize) -> u32 {
+        self.base + (world + s) as u32
+    }
+
+    fn hier_inter_ag_tag(&self, world: usize, s: usize) -> u32 {
+        self.base + (2 * world + s) as u32
+    }
+
+    fn hier_gather_tag(&self, world: usize) -> u32 {
+        self.base + (3 * world) as u32
+    }
+
+    fn hier_shard_tag(&self, world: usize) -> u32 {
+        self.base + (4 * world) as u32
+    }
+
+    fn hier_bcast_tag(&self, world: usize) -> u32 {
+        self.base + (4 * world + 1) as u32
+    }
+
+    /// Hierarchical geometry of this rank: `(group_start,
+    /// group_size, n_groups, is_leader)`.
+    fn hier_geom(&self, rank: usize)
+        -> Result<(usize, usize, usize, bool)> {
+        match &self.topo {
+            Some(topo) => {
+                let g = topo.group_of(rank);
+                let (start, m) = topo.group_span(g);
+                Ok((start, m, topo.n_groups(), rank == start))
+            }
+            None => Err(anyhow!(
+                "hierarchical op phase without a topology")),
+        }
+    }
+
+    /// Leader-ring geometry: `(my_group, n_groups, right_leader,
+    /// left_leader)` — the inter-tier ring neighbours as global ranks.
+    fn hier_ring(&self, rank: usize)
+        -> Result<(usize, usize, usize, usize)> {
+        match &self.topo {
+            Some(topo) => {
+                let g = topo.group_of(rank);
+                let n = topo.n_groups();
+                Ok((g, n,
+                    topo.leader((g + 1) % n),
+                    topo.leader((g + n - 1) % n)))
+            }
+            None => Err(anyhow!(
+                "hierarchical op phase without a topology")),
+        }
     }
 
     /// Advance as far as the wire allows without blocking. Mirrors the
@@ -638,6 +776,316 @@ impl Op {
                         }
                     }
                 }
+                Phase::HierIntraRs { s, sent, recvd } => {
+                    let (start, m, _n, _leader) =
+                        self.hier_geom(rank)?;
+                    if m == 1 || s >= m - 1 {
+                        self.phase = Phase::HierGather { j: 1 };
+                        continue;
+                    }
+                    let local = rank - start;
+                    let iright = start + (local + 1) % m;
+                    let ileft = start + (local + m - 1) % m;
+                    let mut sent = sent;
+                    let mut recvd = recvd;
+                    if !sent {
+                        let send_c = (local + 2 * m - 1 - s) % m;
+                        let (a, b) = self.lspans[send_c];
+                        if t.try_send(iright, self.rs_tag(s),
+                                      &self.buf[a..b])? {
+                            sent = true;
+                            progressed = true;
+                        }
+                    }
+                    if !recvd {
+                        if let Some(incoming) =
+                            t.try_recv(ileft, self.rs_tag(s))?
+                        {
+                            let recv_c = (local + 2 * m - 2 - s) % m;
+                            let (a, b) = self.lspans[recv_c];
+                            for (dst, src) in
+                                self.buf[a..b].iter_mut().zip(&incoming)
+                            {
+                                *dst += src;
+                            }
+                            t.recycle(incoming);
+                            recvd = true;
+                            progressed = true;
+                        }
+                    }
+                    if sent && recvd {
+                        self.phase = Phase::HierIntraRs {
+                            s: s + 1, sent: false, recvd: false,
+                        };
+                        continue;
+                    }
+                    self.phase = Phase::HierIntraRs { s, sent, recvd };
+                    return Ok(if progressed { Step::Progress } else {
+                        Step::Stalled
+                    });
+                }
+                Phase::HierGather { j } => {
+                    let (start, m, n, leader) = self.hier_geom(rank)?;
+                    if m == 1 {
+                        self.phase =
+                            hier_after_gather(self.kind, leader, n);
+                        continue;
+                    }
+                    if leader {
+                        if j >= m {
+                            self.phase =
+                                hier_after_gather(self.kind, true, n);
+                            continue;
+                        }
+                        match t.try_recv(start + j,
+                                         self.hier_gather_tag(world))? {
+                            Some(incoming) => {
+                                let (a, b) = self.lspans[j];
+                                self.buf[a..b]
+                                    .copy_from_slice(&incoming);
+                                t.recycle(incoming);
+                                progressed = true;
+                                self.phase =
+                                    Phase::HierGather { j: j + 1 };
+                                continue;
+                            }
+                            None => {
+                                return Ok(if progressed {
+                                    Step::Progress
+                                } else {
+                                    Step::Stalled
+                                })
+                            }
+                        }
+                    }
+                    let local = rank - start;
+                    let (a, b) = self.lspans[local];
+                    if t.try_send(start, self.hier_gather_tag(world),
+                                  &self.buf[a..b])? {
+                        progressed = true;
+                        self.phase =
+                            hier_after_gather(self.kind, false, n);
+                        continue;
+                    }
+                    return Ok(if progressed { Step::Progress } else {
+                        Step::Stalled
+                    });
+                }
+                Phase::HierInterRs { s, sent, recvd } => {
+                    let (g, n, lright, lleft) = self.hier_ring(rank)?;
+                    if s >= n - 1 {
+                        self.phase =
+                            hier_after_inter_rs(self.kind, true, n);
+                        continue;
+                    }
+                    let mut sent = sent;
+                    let mut recvd = recvd;
+                    if !sent {
+                        let send_c = (g + 2 * n - 1 - s) % n;
+                        let (a, b) = self.gspans[send_c];
+                        if t.try_send(lright,
+                                      self.hier_inter_rs_tag(world, s),
+                                      &self.buf[a..b])? {
+                            sent = true;
+                            progressed = true;
+                        }
+                    }
+                    if !recvd {
+                        if let Some(incoming) = t.try_recv(
+                            lleft, self.hier_inter_rs_tag(world, s))?
+                        {
+                            let recv_c = (g + 2 * n - 2 - s) % n;
+                            let (a, b) = self.gspans[recv_c];
+                            for (dst, src) in
+                                self.buf[a..b].iter_mut().zip(&incoming)
+                            {
+                                *dst += src;
+                            }
+                            t.recycle(incoming);
+                            recvd = true;
+                            progressed = true;
+                        }
+                    }
+                    if sent && recvd {
+                        self.phase = Phase::HierInterRs {
+                            s: s + 1, sent: false, recvd: false,
+                        };
+                        continue;
+                    }
+                    self.phase = Phase::HierInterRs { s, sent, recvd };
+                    return Ok(if progressed { Step::Progress } else {
+                        Step::Stalled
+                    });
+                }
+                Phase::HierInterAg { s, sent, recvd } => {
+                    let (g, n, lright, lleft) = self.hier_ring(rank)?;
+                    if s >= n - 1 {
+                        self.phase = Phase::HierBcast { j: 1 };
+                        continue;
+                    }
+                    let mut sent = sent;
+                    let mut recvd = recvd;
+                    if !sent {
+                        let send_c = (g + n - s) % n;
+                        let (a, b) = self.gspans[send_c];
+                        if t.try_send(lright,
+                                      self.hier_inter_ag_tag(world, s),
+                                      &self.buf[a..b])? {
+                            sent = true;
+                            progressed = true;
+                        }
+                    }
+                    if !recvd {
+                        if let Some(incoming) = t.try_recv(
+                            lleft, self.hier_inter_ag_tag(world, s))?
+                        {
+                            let recv_c = (g + n - s - 1) % n;
+                            let (a, b) = self.gspans[recv_c];
+                            self.buf[a..b].copy_from_slice(&incoming);
+                            t.recycle(incoming);
+                            recvd = true;
+                            progressed = true;
+                        }
+                    }
+                    if sent && recvd {
+                        self.phase = Phase::HierInterAg {
+                            s: s + 1, sent: false, recvd: false,
+                        };
+                        continue;
+                    }
+                    self.phase = Phase::HierInterAg { s, sent, recvd };
+                    return Ok(if progressed { Step::Progress } else {
+                        Step::Stalled
+                    });
+                }
+                Phase::HierScatter { j } => {
+                    let (start, m, _n, leader) = self.hier_geom(rank)?;
+                    if m == 1 {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    if leader {
+                        if j >= m {
+                            self.phase = Phase::Done;
+                            continue;
+                        }
+                        let (a, b) = self.spans[start + j];
+                        if t.try_send(start + j,
+                                      self.hier_shard_tag(world),
+                                      &self.buf[a..b])? {
+                            progressed = true;
+                            self.phase =
+                                Phase::HierScatter { j: j + 1 };
+                            continue;
+                        }
+                        return Ok(if progressed { Step::Progress }
+                                  else { Step::Stalled });
+                    }
+                    match t.try_recv(start,
+                                     self.hier_shard_tag(world))? {
+                        Some(incoming) => {
+                            let (a, b) = self.spans[rank];
+                            self.buf[a..b].copy_from_slice(&incoming);
+                            t.recycle(incoming);
+                            self.phase = Phase::Done;
+                            continue;
+                        }
+                        None => {
+                            return Ok(if progressed { Step::Progress }
+                                      else { Step::Stalled })
+                        }
+                    }
+                }
+                Phase::HierAgGather { j } => {
+                    let (start, m, n, leader) = self.hier_geom(rank)?;
+                    if m == 1 {
+                        self.phase = if n > 1 {
+                            Phase::HierInterAg {
+                                s: 0, sent: false, recvd: false,
+                            }
+                        } else {
+                            Phase::HierBcast { j: 1 }
+                        };
+                        continue;
+                    }
+                    if leader {
+                        if j >= m {
+                            self.phase = if n > 1 {
+                                Phase::HierInterAg {
+                                    s: 0, sent: false, recvd: false,
+                                }
+                            } else {
+                                Phase::HierBcast { j: 1 }
+                            };
+                            continue;
+                        }
+                        match t.try_recv(start + j,
+                                         self.hier_shard_tag(world))? {
+                            Some(incoming) => {
+                                let (a, b) = self.spans[start + j];
+                                self.buf[a..b]
+                                    .copy_from_slice(&incoming);
+                                t.recycle(incoming);
+                                progressed = true;
+                                self.phase =
+                                    Phase::HierAgGather { j: j + 1 };
+                                continue;
+                            }
+                            None => {
+                                return Ok(if progressed {
+                                    Step::Progress
+                                } else {
+                                    Step::Stalled
+                                })
+                            }
+                        }
+                    }
+                    let (a, b) = self.spans[rank];
+                    if t.try_send(start, self.hier_shard_tag(world),
+                                  &self.buf[a..b])? {
+                        progressed = true;
+                        self.phase = Phase::HierBcast { j: 1 };
+                        continue;
+                    }
+                    return Ok(if progressed { Step::Progress } else {
+                        Step::Stalled
+                    });
+                }
+                Phase::HierBcast { j } => {
+                    let (start, m, _n, leader) = self.hier_geom(rank)?;
+                    if m == 1 {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    if leader {
+                        if j >= m {
+                            self.phase = Phase::Done;
+                            continue;
+                        }
+                        if t.try_send(start + j,
+                                      self.hier_bcast_tag(world),
+                                      &self.buf)? {
+                            progressed = true;
+                            self.phase = Phase::HierBcast { j: j + 1 };
+                            continue;
+                        }
+                        return Ok(if progressed { Step::Progress }
+                                  else { Step::Stalled });
+                    }
+                    match t.try_recv(start,
+                                     self.hier_bcast_tag(world))? {
+                        Some(incoming) => {
+                            self.buf.copy_from_slice(&incoming);
+                            t.recycle(incoming);
+                            self.phase = Phase::Done;
+                            continue;
+                        }
+                        None => {
+                            return Ok(if progressed { Step::Progress }
+                                      else { Step::Stalled })
+                        }
+                    }
+                }
             }
         }
     }
@@ -704,6 +1152,8 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
                                stats: Arc<Mutex<TransportStats>>) {
     let mut t = transport;
     let world = t.world();
+    let rank = t.rank();
+    let topo = t.topology().cloned();
     // per-launch tag stride: covers ring RS+AG (2·world), the tree
     // reduce/bcast offsets (up to 4·world) and the tree-AG pair
     let stride = (4 * world + 2) as u64;
@@ -735,8 +1185,19 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
                     let base = ENGINE_TAG_BASE
                         + ((seq % span) * stride) as u32;
                     seq += 1;
-                    ops.push(Op::new(id, base, algo, kind, buf, world));
-                    spins = 0;
+                    match Op::new(id, base, algo, kind, buf, world,
+                                  rank, topo.as_ref()) {
+                        Ok(op) => {
+                            ops.push(op);
+                            spins = 0;
+                        }
+                        // a mislaunched op (e.g. hierarchical without
+                        // a topology) fails just that bucket, not the
+                        // engine
+                        Err(e) => {
+                            let _ = done_tx.send((id, Err(e)));
+                        }
+                    }
                 }
                 Cmd::Checkout => {
                     // drive everything in flight to completion, then
@@ -888,7 +1349,8 @@ mod model_tests {
     fn two_elem_op(id: u64, algo: Algorithm) -> Op {
         let base = ENGINE_TAG_BASE + (id as u32) * 64;
         Op::new(id, base, algo, CollectiveKind::Allreduce,
-                vec![1.0 + id as f32, 2.0 + id as f32], 2)
+                vec![1.0 + id as f32, 2.0 + id as f32], 2, 0, None)
+            .unwrap()
     }
 
     /// Every interleaving of stalls and progress completes every op
@@ -1069,6 +1531,96 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The engine's hierarchical state machine replays the blocking
+    /// hierarchical schedule exactly, so the two paths agree
+    /// bit-for-bit on arbitrary inputs — even and uneven groupings.
+    #[test]
+    fn engine_hier_matches_blocking_hier_bit_for_bit() {
+        use crate::collectives::transport::HierTransport;
+        use crate::collectives::Topology;
+        for sizes in [vec![2usize, 2], vec![3, 1], vec![2, 3]] {
+            let topo = Topology::new(sizes.clone()).unwrap();
+            let world = topo.world();
+            let len = 29usize;
+            let ins = inputs(world, len);
+            let blocking: Vec<Vec<f32>> = std::thread::scope(|s| {
+                HierTransport::world(&topo)
+                    .unwrap()
+                    .into_iter()
+                    .zip(ins.clone())
+                    .map(|(mut c, mut buf)| {
+                        s.spawn(move || {
+                            allreduce(Algorithm::Hierarchical, &mut c,
+                                      &mut buf)
+                                .unwrap();
+                            buf
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let engine: Vec<Vec<f32>> = std::thread::scope(|s| {
+                HierTransport::world(&topo)
+                    .unwrap()
+                    .into_iter()
+                    .zip(ins)
+                    .map(|(c, buf)| {
+                        s.spawn(move || {
+                            let mut eng = CommEngine::new(c);
+                            let p = eng
+                                .launch_bucket(
+                                    Algorithm::Hierarchical,
+                                    CollectiveKind::Allreduce,
+                                    buf)
+                                .unwrap();
+                            eng.wait(p).unwrap()
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            for (r, (e, b)) in engine.iter().zip(&blocking).enumerate()
+            {
+                for (x, y) in e.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "groups={sizes:?} rank={r}");
+                }
+            }
+        }
+    }
+
+    /// A hierarchical launch on a flat (topology-less) transport fails
+    /// that bucket with a pointer at the fix, not the whole engine.
+    #[test]
+    fn hier_launch_without_topology_fails_the_bucket_only() {
+        let world = 2usize;
+        std::thread::scope(|s| {
+            for c in World::new(world).into_comms() {
+                s.spawn(move || {
+                    let mut eng = CommEngine::new(c);
+                    let p = eng
+                        .launch_bucket(Algorithm::Hierarchical,
+                                       CollectiveKind::Allreduce,
+                                       vec![1.0, 2.0])
+                        .unwrap();
+                    let err = eng.wait(p).unwrap_err().to_string();
+                    assert!(err.contains("hier"), "{err}");
+                    // the engine itself survives the failed bucket
+                    let p = eng
+                        .launch_bucket(Algorithm::Ring,
+                                       CollectiveKind::Allreduce,
+                                       vec![1.0, 2.0])
+                        .unwrap();
+                    assert_eq!(eng.wait(p).unwrap(), vec![2.0, 4.0]);
+                });
+            }
+        });
     }
 
     /// Many concurrent in-flight ops complete and keep their identity

@@ -1,0 +1,616 @@
+//! Hierarchical topology-aware collectives — NCCL's two-level shape.
+//!
+//! A flat ring over a multi-node world crosses the slow inter-node
+//! tier `2·(R−1)` times; the hierarchy crosses it `2·(N−1)` times (N =
+//! nodes) by confining the slow tier to one leader per group:
+//!
+//! 1. **IntraRs** — ring reduce-scatter *within* each group over the
+//!    fast tier (spans: `shard_spans(len, m)` of the full buffer), so
+//!    member `j` owns group-sum span `j`;
+//! 2. **Gather** — members hand their owned spans to the group leader,
+//!    which now holds the whole group-sum buffer;
+//! 3. **InterRs** — ring reduce-scatter *between leaders only* over
+//!    the slow tier, spans = the contiguous per-group unions of the
+//!    global `shard_spans` (`gspans`, uneven groups welcome); leader
+//!    `g` now owns the fully reduced `gspans[g]`;
+//! 4. **InterAg** — leader-only ring all-gather of the `gspans`
+//!    (allreduce/AG path), after which each leader holds the full
+//!    result;
+//! 5. **Bcast** — each leader hands the full buffer to its members.
+//!
+//! `reduce_scatter` replaces steps 4–5 with a **Scatter** of each
+//! member's *global* shard span, so it lands on exactly the flat-ring
+//! ownership contract (`shard_spans(len, world)[rank]`) the sharded
+//! optimizer builds on. `all_gather` starts with the mirror-image
+//! member→leader shard gather. RS followed by AG is therefore
+//! bit-identical to `allreduce` (the extra scatter/gather round-trip
+//! copies bits, it never does arithmetic).
+//!
+//! Accumulation order is fixed and deterministic: ring order within
+//! the group, then ring order across leaders. On sums that are exact
+//! in f32 (the conformance suite's inputs) this is bit-identical to
+//! the flat ring; on arbitrary inputs the two *associations* differ as
+//! any reordered f32 sum does, while blocking-vs-engine hierarchical
+//! runs are bit-identical to each other unconditionally (identical
+//! schedule, see [`crate::collectives::engine`]).
+//!
+//! Blocking-path tag windows (all below the engine's
+//! `ENGINE_TAG_BASE` and disjoint from the tree's `0x7000` block and
+//! the checkpoint gather's `0x9100` block):
+//!
+//! | window | phase |
+//! | --- | --- |
+//! | `0x8000` | intra reduce-scatter ring |
+//! | `0x8100` | member→leader group-sum gather |
+//! | `0x8200` | inter (leader) reduce-scatter ring |
+//! | `0x8300` | leader→member shard scatter (RS only) |
+//! | `0x8400` | member→leader shard gather (AG only) |
+//! | `0x8500` | inter (leader) all-gather ring |
+//! | `0x8600` | leader→member full-buffer bcast |
+//!
+//! This module has no atomics and no tier-routing logic of its own —
+//! it drives any [`Transport`] whose [`Transport::topology`] is
+//! `Some`, in practice [`super::transport::HierTransport`], which does
+//! the shm-vs-tcp routing and the per-tier byte accounting.
+
+use super::engine::CollectiveKind;
+use super::ring;
+use super::shard_spans;
+use super::transport::{Topology, Transport, TransportStats};
+use crate::Result;
+
+/// Blocking-path tag windows; see the module docs for the layout.
+pub(crate) const TAG_INTRA_RS: u32 = 0x8000;
+pub(crate) const TAG_GATHER: u32 = 0x8100;
+pub(crate) const TAG_INTER_RS: u32 = 0x8200;
+pub(crate) const TAG_SCATTER: u32 = 0x8300;
+pub(crate) const TAG_AG_GATHER: u32 = 0x8400;
+pub(crate) const TAG_INTER_AG: u32 = 0x8500;
+pub(crate) const TAG_BCAST: u32 = 0x8600;
+
+/// The topology the hierarchical schedule keys off, or a typed error
+/// naming the knob that provides one.
+fn required_topology<T: Transport>(comm: &T) -> Result<Topology> {
+    match comm.topology() {
+        Some(t) => Ok(t.clone()),
+        None => anyhow::bail!(
+            "the hierarchical algorithm needs a topology-carrying \
+             transport — set training.transport = \"hier\" (and \
+             optionally training.topology)"),
+    }
+}
+
+/// Sub-rank → global-rank view of a transport: the intra-group and
+/// leader-only rings run the ordinary [`ring`] schedules over this
+/// adapter, which remaps ranks through `ranks` and shifts every tag by
+/// `tag_off` so concurrent phases can never collide.
+struct SubComm<'a, T: Transport> {
+    inner: &'a mut T,
+    /// Sub-rank → global rank, in sub-ring order.
+    ranks: &'a [usize],
+    /// This rank's sub-rank.
+    me: usize,
+    tag_off: u32,
+}
+
+impl<T: Transport> Transport for SubComm<'_, T> {
+    fn rank(&self) -> usize {
+        self.me
+    }
+
+    fn world(&self) -> usize {
+        self.ranks.len()
+    }
+
+    fn send_slice(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<()> {
+        self.inner.send_slice(self.ranks[to], self.tag_off + tag, data)
+    }
+
+    fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
+        self.inner.recv(self.ranks[from], self.tag_off + tag)
+    }
+
+    fn try_send(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool> {
+        self.inner.try_send(self.ranks[to], self.tag_off + tag, data)
+    }
+
+    fn try_recv(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>> {
+        self.inner.try_recv(self.ranks[from], self.tag_off + tag)
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        self.inner.recycle(buf)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+}
+
+/// The global ranks of group `g`, in ring order.
+fn group_ranks(topo: &Topology, g: usize) -> Vec<usize> {
+    let (start, size) = topo.group_span(g);
+    (start..start + size).collect()
+}
+
+/// The leader ranks, in group (= inter-ring) order.
+fn leader_ranks(topo: &Topology) -> Vec<usize> {
+    (0..topo.n_groups()).map(|g| topo.leader(g)).collect()
+}
+
+/// Per-group contiguous unions of the global [`shard_spans`]: the
+/// span partition the leader-only rings reduce/gather over. Uneven
+/// groups simply produce uneven spans.
+pub(crate) fn gspans(topo: &Topology, len: usize)
+    -> Vec<(usize, usize)> {
+    let spans = shard_spans(len, topo.world());
+    (0..topo.n_groups())
+        .map(|g| {
+            let (start, size) = topo.group_span(g);
+            (spans[start].0, spans[start + size - 1].1)
+        })
+        .collect()
+}
+
+/// Phases 1–2: intra-group ring reduce-scatter, then members hand
+/// their owned group-sum spans to the leader. On return the leader
+/// holds the whole group-sum buffer; member buffers hold partials.
+fn intra_reduce_and_gather<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    topo: &Topology,
+) -> Result<()> {
+    let rank = comm.rank();
+    let g = topo.group_of(rank);
+    let (start, m) = topo.group_span(g);
+    if m == 1 {
+        return Ok(());
+    }
+    let local = rank - start;
+    let lspans = shard_spans(buf.len(), m);
+    {
+        let ranks = group_ranks(topo, g);
+        let mut sub = SubComm {
+            inner: comm,
+            ranks: &ranks,
+            me: local,
+            tag_off: TAG_INTRA_RS,
+        };
+        ring::reduce_scatter_spans(&mut sub, buf, &lspans)?;
+    }
+    if local == 0 {
+        for j in 1..m {
+            let incoming = comm.recv(start + j, TAG_GATHER)?;
+            let (a, b) = lspans[j];
+            buf[a..b].copy_from_slice(&incoming);
+            comm.recycle(incoming);
+        }
+    } else {
+        let (a, b) = lspans[local];
+        comm.send_slice(start, TAG_GATHER, &buf[a..b])?;
+    }
+    Ok(())
+}
+
+/// Phase 3: leader-only ring reduce-scatter over the group spans.
+/// Non-leaders return immediately.
+fn inter_reduce<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    topo: &Topology,
+) -> Result<()> {
+    if topo.n_groups() == 1 {
+        return Ok(());
+    }
+    let rank = comm.rank();
+    if !topo.is_leader(rank) {
+        return Ok(());
+    }
+    let gs = gspans(topo, buf.len());
+    let leaders = leader_ranks(topo);
+    let mut sub = SubComm {
+        inner: comm,
+        ranks: &leaders,
+        me: topo.group_of(rank),
+        tag_off: TAG_INTER_RS,
+    };
+    ring::reduce_scatter_spans(&mut sub, buf, &gs)
+}
+
+/// Phase 4 (allreduce/AG): leader-only ring all-gather of the group
+/// spans. Non-leaders return immediately.
+fn inter_all_gather<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    topo: &Topology,
+) -> Result<()> {
+    if topo.n_groups() == 1 {
+        return Ok(());
+    }
+    let rank = comm.rank();
+    if !topo.is_leader(rank) {
+        return Ok(());
+    }
+    let gs = gspans(topo, buf.len());
+    let leaders = leader_ranks(topo);
+    let mut sub = SubComm {
+        inner: comm,
+        ranks: &leaders,
+        me: topo.group_of(rank),
+        tag_off: TAG_INTER_AG,
+    };
+    ring::all_gather_spans(&mut sub, buf, &gs)
+}
+
+/// Final RS phase: the leader scatters each member's *global* shard
+/// span, so hierarchical RS lands on the same ownership contract as
+/// the flat ring.
+fn scatter_shards<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    topo: &Topology,
+) -> Result<()> {
+    let rank = comm.rank();
+    let g = topo.group_of(rank);
+    let (start, m) = topo.group_span(g);
+    if m == 1 {
+        return Ok(());
+    }
+    let spans = shard_spans(buf.len(), comm.world());
+    if rank == start {
+        for j in 1..m {
+            let (a, b) = spans[start + j];
+            comm.send_slice(start + j, TAG_SCATTER, &buf[a..b])?;
+        }
+    } else {
+        let incoming = comm.recv(start, TAG_SCATTER)?;
+        let (a, b) = spans[rank];
+        buf[a..b].copy_from_slice(&incoming);
+        comm.recycle(incoming);
+    }
+    Ok(())
+}
+
+/// First AG phase: members hand their authoritative global shard span
+/// to the leader, which then holds its whole `gspans[g]`.
+fn gather_shards<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    topo: &Topology,
+) -> Result<()> {
+    let rank = comm.rank();
+    let g = topo.group_of(rank);
+    let (start, m) = topo.group_span(g);
+    if m == 1 {
+        return Ok(());
+    }
+    let spans = shard_spans(buf.len(), comm.world());
+    if rank == start {
+        for j in 1..m {
+            let incoming = comm.recv(start + j, TAG_AG_GATHER)?;
+            let (a, b) = spans[start + j];
+            buf[a..b].copy_from_slice(&incoming);
+            comm.recycle(incoming);
+        }
+    } else {
+        let (a, b) = spans[rank];
+        comm.send_slice(start, TAG_AG_GATHER, &buf[a..b])?;
+    }
+    Ok(())
+}
+
+/// Final AG/allreduce phase: each leader hands the full buffer to its
+/// members (no arithmetic — a member's own span is overwritten with
+/// the identical bits it contributed).
+fn bcast_full<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    topo: &Topology,
+) -> Result<()> {
+    let rank = comm.rank();
+    let g = topo.group_of(rank);
+    let (start, m) = topo.group_span(g);
+    if m == 1 {
+        return Ok(());
+    }
+    if rank == start {
+        for j in 1..m {
+            comm.send_slice(start + j, TAG_BCAST, buf)?;
+        }
+    } else {
+        let incoming = comm.recv(start, TAG_BCAST)?;
+        buf.copy_from_slice(&incoming);
+        comm.recycle(incoming);
+    }
+    Ok(())
+}
+
+/// In-place hierarchical sum all-reduce:
+/// IntraRs → Gather → InterRs → InterAg → Bcast.
+pub fn allreduce<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
+    let topo = required_topology(comm)?;
+    if comm.world() == 1 {
+        return Ok(());
+    }
+    intra_reduce_and_gather(comm, buf, &topo)?;
+    inter_reduce(comm, buf, &topo)?;
+    inter_all_gather(comm, buf, &topo)?;
+    bcast_full(comm, buf, &topo)
+}
+
+/// In-place hierarchical reduce-scatter: on return, rank `r`'s
+/// [`shard_spans`] span holds the world-wide sum — the same ownership
+/// contract as the flat ring, so ZeRO-1 composes unchanged.
+pub fn reduce_scatter<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
+    let topo = required_topology(comm)?;
+    if comm.world() == 1 {
+        return Ok(());
+    }
+    intra_reduce_and_gather(comm, buf, &topo)?;
+    inter_reduce(comm, buf, &topo)?;
+    scatter_shards(comm, buf, &topo)
+}
+
+/// In-place hierarchical all-gather from the flat-ring ownership map:
+/// Gather shards → InterAg → Bcast.
+pub fn all_gather<T: Transport>(comm: &mut T, buf: &mut [f32])
+    -> Result<()> {
+    let topo = required_topology(comm)?;
+    if comm.world() == 1 {
+        return Ok(());
+    }
+    gather_shards(comm, buf, &topo)?;
+    inter_all_gather(comm, buf, &topo)?;
+    bcast_full(comm, buf, &topo)
+}
+
+/// Exact per-tier wire traffic of one hierarchical collective, as
+/// world-total *sent* f32 elements `(intra, inter)` — computed by
+/// replaying the schedule, so it is exact for uneven groups and
+/// `len % world ≠ 0` alike. The conformance suite checks the measured
+/// [`TransportStats`] per-tier bytes against this; the cost model's
+/// closed forms for even groups (`per-group intra ≈ (m−1)·L·(2+1/m)`,
+/// `inter = 2·(N−1)·L` for allreduce) are its smooth twin.
+pub fn tier_wire_elems(topo: &Topology, len: usize,
+                       kind: CollectiveKind) -> (u64, u64) {
+    let world = topo.world();
+    if world == 1 {
+        return (0, 0);
+    }
+    let n = topo.n_groups();
+    let spans = shard_spans(len, world);
+    let gs = gspans(topo, len);
+    let span_len = |s: (usize, usize)| (s.1 - s.0) as u64;
+    let mut intra = 0u64;
+    let mut inter = 0u64;
+
+    let reduces = matches!(kind, CollectiveKind::Allreduce
+                                 | CollectiveKind::ReduceScatter);
+    let gathers = matches!(kind, CollectiveKind::Allreduce
+                                 | CollectiveKind::AllGather);
+
+    if reduces {
+        // IntraRs + Gather, per group
+        for g in 0..n {
+            let (_, m) = topo.group_span(g);
+            if m == 1 {
+                continue;
+            }
+            let lspans = shard_spans(len, m);
+            for j in 0..m {
+                for s in 0..m - 1 {
+                    let send_c = (j + 2 * m - 1 - s) % m;
+                    intra += span_len(lspans[send_c]);
+                }
+            }
+            for j in 1..m {
+                intra += span_len(lspans[j]);
+            }
+        }
+        // InterRs over leaders
+        if n > 1 {
+            for g in 0..n {
+                for s in 0..n - 1 {
+                    let send_c = (g + 2 * n - 1 - s) % n;
+                    inter += span_len(gs[send_c]);
+                }
+            }
+        }
+    }
+    if matches!(kind, CollectiveKind::ReduceScatter)
+        || matches!(kind, CollectiveKind::AllGather)
+    {
+        // Scatter (RS) / shard Gather (AG): the same spans move, just
+        // in opposite directions
+        for g in 0..n {
+            let (start, m) = topo.group_span(g);
+            for j in 1..m {
+                intra += span_len(spans[start + j]);
+            }
+        }
+    }
+    if gathers {
+        // InterAg over leaders
+        if n > 1 {
+            for g in 0..n {
+                for s in 0..n - 1 {
+                    let send_c = (g + n - s) % n;
+                    inter += span_len(gs[send_c]);
+                }
+            }
+        }
+        // Bcast: each leader sends the full buffer to each member
+        for g in 0..n {
+            let (_, m) = topo.group_span(g);
+            intra += (m as u64 - 1) * len as u64;
+        }
+    }
+    (intra, inter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::transport::{HierTransport, WIRE_BYTES_PER_ELEM};
+    use super::*;
+
+    fn run_world(
+        topo: &Topology,
+        inputs: Vec<Vec<f32>>,
+        op: fn(&mut HierTransport, &mut [f32]) -> Result<()>,
+    ) -> (Vec<Vec<f32>>, Vec<TransportStats>) {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = HierTransport::world(topo)
+                .unwrap()
+                .into_iter()
+                .zip(inputs)
+                .map(|(mut c, mut buf)| {
+                    s.spawn(move || {
+                        op(&mut c, &mut buf).unwrap();
+                        (buf, c.stats())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).unzip()
+        })
+    }
+
+    fn exact_inputs(world: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..world)
+            .map(|r| {
+                (0..len)
+                    .map(|i| ((r * 17 + i * 5) % 41) as f32 - 20.0)
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn sum_of(inputs: &[Vec<f32>]) -> Vec<f32> {
+        let mut want = vec![0.0f32; inputs[0].len()];
+        for inp in inputs {
+            for (w, v) in want.iter_mut().zip(inp) {
+                *w += v;
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn allreduce_sums_on_even_and_uneven_topologies() {
+        for sizes in [vec![2, 2], vec![3, 1], vec![2, 3, 3],
+                      vec![1, 1, 1], vec![4]] {
+            let topo = Topology::new(sizes.clone()).unwrap();
+            let world = topo.world();
+            for len in [0usize, 1, 7, 64] {
+                let inputs = exact_inputs(world, len);
+                let want = sum_of(&inputs);
+                let (out, _) = run_world(&topo, inputs, allreduce);
+                for (r, buf) in out.iter().enumerate() {
+                    assert_eq!(buf, &want,
+                               "sizes={sizes:?} len={len} rank={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_lands_on_the_flat_ownership_map() {
+        for sizes in [vec![2, 2], vec![3, 2], vec![1, 3]] {
+            let topo = Topology::new(sizes.clone()).unwrap();
+            let world = topo.world();
+            let len = 23;
+            let inputs = exact_inputs(world, len);
+            let want = sum_of(&inputs);
+            let (out, _) = run_world(&topo, inputs, reduce_scatter);
+            let spans = shard_spans(len, world);
+            for (r, buf) in out.iter().enumerate() {
+                let (a, b) = spans[r];
+                assert_eq!(&buf[a..b], &want[a..b],
+                           "sizes={sizes:?} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_distributes_owned_spans() {
+        let topo = Topology::new(vec![3, 2]).unwrap();
+        let world = topo.world();
+        let len = 17;
+        let spans = shard_spans(len, world);
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|r| {
+                let mut buf = vec![0.0f32; len];
+                let (a, b) = spans[r];
+                for x in &mut buf[a..b] {
+                    *x = (r + 1) as f32;
+                }
+                buf
+            })
+            .collect();
+        let mut want = vec![0.0f32; len];
+        for (r, &(a, b)) in spans.iter().enumerate() {
+            for x in &mut want[a..b] {
+                *x = (r + 1) as f32;
+            }
+        }
+        let (out, _) = run_world(&topo, inputs, all_gather);
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &want, "rank={r}");
+        }
+    }
+
+    #[test]
+    fn measured_tier_bytes_match_the_replayed_formula() {
+        for sizes in [vec![2, 2], vec![3, 2], vec![2, 2, 2]] {
+            let topo = Topology::new(sizes.clone()).unwrap();
+            let world = topo.world();
+            let len = 48;
+            for (kind, op) in [
+                (CollectiveKind::Allreduce,
+                 allreduce
+                     as fn(&mut HierTransport, &mut [f32])
+                         -> Result<()>),
+                (CollectiveKind::ReduceScatter, reduce_scatter),
+            ] {
+                let inputs = exact_inputs(world, len);
+                let (_, stats) = run_world(&topo, inputs, op);
+                let (intra, inter) = tier_wire_elems(&topo, len, kind);
+                let got_intra: u64 = stats
+                    .iter()
+                    .map(|s| s.intra_wire_bytes_sent)
+                    .sum();
+                let got_inter: u64 = stats
+                    .iter()
+                    .map(|s| s.inter_wire_bytes_sent)
+                    .sum();
+                assert_eq!(got_intra, intra * WIRE_BYTES_PER_ELEM,
+                           "intra {sizes:?} {kind:?}");
+                assert_eq!(got_inter, inter * WIRE_BYTES_PER_ELEM,
+                           "inter {sizes:?} {kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn needs_a_topology_transport() {
+        use super::super::transport::Backend;
+        let mut comms = Backend::Channel.world(2).unwrap();
+        let err = std::thread::scope(|s| {
+            let c1 = comms.pop().unwrap();
+            let mut c0 = comms.pop().unwrap();
+            // peer thread exists only so a would-be send could not
+            // hang; the call must fail before any traffic
+            let h = s.spawn(move || drop(c1));
+            let mut buf = [1.0f32; 4];
+            let e = allreduce(&mut c0, &mut buf).unwrap_err();
+            h.join().unwrap();
+            e
+        });
+        assert!(err.to_string().contains("transport = \"hier\""),
+                "unhelpful: {err}");
+    }
+}

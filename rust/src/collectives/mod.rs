@@ -32,17 +32,18 @@
 pub mod bucket;
 pub mod cost;
 pub mod engine;
+pub mod hier;
 pub mod ring;
 pub mod transport;
 pub mod tree;
 
 pub use bucket::{bucketed_all_gather, bucketed_allreduce,
                  bucketed_reduce_scatter, BucketManager, BucketPlan};
-pub use cost::{CostModel, OverlapCost, RankMemory};
+pub use cost::{CostModel, OverlapCost, RankMemory, TunedPlan};
 pub use engine::{CollectiveKind, CommEngine, PendingBucket};
 pub use transport::{AnyTransport, Backend, ChannelTransport,
-                    ShmTransport, TcpTransport, Transport,
-                    TransportStats, World};
+                    HierTransport, ShmTransport, TcpTransport,
+                    Topology, Transport, TransportStats, World};
 
 use crate::Result;
 
@@ -71,14 +72,36 @@ pub fn shard_spans(len: usize, world: usize) -> Vec<(usize, usize)> {
 pub enum Algorithm {
     Ring,
     Tree,
+    /// Two-level topology-aware schedule (see [`hier`]): intra-group
+    /// ring over the fast tier, leader-only ring over the slow tier.
+    /// Requires a transport that carries a [`Topology`]
+    /// (`training.transport = "hier"`).
+    Hierarchical,
 }
 
 impl Algorithm {
+    /// Every algorithm, in spelling order — the single list behind
+    /// `FromStr`, its error message, and the auto-tuner's candidates.
+    pub const ALL: [Algorithm; 3] =
+        [Algorithm::Ring, Algorithm::Tree, Algorithm::Hierarchical];
+
     pub fn as_str(self) -> &'static str {
         match self {
             Algorithm::Ring => "ring",
             Algorithm::Tree => "tree",
+            Algorithm::Hierarchical => "hierarchical",
         }
+    }
+
+    /// The `a|b|c` spelling list for error messages, derived from
+    /// [`Algorithm::ALL`] so a new variant can never drift out of the
+    /// message (the old hand-maintained list did).
+    pub fn spellings() -> String {
+        Algorithm::ALL
+            .iter()
+            .map(|a| a.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
     }
 }
 
@@ -86,12 +109,13 @@ impl std::str::FromStr for Algorithm {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Algorithm> {
-        match s {
-            "ring" => Ok(Algorithm::Ring),
-            "tree" => Ok(Algorithm::Tree),
-            _ => anyhow::bail!(
-                "unknown allreduce algorithm '{s}' (expected ring|tree)"),
+        for a in Algorithm::ALL {
+            if s == a.as_str() {
+                return Ok(a);
+            }
         }
+        anyhow::bail!("unknown allreduce algorithm '{s}' (expected {})",
+                      Algorithm::spellings())
     }
 }
 
@@ -107,6 +131,7 @@ pub fn allreduce<T: Transport>(algo: Algorithm, comm: &mut T,
     match algo {
         Algorithm::Ring => ring::allreduce(comm, buf),
         Algorithm::Tree => tree::allreduce(comm, buf),
+        Algorithm::Hierarchical => hier::allreduce(comm, buf),
     }
 }
 
@@ -119,6 +144,7 @@ pub fn reduce_scatter<T: Transport>(algo: Algorithm, comm: &mut T,
     match algo {
         Algorithm::Ring => ring::reduce_scatter(comm, buf),
         Algorithm::Tree => tree::reduce_scatter(comm, buf),
+        Algorithm::Hierarchical => hier::reduce_scatter(comm, buf),
     }
 }
 
@@ -129,6 +155,7 @@ pub fn all_gather<T: Transport>(algo: Algorithm, comm: &mut T,
     match algo {
         Algorithm::Ring => ring::all_gather(comm, buf),
         Algorithm::Tree => tree::all_gather(comm, buf),
+        Algorithm::Hierarchical => hier::all_gather(comm, buf),
     }
 }
 

@@ -29,12 +29,29 @@ fn ag_tag(world: usize, s: usize) -> u32 {
 /// treated as garbage. Each rank moves `(R-1)/R × bytes`.
 pub fn reduce_scatter<T: Transport>(comm: &mut T, buf: &mut [f32])
     -> Result<()> {
+    let spans = shard_spans(buf.len(), comm.world());
+    reduce_scatter_spans(comm, buf, &spans)
+}
+
+/// [`reduce_scatter`] over an explicit per-rank span partition — the
+/// hierarchical algorithm's inter-leader ring reduces over the
+/// (possibly uneven) contiguous group spans rather than
+/// `shard_spans`. `spans` must have one `(start, end)` entry per rank
+/// of `comm`'s world, in rank order.
+pub(crate) fn reduce_scatter_spans<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    spans: &[(usize, usize)],
+) -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
         return Ok(());
     }
-    let spans = shard_spans(buf.len(), world);
+    if spans.len() != world {
+        anyhow::bail!("reduce_scatter_spans: {} spans for a world of \
+                       {world}", spans.len());
+    }
     let right = (rank + 1) % world;
     let left = (rank + world - 1) % world;
 
@@ -61,12 +78,26 @@ pub fn reduce_scatter<T: Transport>(comm: &mut T, buf: &mut [f32])
 /// holds every span's owner data. Each rank moves `(R-1)/R × bytes`.
 pub fn all_gather<T: Transport>(comm: &mut T, buf: &mut [f32])
     -> Result<()> {
+    let spans = shard_spans(buf.len(), comm.world());
+    all_gather_spans(comm, buf, &spans)
+}
+
+/// [`all_gather`] over an explicit per-rank span partition (see
+/// [`reduce_scatter_spans`]).
+pub(crate) fn all_gather_spans<T: Transport>(
+    comm: &mut T,
+    buf: &mut [f32],
+    spans: &[(usize, usize)],
+) -> Result<()> {
     let world = comm.world();
     let rank = comm.rank();
     if world == 1 {
         return Ok(());
     }
-    let spans = shard_spans(buf.len(), world);
+    if spans.len() != world {
+        anyhow::bail!("all_gather_spans: {} spans for a world of \
+                       {world}", spans.len());
+    }
     let right = (rank + 1) % world;
     let left = (rank + world - 1) % world;
 

@@ -1,0 +1,237 @@
+//! Hierarchical two-tier transport: shm within a node, tcp between
+//! nodes.
+//!
+//! [`HierTransport`] composes the two flat backends behind the same
+//! [`Transport`] trait, routed by a [`Topology`]: messages between
+//! ranks of the same group ride a per-group [`ShmTransport`] sub-world
+//! (the NVLink tier — rank ids are translated to group-local before
+//! they hit the ring), while messages that cross a group boundary ride
+//! a full [`TcpTransport`] mesh over global rank ids (the 25 GbE
+//! tier). Because the inter tier is a *full* mesh rather than a
+//! leader-only mesh, any rank pair can talk — so every flat collective
+//! (and the whole transport conformance suite) runs unchanged on a
+//! hier world, which is exactly what the flat-vs-hierarchical
+//! benchmark baselines need. The hierarchical *algorithm*
+//! ([`crate::collectives::hier`]) is what confines cross-group traffic
+//! to the group leaders.
+//!
+//! The two tiers are distinct channels keyed by (peer-pair, tag) in
+//! their own backends, so a tag never collides across tiers: the
+//! routing function is a pure function of `(self.rank, peer)`, and
+//! both sides of any exchange compute the same tier.
+//!
+//! Tier accounting: [`Transport::stats`] merges both tiers into the
+//! flat totals and additionally fills the `intra_wire_bytes_*` /
+//! `inter_wire_bytes_*` fields of [`TransportStats`] — the measured
+//! side of the cost model's per-tier hierarchical formula.
+//!
+//! Dropping a `HierTransport` drops both tier handles, so a dead peer
+//! produces errors on whichever tier a survivor touches — the
+//! conformance suite checks both.
+//!
+//! This module deliberately has no atomics of its own (it composes two
+//! already-whitelisted backends), so it does not appear on the lint's
+//! ordering whitelist.
+
+use crate::Result;
+
+use super::{
+    ShmTransport, TcpTransport, Topology, Transport, TransportStats,
+};
+
+/// One rank's handle on the two-tier world. See the module docs.
+pub struct HierTransport {
+    topo: Topology,
+    rank: usize,
+    world: usize,
+    /// This rank's group and the group's first global rank — the
+    /// offset that translates global↔group-local ids for the intra
+    /// tier.
+    group: usize,
+    group_start: usize,
+    /// Intra-group tier: an shm sub-world of `group_size` ranks where
+    /// this rank is `rank - group_start`.
+    intra: ShmTransport,
+    /// Inter-group tier: a tcp mesh over the full world, global ids.
+    inter: TcpTransport,
+}
+
+impl HierTransport {
+    /// Build a fully wired hierarchical world: one shm sub-world per
+    /// topology group plus one tcp mesh spanning all ranks.
+    pub fn world(topo: &Topology) -> Result<Vec<HierTransport>> {
+        let world = topo.world();
+        let mut inter = TcpTransport::world(world)?.into_iter();
+        let mut out = Vec::with_capacity(world);
+        for g in 0..topo.n_groups() {
+            let (start, size) = topo.group_span(g);
+            let intra = ShmTransport::world(size);
+            for (local, intra) in intra.into_iter().enumerate() {
+                let inter = inter.next().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "hier world construction ran out of tcp \
+                         transports at rank {}", start + local)
+                })?;
+                out.push(HierTransport {
+                    topo: topo.clone(),
+                    rank: start + local,
+                    world,
+                    group: g,
+                    group_start: start,
+                    intra,
+                    inter,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Whether traffic to `peer` stays on the intra (shm) tier.
+    fn intra_peer(&self, peer: usize) -> bool {
+        self.topo.group_of(peer) == self.group
+    }
+
+    /// Translate a same-group global rank to its intra-tier local id.
+    fn local(&self, peer: usize) -> usize {
+        peer - self.group_start
+    }
+}
+
+impl Transport for HierTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_slice(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<()> {
+        if self.intra_peer(to) {
+            let local = self.local(to);
+            self.intra.send_slice(local, tag, data)
+        } else {
+            self.inter.send_slice(to, tag, data)
+        }
+    }
+
+    fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
+        if self.intra_peer(from) {
+            let local = self.local(from);
+            self.intra.recv(local, tag)
+        } else {
+            self.inter.recv(from, tag)
+        }
+    }
+
+    fn try_send(&mut self, to: usize, tag: u32, data: &[f32])
+        -> Result<bool> {
+        if self.intra_peer(to) {
+            let local = self.local(to);
+            self.intra.try_send(local, tag, data)
+        } else {
+            self.inter.try_send(to, tag, data)
+        }
+    }
+
+    fn try_recv(&mut self, from: usize, tag: u32)
+        -> Result<Option<Vec<f32>>> {
+        if self.intra_peer(from) {
+            let local = self.local(from);
+            self.intra.try_recv(local, tag)
+        } else {
+            self.inter.try_recv(from, tag)
+        }
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        // one shared pool is enough; the intra tier sees the bulk of
+        // the buffer churn under the hierarchical schedules
+        self.intra.recycle(buf);
+    }
+
+    fn stats(&self) -> TransportStats {
+        let i = self.intra.stats();
+        let e = self.inter.stats();
+        TransportStats {
+            msgs_sent: i.msgs_sent + e.msgs_sent,
+            msgs_recv: i.msgs_recv + e.msgs_recv,
+            buffer_bytes_sent: i.buffer_bytes_sent
+                + e.buffer_bytes_sent,
+            buffer_bytes_recv: i.buffer_bytes_recv
+                + e.buffer_bytes_recv,
+            wire_bytes_sent: i.wire_bytes_sent + e.wire_bytes_sent,
+            wire_bytes_recv: i.wire_bytes_recv + e.wire_bytes_recv,
+            intra_wire_bytes_sent: i.wire_bytes_sent,
+            intra_wire_bytes_recv: i.wire_bytes_recv,
+            inter_wire_bytes_sent: e.wire_bytes_sent,
+            inter_wire_bytes_recv: e.wire_bytes_recv,
+        }
+    }
+
+    fn topology(&self) -> Option<&Topology> {
+        Some(&self.topo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_picks_the_tier_by_group() {
+        let topo = Topology::new(vec![2, 3]).unwrap();
+        let mut comms = HierTransport::world(&topo).unwrap();
+        assert_eq!(comms.len(), 5);
+        for (r, c) in comms.iter().enumerate() {
+            assert_eq!(c.rank(), r);
+            assert_eq!(c.world(), 5);
+            assert_eq!(c.topology(), Some(&topo));
+        }
+        // rank 3 (group 1, start 2): rank 4 is intra-local 2, rank 0
+        // is inter
+        let c3 = &comms[3];
+        assert!(c3.intra_peer(4));
+        assert_eq!(c3.local(4), 2);
+        assert!(!c3.intra_peer(0));
+
+        // same-group and cross-group messages both round-trip, and
+        // land in the right tier's byte counters
+        let c3 = comms.remove(3);
+        let c1 = comms.remove(1);
+        let mut c0 = comms.remove(0);
+        let (mut c0, c1, c3) = std::thread::scope(|s| {
+            let h1 = s.spawn(move || {
+                let mut c1 = c1;
+                assert_eq!(c1.recv(0, 7).unwrap(), vec![1.0, 2.0]);
+                c1
+            });
+            let h3 = s.spawn(move || {
+                let mut c3 = c3;
+                assert_eq!(c3.recv(0, 8).unwrap(), vec![-3.5]);
+                c3
+            });
+            c0.send_slice(1, 7, &[1.0, 2.0]).unwrap();
+            c0.send_slice(3, 8, &[-3.5]).unwrap();
+            (c0, h1.join().unwrap(), h3.join().unwrap())
+        });
+        let s0 = c0.stats();
+        assert_eq!(s0.intra_wire_bytes_sent, 4); // 2 elems × 2 B
+        assert_eq!(s0.inter_wire_bytes_sent, 2); // 1 elem × 2 B
+        assert_eq!(s0.wire_bytes_sent, 6);
+        assert_eq!(c1.stats().intra_wire_bytes_recv, 4);
+        assert_eq!(c3.stats().inter_wire_bytes_recv, 2);
+        drop(c0);
+    }
+
+    #[test]
+    fn uneven_world_sizes_wire_up() {
+        for sizes in [vec![1], vec![4], vec![1, 1], vec![3, 1],
+                      vec![2, 2, 2], vec![1, 2, 1]] {
+            let topo = Topology::new(sizes.clone()).unwrap();
+            let comms = HierTransport::world(&topo).unwrap();
+            assert_eq!(comms.len(), topo.world(), "{sizes:?}");
+        }
+    }
+}

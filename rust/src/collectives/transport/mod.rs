@@ -44,11 +44,13 @@
 //! test. Nothing else in the crate changes.
 
 pub mod channel;
+pub mod hier;
 pub mod shm;
 pub mod spsc;
 pub mod tcp;
 
 pub use channel::{ChannelTransport, World};
+pub use hier::HierTransport;
 pub use shm::ShmTransport;
 pub use tcp::TcpTransport;
 
@@ -144,6 +146,128 @@ pub(crate) fn spin_backoff(spins: &mut u32) {
     }
 }
 
+/// Rank→node grouping for the hierarchical transport/collectives: the
+/// world is split into contiguous groups (one per emulated node),
+/// group `g` covering ranks `[start_g, start_g + size_g)`. Groups may
+/// be uneven — a straggler node with fewer GPUs is a first-class
+/// configuration, not an error. The first rank of each group is its
+/// *leader*: the only rank that talks on the inter-node tier.
+///
+/// Parsed from the `training.topology` knob as comma-separated group
+/// sizes (`"4,4"` = 2 nodes × 4 ranks); when the knob is empty the
+/// trainer derives even groups of `cluster.gpus_per_node`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    group_sizes: Vec<usize>,
+}
+
+impl Topology {
+    /// A topology from explicit group sizes. Errors on zero groups or
+    /// a zero-sized group.
+    pub fn new(group_sizes: Vec<usize>) -> Result<Topology> {
+        if group_sizes.is_empty() {
+            anyhow::bail!("topology needs at least one group");
+        }
+        if group_sizes.iter().any(|&s| s == 0) {
+            anyhow::bail!("topology group sizes must be nonzero \
+                           (got {group_sizes:?})");
+        }
+        Ok(Topology { group_sizes })
+    }
+
+    /// Even groups of `per_group` covering `world` ranks; the last
+    /// group is smaller when `world` is not a multiple. This is the
+    /// default grouping when `training.topology` is empty.
+    pub fn even(world: usize, per_group: usize) -> Result<Topology> {
+        if world == 0 || per_group == 0 {
+            anyhow::bail!(
+                "topology needs world > 0 and group size > 0 \
+                 (got world={world}, per_group={per_group})");
+        }
+        let mut sizes = vec![per_group; world / per_group];
+        if world % per_group != 0 {
+            sizes.push(world % per_group);
+        }
+        Topology::new(sizes)
+    }
+
+    /// Total ranks covered (the world size this topology describes).
+    pub fn world(&self) -> usize {
+        self.group_sizes.iter().sum()
+    }
+
+    /// Number of groups (emulated nodes).
+    pub fn n_groups(&self) -> usize {
+        self.group_sizes.len()
+    }
+
+    pub fn group_sizes(&self) -> &[usize] {
+        &self.group_sizes
+    }
+
+    /// The group containing `rank`.
+    pub fn group_of(&self, rank: usize) -> usize {
+        let mut start = 0;
+        for (g, &size) in self.group_sizes.iter().enumerate() {
+            if rank < start + size {
+                return g;
+            }
+            start += size;
+        }
+        // rank beyond the world: callers validate first; clamping to
+        // the last group keeps this total without a panic path
+        self.group_sizes.len() - 1
+    }
+
+    /// `(start, size)` of group `g`'s contiguous rank range.
+    pub fn group_span(&self, g: usize) -> (usize, usize) {
+        let start = self.group_sizes[..g].iter().sum();
+        (start, self.group_sizes[g])
+    }
+
+    /// The leader rank of group `g` (its first rank).
+    pub fn leader(&self, g: usize) -> usize {
+        self.group_span(g).0
+    }
+
+    /// Whether `rank` is its group's leader.
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.leader(self.group_of(rank)) == rank
+    }
+}
+
+impl FromStr for Topology {
+    type Err = anyhow::Error;
+
+    /// Comma-separated group sizes: `"4,4"`, `"2,3,3"`.
+    fn from_str(s: &str) -> Result<Topology> {
+        let sizes = s
+            .split(',')
+            .map(|p| {
+                p.trim().parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad topology '{s}': '{p}' is not a group \
+                         size (expected comma-separated sizes like \
+                         '4,4')")
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        Topology::new(sizes)
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, s) in self.group_sizes.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
 /// Bytes per f32 element in the host-side buffer handed to `send`.
 pub const BUFFER_BYTES_PER_ELEM: u64 = 4;
 
@@ -170,6 +294,15 @@ pub struct TransportStats {
     /// and what the Fig. 1 traffic column reports.
     pub wire_bytes_sent: u64,
     pub wire_bytes_recv: u64,
+    /// Per-tier wire-byte split, filled only by the hierarchical
+    /// transport (`hier`): intra = the shm/NVLink tier, inter = the
+    /// tcp/25 GbE tier. Flat backends leave all four zero, so the
+    /// totals above remain the single source of truth everywhere and
+    /// cross-backend stats equality keeps holding for flat worlds.
+    pub intra_wire_bytes_sent: u64,
+    pub intra_wire_bytes_recv: u64,
+    pub inter_wire_bytes_sent: u64,
+    pub inter_wire_bytes_recv: u64,
 }
 
 impl TransportStats {
@@ -199,6 +332,14 @@ impl TransportStats {
                 - earlier.wire_bytes_sent,
             wire_bytes_recv: self.wire_bytes_recv
                 - earlier.wire_bytes_recv,
+            intra_wire_bytes_sent: self.intra_wire_bytes_sent
+                - earlier.intra_wire_bytes_sent,
+            intra_wire_bytes_recv: self.intra_wire_bytes_recv
+                - earlier.intra_wire_bytes_recv,
+            inter_wire_bytes_sent: self.inter_wire_bytes_sent
+                - earlier.inter_wire_bytes_sent,
+            inter_wire_bytes_recv: self.inter_wire_bytes_recv
+                - earlier.inter_wire_bytes_recv,
         }
     }
 }
@@ -249,6 +390,15 @@ pub trait Transport {
 
     /// Traffic snapshot since this transport was created.
     fn stats(&self) -> TransportStats;
+
+    /// The rank→node grouping behind this transport, when it has one.
+    /// Flat backends return `None`; the hierarchical transport returns
+    /// its [`Topology`], which is what `Algorithm::Hierarchical` and
+    /// the comm engine's hierarchical phases key their leader/member
+    /// schedules off.
+    fn topology(&self) -> Option<&Topology> {
+        None
+    }
 }
 
 /// Transport backend selector — the `training.transport` config knob.
@@ -259,19 +409,34 @@ pub enum Backend {
     Channel,
     Shm,
     Tcp,
+    /// Two-level shm × tcp composition driven by a [`Topology`] —
+    /// intra-group traffic rides shm sub-worlds, cross-group traffic
+    /// rides a tcp mesh. See [`hier`].
+    Hier,
 }
 
 impl Backend {
     /// Every backend, in conformance-suite order.
-    pub const ALL: [Backend; 3] =
-        [Backend::Channel, Backend::Shm, Backend::Tcp];
+    pub const ALL: [Backend; 4] =
+        [Backend::Channel, Backend::Shm, Backend::Tcp, Backend::Hier];
 
     pub fn as_str(self) -> &'static str {
         match self {
             Backend::Channel => "channel",
             Backend::Shm => "shm",
             Backend::Tcp => "tcp",
+            Backend::Hier => "hier",
         }
+    }
+
+    /// The `a|b|c` spelling list for error messages, derived from
+    /// [`Backend::ALL`] so it can never drift from the real set.
+    pub fn spellings() -> String {
+        Backend::ALL
+            .iter()
+            .map(|b| b.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
     }
 
     /// Parse an optional `--transport <name>` flag from CLI args (the
@@ -282,8 +447,8 @@ impl Backend {
         match args.iter().position(|a| a == "--transport") {
             Some(i) => {
                 let name = args.get(i + 1).ok_or_else(|| {
-                    anyhow::anyhow!("--transport needs a value \
-                                     (channel|shm|tcp)")
+                    anyhow::anyhow!("--transport needs a value ({})",
+                                    Backend::spellings())
                 })?;
                 Ok(Some(name.parse()?))
             }
@@ -292,7 +457,18 @@ impl Backend {
     }
 
     /// Build a fully wired world of `world` transports, one per rank.
+    /// The hierarchical backend derives a default topology of
+    /// two-rank groups (the TX-GAIN node shape) — use
+    /// [`Backend::world_with`] to pick the grouping.
     pub fn world(self, world: usize) -> Result<Vec<AnyTransport>> {
+        self.world_with(world, None)
+    }
+
+    /// Like [`Backend::world`] but with an explicit [`Topology`] for
+    /// the hierarchical backend. Flat backends ignore `topo`; `hier`
+    /// defaults to even two-rank groups when `topo` is `None`.
+    pub fn world_with(self, world: usize, topo: Option<&Topology>)
+        -> Result<Vec<AnyTransport>> {
         Ok(match self {
             Backend::Channel => World::new(world)
                 .into_comms()
@@ -307,6 +483,25 @@ impl Backend {
                 .into_iter()
                 .map(AnyTransport::Tcp)
                 .collect(),
+            Backend::Hier => {
+                let owned;
+                let topo = match topo {
+                    Some(t) => t,
+                    None => {
+                        owned = Topology::even(world, 2.min(world))?;
+                        &owned
+                    }
+                };
+                if topo.world() != world {
+                    anyhow::bail!(
+                        "topology '{topo}' covers {} ranks but the \
+                         world has {world}", topo.world());
+                }
+                HierTransport::world(topo)?
+                    .into_iter()
+                    .map(AnyTransport::Hier)
+                    .collect()
+            }
         })
     }
 }
@@ -315,13 +510,13 @@ impl FromStr for Backend {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Backend> {
-        match s {
-            "channel" => Ok(Backend::Channel),
-            "shm" => Ok(Backend::Shm),
-            "tcp" => Ok(Backend::Tcp),
-            _ => anyhow::bail!(
-                "unknown transport '{s}' (expected channel|shm|tcp)"),
+        for b in Backend::ALL {
+            if s == b.as_str() {
+                return Ok(b);
+            }
         }
+        anyhow::bail!("unknown transport '{s}' (expected {})",
+                      Backend::spellings())
     }
 }
 
@@ -338,6 +533,7 @@ pub enum AnyTransport {
     Channel(ChannelTransport),
     Shm(ShmTransport),
     Tcp(TcpTransport),
+    Hier(HierTransport),
 }
 
 impl Transport for AnyTransport {
@@ -346,6 +542,7 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.rank(),
             AnyTransport::Shm(t) => t.rank(),
             AnyTransport::Tcp(t) => t.rank(),
+            AnyTransport::Hier(t) => t.rank(),
         }
     }
 
@@ -354,6 +551,7 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.world(),
             AnyTransport::Shm(t) => t.world(),
             AnyTransport::Tcp(t) => t.world(),
+            AnyTransport::Hier(t) => t.world(),
         }
     }
 
@@ -363,6 +561,7 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.send_slice(to, tag, data),
             AnyTransport::Shm(t) => t.send_slice(to, tag, data),
             AnyTransport::Tcp(t) => t.send_slice(to, tag, data),
+            AnyTransport::Hier(t) => t.send_slice(to, tag, data),
         }
     }
 
@@ -371,6 +570,7 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.recv(from, tag),
             AnyTransport::Shm(t) => t.recv(from, tag),
             AnyTransport::Tcp(t) => t.recv(from, tag),
+            AnyTransport::Hier(t) => t.recv(from, tag),
         }
     }
 
@@ -380,6 +580,7 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.try_send(to, tag, data),
             AnyTransport::Shm(t) => t.try_send(to, tag, data),
             AnyTransport::Tcp(t) => t.try_send(to, tag, data),
+            AnyTransport::Hier(t) => t.try_send(to, tag, data),
         }
     }
 
@@ -389,6 +590,7 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.try_recv(from, tag),
             AnyTransport::Shm(t) => t.try_recv(from, tag),
             AnyTransport::Tcp(t) => t.try_recv(from, tag),
+            AnyTransport::Hier(t) => t.try_recv(from, tag),
         }
     }
 
@@ -397,6 +599,7 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.recycle(buf),
             AnyTransport::Shm(t) => t.recycle(buf),
             AnyTransport::Tcp(t) => t.recycle(buf),
+            AnyTransport::Hier(t) => t.recycle(buf),
         }
     }
 
@@ -405,6 +608,14 @@ impl Transport for AnyTransport {
             AnyTransport::Channel(t) => t.stats(),
             AnyTransport::Shm(t) => t.stats(),
             AnyTransport::Tcp(t) => t.stats(),
+            AnyTransport::Hier(t) => t.stats(),
+        }
+    }
+
+    fn topology(&self) -> Option<&Topology> {
+        match self {
+            AnyTransport::Hier(t) => t.topology(),
+            _ => None,
         }
     }
 }

@@ -67,6 +67,11 @@ pub struct DataConfig {
     /// span). Larger windows mix better but want `cache_mb` to cover
     /// `shuffle_window · (2 + 2·seq)` bytes to stream without re-reads.
     pub shuffle_window: usize,
+    /// Double-buffered block prefetch: a per-rank thread walks the
+    /// cursor one shuffle window ahead and warms the block cache so
+    /// workers hit resident blocks. Never changes which samples a
+    /// batch holds (bit-identity enforced in tests). Default on.
+    pub prefetch: bool,
 }
 
 /// exp(mu + sigma^2/2) ≈ 9.9 KB mean function body — matches the paper's
@@ -87,7 +92,7 @@ impl DataConfig {
                           "tokenizer_vocab", "mask_prob", "staging",
                           "loaders_per_gpu", "prefetch_batches",
                           "samples_per_shard", "cache_mb",
-                          "shuffle_window"])?;
+                          "shuffle_window", "prefetch"])?;
         Ok(DataConfig {
             corpus_samples: v.req("corpus_samples")?.as_usize()?,
             fn_size_mu: v.get("fn_size_mu").map(|x| x.as_f64())
@@ -108,6 +113,8 @@ impl DataConfig {
             shuffle_window: v.get("shuffle_window")
                 .map(|x| x.as_usize()).transpose()?
                 .unwrap_or(DEFAULT_SHUFFLE_WINDOW),
+            prefetch: v.get("prefetch").map(|x| x.as_bool())
+                .transpose()?.unwrap_or(true),
         })
     }
 
@@ -124,6 +131,7 @@ impl DataConfig {
             ("samples_per_shard", json::num(self.samples_per_shard as f64)),
             ("cache_mb", json::num(self.cache_mb)),
             ("shuffle_window", json::num(self.shuffle_window as f64)),
+            ("prefetch", Value::Bool(self.prefetch)),
         ])
     }
 
@@ -169,6 +177,7 @@ mod tests {
             samples_per_shard: 128,
             cache_mb: 64.0,
             shuffle_window: 256,
+            prefetch: true,
         }
     }
 
@@ -210,6 +219,16 @@ mod tests {
         let back = DataConfig::from_json(&v).unwrap();
         assert_eq!(back.cache_mb, DEFAULT_CACHE_MB);
         assert_eq!(back.shuffle_window, DEFAULT_SHUFFLE_WINDOW);
+    }
+
+    #[test]
+    fn prefetch_defaults_on_when_absent() {
+        let c = cfg();
+        let mut v = c.to_json();
+        if let Value::Obj(ref mut kv) = v {
+            kv.retain(|(k, _)| k != "prefetch");
+        }
+        assert!(DataConfig::from_json(&v).unwrap().prefetch);
     }
 
     #[test]

@@ -78,6 +78,7 @@ fn small_data(staging: StagingPolicy) -> DataConfig {
         // 512-sample window still exercises the two-level shuffle
         cache_mb: 16.0,
         shuffle_window: 512,
+        prefetch: true,
     }
 }
 
@@ -96,6 +97,8 @@ fn real_training(batch: usize, steps: usize) -> TrainingConfig {
         // in-process mpsc default; smoke/bench runs can flip to
         // "shm"/"tcp" — numerics are transport-invariant
         transport: "channel".into(),
+        topology: String::new(),
+        auto_tune: false,
         bucket_mb: 25.0,
         first_bucket_mb: 0.0,
         overlap_comm: true,

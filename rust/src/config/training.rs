@@ -4,7 +4,7 @@
 use anyhow::{bail, ensure};
 
 use super::{deny_unknown, ClusterConfig, ModelConfig};
-use crate::collectives::{Algorithm, Backend};
+use crate::collectives::{Algorithm, Backend, Topology};
 use crate::util::json::{self, Value};
 use crate::Result;
 
@@ -50,14 +50,27 @@ pub struct TrainingConfig {
     pub beta2: f64,
     pub weight_decay: f64,
     pub adam_eps: f64,
-    /// Gradient all-reduce algorithm ("ring" | "tree").
+    /// Gradient all-reduce algorithm ("ring" | "tree" |
+    /// "hierarchical"). `hierarchical` confines cross-group traffic to
+    /// group leaders and requires `transport = "hier"`.
     pub allreduce: String,
     /// Collective transport backend ("channel" | "shm" | "tcp"):
     /// in-process mpsc mailboxes (default), shared-memory slot rings,
-    /// or real loopback TCP sockets. Numerics are identical on all
-    /// three (enforced by the conformance suite); only the wire under
-    /// the collectives changes.
+    /// or real loopback TCP sockets; "hier" composes per-group shm
+    /// with a cross-group tcp mesh, routed by `topology`. Numerics are
+    /// identical on all of them (enforced by the conformance suite);
+    /// only the wire under the collectives changes.
     pub transport: String,
+    /// Rank→node grouping for `transport = "hier"`, as comma-separated
+    /// contiguous group sizes ("4,4" = two nodes of four ranks; uneven
+    /// groups allowed). Empty (the default) derives even groups of
+    /// `cluster.gpus_per_node` ranks.
+    pub topology: String,
+    /// Let the cost model solve `allreduce`/`bucket_mb`/
+    /// `first_bucket_mb` jointly per (message size, topology) before
+    /// training starts, overriding those three knobs with the plan of
+    /// least modeled exposed comm. Requires `overlap_comm`.
+    pub auto_tune: bool,
     /// Gradient bucket size for comm/compute overlap, MB.
     pub bucket_mb: f64,
     /// Size of the *first-launched* (tail) gradient bucket, MB — the
@@ -91,6 +104,7 @@ impl TrainingConfig {
         deny_unknown(v, &["mode", "batch_per_gpu", "steps", "lr",
                           "warmup_steps", "beta1", "beta2", "weight_decay",
                           "adam_eps", "allreduce", "transport",
+                          "topology", "auto_tune",
                           "bucket_mb", "first_bucket_mb", "overlap_comm",
                           "comm_engine", "zero_stage",
                           "checkpoint_every", "log_every"])?;
@@ -116,6 +130,11 @@ impl TrainingConfig {
             transport: v.get("transport")
                 .map(|x| x.as_str().map(str::to_string)).transpose()?
                 .unwrap_or_else(|| "channel".into()),
+            topology: v.get("topology")
+                .map(|x| x.as_str().map(str::to_string)).transpose()?
+                .unwrap_or_default(),
+            auto_tune: v.get("auto_tune").map(|x| x.as_bool())
+                .transpose()?.unwrap_or(false),
             bucket_mb: f("bucket_mb", 25.0)?,
             first_bucket_mb: f("first_bucket_mb", 0.0)?,
             overlap_comm: v.get("overlap_comm").map(|x| x.as_bool())
@@ -141,6 +160,8 @@ impl TrainingConfig {
             ("adam_eps", json::num(self.adam_eps)),
             ("allreduce", json::s(&self.allreduce)),
             ("transport", json::s(&self.transport)),
+            ("topology", json::s(&self.topology)),
+            ("auto_tune", Value::Bool(self.auto_tune)),
             ("bucket_mb", json::num(self.bucket_mb)),
             ("first_bucket_mb", json::num(self.first_bucket_mb)),
             ("overlap_comm", Value::Bool(self.overlap_comm)),
@@ -162,8 +183,29 @@ impl TrainingConfig {
         );
         // FromStr is the single validated spelling for both selectors,
         // so config errors quote exactly what the trainer would accept
-        let _: Algorithm = self.allreduce.parse()?;
+        let algo: Algorithm = self.allreduce.parse()?;
         let _: Backend = self.transport.parse()?;
+        if algo == Algorithm::Hierarchical {
+            ensure!(self.transport == "hier",
+                    "allreduce = \"hierarchical\" runs on the two-tier \
+                     transport only; set transport = \"hier\" (got \
+                     \"{}\")", self.transport);
+        }
+        if !self.topology.is_empty() {
+            ensure!(self.transport == "hier",
+                    "training.topology only applies to transport = \
+                     \"hier\" (got \"{}\")", self.transport);
+            let topo: Topology = self.topology.parse()?;
+            ensure!(topo.world() == cluster.world_size(),
+                    "topology '{}' covers {} ranks but the cluster \
+                     world is {}",
+                    self.topology, topo.world(), cluster.world_size());
+        }
+        if self.auto_tune {
+            ensure!(self.overlap_comm,
+                    "auto_tune solves the bucketed-overlap plan; it \
+                     needs overlap_comm = true");
+        }
         ensure!(
             self.bucket_mb.is_finite() && self.bucket_mb > 0.0,
             "bucket_mb must be a positive finite size (got {})",
@@ -315,6 +357,64 @@ mod tests {
         cfg.training.allreduce = "butterfly".into();
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("ring|tree"), "unhelpful: {err}");
+        // the spelling list is derived from Algorithm::ALL, so the
+        // new variant is advertised without hand-maintenance
+        assert!(err.contains("hierarchical"), "stale list: {err}");
+    }
+
+    #[test]
+    fn hierarchical_allreduce_requires_the_hier_transport() {
+        let mut cfg = presets::quickstart();
+        cfg.training.allreduce = "hierarchical".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("hier"), "unhelpful: {err}");
+        cfg.training.transport = "hier".into();
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn topology_knob_is_validated() {
+        let mut cfg = presets::quickstart(); // world 2
+        // topology without the hier transport is rejected
+        cfg.training.topology = "1,1".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("transport"), "unhelpful: {err}");
+        cfg.training.transport = "hier".into();
+        assert!(cfg.validate().is_ok());
+        // must tile the cluster world exactly
+        cfg.training.topology = "3".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("covers 3 ranks"), "unhelpful: {err}");
+        // and parse as comma-separated group sizes
+        cfg.training.topology = "2,q".into();
+        assert!(cfg.validate().is_err());
+        // empty string = derive a default grouping; always fine
+        cfg.training.topology = String::new();
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn auto_tune_requires_overlap_comm() {
+        let mut cfg = presets::quickstart();
+        cfg.training.auto_tune = true;
+        assert!(cfg.validate().is_ok());
+        cfg.training.overlap_comm = false;
+        cfg.training.zero_stage = 0; // isolate the auto_tune check
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("auto_tune"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn topology_and_auto_tune_default_off() {
+        // a config JSON without the new knobs keeps old behavior
+        let t = presets::e2e_pretrain().training;
+        let mut v = t.to_json();
+        if let Value::Obj(ref mut kv) = v {
+            kv.retain(|(k, _)| k != "topology" && k != "auto_tune");
+        }
+        let back = TrainingConfig::from_json(&v).unwrap();
+        assert!(back.topology.is_empty());
+        assert!(!back.auto_tune);
     }
 
     #[test]

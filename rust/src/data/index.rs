@@ -52,6 +52,15 @@ pub struct IoStats {
     pub cache_misses: AtomicU64,
     /// Wall time spent inside block fetches, nanoseconds.
     pub io_wait_ns: AtomicU64,
+    /// `get` calls whose sample lives in the same block as the calling
+    /// worker's previous lookup — contention the run-based worker
+    /// affinity avoided (the block was already this worker's, no other
+    /// worker raced to fetch it). Counted by the loader, not the cache.
+    pub affine_hits: AtomicU64,
+    /// Blocks fetched ahead of demand by [`BlockCache::warm`]. Warm
+    /// fetches count toward `bytes_read`/`io_wait_ns` but not
+    /// hits/misses, so `hit_rate` keeps measuring demand traffic only.
+    pub prefetched_blocks: AtomicU64,
 }
 
 impl IoStats {
@@ -249,6 +258,52 @@ impl BlockCache {
             return Ok(b.samples[off].clone());
         }
         io.cache_misses.fetch_add(1, Ordering::Relaxed);
+        self.fetch_block(&mut inner, shard, block, tick, io)?;
+        let off = (local - block * self.block_samples) as usize;
+        let b = inner
+            .blocks
+            .get(&key)
+            .expect("the block just fetched is never the eviction victim");
+        Ok(b.samples[off].clone())
+    }
+
+    /// Prefetch: make sure sample `id`'s block is resident, fetching it
+    /// on absence — no sample is cloned out. Returns whether a disk
+    /// read happened. An already-resident block is left untouched: its
+    /// LRU tick is NOT refreshed, so prefetch probes never shadow
+    /// demand recency in the eviction order.
+    pub fn warm(&self, id: u64, io: &IoStats) -> Result<bool> {
+        let (shard, local) = self.index.locate(id)?;
+        let block = local / self.block_samples;
+        let key = (shard as u32, block as u32);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.blocks.contains_key(&key) {
+            return Ok(false);
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        self.fetch_block(&mut inner, shard, block, tick, io)?;
+        // ord: Relaxed — monotonic stat counter, telemetry only
+        io.prefetched_blocks.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// The (shard, block) cache key sample `id` lives in — pure index
+    /// arithmetic, no lock taken. Loader workers use it to count
+    /// affinity streaks without serializing on the cache.
+    pub fn block_of(&self, id: u64) -> Result<(u32, u32)> {
+        let (shard, local) = self.index.locate(id)?;
+        Ok((shard as u32, (local / self.block_samples) as u32))
+    }
+
+    /// Read block (`shard`, `block`) from disk into the cache under the
+    /// already-held lock, then evict LRU down to budget. Shared by the
+    /// demand-miss path of [`BlockCache::get`] and the prefetch path of
+    /// [`BlockCache::warm`], so the two can never drift in accounting
+    /// or eviction policy.
+    fn fetch_block(&self, inner: &mut CacheInner, shard: usize,
+                   block: u64, tick: u64, io: &IoStats) -> Result<()> {
+        let key = (shard as u32, block as u32);
         let meta = &self.index.shards()[shard];
         let start = block * self.block_samples;
         let n = self.block_samples.min(meta.count - start);
@@ -268,8 +323,6 @@ impl BlockCache {
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let bytes = n * Sample::disk_bytes(self.index.seq());
         io.bytes_read.fetch_add(bytes, Ordering::Relaxed);
-        let off = (local - start) as usize;
-        let sample = samples[off].clone();
         inner.resident_bytes += bytes;
         inner.blocks.insert(key, Block { samples, bytes, tick });
         // strict LRU eviction by bytes; always keep the block we just
@@ -288,7 +341,7 @@ impl BlockCache {
                 inner.resident_bytes -= b.bytes;
             }
         }
-        Ok(sample)
+        Ok(())
     }
 }
 
@@ -384,6 +437,48 @@ mod tests {
         assert!(misses >= 79, "expected hard thrashing, misses={misses}");
         assert_eq!(io.bytes_read.load(Ordering::Relaxed),
                    misses * shard_bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_prefetches_blocks_without_demand_misses() {
+        let (dir, paths, all) = write_shards("prefetch", &[30], 16);
+        let idx = Arc::new(DatasetIndex::open(&paths).unwrap());
+        let cache = BlockCache::new(idx, 64.0).unwrap();
+        let io = IoStats::default();
+        for id in 0..30u64 {
+            cache.warm(id, &io).unwrap();
+        }
+        assert!(io.prefetched_blocks.load(Ordering::Relaxed) >= 1);
+        assert!(io.bytes_read.load(Ordering::Relaxed) > 0);
+        // warming is not a demand lookup
+        assert_eq!(io.cache_misses.load(Ordering::Relaxed), 0);
+        let warmed = io.bytes_read.load(Ordering::Relaxed);
+        // demand reads are now pure hits: no further disk traffic
+        for id in 0..30u64 {
+            assert_eq!(cache.get(id, &io).unwrap(), all[id as usize]);
+        }
+        assert_eq!(io.bytes_read.load(Ordering::Relaxed), warmed);
+        assert_eq!(io.cache_misses.load(Ordering::Relaxed), 0);
+        assert_eq!(io.hit_rate(), 1.0);
+        // warming a resident block is a no-op
+        assert!(!cache.warm(0, &io).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn block_of_matches_cache_addressing() {
+        // seq 16 → a block spans thousands of samples, so both 40-sample
+        // shards are single-block: ids share a key within a shard and
+        // change it at the shard boundary
+        let (dir, paths, _) = write_shards("blockof", &[40, 40], 16);
+        let idx = Arc::new(DatasetIndex::open(&paths).unwrap());
+        let cache = BlockCache::new(idx, 64.0).unwrap();
+        assert_eq!(cache.block_of(0).unwrap(),
+                   cache.block_of(39).unwrap());
+        assert_ne!(cache.block_of(0).unwrap(),
+                   cache.block_of(40).unwrap());
+        assert!(cache.block_of(80).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -24,14 +24,15 @@
 //! the rec-3 experiment can expose the under-provisioned-loader regime
 //! (utilization sawtooth) at CPU speeds.
 //!
-//! concurrency invariant: every atomic in this module is a monotonic
-//! stat counter accessed `Relaxed` — telemetry only, never used to
-//! publish memory. Real synchronization between workers and the
-//! consumer is the bounded `sync_channel` plus the error mutex.
+//! concurrency invariant: every atomic in this module is either a
+//! monotonic stat counter accessed `Relaxed` (telemetry only, never
+//! used to publish memory) or the advisory `stop` flag that merely ends
+//! the prefetcher's polling loop. Real synchronization between workers
+//! and the consumer is the bounded `sync_channel` plus the error mutex.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -88,6 +89,9 @@ pub struct LoaderPool {
     /// delivering; the consumer must check [`LoaderPool::take_error`]
     /// when the stream ends to distinguish "epoch done" from "died".
     error: Arc<Mutex<Option<anyhow::Error>>>,
+    /// Advisory shutdown flag for auxiliary threads (the block
+    /// prefetcher); workers proper stop via channel closure.
+    stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -141,15 +145,23 @@ fn run_worker(steps: Vec<usize>, io_delay_us: u64,
 
 impl LoaderPool {
     /// Pool skeleton shared by both spawn paths: stats, channel, the
-    /// static round-robin step split (determinism needs no work queue,
-    /// the reorder buffer absorbs skew), and one thread per worker
-    /// running [`run_worker`] over a produce closure built by
+    /// static step split (determinism needs no work queue, the reorder
+    /// buffer absorbs skew), and one thread per worker running
+    /// [`run_worker`] over a produce closure built by
     /// `make_produce(&stats)` (the streaming path feeds its IO
     /// counters through it; the in-memory path ignores it).
+    ///
+    /// The split hands out `run_len`-step runs round-robin: worker `w`
+    /// owns every step `s` with `(s / run_len) % workers == w`.
+    /// `run_len = 1` is plain round-robin (the in-memory path); the
+    /// streaming path sizes runs to the block geometry so consecutive
+    /// steps over one cache block stay on one worker. Pure scheduling
+    /// — batch content is keyed by step, so any split is bit-identical.
+    #[allow(clippy::too_many_arguments)]
     fn spawn_inner<P, F>(start_step: usize, end_step: usize,
                          remainder: usize, workers: usize,
-                         prefetch: usize, io_delay_us: u64,
-                         make_produce: F) -> LoaderPool
+                         run_len: usize, prefetch: usize,
+                         io_delay_us: u64, make_produce: F) -> LoaderPool
     where
         P: FnMut(usize) -> Result<HostBatch> + Send + 'static,
         F: Fn(&Arc<LoaderStats>) -> P,
@@ -163,10 +175,11 @@ impl LoaderPool {
         let error: Arc<Mutex<Option<anyhow::Error>>> =
             Arc::new(Mutex::new(None));
         let (tx, rx) = sync_channel::<HostBatch>(prefetch.max(1));
+        let run_len = run_len.max(1);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let steps: Vec<usize> = (start_step..end_step)
-                .filter(|s| s % workers == w)
+                .filter(|s| (s / run_len) % workers == w)
                 .collect();
             let tx = tx.clone();
             let error = error.clone();
@@ -183,6 +196,7 @@ impl LoaderPool {
             total_steps: end_step - start_step,
             stats,
             error,
+            stop: Arc::new(AtomicBool::new(false)),
             handles,
         }
     }
@@ -202,7 +216,8 @@ impl LoaderPool {
         let remainder = order.len() % batch;
         let order = Arc::new(order.to_vec());
         Ok(Self::spawn_inner(
-            0, total_steps, remainder, workers, prefetch, io_delay_us,
+            0, total_steps, remainder, workers, 1, prefetch,
+            io_delay_us,
             |_stats| {
                 let dataset = dataset.clone();
                 let order = order.clone();
@@ -225,6 +240,9 @@ impl LoaderPool {
     /// non-zero `start_step` to resume mid-epoch; batch content is
     /// keyed by the epoch-local step, so a resumed stream is
     /// bit-identical to the uninterrupted one from that step on.
+    /// Block prefetch is on; callers that need it off (bit-identity
+    /// tests, `data.prefetch = false`) use
+    /// [`LoaderPool::spawn_streaming_carry`] directly.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn_streaming(cache: Arc<BlockCache>,
                            plan: Arc<WindowedPlan>, rank: usize,
@@ -234,7 +252,7 @@ impl LoaderPool {
         -> Result<LoaderPool> {
         Self::spawn_streaming_carry(cache, plan, None, rank, batch,
                                     masker, seed, workers, prefetch,
-                                    io_delay_us, start_step)
+                                    io_delay_us, start_step, true)
     }
 
     /// [`LoaderPool::spawn_streaming`] with remainder roll-in: when
@@ -246,6 +264,13 @@ impl LoaderPool {
     /// carry count is a closed form of the geometry and the carried
     /// ids come from the previous plan's own deterministic order.
     /// Masking stays keyed by the *delivering* epoch and step.
+    ///
+    /// `warm_ahead` (config: `data.prefetch`) adds one auxiliary thread
+    /// that walks the same deterministic id stream about one shuffle
+    /// window ahead of delivery and warms each block through
+    /// [`BlockCache::warm`] — a pure cache side effect, so batches are
+    /// bit-identical with it on or off (pinned in
+    /// `tests/integration_data.rs`).
     #[allow(clippy::too_many_arguments)]
     pub fn spawn_streaming_carry(cache: Arc<BlockCache>,
                                  plan: Arc<WindowedPlan>,
@@ -253,7 +278,8 @@ impl LoaderPool {
                                  rank: usize, batch: usize,
                                  masker: Masker, seed: u64,
                                  workers: usize, prefetch: usize,
-                                 io_delay_us: u64, start_step: usize)
+                                 io_delay_us: u64, start_step: usize,
+                                 warm_ahead: bool)
         -> Result<LoaderPool> {
         ensure!(batch > 0 && workers > 0);
         ensure!(rank < plan.world(),
@@ -295,8 +321,13 @@ impl LoaderPool {
         // epoch when the caller threads plans through `carry_from`,
         // genuinely dropped otherwise
         let remainder = (carry_in + per) % batch;
-        Ok(Self::spawn_inner(
-            start_step, end_step, remainder, workers, prefetch,
+        // shard-aware worker affinity: hand each worker a run of
+        // consecutive steps sized to the block geometry, so the cache
+        // block a cursor segment touches is fetched and drained by one
+        // worker instead of ping-ponging between all of them
+        let run_len = (cache.block_samples() / batch).clamp(1, 8);
+        let mut pool = Self::spawn_inner(
+            start_step, end_step, remainder, workers, run_len, prefetch,
             io_delay_us,
             |stats| {
                 let cache = cache.clone();
@@ -307,6 +338,7 @@ impl LoaderPool {
                     .as_ref()
                     .map(|p| RankCursor::new(p.clone(), rank));
                 let mut ids: Vec<u32> = Vec::with_capacity(batch);
+                let mut last_block: Option<(u32, u32)> = None;
                 move |step| {
                     ids.clear();
                     for k in step * batch..(step + 1) * batch {
@@ -323,17 +355,81 @@ impl LoaderPool {
                         ids.push(id);
                     }
                     let mut samples = Vec::with_capacity(batch);
+                    let mut affine = 0u64;
                     for &id in &ids {
+                        // a lookup landing in the same block as this
+                        // worker's previous one is contention the run
+                        // split avoided: no other worker raced us for
+                        // the block
+                        let key = cache.block_of(id as u64)?;
+                        if last_block == Some(key) {
+                            affine += 1;
+                        }
+                        last_block = Some(key);
                         samples.push(
                             cache.get(id as u64, &stats.io)
                                 .with_context(|| format!(
                                     "fetching sample {id}"))?);
                     }
+                    if affine > 0 {
+                        // ord: Relaxed — monotonic stat counter
+                        stats.io.affine_hits
+                            .fetch_add(affine, Ordering::Relaxed);
+                    }
                     let refs: Vec<&Sample> = samples.iter().collect();
                     Ok(assemble(&refs, seq, &masker, seed, epoch, step))
                 }
             },
-        ))
+        );
+        if warm_ahead && start_step < end_step {
+            // double-buffered block prefetch: walk the id stream up to
+            // `lookahead` steps past what the consumer has taken and
+            // warm each block, hiding cold-block latency behind the
+            // batches in flight. Advisory only — a fault here stops
+            // the prefetcher and resurfaces (with context) in the
+            // demand path.
+            let cache = cache.clone();
+            let stats = pool.stats.clone();
+            let stop = pool.stop.clone();
+            let mut cursor = RankCursor::new(plan.clone(), rank);
+            let mut prev_cursor = carry_from
+                .as_ref()
+                .map(|p| RankCursor::new(p.clone(), rank));
+            let lookahead = plan.window().div_ceil(batch).max(1);
+            pool.handles.push(std::thread::spawn(move || {
+                for step in start_step..end_step {
+                    loop {
+                        // ord: Relaxed — `stop` is an advisory
+                        // shutdown flag and `delivered` a monotonic
+                        // stat; the poll loop tolerates stale reads
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let taken = start_step
+                            + stats.delivered.load(Ordering::Relaxed)
+                                as usize;
+                        if step < taken + lookahead {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    for k in step * batch..(step + 1) * batch {
+                        let id = if k < carry_in {
+                            match prev_cursor.as_mut() {
+                                Some(c) => c.id_at(per - carry_in + k),
+                                None => return,
+                            }
+                        } else {
+                            cursor.id_at(k - carry_in)
+                        };
+                        if cache.warm(id as u64, &stats.io).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+        Ok(pool)
     }
 
     /// Batches this pool will deliver (end − start for resumed pools).
@@ -390,6 +486,9 @@ impl LoaderPool {
 
 impl Drop for LoaderPool {
     fn drop(&mut self) {
+        // ord: Relaxed — advisory shutdown flag; the prefetcher polls
+        // it between warms and publishes no memory through it
+        self.stop.store(true, Ordering::Relaxed);
         // Replace the receiver with a dummy so the real one drops and
         // blocked senders see a closed channel, then join the workers.
         let (_, dummy) = sync_channel::<HostBatch>(1);

@@ -136,6 +136,7 @@ mod tests {
             samples_per_shard: 64,
             cache_mb: 16.0,
             shuffle_window: 64,
+            prefetch: true,
         }
     }
 

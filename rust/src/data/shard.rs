@@ -176,6 +176,12 @@ impl WindowedPlan {
         (self.carry_in(batch) + self.per) / batch
     }
 
+    /// The level-2 shuffle window size, in samples — the loader's
+    /// prefetcher sizes its lookahead to stay about one window ahead.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
     /// Number of level-2 windows covering the stream.
     pub fn n_windows(&self) -> usize {
         (self.n as usize).div_ceil(self.window)

@@ -26,7 +26,8 @@
 //!   overhead  = optimizer + host bookkeeping (measured ≈ 3 ms)
 
 use crate::cluster::{MemoryModel, StorageModel};
-use crate::collectives::{Algorithm, BucketPlan, CostModel, RankMemory};
+use crate::collectives::{Algorithm, BucketPlan, CostModel, RankMemory,
+                         TunedPlan};
 use crate::config::{Config, StagingPolicy};
 use crate::data::records::Sample;
 
@@ -115,6 +116,10 @@ pub struct SimResult {
     /// Fraction of the step the GPU is doing useful compute.
     pub gpu_util: f64,
     pub mfu: f64,
+    /// The plan the cost-model auto-tuner chose (algorithm ×
+    /// bucket_mb × first_bucket_mb) when `training.auto_tune` is set;
+    /// `None` means the configured knobs were used as-is.
+    pub tuned: Option<TunedPlan>,
 }
 
 /// Simulate steady-state training for `cfg`; deterministic.
@@ -145,6 +150,24 @@ pub fn simulate(cfg: &Config) -> SimResult {
     let algo: Algorithm =
         cfg.training.allreduce.parse().unwrap_or(Algorithm::Ring);
     let bwd = compute * 2.0 / 3.0;
+    // auto-tune: let the cost model solve algorithm × bucket_mb ×
+    // first_bucket_mb for least exposed comm before anything is
+    // priced. The hierarchical candidate is only on the menu when the
+    // transport is the two-tier one; note the simulator's own flat
+    // `ring` pricing stays the pinned two-tier idealization — the
+    // tuner's flat-vs-hier comparison is the implementation-honest one
+    // (`CostModel::flat_ring_allreduce`).
+    let tuned: Option<TunedPlan> = if cfg.training.auto_tune {
+        Some(cost.auto_tune(c.nodes, grad_bytes, bwd,
+                            cfg.training.transport == "hier"))
+    } else {
+        None
+    };
+    let (algo, cfg_bucket_mb, cfg_first_mb) = match &tuned {
+        Some(p) => (p.algorithm, p.bucket_mb, p.first_bucket_mb),
+        None => (algo, cfg.training.bucket_mb,
+                 cfg.training.first_bucket_mb),
+    };
     // bucket_mb counts f32 *buffer* bytes, so derive params/bucket
     // from the real trainer's own BucketPlan arithmetic; the wire
     // moves bf16 (CostModel::gradient_bytes, 2 of the buffer's 4
@@ -153,12 +176,10 @@ pub fn simulate(cfg: &Config) -> SimResult {
     // smaller `first_bucket_mb` bucket when set), so the priced
     // schedule is exactly the one real mode runs — bucket for bucket.
     let params = cfg.model.param_count() as usize;
-    let bucket_elems =
-        BucketPlan::elems_for(params, cfg.training.bucket_mb);
-    let first_elems = if cfg.training.first_bucket_mb.is_finite()
-        && cfg.training.first_bucket_mb > 0.0
+    let bucket_elems = BucketPlan::elems_for(params, cfg_bucket_mb);
+    let first_elems = if cfg_first_mb.is_finite() && cfg_first_mb > 0.0
     {
-        BucketPlan::elems_for(params, cfg.training.first_bucket_mb)
+        BucketPlan::elems_for(params, cfg_first_mb)
     } else {
         bucket_elems
     };
@@ -255,6 +276,7 @@ pub fn simulate(cfg: &Config) -> SimResult {
         samples_per_sec: batch as f64 * world as f64 / step,
         gpu_util: compute / step,
         mfu: mfu_model.mfu(batch),
+        tuned,
     }
 }
 
@@ -586,6 +608,36 @@ mod tests {
         cfg.data.staging = StagingPolicy::LocalCopy;
         let loc = simulate(&cfg);
         assert!(loc.samples_per_sec >= net.samples_per_sec);
+    }
+
+    #[test]
+    fn auto_tune_selects_hierarchical_on_the_hier_transport() {
+        // the acceptance shape: 2 nodes × 4 ranks over 25 GbE — the
+        // tuner must land on the hierarchical schedule and the sim
+        // must run (and report) the plan it chose
+        let mut cfg = paper_cfg(presets::model_bert_120m(), 184);
+        cfg.cluster.nodes = 2;
+        cfg.cluster.gpus_per_node = 4;
+        cfg.training.transport = "hier".into();
+        cfg.training.auto_tune = true;
+        let r = simulate(&cfg);
+        let plan = r.tuned.expect("auto_tune must report its plan");
+        assert_eq!(plan.algorithm, Algorithm::Hierarchical,
+                   "{plan:?}");
+        // the sim's bucket count follows the tuned knobs, not the
+        // configured ones
+        let want = BucketPlan::new_with_first(
+            cfg.model.param_count() as usize, plan.bucket_mb,
+            plan.first_bucket_mb);
+        assert_eq!(r.comm_buckets, want.n_buckets());
+        // without the hier transport the tuner stays flat
+        cfg.training.transport = "channel".into();
+        let flat = simulate(&cfg);
+        let plan = flat.tuned.expect("plan still reported");
+        assert_ne!(plan.algorithm, Algorithm::Hierarchical);
+        // and with auto_tune off nothing is reported or changed
+        cfg.training.auto_tune = false;
+        assert!(simulate(&cfg).tuned.is_none());
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
         &format!("FIG. 1 — pretraining scaling performance ({model_name})"),
         vec!["nodes", "gpus", "batch/gpu", "samples/s", "scale-eff",
              "step(ms)", "compute(ms)", "comm-exposed(ms)", "wire/step",
-             "io/step", "opt-mem/rank", "gpu-util"],
+             "io/step", "opt-mem/rank", "gpu-util", "plan"],
     );
     let Some(base) = sweep.first() else {
         return t;
@@ -59,9 +59,26 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
             format!("{:.1}MB", r.loader_bytes_per_step / 1e6),
             format!("{:.1}MB", r.opt_bytes_per_rank / 1e6),
             format!("{:.3}", r.gpu_util),
+            plan_cell(r),
         ]);
     }
     t
+}
+
+/// The auto-tuner's chosen plan for a row: `algorithm/bucketMB` (plus
+/// `+firstMB` when a smaller first bucket was picked), or `-` when the
+/// run used the configured knobs as-is.
+fn plan_cell(r: &SimResult) -> String {
+    match &r.tuned {
+        Some(p) if p.first_bucket_mb > 0.0 => {
+            format!("{}/{:.0}+{:.0}MB", p.algorithm.as_str(),
+                    p.bucket_mb, p.first_bucket_mb)
+        }
+        Some(p) => {
+            format!("{}/{:.0}MB", p.algorithm.as_str(), p.bucket_mb)
+        }
+        None => "-".into(),
+    }
 }
 
 /// Fig. 1 as CSV (for external plotting).
@@ -71,6 +88,7 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
         "step_secs", "compute_secs", "comm_secs", "comm_exposed_secs",
         "wire_bytes_per_rank", "loader_bytes_per_step",
         "opt_bytes_per_rank", "mem_headroom_bytes", "gpu_util",
+        "tuned_plan",
     ]);
     for (name, sweep) in series {
         for r in sweep {
@@ -89,6 +107,7 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
                 format!("{:.0}", r.opt_bytes_per_rank),
                 format!("{:.0}", r.mem_headroom_bytes),
                 format!("{:.4}", r.gpu_util),
+                plan_cell(r),
             ]);
         }
     }
@@ -158,6 +177,27 @@ mod tests {
         let expect = cfg.training.batch_per_gpu as f64
             * (2 + 2 * cfg.model.seq) as f64;
         assert!((sweep[0].loader_bytes_per_step - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fig1_reports_the_tuned_plan() {
+        // with auto_tune on a hier transport, the chosen plan shows up
+        // in the table and CSV; without it the column reads "-"
+        let mut cfg = presets::paper_full_scale();
+        cfg.cluster.nodes = 2;
+        cfg.cluster.gpus_per_node = 4;
+        cfg.training.transport = "hier".into();
+        cfg.training.auto_tune = true;
+        let sweep = sweep_nodes(&cfg, &[2]);
+        let s = fig1_table("bert-120m", &sweep).render();
+        assert!(s.contains("plan"), "missing column: {s}");
+        assert!(s.contains("hierarchical/"), "plan not rendered: {s}");
+        let csv = fig1_csv(&[("bert-120m", sweep)]).to_string();
+        assert!(csv.contains("tuned_plan"));
+        assert!(csv.contains("hierarchical/"));
+        cfg.training.auto_tune = false;
+        let plain = sweep_nodes(&cfg, &[2]);
+        assert!(plain[0].tuned.is_none());
     }
 
     #[test]

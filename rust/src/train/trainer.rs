@@ -37,8 +37,9 @@ use anyhow::{ensure, Context};
 use crate::collectives::{allreduce, bucketed_all_gather,
                          bucketed_allreduce, bucketed_reduce_scatter,
                          Algorithm, AnyTransport, Backend, BucketPlan,
-                         CollectiveKind, CommEngine, PendingBucket,
-                         Transport, TransportStats};
+                         CollectiveKind, CommEngine, CostModel,
+                         PendingBucket, Topology, Transport,
+                         TransportStats};
 use crate::config::{Config, ExecMode};
 use crate::data::{BlockCache, DatasetIndex, LoaderPool, Masker,
                   WindowedPlan};
@@ -366,9 +367,49 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                    cfg.training.warmup_steps, total_steps);
     let algo: Algorithm = cfg.training.allreduce.parse()?;
     // transport backend for the collectives: channel (mpsc mailboxes,
-    // default), shm (slot rings) or tcp (loopback sockets) — validated
-    // spelling shared with config and the report layer
+    // default), shm (slot rings), tcp (loopback sockets) or hier (the
+    // two-tier shm × tcp composition) — validated spelling shared with
+    // config and the report layer
     let backend: Backend = cfg.training.transport.parse()?;
+    // rank→group topology for the hier transport: the configured
+    // grouping, or even groups of gpus_per_node ranks when unset
+    // (validation already checked any configured string against the
+    // cluster world)
+    let topo: Option<Topology> = if backend == Backend::Hier {
+        Some(if cfg.training.topology.is_empty() {
+            Topology::even(
+                world,
+                cfg.cluster.gpus_per_node.clamp(1, world.max(1)))?
+        } else {
+            cfg.training.topology.parse()?
+        })
+    } else {
+        None
+    };
+    // auto-tune: solve algorithm × bucket_mb × first_bucket_mb with
+    // the same cost model and backward window the simulator prices,
+    // overriding the configured knobs with the winning plan
+    let (algo, bucket_mb, first_bucket_mb) = if cfg.training.auto_tune {
+        let cost = CostModel::from_cluster(&cfg.cluster);
+        let flops =
+            crate::perfmodel::train_step_flops_per_sample(&cfg.model)
+                * batch as f64;
+        let compute = flops
+            / crate::perfmodel::MfuModel::default()
+                .effective_flops(batch, cfg.cluster.gpu_peak_tflops);
+        let plan = cost.auto_tune(
+            cfg.cluster.nodes,
+            CostModel::gradient_bytes(meta.grad_len as u64),
+            compute * 2.0 / 3.0,
+            backend == Backend::Hier);
+        println!(
+            "[train] auto-tune: {} / bucket {:.0} MB / first {:.0} MB              (modeled exposed comm {:.1} ms/step)",
+            plan.algorithm.as_str(), plan.bucket_mb,
+            plan.first_bucket_mb, plan.exposed_secs * 1e3);
+        (plan.algorithm, plan.bucket_mb, plan.first_bucket_mb)
+    } else {
+        (algo, cfg.training.bucket_mb, cfg.training.first_bucket_mb)
+    };
     // DDP-style bucketing: sync the gradient in ~bucket_mb chunks in
     // reverse layer order, so each bucket's all-reduce launches as soon
     // as backward has produced it (rec. 4's overlap) instead of one
@@ -378,8 +419,8 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     // requires overlap_comm with zero_stage 1).
     let zero = cfg.training.zero_stage == 1;
     let bucket_plan = (cfg.training.overlap_comm || zero).then(|| {
-        BucketPlan::new_with_first(meta.grad_len, cfg.training.bucket_mb,
-                                   cfg.training.first_bucket_mb)
+        BucketPlan::new_with_first(meta.grad_len, bucket_mb,
+                                   first_bucket_mb)
     });
     let masker = Masker::new(cfg.data.mask_prob, cfg.model.vocab);
 
@@ -449,7 +490,7 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
         })
         .transpose()?;
 
-    let comms = backend.world(world)?;
+    let comms = backend.world_with(world, topo.as_ref())?;
     let outcomes: Vec<Result<RankOutcome>> = std::thread::scope(|scope| {
         let handles: Vec<_> = comms
             .into_iter()
@@ -545,6 +586,7 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
                                 cfg.data.loaders_per_gpu,
                                 cfg.data.prefetch_batches,
                                 opts.io_delay_us, epoch_start_step,
+                                cfg.data.prefetch,
                             )?;
                         epoch_start_step = 0; // only the resumed epoch
                         // baselines are zero BY CONSTRUCTION (the

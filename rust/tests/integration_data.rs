@@ -265,14 +265,15 @@ fn carried_remainder_leads_the_next_epoch_bit_for_bit() {
 
         let mut pool = LoaderPool::spawn_streaming_carry(
             cache.clone(), p1.clone(), Some(p0.clone()), rank, batch,
-            masker.clone(), 7, 3, 2, 0, 0)
+            masker.clone(), 7, 3, 2, 0, 0, true)
             .unwrap();
         assert_eq!(pool.total_steps(), 8);
         let got = drain(&mut pool);
-        // worker-count independence of the carried stream
+        // worker-count independence of the carried stream (and
+        // prefetch-independence: this pool warms ahead, that one not)
         let mut pool1 = LoaderPool::spawn_streaming_carry(
             cache.clone(), p1.clone(), Some(p0.clone()), rank, batch,
-            masker.clone(), 7, 1, 2, 0, 0)
+            masker.clone(), 7, 1, 2, 0, 0, false)
             .unwrap();
         let got1 = drain(&mut pool1);
         assert_batches_eq(&got, &got1, &format!("rank={rank} workers"));
@@ -280,7 +281,7 @@ fn carried_remainder_leads_the_next_epoch_bit_for_bit() {
         // mid-epoch resume through a carried epoch
         let mut resumed = LoaderPool::spawn_streaming_carry(
             cache.clone(), p1.clone(), Some(p0.clone()), rank, batch,
-            masker.clone(), 7, 2, 2, 0, 3)
+            masker.clone(), 7, 2, 2, 0, 3, true)
             .unwrap();
         let tail_batches = drain(&mut resumed);
         assert_batches_eq(&got[3..], &tail_batches,
@@ -307,10 +308,73 @@ fn carried_remainder_leads_the_next_epoch_bit_for_bit() {
     let p0 = build(0);
     let p2 = build(2);
     let err = LoaderPool::spawn_streaming_carry(
-        cache.clone(), p2, Some(p0), 0, batch, masker, 7, 1, 2, 0, 0)
+        cache.clone(), p2, Some(p0), 0, batch, masker, 7, 1, 2, 0, 0,
+        true)
         .unwrap_err()
         .to_string();
     assert!(err.contains("preceding epoch"), "unhelpful: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn prefetch_changes_no_bits_and_warms_ahead() {
+    // data.prefetch is a latency knob, never a numerics knob: the same
+    // stream with the warm-ahead thread on and off must be
+    // bit-identical, and on it must actually warm blocks before the
+    // demand path reaches them.
+    use std::sync::atomic::Ordering;
+    let dir = workdir("prefetch");
+    let (paths, _) = write_corpus(&dir, &[90, 60]);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let masker = Masker::new(0.15, 512);
+    let batch = 6usize;
+    let plan = Arc::new(
+        WindowedPlan::build(&index.shard_counts(), 2, 1, 13, 16)
+            .unwrap());
+    for rank in 0..2 {
+        let run = |warm: bool, delay_us: u64| {
+            // fresh cold cache per run so each measures its own traffic
+            let cache = Arc::new(
+                BlockCache::new(index.clone(), 64.0).unwrap());
+            let mut pool = LoaderPool::spawn_streaming_carry(
+                cache, plan.clone(), None, rank, batch, masker.clone(),
+                13, 2, 2, delay_us, 0, warm)
+                .unwrap();
+            let got = drain(&mut pool);
+            let warmed =
+                pool.stats.io.prefetched_blocks.load(Ordering::Relaxed);
+            (got, warmed)
+        };
+        let (off, warmed_off) = run(false, 0);
+        // slow workers (2 ms/batch) give the prefetcher a head start,
+        // so it demonstrably wins the cold blocks
+        let (on, warmed_on) = run(true, 2000);
+        assert_batches_eq(&off, &on, &format!("rank={rank} prefetch"));
+        assert_eq!(warmed_off, 0, "prefetch off must not warm blocks");
+        assert!(warmed_on > 0, "prefetch on never warmed a block");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn worker_affinity_streaks_within_blocks() {
+    // 128 samples in one shard, far smaller than one cache block: with
+    // the run-based split every lookup past each worker's first lands
+    // in that worker's previous block. 2 workers → exactly 126 of the
+    // 128 lookups are affine.
+    use std::sync::atomic::Ordering;
+    let dir = workdir("affinity");
+    let (paths, _) = write_corpus(&dir, &[128]);
+    let index = Arc::new(DatasetIndex::open(&paths).unwrap());
+    let cache = Arc::new(BlockCache::new(index.clone(), 64.0).unwrap());
+    let plan = Arc::new(
+        WindowedPlan::build(&index.shard_counts(), 1, 0, 3, 32)
+            .unwrap());
+    let mut pool = LoaderPool::spawn_streaming(
+        cache, plan, 0, 8, Masker::new(0.15, 512), 3, 2, 2, 0, 0)
+        .unwrap();
+    assert_eq!(drain(&mut pool).len(), 16);
+    assert_eq!(pool.stats.io.affine_hits.load(Ordering::Relaxed), 126);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

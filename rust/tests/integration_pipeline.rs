@@ -23,6 +23,7 @@ fn cfg(samples: usize) -> DataConfig {
         samples_per_shard: 100,
         cache_mb: 8.0,
         shuffle_window: 64,
+        prefetch: true,
     }
 }
 

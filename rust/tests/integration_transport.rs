@@ -10,11 +10,12 @@
 //! `tcp::*` tests, so `cargo test --test integration_transport tcp::`
 //! runs one backend's suite in isolation (what `verify.sh` does).
 
-use txgain::collectives::{allreduce, bucketed_all_gather,
+use txgain::collectives::{all_gather, allreduce, bucketed_all_gather,
                           bucketed_allreduce, bucketed_reduce_scatter,
-                          Algorithm, AnyTransport, Backend, BucketPlan,
+                          reduce_scatter, shard_spans, Algorithm,
+                          AnyTransport, Backend, BucketPlan,
                           CollectiveKind, CommEngine, PendingBucket,
-                          Transport, TransportStats};
+                          Topology, Transport, TransportStats};
 
 /// Deterministic integer-valued inputs: sums over ≤8 ranks are exact
 /// in f32, so bit-identity across backends/algorithms is well-defined.
@@ -145,6 +146,9 @@ mod suite {
                         Algorithm::Tree => |_, _, c, buf| {
                             allreduce(Algorithm::Tree, c, buf).unwrap()
                         },
+                        // needs a topology-bearing transport; its
+                        // bit-identity rows live in the `hier` module
+                        Algorithm::Hierarchical => continue,
                     };
                     let got =
                         run_world(backend, inputs(world, len), op);
@@ -576,3 +580,441 @@ macro_rules! backend_suite {
 backend_suite!(channel, Backend::Channel);
 backend_suite!(shm, Backend::Shm);
 backend_suite!(tcp, Backend::Tcp);
+
+/// The hierarchical rows: the two-tier transport + `Algorithm::
+/// Hierarchical` against the flat channel ring, on even and uneven
+/// groupings. Not stamped from `backend_suite!` — the flat rows'
+/// stats-equality-vs-channel assertion cannot hold here (the hier
+/// transport fills the per-tier counters the flat backends leave zero),
+/// and the collectives need a `Topology` the macro has no slot for.
+mod hier {
+    use super::*;
+    use txgain::collectives::hier::tier_wire_elems;
+
+    /// Even and uneven groupings per world — the grouping sweep every
+    /// row below runs over.
+    fn topologies(world: usize) -> Vec<Topology> {
+        let specs: &[&str] = match world {
+            4 => &["2,2", "3,1"],
+            8 => &["4,4", "4,3,1"],
+            _ => panic!("no hier grouping sweep for world {world}"),
+        };
+        specs.iter().map(|s| s.parse().unwrap()).collect()
+    }
+
+    /// Run `op` on every rank of a fresh hier world over `topo`.
+    fn run_hier(
+        topo: &Topology,
+        bufs: Vec<Vec<f32>>,
+        op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>),
+    ) -> Vec<(Vec<f32>, TransportStats)> {
+        let world = bufs.len();
+        assert_eq!(world, topo.world());
+        std::thread::scope(|s| {
+            Backend::Hier
+                .world_with(world, Some(topo))
+                .unwrap()
+                .into_iter()
+                .zip(bufs)
+                .enumerate()
+                .map(|(rank, (mut c, mut buf))| {
+                    s.spawn(move || {
+                        op(rank, world, &mut c, &mut buf);
+                        (buf, c.stats())
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        })
+    }
+
+    #[test]
+    fn allreduce_bit_identical_to_flat_ring() {
+        // the inputs are integer-valued, so every sum is exact in f32
+        // and the hierarchical association must reproduce the flat
+        // ring's bits exactly — on even and uneven groupings alike
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                allreduce(Algorithm::Hierarchical, c, buf).unwrap()
+            };
+        let flat: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                allreduce(Algorithm::Ring, c, buf).unwrap()
+            };
+        for world in [4usize, 8] {
+            for topo in topologies(world) {
+                for len in [13usize, 257] {
+                    let got = run_hier(&topo, inputs(world, len), op);
+                    let want = run_world(Backend::Channel,
+                                         inputs(world, len), flat);
+                    for (r, ((g, _), (w, _))) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        for (a, b) in g.iter().zip(w) {
+                            assert_eq!(a.to_bits(), b.to_bits(),
+                                       "topo={topo} len={len} \
+                                        rank={r}: {a} != {b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owns_flat_ring_bits() {
+        // after hier RS, rank r's shard_spans span must hold exactly
+        // the flat ring's bits — the ownership contract ZeRO-1 uses
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                reduce_scatter(Algorithm::Hierarchical, c, buf).unwrap()
+            };
+        let flat: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                reduce_scatter(Algorithm::Ring, c, buf).unwrap()
+            };
+        for world in [4usize, 8] {
+            for topo in topologies(world) {
+                for len in [13usize, 257] {
+                    let got = run_hier(&topo, inputs(world, len), op);
+                    let want = run_world(Backend::Channel,
+                                         inputs(world, len), flat);
+                    let spans = shard_spans(len, world);
+                    for (r, ((g, _), (w, _))) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        let (a, b) = spans[r];
+                        for (x, y) in g[a..b].iter().zip(&w[a..b]) {
+                            assert_eq!(x.to_bits(), y.to_bits(),
+                                       "topo={topo} len={len} \
+                                        rank={r}: {x} != {y}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_distributes_owned_spans_bit_for_bit() {
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                all_gather(Algorithm::Hierarchical, c, buf).unwrap()
+            };
+        let flat: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                all_gather(Algorithm::Ring, c, buf).unwrap()
+            };
+        for world in [4usize, 8] {
+            for topo in topologies(world) {
+                for len in [13usize, 257] {
+                    // rank r starts with only its own span
+                    // authoritative; -1 elsewhere must be overwritten
+                    let want_vec: Vec<f32> = (0..len)
+                        .map(|i| ((i * 3) % 17) as f32 - 8.0)
+                        .collect();
+                    let spans = shard_spans(len, world);
+                    let seed = |_: ()| -> Vec<Vec<f32>> {
+                        (0..world)
+                            .map(|r| {
+                                let mut buf = vec![-1.0f32; len];
+                                let (a, b) = spans[r];
+                                buf[a..b]
+                                    .copy_from_slice(&want_vec[a..b]);
+                                buf
+                            })
+                            .collect()
+                    };
+                    let got = run_hier(&topo, seed(()), op);
+                    let want =
+                        run_world(Backend::Channel, seed(()), flat);
+                    for (r, ((g, _), (w, _))) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        for (x, y) in g.iter().zip(w) {
+                            assert_eq!(x.to_bits(), y.to_bits(),
+                                       "topo={topo} len={len} \
+                                        rank={r}: {x} != {y}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_tier_wire_bytes_match_the_schedule_formula() {
+        // measured per-tier wire traffic must equal the replayed
+        // schedule's element counts × 2 B (modeled bf16) — the check
+        // the cost model's hierarchical pricing rests on
+        for world in [4usize, 8] {
+            for topo in topologies(world) {
+                for (kind, op) in [
+                    (CollectiveKind::Allreduce,
+                     (|_, _, c: &mut AnyTransport, buf: &mut Vec<f32>| {
+                         allreduce(Algorithm::Hierarchical, c, buf)
+                             .unwrap()
+                     }) as fn(usize, usize, &mut AnyTransport,
+                              &mut Vec<f32>)),
+                    (CollectiveKind::ReduceScatter,
+                     |_, _, c: &mut AnyTransport, buf: &mut Vec<f32>| {
+                         reduce_scatter(Algorithm::Hierarchical, c, buf)
+                             .unwrap()
+                     }),
+                    (CollectiveKind::AllGather,
+                     |_, _, c: &mut AnyTransport, buf: &mut Vec<f32>| {
+                         all_gather(Algorithm::Hierarchical, c, buf)
+                             .unwrap()
+                     }),
+                ] {
+                    let len = 256usize;
+                    let out = run_hier(&topo, inputs(world, len), op);
+                    let (intra, inter) =
+                        tier_wire_elems(&topo, len, kind);
+                    let intra_sent: u64 = out.iter()
+                        .map(|(_, s)| s.intra_wire_bytes_sent)
+                        .sum();
+                    let inter_sent: u64 = out.iter()
+                        .map(|(_, s)| s.inter_wire_bytes_sent)
+                        .sum();
+                    let inter_recv: u64 = out.iter()
+                        .map(|(_, s)| s.inter_wire_bytes_recv)
+                        .sum();
+                    assert_eq!(intra_sent, intra * 2,
+                               "topo={topo} {kind:?}: intra tier");
+                    assert_eq!(inter_sent, inter * 2,
+                               "topo={topo} {kind:?}: inter tier");
+                    // every slow-tier byte sent is received
+                    assert_eq!(inter_recv, inter * 2,
+                               "topo={topo} {kind:?}: inter symmetry");
+                    // and the tier split exhausts the totals
+                    for (r, (_, s)) in out.iter().enumerate() {
+                        assert_eq!(s.wire_bytes_sent,
+                                   s.intra_wire_bytes_sent
+                                       + s.inter_wire_bytes_sent,
+                                   "topo={topo} {kind:?} rank={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_ring_on_hier_transport_splits_tiers() {
+        // the hier transport runs flat collectives unchanged (that is
+        // what makes the flat-vs-hier benchmark apples-to-apples);
+        // routing only decides which tier carries each hop
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                allreduce(Algorithm::Ring, c, buf).unwrap()
+            };
+        let topo: Topology = "2,2".parse().unwrap();
+        let len = 256usize;
+        let got = run_hier(&topo, inputs(4, len), op);
+        let want = run_world(Backend::Channel, inputs(4, len), op);
+        let mut intra_total = 0u64;
+        let mut inter_total = 0u64;
+        for (r, ((g, gs), (w, ws))) in
+            got.iter().zip(&want).enumerate()
+        {
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "rank={r}");
+            }
+            // same totals as any flat backend, split across tiers
+            assert_eq!(gs.wire_bytes_sent, ws.wire_bytes_sent);
+            assert_eq!(gs.wire_bytes_sent,
+                       gs.intra_wire_bytes_sent
+                           + gs.inter_wire_bytes_sent);
+            intra_total += gs.intra_wire_bytes_sent;
+            inter_total += gs.inter_wire_bytes_sent;
+        }
+        // on 2+2 the flat ring crosses the group boundary twice per
+        // lap: both tiers must carry real traffic
+        assert!(intra_total > 0 && inter_total > 0,
+                "intra={intra_total} inter={inter_total}");
+    }
+
+    #[test]
+    fn dead_peer_errors_on_both_tiers() {
+        let topo: Topology = "2,2".parse().unwrap();
+        // intra tier: rank 1 (same group as 0) dies
+        let mut comms = Backend::Hier.world_with(4, Some(&topo)).unwrap();
+        let c3 = comms.pop().unwrap();
+        let c2 = comms.pop().unwrap();
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        drop(c1);
+        assert!(c0.recv(1, 0).is_err(),
+                "intra-tier recv from dead peer hung or succeeded");
+        drop((c2, c3));
+
+        // inter tier: rank 2 (other group's leader) dies
+        let mut comms = Backend::Hier.world_with(4, Some(&topo)).unwrap();
+        let c3 = comms.pop().unwrap();
+        let c2 = comms.pop().unwrap();
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        drop(c2);
+        assert!(c0.recv(2, 0).is_err(),
+                "inter-tier recv from dead peer hung or succeeded");
+        drop((c1, c3));
+    }
+
+    #[test]
+    fn engine_concurrent_hier_buckets_bit_identical() {
+        // concurrent hierarchical buckets through the comm engine vs
+        // the flat channel ring, blocking and bucketed — the engine's
+        // resumable state machines must reproduce the same exact sums
+        let len = 103usize;
+        let blocking: fn(usize, usize, &mut AnyTransport,
+                         &mut Vec<f32>) = |_, _, c, buf| {
+            let plan = BucketPlan::from_elems_with_first(buf.len(), 23,
+                                                         7);
+            bucketed_allreduce(Algorithm::Ring, c, buf, &plan).unwrap();
+        };
+        for world in [4usize, 8] {
+            for topo in topologies(world) {
+                let want = run_world(Backend::Channel,
+                                     inputs(world, len), blocking);
+                let plan =
+                    BucketPlan::from_elems_with_first(len, 23, 7);
+                let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+                    Backend::Hier
+                        .world_with(world, Some(&topo))
+                        .unwrap()
+                        .into_iter()
+                        .zip(inputs(world, len))
+                        .map(|(c, mut buf)| {
+                            let plan = plan.clone();
+                            s.spawn(move || {
+                                let mut eng = CommEngine::new(c);
+                                let pend: Vec<(usize, PendingBucket)> =
+                                    plan.ready_order()
+                                        .map(|i| {
+                                            let (a, b) = plan.span(i);
+                                            (i, eng.launch_bucket(
+                                                Algorithm::Hierarchical,
+                                                CollectiveKind::Allreduce,
+                                                buf[a..b].to_vec())
+                                                .unwrap())
+                                        })
+                                        .collect();
+                                for (i, p) in pend {
+                                    let (a, b) = plan.span(i);
+                                    let got = eng.wait(p).unwrap();
+                                    buf[a..b].copy_from_slice(&got);
+                                    eng.recycle(got);
+                                }
+                                buf
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .collect()
+                });
+                for (r, (g, (w, _))) in
+                    got.iter().zip(&want).enumerate()
+                {
+                    for (a, b) in g.iter().zip(w) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "topo={topo} rank={r}: {a} != {b}");
+                    }
+                    assert_eq!(g, &got[0], "replicas diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_hier_zero1_pipeline_bit_identical() {
+        // the engine-driven ZeRO-1 skeleton on hierarchical
+        // collectives (concurrent hier RS → nonlinear shard update →
+        // concurrent hier AG) against the flat channel-ring blocking
+        // reference. The RS sums are exact integers, the update is
+        // applied to identical bits, and AG moves bits verbatim — so
+        // the whole pipeline must agree exactly.
+        let len = 103usize;
+        let blocking: fn(usize, usize, &mut AnyTransport,
+                         &mut Vec<f32>) = |rank, world, c, buf| {
+            let plan = BucketPlan::from_elems(buf.len(), 29);
+            bucketed_reduce_scatter(Algorithm::Ring, c, buf, &plan)
+                .unwrap();
+            for &(a, b) in &plan.rank_ranges(rank, world) {
+                for x in &mut buf[a..b] {
+                    *x = (*x * 0.5 + 1.0) / (x.abs() + 2.0);
+                }
+            }
+            bucketed_all_gather(Algorithm::Ring, c, buf, &plan).unwrap();
+        };
+        for world in [4usize, 8] {
+            for topo in topologies(world) {
+                let want = run_world(Backend::Channel,
+                                     inputs(world, len), blocking);
+                let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+                    Backend::Hier
+                        .world_with(world, Some(&topo))
+                        .unwrap()
+                        .into_iter()
+                        .zip(inputs(world, len))
+                        .enumerate()
+                        .map(|(rank, (c, mut buf))| {
+                            s.spawn(move || {
+                                let plan =
+                                    BucketPlan::from_elems(buf.len(),
+                                                           29);
+                                let mut eng = CommEngine::new(c);
+                                let pend: Vec<(usize, PendingBucket)> =
+                                    plan.ready_order()
+                                        .map(|i| {
+                                            let (a, b) = plan.span(i);
+                                            (i, eng.launch_bucket(
+                                                Algorithm::Hierarchical,
+                                                CollectiveKind::ReduceScatter,
+                                                buf[a..b].to_vec())
+                                                .unwrap())
+                                        })
+                                        .collect();
+                                let mut ag = Vec::new();
+                                for (i, p) in pend {
+                                    let (a, b) = plan.span(i);
+                                    let mut got = eng.wait(p).unwrap();
+                                    let (sa, sb) =
+                                        plan.shard_span(i, rank, world);
+                                    for x in &mut got[sa - a..sb - a] {
+                                        *x = (*x * 0.5 + 1.0)
+                                            / (x.abs() + 2.0);
+                                    }
+                                    ag.push((i, eng.launch_bucket(
+                                        Algorithm::Hierarchical,
+                                        CollectiveKind::AllGather, got)
+                                        .unwrap()));
+                                }
+                                for (i, p) in ag {
+                                    let (a, b) = plan.span(i);
+                                    let got = eng.wait(p).unwrap();
+                                    buf[a..b].copy_from_slice(&got);
+                                    eng.recycle(got);
+                                }
+                                buf
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .collect()
+                });
+                for (r, (g, (w, _))) in
+                    got.iter().zip(&want).enumerate()
+                {
+                    for (a, b) in g.iter().zip(w) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "topo={topo} rank={r}: {a} != {b}");
+                    }
+                }
+            }
+        }
+    }
+}

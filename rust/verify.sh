@@ -52,8 +52,12 @@ cargo test -q --test concurrency_stress
 # broken backend names itself in the failure output. (`cargo test -q`
 # above already ran these once; the per-backend re-run is the explicit
 # conformance gate and costs a few seconds — an acceptable overlap to
-# keep the plain test pass simple and complete.)
-for backend in channel shm tcp; do
+# keep the plain test pass simple and complete.) `hier` runs the
+# hierarchical-collective conformance rows: bit-identity vs the flat
+# ring on even and uneven groupings, per-tier wire-byte accounting
+# against the cost model's schedule formula, and dead-peer teardown on
+# both tiers.
+for backend in channel shm tcp hier; do
     echo "verify.sh: transport conformance [${backend}]"
     cargo test -q --test integration_transport "${backend}::"
 done
@@ -66,9 +70,12 @@ echo "verify.sh: data-plane conformance"
 cargo test -q --test integration_data
 
 # the async-comm-engine overlap gate: measured wall-clock exposed comm
-# with the engine must not exceed the blocking baseline (world 4, shm).
+# with the engine must not exceed the blocking baseline (world 4, shm),
+# and the hierarchical all-reduce must not expose more than the flat
+# ring on the two-tier hier transport (emulated 2 nodes x 4 ranks).
 # Fast (~a dozen emulated steps); exits nonzero on regression, so a
-# change that quietly serializes the engine's pipeline fails CI here
+# change that quietly serializes the engine's pipeline — or a schedule
+# change that makes topology-awareness a pessimization — fails CI here
 echo "verify.sh: rec4 overlap smoke gate"
 cargo bench --bench rec4_overlap -- --smoke
 
