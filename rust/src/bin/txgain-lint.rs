@@ -73,6 +73,7 @@ const SIM_PATHS: &[&str] = &["src/sim/", "src/perfmodel/"];
 /// `// bounded:`-annotated.
 const BOUNDED_FILES: &[&str] = &[
     "src/collectives/transport/tcp.rs",
+    "src/coordinator/rendezvous.rs",
     "src/train/checkpoint.rs",
     "src/data/records.rs",
     "src/data/index.rs",

@@ -35,8 +35,9 @@
 //! schedule, see [`crate::collectives::engine`]).
 //!
 //! Blocking-path tag windows (all below the engine's
-//! `ENGINE_TAG_BASE` and disjoint from the tree's `0x7000` block and
-//! the checkpoint gather's `0x9100` block):
+//! `ENGINE_TAG_BASE` and disjoint from the tree's `0x7000` block, the
+//! checkpoint gather's `0x9100` block, the cross-process checksum
+//! verify's `0x9200` and the worker probe's `0x9300`):
 //!
 //! | window | phase |
 //! | --- | --- |
@@ -47,6 +48,9 @@
 //! | `0x8400` | member→leader shard gather (AG only) |
 //! | `0x8500` | inter (leader) all-gather ring |
 //! | `0x8600` | leader→member full-buffer bcast |
+//! | `0x9100` | checkpoint shard gather (`train::checkpoint`) |
+//! | `0x9200` | cross-process checksum verify (`train::trainer`) |
+//! | `0x9300` | worker transport probe (`coordinator::worker`) |
 //!
 //! This module has no atomics and no tier-routing logic of its own —
 //! it drives any [`Transport`] whose [`Transport::topology`] is

@@ -23,7 +23,11 @@
 //!   length-prefixed frames, per-peer connections and graceful
 //!   dead-peer errors. The first backend where bytes genuinely
 //!   serialize onto a wire, i.e. the 25 GbE tier's shape with
-//!   loopback's numbers.
+//!   loopback's numbers. Beyond the in-process `Backend::world`
+//!   construction, [`TcpTransport::process_mesh`] assembles the same
+//!   mesh *across process boundaries* from a rendezvous-distributed
+//!   address map (handshake-identified connections, retry with
+//!   backoff, bounded timeouts) — the `txgain worker` path.
 //!
 //! The conformance contract (enforced by
 //! `tests/integration_transport.rs` for every backend):
@@ -52,7 +56,7 @@ pub mod tcp;
 pub use channel::{ChannelTransport, World};
 pub use hier::HierTransport;
 pub use shm::ShmTransport;
-pub use tcp::TcpTransport;
+pub use tcp::{MeshConfig, TcpTransport};
 
 use std::fmt;
 use std::str::FromStr;

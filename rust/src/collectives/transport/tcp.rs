@@ -44,12 +44,13 @@
 //! probe only costs one extra `Ok(false)` poll.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufReader, Read, Write};
+use std::io::{BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError,
                       TrySendError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context};
 
@@ -257,6 +258,67 @@ fn spawn_reader(mut reader: BufReader<TcpStream>, tx: SyncSender<Inbound>,
     });
 }
 
+/// Magic word opening every mesh handshake frame ("txGM", LE) — lets
+/// a rank reject a stray dial from something that is not a txgain
+/// worker before trusting anything else in the frame.
+pub const MESH_MAGIC: u32 = 0x4D47_7874;
+
+/// Mesh handshake protocol version; bumped on any frame change so
+/// mixed builds fail the bootstrap with a named error instead of
+/// misparsing each other's frames mid-training.
+pub const MESH_VERSION: u32 = 1;
+
+/// Bootstrap timing knobs for [`TcpTransport::process_mesh`] — the
+/// worker entry point derives these from `config::LaunchConfig`.
+#[derive(Clone, Copy, Debug)]
+pub struct MeshConfig {
+    /// Budget for the whole mesh construction (all dials + accepts).
+    pub connect_timeout: Duration,
+    /// Budget for any single handshake exchange on one stream.
+    pub handshake_timeout: Duration,
+    /// Initial dial-retry backoff; doubles per attempt, capped at 1 s.
+    pub backoff: Duration,
+}
+
+/// Dial `addr`, retrying with doubling backoff until `deadline`: a
+/// slow-starting peer is waited for, a never-starting one is a clean
+/// error naming the address and attempt count — the bugfix for the
+/// old behavior where a missing listener failed on the first refused
+/// connect.
+pub(crate) fn connect_retry(addr: &str, deadline: Instant,
+                            backoff: Duration) -> Result<TcpStream> {
+    const BACKOFF_CAP: Duration = Duration::from_secs(1);
+    let mut wait = backoff.max(Duration::from_millis(1));
+    let mut attempts = 0usize;
+    loop {
+        attempts += 1;
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    bail!("connecting to {addr} failed after \
+                           {attempts} attempt(s): {e}");
+                }
+                std::thread::sleep(wait.min(deadline - now));
+                wait = (wait * 2).min(BACKOFF_CAP);
+            }
+        }
+    }
+}
+
+/// The 16-byte dial-side handshake:
+/// `[MESH_MAGIC][MESH_VERSION][from][to]`, all `u32` LE.
+fn write_hello(stream: &mut TcpStream, from: usize, to: usize)
+    -> std::io::Result<()> {
+    let mut buf = [0u8; 16];
+    buf[0..4].copy_from_slice(&MESH_MAGIC.to_le_bytes());
+    buf[4..8].copy_from_slice(&MESH_VERSION.to_le_bytes());
+    buf[8..12].copy_from_slice(&(from as u32).to_le_bytes());
+    buf[12..16].copy_from_slice(&(to as u32).to_le_bytes());
+    stream.write_all(&buf)
+}
+
 /// Per-rank handle over the loopback mesh.
 pub struct TcpTransport {
     rank: usize,
@@ -311,6 +373,141 @@ impl TcpTransport {
                 stats: TransportStats::default(),
             })
             .collect())
+    }
+
+    /// Build this rank's handle over a *cross-process* mesh.
+    ///
+    /// `addrs[p]` is rank `p`'s advertised listener address (from the
+    /// rendezvous peer map) and `listener` is this rank's own, already
+    /// bound and matching `addrs[rank]`. Every rank dials every lower
+    /// rank and accepts from every higher one — rank 0 only accepts,
+    /// the top rank only dials — so each unordered pair gets exactly
+    /// one connection and the scheme is deadlock-free by induction: a
+    /// dial needs no cooperation beyond the peer's bound listener
+    /// (which existed before rendezvous handed out the address map),
+    /// and the kernel backlog queues it until the peer reaches its
+    /// accept phase.
+    ///
+    /// Unlike the serial loopback [`TcpTransport::world`], accept
+    /// order here is nondeterministic, so every connection opens with
+    /// a handshake frame `[MESH_MAGIC][MESH_VERSION][from][to]`
+    /// answered by `[MESH_MAGIC][rank]` — the mesh knows *which* rank
+    /// each stream belongs to, and a stray, duplicate, or
+    /// version-mismatched dial is a typed error, not a misassembled
+    /// world. Every read during bootstrap sits under
+    /// `MeshConfig::handshake_timeout`, and the whole construction
+    /// under `MeshConfig::connect_timeout`: failures error with the
+    /// missing rank ids, never hang.
+    pub fn process_mesh(rank: usize, world: usize,
+                        listener: TcpListener, addrs: &[String],
+                        mc: &MeshConfig) -> Result<TcpTransport> {
+        ensure!(world > 0 && rank < world,
+                "rank {rank} outside world {world}");
+        ensure!(addrs.len() == world,
+                "rank {rank}: got {} peer addresses for world {world}",
+                addrs.len());
+        let deadline = Instant::now() + mc.connect_timeout;
+        let mut peers: Vec<Option<Peer>> =
+            (0..world).map(|_| None).collect();
+        // dial phase: this rank initiates to every lower rank
+        for (p, addr) in addrs.iter().enumerate().take(rank) {
+            let mut stream = connect_retry(addr, deadline, mc.backoff)
+                .with_context(|| format!("rank {rank}: dialing \
+                                          rank {p}"))?;
+            stream.set_read_timeout(Some(mc.handshake_timeout))
+                .context("arming handshake timeout")?;
+            write_hello(&mut stream, rank, p).with_context(|| {
+                format!("rank {rank}: sending handshake to rank {p}")
+            })?;
+            let mut ack = [0u8; 8];
+            stream.read_exact(&mut ack).with_context(|| {
+                format!("rank {rank}: handshake ack from rank {p} \
+                         timed out or failed")
+            })?;
+            let magic = u32_at(&ack, 0)?;
+            let acked = u32_at(&ack, 4)? as usize;
+            ensure!(magic == MESH_MAGIC && acked == p,
+                    "rank {rank}: bad handshake ack from {addr} \
+                     (magic {magic:#x}, rank {acked}; expected rank \
+                     {p}) — wrong process on that port?");
+            stream.set_read_timeout(None)
+                .context("clearing handshake timeout")?;
+            peers[p] = Some(Peer::new(stream, rank, p)?);
+        }
+        // accept phase: every higher rank dials us
+        listener.set_nonblocking(true)
+            .context("polling mesh listener")?;
+        let mut pending = world - rank - 1;
+        while pending > 0 {
+            let mut stream = match listener.accept() {
+                Ok((s, _)) => s,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        let missing: Vec<String> = ((rank + 1)..world)
+                            .filter(|p| peers[*p].is_none())
+                            .map(|p| p.to_string())
+                            .collect();
+                        bail!("rank {rank}: mesh accept timed out; \
+                               never heard from rank(s) {}",
+                              missing.join(", "));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => bail!("rank {rank}: accepting mesh \
+                                 connection: {e}"),
+            };
+            // a nonblocking listener's accepted streams can inherit
+            // nonblocking mode (platform-dependent); force blocking
+            stream.set_nonblocking(false)
+                .context("restoring blocking mesh stream")?;
+            stream.set_read_timeout(Some(mc.handshake_timeout))
+                .context("arming handshake timeout")?;
+            let mut hello = [0u8; 16];
+            stream.read_exact(&mut hello).with_context(|| {
+                format!("rank {rank}: inbound mesh handshake timed \
+                         out or failed")
+            })?;
+            let magic = u32_at(&hello, 0)?;
+            let version = u32_at(&hello, 4)?;
+            let from = u32_at(&hello, 8)? as usize;
+            let to = u32_at(&hello, 12)? as usize;
+            ensure!(magic == MESH_MAGIC,
+                    "rank {rank}: mesh dial with bad magic {magic:#x} \
+                     — non-txgain process on this port?");
+            ensure!(version == MESH_VERSION,
+                    "rank {rank}: mesh version mismatch (peer \
+                     {version}, ours {MESH_VERSION}) — mixed builds \
+                     in one world");
+            ensure!(to == rank,
+                    "rank {rank}: rank {from} dialed us believing we \
+                     are rank {to} — address map mismatch");
+            ensure!(from > rank && from < world,
+                    "rank {rank}: unexpected mesh dial from rank \
+                     {from} (world {world}; lower ranks are dialed, \
+                     not dialing)");
+            ensure!(peers[from].is_none(),
+                    "rank {rank}: duplicate mesh dial from rank \
+                     {from}");
+            let mut ack = [0u8; 8];
+            ack[0..4].copy_from_slice(&MESH_MAGIC.to_le_bytes());
+            ack[4..8].copy_from_slice(&(rank as u32).to_le_bytes());
+            stream.write_all(&ack).with_context(|| {
+                format!("rank {rank}: acking rank {from}'s dial")
+            })?;
+            stream.set_read_timeout(None)
+                .context("clearing handshake timeout")?;
+            peers[from] = Some(Peer::new(stream, rank, from)?);
+            pending -= 1;
+        }
+        Ok(TcpTransport {
+            rank,
+            world,
+            peers,
+            parked: HashMap::new(),
+            pool: BufferPool::new(),
+            stats: TransportStats::default(),
+        })
     }
 
     fn check_peer(&self, other: usize, verb: &str) -> Result<()> {
@@ -477,7 +674,6 @@ impl Transport for TcpTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     #[test]
     fn roundtrip_over_loopback() {
@@ -639,5 +835,118 @@ mod tests {
         assert!(c0.recv(0, 0).is_err());
         assert!(c0.try_send(0, 0, &[1.0]).is_err());
         assert!(c0.try_recv(0, 0).is_err());
+    }
+
+    fn mesh_cfg() -> MeshConfig {
+        MeshConfig {
+            connect_timeout: Duration::from_secs(10),
+            handshake_timeout: Duration::from_secs(5),
+            backoff: Duration::from_millis(5),
+        }
+    }
+
+    fn bound_listeners(n: usize) -> (Vec<TcpListener>, Vec<String>) {
+        let mut listeners = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..n {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(l.local_addr().unwrap().to_string());
+            listeners.push(l);
+        }
+        (listeners, addrs)
+    }
+
+    #[test]
+    fn process_mesh_assembles_and_exchanges() {
+        let world = 3;
+        let (listeners, addrs) = bound_listeners(world);
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(rank, l)| {
+                let addrs = addrs.clone();
+                std::thread::spawn(move || {
+                    let mut c = TcpTransport::process_mesh(
+                        rank, world, l, &addrs, &mesh_cfg()).unwrap();
+                    // ring exchange: each rank sends its id forward
+                    let next = (rank + 1) % world;
+                    let prev = (rank + world - 1) % world;
+                    c.send_slice(next, 1, &[rank as f32]).unwrap();
+                    assert_eq!(c.recv(prev, 1).unwrap(),
+                               vec![prev as f32]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn process_mesh_times_out_naming_missing_rank() {
+        let (mut listeners, addrs) = bound_listeners(2);
+        let l0 = listeners.remove(0);
+        let mc = MeshConfig {
+            connect_timeout: Duration::from_millis(300),
+            handshake_timeout: Duration::from_millis(200),
+            backoff: Duration::from_millis(5),
+        };
+        // rank 1 never dials: rank 0 must error naming it, not hang
+        let err = TcpTransport::process_mesh(0, 2, l0, &addrs, &mc)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rank(s) 1"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn process_mesh_rejects_bad_magic() {
+        let (mut listeners, mut addrs) = bound_listeners(1);
+        let l0 = listeners.remove(0);
+        addrs.push("127.0.0.1:1".into()); // rank 1 addr, never dialed
+        let target = addrs[0].clone();
+        let t = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&target).unwrap();
+            s.write_all(&[0u8; 16]).unwrap();
+            // rank 0 rejects and drops the stream; EOF here is fine
+            let mut buf = [0u8; 8];
+            let _ = s.read_exact(&mut buf);
+        });
+        let err = TcpTransport::process_mesh(0, 2, l0, &addrs,
+                                             &mesh_cfg())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("magic"), "unexpected: {err}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_waits_out_a_slow_listener() {
+        // reserve a port, drop the listener, rebind it only after a
+        // delay: the dial must retry through the refused window
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        let addr2 = addr.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(120));
+            TcpListener::bind(&addr2).unwrap().accept().unwrap();
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        connect_retry(&addr, deadline, Duration::from_millis(5))
+            .unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_gives_up_cleanly() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        let deadline = Instant::now() + Duration::from_millis(150);
+        let err = connect_retry(&addr, deadline,
+                                Duration::from_millis(5))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(&addr), "unexpected: {err}");
     }
 }

@@ -1,0 +1,147 @@
+//! Launch/rendezvous configuration: the timeout and backoff knobs
+//! behind `txgain worker` / `txgain launch` (the process-per-rank
+//! bootstrap path). All knobs are optional in JSON — configs written
+//! before this section existed keep parsing, with the defaults below.
+
+use anyhow::ensure;
+
+use super::deny_unknown;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Knobs for the rendezvous/bootstrap protocol (see
+/// `coordinator::rendezvous`). One struct, one spelling source: the
+/// JSON keys in [`LaunchConfig::KEYS`] are the same strings
+/// `txgain info` prints, so the CLI help cannot drift from the parser.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaunchConfig {
+    /// Total seconds the leader waits for every rank's hello (and a
+    /// worker waits for the peer map / go signal). An absent rank is a
+    /// named error at this deadline, never a hang.
+    pub rendezvous_timeout_secs: f64,
+    /// Seconds any single bootstrap exchange may take: one rendezvous
+    /// frame read, or one mesh dial's handshake + ack. Bounds how long
+    /// a half-open connection can stall the world.
+    pub handshake_timeout_secs: f64,
+    /// Initial dial-retry backoff, milliseconds. Doubles per attempt
+    /// (capped at 1s) until the connect deadline — a slow-starting
+    /// peer is waited for, a never-starting one is a clean error.
+    pub connect_backoff_ms: u64,
+}
+
+impl Default for LaunchConfig {
+    fn default() -> LaunchConfig {
+        LaunchConfig {
+            rendezvous_timeout_secs: 30.0,
+            handshake_timeout_secs: 10.0,
+            connect_backoff_ms: 50,
+        }
+    }
+}
+
+impl LaunchConfig {
+    /// The section's JSON keys — the single spelling source shared by
+    /// `from_json`'s unknown-field rejection and `txgain info`.
+    pub const KEYS: &'static [&'static str] = &[
+        "rendezvous_timeout_secs",
+        "handshake_timeout_secs",
+        "connect_backoff_ms",
+    ];
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        deny_unknown(v, Self::KEYS)?;
+        let d = LaunchConfig::default();
+        let f = |key: &str, dv: f64| -> Result<f64> {
+            Ok(v.get(key).map(|x| x.as_f64()).transpose()?.unwrap_or(dv))
+        };
+        Ok(LaunchConfig {
+            rendezvous_timeout_secs: f("rendezvous_timeout_secs",
+                                       d.rendezvous_timeout_secs)?,
+            handshake_timeout_secs: f("handshake_timeout_secs",
+                                      d.handshake_timeout_secs)?,
+            connect_backoff_ms: v.get("connect_backoff_ms")
+                .map(|x| x.as_u64()).transpose()?
+                .unwrap_or(d.connect_backoff_ms),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("rendezvous_timeout_secs",
+             json::num(self.rendezvous_timeout_secs)),
+            ("handshake_timeout_secs",
+             json::num(self.handshake_timeout_secs)),
+            ("connect_backoff_ms",
+             json::num(self.connect_backoff_ms as f64)),
+        ])
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.rendezvous_timeout_secs.is_finite()
+                    && self.rendezvous_timeout_secs > 0.0,
+                "rendezvous_timeout_secs must be a positive finite \
+                 number of seconds (got {})",
+                self.rendezvous_timeout_secs);
+        ensure!(self.handshake_timeout_secs.is_finite()
+                    && self.handshake_timeout_secs > 0.0,
+                "handshake_timeout_secs must be a positive finite \
+                 number of seconds (got {})",
+                self.handshake_timeout_secs);
+        ensure!(self.connect_backoff_ms > 0,
+                "connect_backoff_ms must be at least 1 (got {})",
+                self.connect_backoff_ms);
+        Ok(())
+    }
+
+    pub fn rendezvous_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(self.rendezvous_timeout_secs)
+    }
+
+    pub fn handshake_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(self.handshake_timeout_secs)
+    }
+
+    pub fn connect_backoff(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.connect_backoff_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip_through_json() {
+        let l = LaunchConfig::default();
+        let back = LaunchConfig::from_json(&l.to_json()).unwrap();
+        assert_eq!(l, back);
+    }
+
+    #[test]
+    fn absent_keys_take_defaults() {
+        let v = Value::parse("{}").unwrap();
+        let l = LaunchConfig::from_json(&v).unwrap();
+        assert_eq!(l, LaunchConfig::default());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let v = Value::parse(r#"{"rendezvous_port": 9}"#).unwrap();
+        assert!(LaunchConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn timeouts_must_be_positive_and_finite() {
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let mut l = LaunchConfig::default();
+            l.rendezvous_timeout_secs = bad;
+            assert!(l.validate().is_err(), "timeout {bad} accepted");
+            let mut l = LaunchConfig::default();
+            l.handshake_timeout_secs = bad;
+            assert!(l.validate().is_err(), "handshake {bad} accepted");
+        }
+        let mut l = LaunchConfig::default();
+        l.connect_backoff_ms = 0;
+        assert!(l.validate().is_err());
+    }
+}

@@ -12,12 +12,14 @@
 
 pub mod cluster;
 pub mod data;
+pub mod launch;
 pub mod model;
 pub mod presets;
 pub mod training;
 
 pub use cluster::ClusterConfig;
 pub use data::{DataConfig, StagingPolicy};
+pub use launch::LaunchConfig;
 pub use model::ModelConfig;
 pub use training::{ExecMode, TrainingConfig};
 
@@ -47,6 +49,9 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub data: DataConfig,
     pub training: TrainingConfig,
+    /// Rendezvous/bootstrap knobs for process-per-rank runs. Optional
+    /// in JSON (defaults apply), so pre-launch configs keep parsing.
+    pub launch: LaunchConfig,
 }
 
 impl Config {
@@ -65,7 +70,8 @@ impl Config {
     }
 
     pub fn from_json(v: &Value) -> Result<Config> {
-        deny_unknown(v, &["seed", "model", "cluster", "data", "training"])?;
+        deny_unknown(v, &["seed", "model", "cluster", "data", "training",
+                          "launch"])?;
         Ok(Config {
             seed: v.get("seed").map(|x| x.as_u64()).transpose()?
                 .unwrap_or(0xC0FFEE),
@@ -73,6 +79,8 @@ impl Config {
             cluster: ClusterConfig::from_json(v.req("cluster")?)?,
             data: DataConfig::from_json(v.req("data")?)?,
             training: TrainingConfig::from_json(v.req("training")?)?,
+            launch: v.get("launch").map(LaunchConfig::from_json)
+                .transpose()?.unwrap_or_default(),
         })
     }
 
@@ -83,6 +91,7 @@ impl Config {
             ("cluster", self.cluster.to_json()),
             ("data", self.data.to_json()),
             ("training", self.training.to_json()),
+            ("launch", self.launch.to_json()),
         ])
     }
 
@@ -96,7 +105,22 @@ impl Config {
         self.cluster.validate()?;
         self.data.validate()?;
         self.training.validate(&self.model, &self.cluster)?;
+        self.launch.validate()?;
         Ok(())
+    }
+
+    /// Order-sensitive FNV-1a over the canonical JSON rendering. The
+    /// rendezvous protocol compares this across the world: every rank
+    /// joining a run must be training the *same experiment*, and a
+    /// mismatched config is an error at bootstrap, not a silent
+    /// divergence ten thousand steps in.
+    pub fn content_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_json_string().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
     }
 
     /// Total data-parallel world size (one rank per GPU).

@@ -6,8 +6,8 @@
 //! cross-checks them against `artifacts/manifest.json` at load time.
 
 use super::{
-    ClusterConfig, Config, DataConfig, ModelConfig, StagingPolicy,
-    TrainingConfig,
+    ClusterConfig, Config, DataConfig, LaunchConfig, ModelConfig,
+    StagingPolicy, TrainingConfig,
 };
 use super::training::ExecMode;
 
@@ -133,6 +133,7 @@ pub fn quickstart() -> Config {
             zero_stage: 1,
             ..real_training(artifact_batch("tiny"), 30)
         },
+        launch: LaunchConfig::default(),
     }
 }
 
@@ -155,6 +156,7 @@ pub fn e2e_pretrain() -> Config {
             ..small_data(StagingPolicy::LocalCopy)
         },
         training: real_training(artifact_batch("e2e"), 300),
+        launch: LaunchConfig::default(),
     }
 }
 
@@ -183,6 +185,7 @@ pub fn paper_full_scale() -> Config {
             steps: 100,
             ..real_training(184, 100)
         },
+        launch: LaunchConfig::default(),
     }
 }
 

@@ -1,0 +1,139 @@
+//! `txgain launch --workers W`: spawn a local process-per-rank world.
+//!
+//! The parent binds the rendezvous listener itself on `127.0.0.1:0`
+//! (the OS picks the port, so concurrent launches never race on a
+//! pre-chosen one), spawns W `txgain worker` subprocesses pointed at
+//! it, and serves the rendezvous in-process. Training worlds get the
+//! parent's fully resolved config written to
+//! `workdir/launch-config.json` — every child loads the identical
+//! bytes, so the rendezvous config-hash check passes by construction
+//! and a mixed-config world is impossible to launch from here.
+//!
+//! Failure discipline matches the rendezvous protocol's: if the
+//! rendezvous fails (a worker died before saying hello, duplicate
+//! rank, …) the parent kills the remaining children and reports the
+//! root cause; if a worker fails after GO, the parent reaps them all
+//! and names every failed rank.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::config::{Config, LaunchConfig};
+use crate::Result;
+
+use super::rendezvous::{self, PROBE_HASH};
+
+/// Everything `txgain launch` parses off the command line.
+#[derive(Clone, Debug)]
+pub struct LaunchOptions {
+    pub workers: usize,
+    pub workdir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    /// Run the transport conformance probe instead of training.
+    pub probe: bool,
+}
+
+/// Spawn `opts.workers` local worker subprocesses and rendezvous them
+/// into one world. Blocks until every worker has exited.
+pub fn launch_local(cfg: Option<&Config>, opts: &LaunchOptions)
+    -> Result<()> {
+    ensure!(opts.workers > 0, "--workers must be at least 1");
+    let rz: LaunchConfig =
+        cfg.map(|c| c.launch.clone()).unwrap_or_default();
+    std::fs::create_dir_all(&opts.workdir).with_context(|| {
+        format!("creating launch workdir {}", opts.workdir.display())
+    })?;
+
+    // resolved config for training children; the hash the rendezvous
+    // will enforce is computed over these exact bytes on both sides
+    let (config_hash, config_path) = if opts.probe {
+        (PROBE_HASH, None)
+    } else {
+        let cfg = cfg.context(
+            "launch training runs need a config (--config or \
+             --preset); --probe runs without one")?;
+        ensure!(cfg.world_size() == opts.workers,
+                "--workers {} but the config's cluster is {} ranks \
+                 (nodes × gpus_per_node)", opts.workers,
+                cfg.world_size());
+        let path = opts.workdir.join("launch-config.json");
+        std::fs::write(&path, cfg.to_json_string()).with_context(|| {
+            format!("writing {}", path.display())
+        })?;
+        (cfg.content_hash(), Some(path))
+    };
+
+    // the parent owns the rendezvous port: bound before any child
+    // exists, so no child can race it or dial a vacant address
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .context("binding the rendezvous listener")?;
+    let rendezvous_addr = listener
+        .local_addr()
+        .context("reading the rendezvous listener's address")?
+        .to_string();
+    println!("[launch] rendezvous on {rendezvous_addr}, spawning {} \
+              worker(s)", opts.workers);
+
+    let exe = std::env::current_exe()
+        .context("locating the txgain executable to spawn workers")?;
+    let mut children: Vec<(usize, Child)> =
+        Vec::with_capacity(opts.workers);
+    for rank in 0..opts.workers {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .arg(format!("--rank={rank}"))
+            .arg(format!("--world={}", opts.workers))
+            .arg(format!("--rendezvous={rendezvous_addr}"))
+            .arg(format!("--workdir={}", opts.workdir.display()))
+            .arg(format!("--artifacts={}",
+                         opts.artifacts_dir.display()));
+        if let Some(path) = &config_path {
+            cmd.arg(format!("--config={}", path.display()));
+        }
+        if opts.probe {
+            cmd.arg("--probe");
+        }
+        match cmd.spawn() {
+            Ok(child) => children.push((rank, child)),
+            Err(e) => {
+                kill_all(&mut children);
+                bail!("spawning worker rank {rank}: {e}");
+            }
+        }
+    }
+
+    // serve the rendezvous in-process; returns once every rank got GO
+    if let Err(e) = rendezvous::serve(
+        listener, opts.workers, config_hash, &rz) {
+        kill_all(&mut children);
+        return Err(e.context(
+            "rendezvous failed; killed the remaining workers"));
+    }
+
+    // the world is wired and training — reap every worker and name
+    // the failures
+    let mut failed: Vec<String> = Vec::new();
+    for (rank, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failed.push(format!("rank {rank} ({status})")),
+            Err(e) => failed.push(format!("rank {rank} (wait: {e})")),
+        }
+    }
+    ensure!(failed.is_empty(),
+            "worker(s) failed: {} — see their stderr above",
+            failed.join(", "));
+    println!("[launch] all {} worker(s) exited cleanly", opts.workers);
+    Ok(())
+}
+
+/// Best-effort teardown: kill and reap whatever is still running.
+fn kill_all(children: &mut [(usize, Child)]) {
+    for (_, child) in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}

@@ -48,6 +48,38 @@ pub fn run_resumable(cfg: &Config, artifacts_dir: &Path, workdir: &Path,
              perfmodel::simulate for projections");
     std::fs::create_dir_all(workdir)?;
 
+    let (shards, preprocess_secs, stage_secs) =
+        prepare_data(cfg, workdir)?;
+
+    // 3. train — the measured pipeline times ride along so the report
+    // train() returns is complete wherever it lands, not only when the
+    // coordinator remembers to patch it afterwards
+    let opts = TrainOptions {
+        artifacts_dir: artifacts_dir.to_path_buf(),
+        shards,
+        io_delay_us: 0,
+        checkpoint_dir: Some(workdir.join("checkpoints")),
+        resume_from: resume_from.map(Path::to_path_buf),
+        preprocess_secs,
+        stage_secs,
+    };
+    let report = train(cfg, &opts)?;
+
+    // 4. persist
+    report.save(workdir)?;
+    Ok(RunArtifacts { workdir: workdir.to_path_buf(), report })
+}
+
+/// Steps 1–2 of the pipeline: preprocess the corpus under
+/// `workdir/shared`, then stage shards per the staging policy.
+/// Returns `(staged shards, preprocess_secs, stage_secs)`.
+///
+/// Shared with `worker::run_worker`: preprocessing is a pure function
+/// of `(cfg.data, seq, seed)`, so every worker process running this
+/// against its own per-rank workdir materializes bit-identical shards
+/// — the cross-process run needs no shared filesystem.
+pub(crate) fn prepare_data(cfg: &Config, workdir: &Path)
+    -> Result<(Vec<PathBuf>, f64, f64)> {
     // 1. preprocess (rec 1)
     let t0 = Instant::now();
     let shared = workdir.join("shared");
@@ -74,24 +106,7 @@ pub fn run_resumable(cfg: &Config, artifacts_dir: &Path, workdir: &Path,
         StagingPolicy::NetworkDirect => stats.shards.clone(),
     };
     let stage_secs = t1.elapsed().as_secs_f64();
-
-    // 3. train — the measured pipeline times ride along so the report
-    // train() returns is complete wherever it lands, not only when the
-    // coordinator remembers to patch it afterwards
-    let opts = TrainOptions {
-        artifacts_dir: artifacts_dir.to_path_buf(),
-        shards,
-        io_delay_us: 0,
-        checkpoint_dir: Some(workdir.join("checkpoints")),
-        resume_from: resume_from.map(Path::to_path_buf),
-        preprocess_secs,
-        stage_secs,
-    };
-    let report = train(cfg, &opts)?;
-
-    // 4. persist
-    report.save(workdir)?;
-    Ok(RunArtifacts { workdir: workdir.to_path_buf(), report })
+    Ok((shards, preprocess_secs, stage_secs))
 }
 
 /// Simulated-mode entry: project throughput for `cfg` (any scale).

@@ -1,7 +1,19 @@
-//! The run coordinator (leader): owns the end-to-end lifecycle the
-//! paper describes — preprocess once, stage to local storage, spin up
-//! the data-parallel world, train, report.
+//! The run coordinator: owns the end-to-end lifecycle the paper
+//! describes — preprocess once, stage to local storage, spin up the
+//! data-parallel world, train, report.
+//!
+//! Two world shapes share the same trainer:
+//!   * [`leader`] — the in-process world (`txgain train`): one process,
+//!     one thread per rank,
+//!   * [`worker`]/[`launch`] + [`rendezvous`] — the process-per-rank
+//!     world (`txgain worker` / `txgain launch`): W processes
+//!     bootstrapped over a rendezvous into a cross-process tcp mesh.
 
+pub mod launch;
 pub mod leader;
+pub mod rendezvous;
+pub mod worker;
 
+pub use launch::{launch_local, LaunchOptions};
 pub use leader::{run, run_resumable, RunArtifacts};
+pub use worker::{run_worker, WorkerOptions};

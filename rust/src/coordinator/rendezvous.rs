@@ -1,0 +1,585 @@
+//! The rendezvous/bootstrap protocol behind `txgain worker`: how W
+//! independent processes become one wired world.
+//!
+//! One rank (or the `txgain launch` parent) plays *leader*: it listens
+//! on the rendezvous address, collects a HELLO from every rank (rank
+//! id, advertised mesh address, build version, config hash), validates
+//! the world — duplicate rank, config-hash mismatch, version skew and
+//! an absent rank are all typed errors under a deadline, never hangs —
+//! then answers every rank with a WELCOME carrying the full peer
+//! address map. Ranks dial the cross-process tcp mesh
+//! ([`TcpTransport::process_mesh`]), report READY, and the leader's GO
+//! releases the world into training.
+//!
+//! Frame schema (all integers `u32` LE unless noted; see
+//! CONTRIBUTING.md "Process-per-rank & rendezvous"):
+//!
+//! ```text
+//! [RZ_MAGIC][RZ_VERSION][kind][payload_len][payload…]
+//!   kind 1 HELLO    rank, world, config_hash (u64),
+//!                   build string, advertise-addr string
+//!   kind 2 WELCOME  world, then `world` addr strings
+//!   kind 3 READY    (empty)
+//!   kind 4 GO       (empty)
+//!   kind 5 ERROR    UTF-8 message
+//! ```
+//!
+//! Strings are `[len: u32][bytes…]`. Payloads are capped at
+//! [`MAX_PAYLOAD`]; every length-prefixed read is bounds-checked
+//! before allocation (the same discipline as the tcp transport's
+//! frame decode — txgain-lint's bounded-read gate covers this file).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::collectives::transport::tcp::connect_retry;
+use crate::config::LaunchConfig;
+use crate::util::bytes::{u32_at, u64_at};
+use crate::Result;
+
+/// Magic word opening every rendezvous frame ("txRZ", LE).
+pub const RZ_MAGIC: u32 = 0x5A52_7874;
+
+/// Rendezvous protocol version; bumped on any frame change.
+pub const RZ_VERSION: u32 = 1;
+
+/// Config hash used by `txgain worker --probe` / `launch --probe`
+/// worlds, which carry no training config to hash — a sentinel both
+/// sides agree on, so a probe worker joining a training rendezvous
+/// (or vice versa) still fails the hash check with a named error.
+pub const PROBE_HASH: u64 = 0x5052_4f42_4521;
+
+const HELLO: u32 = 1;
+const WELCOME: u32 = 2;
+const READY: u32 = 3;
+const GO: u32 = 4;
+const ERROR: u32 = 5;
+
+/// Frame payload cap: a WELCOME for the 64-rank real-mode ceiling is
+/// well under 2 KiB of addresses, so 64 KiB leaves headroom without
+/// letting a corrupt length field allocate gigabytes.
+const MAX_PAYLOAD: usize = 1 << 16;
+
+fn kind_name(kind: u32) -> &'static str {
+    match kind {
+        HELLO => "hello",
+        WELCOME => "welcome",
+        READY => "ready",
+        GO => "go",
+        ERROR => "error",
+        _ => "unknown",
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, kind: u32, payload: &[u8])
+    -> Result<()> {
+    ensure!(payload.len() <= MAX_PAYLOAD,
+            "rendezvous {} frame payload too large ({} bytes, max \
+             {MAX_PAYLOAD})", kind_name(kind), payload.len());
+    // bounded: payload ≤ MAX_PAYLOAD checked above; 16-byte header
+    let mut buf = Vec::with_capacity(16 + payload.len());
+    buf.extend_from_slice(&RZ_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&RZ_VERSION.to_le_bytes());
+    buf.extend_from_slice(&kind.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    stream.write_all(&buf)
+        .with_context(|| format!("sending rendezvous {} frame",
+                                 kind_name(kind)))
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<(u32, Vec<u8>)> {
+    let mut hdr = [0u8; 16];
+    stream.read_exact(&mut hdr)
+        .context("reading rendezvous frame header (peer died or \
+                  timed out)")?;
+    let magic = u32_at(&hdr, 0)?;
+    let version = u32_at(&hdr, 4)?;
+    let kind = u32_at(&hdr, 8)?;
+    let len = u32_at(&hdr, 12)? as usize;
+    ensure!(magic == RZ_MAGIC,
+            "bad rendezvous magic {magic:#x} — not a txgain \
+             rendezvous peer on this port?");
+    ensure!(version == RZ_VERSION,
+            "rendezvous protocol version mismatch (peer {version}, \
+             ours {RZ_VERSION}) — mixed txgain builds in one world");
+    ensure!(len <= MAX_PAYLOAD,
+            "oversized rendezvous frame ({len} bytes, max \
+             {MAX_PAYLOAD})");
+    // bounded: len ≤ MAX_PAYLOAD checked above
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)
+        .context("reading rendezvous frame payload (peer died \
+                  mid-frame)")?;
+    Ok((kind, payload))
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(b: &[u8], off: &mut usize) -> Result<String> {
+    let len = u32_at(b, *off)? as usize;
+    *off += 4;
+    ensure!(len <= MAX_PAYLOAD && *off + len <= b.len(),
+            "truncated string in rendezvous frame");
+    let s = std::str::from_utf8(&b[*off..*off + len])
+        .context("non-UTF-8 string in rendezvous frame")?
+        .to_string();
+    *off += len;
+    Ok(s)
+}
+
+/// A worker's HELLO, decoded.
+struct Hello {
+    rank: usize,
+    world: usize,
+    config_hash: u64,
+    build: String,
+    advertise: String,
+}
+
+fn encode_hello(rank: usize, world: usize, config_hash: u64,
+                advertise: &str) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&(rank as u32).to_le_bytes());
+    p.extend_from_slice(&(world as u32).to_le_bytes());
+    p.extend_from_slice(&config_hash.to_le_bytes());
+    put_str(&mut p, env!("CARGO_PKG_VERSION"));
+    put_str(&mut p, advertise);
+    p
+}
+
+fn decode_hello(p: &[u8]) -> Result<Hello> {
+    let rank = u32_at(p, 0)? as usize;
+    let world = u32_at(p, 4)? as usize;
+    let config_hash = u64_at(p, 8)?;
+    let mut off = 16;
+    let build = get_str(p, &mut off)?;
+    let advertise = get_str(p, &mut off)?;
+    Ok(Hello { rank, world, config_hash, build, advertise })
+}
+
+fn encode_welcome(addrs: &[String]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&(addrs.len() as u32).to_le_bytes());
+    for a in addrs {
+        put_str(&mut p, a);
+    }
+    p
+}
+
+fn decode_welcome(p: &[u8]) -> Result<Vec<String>> {
+    let world = u32_at(p, 0)? as usize;
+    ensure!(world <= MAX_PAYLOAD / 4,
+            "welcome frame claims absurd world {world}");
+    let mut off = 4;
+    // bounded: world ≤ MAX_PAYLOAD/4 checked above
+    let mut addrs = Vec::with_capacity(world);
+    for _ in 0..world {
+        addrs.push(get_str(p, &mut off)?);
+    }
+    Ok(addrs)
+}
+
+/// Best-effort ERROR broadcast to every connected worker before the
+/// leader bails, so ranks fail fast with the real reason instead of
+/// timing out on a silent leader.
+fn broadcast_error(conns: &mut [Option<(TcpStream, String)>],
+                   msg: &str) {
+    for c in conns.iter_mut().flatten() {
+        let _ = write_frame(&mut c.0, ERROR, msg.as_bytes());
+    }
+}
+
+/// Remaining time before `deadline`, as a read timeout (`None` never
+/// happens — expired deadlines get a floor so the read fails fast
+/// rather than blocking forever, which `set_read_timeout(Some(0))`
+/// would reject).
+fn remaining(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(1))
+}
+
+/// Leader side: collect every rank's HELLO on `listener`, validate
+/// the world, distribute the peer address map, then run the
+/// READY/GO barrier. Returns the address map it distributed.
+///
+/// Every failure mode is a typed error under
+/// `launch.rendezvous_timeout_secs` — a rank that never arrives is
+/// named in the error (and every connected rank is told via an ERROR
+/// frame), a duplicate rank id, config-hash mismatch or build-version
+/// skew likewise. The leader never hangs on a half-open world.
+pub fn serve(listener: TcpListener, world: usize, config_hash: u64,
+             rz: &LaunchConfig) -> Result<Vec<String>> {
+    ensure!(world > 0, "rendezvous world must be nonzero");
+    let deadline = Instant::now() + rz.rendezvous_timeout();
+    listener.set_nonblocking(true)
+        .context("polling rendezvous listener")?;
+    // bounded: sized by the caller's world count, not wire input
+    let mut conns: Vec<Option<(TcpStream, String)>> =
+        (0..world).map(|_| None).collect();
+    let mut joined = 0usize;
+    while joined < world {
+        let mut stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    let missing: Vec<String> = (0..world)
+                        .filter(|r| conns[*r].is_none())
+                        .map(|r| r.to_string())
+                        .collect();
+                    let msg = format!(
+                        "rendezvous timed out after {:.1}s: rank(s) \
+                         {} never arrived ({joined}/{world} joined)",
+                        rz.rendezvous_timeout_secs,
+                        missing.join(", "));
+                    broadcast_error(&mut conns, &msg);
+                    bail!("{msg}");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(e) => bail!("accepting rendezvous connection: {e}"),
+        };
+        stream.set_nonblocking(false)
+            .context("restoring blocking rendezvous stream")?;
+        stream.set_read_timeout(Some(rz.handshake_timeout()))
+            .context("arming rendezvous read timeout")?;
+        let (kind, payload) = read_frame(&mut stream)
+            .context("reading a worker's hello")?;
+        ensure!(kind == HELLO,
+                "expected hello from joining worker, got {} frame",
+                kind_name(kind));
+        let hello = decode_hello(&payload)?;
+        let ours = env!("CARGO_PKG_VERSION");
+        if hello.build != ours {
+            let msg = format!(
+                "build version mismatch: rank {} runs txgain {}, \
+                 leader runs {ours} — one world, one build",
+                hello.rank, hello.build);
+            let _ = write_frame(&mut stream, ERROR, msg.as_bytes());
+            broadcast_error(&mut conns, &msg);
+            bail!("{msg}");
+        }
+        if hello.world != world {
+            let msg = format!(
+                "world mismatch: rank {} believes world is {}, \
+                 leader expects {world}", hello.rank, hello.world);
+            let _ = write_frame(&mut stream, ERROR, msg.as_bytes());
+            broadcast_error(&mut conns, &msg);
+            bail!("{msg}");
+        }
+        if hello.rank >= world {
+            let msg = format!(
+                "rank {} outside world {world}", hello.rank);
+            let _ = write_frame(&mut stream, ERROR, msg.as_bytes());
+            broadcast_error(&mut conns, &msg);
+            bail!("{msg}");
+        }
+        if hello.config_hash != config_hash {
+            let msg = format!(
+                "config mismatch: rank {} hashes its config to \
+                 {:#018x}, leader expects {config_hash:#018x} — \
+                 every rank must run the identical config",
+                hello.rank, hello.config_hash);
+            let _ = write_frame(&mut stream, ERROR, msg.as_bytes());
+            broadcast_error(&mut conns, &msg);
+            bail!("{msg}");
+        }
+        if conns[hello.rank].is_some() {
+            let msg = format!(
+                "duplicate rank {}: two workers joined claiming the \
+                 same rank id", hello.rank);
+            let _ = write_frame(&mut stream, ERROR, msg.as_bytes());
+            broadcast_error(&mut conns, &msg);
+            bail!("{msg}");
+        }
+        conns[hello.rank] = Some((stream, hello.advertise));
+        joined += 1;
+    }
+    let addrs: Vec<String> = conns
+        .iter()
+        .flatten()
+        .map(|(_, a)| a.clone())
+        .collect();
+    let welcome = encode_welcome(&addrs);
+    for (rank, c) in conns.iter_mut().enumerate() {
+        if let Some((stream, _)) = c {
+            write_frame(stream, WELCOME, &welcome).with_context(|| {
+                format!("sending peer map to rank {rank}")
+            })?;
+        }
+    }
+    // mesh-construction barrier: a fresh full window — dialing W-1
+    // peers with handshakes can legitimately take a while
+    let mesh_deadline = Instant::now() + rz.rendezvous_timeout();
+    for (rank, c) in conns.iter_mut().enumerate() {
+        if let Some((stream, _)) = c {
+            stream.set_read_timeout(Some(remaining(mesh_deadline)))
+                .context("arming ready-wait timeout")?;
+            let (kind, _) = read_frame(stream).with_context(|| {
+                format!("waiting for rank {rank} to finish building \
+                         its mesh (ready)")
+            })?;
+            ensure!(kind == READY,
+                    "expected ready from rank {rank}, got {} frame",
+                    kind_name(kind));
+        }
+    }
+    for (rank, c) in conns.iter_mut().enumerate() {
+        if let Some((stream, _)) = c {
+            write_frame(stream, GO, &[]).with_context(|| {
+                format!("releasing rank {rank} (go)")
+            })?;
+        }
+    }
+    Ok(addrs)
+}
+
+/// A worker's live rendezvous connection between WELCOME and GO —
+/// kept open so [`Session::barrier`] can report READY and await the
+/// leader's GO after the mesh is built.
+pub struct Session {
+    stream: TcpStream,
+    rank: usize,
+    go_timeout: Duration,
+}
+
+impl Session {
+    /// READY/GO barrier: tell the leader our mesh is up, wait for the
+    /// whole world to say the same. Consumes the session — the
+    /// rendezvous connection has done its job once GO lands.
+    pub fn barrier(mut self) -> Result<()> {
+        write_frame(&mut self.stream, READY, &[]).with_context(|| {
+            format!("rank {}: reporting ready", self.rank)
+        })?;
+        self.stream.set_read_timeout(Some(self.go_timeout))
+            .context("arming go-wait timeout")?;
+        let (kind, payload) = read_frame(&mut self.stream)
+            .with_context(|| format!(
+                "rank {}: waiting for go (another rank failed its \
+                 mesh, or the leader died?)", self.rank))?;
+        if kind == ERROR {
+            bail!("rank {}: leader aborted the run: {}", self.rank,
+                  String::from_utf8_lossy(&payload));
+        }
+        ensure!(kind == GO,
+                "rank {}: expected go from leader, got {} frame",
+                self.rank, kind_name(kind));
+        Ok(())
+    }
+}
+
+/// Worker side: dial the leader (with retry — a leader that is still
+/// starting is waited for, a dead one is a clean error naming the
+/// address), send HELLO, and block for the WELCOME peer map. Returns
+/// the full address map plus the live [`Session`] for the READY/GO
+/// barrier.
+pub fn join(leader: &str, rank: usize, world: usize,
+            config_hash: u64, advertise: &str, rz: &LaunchConfig)
+    -> Result<(Vec<String>, Session)> {
+    let deadline = Instant::now() + rz.rendezvous_timeout();
+    let mut stream = connect_retry(leader, deadline,
+                                   rz.connect_backoff())
+        .with_context(|| format!(
+            "rank {rank}: dialing rendezvous leader at {leader} \
+             (is the leader up?)"))?;
+    let hello = encode_hello(rank, world, config_hash, advertise);
+    write_frame(&mut stream, HELLO, &hello).with_context(|| {
+        format!("rank {rank}: sending hello to leader")
+    })?;
+    // the leader answers only once the whole world has said hello, so
+    // this wait spans the remaining rendezvous window, not one
+    // handshake
+    stream.set_read_timeout(Some(remaining(deadline)))
+        .context("arming welcome-wait timeout")?;
+    let (kind, payload) = read_frame(&mut stream).with_context(|| {
+        format!("rank {rank}: waiting for the peer map (leader died, \
+                 or another rank never arrived?)")
+    })?;
+    if kind == ERROR {
+        bail!("rank {rank}: rendezvous rejected: {}",
+              String::from_utf8_lossy(&payload));
+    }
+    ensure!(kind == WELCOME,
+            "rank {rank}: expected welcome from leader, got {} frame",
+            kind_name(kind));
+    let addrs = decode_welcome(&payload)?;
+    ensure!(addrs.len() == world,
+            "rank {rank}: leader sent {} peer addresses for world \
+             {world}", addrs.len());
+    let session = Session {
+        stream,
+        rank,
+        go_timeout: rz.rendezvous_timeout(),
+    };
+    Ok((addrs, session))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_rz() -> LaunchConfig {
+        LaunchConfig {
+            rendezvous_timeout_secs: 5.0,
+            handshake_timeout_secs: 2.0,
+            connect_backoff_ms: 5,
+        }
+    }
+
+    fn leader_on_loopback() -> (TcpListener, String) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        (l, addr)
+    }
+
+    #[test]
+    fn hello_and_welcome_roundtrip() {
+        let p = encode_hello(3, 8, 0xDEAD_BEEF, "10.0.0.3:7777");
+        let h = decode_hello(&p).unwrap();
+        assert_eq!(h.rank, 3);
+        assert_eq!(h.world, 8);
+        assert_eq!(h.config_hash, 0xDEAD_BEEF);
+        assert_eq!(h.build, env!("CARGO_PKG_VERSION"));
+        assert_eq!(h.advertise, "10.0.0.3:7777");
+
+        let addrs = vec!["a:1".to_string(), "b:2".to_string()];
+        assert_eq!(decode_welcome(&encode_welcome(&addrs)).unwrap(),
+                   addrs);
+    }
+
+    #[test]
+    fn two_ranks_rendezvous_and_barrier() {
+        let (l, addr) = leader_on_loopback();
+        let rz = fast_rz();
+        let leader = {
+            let rz = rz.clone();
+            std::thread::spawn(move || serve(l, 2, 7, &rz).unwrap())
+        };
+        let workers: Vec<_> = (0..2)
+            .map(|rank| {
+                let (addr, rz) = (addr.clone(), rz.clone());
+                std::thread::spawn(move || {
+                    let adv = format!("127.0.0.1:{}", 9000 + rank);
+                    let (addrs, session) =
+                        join(&addr, rank, 2, 7, &adv, &rz).unwrap();
+                    assert_eq!(addrs[rank], adv);
+                    session.barrier().unwrap();
+                    addrs
+                })
+            })
+            .collect();
+        let maps: Vec<_> =
+            workers.into_iter().map(|w| w.join().unwrap()).collect();
+        assert_eq!(maps[0], maps[1], "ranks saw different peer maps");
+        assert_eq!(leader.join().unwrap(), maps[0]);
+    }
+
+    #[test]
+    fn missing_rank_is_named_in_the_timeout() {
+        let (l, addr) = leader_on_loopback();
+        let mut leader_rz = fast_rz();
+        leader_rz.rendezvous_timeout_secs = 0.4;
+        let leader =
+            std::thread::spawn(move || serve(l, 3, 7, &leader_rz));
+        // only rank 0 and rank 2 show up; rank 1 never does. The
+        // workers wait longer than the leader, so they observe its
+        // ERROR broadcast rather than their own deadline.
+        let w: Vec<_> = [0usize, 2]
+            .into_iter()
+            .map(|rank| {
+                let (addr, rz) = (addr.clone(), fast_rz());
+                std::thread::spawn(move || {
+                    join(&addr, rank, 3, 7, "127.0.0.1:9", &rz)
+                })
+            })
+            .collect();
+        let err = leader.join().unwrap()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rank(s) 1"), "unexpected: {err}");
+        // the connected workers were told, not left to time out
+        for h in w {
+            let err = h.join().unwrap().unwrap_err().to_string();
+            assert!(err.contains("never arrived"),
+                    "worker not notified: {err}");
+        }
+    }
+
+    #[test]
+    fn duplicate_rank_is_rejected() {
+        let (l, addr) = leader_on_loopback();
+        let rz = fast_rz();
+        let leader = {
+            let rz = rz.clone();
+            std::thread::spawn(move || serve(l, 2, 7, &rz))
+        };
+        let w: Vec<_> = (0..2)
+            .map(|_| {
+                let (addr, rz) = (addr.clone(), rz.clone());
+                std::thread::spawn(move || {
+                    join(&addr, 0, 2, 7, "127.0.0.1:9", &rz)
+                })
+            })
+            .collect();
+        let err = leader.join().unwrap()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate rank 0"), "unexpected: {err}");
+        let errs: Vec<String> = w
+            .into_iter()
+            .map(|h| h.join().unwrap().unwrap_err().to_string())
+            .collect();
+        assert!(errs.iter().any(|e| e.contains("duplicate rank")),
+                "no worker saw the duplicate-rank error: {errs:?}");
+    }
+
+    #[test]
+    fn config_hash_mismatch_is_rejected() {
+        let (l, addr) = leader_on_loopback();
+        let rz = fast_rz();
+        let leader = {
+            let rz = rz.clone();
+            std::thread::spawn(move || serve(l, 1, 7, &rz))
+        };
+        let err = join(&addr, 0, 1, 8, "127.0.0.1:9", &rz)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("config mismatch"), "unexpected: {err}");
+        assert!(leader.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn dead_leader_is_a_clean_error() {
+        let (l, addr) = leader_on_loopback();
+        drop(l);
+        let mut rz = fast_rz();
+        rz.rendezvous_timeout_secs = 0.3;
+        let err = join(&addr, 0, 2, 7, "127.0.0.1:9", &rz)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(&addr), "error does not name the \
+                 leader address: {err}");
+    }
+
+    #[test]
+    fn world_mismatch_is_rejected() {
+        let (l, addr) = leader_on_loopback();
+        let rz = fast_rz();
+        let leader = {
+            let rz = rz.clone();
+            std::thread::spawn(move || serve(l, 2, 7, &rz))
+        };
+        let err = join(&addr, 0, 4, 7, "127.0.0.1:9", &rz)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("world"), "unexpected: {err}");
+        assert!(leader.join().unwrap().is_err());
+    }
+}

@@ -1,19 +1,24 @@
 //! `txgain` CLI — launcher for the pretraining framework.
 //!
-//! Subcommands:
+//! Subcommands are listed in [`COMMANDS`] (the single spelling source
+//! behind dispatch, usage and the unknown-command error):
 //!   train   run the real-mode pipeline (preprocess → stage → DP train)
+//!   launch  spawn a local process-per-rank world (W workers + rendezvous)
+//!   worker  one rank of a process-per-rank world
 //!   sim     project throughput at any scale (Fig. 1 sweeps)
 //!   prep    preprocessing/size study only (recommendation 1)
-//!   info    presets, cluster model, paper Table I
+//!   info    presets, cluster model, launch knobs, paper Table I
 //!
 //! Arg parsing is hand-rolled: the build is fully offline (no clap).
+//! Flags accept both `--key value` and `--key=value`; duplicates are
+//! rejected; `--version`/`-V` prints the build version.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use anyhow::{bail, Context};
-use txgain::config::{presets, Config};
-use txgain::coordinator;
+use anyhow::{bail, ensure, Context};
+use txgain::config::{presets, Config, LaunchConfig};
+use txgain::coordinator::{self, LaunchOptions, WorkerOptions};
 use txgain::data::preprocess_corpus;
 use txgain::perfmodel::{sweep_nodes, SimResult};
 use txgain::report;
@@ -27,7 +32,22 @@ fn main() {
     }
 }
 
-/// Minimal `--key value` / `--flag` parser.
+/// Every subcommand with its one-line description — dispatch, usage
+/// and the unknown-command error all read this table, so a new
+/// command cannot reach one without the others.
+const COMMANDS: &[(&str, &str)] = &[
+    ("train", "real-mode pipeline: preprocess -> stage -> DP train"),
+    ("launch", "spawn a local process-per-rank world (W workers)"),
+    ("worker", "one rank of a process-per-rank world"),
+    ("sim", "throughput projection at any scale (Fig. 1)"),
+    ("prep", "preprocessing size study (rec 1)"),
+    ("info", "presets, cluster model, launch knobs, paper Table I"),
+    ("help", "this message"),
+];
+
+/// Minimal flag parser: `--key value`, `--key=value`, or bare
+/// `--flag` (stored as "true"). Duplicate flags are an error — a
+/// repeated `--steps` is a typo'd command line, not an override.
 struct Args {
     flags: HashMap<String, String>,
 }
@@ -39,15 +59,24 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             let Some(key) = a.strip_prefix("--") else {
-                bail!("unexpected argument '{a}'");
+                bail!("unexpected argument '{a}' (flags are --key \
+                       value or --key=value)");
             };
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                flags.insert(key.to_string(), argv[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(key.to_string(), "true".to_string());
+            let (key, value) = if let Some((k, v)) = key.split_once('=')
+            {
                 i += 1;
-            }
+                (k.to_string(), v.to_string())
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--")
+            {
+                let value = argv[i + 1].clone();
+                i += 2;
+                (key.to_string(), value)
+            } else {
+                i += 1;
+                (key.to_string(), "true".to_string())
+            };
+            ensure!(!flags.contains_key(&key), "duplicate flag --{key}");
+            flags.insert(key, value);
         }
         Ok(Args { flags })
     }
@@ -56,10 +85,25 @@ impl Args {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// Presence-style flag (`--probe`, `--sweep`, …).
+    fn get_bool(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
     fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         self.get(key)
             .map(|v| v.parse().with_context(|| format!("--{key}")))
             .transpose()
+    }
+
+    fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    fn require_usize(&self, key: &str) -> Result<usize> {
+        self.get_usize(key)?
+            .with_context(|| format!("missing required flag --{key}"))
     }
 }
 
@@ -103,6 +147,8 @@ fn run() -> Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "launch" => cmd_launch(&args),
+        "worker" => cmd_worker(&args),
         "sim" => cmd_sim(&args),
         "prep" => cmd_prep(&args),
         "info" => cmd_info(),
@@ -110,28 +156,43 @@ fn run() -> Result<()> {
             print_usage();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (try `txgain help`)"),
+        "--version" | "-V" => {
+            println!("txgain {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (have: {})",
+                       COMMANDS.iter().map(|(n, _)| *n)
+                           .collect::<Vec<_>>().join(", ")),
     }
 }
 
 fn print_usage() {
+    println!("txgain — data-parallel LLM pretraining framework\n\n\
+              usage: txgain <command> [flags]   (--key value or \
+              --key=value; txgain --version)\n\ncommands:");
+    for (name, what) in COMMANDS {
+        println!("  {name:<7} {what}");
+    }
     println!(
-        "txgain — data-parallel LLM pretraining framework\n\
+        "\nflags:\n\
+         \x20 train   [--preset quickstart|e2e] [--config file.json]\n\
+         \x20         [--steps N] [--workdir DIR] [--artifacts DIR]\n\
+         \x20         [--resume CKPT]  continue from a checkpoint (mid-\n\
+         \x20         epoch cursor included; bit-identical at same config)\n\
+         \x20 launch  --workers W [--probe | --smoke | --preset/--config …]\n\
+         \x20         [--workdir DIR] [--artifacts DIR]\n\
+         \x20         spawns W `txgain worker` subprocesses, hosts their\n\
+         \x20         rendezvous, waits for the world to finish\n\
+         \x20 worker  --rank N --world W --rendezvous HOST:PORT\n\
+         \x20         [--bind ADDR] [--advertise ADDR] [--host-rendezvous]\n\
+         \x20         [--probe | --preset/--config …] [--workdir DIR]\n\
+         \x20         one rank; normally spawned by `txgain launch`\n\
+         \x20 sim     [--preset paper-full-scale] [--nodes N]\n\
+         \x20         [--model bert-120m|...] [--batch N] [--sweep]\n\
+         \x20 prep    [--samples N] [--workdir DIR]\n\
          \n\
-         usage: txgain <command> [flags]\n\
-         \n\
-         commands:\n\
-           train   real-mode pipeline: preprocess -> stage -> DP train\n\
-                   [--preset quickstart|e2e] [--config file.json]\n\
-                   [--steps N] [--workdir DIR] [--artifacts DIR]\n\
-                   [--resume CKPT]  continue from a checkpoint (mid-\n\
-                   epoch cursor included; bit-identical at same config)\n\
-           sim     throughput projection at any scale (Fig. 1)\n\
-                   [--preset paper-full-scale] [--nodes N]\n\
-                   [--model bert-120m|...] [--batch N] [--sweep]\n\
-           prep    preprocessing size study (rec 1)\n\
-                   [--samples N] [--workdir DIR]\n\
-           info    presets, cluster model, paper Table I"
+         rendezvous knobs live in the config's \"launch\" section — \
+         see `txgain info`."
     );
 }
 
@@ -160,6 +221,84 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `txgain launch`: spawn a local process-per-rank world. `--smoke`
+/// is the CI shape — a quickstart-derived training config sized to
+/// finish in seconds, falling back to the transport probe when no
+/// compiled artifacts exist on the machine.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let workers = args.require_usize("workers")?;
+    let workdir = args
+        .get("workdir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("runs/launch"));
+    let artifacts = artifacts_dir(args);
+    let mut probe = args.get_bool("probe");
+    let cfg: Option<Config> = if probe {
+        None
+    } else if args.get_bool("smoke") {
+        if Manifest::load(&artifacts).is_err() {
+            println!(
+                "[launch] no compiled artifacts under {} — the smoke \
+                 run falls back to the transport probe (run `make \
+                 artifacts` for the training smoke)",
+                artifacts.display());
+            probe = true;
+            None
+        } else {
+            Some(smoke_config(workers)?)
+        }
+    } else {
+        Some(load_config(args)?)
+    };
+    let opts = LaunchOptions {
+        workers,
+        workdir,
+        artifacts_dir: artifacts,
+        probe,
+    };
+    coordinator::launch_local(cfg.as_ref(), &opts)
+}
+
+/// The `--smoke` training config: quickstart's tiny model over
+/// `workers` single-GPU nodes on the tcp transport, few steps, small
+/// corpus — the cross-process pipeline end to end inside a CI time
+/// budget.
+fn smoke_config(workers: usize) -> Result<Config> {
+    let mut cfg = presets::quickstart();
+    cfg.cluster.nodes = workers;
+    cfg.cluster.gpus_per_node = 1;
+    cfg.training.steps = 4;
+    cfg.training.log_every = 1;
+    cfg.training.checkpoint_every = 0;
+    cfg.training.transport = "tcp".to_string();
+    cfg.data.corpus_samples = 256;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// `txgain worker`: one rank of a process-per-rank world. Normally
+/// spawned by `txgain launch`; run by hand (with one rank passing
+/// `--host-rendezvous`) to assemble a world across shells or hosts.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let probe = args.get_bool("probe");
+    let wo = WorkerOptions {
+        rank: args.require_usize("rank")?,
+        world: args.require_usize("world")?,
+        rendezvous: args.require("rendezvous")?.to_string(),
+        bind: args.get("bind").unwrap_or("127.0.0.1:0").to_string(),
+        advertise: args.get("advertise").map(str::to_string),
+        workdir: args
+            .get("workdir")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("runs/worker")),
+        artifacts_dir: artifacts_dir(args),
+        host_rendezvous: args.get_bool("host-rendezvous"),
+        probe,
+    };
+    let cfg = if probe { None } else { Some(load_config(args)?) };
+    coordinator::run_worker(cfg.as_ref(), &wo)
+}
+
 fn cmd_sim(args: &Args) -> Result<()> {
     let mut cfg = presets::paper_full_scale();
     if let Some(name) = args.get("preset") {
@@ -176,7 +315,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(batch) = args.get_usize("batch")? {
         cfg.training.batch_per_gpu = batch;
     }
-    if args.get("sweep").is_some() {
+    if args.get_bool("sweep") {
         let nodes = [1usize, 2, 4, 8, 16, 32, 64, 128];
         let sweep = sweep_nodes(&cfg, &nodes);
         println!("{}", report::fig1_table(&cfg.model.variant, &sweep)
@@ -241,6 +380,16 @@ fn cmd_info() -> Result<()> {
             m.param_count() as f64 / 1e6,
             presets::artifact_batch(&m.variant)
         );
+    }
+    println!("\nlaunch knobs (config section \"launch\" — the \
+              process-per-rank bootstrap; see CONTRIBUTING.md):");
+    let defaults = LaunchConfig::default().to_json();
+    for &key in LaunchConfig::KEYS {
+        let default = defaults
+            .get(key)
+            .map(|v| v.to_string())
+            .unwrap_or_default();
+        println!("  launch.{key:<26} default {default}");
     }
     Ok(())
 }

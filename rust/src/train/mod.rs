@@ -11,4 +11,4 @@ pub mod trainer;
 pub use metrics::{RunReport, StepRecord};
 pub use optimizer::AdamW;
 pub use schedule::LrSchedule;
-pub use trainer::{train, TrainOptions};
+pub use trainer::{train, train_worker, TrainOptions};

@@ -13,6 +13,13 @@
 //! way replicas end every step bit-identical, asserted at the end of
 //! every run (the fundamental DDP invariant).
 //!
+//! Two entry points share one per-rank step loop ([`run_rank`]):
+//! [`train`] spawns the whole world as threads in this process, while
+//! [`train_worker`] drives a *single* rank over an externally wired
+//! cross-process transport (the `txgain worker` path) — there the DDP
+//! invariant is asserted over the wire, rank 0 collecting every
+//! rank's parameter checksum before any process exits.
+//!
 //! The data plane is *streaming* (PR 4): shards are opened header-only
 //! into a [`DatasetIndex`], each rank reads samples through a
 //! `data.cache_mb`-budgeted [`BlockCache`], and epoch order comes from
@@ -326,8 +333,36 @@ fn checksum(params: &HostParams) -> u64 {
     h
 }
 
-/// Run real-mode data-parallel training; returns rank 0's report.
-pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
+/// Everything [`train`] resolves *before* any rank starts: artifact
+/// metadata, the dataset index, the (possibly auto-tuned) collective
+/// plan, the resume checkpoint. Computed once by [`prepare`] and
+/// shared by every rank — whether those ranks are threads of this
+/// process ([`train`]) or independent worker processes each calling
+/// [`train_worker`]. Everything here is a deterministic function of
+/// `(cfg, opts)`, which is what makes the cross-process world's
+/// per-rank `prepare` calls agree without any extra coordination.
+#[derive(Clone)]
+struct RunPlan {
+    meta: VariantMeta,
+    index: Arc<DatasetIndex>,
+    shard_counts: Arc<Vec<u64>>,
+    masker: Masker,
+    algo: Algorithm,
+    zero: bool,
+    bucket_plan: Option<BucketPlan>,
+    resume: Option<Arc<Checkpoint>>,
+    schedule: LrSchedule,
+    batch: usize,
+    total_steps: usize,
+    world: usize,
+    backend: Backend,
+    topo: Option<Topology>,
+}
+
+/// Validate `cfg`, cross-check the artifact, open the dataset and
+/// resolve the collective plan — the serial prologue shared by both
+/// trainer entry points.
+fn prepare(cfg: &Config, opts: &TrainOptions) -> Result<RunPlan> {
     ensure!(cfg.training.mode == ExecMode::Real,
             "train() is the real-mode entry; use perfmodel::simulate \
              for simulated mode");
@@ -490,325 +525,320 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
         })
         .transpose()?;
 
-    let comms = backend.world_with(world, topo.as_ref())?;
+    Ok(RunPlan {
+        meta,
+        index,
+        shard_counts,
+        masker,
+        algo,
+        zero,
+        bucket_plan,
+        resume,
+        schedule,
+        batch,
+        total_steps,
+        world,
+        backend,
+        topo,
+    })
+}
+
+/// Wrap a wired transport in the configured comm driver: hand it to
+/// the async comm engine (default) or keep it inline for the blocking
+/// reference path.
+fn make_driver(cfg: &Config, comm: AnyTransport) -> Driver {
+    if cfg.training.comm_engine {
+        Driver::Engine(CommEngine::new(comm))
+    } else {
+        Driver::Blocking(comm)
+    }
+}
+
+/// One rank's whole training run: engine + optimizer + loader setup,
+/// then the epoch/step loop. The shared body behind both the
+/// thread-per-rank world ([`train`]) and the process-per-rank world
+/// ([`train_worker`]) — the only difference between those is who
+/// wired the transport inside `driver`.
+fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
+            rank: usize, driver: &mut Driver) -> Result<RankOutcome> {
+    let world = plan.world;
+    let batch = plan.batch;
+    let total_steps = plan.total_steps;
+    let variant = cfg.model.variant.as_str();
+    let meta = &plan.meta;
+    let engine = Engine::load(&opts.artifacts_dir, variant)
+        .with_context(|| format!("rank {rank} engine"))?;
+    let mut params = HostParams::init(meta, cfg.seed);
+    // ZeRO-1: this rank's AdamW owns (and sizes m/v to) only its
+    // shard of every bucket; ZeRO-0 owns the full flat range
+    let mut opt = match (&plan.bucket_plan, plan.zero) {
+        (Some(bp), true) => AdamW::sharded(
+            &cfg.training,
+            bp.rank_ranges(rank, world)),
+        _ => AdamW::new(&cfg.training, meta.grad_len),
+    };
+    // the rank's byte-budgeted window onto the corpus; shared by its
+    // loader workers, reused across epochs so a warm cache survives
+    // epoch boundaries
+    let cache = Arc::new(BlockCache::new(
+        plan.index.clone(), cfg.data.cache_mb)?);
+    // scratch flat parameter vector for the ZeRO-1 all-gather
+    // (collectives run on flat buffers)
+    let mut flat_params =
+        vec![0.0f32; if plan.zero { meta.grad_len } else { 0 }];
+    let mut records = Vec::new();
+    let inv_world = 1.0 / world as f32;
+
+    let mut step = 0usize;
+    let mut epoch = 0u64;
+    // the data cursor resumes exactly where the checkpoint left it:
+    // same epoch, same step within the epoch — the loader
+    // fast-forwards by index arithmetic, no data is replayed
+    let mut epoch_start_step = 0usize;
+    if let Some(ck) = &plan.resume {
+        params = ck.params.clone();
+        let (m, v) = match (&plan.bucket_plan, plan.zero) {
+            (Some(bp), true) => {
+                let ranges = bp.rank_ranges(rank, world);
+                (extract_shard(&ck.m, &ranges)?,
+                 extract_shard(&ck.v, &ranges)?)
+            }
+            _ => (ck.m.clone(), ck.v.clone()),
+        };
+        opt.restore(ck.progress.step, m, v);
+        step = ck.progress.step as usize;
+        epoch = ck.progress.epoch;
+        epoch_start_step = ck.progress.epoch_step as usize;
+    }
+
+    'outer: while step < total_steps {
+        let wplan = Arc::new(WindowedPlan::build(
+            &plan.shard_counts, world, epoch, cfg.seed,
+            cfg.data.shuffle_window)?);
+        // remainder roll-in (data-plane item (c)): samples the
+        // previous epoch left undelivered lead this epoch's stream
+        // instead of being dropped. The carry is a closed form of
+        // (epoch, per, batch), so resuming into any epoch rebuilds
+        // exactly the right prefix.
+        let carry_from = if wplan.carry_in(batch) > 0 {
+            Some(Arc::new(WindowedPlan::build(
+                &plan.shard_counts, world, epoch - 1,
+                cfg.seed, cfg.data.shuffle_window)?))
+        } else {
+            None
+        };
+        let mut loader = LoaderPool::spawn_streaming_carry(
+            cache.clone(), wplan, carry_from, rank,
+            batch, plan.masker.clone(), cfg.seed,
+            cfg.data.loaders_per_gpu,
+            cfg.data.prefetch_batches,
+            opts.io_delay_us, epoch_start_step,
+            cfg.data.prefetch,
+        )?;
+        epoch_start_step = 0; // only the resumed epoch
+        // baselines are zero BY CONSTRUCTION (the pool's stats are
+        // fresh); snapshotting here instead would race worker
+        // prefetch and drop whatever was read before the snapshot
+        // from every delta
+        let mut last_wait = 0u64;
+        let (mut last_bytes, mut last_hits, mut last_misses) =
+            (0u64, 0u64, 0u64);
+        while let Some(b) = loader.next_batch() {
+            if step >= total_steps {
+                break 'outer;
+            }
+            let t_step = Instant::now();
+            // ord: Relaxed — wait_ns is a monotonic advisory counter;
+            // no memory is published through it
+            let wait_now =
+                loader.stats.wait_ns.load(Ordering::Relaxed);
+            let loader_wait = (wait_now - last_wait) as f64 * 1e-9;
+            last_wait = wait_now;
+            // disk-side view of the same interval. The workers
+            // prefetch ahead, so per-step attribution is the traffic
+            // since the last record, not strictly this batch's —
+            // totals are exact.
+            let (io_bytes, hits, misses, _) =
+                loader.stats.io.snapshot();
+            let loader_bytes = io_bytes - last_bytes;
+            let lookups =
+                (hits - last_hits) + (misses - last_misses);
+            let cache_hit_rate = if lookups == 0 {
+                1.0
+            } else {
+                (hits - last_hits) as f64 / lookups as f64
+            };
+            (last_bytes, last_hits, last_misses) =
+                (io_bytes, hits, misses);
+
+            let t_exec = Instant::now();
+            let mut out = engine.execute_step(
+                &params, &b.input_ids, &b.attn_mask, &b.labels)?;
+            let compute_secs = t_exec.elapsed().as_secs_f64();
+
+            // gradient sync + optimizer update: the blocking path
+            // runs the collectives inline; the engine path launches
+            // buckets onto the progress thread and interleaves the
+            // per-bucket optimizer with in-flight comm — same math,
+            // measured overlap
+            let stats_before = driver.stats();
+            let lr = plan.schedule.lr(step);
+            let outcome = match driver {
+                Driver::Blocking(comm) => {
+                    sync_and_step_blocking(
+                        comm, plan.algo, plan.bucket_plan.as_ref(),
+                        plan.zero, &mut out.grads, out.loss,
+                        inv_world, &mut opt, &mut params,
+                        meta, &mut flat_params, lr)?
+                }
+                Driver::Engine(eng) => {
+                    sync_and_step_engine(
+                        eng, plan.algo, plan.bucket_plan.as_ref(),
+                        plan.zero, &mut out.grads, out.loss,
+                        inv_world, &mut opt, &mut params,
+                        meta, &mut flat_params, lr,
+                        rank, world)?
+                }
+            };
+
+            // the step's measured traffic: both the f32 buffer bytes
+            // the host moved and the modeled bf16 wire bytes the α-β
+            // model prices (see TransportStats). The engine refreshes
+            // its snapshot at every op completion, and everything
+            // launched this step has been waited — the delta is exact
+            // in both modes.
+            let step_traffic = driver.stats().since(&stats_before);
+
+            if rank == 0 {
+                if cfg.training.log_every > 0
+                    && step % cfg.training.log_every == 0
+                {
+                    println!(
+                        "[train] step {step:>5} loss \
+                         {:.4} lr {:.2e} ({:.2}s/step)",
+                        outcome.loss,
+                        lr,
+                        t_step.elapsed().as_secs_f64()
+                    );
+                }
+                records.push(StepRecord {
+                    step,
+                    loss: outcome.loss,
+                    lr,
+                    step_secs: t_step.elapsed().as_secs_f64()
+                        + loader_wait,
+                    compute_secs,
+                    loader_wait_secs: loader_wait,
+                    comm_secs: outcome.comm_secs,
+                    comm_exposed_secs: outcome.comm_exposed_secs,
+                    comm_buffer_bytes: step_traffic.buffer_bytes_sent,
+                    comm_wire_bytes: step_traffic.wire_bytes_sent,
+                    loader_bytes,
+                    cache_hit_rate,
+                });
+            }
+            // checkpointing: with sharded optimizer state EVERY rank
+            // participates (the m/v shards are gathered to rank 0 and
+            // merged into one atomic, world-size-independent file);
+            // replicated state saves from rank 0 alone as before. The
+            // saved progress carries the data cursor: global step,
+            // epoch, and steps completed this epoch.
+            if cfg.training.checkpoint_every > 0
+                && (step + 1) % cfg.training.checkpoint_every == 0
+            {
+                if let Some(dir) = &opts.checkpoint_dir {
+                    let path = dir.join(format!(
+                        "step-{:06}.ckpt",
+                        step + 1
+                    ));
+                    let progress = TrainProgress {
+                        corpus: plan.index.len() as u64,
+                        world: world as u64,
+                        batch: batch as u64,
+                        window: cfg.data.shuffle_window as u64,
+                        ..TrainProgress::new(
+                            (step + 1) as u64,
+                            epoch,
+                            (b.step + 1) as u64,
+                        )
+                    };
+                    let (_, m, v) = opt.state();
+                    match (&plan.bucket_plan, plan.zero) {
+                        (Some(bp), true) => {
+                            // the shard gather is a blocking
+                            // collective: the engine lends the wire
+                            // back for its duration
+                            match driver {
+                                Driver::Blocking(comm) => {
+                                    super::checkpoint::save_sharded(
+                                        &path, comm, bp,
+                                        progress, &params,
+                                        m, v,
+                                    )?
+                                }
+                                Driver::Engine(eng) => {
+                                    let mut t = eng.checkout()?;
+                                    let saved =
+                                        super::checkpoint::save_sharded(
+                                            &path, &mut t,
+                                            bp, progress,
+                                            &params, m, v,
+                                        );
+                                    eng.checkin(t);
+                                    saved?
+                                }
+                            }
+                        }
+                        _ if rank == 0 => {
+                            super::checkpoint::save(
+                                &path, progress, &params, m, v,
+                            )?
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            step += 1;
+        }
+        // the stream ended: a finished epoch and a dead loader look
+        // the same from next_batch — ask
+        if let Some(e) = loader.take_error() {
+            return Err(e.context(format!(
+                "rank {rank} loader died in epoch {epoch}")));
+        }
+        // fold the tail interval (IO after the last delta was taken)
+        // into the epoch's last record, so epoch totals are exact;
+        // only the prefetch discarded by an early run end
+        // (break 'outer) goes unattributed
+        if rank == 0 {
+            if let Some(last) = records.last_mut() {
+                let (io_bytes, _, _, _) = loader.stats.io.snapshot();
+                last.loader_bytes += io_bytes - last_bytes;
+            }
+        }
+        epoch += 1;
+    }
+    Ok(RankOutcome {
+        rank,
+        records,
+        param_checksum: checksum(&params),
+    })
+}
+
+/// Run real-mode data-parallel training; returns rank 0's report.
+pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
+    let plan = prepare(cfg, opts)?;
+    let world = plan.world;
+    let comms = plan.backend.world_with(world, plan.topo.as_ref())?;
     let outcomes: Vec<Result<RankOutcome>> = std::thread::scope(|scope| {
         let handles: Vec<_> = comms
             .into_iter()
             .enumerate()
             .map(|(rank, comm)| {
-                let index = index.clone();
-                let shard_counts = shard_counts.clone();
-                let masker = masker.clone();
-                let cfg = cfg.clone();
-                let opts = opts.clone();
-                let meta = meta.clone();
-                let bucket_plan = bucket_plan.clone();
-                let resume = resume.clone();
+                let plan = plan.clone();
                 scope.spawn(move || -> Result<RankOutcome> {
-                    let engine = Engine::load(&opts.artifacts_dir, variant)
-                        .with_context(|| format!("rank {rank} engine"))?;
-                    // comm driver: hand the transport to the async
-                    // comm engine (default) or keep it inline for the
-                    // blocking reference path
-                    let mut driver = if cfg.training.comm_engine {
-                        Driver::Engine(CommEngine::new(comm))
-                    } else {
-                        Driver::Blocking(comm)
-                    };
-                    let mut params = HostParams::init(&meta, cfg.seed);
-                    // ZeRO-1: this rank's AdamW owns (and sizes m/v
-                    // to) only its shard of every bucket; ZeRO-0 owns
-                    // the full flat range
-                    let mut opt = match (&bucket_plan, zero) {
-                        (Some(plan), true) => AdamW::sharded(
-                            &cfg.training,
-                            plan.rank_ranges(rank, world)),
-                        _ => AdamW::new(&cfg.training, meta.grad_len),
-                    };
-                    // the rank's byte-budgeted window onto the corpus;
-                    // shared by its loader workers, reused across
-                    // epochs so a warm cache survives epoch boundaries
-                    let cache = Arc::new(BlockCache::new(
-                        index.clone(), cfg.data.cache_mb)?);
-                    // scratch flat parameter vector for the ZeRO-1
-                    // all-gather (collectives run on flat buffers)
-                    let mut flat_params =
-                        vec![0.0f32; if zero { meta.grad_len } else { 0 }];
-                    let mut records = Vec::new();
-                    let inv_world = 1.0 / world as f32;
-
-                    let mut step = 0usize;
-                    let mut epoch = 0u64;
-                    // the data cursor resumes exactly where the
-                    // checkpoint left it: same epoch, same step within
-                    // the epoch — the loader fast-forwards by index
-                    // arithmetic, no data is replayed
-                    let mut epoch_start_step = 0usize;
-                    if let Some(ck) = &resume {
-                        params = ck.params.clone();
-                        let (m, v) = match (&bucket_plan, zero) {
-                            (Some(plan), true) => {
-                                let ranges =
-                                    plan.rank_ranges(rank, world);
-                                (extract_shard(&ck.m, &ranges)?,
-                                 extract_shard(&ck.v, &ranges)?)
-                            }
-                            _ => (ck.m.clone(), ck.v.clone()),
-                        };
-                        opt.restore(ck.progress.step, m, v);
-                        step = ck.progress.step as usize;
-                        epoch = ck.progress.epoch;
-                        epoch_start_step =
-                            ck.progress.epoch_step as usize;
-                    }
-
-                    'outer: while step < total_steps {
-                        let plan = Arc::new(WindowedPlan::build(
-                            &shard_counts, world, epoch, cfg.seed,
-                            cfg.data.shuffle_window)?);
-                        // remainder roll-in (data-plane item (c)):
-                        // samples the previous epoch left undelivered
-                        // lead this epoch's stream instead of being
-                        // dropped. The carry is a closed form of
-                        // (epoch, per, batch), so resuming into any
-                        // epoch rebuilds exactly the right prefix.
-                        let carry_from = if plan.carry_in(batch) > 0 {
-                            Some(Arc::new(WindowedPlan::build(
-                                &shard_counts, world, epoch - 1,
-                                cfg.seed, cfg.data.shuffle_window)?))
-                        } else {
-                            None
-                        };
-                        let mut loader =
-                            LoaderPool::spawn_streaming_carry(
-                                cache.clone(), plan, carry_from, rank,
-                                batch, masker.clone(), cfg.seed,
-                                cfg.data.loaders_per_gpu,
-                                cfg.data.prefetch_batches,
-                                opts.io_delay_us, epoch_start_step,
-                                cfg.data.prefetch,
-                            )?;
-                        epoch_start_step = 0; // only the resumed epoch
-                        // baselines are zero BY CONSTRUCTION (the
-                        // pool's stats are fresh); snapshotting here
-                        // instead would race worker prefetch and drop
-                        // whatever was read before the snapshot from
-                        // every delta
-                        let mut last_wait = 0u64;
-                        let (mut last_bytes, mut last_hits,
-                             mut last_misses) = (0u64, 0u64, 0u64);
-                        while let Some(b) = loader.next_batch() {
-                            if step >= total_steps {
-                                break 'outer;
-                            }
-                            let t_step = Instant::now();
-                            // ord: Relaxed — wait_ns is a monotonic
-                            // advisory counter; no memory is published
-                            // through it
-                            let wait_now = loader
-                                .stats
-                                .wait_ns
-                                .load(Ordering::Relaxed);
-                            let loader_wait =
-                                (wait_now - last_wait) as f64 * 1e-9;
-                            last_wait = wait_now;
-                            // disk-side view of the same interval. The
-                            // workers prefetch ahead, so per-step
-                            // attribution is the traffic since the
-                            // last record, not strictly this batch's —
-                            // totals are exact.
-                            let (io_bytes, hits, misses, _) =
-                                loader.stats.io.snapshot();
-                            let loader_bytes = io_bytes - last_bytes;
-                            let lookups =
-                                (hits - last_hits) + (misses - last_misses);
-                            let cache_hit_rate = if lookups == 0 {
-                                1.0
-                            } else {
-                                (hits - last_hits) as f64
-                                    / lookups as f64
-                            };
-                            (last_bytes, last_hits, last_misses) =
-                                (io_bytes, hits, misses);
-
-                            let t_exec = Instant::now();
-                            let mut out = engine.execute_step(
-                                &params, &b.input_ids, &b.attn_mask,
-                                &b.labels)?;
-                            let compute_secs =
-                                t_exec.elapsed().as_secs_f64();
-
-                            // gradient sync + optimizer update: the
-                            // blocking path runs the collectives
-                            // inline; the engine path launches buckets
-                            // onto the progress thread and interleaves
-                            // the per-bucket optimizer with in-flight
-                            // comm — same math, measured overlap
-                            let stats_before = driver.stats();
-                            let lr = schedule.lr(step);
-                            let outcome = match &mut driver {
-                                Driver::Blocking(comm) => {
-                                    sync_and_step_blocking(
-                                        comm, algo, bucket_plan.as_ref(),
-                                        zero, &mut out.grads, out.loss,
-                                        inv_world, &mut opt, &mut params,
-                                        &meta, &mut flat_params, lr)?
-                                }
-                                Driver::Engine(eng) => {
-                                    sync_and_step_engine(
-                                        eng, algo, bucket_plan.as_ref(),
-                                        zero, &mut out.grads, out.loss,
-                                        inv_world, &mut opt, &mut params,
-                                        &meta, &mut flat_params, lr,
-                                        rank, world)?
-                                }
-                            };
-
-                            // the step's measured traffic: both the
-                            // f32 buffer bytes the host moved and the
-                            // modeled bf16 wire bytes the α-β model
-                            // prices (see TransportStats). The engine
-                            // refreshes its snapshot at every op
-                            // completion, and everything launched this
-                            // step has been waited — the delta is
-                            // exact in both modes.
-                            let step_traffic =
-                                driver.stats().since(&stats_before);
-
-                            if rank == 0 {
-                                if cfg.training.log_every > 0
-                                    && step % cfg.training.log_every == 0
-                                {
-                                    println!(
-                                        "[train] step {step:>5} loss \
-                                         {:.4} lr {:.2e} ({:.2}s/step)",
-                                        outcome.loss,
-                                        lr,
-                                        t_step.elapsed().as_secs_f64()
-                                    );
-                                }
-                                records.push(StepRecord {
-                                    step,
-                                    loss: outcome.loss,
-                                    lr,
-                                    step_secs: t_step
-                                        .elapsed()
-                                        .as_secs_f64()
-                                        + loader_wait,
-                                    compute_secs,
-                                    loader_wait_secs: loader_wait,
-                                    comm_secs: outcome.comm_secs,
-                                    comm_exposed_secs: outcome
-                                        .comm_exposed_secs,
-                                    comm_buffer_bytes: step_traffic
-                                        .buffer_bytes_sent,
-                                    comm_wire_bytes: step_traffic
-                                        .wire_bytes_sent,
-                                    loader_bytes,
-                                    cache_hit_rate,
-                                });
-                            }
-                            // checkpointing: with sharded optimizer
-                            // state EVERY rank participates (the m/v
-                            // shards are gathered to rank 0 and merged
-                            // into one atomic, world-size-independent
-                            // file); replicated state saves from rank 0
-                            // alone as before. The saved progress
-                            // carries the data cursor: global step,
-                            // epoch, and steps completed this epoch.
-                            if cfg.training.checkpoint_every > 0
-                                && (step + 1)
-                                    % cfg.training.checkpoint_every
-                                    == 0
-                            {
-                                if let Some(dir) = &opts.checkpoint_dir
-                                {
-                                    let path = dir.join(format!(
-                                        "step-{:06}.ckpt",
-                                        step + 1
-                                    ));
-                                    let progress = TrainProgress {
-                                        corpus: index.len() as u64,
-                                        world: world as u64,
-                                        batch: batch as u64,
-                                        window: cfg
-                                            .data
-                                            .shuffle_window
-                                            as u64,
-                                        ..TrainProgress::new(
-                                            (step + 1) as u64,
-                                            epoch,
-                                            (b.step + 1) as u64,
-                                        )
-                                    };
-                                    let (_, m, v) = opt.state();
-                                    match (&bucket_plan, zero) {
-                                        (Some(plan), true) => {
-                                            // the shard gather is a
-                                            // blocking collective: the
-                                            // engine lends the wire
-                                            // back for its duration
-                                            match &mut driver {
-                                                Driver::Blocking(comm) => {
-                                                    super::checkpoint::save_sharded(
-                                                        &path, comm, plan,
-                                                        progress, &params,
-                                                        m, v,
-                                                    )?
-                                                }
-                                                Driver::Engine(eng) => {
-                                                    let mut t =
-                                                        eng.checkout()?;
-                                                    let saved =
-                                                        super::checkpoint::save_sharded(
-                                                            &path, &mut t,
-                                                            plan, progress,
-                                                            &params, m, v,
-                                                        );
-                                                    eng.checkin(t);
-                                                    saved?
-                                                }
-                                            }
-                                        }
-                                        _ if rank == 0 => {
-                                            super::checkpoint::save(
-                                                &path, progress,
-                                                &params, m, v,
-                                            )?
-                                        }
-                                        _ => {}
-                                    }
-                                }
-                            }
-                            step += 1;
-                        }
-                        // the stream ended: a finished epoch and a dead
-                        // loader look the same from next_batch — ask
-                        if let Some(e) = loader.take_error() {
-                            return Err(e.context(format!(
-                                "rank {rank} loader died in epoch \
-                                 {epoch}")));
-                        }
-                        // fold the tail interval (IO after the last
-                        // delta was taken) into the epoch's last
-                        // record, so epoch totals are exact; only the
-                        // prefetch discarded by an early run end
-                        // (break 'outer) goes unattributed
-                        if rank == 0 {
-                            if let Some(last) = records.last_mut() {
-                                let (io_bytes, _, _, _) =
-                                    loader.stats.io.snapshot();
-                                last.loader_bytes +=
-                                    io_bytes - last_bytes;
-                            }
-                        }
-                        epoch += 1;
-                    }
-                    Ok(RankOutcome {
-                        rank,
-                        records,
-                        param_checksum: checksum(&params),
-                    })
+                    let mut driver = make_driver(cfg, comm);
+                    run_rank(cfg, opts, &plan, rank, &mut driver)
                 })
             })
             .collect();
@@ -837,11 +867,101 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     }
 
     Ok(RunReport {
-        variant: variant.to_string(),
+        variant: cfg.model.variant.clone(),
         world,
-        batch_per_gpu: batch,
+        batch_per_gpu: plan.batch,
         records: outcomes.remove(0).records,
         preprocess_secs: opts.preprocess_secs,
         stage_secs: opts.stage_secs,
     })
+}
+
+/// Tag window for the cross-process DDP-invariant verify: disjoint
+/// from every collective window (flat ring/tree, hier 0x8000–0x8600,
+/// checkpoint gather 0x9100, the engine's bucket windows) — see the
+/// tag table in `collectives::transport::hier`.
+const VERIFY_TAG: u32 = 0x9200;
+
+/// Cross-process twin of [`train`]'s in-memory checksum compare: every
+/// rank ships its parameter checksum to rank 0, which asserts world
+/// agreement and then releases everyone with an empty ack. The u64
+/// travels as two f32 *bit patterns* — transports move bytes, never do
+/// arithmetic on payloads, so the integer round-trips exactly. The ack
+/// doubles as an exit barrier: no worker tears down its mesh before
+/// every rank's checksum has been checked (a mismatch surfaces on
+/// rank 0; the other ranks then see its death as a dead-peer error).
+fn verify_checksums<T: Transport>(comm: &mut T, my: u64) -> Result<()> {
+    let rank = comm.rank();
+    let world = comm.world();
+    if rank == 0 {
+        for r in 1..world {
+            let v = comm.recv(r, VERIFY_TAG).with_context(|| {
+                format!("collecting rank {r}'s parameter checksum")
+            })?;
+            ensure!(v.len() == 2,
+                    "bad checksum frame from rank {r} ({} elems)",
+                    v.len());
+            let theirs = ((v[0].to_bits() as u64) << 32)
+                | v[1].to_bits() as u64;
+            ensure!(theirs == my,
+                    "rank {r} diverged from rank 0 (checksum \
+                     mismatch)");
+        }
+        for r in 1..world {
+            comm.send_slice(r, VERIFY_TAG, &[])?;
+        }
+    } else {
+        let buf = [f32::from_bits((my >> 32) as u32),
+                   f32::from_bits(my as u32)];
+        comm.send_slice(0, VERIFY_TAG, &buf)?;
+        comm.recv(0, VERIFY_TAG).with_context(|| {
+            format!("rank {rank}: waiting for rank 0's checksum \
+                     verdict (did a replica diverge?)")
+        })?;
+    }
+    Ok(())
+}
+
+/// Single-rank trainer entry for process-per-rank worlds (`txgain
+/// worker`): the caller hands in one already wired cross-process
+/// transport ([`TcpTransport::process_mesh`] behind
+/// [`AnyTransport`]), and this rank runs the exact same
+/// [`run_rank`] body the threaded world runs — then asserts the DDP
+/// invariant *over the wire* before returning.
+///
+/// Returns `Some(report)` on rank 0 (which also owns writing it),
+/// `None` on every other rank.
+pub fn train_worker(cfg: &Config, opts: &TrainOptions,
+                    comm: AnyTransport) -> Result<Option<RunReport>> {
+    let plan = prepare(cfg, opts)?;
+    ensure!(comm.world() == plan.world,
+            "transport world {} != config world {} (nodes × \
+             gpus_per_node)", comm.world(), plan.world);
+    let rank = comm.rank();
+    let mut driver = make_driver(cfg, comm);
+    let outcome = run_rank(cfg, opts, &plan, rank, &mut driver)?;
+    match &mut driver {
+        Driver::Blocking(comm) => {
+            verify_checksums(comm, outcome.param_checksum)?
+        }
+        Driver::Engine(eng) => {
+            let mut t = eng.checkout()?;
+            let verified =
+                verify_checksums(&mut t, outcome.param_checksum);
+            eng.checkin(t);
+            verified?
+        }
+    }
+    if rank == 0 {
+        Ok(Some(RunReport {
+            variant: cfg.model.variant.clone(),
+            world: plan.world,
+            batch_per_gpu: plan.batch,
+            records: outcome.records,
+            preprocess_secs: opts.preprocess_secs,
+            stage_secs: opts.stage_secs,
+        }))
+    } else {
+        Ok(None)
+    }
 }

@@ -1,0 +1,304 @@
+//! Integration: the process-per-rank world (`txgain worker` /
+//! `txgain launch`) — real subprocesses, real sockets, no threads
+//! standing in for processes.
+//!
+//! The tentpole property: a 4-rank `txgain launch` multi-process tcp
+//! world must produce a training trajectory BIT-IDENTICAL to the
+//! in-process 4-rank tcp world from the same config (steps.csv's
+//! deterministic columns and the checkpoint file bytes). Process
+//! boundaries are a deployment knob; they must never be a numerics
+//! knob.
+//!
+//! Every rendezvous failure mode is additionally asserted through the
+//! real CLI under a watchdog deadline: absent rank, duplicate rank,
+//! config-hash mismatch, world mismatch — all named errors, never
+//! hangs (the `concurrency_stress` discipline, one process level up).
+
+use std::io::Read;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use txgain::config::{presets, LaunchConfig};
+use txgain::coordinator;
+use txgain::coordinator::rendezvous::{serve, PROBE_HASH};
+use txgain::runtime::Manifest;
+
+const BIN: &str = env!("CARGO_BIN_EXE_txgain");
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("txgain-it-proc-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run `cmd` to completion under a hard deadline: if the subprocess
+/// is still alive past `secs`, kill it and fail the test by name —
+/// a hung bootstrap is exactly the bug class this suite polices.
+fn run_with_deadline(mut cmd: Command, secs: u64, what: &str)
+    -> (ExitStatus, String, String) {
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    let mut child = cmd.spawn().unwrap();
+    let mut out_pipe = child.stdout.take().unwrap();
+    let mut err_pipe = child.stderr.take().unwrap();
+    let out_h = std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = out_pipe.read_to_string(&mut s);
+        s
+    });
+    let err_h = std::thread::spawn(move || {
+        let mut s = String::new();
+        let _ = err_pipe.read_to_string(&mut s);
+        s
+    });
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    let status = loop {
+        if let Some(st) = child.try_wait().unwrap() {
+            break st;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("{what}: subprocess still running after {secs}s \
+                    (error-not-hang violated)");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    (status, out_h.join().unwrap(), err_h.join().unwrap())
+}
+
+fn worker_cmd(rank: usize, world: usize, rendezvous: &str,
+              dir: &Path, extra: &[&str]) -> Command {
+    let mut c = Command::new(BIN);
+    c.arg("worker")
+        .arg(format!("--rank={rank}"))
+        .arg(format!("--world={world}"))
+        .arg(format!("--rendezvous={rendezvous}"))
+        .arg(format!("--workdir={}", dir.display()));
+    for e in extra {
+        c.arg(e);
+    }
+    c
+}
+
+/// A short-fused leader for the failure-mode tests: everything it
+/// polices should resolve in well under a second on loopback.
+fn fast_rz() -> LaunchConfig {
+    LaunchConfig {
+        rendezvous_timeout_secs: 3.0,
+        handshake_timeout_secs: 2.0,
+        connect_backoff_ms: 5,
+    }
+}
+
+fn leader_on_loopback() -> (TcpListener, String) {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    (l, addr)
+}
+
+// ---------------------------------------------------------------- CLI
+
+#[test]
+fn cli_version_and_flag_syntax() {
+    let mut c = Command::new(BIN);
+    c.arg("--version");
+    let (st, out, _) = run_with_deadline(c, 30, "txgain --version");
+    assert!(st.success());
+    assert!(out.contains(env!("CARGO_PKG_VERSION")),
+            "--version output: {out}");
+
+    // --key=value spelling is accepted
+    let mut c = Command::new(BIN);
+    c.arg("sim").arg("--nodes=2");
+    let (st, out, err) = run_with_deadline(c, 60, "txgain sim");
+    assert!(st.success(), "sim --nodes=2 failed:\n{out}\n{err}");
+
+    // a repeated flag is a typo'd command line, not an override
+    let mut c = Command::new(BIN);
+    c.arg("sim").arg("--nodes").arg("2").arg("--nodes=3");
+    let (st, _, err) = run_with_deadline(c, 30, "txgain dup flag");
+    assert!(!st.success());
+    assert!(err.contains("duplicate flag --nodes"), "stderr: {err}");
+}
+
+// -------------------------------------------------------- probe world
+
+#[test]
+fn launch_probe_assembles_a_four_process_world() {
+    let dir = workdir("probe4");
+    let mut c = Command::new(BIN);
+    c.arg("launch")
+        .arg("--workers=4")
+        .arg("--probe")
+        .arg(format!("--workdir={}", dir.display()));
+    let (st, out, err) =
+        run_with_deadline(c, 120, "launch --workers 4 --probe");
+    assert!(st.success(), "probe launch failed:\n{out}\n{err}");
+    for rank in 0..4 {
+        assert!(out.contains(&format!("probe rank {rank}: ok")),
+                "rank {rank} never reported; stdout:\n{out}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------ failure modes
+
+#[test]
+fn missing_rank_fails_the_world_by_name() {
+    let dir = workdir("missing");
+    let (l, addr) = leader_on_loopback();
+    let rz = fast_rz();
+    let leader =
+        std::thread::spawn(move || serve(l, 2, PROBE_HASH, &rz));
+    // rank 0 joins; rank 1 never exists
+    let (st, _, err) = run_with_deadline(
+        worker_cmd(0, 2, &addr, &dir, &["--probe"]), 30,
+        "worker in a half world");
+    assert!(!st.success(), "worker should fail when a rank is absent");
+    assert!(err.contains("never arrived"), "stderr: {err}");
+    let lerr = leader.join().unwrap().unwrap_err().to_string();
+    assert!(lerr.contains("rank(s) 1"), "leader error: {lerr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn duplicate_rank_id_is_rejected() {
+    let dir = workdir("dup");
+    let (l, addr) = leader_on_loopback();
+    let rz = fast_rz();
+    let leader =
+        std::thread::spawn(move || serve(l, 2, PROBE_HASH, &rz));
+    let h: Vec<_> = (0..2)
+        .map(|i| {
+            let cmd = worker_cmd(0, 2, &addr, &dir, &["--probe"]);
+            std::thread::spawn(move || {
+                run_with_deadline(cmd, 30,
+                                  &format!("duplicate worker {i}"))
+            })
+        })
+        .collect();
+    let results: Vec<_> =
+        h.into_iter().map(|t| t.join().unwrap()).collect();
+    let lerr = leader.join().unwrap().unwrap_err().to_string();
+    assert!(lerr.contains("duplicate rank 0"), "leader: {lerr}");
+    for (st, _, _) in &results {
+        assert!(!st.success(),
+                "a worker exited cleanly from a duplicate-rank world");
+    }
+    assert!(results.iter().any(|(_, _, e)| e.contains("duplicate rank")),
+            "no worker saw the duplicate-rank error: {:?}",
+            results.iter().map(|(_, _, e)| e.clone())
+                .collect::<Vec<_>>());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn config_hash_mismatch_is_rejected() {
+    let dir = workdir("hash");
+    let (l, addr) = leader_on_loopback();
+    let rz = fast_rz();
+    // the leader expects a training config's hash; the probe worker
+    // announces the PROBE_HASH sentinel — mixed worlds must not wire
+    let leader =
+        std::thread::spawn(move || serve(l, 1, 0x1234_5678, &rz));
+    let (st, _, err) = run_with_deadline(
+        worker_cmd(0, 1, &addr, &dir, &["--probe"]), 30,
+        "config-mismatch worker");
+    assert!(!st.success());
+    assert!(err.contains("config mismatch"), "stderr: {err}");
+    assert!(leader.join().unwrap().is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn world_size_mismatch_is_rejected() {
+    let dir = workdir("world");
+    let (l, addr) = leader_on_loopback();
+    let rz = fast_rz();
+    let leader =
+        std::thread::spawn(move || serve(l, 2, PROBE_HASH, &rz));
+    let (st, _, err) = run_with_deadline(
+        worker_cmd(0, 3, &addr, &dir, &["--probe"]), 30,
+        "world-mismatch worker");
+    assert!(!st.success());
+    assert!(err.contains("world"), "stderr: {err}");
+    assert!(leader.join().unwrap().is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------------- bit-identity
+
+fn load_csv(path: &Path) -> Vec<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    text.lines()
+        .skip(1) // header
+        .map(|l| l.split(',').map(str::to_string).collect())
+        .collect()
+}
+
+/// The acceptance gate: same config, two world shapes — 4 rank
+/// threads over tcp loopback vs 4 worker processes over the
+/// rendezvous-wired tcp mesh — bit-identical trajectories. Columns
+/// compared are the deterministic ones (step, loss, lr, comm buffer/
+/// wire bytes); timing and per-step loader attribution legitimately
+/// vary run to run. The step-6 checkpoint must match byte for byte.
+#[test]
+fn launch_world_matches_in_process_training_bitwise() {
+    let artifacts = Manifest::default_dir();
+    if Manifest::load(&artifacts).is_err() {
+        eprintln!("skipping: no compiled artifacts (`make artifacts`)");
+        return;
+    }
+    let mut cfg = presets::quickstart();
+    cfg.cluster.nodes = 4;
+    cfg.cluster.gpus_per_node = 1;
+    cfg.training.steps = 6;
+    cfg.training.log_every = 0;
+    cfg.training.checkpoint_every = 6;
+    cfg.training.transport = "tcp".to_string();
+    cfg.data.corpus_samples = 256;
+    cfg.validate().unwrap();
+
+    let base = workdir("bitident");
+    let inproc = base.join("inproc");
+    let out = coordinator::run(&cfg, &artifacts, &inproc).unwrap();
+    assert_eq!(out.report.records.len(), 6);
+
+    let cfg_path = base.join("cfg.json");
+    std::fs::write(&cfg_path, cfg.to_json_string()).unwrap();
+    let multi = base.join("multi");
+    let mut c = Command::new(BIN);
+    c.arg("launch")
+        .arg("--workers=4")
+        .arg(format!("--config={}", cfg_path.display()))
+        .arg(format!("--workdir={}", multi.display()))
+        .arg(format!("--artifacts={}", artifacts.display()));
+    let (st, lout, lerr) =
+        run_with_deadline(c, 300, "launch training world");
+    assert!(st.success(), "launch training failed:\n{lout}\n{lerr}");
+
+    // steps.csv columns: 0 step, 1 loss, 2 lr, 8 comm_buffer_bytes,
+    // 9 comm_wire_bytes (schema locked by train::metrics tests)
+    let a = load_csv(&inproc.join("steps.csv"));
+    let b = load_csv(&multi.join("steps.csv"));
+    assert_eq!(a.len(), b.len(), "step counts differ");
+    for (ra, rb) in a.iter().zip(&b) {
+        for &col in &[0usize, 1, 2, 8, 9] {
+            assert_eq!(ra[col], rb[col],
+                       "trajectories diverge at column {col}:\n  \
+                        in-process {ra:?}\n  multi-proc {rb:?}");
+        }
+    }
+    let ck_a = std::fs::read(
+        inproc.join("checkpoints/step-000006.ckpt")).unwrap();
+    let ck_b = std::fs::read(
+        multi.join("rank-0/checkpoints/step-000006.ckpt")).unwrap();
+    assert_eq!(ck_a, ck_b,
+               "checkpoint bytes differ between world shapes");
+    let _ = std::fs::remove_dir_all(&base);
+}

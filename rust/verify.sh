@@ -69,6 +69,26 @@ done
 echo "verify.sh: data-plane conformance"
 cargo test -q --test integration_data
 
+# the process-per-rank gate: rendezvous failure modes through real
+# subprocesses (error-not-hang, watchdog-bounded), the 4-process probe
+# world, and — when compiled artifacts exist — the bit-identity of a
+# `txgain launch` multi-process training run against the in-process
+# world from the same config (also part of `cargo test -q`; the
+# explicit re-run names the subsystem when it breaks)
+echo "verify.sh: cross-process conformance"
+cargo test -q --test integration_process
+
+# multi-process smoke through the real CLI: spawn a 4-worker world via
+# `txgain launch`. --smoke trains the quickstart-derived 4-rank config
+# when artifacts exist and falls back to the transport probe when they
+# don't, so the gate is meaningful on every machine within the tier-1
+# time budget.
+echo "verify.sh: txgain launch smoke (4 workers)"
+launch_dir="$(mktemp -d "${TMPDIR:-/tmp}/txgain-launch-smoke.XXXXXX")"
+trap 'rm -rf "${launch_dir}"' EXIT
+target/release/txgain launch --workers 4 --smoke \
+    --workdir "${launch_dir}"
+
 # the async-comm-engine overlap gate: measured wall-clock exposed comm
 # with the engine must not exceed the blocking baseline (world 4, shm),
 # and the hierarchical all-reduce must not expose more than the flat
