@@ -7,15 +7,20 @@
 //!
 //! A final section times the real bucketed all-reduce on the
 //! transport backends behind `training.transport`; pass
-//! `--transport channel|shm|tcp` to pin one, default sweeps all three.
+//! `--transport channel|shm|tcp` to pin one, default sweeps all three,
+//! and `--codec f32|bf16|int8` to pick the wire encoding
+//! (`training.wire_codec`, default f32 — try `--transport tcp --codec
+//! bf16` to watch half the bytes take less wall-clock).
 //!
 //! ```sh
 //! cargo run --release --example overlap_tuning
 //! cargo run --release --example overlap_tuning -- --transport tcp
+//! cargo run --release --example overlap_tuning -- --transport tcp \
+//!     --codec bf16
 //! ```
 
 use txgain::collectives::{bucketed_allreduce, Algorithm, Backend,
-                          BucketPlan};
+                          BucketPlan, WireCodec};
 use txgain::config::presets;
 use txgain::perfmodel::{simulate, sweep_nodes};
 use txgain::report::Table;
@@ -28,6 +33,13 @@ fn backends_from_args() -> txgain::Result<Vec<Backend>> {
         Some(b) => vec![b],
         None => Backend::ALL.to_vec(),
     })
+}
+
+/// Wire codec for the real-transport section: `--codec <name>`,
+/// default f32 (the `training.wire_codec` default).
+fn codec_from_args() -> txgain::Result<WireCodec> {
+    let args: Vec<String> = std::env::args().collect();
+    Ok(WireCodec::from_flag(&args)?.unwrap_or_default())
 }
 
 fn main() -> txgain::Result<()> {
@@ -99,9 +111,11 @@ fn main() -> txgain::Result<()> {
     // pointers in-process, tcp serializes every byte through loopback
     let world = 4usize;
     let len = 2_000_000usize;
+    let codec = codec_from_args()?;
     let plan = BucketPlan::from_elems(len, len / 6 + 1);
     let mut t = Table::new(
-        "real bucketed ring all-reduce, world=4, 2M floats (mean of 3)",
+        &format!("real bucketed ring all-reduce, world=4, 2M floats, \
+                  {codec} wire (mean of 3)"),
         vec!["transport", "time(ms)"],
     );
     for backend in backends_from_args()? {
@@ -109,7 +123,7 @@ fn main() -> txgain::Result<()> {
             let t0 = std::time::Instant::now();
             std::thread::scope(|s| {
                 let handles: Vec<_> = backend
-                    .world(world)
+                    .world_with(world, None, codec)
                     .unwrap()
                     .into_iter()
                     .map(|mut c| {
@@ -133,9 +147,10 @@ fn main() -> txgain::Result<()> {
     }
     println!("{}", t.render());
     println!(
-        "set training.transport (or --transport here) to move the \
-         same schedule over\na different wire; the conformance suite \
-         guarantees identical numerics.\n"
+        "set training.transport / training.wire_codec (or --transport \
+         / --codec here)\nto move the same schedule over a different \
+         wire; the conformance suite\nguarantees identical numerics \
+         per codec.\n"
     );
 
     let path = std::path::PathBuf::from("runs/overlap_tuning.csv");

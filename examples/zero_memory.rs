@@ -8,15 +8,20 @@
 //! A final section runs the real ZeRO-1 wire pattern (bucketed
 //! reduce-scatter → shard write → all-gather) on the transport
 //! backends behind `training.transport`; pass
-//! `--transport channel|shm|tcp` to pin one, default sweeps all three.
+//! `--transport channel|shm|tcp` to pin one, default sweeps all three,
+//! and `--codec f32|bf16|int8` to pick the wire encoding
+//! (`training.wire_codec`, default f32).
 //!
 //! ```sh
 //! cargo run --release --example zero_memory
 //! cargo run --release --example zero_memory -- --transport shm
+//! cargo run --release --example zero_memory -- --transport tcp \
+//!     --codec bf16
 //! ```
 
 use txgain::collectives::{bucketed_all_gather, bucketed_reduce_scatter,
-                          Algorithm, Backend, BucketPlan, RankMemory};
+                          Algorithm, Backend, BucketPlan, RankMemory,
+                          WireCodec};
 use txgain::config::presets;
 use txgain::perfmodel::{simulate, sweep_nodes};
 use txgain::report::Table;
@@ -29,6 +34,13 @@ fn backends_from_args() -> txgain::Result<Vec<Backend>> {
         Some(b) => vec![b],
         None => Backend::ALL.to_vec(),
     })
+}
+
+/// Wire codec for the real-transport section: `--codec <name>`,
+/// default f32 (the `training.wire_codec` default).
+fn codec_from_args() -> txgain::Result<WireCodec> {
+    let args: Vec<String> = std::env::args().collect();
+    Ok(WireCodec::from_flag(&args)?.unwrap_or_default())
 }
 
 fn main() -> txgain::Result<()> {
@@ -129,9 +141,11 @@ fn main() -> txgain::Result<()> {
     // write → AG over the `training.transport` knob's options
     let world = 4usize;
     let len = 2_000_000usize;
+    let codec = codec_from_args()?;
     let plan = BucketPlan::from_elems(len, len / 6 + 1);
     let mut t = Table::new(
-        "real ZeRO-1 RS+step+AG, world=4, 2M floats (mean of 3)",
+        &format!("real ZeRO-1 RS+step+AG, world=4, 2M floats, {codec} \
+                  wire (mean of 3)"),
         vec!["transport", "time(ms)"],
     );
     for backend in backends_from_args()? {
@@ -139,7 +153,7 @@ fn main() -> txgain::Result<()> {
             let t0 = std::time::Instant::now();
             std::thread::scope(|s| {
                 let handles: Vec<_> = backend
-                    .world(world)
+                    .world_with(world, None, codec)
                     .unwrap()
                     .into_iter()
                     .enumerate()
@@ -175,9 +189,10 @@ fn main() -> txgain::Result<()> {
     }
     println!("{}", t.render());
     println!(
-        "same schedule, different wire (training.transport); the \
-         conformance suite\nguarantees the trajectories are \
-         bit-identical across backends.\n"
+        "same schedule, different wire (training.transport / \
+         training.wire_codec); the\nconformance suite guarantees the \
+         trajectories are bit-identical across\nbackends, and replica-\
+         identical under the bf16 wire.\n"
     );
 
     let path = std::path::PathBuf::from("runs/zero_memory.csv");

@@ -16,9 +16,10 @@
 //! Run: `cargo bench --bench rec4_overlap`
 //! Smoke gate (used by verify.sh): `cargo bench --bench rec4_overlap
 //! -- --smoke` asserts (a) engine-exposed ≤ blocking-exposed at world
-//! 4 on shm and (b) hierarchical exposed ≤ flat ring on the two-tier
-//! hier transport at an emulated 2 nodes × 4 ranks; exits nonzero on
-//! regression.
+//! 4 on shm, (b) hierarchical exposed ≤ flat ring on the two-tier
+//! hier transport at an emulated 2 nodes × 4 ranks, and (c) the bf16
+//! wire exposed ≤ the f32 wire on tcp at world 4 (half the bytes must
+//! not cost more wall-clock); exits nonzero on regression.
 //!
 //! The hot-path bench runs on the preset's `training.transport` knob;
 //! override it with `TXGAIN_TRANSPORT=channel|shm|tcp|hier`.
@@ -28,7 +29,7 @@ use std::time::Instant;
 use txgain::collectives::{allreduce, bucketed_allreduce, Algorithm,
                           AnyTransport, Backend, BucketPlan,
                           CollectiveKind, CommEngine, CostModel,
-                          PendingBucket, Topology};
+                          PendingBucket, Topology, WireCodec};
 use txgain::config::{presets, ClusterConfig};
 use txgain::perfmodel::simulate;
 use txgain::report::Table;
@@ -53,13 +54,14 @@ fn configured_backend() -> Backend {
 /// `comm_exposed_ms`.
 #[allow(clippy::too_many_arguments)]
 fn measured_step(backend: Backend, topo: Option<&Topology>,
-                 world: usize, len: usize, n_buckets: usize,
-                 slice_secs: f64, algo: Algorithm, engine: bool)
+                 codec: WireCodec, world: usize, len: usize,
+                 n_buckets: usize, slice_secs: f64, algo: Algorithm,
+                 engine: bool)
     -> (f64, f64) {
     let plan = BucketPlan::from_elems(len, len / n_buckets + 1);
     let per_rank: Vec<(f64, f64)> = std::thread::scope(|s| {
         backend
-            .world_with(world, topo)
+            .world_with(world, topo, codec)
             .unwrap()
             .into_iter()
             .map(|c| {
@@ -149,7 +151,8 @@ fn smoke() {
         let mut step = 0.0;
         let mut exposed = 0.0;
         for _ in 0..trials {
-            let (s, e) = measured_step(Backend::Shm, None, world, len,
+            let (s, e) = measured_step(Backend::Shm, None,
+                                       WireCodec::F32, world, len,
                                        buckets, slice, Algorithm::Ring,
                                        engine);
             step += s;
@@ -178,6 +181,7 @@ fn smoke() {
               baseline)",
              ee / be.max(1e-12) * 100.0);
     smoke_hier();
+    smoke_bf16();
 }
 
 /// The hierarchical half of the smoke gate: on an emulated
@@ -195,8 +199,9 @@ fn smoke_hier() {
     let mean = |algo: Algorithm| -> f64 {
         let mut exposed = 0.0;
         for _ in 0..trials {
-            exposed += measured_step(Backend::Hier, Some(&topo), world,
-                                     len, buckets, 0.0, algo, false)
+            exposed += measured_step(Backend::Hier, Some(&topo),
+                                     WireCodec::F32, world, len,
+                                     buckets, 0.0, algo, false)
                 .1;
         }
         exposed / trials as f64
@@ -220,6 +225,50 @@ fn smoke_hier() {
     println!("rec4 smoke: OK (hierarchical exposes {:.0}% of the flat \
               ring)",
              hier / flat.max(1e-12) * 100.0);
+}
+
+/// The wire-codec half of the smoke gate: on tcp — the one backend
+/// that genuinely serializes every byte through a socket — a blocking
+/// ring all-reduce on the bf16 wire must not expose more than the same
+/// collective on the f32 wire. bf16 moves exactly half the payload
+/// bytes, so if the reduced-precision path ever costs more wall-clock
+/// than full precision, the codec is doing its conversions on the
+/// critical path instead of at the transport boundary. Same noise
+/// margin as the other gates.
+fn smoke_bf16() {
+    let world = 4usize;
+    let len = 2_000_000usize;
+    let buckets = 4usize;
+    let trials = 3usize;
+    let mean = |codec: WireCodec| -> f64 {
+        let mut exposed = 0.0;
+        for _ in 0..trials {
+            exposed += measured_step(Backend::Tcp, None, codec, world,
+                                     len, buckets, 0.0,
+                                     Algorithm::Ring, false)
+                .1;
+        }
+        exposed / trials as f64
+    };
+    let f32_wire = mean(WireCodec::F32);
+    let bf16_wire = mean(WireCodec::Bf16);
+    println!(
+        "rec4 smoke [tcp, world {world}, {len} floats, {buckets} \
+         buckets]:\n  f32 wire  : exposed {:7.2} ms\n  bf16 wire : \
+         exposed {:7.2} ms",
+        f32_wire * 1e3, bf16_wire * 1e3
+    );
+    let tolerance = f32_wire * 0.10 + 1e-3;
+    assert!(
+        bf16_wire <= f32_wire + tolerance,
+        "SMOKE FAIL: bf16 wire exposed {:.2} ms > f32 wire {:.2} ms \
+         (+10% noise margin) on tcp — the half-width wire is not \
+         paying for its conversions",
+        bf16_wire * 1e3, f32_wire * 1e3
+    );
+    println!("rec4 smoke: OK (bf16 wire exposes {:.0}% of the f32 \
+              wire)",
+             bf16_wire / f32_wire.max(1e-12) * 100.0);
 }
 
 fn main() {
@@ -371,8 +420,8 @@ fn main() {
         for backend in Backend::ALL {
             let mut exposed = 0.0;
             for _ in 0..3 {
-                exposed += measured_step(backend, None, world, len,
-                                         buckets, slice,
+                exposed += measured_step(backend, None, WireCodec::F32,
+                                         world, len, buckets, slice,
                                          Algorithm::Ring, engine)
                     .1;
             }

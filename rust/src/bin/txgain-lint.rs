@@ -72,6 +72,7 @@ const SIM_PATHS: &[&str] = &["src/sim/", "src/perfmodel/"];
 /// Length-prefixed decode modules: allocations there must be
 /// `// bounded:`-annotated.
 const BOUNDED_FILES: &[&str] = &[
+    "src/collectives/transport/codec.rs",
     "src/collectives/transport/tcp.rs",
     "src/coordinator/rendezvous.rs",
     "src/train/checkpoint.rs",

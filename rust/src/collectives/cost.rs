@@ -7,6 +7,7 @@
 //! This is the quantity behind the paper's recommendation 4: at bert-
 //! scale gradients and 25 GbE it stays small relative to compute.
 
+use super::transport::WireCodec;
 use super::{Algorithm, BucketPlan};
 use crate::config::ClusterConfig;
 
@@ -316,9 +317,17 @@ impl CostModel {
 
     /// Bytes of gradient traffic per GPU for a model of `params`
     /// parameters synced in bf16 (the mixed-precision DDP compress hook
-    /// the paper's Lightning setup uses; fp32 would double this).
+    /// the paper's Lightning setup uses) — shorthand for
+    /// [`CostModel::gradient_bytes_codec`] with [`WireCodec::Bf16`].
     pub fn gradient_bytes(params: u64) -> f64 {
-        params as f64 * 2.0
+        Self::gradient_bytes_codec(params, WireCodec::Bf16)
+    }
+
+    /// Bytes of gradient traffic per GPU for `params` parameters under
+    /// `codec` — priced at what the configured wire codec actually puts
+    /// on the wire (4 B/elem f32, 2 B/elem bf16, 1 B/elem int8).
+    pub fn gradient_bytes_codec(params: u64, codec: WireCodec) -> f64 {
+        params as f64 * codec.bytes_per_elem()
     }
 
     /// Inter-node wire bytes for an all-reduce of `bytes` under
@@ -419,9 +428,14 @@ impl CostModel {
     /// what the flat implementation actually does on a multi-node
     /// world ([`CostModel::flat_ring_allreduce`]) rather than at the
     /// two-tier ideal, so the comparison is implementation-honest.
+    ///
+    /// `codec` is the configured wire codec: `bytes` are wire bytes at
+    /// that codec's width, and the candidate bucket sizes are converted
+    /// MB↔elements at the same width — so the tuner solves under the
+    /// bandwidth the wire will actually see.
     pub fn auto_tune(&self, nodes: usize, bytes: f64,
-                     backward_secs: f64, hier_available: bool)
-        -> TunedPlan {
+                     backward_secs: f64, hier_available: bool,
+                     codec: WireCodec) -> TunedPlan {
         let price = |algo: Algorithm, b: f64| -> f64 {
             match algo {
                 Algorithm::Ring if hier_available => {
@@ -430,7 +444,8 @@ impl CostModel {
                 _ => self.allreduce(algo, nodes, b),
             }
         };
-        let elems = (bytes / 2.0).max(0.0) as usize; // bf16 wire
+        let bpe = codec.bytes_per_elem();
+        let elems = (bytes / bpe).max(0.0) as usize;
         let mut best: Option<TunedPlan> = None;
         let mut algos = vec![Algorithm::Ring, Algorithm::Tree];
         if hier_available {
@@ -438,13 +453,13 @@ impl CostModel {
         }
         for algo in algos {
             for &bucket_mb in &Self::TUNE_BUCKET_MB {
-                let bucket_elems = (bucket_mb * 1e6 / 2.0) as usize;
+                let bucket_elems = (bucket_mb * 1e6 / bpe) as usize;
                 for &first_mb in &Self::TUNE_FIRST_MB {
                     if first_mb >= bucket_mb {
                         continue; // 0 = off; larger never helps
                     }
                     let first_elems = if first_mb > 0.0 {
-                        (first_mb * 1e6 / 2.0) as usize
+                        (first_mb * 1e6 / bpe) as usize
                     } else {
                         bucket_elems
                     };
@@ -452,7 +467,7 @@ impl CostModel {
                         elems, bucket_elems, first_elems,
                         MAX_MODELED_BUCKETS)
                         .into_iter()
-                        .map(|e| e as f64 * 2.0)
+                        .map(|e| e as f64 * bpe)
                         .collect();
                     let cost = self.overlap_pipeline_sized(
                         &sizes, backward_secs, |b| price(algo, b));
@@ -849,7 +864,7 @@ mod tests {
     fn auto_tune_picks_hierarchical_on_the_hier_transport() {
         let m = two_by_four();
         let bytes = CostModel::gradient_bytes(120_000_000);
-        let plan = m.auto_tune(2, bytes, 0.25, true);
+        let plan = m.auto_tune(2, bytes, 0.25, true, WireCodec::Bf16);
         assert_eq!(plan.algorithm, Algorithm::Hierarchical,
                    "{plan:?}");
         assert!(plan.bucket_mb > 0.0);
@@ -866,7 +881,7 @@ mod tests {
     fn auto_tune_stays_flat_without_a_hier_transport() {
         let m = two_by_four();
         let bytes = CostModel::gradient_bytes(120_000_000);
-        let plan = m.auto_tune(2, bytes, 0.25, false);
+        let plan = m.auto_tune(2, bytes, 0.25, false, WireCodec::Bf16);
         assert_ne!(plan.algorithm, Algorithm::Hierarchical,
                    "{plan:?}");
     }
@@ -874,8 +889,33 @@ mod tests {
     #[test]
     fn auto_tune_degenerates_gracefully_on_zero_bytes() {
         let m = two_by_four();
-        let plan = m.auto_tune(2, 0.0, 0.25, true);
+        let plan = m.auto_tune(2, 0.0, 0.25, true, WireCodec::Bf16);
         assert_eq!(plan.exposed_secs, 0.0);
         assert_eq!(plan.comm_secs, 0.0);
+    }
+
+    #[test]
+    fn auto_tune_codec_width_scales_the_plan_bytes() {
+        // same gradient, narrower codec: strictly fewer wire bytes per
+        // elem, so exposed comm can only shrink (or stay hidden)
+        let m = two_by_four();
+        let params = 120_000_000u64;
+        let f32_plan = m.auto_tune(
+            2, CostModel::gradient_bytes_codec(params, WireCodec::F32),
+            0.25, true, WireCodec::F32);
+        let bf16_plan = m.auto_tune(
+            2, CostModel::gradient_bytes_codec(params, WireCodec::Bf16),
+            0.25, true, WireCodec::Bf16);
+        let int8_plan = m.auto_tune(
+            2, CostModel::gradient_bytes_codec(params, WireCodec::Int8),
+            0.25, true, WireCodec::Int8);
+        assert!(bf16_plan.exposed_secs
+                    <= f32_plan.exposed_secs * (1.0 + 1e-9),
+                "{bf16_plan:?} vs {f32_plan:?}");
+        assert!(int8_plan.exposed_secs
+                    <= bf16_plan.exposed_secs * (1.0 + 1e-9),
+                "{int8_plan:?} vs {bf16_plan:?}");
+        assert!(bf16_plan.comm_secs < f32_plan.comm_secs);
+        assert!(int8_plan.comm_secs < bf16_plan.comm_secs);
     }
 }

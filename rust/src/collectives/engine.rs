@@ -68,6 +68,18 @@ use crate::Result;
 /// tag collisions.
 pub const ENGINE_TAG_BASE: u32 = 1 << 20;
 
+/// First tag of the *keyed* engine window. [`CommEngine::launch_bucket`]
+/// hands out fresh rotating tag bases per launch, which is correct for
+/// f32/bf16 but breaks int8 error feedback: the transport keys residual
+/// streams by `(peer, tag)`, so a bucket's residual only carries across
+/// steps if the same logical bucket reuses the same tags every step.
+/// [`CommEngine::launch_bucket_keyed`] pins a launch to a caller-chosen
+/// slot inside this window (`base = KEYED_TAG_BASE + slot·stride`); the
+/// caller guarantees at most one op per slot is in flight at a time
+/// (the trainer uses one slot per gradient bucket plus one for the loss
+/// scalar, each waited before its next-step relaunch).
+pub const KEYED_TAG_BASE: u32 = 1 << 30;
+
 /// Host-side pool caps for the engine: unlike a transport's recycle
 /// pool (a ring step's in-flight window), the engine's pool holds a
 /// whole training step's bucket working set — up to two bucket-sized
@@ -113,7 +125,7 @@ impl PendingBucket {
 
 enum Cmd {
     Launch { id: u64, algo: Algorithm, kind: CollectiveKind,
-             buf: Vec<f32> },
+             buf: Vec<f32>, slot: Option<u32> },
     /// Finish all in-flight work, then lend the transport to the
     /// caller over `transport_tx` and wait for `checkin_rx`.
     Checkout,
@@ -198,10 +210,28 @@ impl<T: Transport + Send + 'static> CommEngine<T> {
     pub fn launch_bucket(&mut self, algo: Algorithm,
                          kind: CollectiveKind, buf: Vec<f32>)
         -> Result<PendingBucket> {
+        self.launch(algo, kind, buf, None)
+    }
+
+    /// Like [`CommEngine::launch_bucket`], but pins the launch to a
+    /// stable tag slot (`KEYED_TAG_BASE + slot·stride`) instead of the
+    /// rotating per-launch window — required under the int8 codec so a
+    /// bucket's error-feedback residual stream persists across steps
+    /// (see [`KEYED_TAG_BASE`]). The caller must keep at most one op
+    /// per slot in flight at a time.
+    pub fn launch_bucket_keyed(&mut self, algo: Algorithm,
+                               kind: CollectiveKind, buf: Vec<f32>,
+                               slot: u32) -> Result<PendingBucket> {
+        self.launch(algo, kind, buf, Some(slot))
+    }
+
+    fn launch(&mut self, algo: Algorithm, kind: CollectiveKind,
+              buf: Vec<f32>, slot: Option<u32>)
+        -> Result<PendingBucket> {
         let id = self.next_id;
         self.next_id += 1;
         self.cmd_tx
-            .send(Cmd::Launch { id, algo, kind, buf })
+            .send(Cmd::Launch { id, algo, kind, buf, slot })
             .map_err(|_| anyhow!(
                 "rank {}: comm engine shut down after a transport \
                  failure", self.rank))?;
@@ -569,6 +599,13 @@ impl Op {
                         self.phase = Phase::Done;
                         continue;
                     }
+                    if s == 0 && !sent && !recvd {
+                        // lossy-codec replica identity: pre-round the
+                        // own span exactly where the blocking ring
+                        // does (idempotent, so stall re-entry is safe)
+                        let (a, b) = self.spans[rank];
+                        t.codec().round_slice(&mut self.buf[a..b]);
+                    }
                     let mut sent = sent;
                     let mut recvd = recvd;
                     if !sent {
@@ -657,6 +694,12 @@ impl Op {
                     }
                 }
                 Phase::TreeBcastStart => {
+                    if rank == 0 {
+                        // mirror the blocking tree's root rounding
+                        // before the broadcast (lossy-codec replica
+                        // identity)
+                        t.codec().round_slice(&mut self.buf);
+                    }
                     let mut dist = 1usize;
                     while dist * 2 < world {
                         dist *= 2;
@@ -737,6 +780,11 @@ impl Op {
                     if r >= world {
                         self.phase = Phase::Done;
                         continue;
+                    }
+                    if r == 1 {
+                        // root rounds the assembled buffer before the
+                        // rebroadcast, as the blocking tree AG does
+                        t.codec().round_slice(&mut self.buf);
                     }
                     if t.try_send(r, self.tree_ag_bcast_tag(world),
                                   &self.buf)?
@@ -923,6 +971,12 @@ impl Op {
                         self.phase = Phase::HierBcast { j: 1 };
                         continue;
                     }
+                    if s == 0 && !sent && !recvd {
+                        // own-gspan pre-rounding, as in the blocking
+                        // leader ring (lossy-codec replica identity)
+                        let (a, b) = self.gspans[g];
+                        t.codec().round_slice(&mut self.buf[a..b]);
+                    }
                     let mut sent = sent;
                     let mut recvd = recvd;
                     if !sent {
@@ -1062,6 +1116,11 @@ impl Op {
                             self.phase = Phase::Done;
                             continue;
                         }
+                        if j == 1 {
+                            // leader rounds its replica before the
+                            // member bcast, as hier::bcast_full does
+                            t.codec().round_slice(&mut self.buf);
+                        }
                         if t.try_send(start + j,
                                       self.hier_bcast_tag(world),
                                       &self.buf)? {
@@ -1157,7 +1216,13 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
     // per-launch tag stride: covers ring RS+AG (2·world), the tree
     // reduce/bcast offsets (up to 4·world) and the tree-AG pair
     let stride = (4 * world + 2) as u64;
-    let span = ((u32::MAX as u64 - ENGINE_TAG_BASE as u64) / stride)
+    // rotating launches live in [ENGINE_TAG_BASE, KEYED_TAG_BASE);
+    // keyed launches in [KEYED_TAG_BASE, u32::MAX]
+    let span = ((KEYED_TAG_BASE as u64 - ENGINE_TAG_BASE as u64)
+        / stride)
+        .max(1);
+    let keyed_span = ((u32::MAX as u64 - KEYED_TAG_BASE as u64)
+        / stride)
         .max(1);
     let mut seq = 0u64;
     let mut ops: Vec<Op> = Vec::new();
@@ -1178,13 +1243,22 @@ fn progress_loop<T: Transport>(transport: T, cmd_rx: Receiver<Cmd>,
                 }
             };
             match cmd {
-                Cmd::Launch { id, algo, kind, buf } => {
-                    // tag bases wrap after `span` launches; safe as
-                    // long as nowhere near `span` ops are in flight at
-                    // once (they complete every step)
-                    let base = ENGINE_TAG_BASE
-                        + ((seq % span) * stride) as u32;
-                    seq += 1;
+                Cmd::Launch { id, algo, kind, buf, slot } => {
+                    // rotating tag bases wrap after `span` launches;
+                    // safe as long as nowhere near `span` ops are in
+                    // flight at once (they complete every step). Keyed
+                    // launches pin their base to the slot instead
+                    // (stable across steps for error feedback).
+                    let base = match slot {
+                        Some(k) => KEYED_TAG_BASE
+                            + ((k as u64 % keyed_span) * stride) as u32,
+                        None => {
+                            let b = ENGINE_TAG_BASE
+                                + ((seq % span) * stride) as u32;
+                            seq += 1;
+                            b
+                        }
+                    };
                     match Op::new(id, base, algo, kind, buf, world,
                                   rank, topo.as_ref()) {
                         Ok(op) => {
@@ -1841,8 +1915,85 @@ mod tests {
         let elems = (2 * (world - 1) * (len / world)) as u64;
         for s in stats {
             assert_eq!(s.buffer_bytes_sent, elems * 4);
-            assert_eq!(s.wire_bytes_sent, elems * 2);
+            assert_eq!(s.wire_bytes_sent, elems * 4);
             assert_eq!(s.msgs_sent, 2 * (world as u64 - 1));
+        }
+    }
+
+    /// Keyed launches pin stable tag bases per slot — two steps of the
+    /// same slot must reuse the same tags (asserted indirectly: the
+    /// collective stays correct and the error-feedback contract in the
+    /// int8 trainer tests depends on it), and distinct concurrent
+    /// slots must not collide.
+    #[test]
+    fn keyed_launches_are_correct_and_slot_disjoint() {
+        let world = 3usize;
+        let out: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+            World::new(world)
+                .into_comms()
+                .into_iter()
+                .enumerate()
+                .map(|(rank, c)| {
+                    s.spawn(move || {
+                        let mut eng = CommEngine::new(c);
+                        let mut per_step = Vec::new();
+                        for step in 0..3usize {
+                            // several slots in flight at once, then a
+                            // rotating launch interleaved with them
+                            let keyed: Vec<_> = (0..4u32)
+                                .map(|k| {
+                                    let buf: Vec<f32> = (0..6)
+                                        .map(|i| (rank + step
+                                                  + k as usize * 3
+                                                  + i) as f32)
+                                        .collect();
+                                    eng.launch_bucket_keyed(
+                                        Algorithm::Ring,
+                                        CollectiveKind::Allreduce,
+                                        buf, k)
+                                        .unwrap()
+                                })
+                                .collect();
+                            let rot = eng
+                                .launch_bucket(
+                                    Algorithm::Ring,
+                                    CollectiveKind::Allreduce,
+                                    vec![rank as f32; 5])
+                                .unwrap();
+                            let mut res: Vec<Vec<f32>> = keyed
+                                .into_iter()
+                                .map(|p| eng.wait(p).unwrap())
+                                .collect();
+                            res.push(eng.wait(rot).unwrap());
+                            per_step.push(res.concat());
+                        }
+                        per_step
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for step in 0..3usize {
+            for k in 0..4usize {
+                for i in 0..6usize {
+                    let want: f32 = (0..world)
+                        .map(|r| (r + step + k * 3 + i) as f32)
+                        .sum();
+                    for (rank, per_rank) in out.iter().enumerate() {
+                        assert_eq!(per_rank[step][k * 6 + i], want,
+                                   "step {step} slot {k} elem {i} \
+                                    rank {rank}");
+                    }
+                }
+            }
+            let want_rot: f32 = (0..world).map(|r| r as f32).sum();
+            for per_rank in &out {
+                for i in 0..5usize {
+                    assert_eq!(per_rank[step][4 * 6 + i], want_rot);
+                }
+            }
         }
     }
 }

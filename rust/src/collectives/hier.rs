@@ -60,7 +60,8 @@
 use super::engine::CollectiveKind;
 use super::ring;
 use super::shard_spans;
-use super::transport::{Topology, Transport, TransportStats};
+use super::transport::{Topology, Transport, TransportStats,
+                       WireCodec};
 use crate::Result;
 
 /// Blocking-path tag windows; see the module docs for the layout.
@@ -131,6 +132,12 @@ impl<T: Transport> Transport for SubComm<'_, T> {
 
     fn stats(&self) -> TransportStats {
         self.inner.stats()
+    }
+
+    fn codec(&self) -> WireCodec {
+        // the sub-ring must see the real codec or the ring schedules'
+        // lossy-codec rounding (replica identity) would silently skip
+        self.inner.codec()
     }
 }
 
@@ -321,6 +328,10 @@ fn bcast_full<T: Transport>(
         return Ok(());
     }
     if rank == start {
+        // lossy-codec replica identity: members receive a codec-rounded
+        // copy of this buffer; round the leader's own replica so all
+        // group members agree bit-for-bit (idempotent under re-encode)
+        comm.codec().round_slice(buf);
         for j in 1..m {
             comm.send_slice(start + j, TAG_BCAST, buf)?;
         }
@@ -459,7 +470,7 @@ pub fn tier_wire_elems(topo: &Topology, len: usize,
 
 #[cfg(test)]
 mod tests {
-    use super::super::transport::{HierTransport, WIRE_BYTES_PER_ELEM};
+    use super::super::transport::HierTransport;
     use super::*;
 
     fn run_world(
@@ -591,9 +602,10 @@ mod tests {
                     .iter()
                     .map(|s| s.inter_wire_bytes_sent)
                     .sum();
-                assert_eq!(got_intra, intra * WIRE_BYTES_PER_ELEM,
+                // default codec is f32: 4 wire bytes per element
+                assert_eq!(got_intra, intra * 4,
                            "intra {sizes:?} {kind:?}");
-                assert_eq!(got_inter, inter * WIRE_BYTES_PER_ELEM,
+                assert_eq!(got_inter, inter * 4,
                            "inter {sizes:?} {kind:?}");
             }
         }

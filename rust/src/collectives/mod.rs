@@ -11,9 +11,11 @@
 //!
 //! Simulated mode prices the same algorithms with [`cost`]'s
 //! hierarchical α-β model (NVLink intra-node, 25 GbE ring inter-node);
-//! [`TransportStats`] reports the matching measured traffic (buffer
-//! f32 bytes and modeled bf16 wire bytes) so real runs can be
-//! cross-checked against the model.
+//! [`TransportStats`] reports the matching measured traffic: buffer
+//! f32 bytes plus the bytes the configured [`WireCodec`] actually put
+//! on the wire (`training.wire_codec` — f32 passthrough, bf16, or
+//! int8 with error feedback), so real runs can be cross-checked
+//! against the model.
 //!
 //! [`bucket`] partitions the flat gradient into fixed-size buckets so
 //! each bucket's all-reduce can launch as soon as backward produces it
@@ -43,7 +45,8 @@ pub use cost::{CostModel, OverlapCost, RankMemory, TunedPlan};
 pub use engine::{CollectiveKind, CommEngine, PendingBucket};
 pub use transport::{AnyTransport, Backend, ChannelTransport,
                     HierTransport, ShmTransport, TcpTransport,
-                    Topology, Transport, TransportStats, World};
+                    Topology, Transport, TransportStats, WireCodec,
+                    World};
 
 use crate::Result;
 

@@ -32,8 +32,9 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context};
+use anyhow::{bail, ensure};
 
+use super::codec::{EfState, WireCodec};
 use super::{BufferPool, Transport, TransportStats};
 use crate::util::sync::lock_unpoisoned;
 use crate::Result;
@@ -86,6 +87,10 @@ pub struct ChannelTransport {
     recv_windows: Vec<Arc<Window>>,
     /// One liveness flag per rank, flipped on drop.
     alive: Arc<Vec<AtomicBool>>,
+    /// Wire codec payloads are encoded with at `post` and decoded
+    /// with at every drain site, plus its error-feedback state.
+    codec: WireCodec,
+    ef: EfState,
     stats: TransportStats,
 }
 
@@ -124,6 +129,8 @@ impl World {
                     .map(|src| windows[src][rank].clone())
                     .collect(),
                 alive: alive.clone(),
+                codec: WireCodec::F32,
+                ef: EfState::default(),
                 stats: TransportStats::default(),
             })
             .collect();
@@ -136,6 +143,11 @@ impl World {
 }
 
 impl ChannelTransport {
+    /// Switch the wire codec (every rank of a world must agree).
+    pub(crate) fn set_codec(&mut self, codec: WireCodec) {
+        self.codec = codec;
+    }
+
     /// Wait for a free slot in the window toward `to`.
     fn acquire_window(&self, to: usize) -> Result<()> {
         let w = &self.send_windows[to];
@@ -189,17 +201,24 @@ impl ChannelTransport {
         Ok(true)
     }
 
-    /// Copy `data` into a pooled buffer and post it to `to`'s mailbox
-    /// (window slot already held).
+    /// Encode `data` into a pooled buffer and post the frame to `to`'s
+    /// mailbox (window slot already held). The int8 residual is
+    /// committed only once the frame is actually enqueued.
     fn post(&mut self, to: usize, tag: u32, data: &[f32]) -> Result<()> {
+        let eff = self.codec.effective(tag);
         let mut buf = self.pool.take();
-        buf.extend_from_slice(data);
-        self.stats.record_send(data.len());
-        self.txs[to]
-            .send((self.rank, tag, buf))
-            .ok()
-            .with_context(|| format!("rank {} send to dead rank {to}",
-                                     self.rank))
+        eff.encode_into(data, &mut buf, to, tag, &mut self.ef);
+        self.stats.record_send(data.len(), eff);
+        match self.txs[to].send((self.rank, tag, buf)) {
+            Ok(()) => {
+                self.ef.commit();
+                Ok(())
+            }
+            Err(_) => {
+                self.ef.abort();
+                bail!("rank {} send to dead rank {to}", self.rank)
+            }
+        }
     }
 
     /// Drain every pending mailbox message, parking mismatches, until a
@@ -211,7 +230,11 @@ impl ChannelTransport {
             match self.rx.try_recv() {
                 Ok((f, t, data)) => {
                     self.release_window(f);
-                    self.stats.record_recv(data.len());
+                    // decode at the drain: parked queues only ever
+                    // hold decoded f32 payloads
+                    let eff = self.codec.effective(t);
+                    let data = eff.decode(data)?;
+                    self.stats.record_recv(data.len(), eff);
                     if f == from && t == tag {
                         return Ok(Some(data));
                     }
@@ -264,7 +287,9 @@ impl Transport for ChannelTransport {
             match self.rx.recv_timeout(POLL) {
                 Ok((f, t, data)) => {
                     self.release_window(f);
-                    self.stats.record_recv(data.len());
+                    let eff = self.codec.effective(t);
+                    let data = eff.decode(data)?;
+                    self.stats.record_recv(data.len(), eff);
                     if f == from && t == tag {
                         return Ok(data);
                     }
@@ -283,7 +308,9 @@ impl Transport for ChannelTransport {
                         while let Ok((f, t, data)) = self.rx.try_recv()
                         {
                             self.release_window(f);
-                            self.stats.record_recv(data.len());
+                            let eff = self.codec.effective(t);
+                            let data = eff.decode(data)?;
+                            self.stats.record_recv(data.len(), eff);
                             if f == from && t == tag && found.is_none()
                             {
                                 found = Some(data);
@@ -355,6 +382,10 @@ impl Transport for ChannelTransport {
     fn stats(&self) -> TransportStats {
         self.stats
     }
+
+    fn codec(&self) -> WireCodec {
+        self.codec
+    }
 }
 
 impl Drop for ChannelTransport {
@@ -409,16 +440,39 @@ mod tests {
 
     #[test]
     fn stats_report_buffer_and_wire_bytes() {
+        // default f32 wire: measured wire bytes == buffer bytes
         let mut comms = World::new(2).into_comms();
         let mut c1 = comms.pop().unwrap();
         let mut c0 = comms.pop().unwrap();
         c0.send_slice(1, 0, &[0.0; 100]).unwrap();
         assert_eq!(c0.stats().buffer_bytes_sent, 400);
-        assert_eq!(c0.stats().wire_bytes_sent, 200);
+        assert_eq!(c0.stats().wire_bytes_sent, 400);
+        assert_eq!(c0.stats().wire_overhead_bytes_sent, 0);
         assert_eq!(c0.stats().msgs_sent, 1);
         c1.recv(0, 0).unwrap();
         assert_eq!(c1.stats().buffer_bytes_recv, 400);
+        assert_eq!(c1.stats().wire_bytes_recv, 400);
+    }
+
+    #[test]
+    fn bf16_wire_halves_measured_bytes() {
+        let mut comms = World::new(2).into_comms();
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.set_codec(WireCodec::Bf16);
+        c1.set_codec(WireCodec::Bf16);
+        // exact-in-bf16 payload round-trips bit for bit
+        let data: Vec<f32> = (0..100).map(|k| k as f32).collect();
+        c0.send_slice(1, 0, &data).unwrap();
+        assert_eq!(c0.stats().buffer_bytes_sent, 400);
+        assert_eq!(c0.stats().wire_bytes_sent, 200);
+        assert_eq!(c0.stats().wire_overhead_bytes_sent, 4);
+        assert_eq!(c1.recv(0, 0).unwrap(), data);
         assert_eq!(c1.stats().wire_bytes_recv, 200);
+        // exempt control tags still move exact f32
+        c0.send_slice(1, 0x9200, &[0.1, 0.2]).unwrap();
+        assert_eq!(c1.recv(0, 0x9200).unwrap(), vec![0.1, 0.2]);
+        assert_eq!(c0.stats().wire_bytes_sent, 200 + 8);
     }
 
     #[test]

@@ -1,0 +1,615 @@
+//! Wire codecs: the reduced-precision boundary between host-side f32
+//! buffers and what actually crosses the wire.
+//!
+//! Every transport encodes a message's payload with the world's
+//! configured [`WireCodec`] right before enqueueing it and decodes at
+//! the point where raw frames are drained back off the wire — parked
+//! queues and every caller above the transport only ever see decoded
+//! f32 data. `TransportStats` wire-byte counters are therefore
+//! *measured* traffic: `wire_bytes_*` count exactly the encoded
+//! payload bytes, and framing (count words, scales, padding) is
+//! accounted separately in `wire_overhead_bytes_*`.
+//!
+//! Frame layout (all codecs pack into `Vec<f32>` words, because that
+//! is the unit every backend moves; headers ride as raw bit patterns
+//! via `f32::from_bits`, the same trick the cross-process checksum
+//! verify uses for its u64):
+//!
+//! * `F32` — the identity: no header, the payload *is* the frame.
+//!   Bit-identical to the pre-codec wire format.
+//! * `Bf16` — `[n: u32 bits]` then `ceil(n/2)` words of two
+//!   round-to-nearest-even bf16 halves each (low half = even index).
+//!   4 bytes of header + 2 padding bytes when `n` is odd.
+//! * `Int8` — `[n: u32 bits][scale: f32]` then `ceil(n/4)` words of
+//!   four `i8` lanes each. The per-message `scale` is
+//!   `max|x + r| / 127` where `r` is the error-feedback residual
+//!   carried per `(peer, tag)` stream (see [`EfState`]).
+//!
+//! Error feedback invariant: for `Int8`, the residual after encoding
+//! is exactly `v - q·scale` element-wise (`v = x + r_prev`), staged in
+//! scratch and committed only once the encoded frame is actually
+//! enqueued — a `try_send` that reports "full" leaves the residual
+//! stream untouched, so polling never double-feeds error.
+//!
+//! The control plane is exempt: tags in `0x9100..0x9400` (checkpoint
+//! gather, checksum verify, worker probe) always ride `F32` under any
+//! configured codec — [`tag_is_exact`] is the pure function both ends
+//! compute, so sender and receiver can never disagree on a frame's
+//! encoding.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::ensure;
+
+use crate::Result;
+
+/// First tag of the exact (codec-exempt) control window.
+const EXACT_TAG_LO: u32 = 0x9100;
+/// One past the last tag of the exact control window.
+const EXACT_TAG_HI: u32 = 0x9400;
+
+/// Whether `tag` belongs to the control plane that always moves exact
+/// f32 regardless of the configured codec: the checkpoint gather
+/// (`0x9100`), the cross-process checksum verify (`0x9200`, u64 bit
+/// patterns that must round-trip exactly) and the worker probe
+/// (`0x9300`). Pure function of the tag, so both ends of a link agree.
+pub fn tag_is_exact(tag: u32) -> bool {
+    (EXACT_TAG_LO..EXACT_TAG_HI).contains(&tag)
+}
+
+/// Residual streams kept per `(peer, tag)` before the map is reset —
+/// a leak backstop far above any schedule's live tag count.
+const EF_MAX_STREAMS: usize = 4096;
+
+/// Round an f32 to the nearest bf16-representable value
+/// (round-to-nearest-even), returned as f32. Idempotent:
+/// `bf16_round(bf16_round(x)) == bf16_round(x)` bit for bit, which is
+/// what lets collectives pre-round a rank's own retained copy and keep
+/// it identical to the copies peers decode off the wire.
+pub fn bf16_round(x: f32) -> f32 {
+    f32::from_bits((bf16_bits(x) as u32) << 16)
+}
+
+/// The upper 16 bits of `x` after round-to-nearest-even; NaNs map to a
+/// quiet NaN so a payload NaN can never round to infinity.
+fn bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return 0x7FC0 | ((bits >> 16) as u16 & 0x8000);
+    }
+    ((bits + 0x7FFF + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// The wire encoding selector — the `training.wire_codec` config knob.
+/// `FromStr`/`Display` are the single spelling shared by config
+/// parsing, error messages and the report tables.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireCodec {
+    /// Passthrough: 4 B/elem, bit-identical, zero overhead.
+    #[default]
+    F32,
+    /// Round-to-nearest-even bf16 halves: 2 B/elem on the wire, f32
+    /// accumulation on arrival.
+    Bf16,
+    /// Linearly quantized i8 lanes with per-message scale and
+    /// per-stream error-feedback residuals: 1 B/elem on the wire.
+    Int8,
+}
+
+impl WireCodec {
+    /// Every codec, in conformance-suite order.
+    pub const ALL: [WireCodec; 3] =
+        [WireCodec::F32, WireCodec::Bf16, WireCodec::Int8];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireCodec::F32 => "f32",
+            WireCodec::Bf16 => "bf16",
+            WireCodec::Int8 => "int8",
+        }
+    }
+
+    /// The `a|b|c` spelling list for error messages, derived from
+    /// [`WireCodec::ALL`] so it can never drift from the real set.
+    pub fn spellings() -> String {
+        WireCodec::ALL
+            .iter()
+            .map(|c| c.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Parse an optional `--codec <name>` flag from CLI args (the
+    /// examples' and benches' shared arg convention). `Ok(None)` means
+    /// the flag is absent.
+    pub fn from_flag(args: &[String]) -> Result<Option<WireCodec>> {
+        match args.iter().position(|a| a == "--codec") {
+            Some(i) => {
+                let name = args.get(i + 1).ok_or_else(|| {
+                    anyhow::anyhow!("--codec needs a value ({})",
+                                    WireCodec::spellings())
+                })?;
+                Ok(Some(name.parse()?))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Encoded payload bytes per element, as the cost model prices it.
+    pub fn bytes_per_elem(self) -> f64 {
+        match self {
+            WireCodec::F32 => 4.0,
+            WireCodec::Bf16 => 2.0,
+            WireCodec::Int8 => 1.0,
+        }
+    }
+
+    /// Measured payload bytes for an `elems`-element message — what
+    /// the `wire_bytes_*` stats count.
+    pub fn wire_bytes(self, elems: usize) -> u64 {
+        match self {
+            WireCodec::F32 => elems as u64 * 4,
+            WireCodec::Bf16 => elems as u64 * 2,
+            WireCodec::Int8 => elems as u64,
+        }
+    }
+
+    /// Framing bytes (count word, scale, lane padding) for an
+    /// `elems`-element message — what `wire_overhead_bytes_*` count.
+    pub fn overhead_bytes(self, elems: usize) -> u64 {
+        match self {
+            WireCodec::F32 => 0,
+            // 4-byte count word + 2 bytes padding when n is odd
+            WireCodec::Bf16 => 4 + 2 * (elems as u64 % 2),
+            // count word + scale word + padding to a 4-lane boundary
+            WireCodec::Int8 => 8 + (4 - elems as u64 % 4) % 4,
+        }
+    }
+
+    /// Whether this codec discards precision on the wire. Lossy codecs
+    /// cannot promise bit-identical trajectories to an f32 run; `Int8`
+    /// additionally gives up replica bit-identity (each rank carries
+    /// its own residual stream), which is why the trainer's checksum
+    /// equality asserts are skipped under it.
+    pub fn is_lossy(self) -> bool {
+        !matches!(self, WireCodec::F32)
+    }
+
+    /// The codec a given `tag` actually rides: the configured codec,
+    /// except control-plane tags (see [`tag_is_exact`]) which are
+    /// always `F32`.
+    pub fn effective(self, tag: u32) -> WireCodec {
+        if tag_is_exact(tag) { WireCodec::F32 } else { self }
+    }
+
+    /// Project `buf` onto the codec's wire-representable values in
+    /// place — the idempotent own-copy rounding collectives apply to a
+    /// rank's *retained* data before broadcasting it, so replicas end
+    /// up bit-identical to what peers decode off the wire. A no-op for
+    /// `F32` (lossless) and `Int8` (not replica-exact by design).
+    pub fn round_slice(self, buf: &mut [f32]) {
+        if self == WireCodec::Bf16 {
+            for x in buf.iter_mut() {
+                *x = bf16_round(*x);
+            }
+        }
+    }
+
+    /// Append the encoded frame for `data` onto `out`. `self` must be
+    /// the *effective* codec for the message's tag. For `Int8` the new
+    /// residual is staged in `ef`; the caller commits it only after
+    /// the frame is actually enqueued (see [`EfState::commit`]).
+    pub(crate) fn encode_into(self, data: &[f32], out: &mut Vec<f32>,
+                              to: usize, tag: u32, ef: &mut EfState) {
+        match self {
+            WireCodec::F32 => out.extend_from_slice(data),
+            WireCodec::Bf16 => {
+                out.push(f32::from_bits(data.len() as u32));
+                let mut i = 0;
+                while i < data.len() {
+                    let lo = bf16_bits(data[i]) as u32;
+                    let hi = if i + 1 < data.len() {
+                        bf16_bits(data[i + 1]) as u32
+                    } else {
+                        0
+                    };
+                    out.push(f32::from_bits(lo | (hi << 16)));
+                    i += 2;
+                }
+            }
+            WireCodec::Int8 => encode_int8(data, out, to, tag, ef),
+        }
+    }
+
+    /// Decode a raw wire frame back into f32 payload. `self` must be
+    /// the effective codec for the frame's tag. Validates the header's
+    /// element count against the frame's actual length, so a corrupt
+    /// or truncated frame is a typed error, not a bad slice.
+    pub(crate) fn decode(self, frame: Vec<f32>) -> Result<Vec<f32>> {
+        match self {
+            WireCodec::F32 => Ok(frame),
+            WireCodec::Bf16 => {
+                ensure!(!frame.is_empty(),
+                        "bf16 frame missing its count word");
+                let n = frame[0].to_bits() as usize;
+                ensure!(frame.len() == 1 + n.div_ceil(2),
+                        "bf16 frame claims {n} elems but carries {} \
+                         words", frame.len());
+                // bounded: n is validated against the received frame
+                // length above, so this allocation is capped by what
+                // actually arrived
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let w = frame[1 + i / 2].to_bits();
+                    let half = if i % 2 == 0 { w } else { w >> 16 };
+                    out.push(f32::from_bits((half & 0xFFFF) << 16));
+                }
+                Ok(out)
+            }
+            WireCodec::Int8 => {
+                ensure!(frame.len() >= 2,
+                        "int8 frame missing its header words");
+                let n = frame[0].to_bits() as usize;
+                let scale = frame[1];
+                ensure!(frame.len() == 2 + n.div_ceil(4),
+                        "int8 frame claims {n} elems but carries {} \
+                         words", frame.len());
+                // bounded: n is validated against the received frame
+                // length above, so this allocation is capped by what
+                // actually arrived
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let w = frame[2 + i / 4].to_bits();
+                    let q = ((w >> (8 * (i % 4))) & 0xFF) as u8 as i8;
+                    out.push(q as f32 * scale);
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+impl FromStr for WireCodec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<WireCodec> {
+        for c in WireCodec::ALL {
+            if s == c.as_str() {
+                return Ok(c);
+            }
+        }
+        anyhow::bail!("unknown wire codec '{s}' (expected {})",
+                      WireCodec::spellings())
+    }
+}
+
+impl fmt::Display for WireCodec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Quantize `data + residual` to i8 lanes with a per-message scale,
+/// appending `[n][scale][lanes…]` to `out` and staging the new
+/// residual in `ef`'s scratch.
+fn encode_int8(data: &[f32], out: &mut Vec<f32>, to: usize, tag: u32,
+               ef: &mut EfState) {
+    let n = data.len();
+    let mut scratch = ef.take_scratch();
+    scratch.clear();
+    // bounded: sized by the caller's own payload, not wire input
+    scratch.reserve(n);
+    // pass 1: fold in the carried residual, track the max magnitude.
+    // a residual of mismatched length (bucket replan, first use) is a
+    // reset, not an error — error feedback restarts from zero.
+    let resid = ef.residuals.get(&(to, tag)).filter(|r| r.len() == n);
+    let mut max_abs = 0f32;
+    for (i, &x) in data.iter().enumerate() {
+        let v = x + resid.map_or(0.0, |r| r[i]);
+        max_abs = max_abs.max(v.abs());
+        scratch.push(v);
+    }
+    let scale = max_abs / 127.0;
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    out.push(f32::from_bits(n as u32));
+    out.push(scale);
+    // pass 2: quantize, leave the new residual behind in scratch
+    let mut word = 0u32;
+    for (i, v) in scratch.iter_mut().enumerate() {
+        let q = (*v * inv).round().clamp(-127.0, 127.0) as i8;
+        *v -= q as f32 * scale;
+        word |= (q as u8 as u32) << (8 * (i % 4));
+        if i % 4 == 3 {
+            out.push(f32::from_bits(word));
+            word = 0;
+        }
+    }
+    if n % 4 != 0 {
+        out.push(f32::from_bits(word));
+    }
+    ef.staged = Some(((to, tag), scratch));
+}
+
+/// Error-feedback bookkeeping for the `Int8` codec: one residual
+/// buffer per `(peer, tag)` stream, plus a staging slot so a frame
+/// that never makes it onto the wire (a `try_send` that reported
+/// full) leaves the stream's residual exactly as it was.
+#[derive(Debug, Default)]
+pub(crate) struct EfState {
+    residuals: HashMap<(usize, u32), Vec<f32>>,
+    /// Residual computed by the last `encode_into`, not yet committed.
+    staged: Option<((usize, u32), Vec<f32>)>,
+    /// Spare buffer recycled between encodes.
+    spare: Vec<f32>,
+}
+
+impl EfState {
+    fn take_scratch(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.spare)
+    }
+
+    /// The frame from the last encode was enqueued: the staged
+    /// residual becomes the stream's carried state. No-op when nothing
+    /// is staged (lossless codecs, exempt tags).
+    pub(crate) fn commit(&mut self) {
+        if let Some((key, resid)) = self.staged.take() {
+            if self.residuals.len() >= EF_MAX_STREAMS
+                && !self.residuals.contains_key(&key)
+            {
+                // leak backstop: a runaway tag space resets every
+                // stream rather than growing without bound
+                self.residuals.clear();
+            }
+            if let Some(old) = self.residuals.insert(key, resid) {
+                self.spare = old;
+            }
+        }
+    }
+
+    /// The frame was *not* enqueued: drop the staged residual, keep
+    /// the stream untouched.
+    pub(crate) fn abort(&mut self) {
+        if let Some((_, s)) = self.staged.take() {
+            self.spare = s;
+        }
+    }
+
+    #[cfg(test)]
+    fn residual(&self, to: usize, tag: u32) -> Option<&Vec<f32>> {
+        self.residuals.get(&(to, tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(codec: WireCodec, data: &[f32], ef: &mut EfState)
+        -> Vec<f32> {
+        let mut out = Vec::new();
+        codec.encode_into(data, &mut out, 1, 7, ef);
+        out
+    }
+
+    fn roundtrip(codec: WireCodec, data: &[f32]) -> Vec<f32> {
+        let mut ef = EfState::default();
+        let frame = enc(codec, data, &mut ef);
+        ef.commit();
+        let payload_words = codec.wire_bytes(data.len())
+            + codec.overhead_bytes(data.len());
+        assert_eq!(frame.len() as u64 * 4, payload_words,
+                   "frame length disagrees with the byte formulas");
+        codec.decode(frame).unwrap()
+    }
+
+    #[test]
+    fn f32_is_the_identity() {
+        let data = [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        assert_eq!(roundtrip(WireCodec::F32, &data), data);
+        assert_eq!(WireCodec::F32.wire_bytes(10), 40);
+        assert_eq!(WireCodec::F32.overhead_bytes(10), 0);
+    }
+
+    #[test]
+    fn bf16_roundtrips_exact_values_bit_for_bit() {
+        // small integers and power-of-two fractions are exact in bf16
+        let data: Vec<f32> = (-20..21).map(|k| k as f32 * 0.5).collect();
+        let back = roundtrip(WireCodec::Bf16, &data);
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1 + 2^-8 is exactly halfway between 1.0 and the next bf16;
+        // ties go to even (1.0). 1 + 3·2^-9 rounds up.
+        let half = 1.0 + 2f32.powi(-8);
+        assert_eq!(bf16_round(half), 1.0);
+        let up = 1.0 + 3.0 * 2f32.powi(-9);
+        assert_eq!(bf16_round(up), 1.0 + 2f32.powi(-7));
+        // idempotence — re-rounding is exact
+        for x in [0.1f32, -3.7, 1e20, 1e-20, half, up] {
+            let r = bf16_round(x);
+            assert_eq!(r.to_bits(), bf16_round(r).to_bits());
+        }
+        // NaN stays NaN, never becomes inf
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_handles_odd_lengths_and_empty() {
+        for n in [0usize, 1, 2, 3, 7] {
+            let data: Vec<f32> = (0..n).map(|k| k as f32).collect();
+            assert_eq!(roundtrip(WireCodec::Bf16, &data), data);
+        }
+    }
+
+    #[test]
+    fn bf16_error_is_within_relative_bound() {
+        let data: Vec<f32> =
+            (0..1000).map(|k| (k as f32 * 0.137).sin() * 3.0).collect();
+        let back = roundtrip(WireCodec::Bf16, &data);
+        for (a, b) in data.iter().zip(&back) {
+            // bf16 has 8 significand bits: relative error ≤ 2^-8
+            assert!((a - b).abs() <= a.abs() * 2f32.powi(-8) + 1e-30,
+                    "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn int8_exact_in_scale_inputs_leave_zero_residual() {
+        // values k·0.5 with max 63.5 give scale exactly 0.5: every
+        // input is exactly representable, residual must be zero
+        let data: Vec<f32> =
+            (-127..=127).map(|k| k as f32 * 0.5).collect();
+        let mut ef = EfState::default();
+        let frame = enc(WireCodec::Int8, &data, &mut ef);
+        ef.commit();
+        let back = WireCodec::Int8.decode(frame).unwrap();
+        assert_eq!(back, data);
+        let r = ef.residual(1, 7).unwrap();
+        assert!(r.iter().all(|&x| x == 0.0), "nonzero residual");
+    }
+
+    #[test]
+    fn int8_error_feedback_carries_the_quantization_error() {
+        let data = [1.0f32, 0.004, -1.0];
+        let mut ef = EfState::default();
+        let frame = enc(WireCodec::Int8, &data, &mut ef);
+        ef.commit();
+        let back = WireCodec::Int8.decode(frame).unwrap();
+        // the residual is exactly what the wire lost
+        let r = ef.residual(1, 7).unwrap().clone();
+        for i in 0..3 {
+            assert!((data[i] - back[i] - r[i]).abs() < 1e-7);
+        }
+        // a second send of the same data folds the residual back in:
+        // the two decoded frames together carry ~all of 2x the signal
+        let frame2 = enc(WireCodec::Int8, &data, &mut ef);
+        ef.commit();
+        let back2 = WireCodec::Int8.decode(frame2).unwrap();
+        for i in 0..3 {
+            let total = back[i] + back2[i];
+            assert!((total - 2.0 * data[i]).abs() <= 2.0 / 127.0,
+                    "EF did not recover elem {i}: {total}");
+        }
+    }
+
+    #[test]
+    fn int8_try_send_abort_leaves_residual_untouched() {
+        let data = [0.3f32, -0.7];
+        let mut ef = EfState::default();
+        let f1 = enc(WireCodec::Int8, &data, &mut ef);
+        ef.commit();
+        let r1 = ef.residual(1, 7).unwrap().clone();
+        // an encode whose frame never ships must not advance the stream
+        let _dropped = enc(WireCodec::Int8, &data, &mut ef);
+        ef.abort();
+        assert_eq!(ef.residual(1, 7).unwrap(), &r1);
+        // and the next committed encode reproduces the same frame
+        let f2 = enc(WireCodec::Int8, &data, &mut ef);
+        ef.commit();
+        assert_ne!(f1, f2, "residual did not feed back");
+        let f3 = enc(WireCodec::Int8, &data, &mut ef);
+        ef.abort();
+        assert_eq!(f2, f3);
+    }
+
+    #[test]
+    fn int8_residual_map_is_bounded() {
+        let mut ef = EfState::default();
+        let data = [1.0f32];
+        for tag in 0..(EF_MAX_STREAMS as u32 + 10) {
+            let mut out = Vec::new();
+            WireCodec::Int8.encode_into(&data, &mut out, 0, tag,
+                                        &mut ef);
+            ef.commit();
+        }
+        assert!(ef.residuals.len() <= EF_MAX_STREAMS);
+    }
+
+    #[test]
+    fn int8_mismatched_length_resets_the_stream() {
+        let mut ef = EfState::default();
+        let _ = enc(WireCodec::Int8, &[0.3, 0.3, 0.3], &mut ef);
+        ef.commit();
+        // shorter payload on the same stream: residual is reset, and
+        // decode still matches a fresh-stream encode
+        let f = enc(WireCodec::Int8, &[1.0], &mut ef);
+        ef.commit();
+        let mut fresh = EfState::default();
+        assert_eq!(f, enc(WireCodec::Int8, &[1.0], &mut fresh));
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_headers() {
+        // bf16: claimed count disagrees with the frame length
+        let bad = vec![f32::from_bits(100), 0.0];
+        assert!(WireCodec::Bf16.decode(bad).is_err());
+        assert!(WireCodec::Bf16.decode(Vec::new()).is_err());
+        let bad = vec![f32::from_bits(9), 0.5, 0.0];
+        assert!(WireCodec::Int8.decode(bad).is_err());
+        assert!(WireCodec::Int8.decode(vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn exempt_tags_ride_f32_under_any_codec() {
+        for c in WireCodec::ALL {
+            assert_eq!(c.effective(0x9200), WireCodec::F32);
+            assert_eq!(c.effective(0x9100), WireCodec::F32);
+            assert_eq!(c.effective(0x93FF), WireCodec::F32);
+            assert_eq!(c.effective(5), c);
+            assert_eq!(c.effective(0x9400), c);
+        }
+        assert!(tag_is_exact(0x9300));
+        assert!(!tag_is_exact(0x9000));
+    }
+
+    #[test]
+    fn spelling_roundtrips_and_flag_parses() {
+        for c in WireCodec::ALL {
+            assert_eq!(c.as_str().parse::<WireCodec>().unwrap(), c);
+            assert_eq!(format!("{c}"), c.as_str());
+        }
+        let err = "fp8".parse::<WireCodec>().unwrap_err().to_string();
+        assert!(err.contains("f32|bf16|int8"), "unhelpful: {err}");
+        let args: Vec<String> =
+            ["prog", "--codec", "bf16"].iter().map(|s| s.to_string())
+                                       .collect();
+        assert_eq!(WireCodec::from_flag(&args).unwrap(),
+                   Some(WireCodec::Bf16));
+        assert_eq!(WireCodec::from_flag(&args[..1]).unwrap(), None);
+        assert!(WireCodec::from_flag(&args[..2]).is_err());
+    }
+
+    #[test]
+    fn byte_formulas_cover_padding() {
+        assert_eq!(WireCodec::Bf16.wire_bytes(5), 10);
+        assert_eq!(WireCodec::Bf16.overhead_bytes(5), 6);
+        assert_eq!(WireCodec::Bf16.overhead_bytes(4), 4);
+        assert_eq!(WireCodec::Int8.wire_bytes(5), 5);
+        assert_eq!(WireCodec::Int8.overhead_bytes(5), 11);
+        assert_eq!(WireCodec::Int8.overhead_bytes(8), 8);
+        assert_eq!(WireCodec::F32.bytes_per_elem(), 4.0);
+        assert_eq!(WireCodec::Bf16.bytes_per_elem(), 2.0);
+        assert_eq!(WireCodec::Int8.bytes_per_elem(), 1.0);
+    }
+
+    #[test]
+    fn round_slice_is_a_noop_except_bf16() {
+        let orig = [0.1f32, 0.2, 0.3];
+        let mut buf = orig;
+        WireCodec::F32.round_slice(&mut buf);
+        assert_eq!(buf, orig);
+        WireCodec::Int8.round_slice(&mut buf);
+        assert_eq!(buf, orig);
+        WireCodec::Bf16.round_slice(&mut buf);
+        for (a, b) in orig.iter().zip(&buf) {
+            assert_eq!(bf16_round(*a).to_bits(), b.to_bits());
+        }
+    }
+}

@@ -37,6 +37,7 @@ use crate::Result;
 
 use super::{
     ShmTransport, TcpTransport, Topology, Transport, TransportStats,
+    WireCodec,
 };
 
 /// One rank's handle on the two-tier world. See the module docs.
@@ -84,6 +85,14 @@ impl HierTransport {
             }
         }
         Ok(out)
+    }
+
+    /// Switch the wire codec on *both* tiers. Each tier keeps its own
+    /// error-feedback state (residual streams are per-link, and the
+    /// two tiers are distinct links by construction).
+    pub(crate) fn set_codec(&mut self, codec: WireCodec) {
+        self.intra.set_codec(codec);
+        self.inter.set_codec(codec);
     }
 
     /// Whether traffic to `peer` stays on the intra (shm) tier.
@@ -163,11 +172,20 @@ impl Transport for HierTransport {
                 + e.buffer_bytes_recv,
             wire_bytes_sent: i.wire_bytes_sent + e.wire_bytes_sent,
             wire_bytes_recv: i.wire_bytes_recv + e.wire_bytes_recv,
+            wire_overhead_bytes_sent: i.wire_overhead_bytes_sent
+                + e.wire_overhead_bytes_sent,
+            wire_overhead_bytes_recv: i.wire_overhead_bytes_recv
+                + e.wire_overhead_bytes_recv,
             intra_wire_bytes_sent: i.wire_bytes_sent,
             intra_wire_bytes_recv: i.wire_bytes_recv,
             inter_wire_bytes_sent: e.wire_bytes_sent,
             inter_wire_bytes_recv: e.wire_bytes_recv,
         }
+    }
+
+    fn codec(&self) -> WireCodec {
+        // both tiers always share one codec (`set_codec` sets both)
+        self.intra.codec()
     }
 
     fn topology(&self) -> Option<&Topology> {
@@ -217,11 +235,11 @@ mod tests {
             (c0, h1.join().unwrap(), h3.join().unwrap())
         });
         let s0 = c0.stats();
-        assert_eq!(s0.intra_wire_bytes_sent, 4); // 2 elems × 2 B
-        assert_eq!(s0.inter_wire_bytes_sent, 2); // 1 elem × 2 B
-        assert_eq!(s0.wire_bytes_sent, 6);
-        assert_eq!(c1.stats().intra_wire_bytes_recv, 4);
-        assert_eq!(c3.stats().inter_wire_bytes_recv, 2);
+        assert_eq!(s0.intra_wire_bytes_sent, 8); // 2 elems × 4 B (f32)
+        assert_eq!(s0.inter_wire_bytes_sent, 4); // 1 elem × 4 B
+        assert_eq!(s0.wire_bytes_sent, 12);
+        assert_eq!(c1.stats().intra_wire_bytes_recv, 8);
+        assert_eq!(c3.stats().inter_wire_bytes_recv, 4);
         drop(c0);
     }
 

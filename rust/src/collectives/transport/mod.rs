@@ -48,12 +48,14 @@
 //! test. Nothing else in the crate changes.
 
 pub mod channel;
+pub mod codec;
 pub mod hier;
 pub mod shm;
 pub mod spsc;
 pub mod tcp;
 
 pub use channel::{ChannelTransport, World};
+pub use codec::WireCodec;
 pub use hier::HierTransport;
 pub use shm::ShmTransport;
 pub use tcp::{MeshConfig, TcpTransport};
@@ -275,17 +277,16 @@ impl fmt::Display for Topology {
 /// Bytes per f32 element in the host-side buffer handed to `send`.
 pub const BUFFER_BYTES_PER_ELEM: u64 = 4;
 
-/// Bytes per element on the modeled wire. Gradients travel bf16 under
-/// the paper's mixed-precision DDP compress hook (the α-β cost model
-/// prices exactly this), while the host buffers our CPU collectives
-/// move are f32 — so wire bytes are half the buffer bytes. Reporting
-/// both keeps the comm-exposed column honest.
-pub const WIRE_BYTES_PER_ELEM: u64 = 2;
-
 /// Per-transport traffic accounting, kept by every backend and
-/// snapshotted by the trainer each step. Replaces the old ad-hoc
-/// `bytes_sent` field (which silently reported f32 buffer bytes as if
-/// they were wire traffic).
+/// snapshotted by the trainer each step. Every byte counted here was
+/// *measured* at the encode/decode boundary: `buffer_bytes_*` are the
+/// f32 payloads callers hand in (4 B/elem), `wire_bytes_*` are the
+/// encoded payload bytes that actually crossed the wire under the
+/// world's configured [`WireCodec`] (4/2/1 B/elem for f32/bf16/int8),
+/// and `wire_overhead_bytes_*` are the codec's framing (count words,
+/// scales, lane padding). Nothing is modeled — the cost model's
+/// pricing is validated against these counters, not the source of
+/// them.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TransportStats {
     /// Messages handed to `send` / returned by the transport.
@@ -294,10 +295,14 @@ pub struct TransportStats {
     /// f32 payload bytes (4 B/elem) — what the host buffers hold.
     pub buffer_bytes_sent: u64,
     pub buffer_bytes_recv: u64,
-    /// Modeled wire bytes (bf16, 2 B/elem) — what the α-β model prices
-    /// and what the Fig. 1 traffic column reports.
+    /// Measured encoded payload bytes that crossed the wire under the
+    /// configured codec (bytes-per-elem × elems, excluding framing).
     pub wire_bytes_sent: u64,
     pub wire_bytes_recv: u64,
+    /// Codec framing bytes (count/scale words, padding) that crossed
+    /// the wire alongside the payload — zero for `f32`.
+    pub wire_overhead_bytes_sent: u64,
+    pub wire_overhead_bytes_recv: u64,
     /// Per-tier wire-byte split, filled only by the hierarchical
     /// transport (`hier`): intra = the shm/NVLink tier, inter = the
     /// tcp/25 GbE tier. Flat backends leave all four zero, so the
@@ -310,16 +315,20 @@ pub struct TransportStats {
 }
 
 impl TransportStats {
-    pub(crate) fn record_send(&mut self, elems: usize) {
+    pub(crate) fn record_send(&mut self, elems: usize,
+                              codec: WireCodec) {
         self.msgs_sent += 1;
         self.buffer_bytes_sent += elems as u64 * BUFFER_BYTES_PER_ELEM;
-        self.wire_bytes_sent += elems as u64 * WIRE_BYTES_PER_ELEM;
+        self.wire_bytes_sent += codec.wire_bytes(elems);
+        self.wire_overhead_bytes_sent += codec.overhead_bytes(elems);
     }
 
-    pub(crate) fn record_recv(&mut self, elems: usize) {
+    pub(crate) fn record_recv(&mut self, elems: usize,
+                              codec: WireCodec) {
         self.msgs_recv += 1;
         self.buffer_bytes_recv += elems as u64 * BUFFER_BYTES_PER_ELEM;
-        self.wire_bytes_recv += elems as u64 * WIRE_BYTES_PER_ELEM;
+        self.wire_bytes_recv += codec.wire_bytes(elems);
+        self.wire_overhead_bytes_recv += codec.overhead_bytes(elems);
     }
 
     /// Field-wise delta against an `earlier` snapshot — per-step
@@ -336,6 +345,10 @@ impl TransportStats {
                 - earlier.wire_bytes_sent,
             wire_bytes_recv: self.wire_bytes_recv
                 - earlier.wire_bytes_recv,
+            wire_overhead_bytes_sent: self.wire_overhead_bytes_sent
+                - earlier.wire_overhead_bytes_sent,
+            wire_overhead_bytes_recv: self.wire_overhead_bytes_recv
+                - earlier.wire_overhead_bytes_recv,
             intra_wire_bytes_sent: self.intra_wire_bytes_sent
                 - earlier.intra_wire_bytes_sent,
             intra_wire_bytes_recv: self.intra_wire_bytes_recv
@@ -394,6 +407,13 @@ pub trait Transport {
 
     /// Traffic snapshot since this transport was created.
     fn stats(&self) -> TransportStats;
+
+    /// The wire codec this transport encodes payloads with. Both ends
+    /// of a world must agree (enforced by construction:
+    /// [`Backend::world_with`] sets one codec for the whole world).
+    fn codec(&self) -> WireCodec {
+        WireCodec::F32
+    }
 
     /// The rank→node grouping behind this transport, when it has one.
     /// Flat backends return `None`; the hierarchical transport returns
@@ -460,20 +480,22 @@ impl Backend {
         }
     }
 
-    /// Build a fully wired world of `world` transports, one per rank.
-    /// The hierarchical backend derives a default topology of
-    /// two-rank groups (the TX-GAIN node shape) — use
-    /// [`Backend::world_with`] to pick the grouping.
+    /// Build a fully wired world of `world` transports, one per rank,
+    /// on the lossless `f32` wire. The hierarchical backend derives a
+    /// default topology of two-rank groups (the TX-GAIN node shape) —
+    /// use [`Backend::world_with`] to pick the grouping or codec.
     pub fn world(self, world: usize) -> Result<Vec<AnyTransport>> {
-        self.world_with(world, None)
+        self.world_with(world, None, WireCodec::F32)
     }
 
     /// Like [`Backend::world`] but with an explicit [`Topology`] for
-    /// the hierarchical backend. Flat backends ignore `topo`; `hier`
-    /// defaults to even two-rank groups when `topo` is `None`.
-    pub fn world_with(self, world: usize, topo: Option<&Topology>)
-        -> Result<Vec<AnyTransport>> {
-        Ok(match self {
+    /// the hierarchical backend and a [`WireCodec`] applied uniformly
+    /// to every rank (both tiers, for `hier`). Flat backends ignore
+    /// `topo`; `hier` defaults to even two-rank groups when `topo` is
+    /// `None`.
+    pub fn world_with(self, world: usize, topo: Option<&Topology>,
+                      codec: WireCodec) -> Result<Vec<AnyTransport>> {
+        let mut comms: Vec<AnyTransport> = match self {
             Backend::Channel => World::new(world)
                 .into_comms()
                 .into_iter()
@@ -506,7 +528,13 @@ impl Backend {
                     .map(AnyTransport::Hier)
                     .collect()
             }
-        })
+        };
+        if codec != WireCodec::F32 {
+            for c in &mut comms {
+                c.set_codec(codec);
+            }
+        }
+        Ok(comms)
     }
 }
 
@@ -538,6 +566,20 @@ pub enum AnyTransport {
     Shm(ShmTransport),
     Tcp(TcpTransport),
     Hier(HierTransport),
+}
+
+impl AnyTransport {
+    /// Switch the wire codec. Must be applied to *every* rank of a
+    /// world before any traffic flows — mixed codecs on one link are
+    /// a decode error by construction.
+    pub(crate) fn set_codec(&mut self, codec: WireCodec) {
+        match self {
+            AnyTransport::Channel(t) => t.set_codec(codec),
+            AnyTransport::Shm(t) => t.set_codec(codec),
+            AnyTransport::Tcp(t) => t.set_codec(codec),
+            AnyTransport::Hier(t) => t.set_codec(codec),
+        }
+    }
 }
 
 impl Transport for AnyTransport {
@@ -616,6 +658,15 @@ impl Transport for AnyTransport {
         }
     }
 
+    fn codec(&self) -> WireCodec {
+        match self {
+            AnyTransport::Channel(t) => t.codec(),
+            AnyTransport::Shm(t) => t.codec(),
+            AnyTransport::Tcp(t) => t.codec(),
+            AnyTransport::Hier(t) => t.codec(),
+        }
+    }
+
     fn topology(&self) -> Option<&Topology> {
         match self {
             AnyTransport::Hier(t) => t.topology(),
@@ -656,21 +707,34 @@ mod tests {
 
     #[test]
     fn stats_track_buffer_and_wire_bytes() {
+        // f32 wire: measured wire bytes equal buffer bytes, no framing
         let mut s = TransportStats::default();
-        s.record_send(100);
-        s.record_recv(40);
+        s.record_send(100, WireCodec::F32);
+        s.record_recv(40, WireCodec::F32);
         assert_eq!(s.msgs_sent, 1);
         assert_eq!(s.buffer_bytes_sent, 400);
-        assert_eq!(s.wire_bytes_sent, 200);
+        assert_eq!(s.wire_bytes_sent, 400);
+        assert_eq!(s.wire_overhead_bytes_sent, 0);
         assert_eq!(s.buffer_bytes_recv, 160);
-        assert_eq!(s.wire_bytes_recv, 80);
+        assert_eq!(s.wire_bytes_recv, 160);
         let s0 = s;
-        s.record_send(10);
+        s.record_send(10, WireCodec::F32);
         let d = s.since(&s0);
         assert_eq!(d.msgs_sent, 1);
         assert_eq!(d.buffer_bytes_sent, 40);
-        assert_eq!(d.wire_bytes_sent, 20);
+        assert_eq!(d.wire_bytes_sent, 40);
         assert_eq!(d.msgs_recv, 0);
+
+        // reduced-precision codecs: wire bytes shrink, framing is
+        // counted apart from payload
+        let mut s = TransportStats::default();
+        s.record_send(100, WireCodec::Bf16);
+        assert_eq!(s.buffer_bytes_sent, 400);
+        assert_eq!(s.wire_bytes_sent, 200);
+        assert_eq!(s.wire_overhead_bytes_sent, 4);
+        s.record_recv(101, WireCodec::Int8);
+        assert_eq!(s.wire_bytes_recv, 101);
+        assert_eq!(s.wire_overhead_bytes_recv, 8 + 3);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure};
 
+use super::codec::{EfState, WireCodec};
 use super::spsc::{self, MemOrd, RecvPoll, RingMem, SendPoll};
 use super::{spin_backoff, BufferPool, Transport, TransportStats};
 use crate::util::sync::lock_unpoisoned;
@@ -129,6 +130,10 @@ pub struct ShmTransport {
     /// Out-of-order arrivals parked until someone asks for them.
     parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
     pool: BufferPool,
+    /// Wire codec payloads are encoded/decoded with at the ring
+    /// boundary, plus its error-feedback state.
+    codec: WireCodec,
+    ef: EfState,
     stats: TransportStats,
 }
 
@@ -148,9 +153,16 @@ impl ShmTransport {
                 shared: shared.clone(),
                 parked: HashMap::new(),
                 pool: BufferPool::new(),
+                codec: WireCodec::F32,
+                ef: EfState::default(),
                 stats: TransportStats::default(),
             })
             .collect()
+    }
+
+    /// Switch the wire codec (every rank of a world must agree).
+    pub(crate) fn set_codec(&mut self, codec: WireCodec) {
+        self.codec = codec;
     }
 
     /// Publish `data` into the `self → to` ring if a slot is free.
@@ -163,15 +175,19 @@ impl ShmTransport {
             alive: &self.shared.alive[to],
         };
         let pool = &mut self.pool;
+        let ef = &mut self.ef;
+        let eff = self.codec.effective(tag);
         match spsc::offer(&mut mem, || {
             // only runs once room is confirmed — a full ring costs no
-            // allocation or copy
+            // allocation, copy, or residual update, so the int8
+            // error-feedback stream only advances on frames that ship
             let mut buf = pool.take();
-            buf.extend_from_slice(data);
+            eff.encode_into(data, &mut buf, to, tag, ef);
             (tag, buf)
         }) {
             SendPoll::Sent => {
-                self.stats.record_send(data.len());
+                self.ef.commit();
+                self.stats.record_send(data.len(), eff);
                 Ok(true)
             }
             SendPoll::Full => Ok(false),
@@ -193,7 +209,11 @@ impl ShmTransport {
             };
             match spsc::poll(&mut mem)? {
                 RecvPoll::Got((t, data)) => {
-                    self.stats.record_recv(data.len());
+                    // decode at the drain: parked queues only ever
+                    // hold decoded f32 payloads
+                    let eff = self.codec.effective(t);
+                    let data = eff.decode(data)?;
+                    self.stats.record_recv(data.len(), eff);
                     if t == tag {
                         return Ok(RecvPoll::Got(data));
                     }
@@ -287,6 +307,10 @@ impl Transport for ShmTransport {
 
     fn stats(&self) -> TransportStats {
         self.stats
+    }
+
+    fn codec(&self) -> WireCodec {
+        self.codec
     }
 }
 

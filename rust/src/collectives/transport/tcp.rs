@@ -54,6 +54,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context};
 
+use super::codec::{EfState, WireCodec};
 use super::{BufferPool, Transport, TransportStats};
 use crate::util::bytes::u32_at;
 use crate::Result;
@@ -327,6 +328,12 @@ pub struct TcpTransport {
     peers: Vec<Option<Peer>>,
     parked: HashMap<(usize, u32), VecDeque<Vec<f32>>>,
     pool: BufferPool,
+    /// Wire codec payloads are encoded/decoded with at the frame
+    /// boundary, plus its error-feedback state. The socket frames
+    /// carry codec *words*, so bf16/int8 genuinely halve/quarter the
+    /// bytes written to the kernel.
+    codec: WireCodec,
+    ef: EfState,
     stats: TransportStats,
 }
 
@@ -370,9 +377,18 @@ impl TcpTransport {
                 peers,
                 parked: HashMap::new(),
                 pool: BufferPool::new(),
+                codec: WireCodec::F32,
+                ef: EfState::default(),
                 stats: TransportStats::default(),
             })
             .collect())
+    }
+
+    /// Switch the wire codec (every rank of a world must agree — the
+    /// worker entry point applies the config's codec on each process
+    /// right after `process_mesh`).
+    pub(crate) fn set_codec(&mut self, codec: WireCodec) {
+        self.codec = codec;
     }
 
     /// Build this rank's handle over a *cross-process* mesh.
@@ -506,6 +522,8 @@ impl TcpTransport {
             peers,
             parked: HashMap::new(),
             pool: BufferPool::new(),
+            codec: WireCodec::F32,
+            ef: EfState::default(),
             stats: TransportStats::default(),
         })
     }
@@ -546,23 +564,31 @@ impl Transport for TcpTransport {
     fn send_slice(&mut self, to: usize, tag: u32, data: &[f32])
         -> Result<()> {
         self.check_peer(to, "send to")?;
+        let eff = self.codec.effective(tag);
         let mut buf = self.pool.take();
-        buf.extend_from_slice(data);
+        eff.encode_into(data, &mut buf, to, tag, &mut self.ef);
         let peer = peer_of(&self.peers, to, self.rank)?;
         // ord: Acquire pairs with the writer thread's Release store on
         // write failure
         if peer.dead.load(Ordering::Acquire) {
+            self.ef.abort();
             bail!("rank {} send to dead rank {to} (connection lost)",
                   self.rank);
         }
-        self.stats.record_send(data.len());
+        self.stats.record_send(data.len(), eff);
         // ord: Relaxed — advisory depth probe, see Peer::queued
         peer.queued.fetch_add(1, Ordering::Relaxed);
-        peer.tx
-            .send((tag, buf))
-            .ok()
-            .with_context(|| format!("rank {} send to dead rank {to} \
-                                      (writer shut down)", self.rank))
+        match peer.tx.send((tag, buf)) {
+            Ok(()) => {
+                self.ef.commit();
+                Ok(())
+            }
+            Err(_) => {
+                self.ef.abort();
+                bail!("rank {} send to dead rank {to} (writer shut \
+                       down)", self.rank)
+            }
+        }
     }
 
     fn recv(&mut self, from: usize, tag: u32) -> Result<Vec<f32>> {
@@ -581,7 +607,11 @@ impl Transport for TcpTransport {
                     "rank {}: rank {from} closed the connection \
                      (dead peer)", self.rank),
             };
-            self.stats.record_recv(data.len());
+            // decode at the drain: parked queues only ever hold
+            // decoded f32 payloads
+            let eff = self.codec.effective(t);
+            let data = eff.decode(data)?;
+            self.stats.record_recv(data.len(), eff);
             if t == tag {
                 return Ok(data);
             }
@@ -609,27 +639,32 @@ impl Transport for TcpTransport {
                 return Ok(false);
             }
         }
+        let eff = self.codec.effective(tag);
         let mut buf = self.pool.take();
-        buf.extend_from_slice(data);
+        eff.encode_into(data, &mut buf, to, tag, &mut self.ef);
         let peer = peer_of(&self.peers, to, self.rank)?;
         // ord: Relaxed — advisory depth probe, see Peer::queued
         peer.queued.fetch_add(1, Ordering::Relaxed);
         match peer.tx.try_send((tag, buf)) {
             Ok(()) => {
-                self.stats.record_send(data.len());
+                self.stats.record_send(data.len(), eff);
+                self.ef.commit();
                 Ok(true)
             }
             Err(TrySendError::Full((_, buf))) => {
                 // lost the race with another fill between probe and
-                // send; undo the reservation and retry next poll
+                // send; undo the reservation (including the staged
+                // int8 residual) and retry next poll
                 // ord: Relaxed — advisory, see Peer::queued
                 peer.queued.fetch_sub(1, Ordering::Relaxed);
                 self.pool.put(buf);
+                self.ef.abort();
                 Ok(false)
             }
             Err(TrySendError::Disconnected(_)) => {
                 // ord: Relaxed — advisory, see Peer::queued
                 peer.queued.fetch_sub(1, Ordering::Relaxed);
+                self.ef.abort();
                 bail!("rank {} send to dead rank {to} (writer shut \
                        down)", self.rank)
             }
@@ -654,7 +689,9 @@ impl Transport for TcpTransport {
                     "rank {}: rank {from} closed the connection \
                      (dead peer)", self.rank),
             };
-            self.stats.record_recv(data.len());
+            let eff = self.codec.effective(t);
+            let data = eff.decode(data)?;
+            self.stats.record_recv(data.len(), eff);
             if t == tag {
                 return Ok(Some(data));
             }
@@ -668,6 +705,10 @@ impl Transport for TcpTransport {
 
     fn stats(&self) -> TransportStats {
         self.stats
+    }
+
+    fn codec(&self) -> WireCodec {
+        self.codec
     }
 }
 

@@ -39,6 +39,14 @@ pub fn allreduce<T: Transport>(comm: &mut T, buf: &mut [f32])
         dist *= 2;
     }
 
+    // Lossy-codec replica identity: every other rank will receive a
+    // codec-rounded copy of the root's buffer; round the root's own
+    // copy too so all replicas agree bit-for-bit (rounding is
+    // idempotent, so forwarding hops re-encode exactly).
+    if rank == 0 {
+        comm.codec().round_slice(buf);
+    }
+
     // Broadcast: mirror of the reduce schedule.
     let mut dist = 1;
     while dist * 2 < world {
@@ -87,6 +95,9 @@ pub fn all_gather<T: Transport>(comm: &mut T, buf: &mut [f32])
             buf[a..b].copy_from_slice(&incoming);
             comm.recycle(incoming);
         }
+        // round before rebroadcast so the root's replica matches the
+        // codec-rounded copies every other rank receives
+        comm.codec().round_slice(buf);
         for r in 1..world {
             comm.send_slice(r, AG_BCAST_TAG, buf)?;
         }

@@ -97,6 +97,9 @@ fn real_training(batch: usize, steps: usize) -> TrainingConfig {
         // in-process mpsc default; smoke/bench runs can flip to
         // "shm"/"tcp" — numerics are transport-invariant
         transport: "channel".into(),
+        // lossless wire default: real-mode trajectories stay
+        // bit-identical to pre-codec runs
+        wire_codec: "f32".into(),
         topology: String::new(),
         auto_tune: false,
         bucket_mb: 25.0,
@@ -183,6 +186,10 @@ pub fn paper_full_scale() -> Config {
             mode: ExecMode::Simulated,
             batch_per_gpu: 184,
             steps: 100,
+            // the paper's stack syncs gradients in bf16; the simulator
+            // prices the wire at 2 B/elem accordingly (as it always
+            // has — this knob just names it)
+            wire_codec: "bf16".into(),
             ..real_training(184, 100)
         },
         launch: LaunchConfig::default(),

@@ -4,7 +4,7 @@
 use anyhow::{bail, ensure};
 
 use super::{deny_unknown, ClusterConfig, ModelConfig};
-use crate::collectives::{Algorithm, Backend, Topology};
+use crate::collectives::{Algorithm, Backend, Topology, WireCodec};
 use crate::util::json::{self, Value};
 use crate::Result;
 
@@ -61,6 +61,16 @@ pub struct TrainingConfig {
     /// identical on all of them (enforced by the conformance suite);
     /// only the wire under the collectives changes.
     pub transport: String,
+    /// Wire codec for collective payloads ("f32" | "bf16" | "int8"):
+    /// what actually crosses the transport. `f32` is lossless
+    /// passthrough (bit-identical to historical runs); `bf16`
+    /// round-to-nearest-even converts at the send boundary and
+    /// accumulates in f32 on arrival (half the wire bytes); `int8`
+    /// quantizes per message with a shared scale and carries the
+    /// quantization error forward as an error-feedback residual
+    /// (quarter the wire bytes). Control-plane traffic (checkpoint
+    /// gather, checksum verify, worker probe) always rides f32.
+    pub wire_codec: String,
     /// Rank→node grouping for `transport = "hier"`, as comma-separated
     /// contiguous group sizes ("4,4" = two nodes of four ranks; uneven
     /// groups allowed). Empty (the default) derives even groups of
@@ -104,7 +114,7 @@ impl TrainingConfig {
         deny_unknown(v, &["mode", "batch_per_gpu", "steps", "lr",
                           "warmup_steps", "beta1", "beta2", "weight_decay",
                           "adam_eps", "allreduce", "transport",
-                          "topology", "auto_tune",
+                          "wire_codec", "topology", "auto_tune",
                           "bucket_mb", "first_bucket_mb", "overlap_comm",
                           "comm_engine", "zero_stage",
                           "checkpoint_every", "log_every"])?;
@@ -130,6 +140,9 @@ impl TrainingConfig {
             transport: v.get("transport")
                 .map(|x| x.as_str().map(str::to_string)).transpose()?
                 .unwrap_or_else(|| "channel".into()),
+            wire_codec: v.get("wire_codec")
+                .map(|x| x.as_str().map(str::to_string)).transpose()?
+                .unwrap_or_else(|| "f32".into()),
             topology: v.get("topology")
                 .map(|x| x.as_str().map(str::to_string)).transpose()?
                 .unwrap_or_default(),
@@ -160,6 +173,7 @@ impl TrainingConfig {
             ("adam_eps", json::num(self.adam_eps)),
             ("allreduce", json::s(&self.allreduce)),
             ("transport", json::s(&self.transport)),
+            ("wire_codec", json::s(&self.wire_codec)),
             ("topology", json::s(&self.topology)),
             ("auto_tune", Value::Bool(self.auto_tune)),
             ("bucket_mb", json::num(self.bucket_mb)),
@@ -185,6 +199,7 @@ impl TrainingConfig {
         // so config errors quote exactly what the trainer would accept
         let algo: Algorithm = self.allreduce.parse()?;
         let _: Backend = self.transport.parse()?;
+        let _: WireCodec = self.wire_codec.parse()?;
         if algo == Algorithm::Hierarchical {
             ensure!(self.transport == "hier",
                     "allreduce = \"hierarchical\" runs on the two-tier \
@@ -337,6 +352,31 @@ mod tests {
         cfg.training.transport = "infiniband".into();
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("channel|shm|tcp"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn wire_codec_knob_is_validated() {
+        let mut cfg = presets::quickstart();
+        for ok in ["f32", "bf16", "int8"] {
+            cfg.training.wire_codec = ok.into();
+            assert!(cfg.validate().is_ok(), "wire_codec={ok} rejected");
+        }
+        cfg.training.wire_codec = "fp4".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("f32|bf16|int8"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn wire_codec_defaults_to_f32() {
+        // a config JSON without the knob parses to the lossless
+        // passthrough — old configs keep their exact trajectories
+        let t = presets::e2e_pretrain().training;
+        let mut v = t.to_json();
+        if let Value::Obj(ref mut kv) = v {
+            kv.retain(|(k, _)| k != "wire_codec");
+        }
+        let back = TrainingConfig::from_json(&v).unwrap();
+        assert_eq!(back.wire_codec, "f32");
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //!
 //! Step anatomy (per rank, steady state with prefetch):
 //!   compute   = batch · FLOPs/sample ÷ (peak · MFU(batch))
-//!   comm      = hierarchical ring/tree all-reduce of bf16 grads; when
+//!   comm      = hierarchical ring/tree all-reduce of gradients at the
+//!               configured `training.wire_codec` width (the paper's
+//!               stack syncs in bf16, which is what the full-scale
+//!               preset prices); when
 //!               `overlap_comm` (DDP) the gradient is synced in
 //!               `bucket_mb` buckets launched as backward retires
 //!               layers in reverse order, and only the pipeline tail
@@ -27,7 +30,7 @@
 
 use crate::cluster::{MemoryModel, StorageModel};
 use crate::collectives::{Algorithm, BucketPlan, CostModel, RankMemory,
-                         TunedPlan};
+                         TunedPlan, WireCodec};
 use crate::config::{Config, StagingPolicy};
 use crate::data::records::Sample;
 
@@ -90,8 +93,9 @@ pub struct SimResult {
     pub comm_exposed_secs: f64,
     /// Gradient buckets used for the overlap (1 when overlap is off).
     pub comm_buckets: usize,
-    /// Modeled inter-node wire bytes per step (bf16 gradient traffic
-    /// priced by the α-β model). Under ring (the paper's algorithm)
+    /// Modeled inter-node wire bytes per step (gradient traffic at the
+    /// configured `wire_codec` width, priced by the α-β model — bf16
+    /// in the paper preset). Under ring (the paper's algorithm)
     /// the schedule is symmetric and this is directly comparable to
     /// the trainer's measured `TransportStats::wire_bytes_sent` per
     /// rank; under tree it reports the busiest (root) link, an upper
@@ -144,7 +148,13 @@ pub fn simulate(cfg: &Config) -> SimResult {
     // gradient sync: bucketed all-reduce pipelined against backward
     // (≈ 2/3 of compute) when overlap is on, blocking otherwise
     let cost = CostModel::from_cluster(c);
-    let grad_bytes = CostModel::gradient_bytes(cfg.model.param_count());
+    // wire width comes from the codec knob (the paper preset says
+    // bf16, which is what this model always priced); an unvalidated
+    // config falls back to the lossless f32 default
+    let codec: WireCodec =
+        cfg.training.wire_codec.parse().unwrap_or_default();
+    let grad_bytes = CostModel::gradient_bytes_codec(
+        cfg.model.param_count(), codec);
     // FromStr shares the config's spelling; an unvalidated config
     // falls back to ring (the paper's algorithm) rather than panicking
     let algo: Algorithm =
@@ -159,7 +169,7 @@ pub fn simulate(cfg: &Config) -> SimResult {
     // (`CostModel::flat_ring_allreduce`).
     let tuned: Option<TunedPlan> = if cfg.training.auto_tune {
         Some(cost.auto_tune(c.nodes, grad_bytes, bwd,
-                            cfg.training.transport == "hier"))
+                            cfg.training.transport == "hier", codec))
     } else {
         None
     };
@@ -170,8 +180,8 @@ pub fn simulate(cfg: &Config) -> SimResult {
     };
     // bucket_mb counts f32 *buffer* bytes, so derive params/bucket
     // from the real trainer's own BucketPlan arithmetic; the wire
-    // moves bf16 (CostModel::gradient_bytes, 2 of the buffer's 4
-    // bytes/param), so a bucket carries 2 bytes per param. Pricing
+    // moves the codec's width (2 of the buffer's 4 bytes/param under
+    // bf16), so a bucket carries `bytes_per_elem` per param. Pricing
     // runs over the plan's own ready-order size list (including the
     // smaller `first_bucket_mb` bucket when set), so the priced
     // schedule is exactly the one real mode runs — bucket for bucket.
@@ -187,7 +197,7 @@ pub fn simulate(cfg: &Config) -> SimResult {
         params, bucket_elems, first_elems,
         crate::collectives::cost::MAX_MODELED_BUCKETS)
         .into_iter()
-        .map(|e| e as f64 * 2.0)
+        .map(|e| e as f64 * codec.bytes_per_elem())
         .collect();
     let (comm, comm_exposed, comm_buckets) = if zero >= 1 {
         // ZeRO-1: reduce-scatter overlapped with backward, then the

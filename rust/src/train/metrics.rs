@@ -37,8 +37,9 @@ pub struct StepRecord {
     /// f32 buffer bytes this rank handed to the transport this step
     /// (4 B/elem — the host-side traffic).
     pub comm_buffer_bytes: u64,
-    /// Modeled wire bytes for the same traffic (bf16, 2 B/elem — what
-    /// the α-β cost model prices; see `TransportStats`).
+    /// Measured payload bytes the configured wire codec actually put
+    /// on the wire for the same traffic (4 B/elem under f32, 2 under
+    /// bf16, 1 under int8 — see `TransportStats::wire_bytes_sent`).
     pub comm_wire_bytes: u64,
     /// Bytes the streaming loader read from disk in this step's
     /// interval (block-cache misses; prefetch skews attribution by a
@@ -99,7 +100,8 @@ impl RunReport {
         self.records.iter().map(|r| r.comm_buffer_bytes).sum()
     }
 
-    /// Total modeled wire bytes (bf16) for the run's gradient traffic.
+    /// Total measured wire bytes the codec put on the wire for the
+    /// run's gradient traffic.
     pub fn comm_wire_bytes(&self) -> u64 {
         self.records.iter().map(|r| r.comm_wire_bytes).sum()
     }

@@ -46,7 +46,7 @@ use crate::collectives::{allreduce, bucketed_all_gather,
                          Algorithm, AnyTransport, Backend, BucketPlan,
                          CollectiveKind, CommEngine, CostModel,
                          PendingBucket, Topology, Transport,
-                         TransportStats};
+                         TransportStats, WireCodec};
 use crate::config::{Config, ExecMode};
 use crate::data::{BlockCache, DatasetIndex, LoaderPool, Masker,
                   WindowedPlan};
@@ -214,10 +214,14 @@ fn sync_and_step_engine(
         let mut buf = eng.take_buf();
         buf.extend_from_slice(grads);
         let t = Instant::now();
-        let grad_p =
-            eng.launch_bucket(algo, CollectiveKind::Allreduce, buf)?;
-        let loss_p = eng.launch_bucket(algo, CollectiveKind::Allreduce,
-                                       vec![loss_scaled])?;
+        // keyed launches: the grad op reuses slot 0 and the loss op
+        // slot 1 every step, so under int8+EF each stream's residual
+        // carries into the SAME logical tensor next step (EF keys
+        // residuals by (peer, tag))
+        let grad_p = eng.launch_bucket_keyed(
+            algo, CollectiveKind::Allreduce, buf, 0)?;
+        let loss_p = eng.launch_bucket_keyed(
+            algo, CollectiveKind::Allreduce, vec![loss_scaled], 1)?;
         let got = eng.wait(grad_p)?;
         grads.copy_from_slice(&got);
         eng.recycle(got);
@@ -243,20 +247,27 @@ fn sync_and_step_engine(
     } else {
         CollectiveKind::Allreduce
     };
+    // keyed launches: bucket i always rides slot i (its stable tag
+    // window), the loss op slot n_buckets, and the ZeRO-1 all-gather
+    // of bucket i slot n_buckets+1+i — so under int8+EF every
+    // residual stream carries into the same logical tensor on the
+    // next step instead of whatever the rotating window lands on
+    let n_buckets = buckets.n_buckets();
     let mut pend: Vec<(usize, PendingBucket)> =
-        Vec::with_capacity(buckets.n_buckets());
+        Vec::with_capacity(n_buckets);
     for i in buckets.ready_order() {
         let (a, b) = buckets.span(i);
         let mut buf = eng.take_buf();
         buf.extend_from_slice(&grads[a..b]);
         let t = Instant::now();
-        let p = eng.launch_bucket(algo, kind, buf)?;
+        let p = eng.launch_bucket_keyed(algo, kind, buf, i as u32)?;
         exposed += t.elapsed().as_secs_f64();
         pend.push((i, p));
     }
     let t = Instant::now();
-    let loss_p = eng.launch_bucket(algo, CollectiveKind::Allreduce,
-                                   vec![loss_scaled])?;
+    let loss_p = eng.launch_bucket_keyed(
+        algo, CollectiveKind::Allreduce, vec![loss_scaled],
+        n_buckets as u32)?;
     exposed += t.elapsed().as_secs_f64();
 
     opt.tick();
@@ -282,8 +293,9 @@ fn sync_and_step_engine(
             let mut agbuf = eng.take_buf();
             agbuf.extend_from_slice(&flat_params[a..b]);
             let t = Instant::now();
-            let p = eng.launch_bucket(algo, CollectiveKind::AllGather,
-                                      agbuf)?;
+            let p = eng.launch_bucket_keyed(
+                algo, CollectiveKind::AllGather, agbuf,
+                (n_buckets + 1 + i) as u32)?;
             exposed += t.elapsed().as_secs_f64();
             ag_pend.push((i, p));
         }
@@ -357,6 +369,7 @@ struct RunPlan {
     world: usize,
     backend: Backend,
     topo: Option<Topology>,
+    codec: WireCodec,
 }
 
 /// Validate `cfg`, cross-check the artifact, open the dataset and
@@ -406,6 +419,12 @@ fn prepare(cfg: &Config, opts: &TrainOptions) -> Result<RunPlan> {
     // two-tier shm × tcp composition) — validated spelling shared with
     // config and the report layer
     let backend: Backend = cfg.training.transport.parse()?;
+    // wire codec for collective payloads: f32 passthrough (lossless
+    // default), bf16 (half the wire bytes, deterministic rounding), or
+    // int8 with error feedback (quarter width, residual-carried) —
+    // applied at the transport boundary, so every send/recv path and
+    // every wire-byte counter below reflects it
+    let codec: WireCodec = cfg.training.wire_codec.parse()?;
     // rank→group topology for the hier transport: the configured
     // grouping, or even groups of gpus_per_node ranks when unset
     // (validation already checked any configured string against the
@@ -434,9 +453,11 @@ fn prepare(cfg: &Config, opts: &TrainOptions) -> Result<RunPlan> {
                 .effective_flops(batch, cfg.cluster.gpu_peak_tflops);
         let plan = cost.auto_tune(
             cfg.cluster.nodes,
-            CostModel::gradient_bytes(meta.grad_len as u64),
+            CostModel::gradient_bytes_codec(meta.grad_len as u64,
+                                            codec),
             compute * 2.0 / 3.0,
-            backend == Backend::Hier);
+            backend == Backend::Hier,
+            codec);
         println!(
             "[train] auto-tune: {} / bucket {:.0} MB / first {:.0} MB              (modeled exposed comm {:.1} ms/step)",
             plan.algorithm.as_str(), plan.bucket_mb,
@@ -540,6 +561,7 @@ fn prepare(cfg: &Config, opts: &TrainOptions) -> Result<RunPlan> {
         world,
         backend,
         topo,
+        codec,
     })
 }
 
@@ -702,11 +724,11 @@ fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
             };
 
             // the step's measured traffic: both the f32 buffer bytes
-            // the host moved and the modeled bf16 wire bytes the α-β
-            // model prices (see TransportStats). The engine refreshes
-            // its snapshot at every op completion, and everything
-            // launched this step has been waited — the delta is exact
-            // in both modes.
+            // the host moved and the bytes the configured wire codec
+            // actually put on the wire (see TransportStats). The
+            // engine refreshes its snapshot at every op completion,
+            // and everything launched this step has been waited — the
+            // delta is exact in both modes.
             let step_traffic = driver.stats().since(&stats_before);
 
             if rank == 0 {
@@ -829,7 +851,8 @@ fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
 pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
     let plan = prepare(cfg, opts)?;
     let world = plan.world;
-    let comms = plan.backend.world_with(world, plan.topo.as_ref())?;
+    let comms =
+        plan.backend.world_with(world, plan.topo.as_ref(), plan.codec)?;
     let outcomes: Vec<Result<RankOutcome>> = std::thread::scope(|scope| {
         let handles: Vec<_> = comms
             .into_iter()
@@ -858,12 +881,19 @@ pub fn train(cfg: &Config, opts: &TrainOptions) -> Result<RunReport> {
         outcomes.into_iter().collect::<Result<_>>()?;
     outcomes.sort_by_key(|o| o.rank);
 
-    // the DDP invariant: replicas stayed identical
-    let c0 = outcomes[0].param_checksum;
-    for o in &outcomes[1..] {
-        ensure!(o.param_checksum == c0,
-                "rank {} diverged from rank 0 (checksum mismatch)",
-                o.rank);
+    // the DDP invariant: replicas stayed identical. Under int8+EF the
+    // invariant is deliberately relaxed — each rank carries its own
+    // quantization residuals, so replicas track each other within the
+    // EF error bound instead of bit-exactly (f32 is lossless and bf16
+    // rounds every replica to the same wire value, so both keep the
+    // bit-exact form).
+    if plan.codec != WireCodec::Int8 {
+        let c0 = outcomes[0].param_checksum;
+        for o in &outcomes[1..] {
+            ensure!(o.param_checksum == c0,
+                    "rank {} diverged from rank 0 (checksum mismatch)",
+                    o.rank);
+        }
     }
 
     Ok(RunReport {
@@ -890,7 +920,14 @@ const VERIFY_TAG: u32 = 0x9200;
 /// doubles as an exit barrier: no worker tears down its mesh before
 /// every rank's checksum has been checked (a mismatch surfaces on
 /// rank 0; the other ranks then see its death as a dead-peer error).
-fn verify_checksums<T: Transport>(comm: &mut T, my: u64) -> Result<()> {
+///
+/// `VERIFY_TAG` sits in the exempt control plane (0x9100..0x9400), so
+/// the checksum bit patterns ride the wire as raw f32 under every
+/// codec. `strict: false` (int8+EF, whose per-rank residuals relax
+/// bit-identity) keeps the collection and the exit barrier but skips
+/// the equality assertion.
+fn verify_checksums<T: Transport>(comm: &mut T, my: u64, strict: bool)
+    -> Result<()> {
     let rank = comm.rank();
     let world = comm.world();
     if rank == 0 {
@@ -903,7 +940,7 @@ fn verify_checksums<T: Transport>(comm: &mut T, my: u64) -> Result<()> {
                     v.len());
             let theirs = ((v[0].to_bits() as u64) << 32)
                 | v[1].to_bits() as u64;
-            ensure!(theirs == my,
+            ensure!(theirs == my || !strict,
                     "rank {r} diverged from rank 0 (checksum \
                      mismatch)");
         }
@@ -932,22 +969,29 @@ fn verify_checksums<T: Transport>(comm: &mut T, my: u64) -> Result<()> {
 /// Returns `Some(report)` on rank 0 (which also owns writing it),
 /// `None` on every other rank.
 pub fn train_worker(cfg: &Config, opts: &TrainOptions,
-                    comm: AnyTransport) -> Result<Option<RunReport>> {
+                    mut comm: AnyTransport)
+    -> Result<Option<RunReport>> {
     let plan = prepare(cfg, opts)?;
     ensure!(comm.world() == plan.world,
             "transport world {} != config world {} (nodes × \
              gpus_per_node)", comm.world(), plan.world);
+    // the externally wired mesh was built codec-agnostic (the worker
+    // rendezvous plane always talks f32); every rank derives the same
+    // codec from the shared config, so both ends of every link agree
+    comm.set_codec(plan.codec);
     let rank = comm.rank();
+    let strict = plan.codec != WireCodec::Int8;
     let mut driver = make_driver(cfg, comm);
     let outcome = run_rank(cfg, opts, &plan, rank, &mut driver)?;
     match &mut driver {
         Driver::Blocking(comm) => {
-            verify_checksums(comm, outcome.param_checksum)?
+            verify_checksums(comm, outcome.param_checksum, strict)?
         }
         Driver::Engine(eng) => {
             let mut t = eng.checkout()?;
             let verified =
-                verify_checksums(&mut t, outcome.param_checksum);
+                verify_checksums(&mut t, outcome.param_checksum,
+                                 strict);
             eng.checkin(t);
             verified?
         }

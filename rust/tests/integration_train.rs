@@ -497,3 +497,68 @@ fn loader_count_does_not_change_numerics() {
     };
     assert_eq!(run_with(1), run_with(4));
 }
+
+#[test]
+fn bf16_wire_halves_measured_bytes_and_tracks_the_f32_loss() {
+    // the tentpole acceptance, through the full trainer: switching
+    // training.wire_codec to bf16 must halve every step's measured
+    // comm_wire_bytes EXACTLY (payload counters exclude framing, which
+    // rides wire_overhead_bytes), and int8 must quarter them, while
+    // the host-side buffer traffic stays codec-invariant. The bf16
+    // trajectory drifts from f32 only by wire rounding — a few 1e-3
+    // over 6 tiny-model steps — and int8+EF stays in the same basin.
+    let run_with = |codec: &str| -> Vec<(f32, u64, u64)> {
+        let dir = workdir(&format!("codec-{codec}"));
+        let mut cfg = tiny_cfg(6);
+        cfg.training.wire_codec = codec.into();
+        let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+        let rows = out.report.records.iter()
+            .map(|r| (r.loss, r.comm_buffer_bytes, r.comm_wire_bytes))
+            .collect();
+        std::fs::remove_dir_all(&dir).unwrap();
+        rows
+    };
+    let f32_run = run_with("f32");
+    let bf16_run = run_with("bf16");
+    let int8_run = run_with("int8");
+    assert_eq!(f32_run.len(), 6);
+    for (i, ((fl, fb, fw), (bl, bb, bw))) in
+        f32_run.iter().zip(&bf16_run).enumerate()
+    {
+        assert_eq!(fb, bb, "step {i}: buffer bytes moved with codec");
+        assert_eq!(*fw, bw * 2,
+                   "step {i}: bf16 wire {bw} != half of f32 {fw}");
+        assert!((fl - bl).abs() < 0.05,
+                "step {i}: bf16 loss {bl} far from f32 {fl}");
+    }
+    for (i, ((fl, fb, fw), (il, ib, iw))) in
+        f32_run.iter().zip(&int8_run).enumerate()
+    {
+        assert_eq!(fb, ib, "step {i}: buffer bytes moved with codec");
+        assert_eq!(*fw, iw * 4,
+                   "step {i}: int8 wire {iw} != quarter of f32 {fw}");
+        assert!((fl - il).abs() < 0.2,
+                "step {i}: int8 loss {il} far from f32 {fl}");
+    }
+}
+
+#[test]
+fn int8_error_feedback_still_converges() {
+    // the EF convergence criterion: the 1-byte wire quantizes every
+    // hop to 255 levels, but the carried residuals re-inject what
+    // quantization dropped, so the real training loss must still fall
+    // like the f32 run in loss_decreases_over_training does
+    let dir = workdir("int8-loss");
+    let mut cfg = tiny_cfg(50);
+    cfg.training.wire_codec = "int8".into();
+    cfg.training.lr = 1e-3;
+    cfg.training.warmup_steps = 5;
+    let out = coordinator::run(&cfg, &artifacts(), &dir).unwrap();
+    let r = &out.report;
+    assert_eq!(r.records.len(), 50);
+    let first = r.first_loss().unwrap();
+    let tail = r.tail_loss(5).unwrap();
+    assert!(tail < first - 0.5,
+            "int8+EF loss did not fall: {first} -> {tail}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

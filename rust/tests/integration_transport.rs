@@ -15,7 +15,8 @@ use txgain::collectives::{all_gather, allreduce, bucketed_all_gather,
                           reduce_scatter, shard_spans, Algorithm,
                           AnyTransport, Backend, BucketPlan,
                           CollectiveKind, CommEngine, PendingBucket,
-                          Topology, Transport, TransportStats};
+                          Topology, Transport, TransportStats,
+                          WireCodec};
 
 /// Deterministic integer-valued inputs: sums over ≤8 ranks are exact
 /// in f32, so bit-identity across backends/algorithms is well-defined.
@@ -215,8 +216,9 @@ mod suite {
 
     pub fn wire_accounting_matches_alpha_beta_model(backend: Backend) {
         // measured wire bytes for a flat ring all-reduce must equal
-        // the α-β model's 2(R-1)/R × bf16 bytes — the cross-check the
-        // Fig. 1 wire/step column rests on
+        // the α-β model's 2(R-1)/R formula at the codec's width — the
+        // default codec is f32, so the wire carries the buffer's own
+        // 4 B/elem (the per-codec widths are covered in `codec_axis`)
         let world = 4usize;
         let len = 400usize; // divisible by world: exact formula
         let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
@@ -226,11 +228,11 @@ mod suite {
         let out = run_world(backend, inputs(world, len), op);
         let elems = (2 * (world - 1) * (len / world)) as u64;
         for (r, (_, stats)) in out.iter().enumerate() {
-            assert_eq!(stats.wire_bytes_sent, elems * 2,
+            assert_eq!(stats.wire_bytes_sent, elems * 4,
                        "{backend} rank={r}: wire bytes");
             assert_eq!(stats.buffer_bytes_sent, elems * 4,
                        "{backend} rank={r}: buffer bytes");
-            assert_eq!(stats.wire_bytes_recv, elems * 2,
+            assert_eq!(stats.wire_bytes_recv, elems * 4,
                        "{backend} rank={r}: ring symmetry broken");
             assert_eq!(stats.msgs_sent, 2 * (world as u64 - 1));
         }
@@ -612,7 +614,7 @@ mod hier {
         assert_eq!(world, topo.world());
         std::thread::scope(|s| {
             Backend::Hier
-                .world_with(world, Some(topo))
+                .world_with(world, Some(topo), WireCodec::F32)
                 .unwrap()
                 .into_iter()
                 .zip(bufs)
@@ -747,8 +749,9 @@ mod hier {
     #[test]
     fn per_tier_wire_bytes_match_the_schedule_formula() {
         // measured per-tier wire traffic must equal the replayed
-        // schedule's element counts × 2 B (modeled bf16) — the check
-        // the cost model's hierarchical pricing rests on
+        // schedule's element counts × 4 B (the default f32 codec) —
+        // the check the cost model's hierarchical pricing rests on;
+        // the reduced-width variants are covered in `codec_axis`
         for world in [4usize, 8] {
             for topo in topologies(world) {
                 for (kind, op) in [
@@ -782,12 +785,12 @@ mod hier {
                     let inter_recv: u64 = out.iter()
                         .map(|(_, s)| s.inter_wire_bytes_recv)
                         .sum();
-                    assert_eq!(intra_sent, intra * 2,
+                    assert_eq!(intra_sent, intra * 4,
                                "topo={topo} {kind:?}: intra tier");
-                    assert_eq!(inter_sent, inter * 2,
+                    assert_eq!(inter_sent, inter * 4,
                                "topo={topo} {kind:?}: inter tier");
                     // every slow-tier byte sent is received
-                    assert_eq!(inter_recv, inter * 2,
+                    assert_eq!(inter_recv, inter * 4,
                                "topo={topo} {kind:?}: inter symmetry");
                     // and the tier split exhausts the totals
                     for (r, (_, s)) in out.iter().enumerate() {
@@ -840,7 +843,7 @@ mod hier {
     fn dead_peer_errors_on_both_tiers() {
         let topo: Topology = "2,2".parse().unwrap();
         // intra tier: rank 1 (same group as 0) dies
-        let mut comms = Backend::Hier.world_with(4, Some(&topo)).unwrap();
+        let mut comms = Backend::Hier.world_with(4, Some(&topo), WireCodec::F32).unwrap();
         let c3 = comms.pop().unwrap();
         let c2 = comms.pop().unwrap();
         let c1 = comms.pop().unwrap();
@@ -851,7 +854,7 @@ mod hier {
         drop((c2, c3));
 
         // inter tier: rank 2 (other group's leader) dies
-        let mut comms = Backend::Hier.world_with(4, Some(&topo)).unwrap();
+        let mut comms = Backend::Hier.world_with(4, Some(&topo), WireCodec::F32).unwrap();
         let c3 = comms.pop().unwrap();
         let c2 = comms.pop().unwrap();
         let c1 = comms.pop().unwrap();
@@ -882,7 +885,7 @@ mod hier {
                     BucketPlan::from_elems_with_first(len, 23, 7);
                 let got: Vec<Vec<f32>> = std::thread::scope(|s| {
                     Backend::Hier
-                        .world_with(world, Some(&topo))
+                        .world_with(world, Some(&topo), WireCodec::F32)
                         .unwrap()
                         .into_iter()
                         .zip(inputs(world, len))
@@ -929,6 +932,53 @@ mod hier {
     }
 
     #[test]
+    fn hier_per_tier_bytes_follow_the_codec_width() {
+        // the per-tier counters are measured through the same codec
+        // boundary as the totals: under bf16 every tier's wire bytes
+        // are exactly 2 B/elem of the replayed schedule's counts
+        let topo: Topology = "2,2".parse().unwrap();
+        let len = 256usize;
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                allreduce(Algorithm::Hierarchical, c, buf).unwrap()
+            };
+        let world = 4usize;
+        let out: Vec<(Vec<f32>, TransportStats)> =
+            std::thread::scope(|s| {
+                Backend::Hier
+                    .world_with(world, Some(&topo), WireCodec::Bf16)
+                    .unwrap()
+                    .into_iter()
+                    .zip(inputs(world, len))
+                    .enumerate()
+                    .map(|(rank, (mut c, mut buf))| {
+                        s.spawn(move || {
+                            op(rank, world, &mut c, &mut buf);
+                            (buf, c.stats())
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+        let (intra, inter) =
+            tier_wire_elems(&topo, len, CollectiveKind::Allreduce);
+        let intra_sent: u64 =
+            out.iter().map(|(_, s)| s.intra_wire_bytes_sent).sum();
+        let inter_sent: u64 =
+            out.iter().map(|(_, s)| s.inter_wire_bytes_sent).sum();
+        assert_eq!(intra_sent, intra * 2, "bf16 intra tier");
+        assert_eq!(inter_sent, inter * 2, "bf16 inter tier");
+        for (r, (_, s)) in out.iter().enumerate() {
+            assert_eq!(s.wire_bytes_sent,
+                       s.intra_wire_bytes_sent
+                           + s.inter_wire_bytes_sent,
+                       "rank={r}: tier split must exhaust the total");
+        }
+    }
+
+    #[test]
     fn engine_hier_zero1_pipeline_bit_identical() {
         // the engine-driven ZeRO-1 skeleton on hierarchical
         // collectives (concurrent hier RS → nonlinear shard update →
@@ -955,7 +1005,7 @@ mod hier {
                                      inputs(world, len), blocking);
                 let got: Vec<Vec<f32>> = std::thread::scope(|s| {
                     Backend::Hier
-                        .world_with(world, Some(&topo))
+                        .world_with(world, Some(&topo), WireCodec::F32)
                         .unwrap()
                         .into_iter()
                         .zip(inputs(world, len))
@@ -1014,6 +1064,379 @@ mod hier {
                                    "topo={topo} rank={r}: {a} != {b}");
                     }
                 }
+            }
+        }
+    }
+}
+
+/// The wire-codec axis (the reduced-precision tentpole): every codec
+/// on every backend must (a) put exactly its advertised bytes on the
+/// wire — measured, not modeled — (b) honor its numeric contract:
+/// bit-identity for `f32` always and for `bf16` on exact-in-bf16
+/// inputs, a provable accumulation bound on everything else, and
+/// (c) keep dead-peer errors and the engine/blocking bit-equivalence
+/// intact under every encoding.
+mod codec_axis {
+    use super::*;
+
+    const BACKENDS: [Backend; 3] =
+        [Backend::Channel, Backend::Shm, Backend::Tcp];
+
+    /// Fractional inputs that are NOT exact in bf16 or int8, so the
+    /// error-bound rows measure real rounding rather than luck.
+    fn rough_inputs(world: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..world)
+            .map(|r| {
+                (0..len)
+                    .map(|i| {
+                        ((r * 31 + i * 7) % 97) as f32 * 0.013 - 0.6
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Run `op` on every rank of a fresh `backend` world with `codec`
+    /// on every wire.
+    fn run_codec_world(
+        backend: Backend,
+        codec: WireCodec,
+        bufs: Vec<Vec<f32>>,
+        op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>),
+    ) -> Vec<(Vec<f32>, TransportStats)> {
+        let world = bufs.len();
+        std::thread::scope(|s| {
+            backend
+                .world_with(world, None, codec)
+                .unwrap()
+                .into_iter()
+                .zip(bufs)
+                .enumerate()
+                .map(|(rank, (mut c, mut buf))| {
+                    s.spawn(move || {
+                        op(rank, world, &mut c, &mut buf);
+                        (buf, c.stats())
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        })
+    }
+
+    #[test]
+    fn f32_codec_is_bit_identical_to_the_default_wire() {
+        // wire_codec = "f32" must be indistinguishable from the
+        // pre-codec wire: same bits, same traffic accounting
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                allreduce(Algorithm::Ring, c, buf).unwrap();
+            };
+        for backend in BACKENDS {
+            let got = run_codec_world(backend, WireCodec::F32,
+                                      inputs(4, 103), op);
+            let want = run_world(backend, inputs(4, 103), op);
+            for (r, ((g, gs), (w, ws))) in
+                got.iter().zip(&want).enumerate()
+            {
+                for (a, b) in g.iter().zip(w) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{backend} rank={r}");
+                }
+                assert_eq!(gs, ws, "{backend} rank={r}: stats differ");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_is_bit_identical_on_exact_inputs() {
+        // `inputs` is integer-valued in [-20, 20] and every partial
+        // sum over ≤8 ranks stays below 256 — all exact in bf16's
+        // 8-bit significand. The bf16 wire must therefore reproduce
+        // the f32 run bit for bit, on every backend and algorithm.
+        for world in [2usize, 4, 8] {
+            for algo in [Algorithm::Ring, Algorithm::Tree] {
+                let op: fn(usize, usize, &mut AnyTransport,
+                           &mut Vec<f32>) = match algo {
+                    Algorithm::Ring => |_, _, c, buf| {
+                        allreduce(Algorithm::Ring, c, buf).unwrap()
+                    },
+                    Algorithm::Tree => |_, _, c, buf| {
+                        allreduce(Algorithm::Tree, c, buf).unwrap()
+                    },
+                    Algorithm::Hierarchical => unreachable!(),
+                };
+                let want = run_codec_world(Backend::Channel,
+                                           WireCodec::F32,
+                                           inputs(world, 103), op);
+                for backend in BACKENDS {
+                    let got = run_codec_world(backend, WireCodec::Bf16,
+                                              inputs(world, 103), op);
+                    for (r, ((g, _), (w, _))) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        for (a, b) in g.iter().zip(w) {
+                            assert_eq!(a.to_bits(), b.to_bits(),
+                                       "{backend} {algo} world={world} \
+                                        rank={r}: {a} != {b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_codecs_stay_within_the_accumulation_bound() {
+        // on rough (non-exact) inputs the lossy wire drifts from the
+        // f32 result, but provably: every hop rounds a partial sum
+        // whose magnitude is ≤ W·max|input|, with ≤ W+2 roundings on
+        // any element's path. bf16 rounds at 2^-8 relative; int8 at
+        // scale/2 = max/254 absolute per encode (×2 slack on both).
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                allreduce(Algorithm::Ring, c, buf).unwrap();
+            };
+        for world in [2usize, 4, 8] {
+            let len = 103usize;
+            let max_in = rough_inputs(world, len)
+                .iter()
+                .flatten()
+                .fold(0f32, |m, x| m.max(x.abs()));
+            let want = run_codec_world(Backend::Channel, WireCodec::F32,
+                                       rough_inputs(world, len), op);
+            for (codec, tol) in [
+                (WireCodec::Bf16,
+                 (world as f32 + 2.0) * world as f32 * max_in / 128.0),
+                (WireCodec::Int8,
+                 (world as f32 + 2.0) * world as f32 * max_in / 127.0),
+            ] {
+                for backend in BACKENDS {
+                    let got = run_codec_world(
+                        backend, codec, rough_inputs(world, len), op);
+                    for (r, ((g, _), (w, _))) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        for (i, (a, b)) in g.iter().zip(w).enumerate()
+                        {
+                            assert!(
+                                (a - b).abs() <= tol,
+                                "{backend} {codec} world={world} \
+                                 rank={r} elem={i}: |{a} - {b}| > \
+                                 {tol}");
+                        }
+                    }
+                    // bf16 keeps the replica-identity invariant: the
+                    // own-span rounding makes every rank hold the
+                    // same bits (int8's per-rank residuals give this
+                    // up by design — replicas only track each other)
+                    if codec == WireCodec::Bf16 {
+                        for (r, (g, _)) in got.iter().enumerate() {
+                            assert_eq!(g, &got[0].0,
+                                       "{backend} world={world} \
+                                        rank={r}: bf16 replicas \
+                                        diverged");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_zero1_skeleton_keeps_replicas_identical() {
+        // RS → nonlinear shard update (whose outputs are NOT bf16
+        // values) → AG: the all-gather's own-span rounding must leave
+        // every replica bit-identical anyway — the invariant the
+        // trainer's checksum assert rides under bf16
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |rank, world, c, buf| {
+                let plan = BucketPlan::from_elems(buf.len(), 29);
+                bucketed_reduce_scatter(Algorithm::Ring, c, buf, &plan)
+                    .unwrap();
+                for &(a, b) in &plan.rank_ranges(rank, world) {
+                    for x in &mut buf[a..b] {
+                        *x = (*x * 0.5 + 1.0) / (x.abs() + 2.0);
+                    }
+                }
+                bucketed_all_gather(Algorithm::Ring, c, buf, &plan)
+                    .unwrap();
+            };
+        for world in [2usize, 4, 8] {
+            for backend in BACKENDS {
+                let got = run_codec_world(backend, WireCodec::Bf16,
+                                          rough_inputs(world, 103), op);
+                for (r, (g, _)) in got.iter().enumerate() {
+                    assert_eq!(g, &got[0].0,
+                               "{backend} world={world} rank={r}: \
+                                replicas diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bytes_follow_the_codec_width() {
+        // the acceptance criterion, measured: a ring all-reduce sends
+        // 2(R-1) spans of len/R elems per rank, and the counters must
+        // equal the codec's exact per-message byte formulas — payload
+        // at bytes-per-elem, framing in the overhead counter. bf16's
+        // payload is exactly half of f32's.
+        let world = 4usize;
+        let len = 400usize; // span 100: even and 4-lane aligned
+        let op: fn(usize, usize, &mut AnyTransport, &mut Vec<f32>) =
+            |_, _, c, buf| {
+                allreduce(Algorithm::Ring, c, buf).unwrap();
+            };
+        let span = len / world;
+        let msgs = 2 * (world as u64 - 1);
+        for backend in BACKENDS {
+            let mut per_codec = Vec::new();
+            for codec in WireCodec::ALL {
+                let out = run_codec_world(backend, codec,
+                                          inputs(world, len), op);
+                for (r, (_, s)) in out.iter().enumerate() {
+                    assert_eq!(s.wire_bytes_sent,
+                               msgs * codec.wire_bytes(span),
+                               "{backend} {codec} rank={r}: payload");
+                    assert_eq!(s.wire_bytes_recv,
+                               msgs * codec.wire_bytes(span),
+                               "{backend} {codec} rank={r}: symmetry");
+                    assert_eq!(s.wire_overhead_bytes_sent,
+                               msgs * codec.overhead_bytes(span),
+                               "{backend} {codec} rank={r}: overhead");
+                    // the host-side buffer traffic is codec-invariant
+                    assert_eq!(s.buffer_bytes_sent,
+                               msgs * span as u64 * 4,
+                               "{backend} {codec} rank={r}: buffer");
+                }
+                per_codec.push(out[0].1.wire_bytes_sent);
+            }
+            // bf16 moves exactly half the f32 payload, int8 a quarter
+            assert_eq!(per_codec[1] * 2, per_codec[0], "{backend}");
+            assert_eq!(per_codec[2] * 4, per_codec[0], "{backend}");
+        }
+    }
+
+    #[test]
+    fn dead_peer_errors_under_every_codec() {
+        // precision must not cost liveness: a dead peer is a typed
+        // error under every encoding, on every backend
+        for backend in BACKENDS {
+            for codec in WireCodec::ALL {
+                let mut comms =
+                    backend.world_with(2, None, codec).unwrap();
+                let mut c1 = comms.pop().unwrap();
+                let c0 = comms.pop().unwrap();
+                drop(c0);
+                assert!(c1.recv(0, 0).is_err(),
+                        "{backend} {codec}: recv from dead peer hung \
+                         or succeeded");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_blocking_under_every_codec() {
+        // the comm engine replays the blocking hop schedules and the
+        // same own-copy rounding points, so its results must be
+        // bit-identical to the blocking path under every codec —
+        // including int8, where both paths quantize identical partial
+        // sums through fresh residual streams
+        let len = 103usize;
+        for codec in WireCodec::ALL {
+            for world in [2usize, 4] {
+                let blocking: fn(usize, usize, &mut AnyTransport,
+                                 &mut Vec<f32>) = |_, _, c, buf| {
+                    let plan =
+                        BucketPlan::from_elems_with_first(buf.len(),
+                                                          23, 7);
+                    bucketed_allreduce(Algorithm::Ring, c, buf, &plan)
+                        .unwrap();
+                };
+                for backend in BACKENDS {
+                    let want = run_codec_world(
+                        backend, codec, rough_inputs(world, len),
+                        blocking);
+                    let plan =
+                        BucketPlan::from_elems_with_first(len, 23, 7);
+                    let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+                        backend
+                            .world_with(world, None, codec)
+                            .unwrap()
+                            .into_iter()
+                            .zip(rough_inputs(world, len))
+                            .map(|(c, mut buf)| {
+                                let plan = plan.clone();
+                                s.spawn(move || {
+                                    let mut eng = CommEngine::new(c);
+                                    let pend: Vec<(usize,
+                                                   PendingBucket)> =
+                                        plan.ready_order()
+                                            .map(|i| {
+                                                let (a, b) =
+                                                    plan.span(i);
+                                                (i, eng.launch_bucket(
+                                                    Algorithm::Ring,
+                                                    CollectiveKind::Allreduce,
+                                                    buf[a..b].to_vec())
+                                                    .unwrap())
+                                            })
+                                            .collect();
+                                    for (i, p) in pend {
+                                        let (a, b) = plan.span(i);
+                                        let got = eng.wait(p).unwrap();
+                                        buf[a..b]
+                                            .copy_from_slice(&got);
+                                        eng.recycle(got);
+                                    }
+                                    buf
+                                })
+                            })
+                            .collect::<Vec<_>>()
+                            .into_iter()
+                            .map(|h| h.join().unwrap())
+                            .collect()
+                    });
+                    for (r, (g, (w, _))) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        for (a, b) in g.iter().zip(w) {
+                            assert_eq!(
+                                a.to_bits(), b.to_bits(),
+                                "{backend} {codec} world={world} \
+                                 rank={r}: engine {a} != blocking \
+                                 {b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exempt_control_tags_ride_exact_under_lossy_codecs() {
+        // the checksum-verify plane moves u64 bit patterns as f32
+        // words; under a lossy codec those tags must still round-trip
+        // exactly (0x9200 is in the exempt window)
+        for backend in BACKENDS {
+            for codec in [WireCodec::Bf16, WireCodec::Int8] {
+                let mut comms =
+                    backend.world_with(2, None, codec).unwrap();
+                let mut c1 = comms.pop().unwrap();
+                let mut c0 = comms.pop().unwrap();
+                let checksum: u64 = 0xDEAD_BEEF_CAFE_F00D;
+                let payload = [f32::from_bits((checksum >> 32) as u32),
+                               f32::from_bits(checksum as u32)];
+                c0.send_slice(1, 0x9200, &payload).unwrap();
+                let got = c1.recv(0, 0x9200).unwrap();
+                assert_eq!(got.len(), 2, "{backend} {codec}");
+                let back = ((got[0].to_bits() as u64) << 32)
+                    | got[1].to_bits() as u64;
+                assert_eq!(back, checksum,
+                           "{backend} {codec}: exempt tag was \
+                            re-encoded");
             }
         }
     }

@@ -62,6 +62,13 @@ for backend in channel shm tcp hier; do
     cargo test -q --test integration_transport "${backend}::"
 done
 
+# the wire-codec axis: every codec (f32/bf16/int8+EF) on every backend
+# — bit-identity and bounded-error contracts, measured wire bytes
+# against the codec's exact byte formulas (bf16 == f32/2), dead peers
+# under every encoding, engine == blocking bit-equivalence
+echo "verify.sh: wire-codec conformance"
+cargo test -q --test integration_transport "codec_axis::"
+
 # the streaming-data-plane conformance suite: streaming vs in-memory
 # bit-identity, mid-epoch resume, cache budget bounds (also part of
 # `cargo test -q`; the explicit re-run names the data plane when it
@@ -91,11 +98,13 @@ target/release/txgain launch --workers 4 --smoke \
 
 # the async-comm-engine overlap gate: measured wall-clock exposed comm
 # with the engine must not exceed the blocking baseline (world 4, shm),
-# and the hierarchical all-reduce must not expose more than the flat
-# ring on the two-tier hier transport (emulated 2 nodes x 4 ranks).
-# Fast (~a dozen emulated steps); exits nonzero on regression, so a
-# change that quietly serializes the engine's pipeline — or a schedule
-# change that makes topology-awareness a pessimization — fails CI here
+# the hierarchical all-reduce must not expose more than the flat ring
+# on the two-tier hier transport (emulated 2 nodes x 4 ranks), and the
+# bf16 wire must not expose more than the f32 wire on tcp (world 4) —
+# half the bytes must not cost more wall-clock. Fast (~a dozen
+# emulated steps); exits nonzero on regression, so a change that
+# quietly serializes the engine's pipeline — or a codec that rounds on
+# the critical path — fails CI here
 echo "verify.sh: rec4 overlap smoke gate"
 cargo bench --bench rec4_overlap -- --smoke
 
