@@ -1,30 +1,36 @@
-//! ZeRO-1 deep-dive: what sharding optimizer states buys at each world
-//! size. Sweeps the Fig. 1 node counts with `training.zero_stage` 0
-//! and 1 through the calibrated simulator and prints the 1/N
-//! optimizer-memory curve, the freed headroom, the auto-solved
-//! micro-batch, and the step-time price (the post-step parameter
-//! all-gather).
+//! ZeRO deep-dive: what sharding optimizer states (stage 1) and
+//! gradients (stage 2, free-on-reduce) buys at each world size. Sweeps
+//! the Fig. 1 node counts with `training.zero_stage` 0 and the chosen
+//! sharded stage through the calibrated simulator and prints the 1/N
+//! memory curves, the freed headroom, the auto-solved micro-batch, and
+//! the step-time price (the post-step parameter all-gather).
 //!
-//! A final section runs the real ZeRO-1 wire pattern (bucketed
-//! reduce-scatter → shard write → all-gather) on the transport
-//! backends behind `training.transport`; pass
-//! `--transport channel|shm|tcp` to pin one, default sweeps all three,
-//! and `--codec f32|bf16|int8` to pick the wire encoding
-//! (`training.wire_codec`, default f32).
+//! A final section runs the real sharded wire pattern on the transport
+//! backends behind `training.transport` — stage 1 as in-place bucketed
+//! reduce-scatter → shard write → all-gather, stage 2 as the trainer's
+//! free-on-reduce schedule with a `ShardGrads` store and a
+//! `GradResidency`-measured gradient-plane peak.
+//!
+//! Flags: `--stage 1|2` picks the sharded stage (default 2),
+//! `--grad-dtype f32|bf16` the stage-2 gradient storage width
+//! (default f32, `training.grad_dtype`), `--transport
+//! channel|shm|tcp` pins one backend (default sweeps all), and
+//! `--codec f32|bf16|int8` the wire encoding (`training.wire_codec`).
 //!
 //! ```sh
 //! cargo run --release --example zero_memory
-//! cargo run --release --example zero_memory -- --transport shm
+//! cargo run --release --example zero_memory -- --stage 1
 //! cargo run --release --example zero_memory -- --transport tcp \
-//!     --codec bf16
+//!     --codec bf16 --grad-dtype bf16
 //! ```
 
 use txgain::collectives::{bucketed_all_gather, bucketed_reduce_scatter,
-                          Algorithm, Backend, BucketPlan, RankMemory,
-                          WireCodec};
-use txgain::config::presets;
+                          reduce_scatter, Algorithm, Backend,
+                          BucketPlan, GradDtype, RankMemory, WireCodec};
+use txgain::config::{presets, ZERO_STAGES};
 use txgain::perfmodel::{simulate, sweep_nodes};
 use txgain::report::Table;
+use txgain::train::{GradResidency, ShardGrads};
 use txgain::util::csv::CsvWriter;
 
 /// Backends to run: `--transport <name>` pins one, default all.
@@ -43,34 +49,71 @@ fn codec_from_args() -> txgain::Result<WireCodec> {
     Ok(WireCodec::from_flag(&args)?.unwrap_or_default())
 }
 
+/// Sharded stage for the sweeps: `--stage <n>`, default the deepest
+/// stage in `ZERO_STAGES`.
+fn stage_from_args() -> txgain::Result<usize> {
+    let args: Vec<String> = std::env::args().collect();
+    match args.iter().position(|a| a == "--stage") {
+        Some(i) => {
+            let v = args.get(i + 1).ok_or_else(|| {
+                anyhow::anyhow!("--stage needs one of {ZERO_STAGES:?}")
+            })?;
+            let st: usize = v.parse().map_err(|_| {
+                anyhow::anyhow!("--stage needs one of {ZERO_STAGES:?}, \
+                                 got {v}")
+            })?;
+            anyhow::ensure!(ZERO_STAGES.contains(&st) && st >= 1,
+                            "--stage must be a sharded stage in \
+                             {ZERO_STAGES:?}, got {st}");
+            Ok(st)
+        }
+        None => Ok(*ZERO_STAGES.last().unwrap_or(&1)),
+    }
+}
+
+/// Stage-2 gradient storage width: `--grad-dtype f32|bf16`.
+fn grad_dtype_from_args() -> txgain::Result<GradDtype> {
+    let args: Vec<String> = std::env::args().collect();
+    Ok(GradDtype::from_flag(&args)?.unwrap_or_default())
+}
+
 fn main() -> txgain::Result<()> {
+    let stage = stage_from_args()?;
+    let dtype = grad_dtype_from_args()?;
+
     // 1. the 1/N curve across the node sweep (bert-120m, paper batch)
     let nodes = [1usize, 2, 4, 8, 16, 32, 64, 128];
     let mut cfg = presets::paper_full_scale();
-    cfg.training.zero_stage = 1;
+    cfg.training.zero_stage = stage;
     let sharded = sweep_nodes(&cfg, &nodes);
     cfg.training.zero_stage = 0;
     let replicated = sweep_nodes(&cfg, &nodes);
 
+    let headers = vec!["nodes".to_string(), "gpus".into(),
+                       "stage0 g+o (MB)".into(),
+                       format!("stage{stage} g+o (MB)"),
+                       "freed (MB)".into(),
+                       format!("headroom{stage} (GB)"),
+                       "AG price (ms)".into()];
     let mut t = Table::new(
-        "bert-120m — per-rank optimizer state: replicated vs ZeRO-1",
-        vec!["nodes", "gpus", "stage0 (MB)", "stage1 (MB)", "freed (MB)",
-             "headroom1 (GB)", "AG price (ms)"],
+        &format!("bert-120m — per-rank grad+opt state: replicated vs \
+                  ZeRO-{stage}"),
+        headers.iter().map(String::as_str).collect(),
     );
     let mut csv = CsvWriter::new(vec![
-        "nodes", "gpus", "opt_bytes_stage0", "opt_bytes_stage1",
-        "mem_headroom_stage1", "exposed_comm_stage0",
-        "exposed_comm_stage1",
+        "nodes", "gpus", "stage", "state_bytes_stage0",
+        "state_bytes_sharded", "mem_headroom_sharded",
+        "exposed_comm_stage0", "exposed_comm_sharded",
     ]);
     for (r0, r1) in replicated.iter().zip(&sharded) {
+        let s0 = r0.grad_bytes_per_rank + r0.opt_bytes_per_rank;
+        let s1 = r1.grad_bytes_per_rank + r1.opt_bytes_per_rank;
         t.row(&[
             r1.nodes.to_string(),
             r1.world.to_string(),
-            format!("{:.1}", r0.opt_bytes_per_rank / 1e6),
-            format!("{:.1}", r1.opt_bytes_per_rank / 1e6),
-            format!("{:.1}",
-                    (r0.opt_bytes_per_rank - r1.opt_bytes_per_rank)
-                        / 1e6),
+            format!("{:.1}", s0 / 1e6),
+            format!("{:.1}", s1 / 1e6),
+            format!("{:.1}", (s0 - s1) / 1e6),
             format!("{:.2}", r1.mem_headroom_bytes / 1e9),
             format!("{:.1}",
                     (r1.comm_exposed_secs - r0.comm_exposed_secs)
@@ -79,8 +122,9 @@ fn main() -> txgain::Result<()> {
         csv.row(&[
             r1.nodes.to_string(),
             r1.world.to_string(),
-            format!("{:.0}", r0.opt_bytes_per_rank),
-            format!("{:.0}", r1.opt_bytes_per_rank),
+            stage.to_string(),
+            format!("{:.0}", s0),
+            format!("{:.0}", s1),
             format!("{:.0}", r1.mem_headroom_bytes),
             format!("{:.6}", r0.comm_exposed_secs),
             format!("{:.6}", r1.comm_exposed_secs),
@@ -90,10 +134,13 @@ fn main() -> txgain::Result<()> {
 
     // 2. what the freed memory is worth: auto-solved micro-batch
     // (batch_per_gpu = 0 → "largest batch that fits", rec. 5)
+    let headers = vec!["model".to_string(), "batch stage0".into(),
+                       format!("batch stage{stage}"),
+                       "samples/s 0".into(),
+                       format!("samples/s {stage}")];
     let mut t = Table::new(
         "auto micro-batch @128 nodes (batch_per_gpu=0, memory-solved)",
-        vec!["model", "batch stage0", "batch stage1", "samples/s 0",
-             "samples/s 1"],
+        headers.iter().map(String::as_str).collect(),
     );
     for model in presets::paper_models() {
         let mut cfg = presets::paper_full_scale();
@@ -101,7 +148,7 @@ fn main() -> txgain::Result<()> {
         cfg.training.batch_per_gpu = 0;
         cfg.training.zero_stage = 0;
         let s0 = simulate(&cfg);
-        cfg.training.zero_stage = 1;
+        cfg.training.zero_stage = stage;
         let s1 = simulate(&cfg);
         t.row(&[
             model.variant.clone(),
@@ -113,46 +160,61 @@ fn main() -> txgain::Result<()> {
     }
     println!("{}", t.render());
 
-    // 3. the closed-form curve, model-by-model
+    // 3. the closed-form curve, model-by-model — one row per model and
+    // sharded stage, columns derived from the world sweep
+    let worlds = [1usize, 4, 16, 64, 256];
+    let mut headers = vec!["model".to_string(), "stage".into()];
+    headers.extend(worlds.iter().map(|w| format!("W={w}")));
     let mut t = Table::new(
-        "Adam moment bytes per rank (MB) — the 1/N law",
-        vec!["model", "W=1", "W=4", "W=16", "W=64", "W=256"],
+        &format!("grad + Adam moment bytes per rank (MB), grad_dtype \
+                  {dtype} — the 1/N law"),
+        headers.iter().map(String::as_str).collect(),
     );
     for model in presets::paper_models() {
         let p = model.param_count();
-        let mut cells = vec![model.variant.clone()];
-        for w in [1usize, 4, 16, 64, 256] {
-            cells.push(format!(
-                "{:.1}", RankMemory::new(p, w, 1).optimizer_bytes / 1e6));
+        for st in ZERO_STAGES {
+            if st == 0 {
+                continue;
+            }
+            let mut cells =
+                vec![model.variant.clone(), format!("{st}")];
+            for &w in &worlds {
+                let m = RankMemory::with_grad_dtype(p, w, st, dtype);
+                cells.push(format!(
+                    "{:.1}", (m.grad_bytes + m.optimizer_bytes) / 1e6));
+            }
+            t.row(&cells);
         }
-        t.row(&cells);
     }
     println!("{}", t.render());
     println!(
         "reading: stage 1 removes the 8·P·(1−1/W) bytes of redundant \
-         fp32 moments\neach rank replicates under plain DDP, at the \
-         same wire cost (RS+AG = one\nall-reduce). The price is the \
-         post-step parameter all-gather, which cannot\nhide under \
-         backward — worth paying exactly when the freed bytes buy a\n\
-         bigger micro-batch (compare the auto-batch table).\n"
+         fp32 moments\neach rank replicates under plain DDP; stage 2 \
+         also shards the gradient\nbuffer via free-on-reduce — at the \
+         same wire cost (RS+AG = one all-reduce).\nThe price is the \
+         post-step parameter all-gather, which cannot hide under\n\
+         backward — worth paying exactly when the freed bytes buy a \
+         bigger\nmicro-batch (compare the auto-batch table).\n"
     );
 
-    // 4. the real wire pattern per transport backend: RS → shard
-    // write → AG over the `training.transport` knob's options
+    // 4. the real wire pattern per transport backend, over the
+    // `training.transport` knob's options: stage 1 reduces in place,
+    // stage 2 runs the trainer's free-on-reduce schedule and meters
+    // the gradient plane
     let world = 4usize;
     let len = 2_000_000usize;
     let codec = codec_from_args()?;
     let plan = BucketPlan::from_elems(len, len / 6 + 1);
     let mut t = Table::new(
-        &format!("real ZeRO-1 RS+step+AG, world=4, 2M floats, {codec} \
-                  wire (mean of 3)"),
-        vec!["transport", "time(ms)"],
+        &format!("real ZeRO-{stage} RS+step+AG, world=4, 2M floats, \
+                  {codec} wire (mean of 3)"),
+        vec!["transport", "time(ms)", "grad-peak(MB)"],
     );
     for backend in backends_from_args()? {
-        let run = || -> f64 {
+        let run = || -> (f64, u64) {
             let t0 = std::time::Instant::now();
-            std::thread::scope(|s| {
-                let handles: Vec<_> = backend
+            let peaks: Vec<u64> = std::thread::scope(|s| {
+                backend
                     .world_with(world, None, codec)
                     .unwrap()
                     .into_iter()
@@ -160,39 +222,85 @@ fn main() -> txgain::Result<()> {
                     .map(|(rank, mut c)| {
                         let plan = plan.clone();
                         s.spawn(move || {
+                            let mut res = GradResidency::new();
                             let mut buf = vec![1.0f32; len];
-                            bucketed_reduce_scatter(Algorithm::Ring,
-                                                    &mut c, &mut buf,
-                                                    &plan)
-                                .unwrap();
-                            for &(a, b) in
-                                &plan.rank_ranges(rank, world)
-                            {
-                                for x in &mut buf[a..b] {
-                                    *x *= 0.5;
+                            if stage >= 2 {
+                                let mut shard = ShardGrads::new(
+                                    &plan, rank, world, dtype);
+                                let mut window: Vec<f32> = Vec::new();
+                                for i in plan.ready_order() {
+                                    let (a, b) = plan.span(i);
+                                    window.clear();
+                                    window
+                                        .extend_from_slice(&buf[a..b]);
+                                    res.alloc(4 * (b - a) as u64);
+                                    buf.truncate(a);
+                                    reduce_scatter(Algorithm::Ring,
+                                                   &mut c, &mut window)
+                                        .unwrap();
+                                    let (sa, sb) = plan
+                                        .shard_span(i, rank, world);
+                                    shard.store_bucket(
+                                        i, &window[sa - a..sb - a]);
+                                    res.alloc(shard.span_bytes(i));
+                                    res.free(4 * (b - a) as u64);
                                 }
+                                buf = vec![0.0f32; len];
+                                for i in 0..plan.n_buckets() {
+                                    let (sa, sb) = plan
+                                        .shard_span(i, rank, world);
+                                    let read = shard.bucket_reader(i);
+                                    for k in sa..sb {
+                                        buf[k] = 0.5 * read(k);
+                                    }
+                                }
+                            } else {
+                                res.alloc(4 * len as u64);
+                                bucketed_reduce_scatter(
+                                    Algorithm::Ring, &mut c, &mut buf,
+                                    &plan)
+                                    .unwrap();
+                                for &(a, b) in
+                                    &plan.rank_ranges(rank, world)
+                                {
+                                    for x in &mut buf[a..b] {
+                                        *x *= 0.5;
+                                    }
+                                }
+                                res.free(4 * len as u64);
                             }
-                            bucketed_all_gather(Algorithm::Ring, &mut c,
-                                                &mut buf, &plan)
+                            bucketed_all_gather(Algorithm::Ring,
+                                                &mut c, &mut buf,
+                                                &plan)
                                 .unwrap();
+                            res.peak()
                         })
                     })
-                    .collect();
-                for h in handles {
-                    h.join().unwrap();
-                }
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
             });
-            t0.elapsed().as_secs_f64()
+            (t0.elapsed().as_secs_f64(),
+             peaks.into_iter().max().unwrap_or(0))
         };
-        let avg = (0..3).map(|_| run()).sum::<f64>() / 3.0;
-        t.row(&[backend.to_string(), format!("{:.2}", avg * 1e3)]);
+        let mut secs = 0.0;
+        let mut peak = 0u64;
+        for _ in 0..3 {
+            let (s, p) = run();
+            secs += s;
+            peak = peak.max(p);
+        }
+        t.row(&[backend.to_string(), format!("{:.2}", secs / 3.0 * 1e3),
+                format!("{:.1}", peak as f64 / 1e6)]);
     }
     println!("{}", t.render());
     println!(
         "same schedule, different wire (training.transport / \
          training.wire_codec); the\nconformance suite guarantees the \
-         trajectories are bit-identical across\nbackends, and replica-\
-         identical under the bf16 wire.\n"
+         trajectories are bit-identical across\nbackends and stages \
+         (f32 grads), and replica-identical under the bf16\nwire or \
+         bf16 gradient store.\n"
     );
 
     let path = std::path::PathBuf::from("runs/zero_memory.csv");

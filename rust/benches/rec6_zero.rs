@@ -1,58 +1,361 @@
-//! BENCH REC6-ZERO: the ZeRO-1 sharded-optimizer ablation behind the
-//! `training.zero_stage` knob.
+//! BENCH REC6-ZERO: the ZeRO sharded-state ablation behind the
+//! `training.zero_stage` knob — stage 1 (sharded optimizer) and
+//! stage 2 (sharded gradients, free-on-reduce).
 //!
 //! Part 1 sweeps world size through the analytic memory model and
-//! shows the 1/N optimizer-state curve — the memory that becomes
-//! micro-batch headroom (the paper's rec. 5 lever). Part 2 prices the
-//! full step: reduce-scatter overlapped with backward plus the exposed
-//! parameter all-gather, against the plain overlapped all-reduce.
-//! Part 3 times the real RS → shard-write → AG pipeline against the
-//! monolithic all-reduce on every transport backend: same wire bytes,
-//! so the sharding must cost ~nothing extra on any wire.
+//! shows the 1/N curves for every stage in `ZERO_STAGES` — the memory
+//! that becomes micro-batch headroom (the paper's rec. 5 lever).
+//! Part 2 prices the full step: reduce-scatter overlapped with
+//! backward plus the exposed parameter all-gather, against the plain
+//! overlapped all-reduce. Part 3 times the real sharded schedules
+//! against the monolithic all-reduce on every transport backend —
+//! stage 1 (in-place RS → shard step → AG) and stage 2 (free-on-reduce
+//! staging copies + `ShardGrads` store, `GradResidency`-metered): same
+//! wire bytes, so the sharding must cost ~nothing extra on any wire
+//! while the stage-2 gradient-plane peak collapses toward 4·P/W.
+//!
+//! Flags: `--stage <n>` picks the sharded stage for parts 2/3
+//! (default 2), `--grad-dtype f32|bf16` the stage-2 storage width
+//! (default f32). `-- --smoke` runs the verify.sh gate instead:
+//! at world 4 on shm, stage-2 measured peak gradient bytes must not
+//! exceed stage-1, must equal `RankMemory::grad_peak_bytes` exactly,
+//! and the f32 trajectory must be bit-identical to stage 1.
 //!
 //! Run: `cargo bench --bench rec6_zero`
 
 use txgain::collectives::{allreduce, bucketed_all_gather,
-                          bucketed_reduce_scatter, Algorithm, Backend,
-                          BucketPlan, CostModel, RankMemory};
-use txgain::config::presets;
+                          bucketed_reduce_scatter, reduce_scatter,
+                          Algorithm, Backend, BucketPlan, CostModel,
+                          GradDtype, RankMemory};
+use txgain::config::{presets, ZERO_STAGES};
 use txgain::perfmodel::simulate;
 use txgain::report::Table;
+use txgain::train::{GradResidency, ShardGrads};
 use txgain::util::bench::{bench, black_box, section};
 
+/// `--stage <n>`: the sharded stage parts 2/3 compare against stage 0.
+fn stage_from_args() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    match args.iter().position(|a| a == "--stage") {
+        Some(i) => {
+            let st: usize = args
+                .get(i + 1)
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| {
+                    panic!("--stage needs one of {ZERO_STAGES:?}")
+                });
+            assert!(ZERO_STAGES.contains(&st),
+                    "--stage must be one of {ZERO_STAGES:?}, got {st}");
+            st
+        }
+        None => 2,
+    }
+}
+
+/// `--grad-dtype f32|bf16`: stage-2 gradient storage width.
+fn grad_dtype_from_args() -> GradDtype {
+    let args: Vec<String> = std::env::args().collect();
+    GradDtype::from_flag(&args).unwrap().unwrap_or_default()
+}
+
+/// Stage 1 over the real wire: in-place bucketed reduce-scatter →
+/// shard-local step → bucketed all-gather. Returns (wall secs, max
+/// per-rank measured gradient-plane peak).
+fn run_stage1(backend: Backend, world: usize, len: usize,
+              plan: &BucketPlan) -> (f64, u64) {
+    let t0 = std::time::Instant::now();
+    let peaks: Vec<u64> = std::thread::scope(|s| {
+        backend
+            .world(world)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut c)| {
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let mut res = GradResidency::new();
+                    let mut buf = vec![1.0f32; len];
+                    res.alloc(4 * len as u64);
+                    bucketed_reduce_scatter(Algorithm::Ring, &mut c,
+                                            &mut buf, &plan)
+                        .unwrap();
+                    for &(a, b) in &plan.rank_ranges(rank, world) {
+                        for x in &mut buf[a..b] {
+                            *x *= 0.5; // the "optimizer step"
+                        }
+                    }
+                    res.free(4 * len as u64);
+                    bucketed_all_gather(Algorithm::Ring, &mut c,
+                                        &mut buf, &plan)
+                        .unwrap();
+                    black_box(buf[0]);
+                    res.peak()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    (t0.elapsed().as_secs_f64(), peaks.into_iter().max().unwrap_or(0))
+}
+
+/// Stage 2 over the real wire: the trainer's free-on-reduce schedule —
+/// per bucket stage a copy, truncate the source, reduce-scatter, keep
+/// only the owned shard (at `dtype` width), release the staging copy;
+/// then step the shard-resident values and all-gather the replicas.
+fn run_stage2(backend: Backend, world: usize, len: usize,
+              plan: &BucketPlan, dtype: GradDtype) -> (f64, u64) {
+    let t0 = std::time::Instant::now();
+    let peaks: Vec<u64> = std::thread::scope(|s| {
+        backend
+            .world(world)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut c)| {
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let mut res = GradResidency::new();
+                    let mut shard =
+                        ShardGrads::new(&plan, rank, world, dtype);
+                    let mut g = vec![1.0f32; len];
+                    let mut window: Vec<f32> = Vec::new();
+                    for i in plan.ready_order() {
+                        let (a, b) = plan.span(i);
+                        window.clear();
+                        window.extend_from_slice(&g[a..b]);
+                        res.alloc(4 * (b - a) as u64);
+                        g.truncate(a);
+                        reduce_scatter(Algorithm::Ring, &mut c,
+                                       &mut window)
+                            .unwrap();
+                        let (sa, sb) = plan.shard_span(i, rank, world);
+                        shard.store_bucket(i, &window[sa - a..sb - a]);
+                        res.alloc(shard.span_bytes(i));
+                        res.free(4 * (b - a) as u64);
+                    }
+                    let mut flat = vec![0.0f32; len];
+                    for i in 0..plan.n_buckets() {
+                        let (sa, sb) = plan.shard_span(i, rank, world);
+                        let read = shard.bucket_reader(i);
+                        for k in sa..sb {
+                            flat[k] = 0.5 * read(k);
+                        }
+                    }
+                    bucketed_all_gather(Algorithm::Ring, &mut c,
+                                        &mut flat, &plan)
+                        .unwrap();
+                    black_box(flat[0]);
+                    res.peak()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    (t0.elapsed().as_secs_f64(), peaks.into_iter().max().unwrap_or(0))
+}
+
+/// The verify.sh smoke gate: at world 4 on shm, the stage-2
+/// free-on-reduce schedule must (a) keep measured peak gradient-plane
+/// bytes at or below the stage-1 in-place sync, (b) reproduce the
+/// closed-form `RankMemory::grad_peak_bytes` exactly on every rank,
+/// and (c) leave the f32 trajectory bit-identical to stage 1. Dyadic
+/// inputs keep every reduction exact in f32, so (c) is exact equality
+/// of bits, not a tolerance. Panics (nonzero exit) on any violation.
+fn smoke() {
+    let world = 4usize;
+    let len = 600_000usize;
+    // uneven first + tail buckets: shard boundaries cut unevenly
+    let plan =
+        BucketPlan::from_elems_with_first(len, len / 5 + 3, len / 9 + 1);
+    let seed = |rank: usize| -> Vec<f32> {
+        (0..len)
+            .map(|i| ((rank * 31 + i * 7) % 17) as f32 * 0.25 - 2.0)
+            .collect()
+    };
+    // returns per-rank (measured peak, final replica) for one sync:
+    // RS → double the owned shard → AG
+    let run = |stage: usize, dtype: GradDtype| -> Vec<(u64, Vec<f32>)> {
+        std::thread::scope(|s| {
+            Backend::Shm
+                .world(world)
+                .unwrap()
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut c)| {
+                    let plan = plan.clone();
+                    let seeded = seed(rank);
+                    s.spawn(move || {
+                        let mut res = GradResidency::new();
+                        let mut flat = vec![0.0f32; len];
+                        if stage >= 2 {
+                            let mut shard = ShardGrads::new(
+                                &plan, rank, world, dtype);
+                            let mut g = seeded;
+                            let mut window: Vec<f32> = Vec::new();
+                            for i in plan.ready_order() {
+                                let (a, b) = plan.span(i);
+                                window.clear();
+                                window.extend_from_slice(&g[a..b]);
+                                res.alloc(4 * (b - a) as u64);
+                                g.truncate(a);
+                                reduce_scatter(Algorithm::Ring, &mut c,
+                                               &mut window)
+                                    .unwrap();
+                                let (sa, sb) =
+                                    plan.shard_span(i, rank, world);
+                                shard.store_bucket(
+                                    i, &window[sa - a..sb - a]);
+                                res.alloc(shard.span_bytes(i));
+                                res.free(4 * (b - a) as u64);
+                            }
+                            for i in 0..plan.n_buckets() {
+                                let (sa, sb) =
+                                    plan.shard_span(i, rank, world);
+                                let read = shard.bucket_reader(i);
+                                for k in sa..sb {
+                                    flat[k] = 2.0 * read(k);
+                                }
+                            }
+                        } else {
+                            let mut g = seeded;
+                            res.alloc(4 * len as u64);
+                            bucketed_reduce_scatter(Algorithm::Ring,
+                                                    &mut c, &mut g,
+                                                    &plan)
+                                .unwrap();
+                            for i in 0..plan.n_buckets() {
+                                let (sa, sb) =
+                                    plan.shard_span(i, rank, world);
+                                for k in sa..sb {
+                                    flat[k] = 2.0 * g[k];
+                                }
+                            }
+                            res.free(4 * len as u64);
+                        }
+                        bucketed_all_gather(Algorithm::Ring, &mut c,
+                                            &mut flat, &plan)
+                            .unwrap();
+                        (res.peak(), flat)
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        })
+    };
+    let s1 = run(1, GradDtype::F32);
+    let s2 = run(2, GradDtype::F32);
+    let s2bf = run(2, GradDtype::Bf16);
+    for rank in 0..world {
+        for (dtype, got) in
+            [(GradDtype::F32, &s2), (GradDtype::Bf16, &s2bf)]
+        {
+            let want = RankMemory::grad_peak_bytes(
+                Some(&plan), len, rank, world, 2, dtype, false);
+            assert_eq!(
+                got[rank].0, want,
+                "SMOKE FAIL: rank {rank} {dtype} measured peak {} != \
+                 closed form {want}",
+                got[rank].0
+            );
+        }
+        assert!(
+            s2[rank].0 <= s1[rank].0,
+            "SMOKE FAIL: rank {rank} stage-2 peak {} > stage-1 peak {} \
+             — free-on-reduce is not freeing",
+            s2[rank].0, s1[rank].0
+        );
+        assert!(
+            s2bf[rank].0 < s2[rank].0,
+            "SMOKE FAIL: rank {rank} bf16 peak {} !< f32 peak {}",
+            s2bf[rank].0, s2[rank].0
+        );
+        for (k, (x, y)) in
+            s1[rank].1.iter().zip(&s2[rank].1).enumerate()
+        {
+            assert_eq!(
+                x.to_bits(), y.to_bits(),
+                "SMOKE FAIL: rank {rank} trajectory diverged at elem \
+                 {k}: stage-1 {x} vs stage-2 {y}"
+            );
+        }
+    }
+    println!(
+        "rec6 smoke [shm, world {world}, {len} floats, {} buckets]:\n  \
+         stage-1 peak {:7.2} MB\n  stage-2 peak {:7.2} MB (f32, \
+         closed-form exact)\n  stage-2 peak {:7.2} MB (bf16, \
+         closed-form exact)",
+        plan.n_buckets(), s1[0].0 as f64 / 1e6, s2[0].0 as f64 / 1e6,
+        s2bf[0].0 as f64 / 1e6
+    );
+    println!("rec6 smoke: OK (free-on-reduce peak is {:.0}% of \
+              stage-1, trajectory bit-identical)",
+             s2[0].0 as f64 / s1[0].0.max(1) as f64 * 100.0);
+}
+
 fn main() {
-    section("analytic: per-rank optimizer state vs world size (1/N)");
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
+    let stage = stage_from_args();
+    let dtype = grad_dtype_from_args();
+
+    section("analytic: per-rank gradient + optimizer state vs world \
+             size (1/N)");
+    const WORLDS: [usize; 4] = [2, 8, 32, 256];
+    let mut headers = vec!["model".to_string()];
+    for st in ZERO_STAGES {
+        if st == 0 {
+            headers.push("stage-0".into());
+        } else {
+            headers.extend(WORLDS.iter().map(|w| format!("s{st} W={w}")));
+        }
+    }
     let mut t = Table::new(
-        "Adam m+v bytes per rank (MB); params+grads stay replicated",
-        vec!["model", "stage-0", "W=2", "W=8", "W=32", "W=256"],
+        &format!("gradient + Adam m/v bytes per rank (MB), grad_dtype \
+                  {dtype}; params stay replicated"),
+        headers.iter().map(String::as_str).collect(),
     );
     for model in presets::paper_models() {
         let p = model.param_count();
-        let mb =
-            |w: usize, st: usize| -> String {
-                format!("{:.1}",
-                        RankMemory::new(p, w, st).optimizer_bytes / 1e6)
-            };
-        t.row(&[
-            model.variant.clone(),
-            mb(1, 0),
-            mb(2, 1),
-            mb(8, 1),
-            mb(32, 1),
-            mb(256, 1),
-        ]);
+        let mb = |w: usize, st: usize| -> String {
+            let m = RankMemory::with_grad_dtype(p, w, st, dtype);
+            format!("{:.1}", (m.grad_bytes + m.optimizer_bytes) / 1e6)
+        };
+        let mut cells = vec![model.variant.clone()];
+        for st in ZERO_STAGES {
+            if st == 0 {
+                cells.push(mb(1, 0));
+            } else {
+                cells.extend(WORLDS.iter().map(|&w| mb(w, st)));
+            }
+        }
+        t.row(&cells);
     }
     println!("{}", t.render());
     println!("  stage 1 shards the 8 bytes/param of fp32 moments \
-              across the DP world;\n  at 256 GPUs the 350M model's \
-              ~2.7 GB of moments shrink to ~10 MB/rank.\n");
+              across the DP world;\n  stage 2 also shards the gradient \
+              buffer (free-on-reduce), so at 256 GPUs\n  the 350M \
+              model's ~2.7 GB of per-rank state shrinks to ~15 MB.\n");
 
     section("simulated: full-step effect at 128 nodes");
+    let headers = vec!["model".to_string(), "batch".into(),
+                       "step0(ms)".into(),
+                       format!("step{stage}(ms)"),
+                       "exposed0(ms)".into(),
+                       format!("exposed{stage}(ms)"),
+                       format!("grad-mem{stage}(MB)"),
+                       format!("opt-mem{stage}(MB)"),
+                       format!("headroom{stage}(GB)")];
     let mut t = Table::new(
-        "zero_stage 0 vs 1 (paper cluster, overlap on)",
-        vec!["model", "batch", "step0(ms)", "step1(ms)",
-             "exposed0(ms)", "exposed1(ms)", "opt-mem1(MB)",
-             "headroom1(GB)"],
+        &format!("zero_stage 0 vs {stage} (paper cluster, overlap on)"),
+        headers.iter().map(String::as_str).collect(),
     );
     for model in presets::paper_models() {
         let mut cfg = presets::paper_full_scale();
@@ -61,7 +364,7 @@ fn main() {
         cfg.model = model.clone();
         cfg.training.zero_stage = 0;
         let s0 = simulate(&cfg);
-        cfg.training.zero_stage = 1;
+        cfg.training.zero_stage = stage;
         let s1 = simulate(&cfg);
         t.row(&[
             model.variant.clone(),
@@ -70,14 +373,15 @@ fn main() {
             format!("{:.1}", s1.step_secs * 1e3),
             format!("{:.1}", s0.comm_exposed_secs * 1e3),
             format!("{:.1}", s1.comm_exposed_secs * 1e3),
+            format!("{:.1}", s1.grad_bytes_per_rank / 1e6),
             format!("{:.1}", s1.opt_bytes_per_rank / 1e6),
             format!("{:.2}", s1.mem_headroom_bytes / 1e9),
         ]);
     }
     println!("{}", t.render());
     println!("  the exposed delta is the post-step parameter \
-              all-gather — the price of\n  freeing 8·P·(1−1/W) \
-              bytes/rank. It pays off when the freed memory buys\n  a \
+              all-gather — the price of\n  freeing the sharded bytes \
+              per rank. It pays off when the freed memory buys\n  a \
               bigger micro-batch (set batch_per_gpu=0 to let the sim \
               solve it).\n");
 
@@ -97,43 +401,10 @@ fn main() {
     }
     println!();
 
-    section("real: RS + shard write + AG vs monolithic, per transport");
+    section("real: sharded schedules vs monolithic, per transport");
     let world = 4usize;
     let len = 8_500_000usize; // e2e-scale gradient
     let plan = BucketPlan::from_elems(len, len / 6 + 1);
-    let run_zero = |backend: Backend, plan: &BucketPlan| -> f64 {
-        let t0 = std::time::Instant::now();
-        std::thread::scope(|s| {
-            let handles: Vec<_> = backend
-                .world(world)
-                .unwrap()
-                .into_iter()
-                .enumerate()
-                .map(|(rank, mut c)| {
-                    let plan = plan.clone();
-                    s.spawn(move || {
-                        let mut buf = vec![1.0f32; len];
-                        bucketed_reduce_scatter(Algorithm::Ring, &mut c,
-                                                &mut buf, &plan)
-                            .unwrap();
-                        for &(a, b) in &plan.rank_ranges(rank, world) {
-                            for x in &mut buf[a..b] {
-                                *x *= 0.5; // the "optimizer step"
-                            }
-                        }
-                        bucketed_all_gather(Algorithm::Ring, &mut c,
-                                            &mut buf, &plan)
-                            .unwrap();
-                        black_box(buf[0]);
-                    })
-                })
-                .collect();
-            for h in handles {
-                h.join().unwrap();
-            }
-        });
-        t0.elapsed().as_secs_f64()
-    };
     let run_allreduce = |backend: Backend| -> f64 {
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| {
@@ -157,23 +428,40 @@ fn main() {
         t0.elapsed().as_secs_f64()
     };
     let mut t = Table::new(
-        "world=4, 8.5M floats (mean of 5) — same wire bytes per row",
-        vec!["transport", "RS+step+AG(ms)", "all-reduce(ms)"],
+        &format!("world=4, 8.5M floats, grad_dtype {dtype} (mean of 3) \
+                  — same wire bytes per row"),
+        vec!["transport", "stage-1(ms)", "stage-2(ms)",
+             "all-reduce(ms)", "s1 peak(MB)", "s2 peak(MB)"],
     );
     for backend in Backend::ALL {
-        let zero: f64 =
-            (0..5).map(|_| run_zero(backend, &plan)).sum::<f64>() / 5.0;
-        let ar: f64 =
-            (0..5).map(|_| run_allreduce(backend)).sum::<f64>() / 5.0;
-        t.row(&[backend.to_string(), format!("{:.2}", zero * 1e3),
-                format!("{:.2}", ar * 1e3)]);
+        let mut t1 = 0.0;
+        let mut t2 = 0.0;
+        let mut ar = 0.0;
+        let mut p1 = 0u64;
+        let mut p2 = 0u64;
+        for _ in 0..3 {
+            let (secs, peak) = run_stage1(backend, world, len, &plan);
+            t1 += secs;
+            p1 = p1.max(peak);
+            let (secs, peak) =
+                run_stage2(backend, world, len, &plan, dtype);
+            t2 += secs;
+            p2 = p2.max(peak);
+            ar += run_allreduce(backend);
+        }
+        t.row(&[backend.to_string(), format!("{:.2}", t1 / 3.0 * 1e3),
+                format!("{:.2}", t2 / 3.0 * 1e3),
+                format!("{:.2}", ar / 3.0 * 1e3),
+                format!("{:.1}", p1 as f64 / 1e6),
+                format!("{:.1}", p2 as f64 / 1e6)]);
     }
     println!("{}", t.render());
-    println!("  (same bytes on the wire; the shard write replaces \
-              3/4 of the full optimizer\n  math each rank would do \
-              replicated — the win ZeRO banks. The channel/shm\n  vs \
-              tcp spread is pure transport cost: pointer moves vs \
-              genuine loopback\n  serialization.)");
+    println!("  (same bytes on the wire; stage 2 swaps the resident \
+              4-byte gradient buffer\n  for per-bucket staging copies \
+              plus a {dtype} shard store — the measured peak\n  \
+              column, which verify.sh gates with `--smoke`. The \
+              channel/shm vs tcp\n  spread is pure transport cost: \
+              pointer moves vs genuine loopback\n  serialization.)");
 
     section("hot path");
     bench("bucketed reduce-scatter, world=4, 8.5M floats", 2000, || {

@@ -14,7 +14,7 @@
 //! (an order-of-magnitude drop from 184) is what the model must and does
 //! reproduce. See EXPERIMENTS.md §REC5.
 
-use crate::collectives::RankMemory;
+use crate::collectives::{GradDtype, RankMemory};
 use crate::config::ModelConfig;
 
 /// Bytes of persistent state per parameter (mixed-precision Adam).
@@ -46,21 +46,43 @@ impl MemoryModel {
         self.fixed_bytes_sharded(model, 1, 0)
     }
 
-    /// Persistent bytes per rank under ZeRO staging: stage 1 shards
-    /// the Adam moments across `world` ranks, shrinking fixed state
-    /// from 16 to `8 + 8/world` bytes/param — headroom that goes
-    /// straight into batch (rec. 5's lever).
+    /// Persistent bytes per rank under ZeRO staging at the paper's
+    /// bf16-gradient convention: stage 1 shards the Adam moments
+    /// across `world` ranks, shrinking fixed state from 16 to
+    /// `8 + 8/world` bytes/param; stage 2 shards the gradient too
+    /// (`6 + 10/world`) — headroom that goes straight into batch
+    /// (rec. 5's lever).
     pub fn fixed_bytes_sharded(&self, model: &ModelConfig, world: usize,
                                zero_stage: usize) -> f64 {
-        RankMemory::new(model.param_count(), world, zero_stage).total()
+        self.fixed_bytes_staged(model, world, zero_stage, GradDtype::Bf16)
+    }
+
+    /// [`MemoryModel::fixed_bytes_sharded`] with an explicit gradient
+    /// storage dtype (the `training.grad_dtype` knob): `f32` grads cost
+    /// 4 B/elem instead of the paper's 2.
+    pub fn fixed_bytes_staged(&self, model: &ModelConfig, world: usize,
+                              zero_stage: usize, grad_dtype: GradDtype)
+        -> f64 {
+        RankMemory::with_grad_dtype(model.param_count(), world,
+                                    zero_stage, grad_dtype).total()
     }
 
     /// Largest per-GPU batch that fits under ZeRO staging.
     pub fn max_batch_sharded(&self, model: &ModelConfig, world: usize,
                              zero_stage: usize) -> usize {
+        self.max_batch_staged(model, world, zero_stage, GradDtype::Bf16)
+    }
+
+    /// [`MemoryModel::max_batch_sharded`] at an explicit gradient
+    /// dtype — what `batch_per_gpu: 0` auto-batch solves under stage
+    /// 2's freed bytes.
+    pub fn max_batch_staged(&self, model: &ModelConfig, world: usize,
+                            zero_stage: usize, grad_dtype: GradDtype)
+        -> usize {
         let usable = self.gpu_mem_gb * 1e9 * USABLE_FRAC;
-        let free =
-            usable - self.fixed_bytes_sharded(model, world, zero_stage);
+        let free = usable
+            - self.fixed_bytes_staged(model, world, zero_stage,
+                                      grad_dtype);
         if free <= 0.0 {
             return 0;
         }
@@ -71,8 +93,17 @@ impl MemoryModel {
     /// the configuration does not fit) — the sim's "memory headroom".
     pub fn headroom(&self, model: &ModelConfig, batch: usize,
                     world: usize, zero_stage: usize) -> f64 {
+        self.headroom_staged(model, batch, world, zero_stage,
+                             GradDtype::Bf16)
+    }
+
+    /// [`MemoryModel::headroom`] at an explicit gradient dtype.
+    pub fn headroom_staged(&self, model: &ModelConfig, batch: usize,
+                           world: usize, zero_stage: usize,
+                           grad_dtype: GradDtype) -> f64 {
         self.gpu_mem_gb * 1e9 * USABLE_FRAC
-            - self.fixed_bytes_sharded(model, world, zero_stage)
+            - self.fixed_bytes_staged(model, world, zero_stage,
+                                      grad_dtype)
             - batch as f64 * self.activation_bytes_per_sample(model)
     }
 
@@ -170,6 +201,29 @@ mod tests {
         assert!(h0 >= 0.0);
         let freed = 8.0 * model.param_count() as f64 * (1.0 - 1.0 / 256.0);
         assert!((h1 - h0 - freed).abs() < 1e3, "{h1} - {h0} vs {freed}");
+    }
+
+    #[test]
+    fn zero2_frees_the_gradient_replica_into_batch() {
+        let m = MemoryModel::new(94.0);
+        let model = presets::model_bert_350m();
+        let b1 = m.max_batch_sharded(&model, 256, 1);
+        let b2 = m.max_batch_sharded(&model, 256, 2);
+        assert!(b2 >= b1, "stage 2 must not shrink batch: {b2} < {b1}");
+        // the freed bytes are exactly the bf16 gradient replica
+        let h1 = m.headroom(&model, b1, 256, 1);
+        let h2 = m.headroom(&model, b1, 256, 2);
+        let freed = 2.0 * model.param_count() as f64 * (1.0 - 1.0 / 256.0);
+        assert!((h2 - h1 - freed).abs() < 1e3, "{h2} - {h1} vs {freed}");
+        // f32 gradient storage frees twice as much going 1 → 2, but
+        // costs more in absolute terms at every stage
+        let h2f = m.headroom_staged(&model, b1, 256, 2, GradDtype::F32);
+        let h1f = m.headroom_staged(&model, b1, 256, 1, GradDtype::F32);
+        assert!((h2f - h1f) > 1.9 * (h2 - h1));
+        assert!(h1f < h1);
+        // auto-batch sees the stage-2 + bf16 headroom
+        assert!(m.max_batch_staged(&model, 256, 2, GradDtype::Bf16)
+                >= m.max_batch_staged(&model, 256, 2, GradDtype::F32));
     }
 
     #[test]

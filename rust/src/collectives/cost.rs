@@ -7,7 +7,8 @@
 //! This is the quantity behind the paper's recommendation 4: at bert-
 //! scale gradients and 25 GbE it stays small relative to compute.
 
-use super::transport::WireCodec;
+use super::engine::GRAD_INFLIGHT_BUCKETS;
+use super::transport::{GradDtype, WireCodec};
 use super::{Algorithm, BucketPlan};
 use crate::config::ClusterConfig;
 
@@ -509,32 +510,120 @@ impl CostModel {
 /// replicates everything (the classic 16 bytes/param of
 /// mixed-precision Adam); stage 1 shards the fp32 m/v moments
 /// (8 bytes/param) across the data-parallel world, freeing
-/// `8·P·(1 − 1/W)` bytes per rank for activations — i.e. batch.
+/// `8·P·(1 − 1/W)` bytes per rank for activations — i.e. batch; stage 2
+/// additionally shards the gradient buffer via free-on-reduce, so the
+/// gradient term also divides by W (at the paper's bf16 2 B/elem, or
+/// 4 B/elem under `grad_dtype = f32`).
 #[derive(Clone, Copy, Debug)]
 pub struct RankMemory {
     /// bf16 weights (2) + fp32 master copy (4), replicated.
     pub param_bytes: f64,
-    /// bf16 gradient buffer (2), replicated (stage 2 would shard it).
+    /// Gradient buffer at `grad_dtype` width; divided by the world
+    /// under stage 2 (free-on-reduce sharding).
     pub grad_bytes: f64,
-    /// fp32 Adam m+v (8); divided by the world under stage 1.
+    /// fp32 Adam m+v (8); divided by the world under stages ≥ 1.
     pub optimizer_bytes: f64,
 }
 
 impl RankMemory {
+    /// The paper's convention (bf16 gradient sync/storage) — what the
+    /// simulator and Fig. 1 have always priced.
     pub fn new(params: u64, world: usize, zero_stage: usize)
         -> RankMemory {
+        Self::with_grad_dtype(params, world, zero_stage, GradDtype::Bf16)
+    }
+
+    pub fn with_grad_dtype(params: u64, world: usize, zero_stage: usize,
+                           grad_dtype: GradDtype) -> RankMemory {
         let p = params as f64;
-        let shard = if zero_stage >= 1 { world.max(1) as f64 } else { 1.0 };
+        let w = world.max(1) as f64;
+        let opt_shard = if zero_stage >= 1 { w } else { 1.0 };
+        let grad_shard = if zero_stage >= 2 { w } else { 1.0 };
         RankMemory {
             param_bytes: 6.0 * p,
-            grad_bytes: 2.0 * p,
-            optimizer_bytes: 8.0 * p / shard,
+            grad_bytes: grad_dtype.bytes_per_elem() as f64 * p / grad_shard,
+            optimizer_bytes: 8.0 * p / opt_shard,
         }
     }
 
     /// Total persistent bytes this rank holds.
     pub fn total(&self) -> f64 {
         self.param_bytes + self.grad_bytes + self.optimizer_bytes
+    }
+
+    /// Closed-form peak gradient-plane residency (bytes) of one
+    /// trainer sync on `rank` — the exact number the trainer's
+    /// measured `grad_peak_bytes` must reproduce (the measured-vs-
+    /// modeled cross-check). "Gradient plane" = the accumulated
+    /// gradient storage plus the f32 staging copies the comm engine
+    /// syncs through; loss/param traffic is not gradient memory.
+    ///
+    /// * stage ≤ 1, blocking: the backward output **is** the
+    ///   accumulated buffer and the collectives reduce it in place —
+    ///   `4·L` (dtype-independent: f32 storage is only rounded to
+    ///   bf16-representable values, never repacked).
+    /// * stage ≤ 1, engine: the source stays resident while every
+    ///   bucket is also staged into pool buffers before any completes
+    ///   (maximum overlap) — `8·L`.
+    /// * stage 2: the source is consumed bucket-by-bucket as each
+    ///   reduce-scatter is staged (free-on-reduce), so only the shard
+    ///   store plus a bounded window of in-flight f32 staging copies is
+    ///   ever resident. Replays the exact alloc/store/free sequence of
+    ///   the trainer's window schedule (depth 1 blocking,
+    ///   [`GRAD_INFLIGHT_BUCKETS`] under the engine) over the plan's
+    ///   ready order and returns the max — ≈ `bpe·L/W + 4·window`.
+    ///
+    /// `plan = None` means the monolithic (unbucketed) path, which
+    /// exists only at stages ≤ 1.
+    pub fn grad_peak_bytes(plan: Option<&BucketPlan>, grad_len: usize,
+                           rank: usize, world: usize, zero_stage: usize,
+                           grad_dtype: GradDtype, engine: bool) -> u64 {
+        let l = grad_len as u64;
+        if zero_stage <= 1 {
+            return if engine { 8 * l } else { 4 * l };
+        }
+        // stage 2 always runs bucketed (config validation requires
+        // overlap_comm for every sharded stage); an absent plan can
+        // only be a caller error — answer with the conservative
+        // unbucketed residency rather than panicking
+        debug_assert!(plan.is_some(), "stage 2 always runs bucketed");
+        let Some(plan) = plan else {
+            return if engine { 8 * l } else { 4 * l };
+        };
+        let depth = if engine { GRAD_INFLIGHT_BUCKETS } else { 1 };
+        let bpe = grad_dtype.bytes_per_elem() as u64;
+        // Replay the trainer's schedule: stage a bucket's f32 copy,
+        // and once `depth` are in flight complete the oldest (store
+        // its shard at grad_dtype width, then free its staging copy).
+        let mut staged = 0u64;
+        let mut stored = 0u64;
+        let mut peak = 0u64;
+        let mut inflight: std::collections::VecDeque<usize> =
+            std::collections::VecDeque::new();
+        let mut complete = |i: usize, staged: &mut u64,
+                            stored: &mut u64, peak: &mut u64| {
+            let (a, b) = plan.shard_span(i, rank, world);
+            *stored += bpe * (b - a) as u64;
+            *peak = (*peak).max(*staged + *stored);
+            let (sa, sb) = plan.span(i);
+            *staged -= 4 * (sb - sa) as u64;
+        };
+        for i in plan.ready_order() {
+            if let Some(j) = (inflight.len() == depth)
+                .then(|| inflight.pop_front())
+                .flatten()
+            {
+                complete(j, &mut staged, &mut stored, &mut peak);
+            }
+            let (a, b) = plan.span(i);
+            staged += 4 * (b - a) as u64;
+            peak = peak.max(staged + stored);
+            inflight.push_back(i);
+        }
+        while let Some(j) = inflight.pop_front() {
+            complete(j, &mut staged, &mut stored, &mut peak);
+        }
+        peak
     }
 }
 
@@ -776,6 +865,105 @@ mod tests {
         }
         // stage 0 ignores world entirely
         assert_eq!(RankMemory::new(params, 256, 0).total(), full.total());
+    }
+
+    #[test]
+    fn rank_memory_stage_2_shards_the_gradient_term() {
+        let params = 120_000_000u64;
+        let p = params as f64;
+        for world in [2usize, 8, 256] {
+            let w = world as f64;
+            let rm = RankMemory::new(params, world, 2);
+            // bf16 convention: 2 B/elem, now divided by the world
+            assert!((rm.grad_bytes - 2.0 * p / w).abs() < 1.0,
+                    "world={world}");
+            // optimizer shards exactly as stage 1
+            assert_eq!(rm.optimizer_bytes,
+                       RankMemory::new(params, world, 1).optimizer_bytes);
+            // params stay replicated
+            assert_eq!(rm.param_bytes, 6.0 * p);
+            // explicit f32 storage doubles just the gradient term
+            let f32rm = RankMemory::with_grad_dtype(params, world, 2,
+                                                    GradDtype::F32);
+            assert!((f32rm.grad_bytes - 2.0 * rm.grad_bytes).abs() < 1.0);
+            assert_eq!(f32rm.param_bytes, rm.param_bytes);
+        }
+        // stages ≤ 1 keep the gradient replicated regardless of world
+        assert_eq!(RankMemory::new(params, 256, 1).grad_bytes, 2.0 * p);
+    }
+
+    #[test]
+    fn grad_peak_formula_matches_hand_computed_schedules() {
+        // stages ≤ 1: source-resident (4L) blocking, source + full
+        // staging (8L) under the engine, plan or not
+        let plan = BucketPlan::from_elems(100, 7);
+        for stage in [0usize, 1] {
+            for (engine, want) in [(false, 400u64), (true, 800u64)] {
+                for p in [None, Some(&plan)] {
+                    assert_eq!(RankMemory::grad_peak_bytes(
+                                   p, 100, 0, 4, stage,
+                                   GradDtype::F32, engine),
+                               want, "stage={stage} engine={engine}");
+                }
+            }
+        }
+        // stage 2 blocking, world 1 (rank owns every bucket whole),
+        // uniform 10-elem buckets over 30 elems, depth 1: completing
+        // bucket k holds its own 4·10 staging + 4·10·(k+1) stored —
+        // peak at the last bucket: 40 + 120 = 160
+        let plan = BucketPlan::from_elems(30, 10);
+        assert_eq!(plan.n_buckets(), 3);
+        assert_eq!(RankMemory::grad_peak_bytes(
+                       Some(&plan), 30, 0, 1, 2, GradDtype::F32, false),
+                   160);
+        // engine depth 2: two staged spans live while the older
+        // completes — peak 4·20 + 4·30 = 200 at the tail... except the
+        // last completion has only itself staged: walk it: stage b2,b1
+        // (80), complete b2 (stored 40, peak 120), stage b0 (staged 80,
+        // peak 120+40=... compute: staged 80 + stored 40 = 160), then
+        // complete b1 (stored 80, staged 80 → 160... then staged 40),
+        // complete b0 (stored 120, staged 40 → 160). Peak = 160.
+        assert_eq!(RankMemory::grad_peak_bytes(
+                       Some(&plan), 30, 0, 1, 2, GradDtype::F32, true),
+                   160);
+        // bf16 halves only the stored term: blocking peak becomes
+        // 40 + 2·30 = 100 at the last bucket
+        assert_eq!(RankMemory::grad_peak_bytes(
+                       Some(&plan), 30, 0, 1, 2, GradDtype::Bf16, false),
+                   100);
+        // world 2: each rank stores only its half of every bucket
+        // (shards of 5), blocking peak = 40 + 4·15 = 100
+        assert_eq!(RankMemory::grad_peak_bytes(
+                       Some(&plan), 30, 0, 2, 2, GradDtype::F32, false),
+                   100);
+    }
+
+    #[test]
+    fn stage_2_peak_beats_stage_1_and_shrinks_with_world() {
+        // the tentpole claim in formula form: bucketed stage-2
+        // residency undercuts the replicated 4·P, and more so as the
+        // world grows
+        let len = 1_000_000usize;
+        let plan = BucketPlan::from_elems_with_first(len, 65_536, 16_384);
+        for engine in [false, true] {
+            let stage1 = RankMemory::grad_peak_bytes(
+                Some(&plan), len, 0, 8, 1, GradDtype::F32, engine);
+            let mut prev = u64::MAX;
+            for world in [2usize, 4, 8] {
+                let s2 = RankMemory::grad_peak_bytes(
+                    Some(&plan), len, 0, world, 2, GradDtype::F32,
+                    engine);
+                assert!(s2 < stage1,
+                        "engine={engine} world={world}: {s2} !< {stage1}");
+                assert!(s2 < prev, "peak must shrink with world");
+                // bf16 storage halves the shard term again
+                let bf = RankMemory::grad_peak_bytes(
+                    Some(&plan), len, 0, world, 2, GradDtype::Bf16,
+                    engine);
+                assert!(bf < s2);
+                prev = s2;
+            }
+        }
     }
 
     #[test]

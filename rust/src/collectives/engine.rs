@@ -60,6 +60,16 @@ use super::{shard_spans, Algorithm};
 use crate::util::sync::lock_unpoisoned;
 use crate::Result;
 
+/// How many gradient reduce-scatters the stage-2 trainer keeps in
+/// flight at once: the ZeRO-2 memory/concurrency dial. Stage 1 launches
+/// *every* bucket before waiting any (maximum overlap, full staging
+/// residency); stage 2 bounds staging to this many bucket spans — the
+/// "in-flight bucket window" term of the gradient-memory formula
+/// ([`super::cost::RankMemory::grad_peak_bytes`]) — at the cost of
+/// serializing launches past the window. 2 keeps one bucket syncing
+/// while the previous shard is being stepped.
+pub const GRAD_INFLIGHT_BUCKETS: usize = 2;
+
 /// First tag the engine may use. Everything below is reserved for the
 /// blocking world: the ring collectives use `0..2·world`, the tree
 /// collectives `0x7000..0x7004 + world`, the checkpoint gather
@@ -201,6 +211,14 @@ impl<T: Transport + Send + 'static> CommEngine<T> {
     /// Hand a result buffer back for reuse.
     pub fn recycle(&mut self, buf: Vec<f32>) {
         self.pool.put(buf);
+    }
+
+    /// `(buffers, retained_bytes)` currently parked in the engine's
+    /// host pool — the observable side of the stage-2 free-on-reduce
+    /// hook: a recycled bucket's bytes show up here instead of staying
+    /// resident in the gradient plane.
+    pub fn pool_stats(&self) -> (usize, usize) {
+        (self.pool.len(), self.pool.retained_bytes())
     }
 
     /// Queue `kind` over `buf` onto the progress thread and return

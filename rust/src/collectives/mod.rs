@@ -42,11 +42,12 @@ pub mod tree;
 pub use bucket::{bucketed_all_gather, bucketed_allreduce,
                  bucketed_reduce_scatter, BucketManager, BucketPlan};
 pub use cost::{CostModel, OverlapCost, RankMemory, TunedPlan};
-pub use engine::{CollectiveKind, CommEngine, PendingBucket};
+pub use engine::{CollectiveKind, CommEngine, PendingBucket,
+                 GRAD_INFLIGHT_BUCKETS};
 pub use transport::{AnyTransport, Backend, ChannelTransport,
-                    HierTransport, ShmTransport, TcpTransport,
-                    Topology, Transport, TransportStats, WireCodec,
-                    World};
+                    GradDtype, HierTransport, ShmTransport,
+                    TcpTransport, Topology, Transport, TransportStats,
+                    WireCodec, World};
 
 use crate::Result;
 

@@ -72,14 +72,125 @@ pub fn bf16_round(x: f32) -> f32 {
     f32::from_bits((bf16_bits(x) as u32) << 16)
 }
 
+/// Decode a bf16 bit pattern (as produced by [`bf16_bits`]) back to
+/// f32 — exact, since every bf16 value is f32-representable.
+pub fn bf16_from_bits(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
 /// The upper 16 bits of `x` after round-to-nearest-even; NaNs map to a
 /// quiet NaN so a payload NaN can never round to infinity.
-fn bf16_bits(x: f32) -> u16 {
+pub fn bf16_bits(x: f32) -> u16 {
     let bits = x.to_bits();
     if x.is_nan() {
         return 0x7FC0 | ((bits >> 16) as u16 & 0x8000);
     }
     ((bits + 0x7FFF + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// Host-side storage dtype for the accumulated gradient — the
+/// `training.grad_dtype` config knob (ZeRO-2's second lever: stage 2
+/// shards the gradient, `bf16` halves what the shard stores).
+///
+/// Distinct from [`WireCodec`]: the codec is what crosses the wire,
+/// this is what the trainer *retains*. Both round with [`bf16_round`]
+/// (RNE), so a bf16-stored gradient re-encodes onto a bf16 wire
+/// bit-exactly (idempotence) and zero-2 + bf16-wire composes
+/// deterministically.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GradDtype {
+    /// Full-precision storage: 4 B/elem, bit-identical to historical
+    /// trajectories.
+    #[default]
+    F32,
+    /// Round-to-nearest-even bf16 storage: 2 B/elem, deterministic and
+    /// replica-identical, bounded rounding error per step.
+    Bf16,
+}
+
+impl GradDtype {
+    /// Every gradient dtype, in conformance-suite order.
+    pub const ALL: [GradDtype; 2] = [GradDtype::F32, GradDtype::Bf16];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GradDtype::F32 => "f32",
+            GradDtype::Bf16 => "bf16",
+        }
+    }
+
+    /// The `a|b` spelling list for error messages, derived from
+    /// [`GradDtype::ALL`] so it can never drift from the real set.
+    pub fn spellings() -> String {
+        GradDtype::ALL
+            .iter()
+            .map(|c| c.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Parse an optional `--grad-dtype <name>` flag from CLI args (the
+    /// examples' and benches' shared arg convention, mirroring
+    /// [`WireCodec::from_flag`]). `Ok(None)` means the flag is absent.
+    pub fn from_flag(args: &[String]) -> Result<Option<GradDtype>> {
+        match args.iter().position(|a| a == "--grad-dtype") {
+            Some(i) => {
+                let name = args.get(i + 1).ok_or_else(|| {
+                    anyhow::anyhow!("--grad-dtype needs a value ({})",
+                                    GradDtype::spellings())
+                })?;
+                Ok(Some(name.parse()?))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Bytes one stored gradient element occupies.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            GradDtype::F32 => 4,
+            GradDtype::Bf16 => 2,
+        }
+    }
+
+    /// Project `x` onto the dtype's representable values (RNE for
+    /// bf16, identity for f32) — the same rounding the bf16 wire
+    /// applies, so storage and wire agree bit for bit.
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            GradDtype::F32 => x,
+            GradDtype::Bf16 => bf16_round(x),
+        }
+    }
+
+    /// [`GradDtype::round`] over a whole buffer, in place.
+    pub fn round_slice(self, buf: &mut [f32]) {
+        if self == GradDtype::Bf16 {
+            for x in buf.iter_mut() {
+                *x = bf16_round(*x);
+            }
+        }
+    }
+}
+
+impl FromStr for GradDtype {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<GradDtype> {
+        for c in GradDtype::ALL {
+            if s == c.as_str() {
+                return Ok(c);
+            }
+        }
+        anyhow::bail!("unknown gradient dtype '{s}' (expected {})",
+                      GradDtype::spellings())
+    }
+}
+
+impl fmt::Display for GradDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
 }
 
 /// The wire encoding selector — the `training.wire_codec` config knob.
@@ -385,6 +496,41 @@ impl EfState {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn grad_dtype_round_trips_spellings_and_rounds_like_the_wire() {
+        for d in GradDtype::ALL {
+            assert_eq!(d.as_str().parse::<GradDtype>().unwrap(), d);
+            assert_eq!(format!("{d}"), d.as_str());
+        }
+        assert!("fp8".parse::<GradDtype>().is_err());
+        assert_eq!(GradDtype::default(), GradDtype::F32);
+        assert_eq!(GradDtype::F32.bytes_per_elem(), 4);
+        assert_eq!(GradDtype::Bf16.bytes_per_elem(), 2);
+        for &x in &[0.1f32, -3.75, 1e-30, 6.5e4, 0.0] {
+            assert_eq!(GradDtype::F32.round(x).to_bits(), x.to_bits());
+            assert_eq!(GradDtype::Bf16.round(x).to_bits(),
+                       bf16_round(x).to_bits(),
+                       "storage rounding must match the bf16 wire");
+            assert_eq!(bf16_from_bits(bf16_bits(x)).to_bits(),
+                       bf16_round(x).to_bits(),
+                       "packed u16 store must decode to the rounded value");
+        }
+        let mut buf = vec![0.1f32, -2.3, 7.77];
+        GradDtype::Bf16.round_slice(&mut buf);
+        assert_eq!(buf[1].to_bits(), bf16_round(-2.3).to_bits());
+    }
+
+    #[test]
+    fn grad_dtype_flag_parses_like_the_codec_flag() {
+        let args: Vec<String> =
+            ["x", "--grad-dtype", "bf16"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(GradDtype::from_flag(&args).unwrap(), Some(GradDtype::Bf16));
+        let none: Vec<String> = vec!["x".into()];
+        assert_eq!(GradDtype::from_flag(&none).unwrap(), None);
+        let bad: Vec<String> = ["--grad-dtype"].iter().map(|s| s.to_string()).collect();
+        assert!(GradDtype::from_flag(&bad).is_err());
+    }
 
     fn enc(codec: WireCodec, data: &[f32], ef: &mut EfState)
         -> Vec<f32> {

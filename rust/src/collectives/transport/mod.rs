@@ -55,7 +55,7 @@ pub mod spsc;
 pub mod tcp;
 
 pub use channel::{ChannelTransport, World};
-pub use codec::WireCodec;
+pub use codec::{GradDtype, WireCodec};
 pub use hier::HierTransport;
 pub use shm::ShmTransport;
 pub use tcp::{MeshConfig, TcpTransport};

@@ -21,7 +21,7 @@ pub use cluster::ClusterConfig;
 pub use data::{DataConfig, StagingPolicy};
 pub use launch::LaunchConfig;
 pub use model::ModelConfig;
-pub use training::{ExecMode, TrainingConfig};
+pub use training::{ExecMode, TrainingConfig, ZERO_STAGES};
 
 use anyhow::{bail, Context};
 

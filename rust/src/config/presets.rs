@@ -100,6 +100,8 @@ fn real_training(batch: usize, steps: usize) -> TrainingConfig {
         // lossless wire default: real-mode trajectories stay
         // bit-identical to pre-codec runs
         wire_codec: "f32".into(),
+        // full-precision gradient storage default, same reason
+        grad_dtype: "f32".into(),
         topology: String::new(),
         auto_tune: false,
         bucket_mb: 25.0,
@@ -131,9 +133,12 @@ pub fn quickstart() -> Config {
             // and an uneven (smaller) first bucket, so the size-aware
             // plan + comm-engine pipeline run in every smoke test
             first_bucket_mb: 0.01,
-            // smoke runs cover the sharded-optimizer (ZeRO-1) path:
-            // reduce-scatter per bucket, shard step, all-gather params
-            zero_stage: 1,
+            // smoke runs cover the full sharded path (ZeRO-2):
+            // reduce-scatter per bucket, free-on-reduce gradient
+            // shards, shard step, all-gather params — bit-identical to
+            // stages 0/1 with f32 grads, so every smoke/e2e test
+            // exercises the release hook for free
+            zero_stage: 2,
             ..real_training(artifact_batch("tiny"), 30)
         },
         launch: LaunchConfig::default(),
@@ -190,6 +195,9 @@ pub fn paper_full_scale() -> Config {
             // prices the wire at 2 B/elem accordingly (as it always
             // has — this knob just names it)
             wire_codec: "bf16".into(),
+            // and stores them in bf16 too — the memory model's
+            // long-standing 2 B/elem gradient term, now named
+            grad_dtype: "bf16".into(),
             ..real_training(184, 100)
         },
         launch: LaunchConfig::default(),

@@ -4,9 +4,15 @@
 use anyhow::{bail, ensure};
 
 use super::{deny_unknown, ClusterConfig, ModelConfig};
-use crate::collectives::{Algorithm, Backend, Topology, WireCodec};
+use crate::collectives::{Algorithm, Backend, GradDtype, Topology,
+                         WireCodec};
 use crate::util::json::{self, Value};
 use crate::Result;
+
+/// Every supported ZeRO sharding stage, in ascending order — the
+/// drift-proof source for benches/examples that sweep stages (the same
+/// role `Backend::ALL` plays for transports).
+pub const ZERO_STAGES: [usize; 3] = [0, 1, 2];
 
 /// How steps are executed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,11 +104,23 @@ pub struct TrainingConfig {
     /// bytes — enforced by the conformance suite); only measured
     /// exposed-comm time changes. Default on.
     pub comm_engine: bool,
-    /// ZeRO optimizer-state sharding stage: 0 = replicated AdamW on
-    /// every rank (plain DDP), 1 = reduce-scatter gradients, each rank
-    /// steps only its shard, all-gather updated params. Same wire cost,
-    /// ~1/world the optimizer memory per rank.
+    /// ZeRO sharding stage: 0 = replicated AdamW on every rank (plain
+    /// DDP), 1 = reduce-scatter gradients, each rank steps only its
+    /// shard, all-gather updated params, 2 = stage 1 plus free-on-reduce
+    /// gradient sharding: once a bucket's reduce-scatter lands, each
+    /// rank retains only its own shard span of that bucket's gradient
+    /// and releases the rest, dropping steady-state gradient residency
+    /// from 4·P to ~4·P/world plus the in-flight bucket window. Same
+    /// wire cost and bit-identical f32 trajectories at every stage.
     pub zero_stage: usize,
+    /// Storage dtype for the accumulated gradient ("f32" | "bf16"):
+    /// what the trainer *retains* between reduce and optimizer step,
+    /// independent of `wire_codec` (what crosses the transport). `bf16`
+    /// rounds to nearest-even with the exact same rounding as the bf16
+    /// wire, so storage and wire agree bit for bit and zero-2 + bf16
+    /// wire stays deterministic; it halves gradient bytes (and the
+    /// stage-2 shard) at a bounded, replica-identical rounding cost.
+    pub grad_dtype: String,
     /// Checkpoint every N steps (0 = never).
     pub checkpoint_every: usize,
     /// Log metrics every N steps.
@@ -114,9 +132,9 @@ impl TrainingConfig {
         deny_unknown(v, &["mode", "batch_per_gpu", "steps", "lr",
                           "warmup_steps", "beta1", "beta2", "weight_decay",
                           "adam_eps", "allreduce", "transport",
-                          "wire_codec", "topology", "auto_tune",
-                          "bucket_mb", "first_bucket_mb", "overlap_comm",
-                          "comm_engine", "zero_stage",
+                          "wire_codec", "grad_dtype", "topology",
+                          "auto_tune", "bucket_mb", "first_bucket_mb",
+                          "overlap_comm", "comm_engine", "zero_stage",
                           "checkpoint_every", "log_every"])?;
         let f = |key: &str, dv: f64| -> Result<f64> {
             Ok(v.get(key).map(|x| x.as_f64()).transpose()?.unwrap_or(dv))
@@ -141,6 +159,9 @@ impl TrainingConfig {
                 .map(|x| x.as_str().map(str::to_string)).transpose()?
                 .unwrap_or_else(|| "channel".into()),
             wire_codec: v.get("wire_codec")
+                .map(|x| x.as_str().map(str::to_string)).transpose()?
+                .unwrap_or_else(|| "f32".into()),
+            grad_dtype: v.get("grad_dtype")
                 .map(|x| x.as_str().map(str::to_string)).transpose()?
                 .unwrap_or_else(|| "f32".into()),
             topology: v.get("topology")
@@ -174,6 +195,7 @@ impl TrainingConfig {
             ("allreduce", json::s(&self.allreduce)),
             ("transport", json::s(&self.transport)),
             ("wire_codec", json::s(&self.wire_codec)),
+            ("grad_dtype", json::s(&self.grad_dtype)),
             ("topology", json::s(&self.topology)),
             ("auto_tune", Value::Bool(self.auto_tune)),
             ("bucket_mb", json::num(self.bucket_mb)),
@@ -200,6 +222,7 @@ impl TrainingConfig {
         let algo: Algorithm = self.allreduce.parse()?;
         let _: Backend = self.transport.parse()?;
         let _: WireCodec = self.wire_codec.parse()?;
+        let _: GradDtype = self.grad_dtype.parse()?;
         if algo == Algorithm::Hierarchical {
             ensure!(self.transport == "hier",
                     "allreduce = \"hierarchical\" runs on the two-tier \
@@ -243,18 +266,20 @@ impl TrainingConfig {
              set it smaller, or 0 for uniform buckets",
             self.first_bucket_mb, self.bucket_mb
         );
-        ensure!(self.zero_stage <= 1,
+        ensure!(ZERO_STAGES.contains(&self.zero_stage),
                 "zero_stage {} unsupported (0 = replicated optimizer, \
-                 1 = sharded optimizer states)",
+                 1 = sharded optimizer states, 2 = + sharded gradients \
+                 with free-on-reduce)",
                 self.zero_stage);
-        if self.zero_stage == 1 {
-            // stage 1 shards per bucket: the sharded step rides the
-            // bucketed reduce-scatter schedule, so a blocking
-            // (non-overlapped) sync has no shard map to step against
+        if self.zero_stage >= 1 {
+            // stages 1/2 shard per bucket: the sharded step (and the
+            // stage-2 free-on-reduce window) ride the bucketed
+            // reduce-scatter schedule, so a non-overlapped sync has no
+            // shard map to step against
             ensure!(self.overlap_comm,
-                    "zero_stage 1 requires overlap_comm (the shard map \
+                    "zero_stage {} requires overlap_comm (the shard map \
                      is the bucket partition); set overlap_comm=true or \
-                     zero_stage=0");
+                     zero_stage=0", self.zero_stage);
         }
         if self.mode == ExecMode::Real {
             ensure!(
@@ -458,26 +483,53 @@ mod tests {
     }
 
     #[test]
-    fn zero_stage_must_be_0_or_1() {
+    fn zero_stage_must_be_a_supported_stage() {
         let mut cfg = presets::quickstart();
-        cfg.training.zero_stage = 2;
+        cfg.training.zero_stage = 3;
         assert!(cfg.validate().is_err());
-        cfg.training.zero_stage = 1;
-        assert!(cfg.validate().is_ok());
-        cfg.training.zero_stage = 0;
-        assert!(cfg.validate().is_ok());
+        for ok in ZERO_STAGES {
+            cfg.training.zero_stage = ok;
+            assert!(cfg.validate().is_ok(), "zero_stage={ok} rejected");
+        }
     }
 
     #[test]
-    fn zero_stage_1_requires_overlap_comm() {
+    fn sharded_zero_stages_require_overlap_comm() {
+        for stage in [1, 2] {
+            let mut cfg = presets::quickstart();
+            cfg.training.zero_stage = stage;
+            cfg.training.overlap_comm = false;
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("overlap_comm"), "unexpected: {err}");
+            // overlap off is fine without sharding
+            cfg.training.zero_stage = 0;
+            assert!(cfg.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn grad_dtype_knob_is_validated() {
         let mut cfg = presets::quickstart();
-        cfg.training.zero_stage = 1;
-        cfg.training.overlap_comm = false;
+        for ok in ["f32", "bf16"] {
+            cfg.training.grad_dtype = ok.into();
+            assert!(cfg.validate().is_ok(), "grad_dtype={ok} rejected");
+        }
+        cfg.training.grad_dtype = "fp8".into();
         let err = cfg.validate().unwrap_err().to_string();
-        assert!(err.contains("overlap_comm"), "unexpected: {err}");
-        // overlap off is fine without sharding
-        cfg.training.zero_stage = 0;
-        assert!(cfg.validate().is_ok());
+        assert!(err.contains("f32|bf16"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn grad_dtype_defaults_to_f32() {
+        // a config JSON without the knob parses to full-precision
+        // storage — old configs keep their exact trajectories
+        let t = presets::e2e_pretrain().training;
+        let mut v = t.to_json();
+        if let Value::Obj(ref mut kv) = v {
+            kv.retain(|(k, _)| k != "grad_dtype");
+        }
+        let back = TrainingConfig::from_json(&v).unwrap();
+        assert_eq!(back.grad_dtype, "f32");
     }
 
     #[test]

@@ -26,8 +26,10 @@ use std::path::PathBuf;
 use anyhow::{anyhow, ensure, Context};
 
 use crate::collectives::transport::tcp::{MeshConfig, MAX_FRAME_ELEMS};
-use crate::collectives::{allreduce, Algorithm, AnyTransport,
-                         TcpTransport, Transport};
+use crate::collectives::{allreduce, bucketed_all_gather,
+                         bucketed_allreduce, bucketed_reduce_scatter,
+                         reduce_scatter, Algorithm, AnyTransport,
+                         BucketPlan, TcpTransport, Transport};
 use crate::config::{Config, LaunchConfig};
 use crate::train::{train_worker, TrainOptions};
 use crate::Result;
@@ -189,10 +191,11 @@ pub(crate) fn run_probe<T: Transport>(comm: &mut T) -> Result<()> {
     // all-reduce, both flat algorithms: small-integer payloads keep
     // every partial sum exact in f32, so equality is exact equality
     let base = (world * (world + 1) / 2) as f32;
+    let pattern = |r: usize| -> Vec<f32> {
+        (0..4096).map(|k| ((r + 1) * (k % 17 + 1)) as f32).collect()
+    };
     for algo in [Algorithm::Ring, Algorithm::Tree] {
-        let mut buf: Vec<f32> = (0..4096)
-            .map(|k| ((rank + 1) * (k % 17 + 1)) as f32)
-            .collect();
+        let mut buf = pattern(rank);
         allreduce(algo, comm, &mut buf)?;
         for (k, v) in buf.iter().enumerate() {
             let want = base * (k % 17 + 1) as f32;
@@ -200,6 +203,60 @@ pub(crate) fn run_probe<T: Transport>(comm: &mut T) -> Result<()> {
                     "probe rank {rank}: {algo} allreduce wrong at \
                      elem {k} (got {v}, want {want})");
         }
+    }
+
+    // the trainer's bucketed schedule, cross-process: uneven first +
+    // tail buckets so shard boundaries cut buckets unevenly
+    let plan = BucketPlan::from_elems_with_first(4096, 1500, 700);
+    let mut buf = pattern(rank);
+    bucketed_allreduce(Algorithm::Ring, comm, &mut buf, &plan)?;
+    for (k, v) in buf.iter().enumerate() {
+        let want = base * (k % 17 + 1) as f32;
+        ensure!(*v == want,
+                "probe rank {rank}: bucketed allreduce wrong at \
+                 elem {k} (got {v}, want {want})");
+    }
+
+    // ZeRO rows. Stage 1: in-place bucketed reduce-scatter. Stage 2:
+    // the free-on-reduce shape — per bucket, stage a copy, truncate
+    // the source, reduce-scatter the copy. Shard sums must match the
+    // stage-1 result BIT for bit (same collective, same order, same
+    // values — the zero-2 bit-identity contract, asserted over the
+    // real wire).
+    let mut z1 = pattern(rank);
+    bucketed_reduce_scatter(Algorithm::Ring, comm, &mut z1, &plan)?;
+    let mut src = pattern(rank);
+    for i in plan.ready_order() {
+        let (a, b) = plan.span(i);
+        let mut window = src[a..b].to_vec();
+        src.truncate(a);
+        reduce_scatter(Algorithm::Ring, comm, &mut window)?;
+        let (sa, sb) = plan.shard_span(i, rank, world);
+        for k in sa..sb {
+            ensure!(window[k - a].to_bits() == z1[k].to_bits(),
+                    "probe rank {rank}: free-on-reduce shard sum \
+                     diverged from in-place at elem {k}");
+            let want = base * (k % 17 + 1) as f32;
+            ensure!(z1[k] == want,
+                    "probe rank {rank}: reduce-scatter wrong at elem \
+                     {k} (got {}, want {want})", z1[k]);
+        }
+    }
+    // shard-local update (double — exact in f32) stands in for the
+    // optimizer step, then the all-gather rebuilds every replica:
+    // the sharded-step round trip the ZeRO trainer runs
+    for i in 0..plan.n_buckets() {
+        let (sa, sb) = plan.shard_span(i, rank, world);
+        for v in &mut z1[sa..sb] {
+            *v *= 2.0;
+        }
+    }
+    bucketed_all_gather(Algorithm::Ring, comm, &mut z1, &plan)?;
+    for (k, v) in z1.iter().enumerate() {
+        let want = 2.0 * base * (k % 17 + 1) as f32;
+        ensure!(*v == want,
+                "probe rank {rank}: sharded-step round trip wrong at \
+                 elem {k} (got {v}, want {want})");
     }
 
     if world > 1 {

@@ -381,6 +381,30 @@ fn cmd_info() -> Result<()> {
             presets::artifact_batch(&m.variant)
         );
     }
+    // stage-aware memory model, derived from the same RankMemory the
+    // simulator and the auto-batch solver price — the table cannot
+    // drift from the code
+    println!("\nzero stages (steady-state bytes/rank, paper \
+              convention: bf16 grads; example bert-120m, world 8):");
+    let p = presets::model_bert_120m().param_count();
+    let what = ["replicated everything",
+                "+ sharded optimizer (8P -> 8P/W)",
+                "+ sharded gradient, free-on-reduce (2P -> 2P/W)"];
+    for &st in txgain::config::ZERO_STAGES.iter() {
+        let m = txgain::collectives::RankMemory::new(p, 8, st);
+        println!(
+            "  stage {st}: param {:>9} grad {:>9} opt {:>9} \
+             total {:>9}  {}",
+            txgain::util::human_bytes(m.param_bytes as u64),
+            txgain::util::human_bytes(m.grad_bytes as u64),
+            txgain::util::human_bytes(m.optimizer_bytes as u64),
+            txgain::util::human_bytes(m.total() as u64),
+            what.get(st).copied().unwrap_or(""));
+    }
+    println!("  training.grad_dtype = f32|bf16 sets the stage-2 \
+              shard width (bf16 halves it,\n  rounding exactly like \
+              the bf16 wire codec).");
+
     println!("\nlaunch knobs (config section \"launch\" — the \
               process-per-rank bootstrap; see CONTRIBUTING.md):");
     let defaults = LaunchConfig::default().to_json();

@@ -17,7 +17,10 @@
 //!               (same schedule, half the bytes) plus a post-step
 //!               parameter all-gather that is always exposed; per-rank
 //!               optimizer memory drops to 8·P/world in exchange
-//!               (`RankMemory`)
+//!               (`RankMemory`). `zero_stage: 2` prices the same wire
+//!               schedule but also shards the accumulated gradient
+//!               (free-on-reduce), dropping the grad term to
+//!               2·P/world
 //!   loader    = max(CPU prep time, storage read time) per batch; the
 //!               storage term prices the *streaming* loader: disk bytes
 //!               per sample depend on how the `cache_mb` block cache
@@ -102,9 +105,15 @@ pub struct SimResult {
     /// bound on any single rank.
     pub wire_bytes_per_rank: f64,
     /// Optimizer-state (Adam m+v) bytes held per rank — `8·P` under
-    /// ZeRO-0, `8·P/world` under ZeRO-1. The memory the `zero_stage`
+    /// ZeRO-0, `8·P/world` under ZeRO-1/2. The memory the `zero_stage`
     /// knob trades against batch.
     pub opt_bytes_per_rank: f64,
+    /// Steady-state accumulated-gradient bytes held per rank (paper
+    /// convention: bf16 grads, `2·P`) — replicated at stages 0/1,
+    /// `2·P/world` once ZeRO-2's free-on-reduce shards the gradient.
+    /// The modeled twin of the trainer's measured `grad_peak_bytes`
+    /// steady-state term.
+    pub grad_bytes_per_rank: f64,
     /// GPU memory left free at this batch size (negative = does not
     /// fit). Headroom that could become more micro-batch (rec. 5).
     pub mem_headroom_bytes: f64,
@@ -134,7 +143,8 @@ pub fn simulate(cfg: &Config) -> SimResult {
     let mem = MemoryModel::new(c.gpu_mem_gb);
     // auto-batch ("solve memory for the largest batch", rec. 5) is
     // ZeRO-aware: stage 1 frees 8·P·(1−1/W) bytes of moment state per
-    // rank and that headroom becomes micro-batch
+    // rank, stage 2 additionally frees 2·P·(1−1/W) of gradient, and
+    // that headroom becomes micro-batch
     let batch = if cfg.training.batch_per_gpu > 0 {
         cfg.training.batch_per_gpu
     } else {
@@ -279,6 +289,7 @@ pub fn simulate(cfg: &Config) -> SimResult {
         comm_buckets,
         wire_bytes_per_rank: wire_bytes,
         opt_bytes_per_rank: rank_mem.optimizer_bytes,
+        grad_bytes_per_rank: rank_mem.grad_bytes,
         mem_headroom_bytes: mem_headroom,
         loader_bytes_per_step,
         loader_exposed_secs: loader_exposed,
@@ -473,6 +484,31 @@ mod tests {
         cfg.training.zero_stage = 0;
         for r in sweep_nodes(&cfg, &[1, 128]) {
             assert!((r.opt_bytes_per_rank - p8).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn zero2_shards_the_gradient_column() {
+        // the fig-1 grad-mem/rank column: 2·P replicated at stages
+        // 0/1, 2·P/world once stage 2's free-on-reduce shards it
+        let mut cfg = paper_cfg(presets::model_bert_120m(), 184);
+        let p2 = 2.0 * cfg.model.param_count() as f64;
+        for st in [0usize, 1] {
+            cfg.training.zero_stage = st;
+            let r = simulate(&cfg);
+            assert!((r.grad_bytes_per_rank - p2).abs() < 1.0,
+                    "stage {st}: {}", r.grad_bytes_per_rank);
+        }
+        cfg.training.zero_stage = 2;
+        for r in sweep_nodes(&cfg, &[1, 2, 8, 32]) {
+            let expect = p2 / r.world as f64;
+            assert!((r.grad_bytes_per_rank - expect).abs() < 1.0,
+                    "world={}: {} vs {expect}", r.world,
+                    r.grad_bytes_per_rank);
+            // stage 2 keeps stage 1's sharded optimizer term too
+            let expect_opt =
+                8.0 * cfg.model.param_count() as f64 / r.world as f64;
+            assert!((r.opt_bytes_per_rank - expect_opt).abs() < 1.0);
         }
     }
 

@@ -38,7 +38,8 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
         &format!("FIG. 1 — pretraining scaling performance ({model_name})"),
         vec!["nodes", "gpus", "batch/gpu", "samples/s", "scale-eff",
              "step(ms)", "compute(ms)", "comm-exposed(ms)", "wire/step",
-             "io/step", "opt-mem/rank", "gpu-util", "plan"],
+             "io/step", "grad-mem/rank", "opt-mem/rank", "gpu-util",
+             "plan"],
     );
     let Some(base) = sweep.first() else {
         return t;
@@ -57,6 +58,7 @@ pub fn fig1_table(model_name: &str, sweep: &[SimResult]) -> Table {
             format!("{:.1}", r.comm_exposed_secs * 1e3),
             format!("{:.1}MB", r.wire_bytes_per_rank / 1e6),
             format!("{:.1}MB", r.loader_bytes_per_step / 1e6),
+            format!("{:.1}MB", r.grad_bytes_per_rank / 1e6),
             format!("{:.1}MB", r.opt_bytes_per_rank / 1e6),
             format!("{:.3}", r.gpu_util),
             plan_cell(r),
@@ -87,8 +89,8 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
         "model", "nodes", "gpus", "batch_per_gpu", "samples_per_sec",
         "step_secs", "compute_secs", "comm_secs", "comm_exposed_secs",
         "wire_bytes_per_rank", "loader_bytes_per_step",
-        "opt_bytes_per_rank", "mem_headroom_bytes", "gpu_util",
-        "tuned_plan",
+        "grad_bytes_per_rank", "opt_bytes_per_rank",
+        "mem_headroom_bytes", "gpu_util", "tuned_plan",
     ]);
     for (name, sweep) in series {
         for r in sweep {
@@ -104,6 +106,7 @@ pub fn fig1_csv(series: &[(&str, Vec<SimResult>)]) -> CsvWriter {
                 format!("{:.6}", r.comm_exposed_secs),
                 format!("{:.0}", r.wire_bytes_per_rank),
                 format!("{:.0}", r.loader_bytes_per_step),
+                format!("{:.0}", r.grad_bytes_per_rank),
                 format!("{:.0}", r.opt_bytes_per_rank),
                 format!("{:.0}", r.mem_headroom_bytes),
                 format!("{:.4}", r.gpu_util),
@@ -198,6 +201,25 @@ mod tests {
         cfg.training.auto_tune = false;
         let plain = sweep_nodes(&cfg, &[2]);
         assert!(plain[0].tuned.is_none());
+    }
+
+    #[test]
+    fn fig1_surfaces_per_rank_gradient_memory() {
+        let mut cfg = presets::paper_full_scale();
+        cfg.training.zero_stage = 2;
+        let sweep = sweep_nodes(&cfg, &[1, 128]);
+        let s = fig1_table("bert-120m", &sweep).render();
+        assert!(s.contains("grad-mem/rank"), "missing column: {s}");
+        let csv = fig1_csv(&[("bert-120m", sweep.clone())]).to_string();
+        assert!(csv.contains("grad_bytes_per_rank"));
+        // stage 2 shards the gradient: 256 GPUs hold ~1/256 each
+        assert!(sweep[1].grad_bytes_per_rank
+                < sweep[0].grad_bytes_per_rank / 100.0);
+        // stages 0/1 keep it replicated (flat across the sweep)
+        cfg.training.zero_stage = 1;
+        let flat = sweep_nodes(&cfg, &[1, 128]);
+        assert_eq!(flat[0].grad_bytes_per_rank,
+                   flat[1].grad_bytes_per_rank);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! ZeRO-2 gradient-plane bookkeeping: the shard-resident gradient
+//! store behind `zero_stage = 2` and the byte meter behind the
+//! measured `grad_peak_bytes` column.
+//!
+//! Stage 2's contract is free-on-reduce: once bucket k's
+//! reduce-scatter lands, a rank keeps only its own shard span of that
+//! bucket (at `training.grad_dtype` width) and releases everything
+//! else back to the pools. [`ShardGrads`] is the keep side — owned
+//! shard values laid out exactly like the sharded [`AdamW`]'s m/v
+//! (concatenated `BucketPlan::rank_ranges` order), so
+//! `AdamW::step_span_with` can read it through a closure with zero
+//! scratch copies. [`GradResidency`] is the measurement side: a
+//! logical alloc/free meter over the gradient plane (staging copies +
+//! shard store; loss/param traffic is not gradient memory) whose peak
+//! must reproduce `RankMemory::grad_peak_bytes` exactly — the
+//! measured-vs-modeled cross-check the integration suite enforces.
+//!
+//! [`AdamW`]: super::optimizer::AdamW
+//! [`RankMemory::grad_peak_bytes`]:
+//!     crate::collectives::RankMemory::grad_peak_bytes
+
+use crate::collectives::transport::codec::{bf16_bits, bf16_from_bits};
+use crate::collectives::{BucketPlan, GradDtype};
+
+/// Per-sync logical residency meter for the gradient plane. The
+/// trainer creates one per step, records every staging-buffer
+/// alloc/free and shard-store growth, and reads [`GradResidency::peak`]
+/// at the end — Vec capacity reuse (the pools' caching-allocator
+/// behavior) deliberately does not hide a byte here, so the number is
+/// the residency a real allocator would see.
+#[derive(Debug, Default)]
+pub struct GradResidency {
+    resident: u64,
+    peak: u64,
+}
+
+impl GradResidency {
+    pub fn new() -> GradResidency {
+        GradResidency::default()
+    }
+
+    /// `bytes` entered the gradient plane (a bucket staged for sync,
+    /// a shard span stored).
+    pub fn alloc(&mut self, bytes: u64) {
+        self.resident += bytes;
+        self.peak = self.peak.max(self.resident);
+    }
+
+    /// `bytes` left the gradient plane (a staging buffer recycled, the
+    /// backward source truncated past a consumed bucket).
+    pub fn free(&mut self, bytes: u64) {
+        debug_assert!(self.resident >= bytes,
+                      "freeing {bytes} of {} resident", self.resident);
+        self.resident = self.resident.saturating_sub(bytes);
+    }
+
+    /// High-water mark of this sync, bytes.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+}
+
+/// The stage-2 gradient shard: this rank's reduced values for every
+/// bucket, stored at `grad_dtype` width. bf16 is stored as real packed
+/// u16 bit patterns — the memory halving is physical, and because the
+/// pack is [`bf16_bits`] (the wire's RNE rounding), a stored value
+/// decodes bit-identically to what a bf16 wire would have delivered.
+#[derive(Debug)]
+pub struct ShardGrads {
+    dtype: GradDtype,
+    f32s: Vec<f32>,
+    bf16s: Vec<u16>,
+    /// Per bucket: offset of its shard inside the concatenated store.
+    offsets: Vec<usize>,
+    /// Per bucket: this rank's absolute shard span.
+    spans: Vec<(usize, usize)>,
+    owned: usize,
+}
+
+impl ShardGrads {
+    pub fn new(plan: &BucketPlan, rank: usize, world: usize,
+               dtype: GradDtype) -> ShardGrads {
+        let n = plan.n_buckets();
+        let mut offsets = Vec::with_capacity(n);
+        let mut spans = Vec::with_capacity(n);
+        let mut off = 0usize;
+        for i in 0..n {
+            let (a, b) = plan.shard_span(i, rank, world);
+            offsets.push(off);
+            spans.push((a, b));
+            off += b - a;
+        }
+        // one concatenated buffer in ascending-bucket order: the same
+        // layout AdamW::sharded(plan.rank_ranges(..)) gives its m/v,
+        // so view reads line up with the moment cursor by construction
+        ShardGrads {
+            dtype,
+            f32s: if dtype == GradDtype::F32 { vec![0.0; off] }
+                  else { Vec::new() },
+            bf16s: if dtype == GradDtype::Bf16 { vec![0; off] }
+                   else { Vec::new() },
+            offsets,
+            spans,
+            owned: off,
+        }
+    }
+
+    /// Total owned elements (= the sharded optimizer's m/v length).
+    pub fn owned_len(&self) -> usize {
+        self.owned
+    }
+
+    /// Physical bytes the store retains — the `bpe·P/W` term of the
+    /// closed-form peak.
+    pub fn stored_bytes(&self) -> u64 {
+        self.owned as u64 * self.dtype.bytes_per_elem() as u64
+    }
+
+    /// This rank's absolute shard span of bucket `i`.
+    pub fn span(&self, i: usize) -> (usize, usize) {
+        self.spans[i]
+    }
+
+    /// Bytes bucket `i`'s shard occupies in the store.
+    pub fn span_bytes(&self, i: usize) -> u64 {
+        let (a, b) = self.spans[i];
+        (b - a) as u64 * self.dtype.bytes_per_elem() as u64
+    }
+
+    /// Keep bucket `i`'s reduced shard (`vals` = exactly the shard
+    /// span's worth of post-reduce-scatter values), rounding to the
+    /// storage dtype. For bf16 this is the free-on-reduce moment where
+    /// 4 B/elem staging becomes 2 B/elem retained.
+    pub fn store_bucket(&mut self, i: usize, vals: &[f32]) {
+        let (a, b) = self.spans[i];
+        assert_eq!(vals.len(), b - a, "bucket {i} shard length");
+        let off = self.offsets[i];
+        match self.dtype {
+            GradDtype::F32 => {
+                self.f32s[off..off + vals.len()].copy_from_slice(vals);
+            }
+            GradDtype::Bf16 => {
+                for (k, &x) in vals.iter().enumerate() {
+                    self.bf16s[off + k] = bf16_bits(x);
+                }
+            }
+        }
+    }
+
+    /// Gradient view for bucket `i`: absolute flat index → stored
+    /// value, defined exactly on the bucket's shard span. Feed this to
+    /// `AdamW::step_span_with` over the same span.
+    pub fn bucket_reader(&self, i: usize) -> impl Fn(usize) -> f32 + '_ {
+        let (a, b) = self.spans[i];
+        let off = self.offsets[i];
+        move |idx: usize| {
+            debug_assert!((a..b).contains(&idx),
+                          "index {idx} outside shard span {a}..{b}");
+            let k = off + (idx - a);
+            match self.dtype {
+                GradDtype::F32 => self.f32s[k],
+                GradDtype::Bf16 => bf16_from_bits(self.bf16s[k]),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::codec::bf16_round;
+
+    #[test]
+    fn residency_tracks_the_high_water_mark() {
+        let mut r = GradResidency::new();
+        r.alloc(100);
+        r.alloc(50);
+        r.free(100);
+        r.alloc(20);
+        assert_eq!(r.peak(), 150);
+        r.alloc(90);
+        assert_eq!(r.peak(), 160);
+    }
+
+    #[test]
+    fn store_layout_matches_rank_ranges_concatenation() {
+        // uneven plan: 3 buckets over 10 elems, world 3 — shard
+        // boundaries cut buckets unevenly and some shards are tiny
+        let plan = BucketPlan::from_elems(10, 4);
+        for rank in 0..3 {
+            let sg = ShardGrads::new(&plan, rank, 3, GradDtype::F32);
+            assert_eq!(sg.owned_len(), plan.rank_owned_elems(rank, 3));
+            // per-bucket spans agree with the plan's ownership map
+            for i in 0..plan.n_buckets() {
+                assert_eq!(sg.span(i), plan.shard_span(i, rank, 3));
+            }
+            assert_eq!(sg.stored_bytes(), 4 * sg.owned_len() as u64);
+        }
+    }
+
+    #[test]
+    fn f32_roundtrips_exactly_and_bf16_rounds_like_the_wire() {
+        let plan = BucketPlan::from_elems(8, 4);
+        let vals: Vec<f32> = (0..8).map(|i| 0.1 * i as f32 - 0.33)
+            .collect();
+        for dtype in GradDtype::ALL {
+            let mut sg = ShardGrads::new(&plan, 0, 1, dtype);
+            for i in 0..plan.n_buckets() {
+                let (a, b) = plan.span(i);
+                sg.store_bucket(i, &vals[a..b]);
+            }
+            for i in 0..plan.n_buckets() {
+                let read = sg.bucket_reader(i);
+                let (a, b) = sg.span(i);
+                for idx in a..b {
+                    let want = dtype.round(vals[idx]);
+                    assert_eq!(read(idx).to_bits(), want.to_bits(),
+                               "{dtype} idx {idx}");
+                }
+            }
+            assert_eq!(sg.stored_bytes(),
+                       8 * dtype.bytes_per_elem() as u64);
+        }
+        // the bf16 pack really is the wire's RNE rounding
+        assert_eq!(GradDtype::Bf16.round(0.1).to_bits(),
+                   bf16_round(0.1).to_bits());
+    }
+
+    #[test]
+    fn sharded_store_keeps_only_the_rank_shard() {
+        let plan = BucketPlan::from_elems(10, 5);
+        let sg0 = ShardGrads::new(&plan, 0, 2, GradDtype::Bf16);
+        let sg1 = ShardGrads::new(&plan, 1, 2, GradDtype::Bf16);
+        // two ranks split every 5-elem bucket 3/2 (leading shard takes
+        // the remainder), and together cover the whole vector
+        assert_eq!(sg0.owned_len() + sg1.owned_len(), 10);
+        assert_eq!(sg0.stored_bytes() + sg1.stored_bytes(), 2 * 10);
+        assert!(sg0.stored_bytes() < 4 * 10 / 2 + 4,
+                "bf16 shard must undercut half the f32 buffer");
+    }
+}

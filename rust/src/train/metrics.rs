@@ -48,6 +48,12 @@ pub struct StepRecord {
     /// Block-cache hit rate over the same interval (1.0 when no
     /// lookups happened — nothing was missed).
     pub cache_hit_rate: f64,
+    /// Measured high-water mark of the gradient plane this step:
+    /// staging copies handed to the collectives plus the accumulated
+    /// gradient (shard-resident under `zero_stage: 2`, at
+    /// `grad_dtype` width). Cross-checked against the closed-form
+    /// `RankMemory::grad_peak_bytes`.
+    pub grad_peak_bytes: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -134,12 +140,19 @@ impl RunReport {
             / self.records.len() as f64
     }
 
+    /// Run-wide gradient-plane high-water mark, bytes — the max (not
+    /// sum) of the per-step peaks, since the plane drains every step.
+    pub fn grad_peak_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.grad_peak_bytes).max()
+            .unwrap_or(0)
+    }
+
     pub fn to_csv(&self) -> CsvWriter {
         let mut w = CsvWriter::new(vec![
             "step", "loss", "lr", "step_secs", "compute_secs",
             "loader_wait_secs", "comm_secs", "comm_exposed_ms",
             "comm_buffer_bytes", "comm_wire_bytes", "loader_bytes",
-            "cache_hit_rate",
+            "cache_hit_rate", "grad_peak_bytes",
         ]);
         for r in &self.records {
             w.row(&[
@@ -155,6 +168,7 @@ impl RunReport {
                 r.comm_wire_bytes.to_string(),
                 r.loader_bytes.to_string(),
                 format!("{:.4}", r.cache_hit_rate),
+                r.grad_peak_bytes.to_string(),
             ]);
         }
         w
@@ -184,6 +198,8 @@ impl RunReport {
             ("loader_bytes_read",
              json::num(self.loader_bytes_read() as f64)),
             ("cache_hit_rate", json::num(self.cache_hit_rate())),
+            ("grad_peak_bytes",
+             json::num(self.grad_peak_bytes() as f64)),
         ])
     }
 
@@ -219,6 +235,7 @@ mod tests {
                     comm_wire_bytes: 2000,
                     loader_bytes: 1000,
                     cache_hit_rate: 0.75,
+                    grad_peak_bytes: 8000 + i as u64,
                 })
                 .collect(),
             preprocess_secs: 1.0,
@@ -251,8 +268,8 @@ mod tests {
                                loader_wait_secs,comm_secs,\
                                comm_exposed_ms,comm_buffer_bytes,\
                                comm_wire_bytes,loader_bytes,\
-                               cache_hit_rate"));
-        assert!(s.contains(",4000,2000,1000,0.7500"));
+                               cache_hit_rate,grad_peak_bytes"));
+        assert!(s.contains(",4000,2000,1000,0.7500,8000"));
         // exposed comm rides in milliseconds next to the raw seconds
         assert!(s.contains(",4.000,4000,"), "missing comm_exposed_ms: \
                                              {s}");
@@ -267,6 +284,9 @@ mod tests {
         assert!((r.cache_hit_rate() - 0.75).abs() < 1e-12);
         assert!((r.comm_exposed_ms() - 4.0).abs() < 1e-9);
         assert_eq!(RunReport::default().comm_exposed_ms(), 0.0);
+        // the run-wide gradient peak is a max, not a sum
+        assert_eq!(r.grad_peak_bytes(), 8009);
+        assert_eq!(RunReport::default().grad_peak_bytes(), 0);
     }
 
     #[test]
@@ -285,6 +305,9 @@ mod tests {
             v.req("loader_bytes_read").unwrap().as_usize().unwrap(),
             10_000);
         assert!(v.req("cache_hit_rate").is_ok());
+        assert_eq!(
+            v.req("grad_peak_bytes").unwrap().as_usize().unwrap(),
+            8009);
     }
 
     #[test]

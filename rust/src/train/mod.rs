@@ -3,11 +3,13 @@
 //! PJRT and moves real gradients through the real collectives.
 
 pub mod checkpoint;
+pub mod gradmem;
 pub mod metrics;
 pub mod optimizer;
 pub mod schedule;
 pub mod trainer;
 
+pub use gradmem::{GradResidency, ShardGrads};
 pub use metrics::{RunReport, StepRecord};
 pub use optimizer::AdamW;
 pub use schedule::LrSchedule;

@@ -108,6 +108,20 @@ impl AdamW {
         assert!(self.ranges.last().map_or(0, |r| r.1) <= flat_grads.len(),
                 "owned ranges exceed gradient length {}",
                 flat_grads.len());
+        self.step_span_with(params, meta, lr, span, |i| flat_grads[i]);
+    }
+
+    /// [`AdamW::step_range`] against a gradient *view*: `grad(i)`
+    /// returns the gradient for absolute flat index `i`, and is only
+    /// called for owned indices inside `span`. This is how ZeRO-2
+    /// steps from a shard-resident gradient store (no full flat vector
+    /// exists to slice) — with `grad = |i| flat_grads[i]` the
+    /// arithmetic is token-for-token the historical path, so all the
+    /// tick/step_range composition identities carry over unchanged.
+    pub fn step_span_with(&mut self, params: &mut HostParams,
+                          meta: &VariantMeta, lr: f64,
+                          span: (usize, usize),
+                          grad: impl Fn(usize) -> f32) {
         let b1 = self.beta1 as f32;
         let b2 = self.beta2 as f32;
         let bc1 = 1.0 - (self.beta1 as f32).powi(self.step as i32);
@@ -137,13 +151,13 @@ impl AdamW {
                     // out_bias)
                     let decay =
                         if spec.shape.len() > 1 { wd } else { 0.0 };
-                    let g = &flat_grads[a..b];
                     let p = &mut t[a - spec.offset..b - spec.offset];
                     let m = &mut self.m[moff + a - ra..moff + b - ra];
                     let v = &mut self.v[moff + a - ra..moff + b - ra];
-                    for i in 0..g.len() {
-                        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
-                        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                    for i in 0..b - a {
+                        let g = grad(a + i);
+                        m[i] = b1 * m[i] + (1.0 - b1) * g;
+                        v[i] = b2 * v[i] + (1.0 - b2) * g * g;
                         let mhat = m[i] / bc1;
                         let vhat = v[i] / bc2;
                         p[i] -= lr
@@ -366,6 +380,42 @@ mod tests {
         sh_part.step_range(&mut p_b, &meta, &g, lr, (3, 6));
         sh_part.step_range(&mut p_b, &meta, &g, lr, (0, 3));
         assert_eq!(p_a.tensors, p_b.tensors);
+    }
+
+    /// Stepping through a gradient *view* (`step_span_with`) is
+    /// bit-identical to stepping from the flat slice — the identity
+    /// ZeRO-2's shard-resident store rests on, including a view that
+    /// only covers owned indices (unowned reads must never happen).
+    #[test]
+    fn view_steps_match_slice_steps_bitwise() {
+        let meta = toy_meta();
+        let g = [0.5f32, -0.25, 0.125, -0.5, 0.75, -1.0];
+        let lr = 0.01;
+        let mut p_a = toy_params();
+        let mut a = AdamW::sharded(&cfg(), vec![(1, 3), (4, 6)]);
+        let mut p_b = toy_params();
+        let mut b = AdamW::sharded(&cfg(), vec![(1, 3), (4, 6)]);
+        for step in 0..3 {
+            let gs: Vec<f32> =
+                g.iter().map(|x| x * (step + 1) as f32).collect();
+            a.tick();
+            a.step_range(&mut p_a, &meta, &gs, lr, (0, 6));
+            b.tick();
+            // a view defined only on owned indices: panics on any
+            // out-of-shard access
+            let own: Vec<f32> =
+                [1, 2, 4, 5].iter().map(|&i| gs[i]).collect();
+            b.step_span_with(&mut p_b, &meta, lr, (0, 6), |i| match i {
+                1 | 2 => own[i - 1],
+                4 | 5 => own[i - 2],
+                _ => panic!("read of unowned index {i}"),
+            });
+        }
+        for (x, y) in p_a.tensors.iter().zip(&p_b.tensors) {
+            for (u, w) in x.iter().zip(y) {
+                assert_eq!(u.to_bits(), w.to_bits());
+            }
+        }
     }
 
     /// A sharded step must not touch parameters outside its ranges.

@@ -11,7 +11,17 @@
 //! reduce-scattered per bucket, each rank steps only its shard (m/v
 //! sized to it), and updated parameters are all-gathered back — either
 //! way replicas end every step bit-identical, asserted at the end of
-//! every run (the fundamental DDP invariant).
+//! every run (the fundamental DDP invariant). `zero_stage: 2` adds
+//! free-on-reduce gradient sharding on top: each bucket's
+//! reduce-scatter runs on a staging copy, the backward source is
+//! truncated the moment the copy exists, and only the rank's own
+//! shard span survives into a [`ShardGrads`] store (at
+//! `training.grad_dtype` width) — steady-state gradient residency
+//! drops from 4·P to ~4·P/W plus the in-flight window, and every step
+//! reports the measured high-water mark as `grad_peak_bytes`, which
+//! must reproduce `RankMemory::grad_peak_bytes` exactly. The wire
+//! traffic is the same reduce-scatter in the same order on the same
+//! values, so stage 2 with f32 grads is bit-identical to stages 0/1.
 //!
 //! Two entry points share one per-rank step loop ([`run_rank`]):
 //! [`train`] spawns the whole world as threads in this process, while
@@ -34,6 +44,7 @@
 //! advisory telemetry, never used to order memory. Rank threads
 //! synchronize exclusively through the transport and the collectives.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -43,10 +54,12 @@ use anyhow::{ensure, Context};
 
 use crate::collectives::{allreduce, bucketed_all_gather,
                          bucketed_allreduce, bucketed_reduce_scatter,
-                         Algorithm, AnyTransport, Backend, BucketPlan,
-                         CollectiveKind, CommEngine, CostModel,
+                         reduce_scatter, Algorithm, AnyTransport,
+                         Backend, BucketPlan, CollectiveKind,
+                         CommEngine, CostModel, GradDtype,
                          PendingBucket, Topology, Transport,
-                         TransportStats, WireCodec};
+                         TransportStats, WireCodec,
+                         GRAD_INFLIGHT_BUCKETS};
 use crate::config::{Config, ExecMode};
 use crate::data::{BlockCache, DatasetIndex, LoaderPool, Masker,
                   WindowedPlan};
@@ -54,6 +67,7 @@ use crate::runtime::{Engine, HostParams, Manifest, VariantMeta};
 use crate::Result;
 
 use super::checkpoint::{extract_shard, Checkpoint, TrainProgress};
+use super::gradmem::{GradResidency, ShardGrads};
 use super::metrics::{RunReport, StepRecord};
 use super::optimizer::AdamW;
 use super::schedule::LrSchedule;
@@ -131,6 +145,9 @@ struct CommOutcome {
     /// Measured wall-clock exposed comm — `comm_secs`' twin, recorded
     /// separately so the column exists in both modes.
     comm_exposed_secs: f64,
+    /// Measured high-water mark of the gradient plane this step
+    /// (staging copies + shard store; see [`GradResidency`]).
+    grad_peak_bytes: u64,
 }
 
 /// Gradient sync + optimizer step over the blocking transports: the
@@ -138,7 +155,8 @@ struct CommOutcome {
 #[allow(clippy::too_many_arguments)]
 fn sync_and_step_blocking<T: Transport>(
     comm: &mut T, algo: Algorithm, bucket_plan: Option<&BucketPlan>,
-    zero: bool, grads: &mut [f32], raw_loss: f32, inv_world: f32,
+    zero: usize, grad_dtype: GradDtype, grads: &mut Vec<f32>,
+    shard: Option<&mut ShardGrads>, raw_loss: f32, inv_world: f32,
     opt: &mut AdamW, params: &mut HostParams, meta: &VariantMeta,
     flat_params: &mut [f32], lr: f64) -> Result<CommOutcome> {
     // average gradients + loss across the world; with overlap on, one
@@ -147,12 +165,75 @@ fn sync_and_step_blocking<T: Transport>(
     // remaining layers). ZeRO-1 reduce-scatters instead: each rank
     // only needs the summed gradient for the shard it steps — half
     // the wire bytes, the other half is spent all-gathering updated
-    // params below.
+    // params below. ZeRO-2 runs the same reduce-scatters on staging
+    // copies and frees the backward source bucket by bucket.
+    let rank = comm.rank();
+    let world = comm.world();
+    let mut res = GradResidency::new();
     let t_comm = Instant::now();
     for g in grads.iter_mut() {
         *g *= inv_world;
     }
-    match (bucket_plan, zero) {
+    if zero >= 2 {
+        // stage 2, free-on-reduce: for each bucket in ready order —
+        // stage a copy (alloc 4·span), truncate the backward source
+        // past it (the producer's hand-off: from here the bucket
+        // exists only in the staging copy), reduce-scatter the copy
+        // in place, keep only this rank's shard span at grad_dtype
+        // width, release the staging copy. The alloc/store/free order
+        // below IS the schedule RankMemory::grad_peak_bytes replays —
+        // keep them in lockstep or the measured-vs-modeled cross-check
+        // breaks.
+        let (Some(buckets), Some(shard)) = (bucket_plan, shard) else {
+            anyhow::bail!("zero_stage 2 requires a bucket plan and a \
+                           shard store (config validation guarantees \
+                           both)");
+        };
+        let mut window: Vec<f32> = Vec::new();
+        for i in buckets.ready_order() {
+            let (a, b) = buckets.span(i);
+            window.clear();
+            window.extend_from_slice(&grads[a..b]);
+            res.alloc(4 * (b - a) as u64);
+            grads.truncate(a);
+            // same collective, same order, same values as the stage-1
+            // bucketed_reduce_scatter — bit-identical on the wire
+            reduce_scatter(algo, comm, &mut window)?;
+            let (sa, sb) = buckets.shard_span(i, rank, world);
+            shard.store_bucket(i, &window[sa - a..sb - a]);
+            res.alloc(shard.span_bytes(i));
+            res.free(4 * (b - a) as u64);
+        }
+        let mut loss_buf = [raw_loss * inv_world];
+        allreduce(algo, comm, &mut loss_buf)?;
+        let mut comm_secs = t_comm.elapsed().as_secs_f64();
+
+        // shard-resident step: the optimizer reads each bucket's
+        // gradient straight out of the store (decoding bf16 on the
+        // fly); only owned∩span elements move, exactly as stage 1
+        opt.tick();
+        for i in buckets.ready_order() {
+            opt.step_span_with(params, meta, lr, buckets.span(i),
+                               shard.bucket_reader(i));
+        }
+
+        let t_ag = Instant::now();
+        params.flatten_into(flat_params);
+        bucketed_all_gather(algo, comm, flat_params, buckets)?;
+        params.unflatten_from(flat_params);
+        comm_secs += t_ag.elapsed().as_secs_f64();
+        return Ok(CommOutcome {
+            loss: loss_buf[0],
+            comm_secs,
+            comm_exposed_secs: comm_secs,
+            grad_peak_bytes: res.peak(),
+        });
+    }
+    // stages 0/1: the backward source is the accumulated gradient —
+    // it stays resident through the whole sync (peak 4·L)
+    res.alloc(4 * grads.len() as u64);
+    let sharded = zero >= 1;
+    match (bucket_plan, sharded) {
         (Some(buckets), true) => {
             bucketed_reduce_scatter(algo, comm, grads, buckets)?
         }
@@ -165,23 +246,30 @@ fn sync_and_step_blocking<T: Transport>(
     allreduce(algo, comm, &mut loss_buf)?;
     let mut comm_secs = t_comm.elapsed().as_secs_f64();
 
+    // grad_dtype: round the post-reduce accumulated gradient to the
+    // storage width (f32 is the identity). Rounding AFTER the sync
+    // keeps the wire and the reduction untouched — the contract that
+    // makes bf16 storage compose exactly with the bf16 wire codec.
+    grad_dtype.round_slice(grads);
     opt.step(params, meta, grads, lr);
 
     // ZeRO-1: only the owned shard moved; all-gather every rank's
     // freshly stepped shard so replicas re-converge before the next
     // forward (the DDP invariant, restored by communication instead
     // of redundant math)
-    if let (Some(buckets), true) = (bucket_plan, zero) {
+    if let (Some(buckets), true) = (bucket_plan, sharded) {
         let t_ag = Instant::now();
         params.flatten_into(flat_params);
         bucketed_all_gather(algo, comm, flat_params, buckets)?;
         params.unflatten_from(flat_params);
         comm_secs += t_ag.elapsed().as_secs_f64();
     }
+    res.free(4 * grads.len() as u64);
     Ok(CommOutcome {
         loss: loss_buf[0],
         comm_secs,
         comm_exposed_secs: comm_secs,
+        grad_peak_bytes: res.peak(),
     })
 }
 
@@ -190,18 +278,24 @@ fn sync_and_step_blocking<T: Transport>(
 /// the optimizer steps each bucket's span the moment its collective
 /// lands — so the step of bucket `k` overlaps the in-flight sync of
 /// buckets `k+1..`, and under ZeRO-1 the post-step all-gather of
-/// bucket `k` overlaps the shard step of bucket `k+1`. Only the
+/// bucket `k` overlaps the shard step of bucket `k+1`. ZeRO-2 bounds
+/// the launch window instead: at most [`GRAD_INFLIGHT_BUCKETS`]
+/// reduce-scatters ride the engine at once, each staged bucket frees
+/// on completion and its backward source frees at launch, so gradient
+/// residency is the shard store plus a constant-size window. Only the
 /// launch/wait time actually blocked on comm is exposed — the
 /// measured quantity `comm_exposed_ms` reports.
 #[allow(clippy::too_many_arguments)]
 fn sync_and_step_engine(
     eng: &mut CommEngine<AnyTransport>, algo: Algorithm,
-    bucket_plan: Option<&BucketPlan>, zero: bool, grads: &mut [f32],
-    raw_loss: f32, inv_world: f32, opt: &mut AdamW,
-    params: &mut HostParams, meta: &VariantMeta,
+    bucket_plan: Option<&BucketPlan>, zero: usize,
+    grad_dtype: GradDtype, grads: &mut Vec<f32>,
+    shard: Option<&mut ShardGrads>, raw_loss: f32, inv_world: f32,
+    opt: &mut AdamW, params: &mut HostParams, meta: &VariantMeta,
     flat_params: &mut [f32], lr: f64, rank: usize, world: usize)
     -> Result<CommOutcome> {
     let mut exposed = 0.0f64;
+    let mut res = GradResidency::new();
     for g in grads.iter_mut() {
         *g *= inv_world;
     }
@@ -211,8 +305,10 @@ fn sync_and_step_engine(
         // monolithic sync: a single engine op (the loss op rides
         // concurrently with it — the only overlap available without
         // buckets), then a full optimizer step
+        res.alloc(4 * grads.len() as u64);
         let mut buf = eng.take_buf();
         buf.extend_from_slice(grads);
+        res.alloc(4 * grads.len() as u64);
         let t = Instant::now();
         // keyed launches: the grad op reuses slot 0 and the loss op
         // slot 1 every step, so under int8+EF each stream's residual
@@ -225,28 +321,46 @@ fn sync_and_step_engine(
         let got = eng.wait(grad_p)?;
         grads.copy_from_slice(&got);
         eng.recycle(got);
+        res.free(4 * grads.len() as u64);
         let got = eng.wait(loss_p)?;
         exposed += t.elapsed().as_secs_f64();
         let loss = got[0];
         eng.recycle(got);
+        grad_dtype.round_slice(grads);
         opt.step(params, meta, grads, lr);
+        res.free(4 * grads.len() as u64);
         return Ok(CommOutcome {
             loss,
             comm_secs: exposed,
             comm_exposed_secs: exposed,
+            grad_peak_bytes: res.peak(),
         });
     };
+
+    if zero >= 2 {
+        let Some(shard) = shard else {
+            anyhow::bail!("zero_stage 2 requires a shard store \
+                           (config validation guarantees one)");
+        };
+        return sync_and_step_engine_zero2(
+            eng, algo, buckets, shard, &mut res, grads, loss_scaled,
+            opt, params, meta, flat_params, lr, rank, world);
+    }
 
     // launch every bucket in ready (reverse-layer) order — the
     // schedule `BucketManager` would hand out if a fused backward
     // drove readiness layer-by-layer; with a monolithic executable
     // all buckets are ready at once, so the plan's ready order IS the
     // launch order and the manager's bookkeeping would be ceremony
-    let kind = if zero {
+    let sharded = zero >= 1;
+    let kind = if sharded {
         CollectiveKind::ReduceScatter
     } else {
         CollectiveKind::Allreduce
     };
+    // stages 0/1: the backward source stays resident through the
+    // sync, and every bucket stages at once — peak 8·L
+    res.alloc(4 * grads.len() as u64);
     // keyed launches: bucket i always rides slot i (its stable tag
     // window), the loss op slot n_buckets, and the ZeRO-1 all-gather
     // of bucket i slot n_buckets+1+i — so under int8+EF every
@@ -259,6 +373,7 @@ fn sync_and_step_engine(
         let (a, b) = buckets.span(i);
         let mut buf = eng.take_buf();
         buf.extend_from_slice(&grads[a..b]);
+        res.alloc(4 * (b - a) as u64);
         let t = Instant::now();
         let p = eng.launch_bucket_keyed(algo, kind, buf, i as u32)?;
         exposed += t.elapsed().as_secs_f64();
@@ -271,7 +386,7 @@ fn sync_and_step_engine(
     exposed += t.elapsed().as_secs_f64();
 
     opt.tick();
-    if zero {
+    if sharded {
         // RS(k) wait → shard step(k) → AG(k) launch: the all-gather
         // of bucket k is in flight while bucket k+1's shard steps,
         // and the RS of buckets k+1.. progresses under everything
@@ -284,6 +399,8 @@ fn sync_and_step_engine(
             exposed += t.elapsed().as_secs_f64();
             grads[a..b].copy_from_slice(&got);
             eng.recycle(got);
+            res.free(4 * (b - a) as u64);
+            grad_dtype.round_slice(&mut grads[a..b]);
             opt.step_range(params, meta, grads, lr, (a, b));
             // refresh only this bucket's freshly stepped shard; the
             // rest of the bucket is other ranks' authority and gets
@@ -318,9 +435,124 @@ fn sync_and_step_engine(
             exposed += t.elapsed().as_secs_f64();
             grads[a..b].copy_from_slice(&got);
             eng.recycle(got);
+            res.free(4 * (b - a) as u64);
+            grad_dtype.round_slice(&mut grads[a..b]);
             opt.step_range(params, meta, grads, lr, (a, b));
         }
     }
+    let t = Instant::now();
+    let got = eng.wait(loss_p)?;
+    exposed += t.elapsed().as_secs_f64();
+    let loss = got[0];
+    eng.recycle(got);
+    res.free(4 * grads.len() as u64);
+    Ok(CommOutcome {
+        loss,
+        comm_secs: exposed,
+        comm_exposed_secs: exposed,
+        grad_peak_bytes: res.peak(),
+    })
+}
+
+/// The ZeRO-2 engine schedule: a sliding window of at most
+/// [`GRAD_INFLIGHT_BUCKETS`] in-flight reduce-scatters. Launching
+/// bucket `i` stages a copy and truncates the backward source past it
+/// (free-on-reduce, producer side); completing bucket `j` keeps only
+/// this rank's shard span at `grad_dtype` width, recycles the staging
+/// buffer, steps the shard and launches its parameter all-gather —
+/// the consumer side. Per-rank launch/wait order is a pure function
+/// of the shared plan, so every rank drives the engine identically
+/// (the SPMD contract the transports require) and the wire sees the
+/// same reduce-scatters, in the same order, on the same values as
+/// stage 1 — bit-identical under f32 grads. The alloc/store/free
+/// order is the schedule `RankMemory::grad_peak_bytes` replays at
+/// window depth [`GRAD_INFLIGHT_BUCKETS`] — keep them in lockstep.
+#[allow(clippy::too_many_arguments)]
+fn sync_and_step_engine_zero2(
+    eng: &mut CommEngine<AnyTransport>, algo: Algorithm,
+    buckets: &BucketPlan, shard: &mut ShardGrads,
+    res: &mut GradResidency, grads: &mut Vec<f32>, loss_scaled: f32,
+    opt: &mut AdamW, params: &mut HostParams, meta: &VariantMeta,
+    flat_params: &mut [f32], lr: f64, rank: usize, world: usize)
+    -> Result<CommOutcome> {
+    let mut exposed = 0.0f64;
+    let n_buckets = buckets.n_buckets();
+    // the loss op launches first (its stable slot n_buckets) so it
+    // pipelines under the whole gradient window
+    let t = Instant::now();
+    let loss_p = eng.launch_bucket_keyed(
+        algo, CollectiveKind::Allreduce, vec![loss_scaled],
+        n_buckets as u32)?;
+    exposed += t.elapsed().as_secs_f64();
+    opt.tick();
+
+    let order: Vec<usize> = buckets.ready_order().collect();
+    let mut pend: VecDeque<(usize, PendingBucket)> =
+        VecDeque::with_capacity(GRAD_INFLIGHT_BUCKETS);
+    let mut ag_pend: Vec<(usize, PendingBucket)> =
+        Vec::with_capacity(n_buckets);
+    let mut next = 0usize;
+    loop {
+        // drain the window when it is full or nothing is left to
+        // launch; otherwise launch the next bucket; stop when both
+        // sides are exhausted
+        let complete_now = pend.len() == GRAD_INFLIGHT_BUCKETS
+            || next == order.len();
+        let oldest = if complete_now { pend.pop_front() } else { None };
+        if let Some((j, p)) = oldest {
+            // complete the oldest in-flight bucket: keep the shard,
+            // free the staging copy, step, launch its all-gather
+            let (a, b) = buckets.span(j);
+            let t = Instant::now();
+            let got = eng.wait(p)?;
+            exposed += t.elapsed().as_secs_f64();
+            let (sa, sb) = buckets.shard_span(j, rank, world);
+            shard.store_bucket(j, &got[sa - a..sb - a]);
+            res.alloc(shard.span_bytes(j));
+            eng.recycle(got);
+            res.free(4 * (b - a) as u64);
+            opt.step_span_with(params, meta, lr, (a, b),
+                               shard.bucket_reader(j));
+            // refresh only this bucket's freshly stepped shard; the
+            // rest of the bucket is other ranks' authority and gets
+            // overwritten by the gather
+            params.copy_flat_range(sa, sb, flat_params);
+            let mut agbuf = eng.take_buf();
+            agbuf.extend_from_slice(&flat_params[a..b]);
+            let t = Instant::now();
+            let p = eng.launch_bucket_keyed(
+                algo, CollectiveKind::AllGather, agbuf,
+                (n_buckets + 1 + j) as u32)?;
+            exposed += t.elapsed().as_secs_f64();
+            ag_pend.push((j, p));
+        } else if next < order.len() {
+            // launch the next bucket: stage a copy, truncate the
+            // backward source past it (free-on-reduce)
+            let i = order[next];
+            next += 1;
+            let (a, b) = buckets.span(i);
+            let mut buf = eng.take_buf();
+            buf.extend_from_slice(&grads[a..b]);
+            res.alloc(4 * (b - a) as u64);
+            grads.truncate(a);
+            let t = Instant::now();
+            let p = eng.launch_bucket_keyed(
+                algo, CollectiveKind::ReduceScatter, buf, i as u32)?;
+            exposed += t.elapsed().as_secs_f64();
+            pend.push_back((i, p));
+        } else {
+            break;
+        }
+    }
+    for (i, p) in ag_pend {
+        let (a, b) = buckets.span(i);
+        let t = Instant::now();
+        let got = eng.wait(p)?;
+        exposed += t.elapsed().as_secs_f64();
+        flat_params[a..b].copy_from_slice(&got);
+        eng.recycle(got);
+    }
+    params.unflatten_from(flat_params);
     let t = Instant::now();
     let got = eng.wait(loss_p)?;
     exposed += t.elapsed().as_secs_f64();
@@ -330,6 +562,7 @@ fn sync_and_step_engine(
         loss,
         comm_secs: exposed,
         comm_exposed_secs: exposed,
+        grad_peak_bytes: res.peak(),
     })
 }
 
@@ -360,7 +593,8 @@ struct RunPlan {
     shard_counts: Arc<Vec<u64>>,
     masker: Masker,
     algo: Algorithm,
-    zero: bool,
+    zero: usize,
+    grad_dtype: GradDtype,
     bucket_plan: Option<BucketPlan>,
     resume: Option<Arc<Checkpoint>>,
     schedule: LrSchedule,
@@ -469,12 +703,14 @@ fn prepare(cfg: &Config, opts: &TrainOptions) -> Result<RunPlan> {
     // DDP-style bucketing: sync the gradient in ~bucket_mb chunks in
     // reverse layer order, so each bucket's all-reduce launches as soon
     // as backward has produced it (rec. 4's overlap) instead of one
-    // blocking all-reduce after the whole backward pass. ZeRO-1 rides
-    // the same partition: the bucket plan's per-rank shard ranges are
-    // the sharded optimizer's ownership map (validation already
-    // requires overlap_comm with zero_stage 1).
-    let zero = cfg.training.zero_stage == 1;
-    let bucket_plan = (cfg.training.overlap_comm || zero).then(|| {
+    // blocking all-reduce after the whole backward pass. The sharded
+    // ZeRO stages ride the same partition: the bucket plan's per-rank
+    // shard ranges are the sharded optimizer's ownership map AND (at
+    // stage 2) the gradient shard store's layout (validation already
+    // requires overlap_comm with zero_stage >= 1).
+    let zero = cfg.training.zero_stage;
+    let grad_dtype: GradDtype = cfg.training.grad_dtype.parse()?;
+    let bucket_plan = (cfg.training.overlap_comm || zero >= 1).then(|| {
         BucketPlan::new_with_first(meta.grad_len, bucket_mb,
                                    first_bucket_mb)
     });
@@ -553,6 +789,7 @@ fn prepare(cfg: &Config, opts: &TrainOptions) -> Result<RunPlan> {
         masker,
         algo,
         zero,
+        grad_dtype,
         bucket_plan,
         resume,
         schedule,
@@ -591,23 +828,30 @@ fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
     let engine = Engine::load(&opts.artifacts_dir, variant)
         .with_context(|| format!("rank {rank} engine"))?;
     let mut params = HostParams::init(meta, cfg.seed);
-    // ZeRO-1: this rank's AdamW owns (and sizes m/v to) only its
+    // ZeRO-1/2: this rank's AdamW owns (and sizes m/v to) only its
     // shard of every bucket; ZeRO-0 owns the full flat range
     let mut opt = match (&plan.bucket_plan, plan.zero) {
-        (Some(bp), true) => AdamW::sharded(
+        (Some(bp), s) if s >= 1 => AdamW::sharded(
             &cfg.training,
             bp.rank_ranges(rank, world)),
         _ => AdamW::new(&cfg.training, meta.grad_len),
+    };
+    // ZeRO-2: the shard-resident gradient store (the free-on-reduce
+    // keep side), laid out like the sharded optimizer's m/v
+    let mut shard_grads = match (&plan.bucket_plan, plan.zero) {
+        (Some(bp), s) if s >= 2 => Some(ShardGrads::new(
+            bp, rank, world, plan.grad_dtype)),
+        _ => None,
     };
     // the rank's byte-budgeted window onto the corpus; shared by its
     // loader workers, reused across epochs so a warm cache survives
     // epoch boundaries
     let cache = Arc::new(BlockCache::new(
         plan.index.clone(), cfg.data.cache_mb)?);
-    // scratch flat parameter vector for the ZeRO-1 all-gather
+    // scratch flat parameter vector for the sharded-stage all-gather
     // (collectives run on flat buffers)
     let mut flat_params =
-        vec![0.0f32; if plan.zero { meta.grad_len } else { 0 }];
+        vec![0.0f32; if plan.zero >= 1 { meta.grad_len } else { 0 }];
     let mut records = Vec::new();
     let inv_world = 1.0 / world as f32;
 
@@ -620,7 +864,7 @@ fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
     if let Some(ck) = &plan.resume {
         params = ck.params.clone();
         let (m, v) = match (&plan.bucket_plan, plan.zero) {
-            (Some(bp), true) => {
+            (Some(bp), s) if s >= 1 => {
                 let ranges = bp.rank_ranges(rank, world);
                 (extract_shard(&ck.m, &ranges)?,
                  extract_shard(&ck.v, &ranges)?)
@@ -709,14 +953,16 @@ fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
                 Driver::Blocking(comm) => {
                     sync_and_step_blocking(
                         comm, plan.algo, plan.bucket_plan.as_ref(),
-                        plan.zero, &mut out.grads, out.loss,
+                        plan.zero, plan.grad_dtype, &mut out.grads,
+                        shard_grads.as_mut(), out.loss,
                         inv_world, &mut opt, &mut params,
                         meta, &mut flat_params, lr)?
                 }
                 Driver::Engine(eng) => {
                     sync_and_step_engine(
                         eng, plan.algo, plan.bucket_plan.as_ref(),
-                        plan.zero, &mut out.grads, out.loss,
+                        plan.zero, plan.grad_dtype, &mut out.grads,
+                        shard_grads.as_mut(), out.loss,
                         inv_world, &mut opt, &mut params,
                         meta, &mut flat_params, lr,
                         rank, world)?
@@ -757,6 +1003,7 @@ fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
                     comm_wire_bytes: step_traffic.wire_bytes_sent,
                     loader_bytes,
                     cache_hit_rate,
+                    grad_peak_bytes: outcome.grad_peak_bytes,
                 });
             }
             // checkpointing: with sharded optimizer state EVERY rank
@@ -786,7 +1033,7 @@ fn run_rank(cfg: &Config, opts: &TrainOptions, plan: &RunPlan,
                     };
                     let (_, m, v) = opt.state();
                     match (&plan.bucket_plan, plan.zero) {
-                        (Some(bp), true) => {
+                        (Some(bp), s) if s >= 1 => {
                             // the shard gather is a blocking
                             // collective: the engine lends the wire
                             // back for its duration

@@ -12,13 +12,14 @@
 //! wrong.
 
 use txgain::collectives::{allreduce, bucketed_all_gather,
-                          bucketed_reduce_scatter, Algorithm, BucketPlan,
+                          bucketed_reduce_scatter, reduce_scatter,
+                          Algorithm, BucketPlan, GradDtype, RankMemory,
                           World};
 use txgain::config::presets;
 use txgain::config::TrainingConfig;
 use txgain::runtime::{HostParams, InitKind, ParamSpec, VariantMeta};
 use txgain::train::checkpoint;
-use txgain::train::AdamW;
+use txgain::train::{AdamW, GradResidency, ShardGrads};
 
 /// A toy model whose tensor boundaries deliberately misalign with
 /// shard and bucket boundaries: 2-D (decayed) and 1-D (undecayed)
@@ -133,6 +134,76 @@ fn run_sharded(algo: Algorithm, world: usize, n: usize, steps: usize,
                                                 &plan)
                             .unwrap();
                         opt.step(&mut params, &meta, &g, 1e-3);
+                        params.flatten_into(&mut flat);
+                        bucketed_all_gather(algo, &mut comm, &mut flat,
+                                            &plan)
+                            .unwrap();
+                        params.unflatten_from(&flat);
+                    }
+                    params
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    })
+}
+
+/// ZeRO-2 over the real collectives: the trainer's free-on-reduce
+/// schedule — per bucket (tail-first ready order) stage a copy,
+/// truncate the backward source, reduce-scatter the copy, keep only
+/// the owned shard in a [`ShardGrads`] store at `dtype` width, then
+/// step AdamW straight from the shard-resident values and all-gather
+/// the updated parameters. `grad_scale` lets tests choose dyadic
+/// (exact) or non-dyadic (rounding-exercising) gradients. Returns each
+/// rank's final replica.
+fn run_zero2(algo: Algorithm, world: usize, n: usize, steps: usize,
+             bucket_elems: usize, dtype: GradDtype, grad_scale: f32)
+             -> Vec<HostParams> {
+    let meta = toy_meta(n);
+    let plan = BucketPlan::from_elems(n, bucket_elems);
+    std::thread::scope(|scope| {
+        World::new(world)
+            .into_comms()
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut comm)| {
+                let meta = meta.clone();
+                let plan = plan.clone();
+                scope.spawn(move || {
+                    let mut params = toy_params(n);
+                    let mut opt = AdamW::sharded(
+                        &train_cfg(), plan.rank_ranges(rank, world));
+                    let mut shard =
+                        ShardGrads::new(&plan, rank, world, dtype);
+                    let mut flat = vec![0.0f32; n];
+                    let mut window: Vec<f32> = Vec::new();
+                    for s in 0..steps {
+                        let mut g = grad(rank, s, n);
+                        let inv = grad_scale / world as f32;
+                        for x in &mut g {
+                            *x *= inv;
+                        }
+                        for i in plan.ready_order() {
+                            let (a, b) = plan.span(i);
+                            window.clear();
+                            window.extend_from_slice(&g[a..b]);
+                            g.truncate(a);
+                            reduce_scatter(algo, &mut comm,
+                                           &mut window)
+                                .unwrap();
+                            let (sa, sb) =
+                                plan.shard_span(i, rank, world);
+                            shard.store_bucket(
+                                i, &window[sa - a..sb - a]);
+                        }
+                        opt.tick();
+                        for i in plan.ready_order() {
+                            opt.step_span_with(&mut params, &meta,
+                                               1e-3, plan.span(i),
+                                               shard.bucket_reader(i));
+                        }
                         params.flatten_into(&mut flat);
                         bucketed_all_gather(algo, &mut comm, &mut flat,
                                             &plan)
@@ -406,5 +477,162 @@ fn mixed_collectives_on_one_comm_stay_consistent() {
     for (flat, loss) in &out {
         assert_eq!(flat, &want);
         assert_eq!(*loss, 1.0 + 2.0 + 3.0 + 4.0);
+    }
+}
+
+/// THE stage-2 acceptance property: free-on-reduce with a
+/// shard-resident f32 gradient store must reproduce the replicated
+/// (ZeRO-0) trajectory bit for bit — same worlds, algorithms and
+/// uneven bucket/shard geometries as the stage-1 property.
+#[test]
+fn zero2_free_on_reduce_is_bit_identical_to_replicated() {
+    let steps = 4;
+    for algo in [Algorithm::Ring, Algorithm::Tree] {
+        for world in [1usize, 2, 4, 8] {
+            for n in [13usize, 29, 64] {
+                for bucket_elems in [3usize, 7, n / 2 + 1, n] {
+                    let reference = run_replicated(world, n, steps);
+                    let sharded = run_zero2(algo, world, n, steps,
+                                            bucket_elems,
+                                            GradDtype::F32, 1.0);
+                    for (rank, p) in sharded.iter().enumerate() {
+                        assert_bit_identical(
+                            &reference, p,
+                            &format!("zero2 {algo:?} world={world} \
+                                      n={n} bucket={bucket_elems} \
+                                      rank={rank}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The bf16 gradient store rounds with the wire's RNE — and on dyadic
+/// gradients (every reduced value is exactly bf16-representable) the
+/// rounding is the identity, so zero2+bf16 must still match the f32
+/// replicated reference bit for bit. This pins the "host storage and
+/// the bf16 wire round identically" contract.
+#[test]
+fn bf16_shard_store_is_exact_on_dyadic_gradients() {
+    let steps = 4;
+    for world in [1usize, 2, 4] {
+        for bucket_elems in [7usize, 29] {
+            let n = 29usize;
+            let reference = run_replicated(world, n, steps);
+            let sharded = run_zero2(Algorithm::Ring, world, n, steps,
+                                    bucket_elems, GradDtype::Bf16, 1.0);
+            for (rank, p) in sharded.iter().enumerate() {
+                assert_bit_identical(
+                    &reference, p,
+                    &format!("bf16-dyadic world={world} \
+                              bucket={bucket_elems} rank={rank}"),
+                );
+            }
+        }
+    }
+}
+
+/// With non-dyadic gradients (scale 1/3) the bf16 store genuinely
+/// rounds. The contract is then: deterministic (two runs agree bit for
+/// bit), replica-identical (every rank ends with the same params —
+/// each element's update is computed once, on its owner, from the
+/// owner's stored value), and bounded against the f32 store.
+#[test]
+fn bf16_shard_store_is_deterministic_replica_identical_and_bounded() {
+    let world = 4usize;
+    let n = 29usize;
+    let steps = 4;
+    let scale = 1.0f32 / 3.0;
+    let a = run_zero2(Algorithm::Ring, world, n, steps, 7,
+                      GradDtype::Bf16, scale);
+    let b = run_zero2(Algorithm::Ring, world, n, steps, 7,
+                      GradDtype::Bf16, scale);
+    for (rank, (pa, pb)) in a.iter().zip(&b).enumerate() {
+        assert_bit_identical(pa, pb,
+                             &format!("bf16 determinism rank={rank}"));
+    }
+    for (rank, p) in a.iter().enumerate().skip(1) {
+        assert_bit_identical(&a[0], p,
+                             &format!("bf16 replica rank={rank}"));
+    }
+    // bounded: bf16 keeps 8 significant bits, AdamW normalizes the
+    // update to ~lr per element — after 4 steps at lr 1e-3 the two
+    // trajectories can only be a few updates' rounding apart
+    let f = run_zero2(Algorithm::Ring, world, n, steps, 7,
+                      GradDtype::F32, scale);
+    for (tb, tf) in a[0].tensors.iter().zip(&f[0].tensors) {
+        for (x, y) in tb.iter().zip(tf) {
+            assert!((x - y).abs() < 2e-2,
+                    "bf16 {x} vs f32 {y} drifted past the bound");
+        }
+    }
+}
+
+/// Satellite 3: the measured gradient-plane peak of the free-on-reduce
+/// schedule equals the closed-form `RankMemory::grad_peak_bytes` on
+/// every rank — across worlds {2,4,8}, bucket sizes, uneven shard
+/// boundaries (prime n, uneven first bucket) and both storage dtypes.
+#[test]
+fn measured_grad_peak_matches_the_closed_form() {
+    let n = 97usize;
+    let plans = [
+        BucketPlan::from_elems(n, 7),
+        BucketPlan::from_elems(n, 13),
+        BucketPlan::from_elems_with_first(n, 13, 5),
+    ];
+    for world in [2usize, 4, 8] {
+        for plan in &plans {
+            for dtype in GradDtype::ALL {
+                let peaks: Vec<u64> = std::thread::scope(|scope| {
+                    World::new(world)
+                        .into_comms()
+                        .into_iter()
+                        .enumerate()
+                        .map(|(rank, mut comm)| {
+                            let plan = plan.clone();
+                            scope.spawn(move || {
+                                let mut res = GradResidency::new();
+                                let mut shard = ShardGrads::new(
+                                    &plan, rank, world, dtype);
+                                let mut g = grad(rank, 0, n);
+                                let mut window: Vec<f32> = Vec::new();
+                                for i in plan.ready_order() {
+                                    let (a, b) = plan.span(i);
+                                    window.clear();
+                                    window.extend_from_slice(&g[a..b]);
+                                    res.alloc(4 * (b - a) as u64);
+                                    g.truncate(a);
+                                    reduce_scatter(Algorithm::Ring,
+                                                   &mut comm,
+                                                   &mut window)
+                                        .unwrap();
+                                    let (sa, sb) = plan
+                                        .shard_span(i, rank, world);
+                                    shard.store_bucket(
+                                        i, &window[sa - a..sb - a]);
+                                    res.alloc(shard.span_bytes(i));
+                                    res.free(4 * (b - a) as u64);
+                                }
+                                res.peak()
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .collect()
+                });
+                for (rank, &peak) in peaks.iter().enumerate() {
+                    let want = RankMemory::grad_peak_bytes(
+                        Some(plan), n, rank, world, 2, dtype, false);
+                    assert_eq!(peak, want,
+                               "world={world} rank={rank} {dtype} \
+                                buckets={}: measured {peak} != \
+                                closed form {want}",
+                               plan.n_buckets());
+                }
+            }
+        }
     }
 }

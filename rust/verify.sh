@@ -108,6 +108,16 @@ target/release/txgain launch --workers 4 --smoke \
 echo "verify.sh: rec4 overlap smoke gate"
 cargo bench --bench rec4_overlap -- --smoke
 
+# the ZeRO-2 free-on-reduce gate: at world 4 on shm, the stage-2
+# schedule's measured peak gradient-plane bytes must not exceed the
+# stage-1 in-place sync, must reproduce RankMemory::grad_peak_bytes
+# exactly on every rank (f32 and bf16 stores), and the f32 trajectory
+# must stay bit-identical to stage 1 — so a change that quietly keeps
+# the full gradient resident, or drifts the measured/modeled peaks
+# apart, fails CI here
+echo "verify.sh: rec6 zero smoke gate"
+cargo bench --bench rec6_zero -- --smoke
+
 # benches/examples (including rec3_stream / stream_tuning) are not
 # built by `build`/`test`; type-check them so they cannot silently rot
 # out of the tier-1 gate
